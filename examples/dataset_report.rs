@@ -1,0 +1,46 @@
+//! E1 — regenerate Table 1 (dataset statistics) from the synthetic
+//! federated substrate, next to the paper's published numbers.
+//!
+//!     cargo run --release --example dataset_report [-- --full]
+//!
+//! Default samples the FEMNIST/OpenImage fleets at reduced client counts
+//! (statistics are per-client, so the reduced fleet estimates the same
+//! distribution); `--full` builds all 2800 / 11325 clients.
+
+use feddde::data::{DatasetSpec, Partition};
+
+fn row(spec: &DatasetSpec, paper: (f64, f64, usize)) {
+    let p = Partition::build(spec);
+    let (avg, std, max) = p.sample_stats();
+    let (h, w, c) = spec.img;
+    println!(
+        "{:<10} {:>9} {:>9} {:>11} | {:>9.1} {:>9.1} {:>7} | {:>9.1} {:>9.1} {:>7}",
+        spec.name,
+        format!("{h}x{w}x{c}"),
+        spec.classes,
+        spec.n_clients,
+        paper.0,
+        paper.1,
+        paper.2,
+        avg,
+        std,
+        max,
+    );
+}
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let scale = |s: DatasetSpec| if full { s } else { s.with_clients(800) };
+
+    println!("Table 1 — datasets (paper columns vs generated)");
+    println!(
+        "{:<10} {:>9} {:>9} {:>11} | {:>9} {:>9} {:>7} | {:>9} {:>9} {:>7}",
+        "dataset", "sample", "classes", "clients", "paper_avg", "paper_std", "max", "gen_avg", "gen_std", "max"
+    );
+    row(&scale(DatasetSpec::femnist()), (109.0, 211.63, 6709));
+    row(&scale(DatasetSpec::openimage()), (228.0, 89.05, 465));
+    if !full {
+        println!("\n(note: client count reduced to 800 for speed; --full uses Table 1 counts.");
+        println!(" OpenImage samples are 32x32x3 scaled from the paper's 3x256x256 — DESIGN.md §5.)");
+    }
+}

@@ -1,0 +1,76 @@
+//! E6 — the paper's §2.1 motivation: client data drifts mid-training, so
+//! distribution summaries must be re-computed periodically. Two identical
+//! runs with drift injected at the midpoint: one never refreshes its
+//! summaries (HACCS behaviour — compute once at round 0), one refreshes
+//! every 10 rounds (FedDDE's cheap summaries make this affordable).
+//!
+//!     cargo run --release --example drift_adaptation
+
+use anyhow::Result;
+
+use feddde::config::ExperimentConfig;
+use feddde::coordinator::Coordinator;
+use feddde::runtime::Engine;
+use feddde::util::stats;
+
+fn run(refresh_every: usize, drift_round: usize, rounds: usize) -> Result<Coordinator> {
+    let cfg = ExperimentConfig {
+        dataset: "femnist".into(),
+        n_clients: 90,
+        rounds,
+        per_round: 8,
+        local_steps: 3,
+        lr: 0.1,
+        policy: "cluster".into(),
+        refresh_every,
+        drift_rounds: vec![drift_round],
+        drift_frac: 0.7,
+        seed: 11,
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(cfg, Engine::open_default()?)?;
+    coord.run()?;
+    Ok(coord)
+}
+
+fn main() -> Result<()> {
+    let rounds = 80;
+    let drift_round = 40;
+    std::fs::create_dir_all("results").ok();
+    println!(
+        "drift_adaptation: femnist-like, 90 clients, drift hits 70% of clients at round {drift_round}\n"
+    );
+
+    let mut post_drift = Vec::new();
+    for (label, refresh) in [("stale summaries (refresh never)", 0usize), ("periodic refresh (every 10)", 10)] {
+        println!("=== {label} ===");
+        let coord = run(refresh, drift_round, rounds)?;
+        let log = &coord.log;
+        log.write_tsv(&format!("results/drift_refresh{refresh}.tsv"))?;
+        for r in log.rounds.iter().step_by(8) {
+            let marker = if r.round >= drift_round { " <- post-drift" } else { "" };
+            println!(
+                "  round {:>3}  loss {:>7.4}  acc {:>6.4}{marker}",
+                r.round, r.train_loss, r.eval_accuracy
+            );
+        }
+        let post: Vec<f64> = log
+            .rounds
+            .iter()
+            .filter(|r| r.round >= drift_round + 10) // after re-stabilizing
+            .map(|r| r.eval_accuracy)
+            .collect();
+        let mean_post = stats::mean(&post);
+        println!("  mean post-drift accuracy (rounds {}..): {mean_post:.4}\n", drift_round + 10);
+        post_drift.push((label, mean_post));
+    }
+
+    let stale = post_drift[0].1;
+    let fresh = post_drift[1].1;
+    println!(
+        "periodic summary refresh vs stale: post-drift accuracy {fresh:.4} vs {stale:.4} ({:+.1}%)",
+        100.0 * (fresh - stale) / stale.max(1e-9)
+    );
+    println!("(the refresh is affordable precisely because the proposed summary is ~30x cheaper — Table 2)");
+    Ok(())
+}

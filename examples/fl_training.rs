@@ -1,0 +1,99 @@
+//! E5 / end-to-end validation driver: federated training on the
+//! FEMNIST-like federation, comparing HACCS-style cluster-based selection
+//! (driven by the paper's encoder summaries) against random selection —
+//! the downstream claim the summary pipeline exists to serve.
+//!
+//!     cargo run --release --example fl_training [-- --full]
+//!
+//! Default: 120 clients x 120 rounds (a few minutes). `--full`: 400 clients
+//! x 300 rounds. Writes per-round curves to results/fl_training_<policy>.tsv
+//! and a comparison summary to stdout; EXPERIMENTS.md records the run.
+
+use anyhow::Result;
+
+use feddde::config::ExperimentConfig;
+use feddde::coordinator::Coordinator;
+use feddde::runtime::Engine;
+
+fn run(policy: &str, clients: usize, rounds: usize) -> Result<Coordinator> {
+    let cfg = ExperimentConfig {
+        dataset: "femnist".into(),
+        n_clients: clients,
+        rounds,
+        per_round: 10,
+        local_steps: 4,
+        lr: 0.1,
+        policy: policy.into(),
+        summary: "encoder".into(),
+        seed: 3,
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(cfg, Engine::open_default()?)?;
+    coord.run()?;
+    Ok(coord)
+}
+
+fn main() -> Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let (clients, rounds) = if full { (400, 300) } else { (120, 120) };
+    std::fs::create_dir_all("results").ok();
+
+    println!("fl_training: femnist-like, {clients} clients, {rounds} rounds, 10 devices/round\n");
+    let mut results = Vec::new();
+    for policy in ["cluster", "random"] {
+        println!("=== policy: {policy} ===");
+        let t0 = std::time::Instant::now();
+        let coord = run(policy, clients, rounds)?;
+        let log = &coord.log;
+        let path = format!("results/fl_training_{policy}.tsv");
+        log.write_tsv(&path)?;
+        // Print a sparse loss curve.
+        for r in log.rounds.iter().step_by((rounds / 12).max(1)) {
+            println!(
+                "  round {:>4}  sim_t {:>9.1}s  loss {:>7.4}  acc {:>6.4}",
+                r.round, r.sim_time, r.train_loss, r.eval_accuracy
+            );
+        }
+        println!(
+            "  final acc {:.4}, best {:.4}; wall {:.1}s; curve -> {path}\n",
+            log.final_accuracy(),
+            log.best_accuracy(),
+            t0.elapsed().as_secs_f64()
+        );
+        results.push((policy, log.best_accuracy(), log.rounds.clone()));
+    }
+
+    // Time-to-accuracy comparison at a target both policies reach.
+    let common = results
+        .iter()
+        .map(|(_, best, _)| *best)
+        .fold(f64::INFINITY, f64::min)
+        * 0.9;
+    println!("=== time-to-accuracy at {common:.3} (90% of the weaker policy's best) ===");
+    let mut times = Vec::new();
+    for (policy, _, rounds_log) in &results {
+        let t = rounds_log
+            .iter()
+            .find(|r| r.eval_accuracy >= common)
+            .map(|r| r.sim_time);
+        match t {
+            Some(t) => {
+                println!("  {policy:<10} {t:>10.1}s simulated");
+                times.push((policy.to_string(), t));
+            }
+            None => println!("  {policy:<10} never reached"),
+        }
+    }
+    if times.len() == 2 {
+        let cluster = times.iter().find(|(p, _)| p == "cluster").map(|(_, t)| *t);
+        let random = times.iter().find(|(p, _)| p == "random").map(|(_, t)| *t);
+        if let (Some(c), Some(r)) = (cluster, random) {
+            let reduction = 100.0 * (1.0 - c / r);
+            println!(
+                "\ncluster-based selection changes time-to-accuracy by {reduction:+.1}% vs random\n\
+                 (HACCS reports 18-38% reduction on real FEMNIST/CIFAR; shape check)"
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,221 @@
+//! E2/E3/E4 — regenerate Table 2: "Overhead comparison of different summary
+//! algorithms" — summary-computation time (avg/max across the heterogeneous
+//! fleet) and device-clustering time, for P(y), P(X|y) and the proposed
+//! Encoder+Kmeans, on both dataset families.
+//!
+//!     cargo run --release --example overhead_report [-- --full]
+//!
+//! Default is CI scale (sampled fleet, capped clustering sets, documented
+//! extrapolation); `--full` uses Table 1 fleet sizes where memory allows.
+//! The paper's absolute numbers came from mobile-class hardware; the claim
+//! reproduced here is the *shape*: P(y) trivial but weak, P(X|y) 1-2 orders
+//! of magnitude slower to summarize and catastrophically slower to cluster,
+//! Encoder+Kmeans close to P(y) cost while keeping feature information.
+
+use anyhow::Result;
+
+use feddde::cluster::{dbscan, kmeans};
+use feddde::data::{DatasetSpec, Generator, Partition};
+use feddde::device::FleetModel;
+use feddde::runtime::Engine;
+use feddde::summary::{EncoderSummary, PxySummary, PySummary, SummaryEngine};
+use feddde::util::mat::Mat;
+use feddde::util::rng::Rng;
+use feddde::util::stats;
+
+struct SummaryRow {
+    avg: f64,
+    max: f64,
+}
+
+/// Measure per-device summary time over a sample of clients; returns the
+/// simulated (device-scaled) avg/max — Table 2's left half.
+fn summary_times(
+    engine: &Engine,
+    se: &dyn SummaryEngine,
+    partition: &Partition,
+    generator: &Generator,
+    fleet: &FleetSample,
+    sample: usize,
+) -> Result<SummaryRow> {
+    let n = partition.clients.len();
+    let step = (n / sample.max(1)).max(1);
+    let mut times = Vec::new();
+    for (i, part) in partition.clients.iter().enumerate().step_by(step) {
+        let ds = generator.client_dataset(part, 0);
+        let mut rng = Rng::substream(7, &[i as u64]);
+        let (_, host) = se.summarize(engine, &ds, &mut rng)?;
+        times.push(host * fleet.factor(i));
+    }
+    Ok(SummaryRow { avg: stats::mean(&times), max: stats::max(&times) })
+}
+
+struct FleetSample {
+    factors: Vec<f64>,
+}
+
+impl FleetSample {
+    fn new(n: usize) -> Self {
+        FleetSample {
+            factors: FleetModel::default()
+                .sample_fleet(n)
+                .into_iter()
+                .map(|d| d.compute_factor)
+                .collect(),
+        }
+    }
+
+    fn factor(&self, i: usize) -> f64 {
+        self.factors[i % self.factors.len()]
+    }
+}
+
+/// Gather summary vectors for the first `cap` clients.
+fn gather(
+    engine: &Engine,
+    se: &dyn SummaryEngine,
+    partition: &Partition,
+    generator: &Generator,
+    cap: usize,
+) -> Result<Mat> {
+    let mut m = Mat::zeros(0, se.dim());
+    for part in partition.clients.iter().take(cap) {
+        let ds = generator.client_dataset(part, 0);
+        let mut rng = Rng::substream(9, &[part.client_id as u64]);
+        let (v, _) = se.summarize(engine, &ds, &mut rng)?;
+        m.push_row(&v);
+    }
+    Ok(m)
+}
+
+struct ClusterRow {
+    secs: f64,
+    /// Some(extrapolated seconds at full fleet size) when measured on a cap.
+    extrapolated: Option<f64>,
+    label: &'static str,
+}
+
+fn dbscan_time(points: &Mat, full_n: usize) -> ClusterRow {
+    let eps = dbscan::suggest_eps(points, 4, 32.min(points.rows())) * 1.2;
+    let t0 = std::time::Instant::now();
+    let _ = dbscan::fit(points, &dbscan::DbscanConfig::new(eps.max(1e-6), 4));
+    let secs = t0.elapsed().as_secs_f64();
+    let n = points.rows();
+    let extrapolated = if full_n > n {
+        // DBSCAN brute force is Theta(N^2 * D): scale quadratically.
+        Some(secs * (full_n as f64 / n as f64).powi(2))
+    } else {
+        None
+    };
+    ClusterRow { secs, extrapolated, label: "DBSCAN" }
+}
+
+fn kmeans_time(points: &Mat, k: usize, full_n: usize) -> ClusterRow {
+    let mut cfg = kmeans::KmeansConfig::new(k.min(points.rows()));
+    cfg.seed = 5;
+    let t0 = std::time::Instant::now();
+    let _ = kmeans::fit(points, &cfg);
+    let secs = t0.elapsed().as_secs_f64();
+    let n = points.rows();
+    let extrapolated =
+        if full_n > n { Some(secs * full_n as f64 / n as f64) } else { None }; // Lloyd is Theta(N K D I)
+    ClusterRow { secs, extrapolated, label: "K-means" }
+}
+
+fn fmt_cluster(r: &ClusterRow) -> String {
+    match r.extrapolated {
+        Some(e) if e > 48.0 * 3600.0 => {
+            format!("{:.2}s@cap (extrap: more than 2 days)", r.secs)
+        }
+        Some(e) => format!("{:.2}s@cap (extrap {:.0}s)", r.secs, e),
+        None => format!("{:.2}s", r.secs),
+    }
+}
+
+fn report(name: &str, full: bool) -> Result<()> {
+    let preset = DatasetSpec::by_name(name).unwrap();
+    let full_clients = preset.n_clients;
+    // CI-scale fleet: enough clients to estimate the per-client distribution.
+    let spec = if full { preset } else { preset.with_clients(96) };
+    let partition = Partition::build(&spec);
+    let generator = Generator::new(&spec);
+    let fleet = FleetSample::new(spec.n_clients);
+    let engine = Engine::open_default()?;
+
+    let py = PySummary::new(&spec);
+    let pxy = PxySummary::new(&spec);
+    let enc = EncoderSummary::new(&spec);
+
+    let sample = if full { 200 } else { 48 };
+    println!("--- {name} ({} clients measured, fleet target {full_clients}) ---", spec.n_clients);
+    println!(
+        "{:<16} {:>14} {:>14}   {}",
+        "method", "summary avg(s)", "summary max(s)", "clustering"
+    );
+
+    // P(y): cheap summaries; DBSCAN over the full measured fleet.
+    let t_py = summary_times(&engine, &py, &partition, &generator, &fleet, sample)?;
+    let m_py = gather(&engine, &py, &partition, &generator, spec.n_clients)?;
+    let c_py = dbscan_time(&m_py, full_clients);
+    println!(
+        "{:<16} {:>14.4} {:>14.4}   {} ({})",
+        py.name(),
+        t_py.avg,
+        t_py.max,
+        fmt_cluster(&c_py),
+        c_py.label
+    );
+
+    // P(X|y): huge summaries; DBSCAN over a memory-capped subset + N^2 extrapolation.
+    let t_pxy = summary_times(&engine, &pxy, &partition, &generator, &fleet, sample)?;
+    let pxy_bytes = pxy.summary_bytes();
+    let cap_by_mem = (1usize << 31) / pxy_bytes.max(1); // ~2 GB budget
+    let cap = spec.n_clients.min(cap_by_mem).max(8);
+    let m_pxy = gather(&engine, &pxy, &partition, &generator, cap)?;
+    let c_pxy = dbscan_time(&m_pxy, full_clients);
+    println!(
+        "{:<16} {:>14.4} {:>14.4}   {} ({}, dim {})",
+        pxy.name(),
+        t_pxy.avg,
+        t_pxy.max,
+        fmt_cluster(&c_pxy),
+        c_pxy.label,
+        pxy.dim()
+    );
+
+    // Encoder+Kmeans (proposed).
+    let t_enc = summary_times(&engine, &enc, &partition, &generator, &fleet, sample)?;
+    let m_enc = gather(&engine, &enc, &partition, &generator, spec.n_clients)?;
+    let c_enc = kmeans_time(&m_enc, spec.n_groups, full_clients);
+    println!(
+        "{:<16} {:>14.4} {:>14.4}   {} ({}, dim {})",
+        enc.name(),
+        t_enc.avg,
+        t_enc.max,
+        fmt_cluster(&c_enc),
+        c_enc.label,
+        enc.dim()
+    );
+
+    // E4: headline ratios.
+    let sum_speedup = t_pxy.max / t_enc.max.max(1e-9);
+    let pxy_cluster = c_pxy.extrapolated.unwrap_or(c_pxy.secs);
+    let enc_cluster = c_enc.extrapolated.unwrap_or(c_enc.secs);
+    let clu_speedup = pxy_cluster / enc_cluster.max(1e-9);
+    println!(
+        "=> vs P(X|y): summary-time reduction {sum_speedup:.1}x (paper: up to 30x), \
+         clustering reduction {clu_speedup:.0}x (paper: up to 360x)\n"
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    println!("Table 2 — overhead comparison (simulated heterogeneous devices; DESIGN.md §5)\n");
+    report("femnist", full)?;
+    report("openimage", full)?;
+    if !full {
+        println!("(CI scale: 96-client fleets, sampled timing; run with --full for Table 1 fleet sizes)");
+    }
+    Ok(())
+}

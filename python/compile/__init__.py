@@ -1,0 +1,6 @@
+"""FedDDE build-time Python package: L1 Pallas kernels, L2 JAX graphs, AOT.
+
+Nothing in this package runs on the request path — ``compile/aot.py`` lowers
+every graph to HLO text once (``make artifacts``); the Rust coordinator loads
+and executes the artifacts via PJRT.
+"""

@@ -1,0 +1,254 @@
+"""AOT pipeline: lower every L2 graph to HLO *text* artifacts for Rust.
+
+Run once at build time (``make artifacts``); Python never appears on the
+request path. For each dataset config this emits:
+
+  {ds}_summary_k{k}        proposed encoder+coreset summary      (E2)
+  {ds}_py_N{n}             P(y) baseline, one per size bucket    (E2)
+  {ds}_pxy_N{n}            P(X|y) baseline, one per size bucket  (E2)
+  {ds}_kmeans_M{m}K{k}     one Lloyd step over summaries         (E3 demo)
+  {ds}_init                classifier init -> flat params        (E5)
+  {ds}_train_B{b}          one local-SGD step                    (E5)
+  {ds}_eval_B{b}           eval batch -> (correct, loss_sum, n)  (E5)
+
+plus ``manifest.tsv`` describing each artifact's I/O signature, which the
+Rust runtime parses (rust/src/runtime/manifest.rs).
+
+HLO TEXT, not ``.serialize()``: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version the published ``xla``
+crate binds) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md and DESIGN.md §1.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import encoder as enc
+from compile import model
+
+
+class DatasetConfig(NamedTuple):
+    """Static shapes for one dataset family (see DESIGN.md §5 for the
+    substitution from the paper's FEMNIST / OpenImage)."""
+
+    name: str
+    img: tuple          # (Hi, Wi, Cin)
+    classes: int
+    coreset_k: int      # default coreset size for the proposed summary
+    feature_dim: int    # H, encoder output dim
+    hist_buckets: int   # B for the P(X|y) baseline
+    size_buckets: tuple  # padded full-dataset sizes for the baselines
+    kmeans_m: int       # demo Lloyd-step size (Rust k-means covers full scale)
+    kmeans_k: int
+    train_batch: int = 32
+    eval_batch: int = 512
+    coreset_ks: tuple = ()  # extra coreset sizes for the E7 ablation
+
+    @property
+    def flat_dim(self) -> int:
+        h, w, c = self.img
+        return h * w * c
+
+    @property
+    def summary_dim(self) -> int:
+        return self.classes * self.feature_dim + self.classes
+
+    def encoder_cfg(self) -> enc.EncoderConfig:
+        return enc.EncoderConfig(in_channels=self.img[2], feature_dim=self.feature_dim)
+
+    def mlp_cfg(self) -> model.MlpConfig:
+        return model.MlpConfig(in_dim=self.flat_dim, classes=self.classes)
+
+
+# Table 1 of the paper: FEMNIST 28x28x1 / 62 classes / 2800 clients
+# (avg 109, max 6709 samples); OpenImage 3x256x256 / 600 classes / 11325
+# clients (avg 228, max 465). OpenImage images are scaled to 32x32x3 by
+# default (CPU-PJRT memory budget; the scaling applies identically to every
+# method so Table 2 ratios are preserved — DESIGN.md §5).
+FEMNIST = DatasetConfig(
+    name="femnist",
+    img=(28, 28, 1),
+    classes=62,
+    coreset_k=128,
+    feature_dim=64,
+    hist_buckets=8,
+    size_buckets=(256, 1024, 8192),
+    kmeans_m=2816,  # 2800 clients padded to a multiple of 256
+    kmeans_k=8,
+    coreset_ks=(32, 512),
+)
+OPENIMAGE = DatasetConfig(
+    name="openimage",
+    img=(32, 32, 3),
+    classes=600,
+    coreset_k=128,
+    feature_dim=64,
+    hist_buckets=8,
+    size_buckets=(256, 512),
+    kmeans_m=2048,  # demo subset; full 11325-client clustering runs in Rust
+    kmeans_k=10,
+)
+# Tiny config so python/tests and cargo integration tests run in seconds.
+TINY = DatasetConfig(
+    name="tiny",
+    img=(8, 8, 1),
+    classes=4,
+    coreset_k=16,
+    feature_dim=8,
+    hist_buckets=4,
+    size_buckets=(32,),
+    kmeans_m=64,
+    kmeans_k=3,
+    train_batch=8,
+    eval_batch=32,
+)
+
+DATASETS = {c.name: c for c in (FEMNIST, OPENIMAGE, TINY)}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange form)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dtype_tag(dt) -> str:
+    name = jnp.dtype(dt).name
+    return {"float32": "f32", "int32": "i32"}[name]
+
+
+def _sig_of(specs) -> str:
+    return ";".join(
+        f"{_dtype_tag(s.dtype)}[{','.join(str(x) for x in s.shape)}]" for s in specs
+    )
+
+
+def _artifacts_for(cfg: DatasetConfig):
+    """Yield (name, jitted_fn, input_specs, output_specs)."""
+    ecfg = cfg.encoder_cfg()
+    mcfg = cfg.mlp_cfg()
+    hi, wi, cin = cfg.img
+    C, k = cfg.classes, cfg.coreset_k
+
+    # -- proposed summary (default k + ablation sizes, E7) -------------------
+    for kk in (k, *cfg.coreset_ks):
+        yield (
+            f"{cfg.name}_summary_k{kk}",
+            jax.jit(lambda imgs, oh: model.summary_graph(imgs, oh, ecfg)),
+            [_spec((kk, hi, wi, cin)), _spec((kk, C))],
+            [_spec((cfg.summary_dim,))],
+        )
+
+    # -- baselines over padded full datasets --------------------------------
+    for n in cfg.size_buckets:
+        yield (
+            f"{cfg.name}_py_N{n}",
+            jax.jit(model.py_summary_graph),
+            [_spec((n, C))],
+            [_spec((C,))],
+        )
+        B = cfg.hist_buckets
+        yield (
+            f"{cfg.name}_pxy_N{n}",
+            jax.jit(lambda x, oh, B=B: model.pxy_summary_graph(x, oh, B)),
+            [_spec((n, cfg.flat_dim)), _spec((n, C))],
+            [_spec((B * C * cfg.flat_dim,))],
+        )
+
+    # -- k-means Lloyd step over summaries ----------------------------------
+    M, K, D = cfg.kmeans_m, cfg.kmeans_k, cfg.summary_dim
+    yield (
+        f"{cfg.name}_kmeans_M{M}K{K}",
+        jax.jit(model.kmeans_step_graph),
+        [_spec((M, D)), _spec((K, D))],
+        [_spec((K, D)), _spec((M,), jnp.int32), _spec(())],
+    )
+
+    # -- FL classifier substrate --------------------------------------------
+    yield (
+        f"{cfg.name}_init",
+        jax.jit(lambda: model.init_params_graph(mcfg)),
+        [],
+        [_spec((mcfg.n_params,))],
+    )
+    Bt = cfg.train_batch
+    yield (
+        f"{cfg.name}_train_B{Bt}",
+        jax.jit(lambda p, x, oh, lr: model.train_step_graph(p, x, oh, lr, mcfg)),
+        [_spec((mcfg.n_params,)), _spec((Bt, cfg.flat_dim)), _spec((Bt, C)), _spec(())],
+        [_spec((mcfg.n_params,)), _spec(())],
+    )
+    Be = cfg.eval_batch
+    yield (
+        f"{cfg.name}_eval_B{Be}",
+        jax.jit(lambda p, x, oh: model.eval_graph(p, x, oh, mcfg)),
+        [_spec((mcfg.n_params,)), _spec((Be, cfg.flat_dim)), _spec((Be, C))],
+        [_spec(()), _spec(()), _spec(())],
+    )
+
+
+def build(outdir: str, datasets, *, force: bool = False, verbose: bool = True):
+    """Lower every artifact for ``datasets`` into ``outdir`` + manifest.tsv.
+
+    Per-file skip: an artifact is re-lowered only if missing or ``force``.
+    (Makefile-level staleness vs the python sources triggers force.)
+    """
+    os.makedirs(outdir, exist_ok=True)
+    manifest_rows = []
+    for ds in datasets:
+        cfg = DATASETS[ds]
+        for name, fn, in_specs, out_specs in _artifacts_for(cfg):
+            fname = f"{name}.hlo.txt"
+            path = os.path.join(outdir, fname)
+            row = (name, fname, _sig_of(in_specs) or "-", _sig_of(out_specs))
+            manifest_rows.append(row)
+            if os.path.exists(path) and not force:
+                if verbose:
+                    print(f"  [skip] {name}")
+                continue
+            lowered = fn.lower(*in_specs)
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            if verbose:
+                print(f"  [ok]   {name}  ({len(text) / 1024:.0f} KiB)")
+
+    manifest = os.path.join(outdir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("# name\tfile\tinputs\toutputs\n")
+        for row in manifest_rows:
+            f.write("\t".join(row) + "\n")
+    if verbose:
+        print(f"wrote {manifest} ({len(manifest_rows)} artifacts)")
+    return manifest_rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--datasets",
+        default="tiny,femnist,openimage",
+        help="comma-separated subset of " + ",".join(DATASETS),
+    )
+    ap.add_argument("--force", action="store_true", help="re-lower even if present")
+    args = ap.parse_args()
+    build(args.outdir, [d for d in args.datasets.split(",") if d], force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""L2: MobileNet-style encoder for dimension reduction (paper §4.1).
+
+The paper extracts a hidden-layer activation of a (pretrained) MobileNetV3 as
+the per-sample feature vector. We build the same architectural shape — a stem
+convolution followed by depthwise-separable blocks (the MobileNet primitive,
+Howard et al. 2019) with a global-average-pool feature tap — with fixed,
+seeded He-initialized weights baked into the AOT artifact as constants.
+
+Substitution note (DESIGN.md §5): the paper's *overhead* claims depend on the
+encoder's FLOP/memory shape, not on trained weights; clustering quality on the
+synthetic Gaussian-cluster datasets survives a random encoder because random
+projections preserve cluster geometry (Johnson–Lindenstrauss). Baking weights
+as HLO constants also keeps the Rust request path free of parameter plumbing.
+
+Layout is NHWC throughout (TPU-native), kernels are HWIO.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+class EncoderConfig(NamedTuple):
+    """Architecture of the feature encoder.
+
+    Attributes:
+      in_channels: channels of the input image (1 for FEMNIST, 3 for OpenImage).
+      widths: output channels of the stem + each depthwise-separable block.
+      strides: stride of the stem + each block (spatial downsampling schedule).
+      feature_dim: H, the dimension of the summary feature vector. If it
+        differs from ``widths[-1]`` a fixed random projection is appended.
+    """
+
+    in_channels: int = 1
+    widths: tuple = (16, 32, 64, 64)
+    strides: tuple = (2, 2, 2, 1)
+    feature_dim: int = 64
+
+
+def _conv(x, w, stride, groups=1):
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+    )
+
+
+def _relu6(x):
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def init_encoder_params(cfg: EncoderConfig, seed: int = 0):
+    """He-initialized weights, deterministic in ``seed``.
+
+    Returns a flat dict name -> array; the same structure ``encode`` expects.
+    """
+    key = jax.random.PRNGKey(seed)
+    params = {}
+
+    def he(key, shape, fan_in):
+        return jax.random.normal(key, shape, jnp.float32) * jnp.sqrt(2.0 / fan_in)
+
+    cin = cfg.in_channels
+    # Stem: full 3x3 conv.
+    key, k = jax.random.split(key)
+    params["stem"] = he(k, (3, 3, cin, cfg.widths[0]), 9 * cin)
+    cin = cfg.widths[0]
+    # Depthwise-separable blocks: 3x3 depthwise + 1x1 pointwise.
+    for i, cout in enumerate(cfg.widths[1:]):
+        key, k1, k2 = jax.random.split(key, 3)
+        params[f"dw{i}"] = he(k1, (3, 3, 1, cin), 9)
+        params[f"pw{i}"] = he(k2, (1, 1, cin, cout), cin)
+        cin = cout
+    if cfg.feature_dim != cfg.widths[-1]:
+        key, k = jax.random.split(key)
+        params["proj"] = he(k, (cfg.widths[-1], cfg.feature_dim), cfg.widths[-1])
+    return params
+
+
+def encode(params, images, cfg: EncoderConfig):
+    """Images ``[N, Hi, Wi, Cin]`` -> features ``[N, feature_dim]``.
+
+    The feature tap is the global-average-pooled output of the last block —
+    the "output of a hidden layer" the paper uses — L2-normalized so summary
+    distances are scale-free.
+    """
+    x = _relu6(_conv(images, params["stem"], cfg.strides[0]))
+    cin = cfg.widths[0]
+    for i, _cout in enumerate(cfg.widths[1:]):
+        x = _relu6(_conv(x, params[f"dw{i}"], cfg.strides[i + 1], groups=cin))
+        x = _relu6(_conv(x, params[f"pw{i}"], 1))
+        cin = _cout
+    feats = jnp.mean(x, axis=(1, 2))  # global average pool -> [N, widths[-1]]
+    if "proj" in params:
+        feats = feats @ params["proj"]
+    norm = jnp.maximum(jnp.linalg.norm(feats, axis=1, keepdims=True), 1e-6)
+    return feats / norm
+
+
+def encoder_flops(cfg: EncoderConfig, hi: int, wi: int) -> int:
+    """Analytic MAC count for one image — used for the DESIGN.md §6 roofline."""
+    flops = 0
+    h, w = hi, wi
+    cin = cfg.in_channels
+    # stem
+    h, w = (h + cfg.strides[0] - 1) // cfg.strides[0], (w + cfg.strides[0] - 1) // cfg.strides[0]
+    flops += h * w * 9 * cin * cfg.widths[0]
+    cin = cfg.widths[0]
+    for i, cout in enumerate(cfg.widths[1:]):
+        s = cfg.strides[i + 1]
+        h, w = (h + s - 1) // s, (w + s - 1) // s
+        flops += h * w * 9 * cin          # depthwise
+        flops += h * w * cin * cout       # pointwise
+        cin = cout
+    if cfg.feature_dim != cfg.widths[-1]:
+        flops += cfg.widths[-1] * cfg.feature_dim
+    return flops

@@ -1,0 +1,12 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp reference oracles."""
+
+from compile.kernels.distance import pairwise_sqdist
+from compile.kernels.histogram import label_feature_histogram
+from compile.kernels.summary import label_moments, summary_from_moments
+
+__all__ = [
+    "pairwise_sqdist",
+    "label_feature_histogram",
+    "label_moments",
+    "summary_from_moments",
+]

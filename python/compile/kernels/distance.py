@@ -1,0 +1,60 @@
+"""L1 Pallas kernel: pairwise squared Euclidean distances (K-means hot spot).
+
+K-means assignment needs ``d[n, k] = ||x_n - c_k||^2`` for every point and
+centroid. The GPU formulation tiles x into threadblock shared memory; the TPU
+formulation expands the square so the cross term is an MXU matmul:
+
+    d = ||x||^2 [N, 1] + ||c||^2 [1, K] - 2 * x @ c^T
+
+The norms are cheap VPU reductions; the ``[Nb, H] x [H, K]`` cross term is the
+systolic-array contraction. We block over N; the centroid block ``[K, H]``
+is pinned in VMEM across the whole grid (index_map is constant), which is the
+TPU analogue of the paper's GPU-resident centroid table.
+
+interpret=True as everywhere (see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 256
+
+
+def _sqdist_kernel(x_ref, c_ref, out_ref):
+    x = x_ref[...]  # [Nb, H]
+    c = c_ref[...]  # [K, H]
+    xx = jnp.sum(x * x, axis=1, keepdims=True)        # [Nb, 1]  (VPU)
+    cc = jnp.sum(c * c, axis=1)[None, :]              # [1, K]   (VPU)
+    xc = jnp.dot(x, c.T, preferred_element_type=jnp.float32)  # [Nb, K] (MXU)
+    # Clamp at 0: the expanded form can go slightly negative in f32 when a
+    # point coincides with a centroid.
+    out_ref[...] = jnp.maximum(xx + cc - 2.0 * xc, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def pairwise_sqdist(x: jax.Array, centroids: jax.Array, *, block_n: int = DEFAULT_BLOCK_N):
+    """``[N, K]`` squared distances between ``x [N, H]`` and ``centroids [K, H]``."""
+    n, h = x.shape
+    k, h2 = centroids.shape
+    if h != h2:
+        raise ValueError(f"x H={h} != centroids H={h2}")
+    block_n = min(block_n, n)
+    if n % block_n != 0:
+        raise ValueError(f"N={n} not divisible by block_n={block_n}")
+
+    return pl.pallas_call(
+        _sqdist_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, h), lambda i: (i, 0)),
+            pl.BlockSpec((k, h), lambda i: (0, 0)),  # centroids resident in VMEM
+        ],
+        out_specs=pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,
+    )(x, centroids)

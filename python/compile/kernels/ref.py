@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel — the CORE correctness signal.
+
+Each function here is the straightforward (un-blocked, un-tiled) definition of
+what the corresponding kernel in summary.py / distance.py / histogram.py must
+compute. pytest (python/tests/test_kernels.py) asserts allclose between the
+two on hypothesis-generated shapes.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def label_moments_ref(onehot, feats):
+    """[N,C],[N,H] -> (sums [C,H], counts [C]) by direct contraction."""
+    sums = jnp.einsum("nc,nh->ch", onehot, feats)
+    counts = jnp.sum(onehot, axis=0)
+    return sums, counts
+
+
+def summary_ref(onehot, feats):
+    """The paper's flat summary vector [C*H + C], computed naively."""
+    sums, counts = label_moments_ref(onehot, feats)
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    means = jnp.where(counts[:, None] > 0, sums / safe, 0.0)
+    total = jnp.maximum(jnp.sum(counts), 1.0)
+    return jnp.concatenate([means.reshape(-1), counts / total])
+
+
+def pairwise_sqdist_ref(x, centroids):
+    """[N,H],[K,H] -> [N,K] squared distances by explicit broadcast."""
+    diff = x[:, None, :] - centroids[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def label_feature_histogram_ref(x, onehot, buckets):
+    """[N,F],[N,C] -> [B,C,F] per-label per-feature histogram, naive."""
+    outs = []
+    for b in range(buckets):
+        lo = b / buckets
+        hi = (b + 1) / buckets
+        if b == buckets - 1:
+            mask = ((x >= lo) & (x <= hi)).astype(jnp.float32)
+        else:
+            mask = ((x >= lo) & (x < hi)).astype(jnp.float32)
+        outs.append(jnp.einsum("nc,nf->cf", onehot, mask))
+    return jnp.stack(outs, axis=0)

@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: per-label feature moments (the distribution-summary hot spot).
+
+The paper's proposed summary (§4.1) is, per client,
+
+    summary = concat([ mean(feats | y = c) for c in classes ],  # C*H values
+                     label_distribution)                         # C values
+
+The per-label mean is the hot spot. A scatter-style segment-sum serializes on
+TPU (no atomics, scatters lower to sequential updates), so we recast it as a
+one-hot matmul that runs on the MXU systolic array:
+
+    sums[C, H]  = onehot(y)^T [C, N] @ feats [N, H]
+    counts[C]   = sum_n onehot(y)[n, :]
+
+and block over N with ``BlockSpec`` so each ``[Nb, C] x [Nb, H]`` tile pair
+fits VMEM; the ``[C, H]`` accumulator stays resident across the grid. Padded
+rows are expressed as all-zero one-hot rows, so they contribute nothing to
+either sums or counts — no separate mask input is needed.
+
+Executed with ``interpret=True``: real-TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot run (see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block size along N. 128 rows keeps the (Nb*C + Nb*H) input tiles
+# comfortably inside a ~16 MiB VMEM budget for the shapes we compile
+# (C <= 600, H <= 256): 128*(600+256)*4B = 438 KiB per step, plus the
+# resident [C, H] accumulator (600*256*4B = 600 KiB).
+DEFAULT_BLOCK_N = 128
+
+
+def _moments_kernel(onehot_ref, feats_ref, sums_ref, counts_ref):
+    """Grid step: accumulate one N-block into the resident [C,H]/[C] outputs."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    onehot = onehot_ref[...]  # [Nb, C]
+    feats = feats_ref[...]    # [Nb, H]
+    # MXU contraction over the block's N dimension; accumulate in f32.
+    sums_ref[...] += jnp.dot(onehot.T, feats, preferred_element_type=jnp.float32)
+    counts_ref[...] += jnp.sum(onehot, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def label_moments(onehot: jax.Array, feats: jax.Array, *, block_n: int = DEFAULT_BLOCK_N):
+    """Per-label feature sums and counts.
+
+    Args:
+      onehot: ``[N, C]`` float32 one-hot labels. All-zero rows are padding and
+        contribute nothing.
+      feats: ``[N, H]`` float32 feature vectors (encoder output).
+      block_n: rows per grid step; ``N`` must be divisible by it (callers pad).
+
+    Returns:
+      ``(sums [C, H], counts [C])`` — divide to get per-label means.
+    """
+    n, c = onehot.shape
+    n2, h = feats.shape
+    if n != n2:
+        raise ValueError(f"onehot N={n} != feats N={n2}")
+    block_n = min(block_n, n)
+    if n % block_n != 0:
+        raise ValueError(f"N={n} not divisible by block_n={block_n}")
+
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _moments_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, c), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, h), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((c, h), lambda i: (0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, h), jnp.float32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+        ],
+        interpret=True,
+    )(onehot, feats)
+
+
+def summary_from_moments(sums: jax.Array, counts: jax.Array) -> jax.Array:
+    """Assemble the paper's flat summary vector of shape ``[C*H + C]``.
+
+    Empty classes get a zero mean vector (not NaN); the label distribution is
+    normalized by the total count (guarded against empty coresets).
+    """
+    c, _h = sums.shape
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    means = jnp.where(counts[:, None] > 0, sums / safe, 0.0)
+    total = jnp.maximum(jnp.sum(counts), 1.0)
+    label_dist = counts / total
+    return jnp.concatenate([means.reshape(-1), label_dist])

@@ -1,0 +1,191 @@
+"""L2: the JAX compute graphs FedDDE lowers to HLO artifacts.
+
+Every function here is jitted and AOT-lowered once by ``compile/aot.py``;
+Rust (L3) executes the resulting HLO via PJRT and never imports Python.
+
+Graphs:
+  * ``summary_graph``       — the paper's proposed summary: encoder (L2) +
+                              Pallas label-moments kernel (L1) -> [C*H+C].
+  * ``py_summary_graph``    — the P(y) baseline: label distribution only.
+  * ``pxy_summary_graph``   — the P(X|y) baseline: per-label per-feature
+                              histograms via the Pallas histogram kernel.
+  * ``kmeans_step_graph``   — one Lloyd iteration over client summaries,
+                              built from the Pallas distance + moments kernels.
+  * ``init_params_graph`` / ``train_step_graph`` / ``eval_graph`` — the FL
+    substrate: a two-hidden-layer MLP classifier trained with local SGD on
+    each simulated device. Parameters travel as ONE flat f32 vector so the
+    Rust FedAvg aggregator is a plain vector average.
+
+Padding convention (shared with Rust): compiled shapes are static, so clients
+pad their sample count N up to the artifact's bucket size; padded rows carry
+an all-zero one-hot label row, which contributes nothing to summaries,
+histograms, losses, or gradients.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from compile import encoder as enc
+from compile.kernels.distance import pairwise_sqdist
+from compile.kernels.histogram import label_feature_histogram
+from compile.kernels.summary import label_moments, summary_from_moments
+
+
+# ---------------------------------------------------------------------------
+# Distribution summaries
+# ---------------------------------------------------------------------------
+
+
+def summary_graph(images, onehot, cfg: enc.EncoderConfig, seed: int = 0):
+    """Proposed summary (paper §4.1): coreset images -> flat [C*H + C] vector.
+
+    ``images``: [k, Hi, Wi, Cin] coreset samples (label-proportional sampling
+    happens on-device, i.e. in Rust). ``onehot``: [k, C]; zero rows = padding.
+    """
+    params = enc.init_encoder_params(cfg, seed)
+    feats = enc.encode(params, images, cfg)
+    sums, counts = label_moments(onehot, feats)
+    return (summary_from_moments(sums, counts),)
+
+
+def py_summary_graph(onehot):
+    """P(y) baseline: normalized label distribution [C]."""
+    counts = jnp.sum(onehot, axis=0)
+    total = jnp.maximum(jnp.sum(counts), 1.0)
+    return (counts / total,)
+
+
+def pxy_summary_graph(x_flat, onehot, buckets: int):
+    """P(X|y) baseline: flat [B*C*F] per-label per-feature histogram,
+    row-normalized per (class, feature) so devices with different sample
+    counts are comparable (HACCS normalizes its histograms the same way)."""
+    hist = label_feature_histogram(x_flat, onehot, buckets=buckets)  # [B,C,F]
+    counts = jnp.sum(onehot, axis=0)  # [C]
+    safe = jnp.maximum(counts, 1.0)[None, :, None]
+    hist = jnp.where(counts[None, :, None] > 0, hist / safe, 0.0)
+    return (hist.reshape(-1),)
+
+
+# ---------------------------------------------------------------------------
+# K-means (one Lloyd iteration; Rust owns the outer loop + k-means++ seeding)
+# ---------------------------------------------------------------------------
+
+
+def kmeans_step_graph(points, centroids):
+    """One Lloyd step. Returns (new_centroids [K,D], assignments [M] i32,
+    inertia []). Empty clusters keep their previous centroid."""
+    m, _d = points.shape
+    k, _ = centroids.shape
+    d2 = pairwise_sqdist(points, centroids)          # [M, K]  (L1 kernel)
+    assign = jnp.argmin(d2, axis=1)                  # [M]
+    inertia = jnp.sum(jnp.min(d2, axis=1))
+    onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)  # [M, K]
+    sums, counts = label_moments(onehot, points, block_n=_kmeans_block(m))
+    safe = jnp.maximum(counts, 1.0)[:, None]
+    new_c = jnp.where(counts[:, None] > 0, sums / safe, centroids)
+    return new_c, assign.astype(jnp.int32), inertia
+
+
+def _kmeans_block(m: int) -> int:
+    for b in (128, 64, 32, 16, 8, 4, 2, 1):
+        if m % b == 0:
+            return b
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# FL classifier substrate (local training on each simulated device)
+# ---------------------------------------------------------------------------
+
+
+class MlpConfig(NamedTuple):
+    """Two-hidden-layer MLP classifier; parameters travel as one flat vector."""
+
+    in_dim: int
+    hidden1: int = 256
+    hidden2: int = 128
+    classes: int = 62
+
+    @property
+    def sizes(self):
+        return [
+            (self.in_dim, self.hidden1),
+            (self.hidden1,),
+            (self.hidden1, self.hidden2),
+            (self.hidden2,),
+            (self.hidden2, self.classes),
+            (self.classes,),
+        ]
+
+    @property
+    def n_params(self) -> int:
+        return sum(int(jnp.prod(jnp.array(s))) for s in self.sizes)
+
+
+def _unflatten(flat, cfg: MlpConfig):
+    parts, off = [], 0
+    for s in cfg.sizes:
+        n = 1
+        for d in s:
+            n *= d
+        parts.append(flat[off : off + n].reshape(s))
+        off += n
+    return parts
+
+
+def init_params_graph(cfg: MlpConfig, seed: int = 0):
+    """() -> flat He-initialized parameter vector [P] (constants baked)."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for s in cfg.sizes:
+        key, k = jax.random.split(key)
+        if len(s) == 2:
+            w = jax.random.normal(k, s, jnp.float32) * jnp.sqrt(2.0 / s[0])
+        else:
+            w = jnp.zeros(s, jnp.float32)
+        chunks.append(w.reshape(-1))
+    return (jnp.concatenate(chunks),)
+
+
+def _forward(flat, x, cfg: MlpConfig):
+    w1, b1, w2, b2, w3, b3 = _unflatten(flat, cfg)
+    h = jax.nn.relu(x @ w1 + b1)
+    h = jax.nn.relu(h @ w2 + b2)
+    return h @ w3 + b3
+
+
+def _masked_xent(logits, onehot):
+    """Mean cross-entropy over non-padded rows (zero one-hot row = padding)."""
+    mask = jnp.sum(onehot, axis=1)  # 1.0 for real rows, 0.0 for padding
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    per_row = -jnp.sum(onehot * logp, axis=-1)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(per_row * mask) / denom
+
+
+def train_step_graph(flat, x, onehot, lr, cfg: MlpConfig):
+    """One SGD step. (params [P], x [B,F], onehot [B,C], lr []) ->
+    (new params [P], loss [])."""
+
+    def loss_fn(p):
+        return _masked_xent(_forward(p, x, cfg), onehot)
+
+    loss, grad = jax.value_and_grad(loss_fn)(flat)
+    return flat - lr * grad, loss
+
+
+def eval_graph(flat, x, onehot, cfg: MlpConfig):
+    """(params, x [B,F], onehot [B,C]) -> (n_correct [], loss_sum [], n [])
+    over non-padded rows; Rust accumulates across batches."""
+    logits = _forward(flat, x, cfg)
+    mask = jnp.sum(onehot, axis=1)
+    pred = jnp.argmax(logits, axis=1)
+    label = jnp.argmax(onehot, axis=1)
+    correct = jnp.sum((pred == label).astype(jnp.float32) * mask)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss_sum = jnp.sum(-jnp.sum(onehot * logp, axis=-1) * mask)
+    return correct, loss_sum, jnp.sum(mask)

@@ -1,0 +1,95 @@
+"""Hypothesis sweeps over the encoder and summary graph: shapes/dtypes the
+AOT pipeline must support, plus numeric invariants (L2 normalization,
+padding neutrality) across random configurations."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import encoder as enc
+from compile import model
+from compile.kernels import ref
+
+
+class TestEncoderHypothesis:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        hw=st.sampled_from([8, 12, 16, 28]),
+        cin=st.sampled_from([1, 3]),
+        h=st.sampled_from([8, 16, 64]),
+        n=st.integers(1, 12),
+        seed=st.integers(0, 1000),
+    )
+    def test_encode_any_config(self, hw, cin, h, n, seed):
+        cfg = enc.EncoderConfig(in_channels=cin, feature_dim=h)
+        params = enc.init_encoder_params(cfg, seed=seed)
+        imgs = jax.random.uniform(jax.random.PRNGKey(seed), (n, hw, hw, cin))
+        feats = enc.encode(params, imgs, cfg)
+        assert feats.shape == (n, h)
+        assert bool(jnp.all(jnp.isfinite(feats)))
+        np.testing.assert_allclose(
+            jnp.linalg.norm(feats, axis=1), 1.0, rtol=1e-3
+        )
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        n_real=st.integers(1, 24),
+        n_pad=st.integers(0, 16),
+        c=st.integers(2, 8),
+        seed=st.integers(0, 1000),
+    )
+    def test_summary_padding_neutrality(self, n_real, n_pad, c, seed):
+        """Padded rows (zero one-hot) must not move the summary."""
+        cfg = enc.EncoderConfig(in_channels=1, feature_dim=8)
+        key = jax.random.PRNGKey(seed)
+        imgs_real = jax.random.uniform(key, (n_real, 8, 8, 1))
+        labels = jax.random.randint(jax.random.fold_in(key, 1), (n_real,), 0, c)
+        oh_real = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+
+        (s_real,) = model.summary_graph(imgs_real, oh_real, cfg)
+
+        imgs_pad = jnp.concatenate(
+            [imgs_real, jax.random.uniform(jax.random.fold_in(key, 2), (n_pad, 8, 8, 1))]
+        )
+        oh_pad = jnp.concatenate([oh_real, jnp.zeros((n_pad, c))])
+        (s_padded,) = model.summary_graph(imgs_pad, oh_pad, cfg)
+        np.testing.assert_allclose(s_real, s_padded, rtol=1e-3, atol=1e-4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(m=st.sampled_from([8, 32, 64]), d=st.integers(2, 24), k=st.integers(1, 5), seed=st.integers(0, 500))
+    def test_kmeans_step_centroids_in_hull(self, m, d, k, seed):
+        """New centroids are means of assigned points -> inside the data's
+        bounding box (empty clusters keep their previous centroid)."""
+        key = jax.random.PRNGKey(seed)
+        pts = jax.random.normal(key, (m, d)) * 2.0
+        cents = pts[:k]
+        new_c, assign, inertia = model.kmeans_step_graph(pts, cents)
+        lo, hi = jnp.min(pts, axis=0), jnp.max(pts, axis=0)
+        counts = jnp.bincount(assign, length=k)
+        for j in range(k):
+            if int(counts[j]) > 0:
+                assert bool(jnp.all(new_c[j] >= lo - 1e-4))
+                assert bool(jnp.all(new_c[j] <= hi + 1e-4))
+        assert float(inertia) >= 0.0
+
+    @settings(max_examples=6, deadline=None)
+    @given(
+        b=st.sampled_from([4, 8]),
+        f=st.integers(2, 32),
+        c=st.integers(2, 6),
+        seed=st.integers(0, 500),
+    )
+    def test_pxy_graph_matches_kernel_ref(self, b, f, c, seed):
+        key = jax.random.PRNGKey(seed)
+        n = 32
+        x = jax.random.uniform(key, (n, f))
+        labels = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, c)
+        oh = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+        (flat,) = model.pxy_summary_graph(x, oh, b)
+        hist = flat.reshape(b, c, f)
+        raw = ref.label_feature_histogram_ref(x, oh, b)
+        counts = jnp.sum(oh, axis=0)
+        safe = jnp.maximum(counts, 1.0)[None, :, None]
+        want = jnp.where(counts[None, :, None] > 0, raw / safe, 0.0)
+        np.testing.assert_allclose(hist, want, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,221 @@
+"""Kernel-vs-oracle correctness: the CORE signal for the L1 layer.
+
+Every Pallas kernel (interpret=True) is checked against its pure-jnp oracle
+in kernels/ref.py, both on fixed shapes and on hypothesis-generated
+shape/seed sweeps.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.distance import pairwise_sqdist
+from compile.kernels.histogram import label_feature_histogram
+from compile.kernels.summary import label_moments, summary_from_moments
+
+
+def _random_onehot(key, n, c, pad_frac=0.0):
+    """One-hot labels with an optional tail of all-zero padding rows."""
+    k1, k2 = jax.random.split(key)
+    labels = jax.random.randint(k1, (n,), 0, c)
+    oh = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+    if pad_frac > 0:
+        n_pad = int(n * pad_frac)
+        if n_pad:
+            oh = oh.at[-n_pad:].set(0.0)
+    return oh
+
+
+# ---------------------------------------------------------------------------
+# label_moments (summary kernel)
+# ---------------------------------------------------------------------------
+
+
+class TestLabelMoments:
+    def test_matches_ref_basic(self):
+        key = jax.random.PRNGKey(0)
+        oh = _random_onehot(key, 256, 10)
+        feats = jax.random.normal(jax.random.PRNGKey(1), (256, 32))
+        sums, counts = label_moments(oh, feats)
+        rs, rc = ref.label_moments_ref(oh, feats)
+        np.testing.assert_allclose(sums, rs, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(counts, rc, rtol=1e-6)
+
+    def test_padding_rows_contribute_nothing(self):
+        key = jax.random.PRNGKey(2)
+        oh = _random_onehot(key, 256, 6, pad_frac=0.5)
+        feats = jax.random.normal(jax.random.PRNGKey(3), (256, 16)) * 100.0
+        sums, counts = label_moments(oh, feats)
+        # Recompute with the padded rows physically removed.
+        real = int(jnp.sum(oh))
+        rs, rc = ref.label_moments_ref(oh[:real], feats[:real])
+        np.testing.assert_allclose(sums, rs, rtol=1e-4, atol=1e-3)
+        np.testing.assert_allclose(counts, rc, rtol=1e-6)
+
+    def test_single_block(self):
+        oh = jax.nn.one_hot(jnp.array([0, 1, 1, 2]), 3, dtype=jnp.float32)
+        feats = jnp.arange(8, dtype=jnp.float32).reshape(4, 2)
+        sums, counts = label_moments(oh, feats, block_n=4)
+        np.testing.assert_allclose(counts, [1.0, 2.0, 1.0])
+        np.testing.assert_allclose(sums[1], feats[1] + feats[2])
+
+    def test_rejects_misaligned_n(self):
+        oh = jnp.zeros((100, 3))
+        feats = jnp.zeros((100, 4))
+        with pytest.raises(ValueError, match="divisible"):
+            label_moments(oh, feats, block_n=64)
+
+    def test_rejects_mismatched_n(self):
+        with pytest.raises(ValueError, match="!="):
+            label_moments(jnp.zeros((128, 3)), jnp.zeros((64, 4)), block_n=64)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 4),
+        block=st.sampled_from([8, 32, 128]),
+        c=st.integers(2, 40),
+        h=st.integers(1, 80),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n_blocks, block, c, h, seed):
+        n = n_blocks * block
+        key = jax.random.PRNGKey(seed)
+        oh = _random_onehot(key, n, c, pad_frac=0.25)
+        feats = jax.random.normal(jax.random.fold_in(key, 1), (n, h))
+        sums, counts = label_moments(oh, feats, block_n=block)
+        rs, rc = ref.label_moments_ref(oh, feats)
+        np.testing.assert_allclose(sums, rs, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(counts, rc, rtol=1e-6)
+
+    def test_summary_assembly_matches_ref(self):
+        key = jax.random.PRNGKey(7)
+        oh = _random_onehot(key, 128, 5, pad_frac=0.1)
+        feats = jax.random.normal(jax.random.PRNGKey(8), (128, 12))
+        got = summary_from_moments(*label_moments(oh, feats))
+        want = ref.summary_ref(oh, feats)
+        assert got.shape == (5 * 12 + 5,)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_empty_class_mean_is_zero_not_nan(self):
+        # Class 3 never appears.
+        oh = jax.nn.one_hot(jnp.array([0, 1, 2, 0] * 32), 4, dtype=jnp.float32)
+        feats = jnp.ones((128, 8))
+        s = summary_from_moments(*label_moments(oh, feats))
+        means = s[: 4 * 8].reshape(4, 8)
+        assert not jnp.any(jnp.isnan(s))
+        np.testing.assert_allclose(means[3], 0.0)
+
+    def test_label_distribution_sums_to_one(self):
+        key = jax.random.PRNGKey(9)
+        oh = _random_onehot(key, 128, 7)
+        feats = jnp.zeros((128, 4))
+        s = summary_from_moments(*label_moments(oh, feats))
+        np.testing.assert_allclose(jnp.sum(s[7 * 4 :]), 1.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# pairwise_sqdist (distance kernel)
+# ---------------------------------------------------------------------------
+
+
+class TestPairwiseSqdist:
+    def test_matches_ref(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (512, 24))
+        c = jax.random.normal(jax.random.PRNGKey(1), (7, 24))
+        got = pairwise_sqdist(x, c)
+        want = ref.pairwise_sqdist_ref(x, c)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_distance_to_self(self):
+        c = jax.random.normal(jax.random.PRNGKey(2), (4, 16))
+        x = jnp.tile(c, (2, 1))  # 8 points, each equal to a centroid
+        d = pairwise_sqdist(x, c, block_n=8)
+        for i in range(8):
+            assert float(d[i, i % 4]) < 1e-4
+
+    def test_nonnegative(self):
+        x = jax.random.normal(jax.random.PRNGKey(3), (256, 8)) * 1e-3
+        c = x[:5] + 1e-8
+        d = pairwise_sqdist(x, c)
+        assert float(jnp.min(d)) >= 0.0
+
+    def test_rejects_dim_mismatch(self):
+        with pytest.raises(ValueError, match="H="):
+            pairwise_sqdist(jnp.zeros((64, 8)), jnp.zeros((3, 9)))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 3),
+        block=st.sampled_from([16, 64, 256]),
+        h=st.integers(1, 64),
+        k=st.integers(1, 12),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n_blocks, block, h, k, seed):
+        n = n_blocks * block
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.normal(key, (n, h)) * 3.0
+        c = jax.random.normal(jax.random.fold_in(key, 1), (k, h)) * 3.0
+        got = pairwise_sqdist(x, c, block_n=block)
+        want = ref.pairwise_sqdist_ref(x, c)
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# label_feature_histogram (P(X|y) baseline kernel)
+# ---------------------------------------------------------------------------
+
+
+class TestLabelFeatureHistogram:
+    def test_matches_ref(self):
+        key = jax.random.PRNGKey(0)
+        x = jax.random.uniform(key, (128, 30))
+        oh = _random_onehot(jax.random.PRNGKey(1), 128, 5)
+        got = label_feature_histogram(x, oh, buckets=8)
+        want = ref.label_feature_histogram_ref(x, oh, 8)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_every_sample_lands_in_exactly_one_bucket(self):
+        key = jax.random.PRNGKey(2)
+        n = 192
+        x = jax.random.uniform(key, (n, 11))
+        oh = _random_onehot(jax.random.PRNGKey(3), n, 4, pad_frac=0.25)
+        hist = label_feature_histogram(x, oh, buckets=4)
+        real = float(jnp.sum(oh))
+        # Summing over buckets and classes recovers (real rows) per feature.
+        per_feature = jnp.sum(hist, axis=(0, 1))
+        np.testing.assert_allclose(per_feature, real, rtol=1e-6)
+
+    def test_boundary_value_one_is_counted(self):
+        x = jnp.ones((64, 3))
+        oh = jax.nn.one_hot(jnp.zeros(64, jnp.int32), 2, dtype=jnp.float32)
+        hist = label_feature_histogram(x, oh, buckets=4)
+        np.testing.assert_allclose(hist[3, 0], 64.0)
+        np.testing.assert_allclose(jnp.sum(hist[:3]), 0.0)
+
+    def test_padding_rows_excluded(self):
+        x = jnp.full((64, 2), 0.5)
+        oh = jnp.zeros((64, 3))  # everything padded
+        hist = label_feature_histogram(x, oh, buckets=4)
+        np.testing.assert_allclose(hist, 0.0)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 3),
+        block=st.sampled_from([16, 64]),
+        f=st.integers(1, 40),
+        c=st.integers(2, 10),
+        b=st.sampled_from([2, 4, 8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_sweep(self, n_blocks, block, f, c, b, seed):
+        n = n_blocks * block
+        key = jax.random.PRNGKey(seed)
+        x = jax.random.uniform(key, (n, f))
+        oh = _random_onehot(jax.random.fold_in(key, 1), n, c, pad_frac=0.2)
+        got = label_feature_histogram(x, oh, buckets=b, block_n=block)
+        want = ref.label_feature_histogram_ref(x, oh, b)
+        np.testing.assert_allclose(got, want, rtol=1e-6)

@@ -1,0 +1,191 @@
+"""L2 graph tests: shapes, summary semantics, K-means step, FL substrate."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import encoder as enc
+from compile import model
+from compile.kernels import ref
+
+
+ECFG = enc.EncoderConfig(in_channels=1, feature_dim=16)
+
+
+def _batch(key, n=32, img=(8, 8, 1), c=4, pad=0):
+    k1, k2 = jax.random.split(key)
+    imgs = jax.random.uniform(k1, (n, *img))
+    labels = jax.random.randint(k2, (n,), 0, c)
+    oh = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+    if pad:
+        oh = oh.at[-pad:].set(0.0)
+    return imgs, oh
+
+
+class TestEncoder:
+    def test_shapes_and_normalization(self):
+        p = enc.init_encoder_params(ECFG)
+        imgs, _ = _batch(jax.random.PRNGKey(0))
+        feats = enc.encode(p, imgs, ECFG)
+        assert feats.shape == (32, 16)
+        np.testing.assert_allclose(jnp.linalg.norm(feats, axis=1), 1.0, rtol=1e-4)
+
+    def test_deterministic_in_seed(self):
+        a = enc.init_encoder_params(ECFG, seed=1)
+        b = enc.init_encoder_params(ECFG, seed=1)
+        c = enc.init_encoder_params(ECFG, seed=2)
+        np.testing.assert_allclose(a["stem"], b["stem"])
+        assert not np.allclose(a["stem"], c["stem"])
+
+    def test_rgb_config(self):
+        cfg = enc.EncoderConfig(in_channels=3, feature_dim=32)
+        p = enc.init_encoder_params(cfg)
+        imgs = jax.random.uniform(jax.random.PRNGKey(1), (4, 16, 16, 3))
+        assert enc.encode(p, imgs, cfg).shape == (4, 32)
+
+    def test_projection_used_when_dims_differ(self):
+        cfg = enc.EncoderConfig(in_channels=1, feature_dim=24)  # widths[-1]=64
+        p = enc.init_encoder_params(cfg)
+        assert "proj" in p and p["proj"].shape == (64, 24)
+
+    def test_flops_positive_and_monotone_in_resolution(self):
+        f_small = enc.encoder_flops(ECFG, 8, 8)
+        f_big = enc.encoder_flops(ECFG, 32, 32)
+        assert 0 < f_small < f_big
+
+
+class TestSummaryGraph:
+    def test_output_shape_and_structure(self):
+        imgs, oh = _batch(jax.random.PRNGKey(3), n=32, c=4)
+        (s,) = model.summary_graph(imgs, oh, ECFG)
+        assert s.shape == (4 * 16 + 4,)
+        label_dist = s[4 * 16 :]
+        np.testing.assert_allclose(jnp.sum(label_dist), 1.0, rtol=1e-5)
+
+    def test_identical_data_identical_summary(self):
+        imgs, oh = _batch(jax.random.PRNGKey(4))
+        (a,) = model.summary_graph(imgs, oh, ECFG)
+        (b,) = model.summary_graph(imgs, oh, ECFG)
+        np.testing.assert_allclose(a, b)
+
+    def test_label_skew_visible_in_summary(self):
+        """Clients with disjoint label sets must produce distant summaries —
+        the property clustering relies on."""
+        imgs, _ = _batch(jax.random.PRNGKey(5), n=32, c=4)
+        oh_a = jax.nn.one_hot(jnp.zeros(32, jnp.int32), 4, dtype=jnp.float32)
+        oh_b = jax.nn.one_hot(jnp.full((32,), 3, jnp.int32), 4, dtype=jnp.float32)
+        (sa,) = model.summary_graph(imgs, oh_a, ECFG)
+        (sb,) = model.summary_graph(imgs, oh_b, ECFG)
+        assert float(jnp.linalg.norm(sa - sb)) > 0.5
+
+    def test_matches_pure_ref_pipeline(self):
+        imgs, oh = _batch(jax.random.PRNGKey(6), n=32, c=4, pad=4)
+        (got,) = model.summary_graph(imgs, oh, ECFG)
+        params = enc.init_encoder_params(ECFG, 0)
+        feats = enc.encode(params, imgs, ECFG)
+        want = ref.summary_ref(oh, feats)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestBaselineGraphs:
+    def test_py_summary(self):
+        _, oh = _batch(jax.random.PRNGKey(7), n=32, c=4, pad=8)
+        (dist,) = model.py_summary_graph(oh)
+        assert dist.shape == (4,)
+        np.testing.assert_allclose(jnp.sum(dist), 1.0, rtol=1e-6)
+
+    def test_pxy_summary_normalized_per_class(self):
+        key = jax.random.PRNGKey(8)
+        x = jax.random.uniform(key, (64, 10))
+        oh = jax.nn.one_hot(jax.random.randint(key, (64,), 0, 3), 3, dtype=jnp.float32)
+        (flat,) = model.pxy_summary_graph(x, oh, 4)
+        hist = flat.reshape(4, 3, 10)
+        # each (class, feature) histogram sums to 1 (class present).
+        sums = jnp.sum(hist, axis=0)
+        np.testing.assert_allclose(sums, 1.0, rtol=1e-5)
+
+
+class TestKmeansStep:
+    def test_converges_on_separated_blobs(self):
+        key = jax.random.PRNGKey(9)
+        k1, k2 = jax.random.split(key)
+        blob_a = jax.random.normal(k1, (64, 8)) * 0.1 + 5.0
+        blob_b = jax.random.normal(k2, (64, 8)) * 0.1 - 5.0
+        pts = jnp.concatenate([blob_a, blob_b])
+        cent = jnp.stack([pts[0], pts[64]])
+        for _ in range(5):
+            cent, assign, inertia = model.kmeans_step_graph(pts, cent)
+        # All of blob A in one cluster, all of blob B in the other.
+        assert len(set(np.asarray(assign[:64]).tolist())) == 1
+        assert len(set(np.asarray(assign[64:]).tolist())) == 1
+        assert float(inertia) < 64 * 2 * 8 * 0.1
+        np.testing.assert_allclose(cent[assign[0]], 5.0, atol=0.2)
+
+    def test_empty_cluster_keeps_centroid(self):
+        pts = jnp.ones((64, 4))
+        cent = jnp.stack([jnp.ones(4), jnp.full(4, 99.0)])
+        new_c, assign, _ = model.kmeans_step_graph(pts, cent)
+        np.testing.assert_allclose(new_c[1], 99.0)
+        assert int(jnp.sum(assign)) == 0
+
+    def test_inertia_monotone_nonincreasing(self):
+        key = jax.random.PRNGKey(10)
+        pts = jax.random.normal(key, (128, 6))
+        cent = pts[:4]
+        prev = float("inf")
+        for _ in range(6):
+            cent, _, inertia = model.kmeans_step_graph(pts, cent)
+            assert float(inertia) <= prev + 1e-3
+            prev = float(inertia)
+
+
+class TestFlSubstrate:
+    CFG = model.MlpConfig(in_dim=64, hidden1=32, hidden2=16, classes=4)
+
+    def _data(self, key, n=8):
+        x = jax.random.normal(key, (n, 64))
+        labels = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, 4)
+        return x, jax.nn.one_hot(labels, 4, dtype=jnp.float32)
+
+    def test_param_count_matches_config(self):
+        (p,) = model.init_params_graph(self.CFG)
+        assert p.shape == (self.CFG.n_params,)
+        assert self.CFG.n_params == 64 * 32 + 32 + 32 * 16 + 16 + 16 * 4 + 4
+
+    def test_sgd_reduces_loss(self):
+        (p,) = model.init_params_graph(self.CFG)
+        x, oh = self._data(jax.random.PRNGKey(0), n=8)
+        losses = []
+        for _ in range(30):
+            p, loss = model.train_step_graph(p, x, oh, jnp.float32(0.1), self.CFG)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.5
+
+    def test_padding_rows_do_not_affect_gradient(self):
+        (p,) = model.init_params_graph(self.CFG)
+        x, oh = self._data(jax.random.PRNGKey(1), n=8)
+        # Same real data, plus garbage padded rows.
+        x_pad = jnp.concatenate([x, jax.random.normal(jax.random.PRNGKey(9), (8, 64)) * 50])
+        oh_pad = jnp.concatenate([oh, jnp.zeros((8, 4))])
+        p1, l1 = model.train_step_graph(p, x, oh, jnp.float32(0.05), self.CFG)
+        p2, l2 = model.train_step_graph(p, x_pad, oh_pad, jnp.float32(0.05), self.CFG)
+        np.testing.assert_allclose(l1, l2, rtol=1e-5)
+        np.testing.assert_allclose(p1, p2, rtol=1e-4, atol=1e-6)
+
+    def test_eval_counts(self):
+        (p,) = model.init_params_graph(self.CFG)
+        x, oh = self._data(jax.random.PRNGKey(2), n=8)
+        correct, loss_sum, n = model.eval_graph(p, x, oh, self.CFG)
+        assert 0 <= float(correct) <= 8
+        assert float(n) == 8.0
+        assert float(loss_sum) > 0
+
+    def test_eval_perfect_model(self):
+        # Train long enough to memorize 4 points, then eval == 100%.
+        (p,) = model.init_params_graph(self.CFG)
+        x, oh = self._data(jax.random.PRNGKey(3), n=4)
+        for _ in range(200):
+            p, _ = model.train_step_graph(p, x, oh, jnp.float32(0.2), self.CFG)
+        correct, _, n = model.eval_graph(p, x, oh, self.CFG)
+        assert float(correct) == float(n) == 4.0

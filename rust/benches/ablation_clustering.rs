@@ -1,0 +1,71 @@
+//! Bench E8 — clustering ablations:
+//!
+//!  * DBSCAN eps sensitivity (paper §3: "it can sometimes put all devices
+//!    to the same group, and can not return a meaningful clustering
+//!    solution") — sweep eps, report cluster count + ARI cliff;
+//!  * K-means k sweep — quality is stable around the true group count,
+//!    the robustness argument for §4.2.
+//!
+//!     cargo bench --bench ablation_clustering
+
+use feddde::cluster::{dbscan, kmeans};
+use feddde::data::{DatasetSpec, Generator, Partition};
+use feddde::runtime::Engine;
+use feddde::summary::{EncoderSummary, SummaryEngine};
+use feddde::util::mat::Mat;
+use feddde::util::rng::Rng;
+use feddde::util::stats;
+
+fn main() {
+    println!("ablation_clustering — DBSCAN parameter sensitivity vs K-means robustness\n");
+    let spec = DatasetSpec::femnist().with_clients(96);
+    let partition = Partition::build(&spec);
+    let generator = Generator::new(&spec);
+    let truth = partition.group_truth();
+    let engine = Engine::open_default().expect("artifacts");
+
+    let se = EncoderSummary::new(&spec);
+    let mut m = Mat::zeros(0, se.dim());
+    for part in &partition.clients {
+        let ds = generator.client_dataset(part, 0);
+        let mut rng = Rng::substream(1, &[part.client_id as u64]);
+        let (v, _) = se.summarize(&engine, &ds, &mut rng).expect("summarize");
+        m.push_row(&v);
+    }
+    let m = feddde::cluster::balance_blocks(&m, &se.blocks());
+
+    std::fs::create_dir_all("results").ok();
+    let mut rows = vec!["# algo\tparam\tclusters\tnoise\tari".to_string()];
+
+    let eps0 = dbscan::suggest_eps(&m, 4, 48);
+    println!("DBSCAN eps sweep (suggest_eps = {eps0:.4}):");
+    println!("{:>10} {:>9} {:>7} {:>7}", "eps", "clusters", "noise", "ARI");
+    for mult in [0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 4.0, 16.0] {
+        let eps = eps0 * mult;
+        let res = dbscan::fit(&m, &dbscan::DbscanConfig::new(eps, 4));
+        let ari = stats::adjusted_rand_index(&res.total_labels(), &truth);
+        let note = if res.n_clusters <= 1 && res.n_noise == 0 {
+            "  <- all devices in one group (the paper's failure mode)"
+        } else if res.n_clusters == 0 {
+            "  <- everything noise"
+        } else {
+            ""
+        };
+        println!("{:>10.4} {:>9} {:>7} {:>7.3}{note}", eps, res.n_clusters, res.n_noise, ari);
+        rows.push(format!("dbscan\t{eps:.5}\t{}\t{}\t{ari:.4}", res.n_clusters, res.n_noise));
+    }
+
+    println!("\nK-means k sweep (true groups = {}):", spec.n_groups);
+    println!("{:>10} {:>9} {:>7}", "k", "clusters", "ARI");
+    for k in [2usize, 4, 6, 8, 10, 12, 16] {
+        let mut cfg = kmeans::KmeansConfig::new(k);
+        cfg.seed = 7;
+        let res = kmeans::fit(&m, &cfg);
+        let ari = stats::adjusted_rand_index(&res.assignments, &truth);
+        println!("{k:>10} {:>9} {ari:>7.3}", k);
+        rows.push(format!("kmeans\t{k}\t{k}\t0\t{ari:.4}"));
+    }
+
+    std::fs::write("results/ablation_clustering.tsv", rows.join("\n") + "\n").unwrap();
+    println!("\nwrote results/ablation_clustering.tsv");
+}

@@ -1,0 +1,107 @@
+//! Bench E7 — summary-design ablations the paper discusses in §4.1 / §5:
+//!
+//!  * coreset size k: summary time + downstream clustering quality (ARI);
+//!    encoder artifacts are compiled at k in {32, 128, 512} (FEMNIST);
+//!  * dimension-reduction method: encoder vs PCA vs JL random projection
+//!    at matched output dims — the "(1) GPU-friendly (2) spatially aware"
+//!    trade-off the paper argues for, measured as clustering quality.
+//!
+//!     cargo bench --bench ablation_summary
+
+use feddde::cluster::kmeans;
+use feddde::data::{DatasetSpec, Generator, Partition};
+use feddde::runtime::Engine;
+use feddde::summary::{EncoderSummary, JlSummary, PcaBasis, PcaSummary, SummaryEngine};
+use feddde::util::bench::Bencher;
+use feddde::util::mat::Mat;
+use feddde::util::rng::Rng;
+use feddde::util::stats;
+
+fn fleet_summaries(
+    spec: &DatasetSpec,
+    se: &dyn SummaryEngine,
+    engine: &Engine,
+    partition: &Partition,
+    generator: &Generator,
+) -> Mat {
+    let mut m = Mat::zeros(0, se.dim());
+    for part in &partition.clients {
+        let ds = generator.client_dataset(part, 0);
+        let mut rng = Rng::substream(spec.seed, &[part.client_id as u64]);
+        let (v, _) = se.summarize(engine, &ds, &mut rng).expect("summarize");
+        m.push_row(&v);
+    }
+    m
+}
+
+fn cluster_ari(spec: &DatasetSpec, m: &Mat, blocks: &[(usize, usize)], truth: &[usize]) -> f64 {
+    let balanced = feddde::cluster::balance_blocks(m, blocks);
+    let mut cfg = kmeans::KmeansConfig::new(spec.n_groups);
+    cfg.seed = 5;
+    let res = kmeans::fit(&balanced, &cfg);
+    stats::adjusted_rand_index(&res.assignments, truth)
+}
+
+fn main() {
+    println!("ablation_summary — coreset size & dimension-reduction method\n");
+    let spec = DatasetSpec::femnist().with_clients(72);
+    let partition = Partition::build(&spec);
+    let generator = Generator::new(&spec);
+    let truth = partition.group_truth();
+    let engine = Engine::open_default().expect("artifacts");
+    let mut b = Bencher::new(std::time::Duration::from_secs(3));
+    std::fs::create_dir_all("results").ok();
+    let mut rows = vec!["# variant\tsummary_mean_s\tari".to_string()];
+
+    // --- coreset size sweep (encoder artifacts compiled per k) -------------
+    println!("coreset size k (encoder summary):");
+    for k in [32usize, 128, 512] {
+        let se = EncoderSummary::with_k(&spec, k);
+        let part0 = &partition.clients[0];
+        let ds = generator.client_dataset(part0, 0);
+        let mut rng = Rng::new(1);
+        let meas = b.bench(&format!("encoder/k{k}/summarize"), || {
+            let (v, _) = se.summarize(&engine, &ds, &mut rng).expect("summarize");
+            std::hint::black_box(v.len());
+        });
+        let m = fleet_summaries(&spec, &se, &engine, &partition, &generator);
+        let ari = cluster_ari(&spec, &m, &se.blocks(), &truth);
+        println!("    k={k:<4} ARI={ari:.3}");
+        rows.push(format!("encoder_k{k}\t{:.6}\t{ari:.4}", meas.mean_secs()));
+    }
+
+    // --- dimension-reduction method at matched dims -------------------------
+    println!("\ndimension-reduction method (fixed k=128, H=64):");
+    let variants: Vec<(String, Box<dyn SummaryEngine>)> = {
+        // PCA basis fitted on a server-side sample of raw images.
+        let mut sample = Mat::zeros(0, spec.flat_dim());
+        for part in partition.clients.iter().take(12) {
+            let ds = generator.client_dataset(part, 0);
+            for i in 0..ds.n.min(24) {
+                sample.push_row(ds.image(i));
+            }
+        }
+        let basis = PcaBasis::fit(&sample, spec.feature_dim, 6, 9);
+        vec![
+            ("encoder".into(), Box::new(EncoderSummary::new(&spec)) as Box<dyn SummaryEngine>),
+            ("jl".into(), Box::new(JlSummary::new(&spec))),
+            ("pca".into(), Box::new(PcaSummary::new(&spec, basis))),
+        ]
+    };
+    for (tag, se) in &variants {
+        let part0 = &partition.clients[0];
+        let ds = generator.client_dataset(part0, 0);
+        let mut rng = Rng::new(2);
+        let meas = b.bench(&format!("reduce/{tag}/summarize"), || {
+            let (v, _) = se.summarize(&engine, &ds, &mut rng).expect("summarize");
+            std::hint::black_box(v.len());
+        });
+        let m = fleet_summaries(&spec, se.as_ref(), &engine, &partition, &generator);
+        let ari = cluster_ari(&spec, &m, &se.blocks(), &truth);
+        println!("    {tag:<8} ARI={ari:.3}");
+        rows.push(format!("{tag}\t{:.6}\t{ari:.4}", meas.mean_secs()));
+    }
+
+    std::fs::write("results/ablation_summary.tsv", rows.join("\n") + "\n").unwrap();
+    println!("\nwrote results/ablation_summary.tsv");
+}

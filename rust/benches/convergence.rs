@@ -1,0 +1,74 @@
+//! Bench E5 — convergence / time-to-accuracy across selection policies
+//! (the HACCS-inherited claim the summary pipeline serves: cluster-based
+//! selection cuts time-to-accuracy vs random without hurting accuracy).
+//!
+//!     cargo bench --bench convergence
+//!     FEDDDE_BENCH_FULL=1 cargo bench --bench convergence
+
+use feddde::config::ExperimentConfig;
+use feddde::coordinator::Coordinator;
+use feddde::runtime::Engine;
+use feddde::util::bench::full_scale;
+
+fn main() {
+    let (clients, rounds) = if full_scale() { (300, 200) } else { (80, 50) };
+    println!("convergence — femnist-like, {clients} clients, {rounds} rounds, policies compared\n");
+    std::fs::create_dir_all("results").ok();
+    let mut lines = vec![
+        "# policy\tbest_acc\tfinal_acc\tsim_time_total\trounds_to_half\tsim_t_to_half".to_string(),
+    ];
+
+    // First pass to find a common target: half of the max best accuracy.
+    let mut logs = Vec::new();
+    for policy in ["cluster", "random", "round_robin", "oort"] {
+        let cfg = ExperimentConfig {
+            dataset: "femnist".into(),
+            n_clients: clients,
+            rounds,
+            per_round: 8,
+            local_steps: 3,
+            lr: 0.1,
+            policy: policy.into(),
+            seed: 17,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let mut coord = Coordinator::new(cfg, Engine::open_default().expect("artifacts")).unwrap();
+        coord.run().unwrap();
+        println!(
+            "{:<12} best acc {:.4}  final {:.4}  sim_time {:>9.1}s  (wall {:.1}s)",
+            policy,
+            coord.log.best_accuracy(),
+            coord.log.final_accuracy(),
+            coord.log.rounds.last().map(|r| r.sim_time).unwrap_or(0.0),
+            t0.elapsed().as_secs_f64()
+        );
+        logs.push((policy, coord.log));
+    }
+
+    let target = logs.iter().map(|(_, l)| l.best_accuracy()).fold(f64::INFINITY, f64::min) * 0.9;
+    println!("\ntime-to-accuracy at target {target:.3}:");
+    for (policy, log) in &logs {
+        let (r, t) = match (log.rounds_to_accuracy(target), log.time_to_accuracy(target)) {
+            (Some(r), Some(t)) => (r as i64, t),
+            _ => (-1, f64::NAN),
+        };
+        println!("  {policy:<12} round {r:>5}   sim {t:>9.1}s");
+        lines.push(format!(
+            "{policy}\t{:.4}\t{:.4}\t{:.1}\t{r}\t{t:.1}",
+            log.best_accuracy(),
+            log.final_accuracy(),
+            log.rounds.last().map(|x| x.sim_time).unwrap_or(0.0)
+        ));
+    }
+    let cluster_t = logs.iter().find(|(p, _)| *p == "cluster").and_then(|(_, l)| l.time_to_accuracy(target));
+    let random_t = logs.iter().find(|(p, _)| *p == "random").and_then(|(_, l)| l.time_to_accuracy(target));
+    if let (Some(c), Some(r)) = (cluster_t, random_t) {
+        println!(
+            "\ncluster vs random time-to-accuracy: {:+.1}% (HACCS paper: 18-38% reduction)",
+            100.0 * (1.0 - c / r)
+        );
+    }
+    std::fs::write("results/convergence.tsv", lines.join("\n") + "\n").unwrap();
+    println!("wrote results/convergence.tsv");
+}

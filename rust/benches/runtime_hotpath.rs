@@ -1,0 +1,103 @@
+//! Perf-pass bench: request-path latency of every AOT artifact the
+//! coordinator executes per round, plus rust-native vs HLO K-means and
+//! the FedAvg aggregation loop. EXPERIMENTS.md §Perf quotes these lines.
+//!
+//!     cargo bench --bench runtime_hotpath
+
+use feddde::cluster::kmeans;
+use feddde::coordinator::fedavg::fedavg;
+use feddde::data::{DatasetSpec, Generator, Partition};
+use feddde::runtime::{lit_f32, lit_scalar, to_vec_f32, Engine};
+use feddde::util::bench::Bencher;
+use feddde::util::mat::Mat;
+use feddde::util::rng::Rng;
+
+fn main() {
+    println!("runtime_hotpath — per-call artifact latency + server-side hot loops\n");
+    let engine = Engine::open_default().expect("artifacts");
+    let mut b = Bencher::new(std::time::Duration::from_secs(3));
+    std::fs::create_dir_all("results").ok();
+
+    // --- femnist train step (the most-called artifact in training) ---------
+    let spec = DatasetSpec::femnist();
+    let params = to_vec_f32(&engine.exec("femnist_init", &[]).unwrap()[0]).unwrap();
+    let bsz = spec.train_batch;
+    let f = spec.flat_dim();
+    let c = spec.classes;
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..bsz * f).map(|_| rng.f32()).collect();
+    let mut oh = vec![0.0f32; bsz * c];
+    for i in 0..bsz {
+        oh[i * c + (i % c)] = 1.0;
+    }
+    engine.warmup(&["femnist_train_B32", "femnist_eval_B512"]).unwrap();
+    b.bench("artifact/femnist_train_B32", || {
+        let ins = [
+            lit_f32(&params, &[params.len()]).unwrap(),
+            lit_f32(&x, &[bsz, f]).unwrap(),
+            lit_f32(&oh, &[bsz, c]).unwrap(),
+            lit_scalar(0.1),
+        ];
+        std::hint::black_box(engine.exec("femnist_train_B32", &ins).unwrap().len());
+    });
+
+    // --- eval ----------------------------------------------------------------
+    let be = spec.eval_batch;
+    let xe: Vec<f32> = (0..be * f).map(|_| rng.f32()).collect();
+    let mut ohe = vec![0.0f32; be * c];
+    for i in 0..be {
+        ohe[i * c + (i % c)] = 1.0;
+    }
+    b.bench("artifact/femnist_eval_B512", || {
+        let ins = [
+            lit_f32(&params, &[params.len()]).unwrap(),
+            lit_f32(&xe, &[be, f]).unwrap(),
+            lit_f32(&ohe, &[be, c]).unwrap(),
+        ];
+        std::hint::black_box(engine.exec("femnist_eval_B512", &ins).unwrap().len());
+    });
+
+    // --- proposed summary artifact -------------------------------------------
+    let part = Partition::build(&spec.clone().with_clients(4));
+    let generator = Generator::new(&spec);
+    let ds = generator.client_dataset(&part.clients[0], 0);
+    let se = feddde::summary::EncoderSummary::new(&spec);
+    use feddde::summary::SummaryEngine;
+    let mut rng2 = Rng::new(2);
+    b.bench("artifact/femnist_summary_k128", || {
+        let (v, _) = se.summarize(&engine, &ds, &mut rng2).unwrap();
+        std::hint::black_box(v.len());
+    });
+
+    // --- K-means: rust-native Lloyd vs the HLO kmeans_step artifact ----------
+    let m_rows = 2816usize;
+    let d = spec.summary_dim();
+    let k = 8usize;
+    let mut pts = Vec::with_capacity(m_rows * d);
+    for _ in 0..m_rows * d {
+        pts.push(rng.f32());
+    }
+    let mat = Mat::from_vec(pts.clone(), m_rows, d);
+    b.bench("kmeans/rust_assign_2816x4030", || {
+        let cents = Mat::from_vec(pts[..k * d].to_vec(), k, d);
+        std::hint::black_box(kmeans::assign(&mat, &cents, feddde::util::parallel::default_threads()).1);
+    });
+    engine.warmup(&["femnist_kmeans_M2816K8"]).unwrap();
+    b.bench("kmeans/hlo_step_2816x4030", || {
+        let ins = [
+            lit_f32(&pts, &[m_rows, d]).unwrap(),
+            lit_f32(&pts[..k * d], &[k, d]).unwrap(),
+        ];
+        std::hint::black_box(engine.exec("femnist_kmeans_M2816K8", &ins).unwrap().len());
+    });
+
+    // --- FedAvg over 10 updates of femnist params -----------------------------
+    let updates: Vec<(Vec<f32>, f64)> =
+        (0..10).map(|i| (params.clone(), (i + 1) as f64)).collect();
+    b.bench("server/fedavg_10x240k", || {
+        std::hint::black_box(fedavg(&updates).unwrap()[0]);
+    });
+
+    b.write_tsv("results/runtime_hotpath.tsv").unwrap();
+    println!("\nwrote results/runtime_hotpath.tsv");
+}

@@ -1,0 +1,87 @@
+//! Bench E3 — Table 2 right half: device-clustering time. DBSCAN over
+//! P(y) and P(X|y) summaries (HACCS) vs K-means over the proposed encoder
+//! summaries, as a function of fleet size N.
+//!
+//!     cargo bench --bench table2_clustering
+//!     FEDDDE_BENCH_FULL=1 cargo bench --bench table2_clustering
+//!
+//! P(X|y) at OpenImage scale does not fit in memory (the paper's own
+//! observation — ">64 GB"); those points are measured at a memory cap and
+//! extrapolated with DBSCAN's Theta(N^2 D) law, printed explicitly.
+
+use feddde::cluster::{dbscan, kmeans};
+use feddde::data::{DatasetSpec, Generator, Partition};
+use feddde::runtime::Engine;
+use feddde::summary::{EncoderSummary, PxySummary, PySummary, SummaryEngine};
+use feddde::util::bench::{full_scale, Bencher};
+use feddde::util::mat::Mat;
+use feddde::util::rng::Rng;
+
+fn gather(spec: &DatasetSpec, se: &dyn SummaryEngine, engine: &Engine, cap: usize) -> Mat {
+    let partition = Partition::build(spec);
+    let generator = Generator::new(spec);
+    let mut m = Mat::zeros(0, se.dim());
+    for part in partition.clients.iter().take(cap) {
+        let ds = generator.client_dataset(part, 0);
+        let mut rng = Rng::substream(3, &[part.client_id as u64]);
+        let (v, _) = se.summarize(engine, &ds, &mut rng).expect("summarize");
+        m.push_row(&v);
+    }
+    m
+}
+
+fn main() {
+    println!("table2_clustering — clustering time vs summary family\n");
+    let engine = Engine::open_default().expect("artifacts missing: run `make artifacts`");
+    let mut b = Bencher::new(std::time::Duration::from_secs(10));
+    std::fs::create_dir_all("results").ok();
+
+    for name in ["femnist", "openimage"] {
+        let preset = DatasetSpec::by_name(name).unwrap();
+        let full_n = preset.n_clients;
+        let n = if full_scale() { full_n.min(2800) } else { 128 };
+        let spec = preset.with_clients(n);
+
+        // P(y): DBSCAN over C-dim label distributions.
+        let py = PySummary::new(&spec);
+        let m_py = gather(&spec, &py, &engine, n);
+        let eps = dbscan::suggest_eps(&m_py, 4, 32) * 1.2;
+        let meas = b.bench_once(&format!("{name}/DBSCAN/P(y)/N{n}"), || {
+            std::hint::black_box(dbscan::fit(&m_py, &dbscan::DbscanConfig::new(eps.max(1e-6), 4)).n_clusters);
+        });
+        let extrap = meas.mean_secs() * (full_n as f64 / n as f64).powi(2);
+        println!("    -> extrapolated to N={full_n}: {extrap:.1}s (paper: 835.69s OpenImage / 24.5s FEMNIST)");
+
+        // P(X|y): DBSCAN over huge histograms, memory-capped.
+        let pxy = PxySummary::new(&spec);
+        let cap = ((1usize << 31) / pxy.summary_bytes()).clamp(8, n);
+        let m_pxy = gather(&spec, &pxy, &engine, cap);
+        let eps2 = dbscan::suggest_eps(&m_pxy, 4, 16) * 1.2;
+        let meas = b.bench_once(&format!("{name}/DBSCAN/P(X|y)/N{cap}(cap)"), || {
+            std::hint::black_box(
+                dbscan::fit(&m_pxy, &dbscan::DbscanConfig::new(eps2.max(1e-6), 4)).n_clusters,
+            );
+        });
+        let extrap = meas.mean_secs() * (full_n as f64 / cap as f64).powi(2);
+        let days = extrap / 86_400.0;
+        println!(
+            "    -> extrapolated to N={full_n}: {extrap:.0}s ({days:.2} days; paper: >2 days OpenImage / 1866s FEMNIST)"
+        );
+
+        // Encoder summaries: K-means (the proposed pipeline).
+        let enc = EncoderSummary::new(&spec);
+        let m_enc = gather(&spec, &enc, &engine, n);
+        let meas = b.bench(&format!("{name}/K-means/Encoder/N{n}"), || {
+            let mut cfg = kmeans::KmeansConfig::new(spec.n_groups);
+            cfg.seed = 5;
+            std::hint::black_box(kmeans::fit(&m_enc, &cfg).inertia);
+        });
+        let extrap = meas.mean_secs() * full_n as f64 / n as f64;
+        println!(
+            "    -> extrapolated to N={full_n}: {extrap:.1}s (paper: 477.2s OpenImage / 30s FEMNIST)\n"
+        );
+    }
+
+    b.write_tsv("results/table2_clustering.tsv").unwrap();
+    println!("wrote results/table2_clustering.tsv");
+}

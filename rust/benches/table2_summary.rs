@@ -1,0 +1,62 @@
+//! Bench E2 — Table 2 left half: per-client summary-computation time for
+//! P(y), P(X|y), and the proposed Encoder summary on both dataset families.
+//!
+//!     cargo bench --bench table2_summary          # CI scale
+//!     FEDDDE_BENCH_FULL=1 cargo bench ...         # paper-scale fleets
+//!
+//! Reports host kernel time per client workload size (the simulator scales
+//! these by device factors; see examples/overhead_report.rs for the full
+//! Table 2 with fleet simulation). Results land in results/table2_summary.tsv.
+
+use feddde::data::{DatasetSpec, Generator, Partition};
+use feddde::runtime::Engine;
+use feddde::summary::{EncoderSummary, PxySummary, PySummary, SummaryEngine};
+use feddde::util::bench::{full_scale, Bencher};
+use feddde::util::rng::Rng;
+
+fn bench_dataset(b: &mut Bencher, name: &str) {
+    let preset = DatasetSpec::by_name(name).unwrap();
+    let spec = if full_scale() { preset.clone() } else { preset.with_clients(64) };
+    let partition = Partition::build(&spec);
+    let generator = Generator::new(&spec);
+    let engine = Engine::open_default().expect("artifacts missing: run `make artifacts`");
+
+    // Representative clients: smallest, median, largest by sample count.
+    let mut order: Vec<usize> = (0..spec.n_clients).collect();
+    order.sort_by_key(|&i| partition.clients[i].n_samples);
+    let picks = [
+        ("min", order[0]),
+        ("med", order[order.len() / 2]),
+        ("max", order[order.len() - 1]),
+    ];
+
+    let engines: Vec<Box<dyn SummaryEngine>> = vec![
+        Box::new(PySummary::new(&spec)),
+        Box::new(PxySummary::new(&spec)),
+        Box::new(EncoderSummary::new(&spec)),
+    ];
+    for se in &engines {
+        for (tag, idx) in picks {
+            let part = &partition.clients[idx];
+            let ds = generator.client_dataset(part, 0);
+            let mut rng = Rng::new(idx as u64);
+            b.bench(
+                &format!("{name}/{}/client_{tag}_n{}", se.name(), ds.n),
+                || {
+                    let (v, _) = se.summarize(&engine, &ds, &mut rng).expect("summarize");
+                    std::hint::black_box(v.len());
+                },
+            );
+        }
+    }
+}
+
+fn main() {
+    println!("table2_summary — per-client summary time (host kernel seconds)\n");
+    let mut b = Bencher::new(std::time::Duration::from_secs(3));
+    bench_dataset(&mut b, "femnist");
+    bench_dataset(&mut b, "openimage");
+    std::fs::create_dir_all("results").ok();
+    b.write_tsv("results/table2_summary.tsv").unwrap();
+    println!("\nwrote results/table2_summary.tsv");
+}

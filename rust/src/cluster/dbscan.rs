@@ -1,0 +1,339 @@
+//! DBSCAN — the clustering baseline HACCS uses over P(y)/P(X|y) summaries
+//! (paper §3). Brute-force neighbourhood queries with parallel distance
+//! rows; O(N^2 D) exactly like the reference implementations the paper
+//! measured, which is precisely why clustering 11k clients' histogram
+//! summaries "takes more than 2 days" — Table 2's third column.
+//!
+//! The paper also observes DBSCAN's parameter sensitivity ("can sometimes
+//! put all devices in the same group"); `benches/ablation_clustering.rs`
+//! sweeps eps to reproduce that cliff.
+
+use crate::util::mat::{sqdist, Mat};
+use crate::util::parallel::map_chunks;
+
+/// DBSCAN labels: cluster id, noise, or not-yet-visited (internal).
+pub const NOISE: usize = usize::MAX;
+
+#[derive(Debug, Clone)]
+pub struct DbscanConfig {
+    pub eps: f64,
+    pub min_pts: usize,
+    pub threads: usize,
+}
+
+impl DbscanConfig {
+    pub fn new(eps: f64, min_pts: usize) -> Self {
+        DbscanConfig { eps, min_pts, threads: crate::util::parallel::default_threads() }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DbscanResult {
+    /// Cluster id per point; `NOISE` for noise points.
+    pub labels: Vec<usize>,
+    pub n_clusters: usize,
+    pub n_noise: usize,
+}
+
+impl DbscanResult {
+    /// Map noise points to their own singleton ids so downstream consumers
+    /// (ARI, selection) always see a total assignment.
+    pub fn total_labels(&self) -> Vec<usize> {
+        let mut next = self.n_clusters;
+        self.labels
+            .iter()
+            .map(|&l| {
+                if l == NOISE {
+                    let id = next;
+                    next += 1;
+                    id
+                } else {
+                    l
+                }
+            })
+            .collect()
+    }
+}
+
+/// Region query: indices within eps of point i (including i itself).
+fn neighbors(points: &Mat, i: usize, eps2: f64, threads: usize) -> Vec<usize> {
+    let n = points.rows();
+    let row = points.row(i);
+    let chunks = map_chunks(n, threads, |lo, hi| {
+        let mut out = Vec::new();
+        for j in lo..hi {
+            if sqdist(row, points.row(j)) <= eps2 {
+                out.push(j);
+            }
+        }
+        out
+    });
+    chunks.into_iter().flatten().collect()
+}
+
+/// Memory budget for the precomputed-neighbour fast path (bytes of index
+/// storage). Above it, fit() falls back to per-query scans.
+const PRECOMPUTE_BUDGET: usize = 1 << 31; // 2 GiB of u32 indices
+
+/// Classic DBSCAN (Ester et al. 1996) with BFS cluster expansion.
+///
+/// Perf (EXPERIMENTS.md §Perf): region queries dominate at Θ(N²D). The
+/// fast path computes all N neighbour lists in ONE row-parallel pass —
+/// each worker owns a contiguous block of query rows, streaming the full
+/// point set through cache — instead of spawning a thread scope per query
+/// and re-scanning during BFS expansion (the before/after is ~4x on
+/// 512x4030 summaries). Falls back to per-query scans when the neighbour
+/// lists would not fit the budget.
+pub fn fit(points: &Mat, cfg: &DbscanConfig) -> DbscanResult {
+    let n = points.rows();
+    let eps2 = cfg.eps * cfg.eps;
+
+    // Fast path: one parallel pass builds every neighbour list.
+    // Worst case neighbour storage is n^2 u32s; estimate via a sample row.
+    let sampled: usize = if n > 0 {
+        let probe = neighbors(points, 0, eps2, cfg.threads).len().max(1);
+        probe.saturating_mul(n).saturating_mul(4)
+    } else {
+        0
+    };
+    if sampled <= PRECOMPUTE_BUDGET {
+        let lists: Vec<Vec<u32>> = crate::util::parallel::map_chunks(n, cfg.threads, |lo, hi| {
+            let mut out = Vec::with_capacity(hi - lo);
+            for i in lo..hi {
+                let row = points.row(i);
+                let mut nbrs = Vec::new();
+                for j in 0..n {
+                    if sqdist(row, points.row(j)) <= eps2 {
+                        nbrs.push(j as u32);
+                    }
+                }
+                out.push(nbrs);
+            }
+            out
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+        return fit_with_lists(n, cfg.min_pts, |i| lists[i].iter().map(|&j| j as usize));
+    }
+
+    // Fallback: per-query scans (still row-parallel inside each query).
+    fit_with_query(points, cfg, eps2)
+}
+
+/// Core DBSCAN given a neighbour oracle.
+fn fit_with_lists<'a, I, F>(n: usize, min_pts: usize, neigh: F) -> DbscanResult
+where
+    I: Iterator<Item = usize> + 'a,
+    F: Fn(usize) -> I,
+{
+    const UNVISITED: usize = usize::MAX - 1;
+    let mut labels = vec![UNVISITED; n];
+    let mut cluster = 0usize;
+    let mut queue = std::collections::VecDeque::new();
+    for i in 0..n {
+        if labels[i] != UNVISITED {
+            continue;
+        }
+        let mut count = 0usize;
+        queue.clear();
+        for j in neigh(i) {
+            count += 1;
+            queue.push_back(j);
+        }
+        if count < min_pts {
+            labels[i] = NOISE;
+            continue;
+        }
+        labels[i] = cluster;
+        while let Some(j) = queue.pop_front() {
+            if labels[j] == NOISE {
+                labels[j] = cluster; // border point
+            }
+            if labels[j] != UNVISITED {
+                continue;
+            }
+            labels[j] = cluster;
+            let jn: Vec<usize> = neigh(j).collect();
+            if jn.len() >= min_pts {
+                queue.extend(jn);
+            }
+        }
+        cluster += 1;
+    }
+    let n_noise = labels.iter().filter(|&&l| l == NOISE).count();
+    DbscanResult { labels, n_clusters: cluster, n_noise }
+}
+
+fn fit_with_query(points: &Mat, cfg: &DbscanConfig, eps2: f64) -> DbscanResult {
+    let n = points.rows();
+    const UNVISITED: usize = usize::MAX - 1;
+    let mut labels = vec![UNVISITED; n];
+    let mut cluster = 0usize;
+    for i in 0..n {
+        if labels[i] != UNVISITED {
+            continue;
+        }
+        let nbrs = neighbors(points, i, eps2, cfg.threads);
+        if nbrs.len() < cfg.min_pts {
+            labels[i] = NOISE;
+            continue;
+        }
+        labels[i] = cluster;
+        let mut queue: std::collections::VecDeque<usize> = nbrs.into_iter().collect();
+        while let Some(j) = queue.pop_front() {
+            if labels[j] == NOISE {
+                labels[j] = cluster; // border point
+            }
+            if labels[j] != UNVISITED {
+                continue;
+            }
+            labels[j] = cluster;
+            let jn = neighbors(points, j, eps2, cfg.threads);
+            if jn.len() >= cfg.min_pts {
+                queue.extend(jn);
+            }
+        }
+        cluster += 1;
+    }
+    let n_noise = labels.iter().filter(|&&l| l == NOISE).count();
+    DbscanResult { labels, n_clusters: cluster, n_noise }
+}
+
+/// Heuristic eps from a sample of k-NN distances (the standard "elbow"
+/// stand-in): median distance to the min_pts-th neighbour over a sample.
+pub fn suggest_eps(points: &Mat, min_pts: usize, sample: usize) -> f64 {
+    let n = points.rows();
+    let step = (n / sample.max(1)).max(1);
+    let mut kth = Vec::new();
+    for i in (0..n).step_by(step) {
+        let mut ds: Vec<f64> = (0..n)
+            .filter(|&j| j != i)
+            .map(|j| sqdist(points.row(i), points.row(j)).sqrt())
+            .collect();
+        ds.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if ds.len() >= min_pts {
+            kth.push(ds[min_pts - 1]);
+        }
+    }
+    crate::util::stats::percentile(&kth, 50.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn blobs(n_per: usize, centers: &[(f32, f32)], spread: f32, seed: u64) -> (Mat, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut m = Mat::zeros(0, 2);
+        let mut truth = Vec::new();
+        for (g, &(cx, cy)) in centers.iter().enumerate() {
+            for _ in 0..n_per {
+                m.push_row(&[
+                    cx + spread * rng.normal() as f32,
+                    cy + spread * rng.normal() as f32,
+                ]);
+                truth.push(g);
+            }
+        }
+        (m, truth)
+    }
+
+    #[test]
+    fn finds_separated_blobs() {
+        let (pts, truth) = blobs(40, &[(0.0, 0.0), (10.0, 10.0)], 0.3, 1);
+        let res = fit(&pts, &DbscanConfig::new(1.5, 4));
+        assert_eq!(res.n_clusters, 2);
+        assert_eq!(res.n_noise, 0);
+        let ari = crate::util::stats::adjusted_rand_index(&res.total_labels(), &truth);
+        assert!(ari > 0.99, "ari={ari}");
+    }
+
+    #[test]
+    fn tiny_eps_everything_noise() {
+        let (pts, _) = blobs(30, &[(0.0, 0.0)], 1.0, 2);
+        let res = fit(&pts, &DbscanConfig::new(1e-6, 3));
+        assert_eq!(res.n_clusters, 0);
+        assert_eq!(res.n_noise, 30);
+    }
+
+    #[test]
+    fn huge_eps_single_cluster() {
+        // The paper's observed failure mode: badly tuned eps puts all
+        // devices in one group.
+        let (pts, _) = blobs(30, &[(0.0, 0.0), (10.0, 10.0), (30.0, 0.0)], 0.5, 3);
+        let res = fit(&pts, &DbscanConfig::new(1e6, 3));
+        assert_eq!(res.n_clusters, 1);
+        assert_eq!(res.n_noise, 0);
+    }
+
+    #[test]
+    fn outlier_is_noise() {
+        let (mut pts, _) = blobs(20, &[(0.0, 0.0)], 0.2, 4);
+        pts.push_row(&[100.0, 100.0]);
+        let res = fit(&pts, &DbscanConfig::new(1.0, 4));
+        assert_eq!(*res.labels.last().unwrap(), NOISE);
+        assert_eq!(res.n_noise, 1);
+        assert_eq!(res.n_clusters, 1);
+    }
+
+    #[test]
+    fn total_labels_give_unique_ids_to_noise() {
+        let (mut pts, _) = blobs(10, &[(0.0, 0.0)], 0.1, 5);
+        pts.push_row(&[50.0, 50.0]);
+        pts.push_row(&[-50.0, 50.0]);
+        let res = fit(&pts, &DbscanConfig::new(1.0, 3));
+        let total = res.total_labels();
+        let mut uniq = total.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), res.n_clusters + res.n_noise);
+    }
+
+    #[test]
+    fn deterministic() {
+        let (pts, _) = blobs(50, &[(0.0, 0.0), (5.0, 5.0)], 0.8, 6);
+        let a = fit(&pts, &DbscanConfig::new(1.0, 4));
+        let b = fit(&pts, &DbscanConfig::new(1.0, 4));
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn suggest_eps_reasonable() {
+        let (pts, _) = blobs(50, &[(0.0, 0.0), (10.0, 10.0)], 0.3, 7);
+        let eps = suggest_eps(&pts, 4, 20);
+        // should be on the order of intra-blob spacing, not inter-blob.
+        assert!(eps > 0.01 && eps < 5.0, "eps={eps}");
+        let res = fit(&pts, &DbscanConfig::new(eps * 2.0, 4));
+        assert_eq!(res.n_clusters, 2);
+    }
+
+    #[test]
+    fn property_labels_total_and_clusters_dense() {
+        crate::util::proptest::check(8, |g| {
+            let n = g.usize_in(10, 80);
+            let d = g.usize_in(1, 5);
+            let mut m = Mat::zeros(0, d);
+            for _ in 0..n {
+                m.push_row(&g.vec_f32(d, 0.0, 4.0));
+            }
+            let cfg = DbscanConfig::new(g.f64_in(0.1, 3.0), g.usize_in(2, 6));
+            let res = fit(&m, &cfg);
+            assert_eq!(res.labels.len(), n);
+            // every non-noise label < n_clusters
+            for &l in &res.labels {
+                assert!(l == NOISE || l < res.n_clusters);
+            }
+            // each cluster has at least one core point by construction:
+            // cluster ids are contiguous 0..n_clusters
+            let mut seen = vec![false; res.n_clusters];
+            for &l in &res.labels {
+                if l != NOISE {
+                    seen[l] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s));
+        });
+    }
+}

@@ -1,0 +1,278 @@
+//! K-means device clustering (paper §4.2): k-means++ seeding + Lloyd
+//! iterations, parallel over points. This is the server-side clustering
+//! engine for the proposed encoder summaries; `runtime::KmeansHlo` offers
+//! the same Lloyd step through the AOT Pallas-kernel artifact.
+
+use crate::util::mat::{sqdist, Mat};
+use crate::util::parallel::{default_threads, map_chunks};
+use crate::util::rng::Rng;
+
+/// K-means configuration.
+#[derive(Debug, Clone)]
+pub struct KmeansConfig {
+    pub k: usize,
+    pub max_iters: usize,
+    /// Relative inertia improvement below which we stop.
+    pub tol: f64,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl KmeansConfig {
+    pub fn new(k: usize) -> Self {
+        KmeansConfig { k, max_iters: 50, tol: 1e-4, seed: 0, threads: default_threads() }
+    }
+}
+
+/// Result of a K-means fit.
+#[derive(Debug, Clone)]
+pub struct KmeansResult {
+    pub centroids: Mat,
+    pub assignments: Vec<usize>,
+    pub inertia: f64,
+    pub iters: usize,
+}
+
+/// k-means++ initialization (Arthur & Vassilvitskii 2007).
+pub fn kmeanspp_init(points: &Mat, k: usize, rng: &mut Rng) -> Mat {
+    let n = points.rows();
+    assert!(n >= k, "kmeans++: n={n} < k={k}");
+    let mut centroids = Mat::zeros(0, points.cols());
+    let first = rng.below(n as u64) as usize;
+    centroids.push_row(points.row(first));
+    let mut d2: Vec<f64> = (0..n).map(|i| points.sqdist_row(i, centroids.row(0))).collect();
+    for _ in 1..k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            // all points identical to chosen centroids: pick uniformly
+            rng.below(n as u64) as usize
+        } else {
+            rng.weighted_index(&d2)
+        };
+        centroids.push_row(points.row(next));
+        let c = centroids.rows() - 1;
+        for i in 0..n {
+            let d = points.sqdist_row(i, centroids.row(c));
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    centroids
+}
+
+/// Assign each point to its nearest centroid; returns (assignments, inertia).
+pub fn assign(points: &Mat, centroids: &Mat, threads: usize) -> (Vec<usize>, f64) {
+    let n = points.rows();
+    let k = centroids.rows();
+    let chunks = map_chunks(n, threads, |lo, hi| {
+        let mut a = Vec::with_capacity(hi - lo);
+        let mut inertia = 0.0f64;
+        for i in lo..hi {
+            let row = points.row(i);
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for c in 0..k {
+                let d = sqdist(row, centroids.row(c));
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            a.push(best);
+            inertia += best_d;
+        }
+        (a, inertia)
+    });
+    let mut assignments = Vec::with_capacity(n);
+    let mut inertia = 0.0;
+    for (a, i) in chunks {
+        assignments.extend(a);
+        inertia += i;
+    }
+    (assignments, inertia)
+}
+
+/// Recompute centroids as cluster means; empty clusters are re-seeded to the
+/// point farthest from its centroid (standard Lloyd repair).
+fn update_centroids(points: &Mat, assignments: &[usize], k: usize, prev: &Mat) -> Mat {
+    let d = points.cols();
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0usize; k];
+    for (i, &a) in assignments.iter().enumerate() {
+        counts[a] += 1;
+        let row = points.row(i);
+        let dst = &mut sums[a * d..(a + 1) * d];
+        for (s, &v) in dst.iter_mut().zip(row) {
+            *s += v as f64;
+        }
+    }
+    let mut out = Mat::zeros(k, d);
+    let mut empties = Vec::new();
+    for c in 0..k {
+        if counts[c] == 0 {
+            empties.push(c);
+            out.row_mut(c).copy_from_slice(prev.row(c));
+        } else {
+            let inv = 1.0 / counts[c] as f64;
+            for (j, v) in out.row_mut(c).iter_mut().enumerate() {
+                *v = (sums[c * d + j] * inv) as f32;
+            }
+        }
+    }
+    // Re-seed empty clusters to the farthest points.
+    if !empties.is_empty() {
+        let mut far: Vec<(f64, usize)> = assignments
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| (points.sqdist_row(i, out.row(a)), i))
+            .collect();
+        far.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for (e, c) in empties.into_iter().enumerate() {
+            if e < far.len() {
+                let idx = far[e].1;
+                let row = points.row(idx).to_vec();
+                out.row_mut(c).copy_from_slice(&row);
+            }
+        }
+    }
+    out
+}
+
+/// Full Lloyd fit.
+pub fn fit(points: &Mat, cfg: &KmeansConfig) -> KmeansResult {
+    assert!(points.rows() >= cfg.k, "kmeans: fewer points than clusters");
+    let mut rng = Rng::new(cfg.seed);
+    let mut centroids = kmeanspp_init(points, cfg.k, &mut rng);
+    let mut prev_inertia = f64::INFINITY;
+    let mut assignments = Vec::new();
+    let mut inertia = 0.0;
+    let mut iters = 0;
+    for it in 0..cfg.max_iters {
+        let (a, i) = assign(points, &centroids, cfg.threads);
+        assignments = a;
+        inertia = i;
+        iters = it + 1;
+        if prev_inertia.is_finite() && (prev_inertia - inertia) <= cfg.tol * prev_inertia.max(1e-12)
+        {
+            break;
+        }
+        prev_inertia = inertia;
+        centroids = update_centroids(points, &assignments, cfg.k, &centroids);
+    }
+    KmeansResult { centroids, assignments, inertia, iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(n_per: usize, centers: &[(f32, f32)], spread: f32, seed: u64) -> (Mat, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut m = Mat::zeros(0, 2);
+        let mut truth = Vec::new();
+        for (g, &(cx, cy)) in centers.iter().enumerate() {
+            for _ in 0..n_per {
+                m.push_row(&[
+                    cx + spread * rng.normal() as f32,
+                    cy + spread * rng.normal() as f32,
+                ]);
+                truth.push(g);
+            }
+        }
+        (m, truth)
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let (pts, truth) = blobs(50, &[(0.0, 0.0), (10.0, 10.0), (-10.0, 10.0)], 0.3, 1);
+        let res = fit(&pts, &KmeansConfig::new(3));
+        let ari = crate::util::stats::adjusted_rand_index(&res.assignments, &truth);
+        assert!(ari > 0.99, "ari={ari}");
+        assert!(res.inertia < 150.0 * 2.0 * 0.3 * 0.3 * 4.0);
+    }
+
+    #[test]
+    fn inertia_nonincreasing_over_restarts_of_same_seed() {
+        let (pts, _) = blobs(40, &[(0.0, 0.0), (5.0, 5.0)], 1.0, 2);
+        let a = fit(&pts, &KmeansConfig::new(2));
+        let b = fit(&pts, &KmeansConfig::new(2));
+        assert_eq!(a.assignments, b.assignments); // deterministic
+        assert!((a.inertia - b.inertia).abs() < 1e-9);
+    }
+
+    #[test]
+    fn k_equals_n_zero_inertia() {
+        let (pts, _) = blobs(1, &[(0.0, 0.0), (1.0, 1.0), (2.0, 2.0)], 0.0, 3);
+        let res = fit(&pts, &KmeansConfig::new(3));
+        assert!(res.inertia < 1e-9);
+        let mut a = res.assignments.clone();
+        a.sort_unstable();
+        a.dedup();
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn identical_points_dont_crash() {
+        let mut m = Mat::zeros(0, 3);
+        for _ in 0..20 {
+            m.push_row(&[1.0, 2.0, 3.0]);
+        }
+        let res = fit(&m, &KmeansConfig::new(4));
+        assert!(res.inertia < 1e-9);
+        assert_eq!(res.assignments.len(), 20);
+    }
+
+    #[test]
+    fn single_cluster() {
+        let (pts, _) = blobs(30, &[(2.0, 2.0)], 0.5, 4);
+        let res = fit(&pts, &KmeansConfig::new(1));
+        assert!(res.assignments.iter().all(|&a| a == 0));
+        // centroid near (2,2)
+        assert!((res.centroids.row(0)[0] - 2.0).abs() < 0.3);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let (pts, _) = blobs(100, &[(0.0, 0.0), (8.0, 0.0), (0.0, 8.0)], 1.0, 5);
+        let mut cfg1 = KmeansConfig::new(3);
+        cfg1.threads = 1;
+        let mut cfg8 = KmeansConfig::new(3);
+        cfg8.threads = 8;
+        let a = fit(&pts, &cfg1);
+        let b = fit(&pts, &cfg8);
+        assert_eq!(a.assignments, b.assignments);
+        assert!((a.inertia - b.inertia).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "fewer points")]
+    fn too_few_points_panics() {
+        let (pts, _) = blobs(1, &[(0.0, 0.0)], 0.0, 6);
+        fit(&pts, &KmeansConfig::new(5));
+    }
+
+    #[test]
+    fn property_assignments_are_nearest() {
+        crate::util::proptest::check(10, |g| {
+            let n = g.usize_in(10, 60);
+            let d = g.usize_in(1, 8);
+            let k = g.usize_in(1, 4.min(n));
+            let mut m = Mat::zeros(0, d);
+            for _ in 0..n {
+                m.push_row(&g.vec_f32(d, -5.0, 5.0));
+            }
+            let mut cfg = KmeansConfig::new(k);
+            cfg.seed = g.case as u64;
+            let res = fit(&m, &cfg);
+            // Invariant: every point's assigned centroid is (one of) its nearest.
+            for i in 0..n {
+                let assigned_d = m.sqdist_row(i, res.centroids.row(res.assignments[i]));
+                for c in 0..k {
+                    let d2 = m.sqdist_row(i, res.centroids.row(c));
+                    assert!(assigned_d <= d2 + 1e-5, "point {i} not nearest");
+                }
+            }
+        });
+    }
+}

@@ -1,0 +1,179 @@
+//! Server-side clustering service: K-means (proposed, §4.2) and DBSCAN
+//! (HACCS baseline, §3), plus quality metrics via `util::stats`.
+
+pub mod dbscan;
+pub mod kmeans;
+
+pub use dbscan::{DbscanConfig, DbscanResult, NOISE};
+pub use kmeans::{KmeansConfig, KmeansResult};
+
+use crate::util::mat::Mat;
+
+/// Column z-scoring before clustering. Summary vectors concatenate blocks of
+/// very different scales (C*H feature means around ~0.1, C label-probability
+/// entries around 1/C), so raw Euclidean K-means is dominated by whichever
+/// block is numerically larger. Standardizing gives every informative
+/// dimension equal footing; constant columns become zero.
+pub fn standardize_columns(m: &Mat) -> Mat {
+    let (rows, cols) = (m.rows(), m.cols());
+    if rows == 0 {
+        return m.clone();
+    }
+    let mut mean = vec![0.0f64; cols];
+    for i in 0..rows {
+        for (s, &v) in mean.iter_mut().zip(m.row(i)) {
+            *s += v as f64;
+        }
+    }
+    for s in &mut mean {
+        *s /= rows as f64;
+    }
+    let mut var = vec![0.0f64; cols];
+    for i in 0..rows {
+        for (j, &v) in m.row(i).iter().enumerate() {
+            let d = v as f64 - mean[j];
+            var[j] += d * d;
+        }
+    }
+    let inv_std: Vec<f64> = var
+        .iter()
+        .map(|&v| {
+            let s = (v / rows as f64).sqrt();
+            if s > 1e-9 {
+                1.0 / s
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    let mut out = Mat::zeros(rows, cols);
+    for i in 0..rows {
+        let src = m.row(i);
+        let dst = out.row_mut(i);
+        for j in 0..cols {
+            dst[j] = ((src[j] as f64 - mean[j]) * inv_std[j]) as f32;
+        }
+    }
+    out
+}
+
+/// Block-balanced scaling: rescale each contiguous block of columns so every
+/// block contributes the same *total* variance to squared distances. The
+/// proposed summary is `[C*H feature means | C label probabilities]`; without
+/// balancing, whichever block is larger/denser dominates Euclidean K-means
+/// and the other block's signal is lost. (Per-column z-scoring is wrong here:
+/// it amplifies thousands of noisy feature columns over the C informative
+/// label columns — see DESIGN.md §6.)
+pub fn balance_blocks(m: &Mat, blocks: &[(usize, usize)]) -> Mat {
+    let rows = m.rows();
+    if rows == 0 || blocks.len() <= 1 {
+        return m.clone();
+    }
+    let mut out = m.clone();
+    for &(start, len) in blocks {
+        if len == 0 {
+            continue;
+        }
+        // Total variance of the block.
+        let mut mean = vec![0.0f64; len];
+        for i in 0..rows {
+            for (j, &v) in m.row(i)[start..start + len].iter().enumerate() {
+                mean[j] += v as f64;
+            }
+        }
+        for v in &mut mean {
+            *v /= rows as f64;
+        }
+        let mut total_var = 0.0f64;
+        for i in 0..rows {
+            for (j, &v) in m.row(i)[start..start + len].iter().enumerate() {
+                let d = v as f64 - mean[j];
+                total_var += d * d;
+            }
+        }
+        total_var /= rows as f64;
+        let w = if total_var > 1e-18 { (1.0 / total_var).sqrt() } else { 0.0 };
+        for i in 0..rows {
+            for v in &mut out.row_mut(i)[start..start + len] {
+                *v = (*v as f64 * w) as f32;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balance_blocks_equalizes_total_variance() {
+        // Block 0: 3 columns with big variance; block 1: 1 column, small.
+        let m = Mat::from_rows(&[
+            vec![10.0, -20.0, 30.0, 0.001],
+            vec![-10.0, 20.0, -30.0, 0.002],
+            vec![30.0, -60.0, 90.0, 0.003],
+        ]);
+        let b = balance_blocks(&m, &[(0, 3), (3, 1)]);
+        let var_of = |cols: std::ops::Range<usize>| -> f64 {
+            let mut total = 0.0;
+            for j in cols {
+                let col: Vec<f64> = (0..3).map(|i| b.row(i)[j] as f64).collect();
+                let mean: f64 = col.iter().sum::<f64>() / 3.0;
+                total += col.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / 3.0;
+            }
+            total
+        };
+        let v0 = var_of(0..3);
+        let v1 = var_of(3..4);
+        assert!((v0 - 1.0).abs() < 1e-4, "v0={v0}");
+        assert!((v1 - 1.0).abs() < 1e-4, "v1={v1}");
+    }
+
+    #[test]
+    fn balance_single_block_is_noop() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(balance_blocks(&m, &[(0, 2)]), m);
+    }
+
+    #[test]
+    fn balance_constant_block_zeroes_out() {
+        let m = Mat::from_rows(&[vec![5.0, 1.0], vec![5.0, 2.0]]);
+        let b = balance_blocks(&m, &[(0, 1), (1, 1)]);
+        assert_eq!(b.row(0)[0], 0.0);
+        assert_eq!(b.row(1)[0], 0.0);
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let m = Mat::from_rows(&[vec![1.0, 10.0, 5.0], vec![3.0, 30.0, 5.0], vec![5.0, 50.0, 5.0]]);
+        let s = standardize_columns(&m);
+        for j in 0..2 {
+            let col: Vec<f64> = (0..3).map(|i| s.row(i)[j] as f64).collect();
+            let mean: f64 = col.iter().sum::<f64>() / 3.0;
+            let var: f64 = col.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / 3.0;
+            assert!(mean.abs() < 1e-6);
+            assert!((var - 1.0).abs() < 1e-5);
+        }
+        // constant column -> zeros
+        for i in 0..3 {
+            assert_eq!(s.row(i)[2], 0.0);
+        }
+    }
+
+    #[test]
+    fn standardize_equalizes_block_scales() {
+        // Two informative columns at wildly different scales end up equal.
+        let m = Mat::from_rows(&[vec![0.001, 100.0], vec![0.002, 200.0], vec![0.003, 300.0]]);
+        let s = standardize_columns(&m);
+        for i in 0..3 {
+            assert!((s.row(i)[0] - s.row(i)[1]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn standardize_empty_is_noop() {
+        let m = Mat::zeros(0, 4);
+        assert_eq!(standardize_columns(&m).rows(), 0);
+    }
+}

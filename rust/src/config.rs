@@ -1,0 +1,321 @@
+//! Configuration system: a TOML-subset parser (serde/toml are unavailable
+//! offline) plus the typed experiment config the CLI and examples consume.
+//!
+//! Supported syntax: `[section]` headers, `key = value` with string
+//! (`"x"`), integer, float, boolean, and flat arrays (`[1, 2, 3]`);
+//! `#` comments. That covers every config FedDDE ships.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// `section.key -> value` map ("" section for top-level keys).
+#[derive(Debug, Clone, Default)]
+pub struct Toml {
+    pub values: HashMap<String, Value>,
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    let s = s.trim();
+    if s.starts_with('"') {
+        if !s.ends_with('"') || s.len() < 2 {
+            bail!("unterminated string: {s}");
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            bail!("unterminated array: {s}");
+        }
+        let inner = &s[1..s.len() - 1];
+        if inner.trim().is_empty() {
+            return Ok(Value::Array(Vec::new()));
+        }
+        let items = inner
+            .split(',')
+            .map(parse_value)
+            .collect::<Result<Vec<_>>>()?;
+        return Ok(Value::Array(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value: {s:?}")
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = match raw.find('#') {
+                // Only strip comments outside strings (good enough for our configs).
+                Some(idx) if !raw[..idx].contains('"') => &raw[..idx],
+                _ => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: malformed section {line:?}", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            let value = parse_value(&line[eq + 1..])
+                .with_context(|| format!("line {}", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            values.insert(full, value);
+        }
+        Ok(Toml { values })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default).to_string()
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+/// Typed experiment configuration (the `feddde train` CLI and examples).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    /// Dataset preset name (femnist / openimage / tiny).
+    pub dataset: String,
+    /// Override client count (0 = preset default).
+    pub n_clients: usize,
+    pub rounds: usize,
+    /// Devices selected per round.
+    pub per_round: usize,
+    /// Local SGD steps per selected device per round.
+    pub local_steps: usize,
+    pub lr: f64,
+    /// Selection policy: random / cluster / round_robin / oort.
+    pub policy: String,
+    /// K for K-means device clustering.
+    pub clusters: usize,
+    /// Re-compute summaries + recluster every N rounds (0 = only once).
+    pub refresh_every: usize,
+    /// Summary engine: encoder / py / pxy / jl.
+    pub summary: String,
+    /// Target accuracy for time-to-accuracy reporting (0 = disabled).
+    pub target_accuracy: f64,
+    pub seed: u64,
+    /// Local-DP budget per summary release (0 = DP off). Noise is applied
+    /// on-device before upload (paper §5; privacy::DpSummary).
+    pub dp_epsilon: f64,
+    pub dp_delta: f64,
+    /// Straggler mitigation: select ceil(per_round * over_select) devices
+    /// and cut the round at the `deadline_pct` percentile of expected
+    /// durations, dropping the tail (1.0 = off).
+    pub over_select: f64,
+    pub deadline_pct: f64,
+    /// Rounds at which drift occurs (empty = stationary).
+    pub drift_rounds: Vec<usize>,
+    pub drift_frac: f64,
+    /// Output metrics path (JSON lines); empty = stdout summary only.
+    pub out: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            dataset: "tiny".into(),
+            n_clients: 0,
+            rounds: 30,
+            per_round: 4,
+            local_steps: 4,
+            lr: 0.1,
+            policy: "cluster".into(),
+            clusters: 0, // 0 = dataset's n_groups
+            refresh_every: 0,
+            summary: "encoder".into(),
+            target_accuracy: 0.0,
+            seed: 1,
+            dp_epsilon: 0.0,
+            dp_delta: 1e-5,
+            over_select: 1.0,
+            deadline_pct: 100.0,
+            drift_rounds: Vec::new(),
+            drift_frac: 1.0,
+            out: String::new(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_toml(t: &Toml) -> Self {
+        let d = ExperimentConfig::default();
+        let drift_rounds = t
+            .get("drift.rounds")
+            .and_then(|v| match v {
+                Value::Array(items) => Some(
+                    items
+                        .iter()
+                        .filter_map(|i| i.as_int())
+                        .map(|i| i as usize)
+                        .collect(),
+                ),
+                _ => None,
+            })
+            .unwrap_or_default();
+        ExperimentConfig {
+            dataset: t.str_or("dataset", &d.dataset),
+            n_clients: t.int_or("n_clients", d.n_clients as i64) as usize,
+            rounds: t.int_or("rounds", d.rounds as i64) as usize,
+            per_round: t.int_or("per_round", d.per_round as i64) as usize,
+            local_steps: t.int_or("local_steps", d.local_steps as i64) as usize,
+            lr: t.float_or("lr", d.lr),
+            policy: t.str_or("policy", &d.policy),
+            clusters: t.int_or("clusters", d.clusters as i64) as usize,
+            refresh_every: t.int_or("refresh_every", d.refresh_every as i64) as usize,
+            summary: t.str_or("summary", &d.summary),
+            target_accuracy: t.float_or("target_accuracy", d.target_accuracy),
+            seed: t.int_or("seed", d.seed as i64) as u64,
+            dp_epsilon: t.float_or("dp.epsilon", d.dp_epsilon),
+            dp_delta: t.float_or("dp.delta", d.dp_delta),
+            over_select: t.float_or("over_select", d.over_select),
+            deadline_pct: t.float_or("deadline_pct", d.deadline_pct),
+            drift_rounds,
+            drift_frac: t.float_or("drift.frac", d.drift_frac),
+            out: t.str_or("out", &d.out),
+        }
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Ok(Self::from_toml(&Toml::parse(&text)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_scalars_and_sections() {
+        let t = Toml::parse(
+            "dataset = \"femnist\"\nrounds = 100\nlr = 0.05\nverbose = true\n\
+             [drift]\nrounds = [10, 20]\nfrac = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(t.str_or("dataset", ""), "femnist");
+        assert_eq!(t.int_or("rounds", 0), 100);
+        assert!((t.float_or("lr", 0.0) - 0.05).abs() < 1e-12);
+        assert!(t.bool_or("verbose", false));
+        assert!((t.float_or("drift.frac", 0.0) - 0.5).abs() < 1e-12);
+        match t.get("drift.rounds").unwrap() {
+            Value::Array(items) => assert_eq!(items.len(), 2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let t = Toml::parse("# header\n\nkey = 1  # trailing\n").unwrap();
+        assert_eq!(t.int_or("key", 0), 1);
+    }
+
+    #[test]
+    fn errors_on_garbage() {
+        assert!(Toml::parse("key value no equals\n").is_err());
+        assert!(Toml::parse("key = \"unterminated\n").is_err());
+        assert!(Toml::parse("[unclosed\n").is_err());
+    }
+
+    #[test]
+    fn experiment_config_from_toml() {
+        let t = Toml::parse(
+            "dataset = \"tiny\"\nrounds = 7\npolicy = \"random\"\n\
+             [drift]\nrounds = [3]\nfrac = 0.25\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&t);
+        assert_eq!(c.rounds, 7);
+        assert_eq!(c.policy, "random");
+        assert_eq!(c.drift_rounds, vec![3]);
+        assert!((c.drift_frac - 0.25).abs() < 1e-12);
+        // defaults survive
+        assert_eq!(c.summary, "encoder");
+    }
+
+    #[test]
+    fn int_promotes_to_float() {
+        let t = Toml::parse("lr = 1\n").unwrap();
+        assert_eq!(t.float_or("lr", 0.0), 1.0);
+    }
+}

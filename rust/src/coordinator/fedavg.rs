@@ -1,0 +1,123 @@
+//! FedAvg aggregation: sample-count-weighted average of flat parameter
+//! vectors (McMahan et al. 2017). Parameters travel as single flat f32
+//! vectors (the AOT artifacts' convention), so aggregation is one fused
+//! weighted sum.
+
+use anyhow::{bail, Result};
+
+/// Weighted average of parameter vectors. `updates` are (params, weight)
+/// pairs; weights are typically client sample counts.
+pub fn fedavg(updates: &[(Vec<f32>, f64)]) -> Result<Vec<f32>> {
+    let Some(((first, _), rest)) = updates.split_first() else {
+        bail!("fedavg: no updates");
+    };
+    let dim = first.len();
+    for (p, _) in rest {
+        if p.len() != dim {
+            bail!("fedavg: parameter dim mismatch {} vs {dim}", p.len());
+        }
+    }
+    let total: f64 = updates.iter().map(|(_, w)| *w).sum();
+    if total <= 0.0 {
+        bail!("fedavg: non-positive total weight");
+    }
+    let mut out = vec![0.0f64; dim];
+    for (p, w) in updates {
+        let wn = *w / total;
+        for (o, &v) in out.iter_mut().zip(p) {
+            *o += wn * v as f64;
+        }
+    }
+    Ok(out.into_iter().map(|v| v as f32).collect())
+}
+
+/// In-place server momentum (FedAvgM-style): `global += beta * velocity +
+/// (avg - global)`. Used by the perf-pass ablation; identity when beta = 0.
+pub struct ServerOptimizer {
+    pub beta: f64,
+    velocity: Vec<f64>,
+}
+
+impl ServerOptimizer {
+    pub fn new(dim: usize, beta: f64) -> Self {
+        ServerOptimizer { beta, velocity: vec![0.0; dim] }
+    }
+
+    pub fn apply(&mut self, global: &mut [f32], aggregated: &[f32]) {
+        debug_assert_eq!(global.len(), aggregated.len());
+        for i in 0..global.len() {
+            let delta = aggregated[i] as f64 - global[i] as f64;
+            self.velocity[i] = self.beta * self.velocity[i] + delta;
+            global[i] = (global[i] as f64 + self.velocity[i]) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_weights_is_mean() {
+        let a = (vec![1.0, 2.0], 1.0);
+        let b = (vec![3.0, 4.0], 1.0);
+        assert_eq!(fedavg(&[a, b]).unwrap(), vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn weighting_respected() {
+        let a = (vec![0.0], 1.0);
+        let b = (vec![10.0], 3.0);
+        let out = fedavg(&[a, b]).unwrap();
+        assert!((out[0] - 7.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_update_identity() {
+        let out = fedavg(&[(vec![5.0, -1.0], 42.0)]).unwrap();
+        assert_eq!(out, vec![5.0, -1.0]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(fedavg(&[]).is_err());
+        assert!(fedavg(&[(vec![1.0], 1.0), (vec![1.0, 2.0], 1.0)]).is_err());
+        assert!(fedavg(&[(vec![1.0], 0.0)]).is_err());
+    }
+
+    #[test]
+    fn zero_beta_momentum_is_plain_assignment() {
+        let mut opt = ServerOptimizer::new(2, 0.0);
+        let mut global = vec![1.0f32, 1.0];
+        opt.apply(&mut global, &[3.0, 5.0]);
+        assert_eq!(global, vec![3.0, 5.0]);
+    }
+
+    #[test]
+    fn momentum_accelerates() {
+        let mut opt = ServerOptimizer::new(1, 0.9);
+        let mut global = vec![0.0f32];
+        // Repeatedly pulled toward 1.0 -> with momentum we overshoot eventually.
+        for _ in 0..20 {
+            opt.apply(&mut global, &[1.0]);
+        }
+        assert!(global[0] > 1.0, "momentum should overshoot, got {}", global[0]);
+    }
+
+    #[test]
+    fn property_average_within_bounds() {
+        crate::util::proptest::check(15, |g| {
+            let n = g.usize_in(1, 8);
+            let d = g.usize_in(1, 16);
+            let updates: Vec<(Vec<f32>, f64)> = (0..n)
+                .map(|_| (g.vec_f32(d, -2.0, 2.0), g.f64_in(0.1, 5.0)))
+                .collect();
+            let avg = fedavg(&updates).unwrap();
+            for j in 0..d {
+                let lo = updates.iter().map(|(p, _)| p[j]).fold(f32::INFINITY, f32::min);
+                let hi = updates.iter().map(|(p, _)| p[j]).fold(f32::NEG_INFINITY, f32::max);
+                assert!(avg[j] >= lo - 1e-4 && avg[j] <= hi + 1e-4);
+            }
+        });
+    }
+}

@@ -1,0 +1,182 @@
+//! Fleet summary service: computes every client's distribution summary
+//! through a `SummaryEngine`, times it per client (host + simulated device
+//! seconds), and clusters the resulting vectors — the Figure 1 workflow's
+//! "distribution summary" + "clustering" stages, refreshed periodically for
+//! non-stationary data (paper §2.1).
+
+use anyhow::Result;
+
+use crate::cluster::kmeans::{self, KmeansConfig};
+use crate::data::drift::DriftSchedule;
+use crate::data::generator::Generator;
+use crate::data::partition::Partition;
+use crate::device::DeviceProfile;
+use crate::runtime::Engine;
+use crate::summary::SummaryEngine;
+use crate::util::mat::Mat;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Result of one fleet-wide summary refresh.
+pub struct RefreshResult {
+    /// n_clients x summary_dim.
+    pub summaries: Mat,
+    /// Cluster assignment per client.
+    pub clusters: Vec<usize>,
+    /// Per-client *simulated device* seconds (host kernel time x device
+    /// compute factor) — Table 2's "time calculating summary" distribution.
+    pub device_secs: Vec<f64>,
+    /// Host seconds actually spent (all clients, wall clock).
+    pub host_secs: f64,
+    /// Server-side clustering seconds (real, measured).
+    pub cluster_secs: f64,
+    /// Simulated refresh duration: devices summarize in parallel, so the
+    /// fleet-wide cost is max(compute + upload), then clustering runs on
+    /// the server.
+    pub sim_secs: f64,
+}
+
+/// Compute summaries for the whole fleet and cluster them.
+#[allow(clippy::too_many_arguments)]
+pub fn refresh_fleet(
+    engine: &Engine,
+    summary: &dyn SummaryEngine,
+    partition: &Partition,
+    generator: &Generator,
+    fleet: &[DeviceProfile],
+    drift: &DriftSchedule,
+    round: usize,
+    k_clusters: usize,
+    seed: u64,
+) -> Result<RefreshResult> {
+    let n = partition.clients.len();
+    let mut summaries = Mat::zeros(0, summary.dim());
+    let mut device_secs = Vec::with_capacity(n);
+    let mut upload_secs = Vec::with_capacity(n);
+    let t0 = std::time::Instant::now();
+    for (i, part) in partition.clients.iter().enumerate() {
+        let phase = drift.client_phase(part.client_id, round, seed);
+        let ds = generator.client_dataset(part, phase);
+        let mut rng = Rng::substream(seed, &[0x5u64, part.client_id as u64, round as u64]);
+        let (vec, host) = summary.summarize(engine, &ds, &mut rng)?;
+        summaries.push_row(&vec);
+        let dev = &fleet[i % fleet.len()];
+        device_secs.push(dev.compute_time(host));
+        upload_secs.push(dev.upload_time(summary.summary_bytes()));
+    }
+    let host_secs = t0.elapsed().as_secs_f64();
+
+    let tc = std::time::Instant::now();
+    let clusters = if k_clusters <= 1 || n <= k_clusters {
+        vec![0; n]
+    } else {
+        // Balance summary blocks first: the proposed summary concatenates a
+        // feature-mean block and a label-distribution block of very
+        // different scales (see cluster::balance_blocks).
+        let balanced = crate::cluster::balance_blocks(&summaries, &summary.blocks());
+        let mut cfg = KmeansConfig::new(k_clusters);
+        cfg.seed = seed;
+        kmeans::fit(&balanced, &cfg).assignments
+    };
+    let cluster_secs = tc.elapsed().as_secs_f64();
+
+    let parallel_device_max = device_secs
+        .iter()
+        .zip(&upload_secs)
+        .map(|(c, u)| c + u)
+        .fold(0.0f64, f64::max);
+    Ok(RefreshResult {
+        summaries,
+        clusters,
+        device_secs,
+        host_secs,
+        cluster_secs,
+        sim_secs: parallel_device_max + cluster_secs,
+    })
+}
+
+impl RefreshResult {
+    /// (avg, max) of simulated per-device summary seconds — the Table 2 row.
+    pub fn summary_time_stats(&self) -> (f64, f64) {
+        (stats::mean(&self.device_secs), stats::max(&self.device_secs))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spec::DatasetSpec;
+    use crate::device::FleetModel;
+    use crate::summary::EncoderSummary;
+
+    fn setup() -> Option<(Engine, DatasetSpec, Partition, Generator, Vec<DeviceProfile>)> {
+        let dir = Engine::default_dir();
+        if !dir.join("manifest.tsv").exists() {
+            return None;
+        }
+        let spec = DatasetSpec::tiny();
+        let part = Partition::build(&spec);
+        let gen = Generator::new(&spec);
+        let fleet = FleetModel::default().sample_fleet(spec.n_clients);
+        Some((Engine::new(dir).unwrap(), spec, part, gen, fleet))
+    }
+
+    #[test]
+    fn refresh_produces_total_clustering() {
+        let Some((eng, spec, part, gen, fleet)) = setup() else { return };
+        let e = EncoderSummary::new(&spec);
+        let r = refresh_fleet(
+            &eng,
+            &e,
+            &part,
+            &gen,
+            &fleet,
+            &DriftSchedule::none(),
+            0,
+            spec.n_groups,
+            7,
+        )
+        .unwrap();
+        assert_eq!(r.summaries.rows(), spec.n_clients);
+        assert_eq!(r.clusters.len(), spec.n_clients);
+        assert!(r.clusters.iter().all(|&c| c < spec.n_groups));
+        assert!(r.host_secs > 0.0 && r.cluster_secs >= 0.0 && r.sim_secs > 0.0);
+        let (avg, max) = r.summary_time_stats();
+        assert!(avg > 0.0 && max >= avg);
+    }
+
+    #[test]
+    fn clustering_recovers_groups_reasonably() {
+        // On tiny data with clear group structure the ARI should beat chance
+        // decisively (exact recovery depends on noise).
+        let Some((eng, spec, part, gen, fleet)) = setup() else { return };
+        let e = EncoderSummary::new(&spec);
+        let r = refresh_fleet(
+            &eng,
+            &e,
+            &part,
+            &gen,
+            &fleet,
+            &DriftSchedule::none(),
+            0,
+            spec.n_groups,
+            7,
+        )
+        .unwrap();
+        let ari = stats::adjusted_rand_index(&r.clusters, &part.group_truth());
+        assert!(ari > 0.25, "ari={ari} — clustering lost the group structure");
+    }
+
+    #[test]
+    fn drift_changes_summaries() {
+        let Some((eng, spec, part, gen, fleet)) = setup() else { return };
+        let e = EncoderSummary::new(&spec);
+        let drift = DriftSchedule::at(vec![5], 1.0);
+        let r0 =
+            refresh_fleet(&eng, &e, &part, &gen, &fleet, &drift, 0, spec.n_groups, 7).unwrap();
+        let r1 =
+            refresh_fleet(&eng, &e, &part, &gen, &fleet, &drift, 10, spec.n_groups, 7).unwrap();
+        let d = crate::util::mat::sqdist(r0.summaries.row(0), r1.summaries.row(0));
+        assert!(d > 1e-6, "post-drift summaries identical (d={d})");
+    }
+}

@@ -1,0 +1,205 @@
+//! Coreset selection (paper §4.1): sample `k` elements from a client's
+//! dataset while maintaining its original label proportions.
+//!
+//! Apportionment uses the largest-remainder method so that the coreset's
+//! label histogram is the best integer approximation of the client's, then
+//! samples without replacement within each label.
+
+use crate::data::generator::ClientDataset;
+use crate::util::rng::Rng;
+
+/// Indices of the selected coreset (len <= k; == k when the client has at
+/// least k samples, otherwise every sample is taken).
+pub fn coreset_indices(ds: &ClientDataset, classes: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
+    if ds.n <= k {
+        return (0..ds.n).collect();
+    }
+    // Group sample indices by label.
+    let mut by_label: Vec<Vec<usize>> = vec![Vec::new(); classes];
+    for (i, &l) in ds.labels.iter().enumerate() {
+        by_label[l as usize].push(i);
+    }
+
+    // Largest-remainder apportionment of k slots across labels.
+    let n = ds.n as f64;
+    let mut quota: Vec<(usize, usize, f64)> = Vec::new(); // (label, floor, remainder)
+    let mut assigned = 0usize;
+    for (label, idxs) in by_label.iter().enumerate() {
+        if idxs.is_empty() {
+            continue;
+        }
+        let exact = k as f64 * idxs.len() as f64 / n;
+        let fl = (exact.floor() as usize).min(idxs.len());
+        assigned += fl;
+        quota.push((label, fl, exact - exact.floor()));
+    }
+    // Distribute the remaining slots by descending remainder (ties broken by
+    // label id for determinism), skipping labels already exhausted.
+    let mut remaining = k.saturating_sub(assigned);
+    quota.sort_by(|a, b| b.2.partial_cmp(&a.2).unwrap().then(a.0.cmp(&b.0)));
+    let mut take: Vec<usize> = vec![0; classes];
+    for &(label, fl, _) in &quota {
+        take[label] = fl;
+    }
+    let mut qi = 0;
+    while remaining > 0 && !quota.is_empty() {
+        let (label, _, _) = quota[qi % quota.len()];
+        if take[label] < by_label[label].len() {
+            take[label] += 1;
+            remaining -= 1;
+        }
+        qi += 1;
+        if qi > quota.len() * (k + 1) {
+            break; // every label exhausted (cannot happen when n > k)
+        }
+    }
+
+    // Sample without replacement within each label.
+    let mut out = Vec::with_capacity(k);
+    for (label, idxs) in by_label.iter().enumerate() {
+        let t = take[label].min(idxs.len());
+        if t == 0 {
+            continue;
+        }
+        let picks = rng.sample_indices(idxs.len(), t);
+        out.extend(picks.into_iter().map(|p| idxs[p]));
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Materialize the coreset as (images, labels) padded to exactly `k` rows;
+/// padding rows have label = u32::MAX (meaning "no one-hot row" downstream).
+pub struct Coreset {
+    pub images: Vec<f32>,
+    /// u32::MAX marks padding rows.
+    pub labels: Vec<u32>,
+    pub k: usize,
+    pub real: usize,
+}
+
+pub fn build_coreset(ds: &ClientDataset, classes: usize, k: usize, rng: &mut Rng) -> Coreset {
+    let idxs = coreset_indices(ds, classes, k, rng);
+    let real = idxs.len();
+    let mut images = Vec::with_capacity(k * ds.flat_dim);
+    let mut labels = Vec::with_capacity(k);
+    for &i in &idxs {
+        images.extend_from_slice(ds.image(i));
+        labels.push(ds.labels[i]);
+    }
+    // Pad to k.
+    for _ in real..k {
+        images.extend(std::iter::repeat(0.0f32).take(ds.flat_dim));
+        labels.push(u32::MAX);
+    }
+    Coreset { images, labels, k, real }
+}
+
+/// One-hot encode labels (len x classes), emitting all-zero rows for padding
+/// (u32::MAX) — the convention every AOT artifact shares.
+pub fn one_hot(labels: &[u32], classes: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; labels.len() * classes];
+    for (i, &l) in labels.iter().enumerate() {
+        if (l as usize) < classes {
+            out[i * classes + l as usize] = 1.0;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator::Generator;
+    use crate::data::partition::Partition;
+    use crate::data::spec::DatasetSpec;
+
+    fn dataset_with_labels(labels: Vec<u32>, flat: usize) -> ClientDataset {
+        let n = labels.len();
+        ClientDataset {
+            client_id: 0,
+            images: (0..n * flat).map(|i| (i % 7) as f32 / 7.0).collect(),
+            labels,
+            n,
+            flat_dim: flat,
+        }
+    }
+
+    #[test]
+    fn proportions_preserved() {
+        // 60% class 0, 30% class 1, 10% class 2; k=20 -> 12/6/2.
+        let mut labels = Vec::new();
+        labels.extend(std::iter::repeat(0u32).take(60));
+        labels.extend(std::iter::repeat(1u32).take(30));
+        labels.extend(std::iter::repeat(2u32).take(10));
+        let ds = dataset_with_labels(labels, 4);
+        let mut rng = Rng::new(1);
+        let idxs = coreset_indices(&ds, 3, 20, &mut rng);
+        assert_eq!(idxs.len(), 20);
+        let mut counts = [0usize; 3];
+        for &i in &idxs {
+            counts[ds.labels[i] as usize] += 1;
+        }
+        assert_eq!(counts, [12, 6, 2]);
+    }
+
+    #[test]
+    fn small_client_takes_everything() {
+        let ds = dataset_with_labels(vec![0, 1, 1, 2], 2);
+        let mut rng = Rng::new(2);
+        let idxs = coreset_indices(&ds, 3, 16, &mut rng);
+        assert_eq!(idxs, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn indices_distinct_and_valid() {
+        let spec = DatasetSpec::tiny();
+        let part = Partition::build(&spec);
+        let g = Generator::new(&spec);
+        for c in part.clients.iter().take(8) {
+            let ds = g.client_dataset(c, 0);
+            let mut rng = Rng::new(c.client_id as u64);
+            let idxs = coreset_indices(&ds, spec.classes, spec.coreset_k, &mut rng);
+            let mut dd = idxs.clone();
+            dd.sort_unstable();
+            dd.dedup();
+            assert_eq!(dd.len(), idxs.len(), "duplicates for client {}", c.client_id);
+            assert!(idxs.iter().all(|&i| i < ds.n));
+            assert_eq!(idxs.len(), spec.coreset_k.min(ds.n));
+        }
+    }
+
+    #[test]
+    fn rare_labels_not_starved_when_space_allows() {
+        // A label with 1 sample out of 100, k=50 -> remainder method should
+        // usually include it (exact quota 0.5, competes by remainder). At
+        // minimum it must never produce more than available.
+        let mut labels = vec![0u32; 99];
+        labels.push(1);
+        let ds = dataset_with_labels(labels, 2);
+        let mut rng = Rng::new(3);
+        let idxs = coreset_indices(&ds, 2, 50, &mut rng);
+        assert_eq!(idxs.len(), 50);
+        let ones = idxs.iter().filter(|&&i| ds.labels[i] == 1).count();
+        assert!(ones <= 1);
+    }
+
+    #[test]
+    fn padded_coreset_layout() {
+        let ds = dataset_with_labels(vec![0, 1], 3);
+        let mut rng = Rng::new(4);
+        let cs = build_coreset(&ds, 2, 8, &mut rng);
+        assert_eq!(cs.k, 8);
+        assert_eq!(cs.real, 2);
+        assert_eq!(cs.images.len(), 8 * 3);
+        assert_eq!(cs.labels[2..], [u32::MAX; 6]);
+        // padding images are zeros
+        assert!(cs.images[2 * 3..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn one_hot_handles_padding() {
+        let oh = one_hot(&[1, u32::MAX, 0], 3);
+        assert_eq!(oh, vec![0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+    }
+}

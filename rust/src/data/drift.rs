@@ -1,0 +1,106 @@
+//! Non-stationary data injection (paper §2.1): "as users' application
+//! running, the data distributions of the clients may be time-varying and
+//! non-stationary ... we need to re-compute distribution summary
+//! periodically as data changes."
+//!
+//! A `DriftSchedule` maps training rounds to data *phases*; the partition /
+//! generator pair regenerate client data whenever the phase changes.
+//! `examples/drift_adaptation.rs` uses this to show that periodic summary
+//! refresh + re-clustering recovers selection quality after drift.
+
+/// When and how the fleet's data distribution changes.
+#[derive(Debug, Clone)]
+pub struct DriftSchedule {
+    /// Rounds at which a new phase begins (sorted ascending).
+    pub change_rounds: Vec<usize>,
+    /// Fraction of clients affected by each change (1.0 = whole fleet).
+    pub affected_frac: f64,
+}
+
+impl DriftSchedule {
+    pub fn none() -> Self {
+        DriftSchedule { change_rounds: Vec::new(), affected_frac: 0.0 }
+    }
+
+    pub fn at(rounds: Vec<usize>, affected_frac: f64) -> Self {
+        let mut r = rounds;
+        r.sort_unstable();
+        DriftSchedule { change_rounds: r, affected_frac: affected_frac.clamp(0.0, 1.0) }
+    }
+
+    /// Data phase at `round`: number of change points passed.
+    pub fn phase_at(&self, round: usize) -> u64 {
+        self.change_rounds.iter().filter(|&&r| r <= round).count() as u64
+    }
+
+    /// Is `client_id` affected by drift? Deterministic hash-based choice so
+    /// the same subset drifts in every run.
+    pub fn affects(&self, client_id: usize, seed: u64) -> bool {
+        if self.affected_frac >= 1.0 {
+            return true;
+        }
+        if self.affected_frac <= 0.0 {
+            return false;
+        }
+        let mut rng = crate::util::rng::Rng::substream(seed, &[0xDF7, client_id as u64]);
+        rng.f64() < self.affected_frac
+    }
+
+    /// Effective phase for one client at `round` (unaffected clients stay at
+    /// phase 0 forever).
+    pub fn client_phase(&self, client_id: usize, round: usize, seed: u64) -> u64 {
+        if self.affects(client_id, seed) {
+            self.phase_at(round)
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_drifts() {
+        let d = DriftSchedule::none();
+        assert_eq!(d.phase_at(1000), 0);
+        assert!(!d.affects(3, 1));
+    }
+
+    #[test]
+    fn phase_counts_change_points() {
+        let d = DriftSchedule::at(vec![50, 10], 1.0);
+        assert_eq!(d.phase_at(0), 0);
+        assert_eq!(d.phase_at(9), 0);
+        assert_eq!(d.phase_at(10), 1);
+        assert_eq!(d.phase_at(49), 1);
+        assert_eq!(d.phase_at(50), 2);
+        assert_eq!(d.phase_at(500), 2);
+    }
+
+    #[test]
+    fn affected_fraction_approximate() {
+        let d = DriftSchedule::at(vec![10], 0.3);
+        let hits = (0..5000).filter(|&c| d.affects(c, 7)).count();
+        assert!((hits as f64 / 5000.0 - 0.3).abs() < 0.03, "hits={hits}");
+    }
+
+    #[test]
+    fn client_phase_respects_affectedness() {
+        let d = DriftSchedule::at(vec![5], 0.5);
+        let affected: Vec<usize> = (0..100).filter(|&c| d.affects(c, 9)).collect();
+        let unaffected: Vec<usize> = (0..100).filter(|&c| !d.affects(c, 9)).collect();
+        assert!(!affected.is_empty() && !unaffected.is_empty());
+        assert_eq!(d.client_phase(affected[0], 10, 9), 1);
+        assert_eq!(d.client_phase(unaffected[0], 10, 9), 0);
+    }
+
+    #[test]
+    fn deterministic_affect_choice() {
+        let d = DriftSchedule::at(vec![1], 0.5);
+        let a: Vec<bool> = (0..50).map(|c| d.affects(c, 11)).collect();
+        let b: Vec<bool> = (0..50).map(|c| d.affects(c, 11)).collect();
+        assert_eq!(a, b);
+    }
+}

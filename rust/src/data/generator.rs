@@ -1,0 +1,226 @@
+//! Lazy per-client sample generator.
+//!
+//! Feature model (DESIGN.md §5): every class has a smooth prototype image;
+//! every latent group applies a group-specific photometric transform
+//! (brightness/contrast shift); every sample adds pixel noise. This gives
+//! the synthetic data exactly the structure the paper's summaries measure:
+//! P(y) differs across groups (label priors) AND P(X|y) differs across
+//! groups (group transforms), so both summary families have signal, while
+//! sample noise keeps per-client variance realistic.
+
+use std::sync::Arc;
+
+use crate::data::partition::ClientPartition;
+use crate::data::spec::DatasetSpec;
+use crate::util::rng::Rng;
+
+/// One client's materialized dataset (NHWC images flattened row-major).
+#[derive(Debug, Clone)]
+pub struct ClientDataset {
+    pub client_id: usize,
+    pub images: Vec<f32>,
+    pub labels: Vec<u32>,
+    pub n: usize,
+    pub flat_dim: usize,
+}
+
+impl ClientDataset {
+    #[inline]
+    pub fn image(&self, i: usize) -> &[f32] {
+        &self.images[i * self.flat_dim..(i + 1) * self.flat_dim]
+    }
+
+    /// Per-class counts (len = classes).
+    pub fn label_counts(&self, classes: usize) -> Vec<usize> {
+        let mut counts = vec![0usize; classes];
+        for &l in &self.labels {
+            counts[l as usize] += 1;
+        }
+        counts
+    }
+}
+
+/// Shared class prototypes + group transforms; build once per dataset.
+pub struct Generator {
+    spec: DatasetSpec,
+    /// classes x flat_dim prototype images in [0,1].
+    prototypes: Arc<Vec<Vec<f32>>>,
+    /// Per-group (brightness, contrast) photometric transform.
+    group_transform: Vec<(f32, f32)>,
+    /// Pixel noise scale.
+    pub noise: f32,
+}
+
+impl Generator {
+    pub fn new(spec: &DatasetSpec) -> Self {
+        let flat = spec.flat_dim();
+        let (h, w, ch) = spec.img;
+        let prototypes: Vec<Vec<f32>> = (0..spec.classes)
+            .map(|c| {
+                let mut rng = Rng::substream(spec.seed, &[0x9907_0, c as u64]);
+                // Smooth low-frequency pattern: sum of a few random 2D cosines.
+                let mut img = vec![0.0f32; flat];
+                let waves = 3;
+                let params: Vec<(f64, f64, f64, f64)> = (0..waves)
+                    .map(|_| {
+                        (
+                            rng.range_f64(0.5, 3.0),  // fx
+                            rng.range_f64(0.5, 3.0),  // fy
+                            rng.range_f64(0.0, std::f64::consts::TAU), // phase
+                            rng.range_f64(0.3, 1.0),  // amplitude
+                        )
+                    })
+                    .collect();
+                for y in 0..h {
+                    for x in 0..w {
+                        let mut v = 0.0f64;
+                        for &(fx, fy, ph, amp) in &params {
+                            v += amp
+                                * (std::f64::consts::TAU
+                                    * (fx * x as f64 / w as f64 + fy * y as f64 / h as f64)
+                                    + ph)
+                                    .cos();
+                        }
+                        let v = (0.5 + 0.5 * (v / waves as f64)) as f32;
+                        for cch in 0..ch {
+                            // slight per-channel offset for color datasets
+                            img[(y * w + x) * ch + cch] =
+                                (v + 0.05 * cch as f32).clamp(0.0, 1.0);
+                        }
+                    }
+                }
+                img
+            })
+            .collect();
+
+        let group_transform: Vec<(f32, f32)> = (0..spec.n_groups)
+            .map(|g| {
+                let mut rng = Rng::substream(spec.seed, &[0x6076, g as u64]);
+                let brightness = rng.range_f64(-0.15, 0.15) as f32;
+                let contrast = rng.range_f64(0.7, 1.3) as f32;
+                (brightness, contrast)
+            })
+            .collect();
+
+        Generator {
+            spec: spec.clone(),
+            prototypes: Arc::new(prototypes),
+            group_transform,
+            noise: 0.08,
+        }
+    }
+
+    pub fn spec(&self) -> &DatasetSpec {
+        &self.spec
+    }
+
+    /// Materialize one client's dataset (deterministic in (seed, client, phase)).
+    pub fn client_dataset(&self, part: &ClientPartition, phase: u64) -> ClientDataset {
+        let flat = self.spec.flat_dim();
+        let mut rng = Rng::substream(self.spec.seed, &[0xDA7A, part.client_id as u64, phase]);
+        let n = part.n_samples;
+        let mut images = Vec::with_capacity(n * flat);
+        let mut labels = Vec::with_capacity(n);
+        let (bright, contrast) = self.group_transform[part.group % self.group_transform.len()];
+        for _ in 0..n {
+            let label = rng.weighted_index(&part.label_dist);
+            labels.push(label as u32);
+            let proto = &self.prototypes[label];
+            for &p in proto.iter() {
+                let v = (p - 0.5) * contrast + 0.5 + bright + self.noise * rng.normal() as f32;
+                images.push(v.clamp(0.0, 1.0));
+            }
+        }
+        ClientDataset { client_id: part.client_id, images, labels, n, flat_dim: flat }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::Partition;
+
+    fn setup() -> (DatasetSpec, Partition, Generator) {
+        let spec = DatasetSpec::tiny();
+        let part = Partition::build(&spec);
+        let g = Generator::new(&spec);
+        (spec, part, g)
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let (spec, part, g) = setup();
+        let ds = g.client_dataset(&part.clients[0], 0);
+        assert_eq!(ds.n, part.clients[0].n_samples);
+        assert_eq!(ds.images.len(), ds.n * spec.flat_dim());
+        assert_eq!(ds.labels.len(), ds.n);
+        assert!(ds.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(ds.labels.iter().all(|&l| (l as usize) < spec.classes));
+    }
+
+    #[test]
+    fn deterministic_per_client_and_phase() {
+        let (_spec, part, g) = setup();
+        let a = g.client_dataset(&part.clients[1], 0);
+        let b = g.client_dataset(&part.clients[1], 0);
+        let c = g.client_dataset(&part.clients[1], 1);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+        assert_ne!(a.images, c.images); // drift phase regenerates
+    }
+
+    #[test]
+    fn labels_follow_client_distribution() {
+        let spec = DatasetSpec::tiny();
+        let mut part = Partition::build(&spec);
+        // Force a degenerate distribution: everything class 2.
+        part.clients[0].label_dist = vec![0.0, 0.0, 1.0, 0.0];
+        part.clients[0].n_samples = 30;
+        let g = Generator::new(&spec);
+        let ds = g.client_dataset(&part.clients[0], 0);
+        assert!(ds.labels.iter().all(|&l| l == 2));
+    }
+
+    #[test]
+    fn same_class_same_group_images_similar() {
+        // Noise aside, two samples of the same class from same-group clients
+        // must be much closer than samples of different classes.
+        let (_spec, part, g) = setup();
+        let ds = g.client_dataset(&part.clients[0], 0);
+        let mut same = Vec::new();
+        let mut diff = Vec::new();
+        for i in 0..ds.n.min(16) {
+            for j in (i + 1)..ds.n.min(16) {
+                let d = crate::util::mat::sqdist(ds.image(i), ds.image(j));
+                if ds.labels[i] == ds.labels[j] {
+                    same.push(d);
+                } else {
+                    diff.push(d);
+                }
+            }
+        }
+        if !same.is_empty() && !diff.is_empty() {
+            assert!(
+                crate::util::stats::mean(&same) < crate::util::stats::mean(&diff),
+                "class structure missing from generated images"
+            );
+        }
+    }
+
+    #[test]
+    fn group_transform_shifts_features() {
+        // Same class, different groups -> different conditional feature
+        // distribution (the P(X|y) signal the paper relies on).
+        let spec = DatasetSpec::tiny();
+        let part = Partition::build(&spec);
+        let g = Generator::new(&spec);
+        let a = part.clients.iter().find(|c| c.group == 0).unwrap();
+        let b = part.clients.iter().find(|c| c.group == 1).unwrap();
+        let da = g.client_dataset(a, 0);
+        let db = g.client_dataset(b, 0);
+        // Compare per-pixel means of the two clients: group transforms move it.
+        let ma: f64 = da.images.iter().map(|&v| v as f64).sum::<f64>() / da.images.len() as f64;
+        let mb: f64 = db.images.iter().map(|&v| v as f64).sum::<f64>() / db.images.len() as f64;
+        assert!((ma - mb).abs() > 1e-3, "ma={ma} mb={mb}");
+    }
+}

@@ -1,0 +1,15 @@
+//! Synthetic federated-data substrate (the Table 1 substitution, DESIGN.md §5):
+//! dataset specs, Dirichlet/group partitioner, lazy sample generator,
+//! coreset selection, and drift injection.
+
+pub mod coreset;
+pub mod drift;
+pub mod generator;
+pub mod partition;
+pub mod spec;
+
+pub use coreset::{build_coreset, coreset_indices, one_hot, Coreset};
+pub use drift::DriftSchedule;
+pub use generator::{ClientDataset, Generator};
+pub use partition::{ClientPartition, Partition};
+pub use spec::DatasetSpec;

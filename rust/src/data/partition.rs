@@ -1,0 +1,206 @@
+//! Federated partitioner: assigns every client a latent distribution group,
+//! a per-client label distribution (group prior + Dirichlet jitter), and a
+//! sample count drawn from the lognormal fitted to Table 1's avg/max/std.
+//!
+//! The group structure is the property HACCS-style clustering exploits:
+//! ground-truth group ids let tests and benches score clustering quality
+//! (ARI) instead of eyeballing.
+
+use crate::data::spec::DatasetSpec;
+use crate::util::rng::Rng;
+
+/// Per-client partition metadata (cheap; the actual samples are generated
+/// lazily by `generator.rs`).
+#[derive(Debug, Clone)]
+pub struct ClientPartition {
+    pub client_id: usize,
+    /// Latent distribution group (ground truth for clustering quality).
+    pub group: usize,
+    /// Label distribution this client samples from (len = classes).
+    pub label_dist: Vec<f64>,
+    pub n_samples: usize,
+}
+
+/// The full fleet partition.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub clients: Vec<ClientPartition>,
+    /// Group label priors (n_groups x classes).
+    pub group_priors: Vec<Vec<f64>>,
+}
+
+impl Partition {
+    /// Deterministic in `spec.seed`: the same spec always yields the same
+    /// fleet.
+    pub fn build(spec: &DatasetSpec) -> Self {
+        Self::build_phase(spec, 0)
+    }
+
+    /// `phase` differentiates re-generations after drift events: a drift at
+    /// phase p permutes each group's prior with a phase-dependent
+    /// permutation (non-stationary labels, paper §2.1).
+    pub fn build_phase(spec: &DatasetSpec, phase: u64) -> Self {
+        let mut group_priors = Vec::with_capacity(spec.n_groups);
+        for g in 0..spec.n_groups {
+            let mut rng = Rng::substream(spec.seed, &[0xA11CE, g as u64]);
+            // Group prior: a spiky Dirichlet so groups are separated.
+            let mut prior = rng.dirichlet(spec.dirichlet_alpha, spec.classes);
+            if phase > 0 {
+                // Drift: rotate the prior by a phase-dependent offset.
+                let mut drift_rng = Rng::substream(spec.seed, &[0xD41F7, g as u64, phase]);
+                let offset = 1 + drift_rng.below((spec.classes - 1) as u64) as usize;
+                prior.rotate_right(offset);
+            }
+            group_priors.push(prior);
+        }
+
+        let (mu, sigma) = spec.lognormal_params();
+        let clients = (0..spec.n_clients)
+            .map(|cid| {
+                let mut rng = Rng::substream(spec.seed, &[0xC11E57, cid as u64]);
+                let group = rng.below(spec.n_groups as u64) as usize;
+                // Client label dist = group prior mixed with client jitter.
+                let jitter = rng.dirichlet(1.0, spec.classes);
+                let w = 0.8; // group weight: clients mostly follow their group
+                let mut label_dist: Vec<f64> = group_priors[group]
+                    .iter()
+                    .zip(&jitter)
+                    .map(|(&p, &j)| w * p + (1.0 - w) * j)
+                    .collect();
+                let s: f64 = label_dist.iter().sum();
+                for v in &mut label_dist {
+                    *v /= s;
+                }
+                let n = rng
+                    .lognormal(mu, sigma)
+                    .round()
+                    .clamp(spec.samples_min as f64, spec.samples_max as f64)
+                    as usize;
+                ClientPartition { client_id: cid, group, label_dist, n_samples: n }
+            })
+            .collect();
+
+        Partition { clients, group_priors }
+    }
+
+    pub fn group_truth(&self) -> Vec<usize> {
+        self.clients.iter().map(|c| c.group).collect()
+    }
+
+    /// (avg, std, max) of per-client sample counts — the Table 1 columns.
+    pub fn sample_stats(&self) -> (f64, f64, usize) {
+        let counts: Vec<f64> = self.clients.iter().map(|c| c.n_samples as f64).collect();
+        let avg = crate::util::stats::mean(&counts);
+        let std = crate::util::stats::std_dev(&counts);
+        let max = self.clients.iter().map(|c| c.n_samples).max().unwrap_or(0);
+        (avg, std, max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> DatasetSpec {
+        DatasetSpec::femnist().with_clients(400)
+    }
+
+    #[test]
+    fn deterministic() {
+        let spec = small_spec();
+        let a = Partition::build(&spec);
+        let b = Partition::build(&spec);
+        assert_eq!(a.clients[7].label_dist, b.clients[7].label_dist);
+        assert_eq!(a.clients[7].n_samples, b.clients[7].n_samples);
+    }
+
+    #[test]
+    fn label_dists_normalized() {
+        let p = Partition::build(&small_spec());
+        for c in &p.clients {
+            let s: f64 = c.label_dist.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(c.label_dist.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn sample_counts_within_bounds_and_near_target() {
+        let spec = DatasetSpec::femnist().with_clients(2000);
+        let p = Partition::build(&spec);
+        let (avg, _std, max) = p.sample_stats();
+        assert!(max <= spec.samples_max);
+        for c in &p.clients {
+            assert!(c.n_samples >= spec.samples_min);
+        }
+        // Clamping shifts the mean a bit; stay within 30% of Table 1's avg.
+        assert!(
+            (avg - spec.samples_avg).abs() < 0.3 * spec.samples_avg,
+            "avg={avg} target={}",
+            spec.samples_avg
+        );
+    }
+
+    #[test]
+    fn heavy_tail_exists() {
+        // Table 1 FEMNIST: max (6709) is ~60x the mean (109) — the synthetic
+        // fleet must be heavy-tailed too, not uniform.
+        let spec = DatasetSpec::femnist().with_clients(2800);
+        let p = Partition::build(&spec);
+        let (avg, _s, max) = p.sample_stats();
+        assert!((max as f64) > 8.0 * avg, "max={max} avg={avg}");
+    }
+
+    #[test]
+    fn groups_cover_range_and_are_balancedish() {
+        let spec = small_spec();
+        let p = Partition::build(&spec);
+        let mut counts = vec![0usize; spec.n_groups];
+        for c in &p.clients {
+            counts[c.group] += 1;
+        }
+        for (g, &n) in counts.iter().enumerate() {
+            assert!(n > 0, "group {g} empty");
+        }
+    }
+
+    #[test]
+    fn same_group_closer_than_cross_group() {
+        // The core clusterability property: clients of the same group have
+        // closer label distributions than clients of different groups.
+        let spec = small_spec();
+        let p = Partition::build(&spec);
+        let mut same = Vec::new();
+        let mut cross = Vec::new();
+        for i in 0..60 {
+            for j in (i + 1)..60 {
+                let a = &p.clients[i];
+                let b = &p.clients[j];
+                let d: f64 = a
+                    .label_dist
+                    .iter()
+                    .zip(&b.label_dist)
+                    .map(|(x, y)| (x - y) * (x - y))
+                    .sum();
+                if a.group == b.group {
+                    same.push(d);
+                } else {
+                    cross.push(d);
+                }
+            }
+        }
+        let m_same = crate::util::stats::mean(&same);
+        let m_cross = crate::util::stats::mean(&cross);
+        assert!(m_same * 2.0 < m_cross, "same={m_same} cross={m_cross}");
+    }
+
+    #[test]
+    fn drift_changes_priors() {
+        let spec = small_spec();
+        let p0 = Partition::build_phase(&spec, 0);
+        let p1 = Partition::build_phase(&spec, 1);
+        assert_ne!(p0.group_priors[0], p1.group_priors[0]);
+        // Same group membership though — drift changes data, not identity.
+        assert_eq!(p0.group_truth(), p1.group_truth());
+    }
+}

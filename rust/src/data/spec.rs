@@ -1,0 +1,212 @@
+//! Dataset specifications: the synthetic federated substitutes for the
+//! paper's Table 1 datasets (see DESIGN.md §5 for the substitution
+//! rationale). Every statistic the paper reports — class count, client
+//! count, per-client sample-count distribution (avg / max / std) — is a
+//! parameter here, so `examples/dataset_report.rs` can regenerate Table 1.
+
+/// Static description of one federated dataset family.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: String,
+    /// Image shape (H, W, C); NHWC to match the AOT artifacts.
+    pub img: (usize, usize, usize),
+    pub classes: usize,
+    pub n_clients: usize,
+    /// Target per-client sample-count statistics (Table 1).
+    pub samples_avg: f64,
+    pub samples_std: f64,
+    pub samples_max: usize,
+    pub samples_min: usize,
+    /// Dirichlet concentration for per-client label skew (smaller = more
+    /// non-IID). HACCS-style group structure: clients belong to one of
+    /// `n_groups` latent distribution groups; clustering should recover them.
+    pub dirichlet_alpha: f64,
+    pub n_groups: usize,
+    /// Proposed-summary parameters (paper §4.1).
+    pub coreset_k: usize,
+    pub feature_dim: usize,
+    /// P(X|y) baseline histogram buckets.
+    pub hist_buckets: usize,
+    /// Padded N buckets the baseline artifacts were compiled for (ascending).
+    pub size_buckets: Vec<usize>,
+    /// Batch sizes the train/eval artifacts were compiled for.
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub seed: u64,
+}
+
+impl DatasetSpec {
+    /// FEMNIST row of Table 1: 28x28x1, 62 classes, 2800 clients,
+    /// avg 109 / max 6709 / std 211.63 samples per client.
+    pub fn femnist() -> Self {
+        DatasetSpec {
+            name: "femnist".into(),
+            img: (28, 28, 1),
+            classes: 62,
+            n_clients: 2800,
+            samples_avg: 109.0,
+            samples_std: 211.63,
+            samples_max: 6709,
+            samples_min: 8,
+            dirichlet_alpha: 0.3,
+            n_groups: 8,
+            coreset_k: 128,
+            feature_dim: 64,
+            hist_buckets: 8,
+            size_buckets: vec![256, 1024, 8192],
+            train_batch: 32,
+            eval_batch: 512,
+            seed: 42,
+        }
+    }
+
+    /// OpenImage row of Table 1: 600 classes, 11325 clients, avg 228 /
+    /// max 465 / std 89.05. Images scaled 256->32 px (DESIGN.md §5); the
+    /// scaling is uniform across all summary methods so ratios hold.
+    pub fn openimage() -> Self {
+        DatasetSpec {
+            name: "openimage".into(),
+            img: (32, 32, 3),
+            classes: 600,
+            n_clients: 11325,
+            samples_avg: 228.0,
+            samples_std: 89.05,
+            samples_max: 465,
+            samples_min: 16,
+            dirichlet_alpha: 0.2,
+            n_groups: 10,
+            coreset_k: 128,
+            feature_dim: 64,
+            hist_buckets: 8,
+            size_buckets: vec![256, 512],
+            train_batch: 32,
+            eval_batch: 512,
+            seed: 43,
+        }
+    }
+
+    /// Seconds-scale config for tests and the quickstart example. Matches the
+    /// `tiny` AOT artifact shapes.
+    pub fn tiny() -> Self {
+        DatasetSpec {
+            name: "tiny".into(),
+            img: (8, 8, 1),
+            classes: 4,
+            n_clients: 24,
+            samples_avg: 20.0,
+            samples_std: 6.0,
+            samples_max: 32,
+            samples_min: 8,
+            dirichlet_alpha: 0.3,
+            n_groups: 3,
+            coreset_k: 16,
+            feature_dim: 8,
+            hist_buckets: 4,
+            size_buckets: vec![32],
+            train_batch: 8,
+            eval_batch: 32,
+            seed: 44,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "femnist" => Some(Self::femnist()),
+            "openimage" => Some(Self::openimage()),
+            "tiny" => Some(Self::tiny()),
+            _ => None,
+        }
+    }
+
+    /// Downscale the fleet (and nothing else) for CI-scale runs.
+    pub fn with_clients(mut self, n: usize) -> Self {
+        self.n_clients = n;
+        self
+    }
+
+    pub fn flat_dim(&self) -> usize {
+        self.img.0 * self.img.1 * self.img.2
+    }
+
+    /// Proposed summary dimension, paper §4.1: C*H + C.
+    pub fn summary_dim(&self) -> usize {
+        self.classes * self.feature_dim + self.classes
+    }
+
+    /// P(X|y) baseline summary dimension: B * C * F.
+    pub fn pxy_dim(&self) -> usize {
+        self.hist_buckets * self.classes * self.flat_dim()
+    }
+
+    /// Smallest compiled size bucket that fits `n` samples (the padding
+    /// target); the largest bucket if nothing fits (callers then truncate —
+    /// never happens when `samples_max <= max(size_buckets)`).
+    pub fn size_bucket_for(&self, n: usize) -> usize {
+        for &b in &self.size_buckets {
+            if n <= b {
+                return b;
+            }
+        }
+        *self.size_buckets.last().expect("no size buckets")
+    }
+
+    /// Lognormal (mu, sigma) of the underlying normal, fitted to the target
+    /// avg/std by moment matching.
+    pub fn lognormal_params(&self) -> (f64, f64) {
+        let m = self.samples_avg;
+        let v = self.samples_std * self.samples_std;
+        let sigma2 = (1.0 + v / (m * m)).ln();
+        let mu = m.ln() - sigma2 / 2.0;
+        (mu, sigma2.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_table1() {
+        let f = DatasetSpec::femnist();
+        assert_eq!(f.classes, 62);
+        assert_eq!(f.n_clients, 2800);
+        assert_eq!(f.samples_max, 6709);
+        let o = DatasetSpec::openimage();
+        assert_eq!(o.classes, 600);
+        assert_eq!(o.n_clients, 11325);
+        assert_eq!(o.img.2, 3);
+    }
+
+    #[test]
+    fn summary_dim_formula() {
+        let f = DatasetSpec::femnist();
+        assert_eq!(f.summary_dim(), 62 * 64 + 62);
+        // Proposed summary is much smaller than the P(X|y) histogram.
+        assert!(f.summary_dim() < f.pxy_dim() / 50);
+    }
+
+    #[test]
+    fn size_bucket_selection() {
+        let f = DatasetSpec::femnist();
+        assert_eq!(f.size_bucket_for(1), 256);
+        assert_eq!(f.size_bucket_for(256), 256);
+        assert_eq!(f.size_bucket_for(257), 1024);
+        assert_eq!(f.size_bucket_for(6709), 8192);
+    }
+
+    #[test]
+    fn lognormal_moment_match() {
+        let f = DatasetSpec::femnist();
+        let (mu, sigma) = f.lognormal_params();
+        let mean = (mu + sigma * sigma / 2.0).exp();
+        assert!((mean - 109.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for n in ["femnist", "openimage", "tiny"] {
+            assert_eq!(DatasetSpec::by_name(n).unwrap().name, n);
+        }
+        assert!(DatasetSpec::by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,139 @@
+//! Device system-heterogeneity model (paper §2): each edge device has a
+//! compute capability, a network bandwidth, and time-varying availability.
+//! The simulator turns *measured* kernel times (from the PJRT runtime on
+//! this host) into per-device wall-clock estimates by scaling with the
+//! device's speed factor — the substitution DESIGN.md §5 documents for the
+//! paper's physical edge fleet.
+
+use crate::util::rng::Rng;
+
+/// Static per-device capability profile.
+#[derive(Debug, Clone)]
+pub struct DeviceProfile {
+    pub device_id: usize,
+    /// Compute slowdown vs the reference host (1.0 = host speed; a phone is
+    /// 5-20x slower than a server core).
+    pub compute_factor: f64,
+    /// Uplink bandwidth in MB/s.
+    pub bandwidth_mbps: f64,
+    /// Per-round probability the device is reachable & idle.
+    pub availability: f64,
+}
+
+/// Heterogeneity distribution parameters for fleet sampling.
+#[derive(Debug, Clone)]
+pub struct FleetModel {
+    /// Lognormal (mu, sigma) of compute_factor; default centers ~8x slower
+    /// than the host with 3x spread, matching mobile-CPU studies FedScale
+    /// references.
+    pub compute_mu: f64,
+    pub compute_sigma: f64,
+    /// Lognormal of bandwidth (MB/s).
+    pub bw_mu: f64,
+    pub bw_sigma: f64,
+    /// Beta-ish availability: uniform in [lo, hi].
+    pub avail_lo: f64,
+    pub avail_hi: f64,
+    pub seed: u64,
+}
+
+impl Default for FleetModel {
+    fn default() -> Self {
+        FleetModel {
+            compute_mu: 8.0f64.ln(),
+            compute_sigma: 0.6,
+            bw_mu: 2.0f64.ln(), // ~2 MB/s median uplink
+            bw_sigma: 0.8,
+            avail_lo: 0.6,
+            avail_hi: 0.98,
+            seed: 0xDE71CE,
+        }
+    }
+}
+
+impl FleetModel {
+    pub fn sample_fleet(&self, n: usize) -> Vec<DeviceProfile> {
+        (0..n)
+            .map(|id| {
+                let mut rng = Rng::substream(self.seed, &[id as u64]);
+                DeviceProfile {
+                    device_id: id,
+                    compute_factor: rng.lognormal(self.compute_mu, self.compute_sigma).clamp(1.0, 60.0),
+                    bandwidth_mbps: rng.lognormal(self.bw_mu, self.bw_sigma).clamp(0.1, 100.0),
+                    availability: rng.range_f64(self.avail_lo, self.avail_hi),
+                }
+            })
+            .collect()
+    }
+}
+
+impl DeviceProfile {
+    /// Wall-clock estimate for running a workload the host measured at
+    /// `host_secs`.
+    pub fn compute_time(&self, host_secs: f64) -> f64 {
+        host_secs * self.compute_factor
+    }
+
+    /// Seconds to upload `bytes` over this device's uplink.
+    pub fn upload_time(&self, bytes: usize) -> f64 {
+        bytes as f64 / (self.bandwidth_mbps * 1e6)
+    }
+
+    /// Is the device available this round? Deterministic in (round, seed).
+    pub fn available(&self, round: usize, seed: u64) -> bool {
+        let mut rng = Rng::substream(seed, &[AVAIL_SALT, self.device_id as u64, round as u64]);
+        rng.f64() < self.availability
+    }
+}
+
+const AVAIL_SALT: u64 = 0xA4A1;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_deterministic_and_bounded() {
+        let m = FleetModel::default();
+        let a = m.sample_fleet(100);
+        let b = m.sample_fleet(100);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.compute_factor, y.compute_factor);
+            assert!(x.compute_factor >= 1.0 && x.compute_factor <= 60.0);
+            assert!(x.bandwidth_mbps > 0.0);
+            assert!((0.0..=1.0).contains(&x.availability));
+        }
+    }
+
+    #[test]
+    fn heterogeneity_exists() {
+        let fleet = FleetModel::default().sample_fleet(500);
+        let fast = fleet.iter().map(|d| d.compute_factor).fold(f64::INFINITY, f64::min);
+        let slow = fleet.iter().map(|d| d.compute_factor).fold(0.0, f64::max);
+        assert!(slow / fast > 3.0, "fleet too homogeneous: {fast}..{slow}");
+    }
+
+    #[test]
+    fn compute_and_upload_scaling() {
+        let d = DeviceProfile {
+            device_id: 0,
+            compute_factor: 10.0,
+            bandwidth_mbps: 2.0,
+            availability: 1.0,
+        };
+        assert!((d.compute_time(0.5) - 5.0).abs() < 1e-12);
+        assert!((d.upload_time(2_000_000) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn availability_rate_matches_probability() {
+        let d = DeviceProfile {
+            device_id: 3,
+            compute_factor: 1.0,
+            bandwidth_mbps: 1.0,
+            availability: 0.7,
+        };
+        let hits = (0..5000).filter(|&r| d.available(r, 1)).count();
+        assert!((hits as f64 / 5000.0 - 0.7).abs() < 0.05);
+    }
+}

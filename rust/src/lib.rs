@@ -1,0 +1,25 @@
+//! # FedDDE — Efficient Data Distribution Estimation for Accelerated FL
+//!
+//! Rust + JAX + Pallas reproduction of Wang & Huang (2024): a
+//! heterogeneity-aware, cluster-based federated-learning framework whose
+//! contribution is an efficient data-distribution-summary algorithm
+//! (coreset + encoder dimension reduction, §4.1) and K-means device
+//! clustering (§4.2), replacing HACCS's P(X|y) histograms + DBSCAN.
+//!
+//! Layering (DESIGN.md §1):
+//! * **L3 (this crate)** — coordinator: FL server, client selection,
+//!   clustering service, FedAvg, device/system simulation, metrics, CLI.
+//! * **L2/L1 (python/, build-time only)** — JAX graphs + Pallas kernels,
+//!   AOT-lowered to `artifacts/*.hlo.txt`, executed here via PJRT.
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod metrics;
+pub mod privacy;
+pub mod runtime;
+pub mod selection;
+pub mod summary;
+pub mod util;

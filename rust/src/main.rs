@@ -1,0 +1,253 @@
+//! `feddde` — launcher CLI for the FedDDE framework.
+//!
+//! Subcommands:
+//!   train      run federated training (the Figure 1 workflow end-to-end)
+//!   summarize  compute fleet distribution summaries, report Table-2 stats
+//!   cluster    cluster fleet summaries (kmeans / dbscan), report quality
+//!   artifacts  list the AOT artifacts the runtime can execute
+//!
+//! Flags are `--key value` pairs; `train` also accepts `--config file.toml`
+//! (see `rust/src/config.rs` for the schema).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use feddde::cluster::{dbscan, kmeans};
+use feddde::config::ExperimentConfig;
+use feddde::coordinator::{refresh_fleet, Coordinator};
+use feddde::data::{DatasetSpec, DriftSchedule, Generator, Partition};
+use feddde::device::FleetModel;
+use feddde::runtime::Engine;
+use feddde::summary::{EncoderSummary, JlSummary, PxySummary, PySummary, SummaryEngine};
+use feddde::util::stats;
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn cfg_from_flags(flags: &HashMap<String, String>) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = flags.get("config") {
+        ExperimentConfig::load(path)?
+    } else {
+        ExperimentConfig::default()
+    };
+    if let Some(v) = flags.get("dataset") {
+        cfg.dataset = v.clone();
+    }
+    if let Some(v) = flags.get("clients") {
+        cfg.n_clients = v.parse().context("--clients")?;
+    }
+    if let Some(v) = flags.get("rounds") {
+        cfg.rounds = v.parse().context("--rounds")?;
+    }
+    if let Some(v) = flags.get("per-round") {
+        cfg.per_round = v.parse().context("--per-round")?;
+    }
+    if let Some(v) = flags.get("local-steps") {
+        cfg.local_steps = v.parse().context("--local-steps")?;
+    }
+    if let Some(v) = flags.get("lr") {
+        cfg.lr = v.parse().context("--lr")?;
+    }
+    if let Some(v) = flags.get("policy") {
+        cfg.policy = v.clone();
+    }
+    if let Some(v) = flags.get("summary") {
+        cfg.summary = v.clone();
+    }
+    if let Some(v) = flags.get("refresh-every") {
+        cfg.refresh_every = v.parse().context("--refresh-every")?;
+    }
+    if let Some(v) = flags.get("target-accuracy") {
+        cfg.target_accuracy = v.parse().context("--target-accuracy")?;
+    }
+    if let Some(v) = flags.get("seed") {
+        cfg.seed = v.parse().context("--seed")?;
+    }
+    if let Some(v) = flags.get("out") {
+        cfg.out = v.clone();
+    }
+    Ok(cfg)
+}
+
+fn summary_engine(name: &str, spec: &DatasetSpec) -> Result<Box<dyn SummaryEngine>> {
+    Ok(match name {
+        "encoder" => Box::new(EncoderSummary::new(spec)),
+        "py" => Box::new(PySummary::new(spec)),
+        "pxy" => Box::new(PxySummary::new(spec)),
+        "jl" => Box::new(JlSummary::new(spec)),
+        other => bail!("unknown summary method {other:?}"),
+    })
+}
+
+fn cmd_train(flags: HashMap<String, String>) -> Result<()> {
+    let cfg = cfg_from_flags(&flags)?;
+    let out = cfg.out.clone();
+    println!(
+        "feddde train: dataset={} clients={} rounds={} policy={} summary={}",
+        cfg.dataset,
+        if cfg.n_clients > 0 { cfg.n_clients.to_string() } else { "preset".into() },
+        cfg.rounds,
+        cfg.policy,
+        cfg.summary
+    );
+    let mut coord = Coordinator::new(cfg, Engine::open_default()?)?;
+    coord.run()?;
+    let log = &coord.log;
+    for r in &log.rounds {
+        println!(
+            "round {:>4}  sim_t {:>9.1}s  loss {:>7.4}  acc {:>6.4}",
+            r.round, r.sim_time, r.train_loss, r.eval_accuracy
+        );
+    }
+    println!(
+        "final acc {:.4} (best {:.4}) after {} rounds, sim time {:.1}s",
+        log.final_accuracy(),
+        log.best_accuracy(),
+        log.rounds.len(),
+        log.rounds.last().map(|r| r.sim_time).unwrap_or(0.0)
+    );
+    if !out.is_empty() {
+        log.write_jsonl(&out)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_summarize(flags: HashMap<String, String>) -> Result<()> {
+    let dataset = flags.get("dataset").map(String::as_str).unwrap_or("tiny");
+    let mut spec = DatasetSpec::by_name(dataset).context("unknown dataset")?;
+    if let Some(v) = flags.get("clients") {
+        spec = spec.with_clients(v.parse()?);
+    }
+    let method = flags.get("method").map(String::as_str).unwrap_or("encoder");
+    let engine = Engine::open_default()?;
+    let se = summary_engine(method, &spec)?;
+    let partition = Partition::build(&spec);
+    let generator = Generator::new(&spec);
+    let fleet = FleetModel::default().sample_fleet(spec.n_clients);
+    println!(
+        "summarizing {} clients of {} with {} (dim {})...",
+        spec.n_clients,
+        spec.name,
+        se.name(),
+        se.dim()
+    );
+    let r = refresh_fleet(
+        &engine,
+        se.as_ref(),
+        &partition,
+        &generator,
+        &fleet,
+        &DriftSchedule::none(),
+        0,
+        spec.n_groups,
+        spec.seed,
+    )?;
+    let (avg, max) = r.summary_time_stats();
+    println!("summary time (simulated device): avg {avg:.3}s max {max:.3}s");
+    println!("host wall clock: {:.3}s; clustering: {:.3}s", r.host_secs, r.cluster_secs);
+    let ari = stats::adjusted_rand_index(&r.clusters, &partition.group_truth());
+    println!("clustering ARI vs ground-truth groups: {ari:.3}");
+    Ok(())
+}
+
+fn cmd_cluster(flags: HashMap<String, String>) -> Result<()> {
+    let dataset = flags.get("dataset").map(String::as_str).unwrap_or("tiny");
+    let mut spec = DatasetSpec::by_name(dataset).context("unknown dataset")?;
+    if let Some(v) = flags.get("clients") {
+        spec = spec.with_clients(v.parse()?);
+    }
+    let method = flags.get("method").map(String::as_str).unwrap_or("kmeans");
+    let summary = flags.get("summary").map(String::as_str).unwrap_or("encoder");
+    let engine = Engine::open_default()?;
+    let se = summary_engine(summary, &spec)?;
+    let partition = Partition::build(&spec);
+    let generator = Generator::new(&spec);
+    let fleet = FleetModel::default().sample_fleet(spec.n_clients);
+    let r = refresh_fleet(
+        &engine,
+        se.as_ref(),
+        &partition,
+        &generator,
+        &fleet,
+        &DriftSchedule::none(),
+        0,
+        1, // clustering here, not in refresh
+        spec.seed,
+    )?;
+    let t0 = std::time::Instant::now();
+    let labels = match method {
+        "kmeans" => {
+            let mut kcfg = kmeans::KmeansConfig::new(spec.n_groups);
+            kcfg.seed = spec.seed;
+            kmeans::fit(&r.summaries, &kcfg).assignments
+        }
+        "dbscan" => {
+            let eps = flags
+                .get("eps")
+                .map(|v| v.parse())
+                .transpose()?
+                .unwrap_or_else(|| dbscan::suggest_eps(&r.summaries, 4, 64));
+            dbscan::fit(&r.summaries, &dbscan::DbscanConfig::new(eps, 4)).total_labels()
+        }
+        other => bail!("unknown clustering method {other:?}"),
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    let ari = stats::adjusted_rand_index(&labels, &partition.group_truth());
+    let k = labels.iter().collect::<std::collections::HashSet<_>>().len();
+    println!("{method} over {} {} summaries: {secs:.3}s, {k} clusters, ARI {ari:.3}", spec.n_clients, se.name());
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let engine = Engine::open_default()?;
+    let mut names: Vec<&String> = engine.manifest().artifacts.keys().collect();
+    names.sort();
+    for n in names {
+        let spec = engine.spec(n)?;
+        let ins: Vec<String> = spec.inputs.iter().map(|s| s.to_string_sig()).collect();
+        let outs: Vec<String> = spec.outputs.iter().map(|s| s.to_string_sig()).collect();
+        println!("{:<28} ({}) -> ({})", n, ins.join(", "), outs.join(", "));
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    match cmd {
+        "train" => cmd_train(flags),
+        "summarize" => cmd_summarize(flags),
+        "cluster" => cmd_cluster(flags),
+        "artifacts" => cmd_artifacts(),
+        _ => {
+            println!(
+                "feddde — Efficient Data Distribution Estimation for Accelerated FL\n\n\
+                 usage: feddde <train|summarize|cluster|artifacts> [--flags]\n\
+                   train      --dataset tiny --rounds 30 --policy cluster [--config f.toml]\n\
+                   summarize  --dataset tiny --method encoder|py|pxy|jl [--clients N]\n\
+                   cluster    --dataset tiny --method kmeans|dbscan [--summary encoder]\n\
+                   artifacts  list AOT artifacts"
+            );
+            Ok(())
+        }
+    }
+}

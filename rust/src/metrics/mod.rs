@@ -1,0 +1,155 @@
+//! Metrics: per-round records, simulated wall-clock accounting, time-to-
+//! accuracy tracking, and writers (JSON-lines + TSV; both hand-rolled, no
+//! serde offline).
+
+use std::io::Write;
+
+/// One FL round's record.
+#[derive(Debug, Clone)]
+pub struct RoundMetrics {
+    pub round: usize,
+    /// Simulated wall-clock seconds elapsed up to the END of this round.
+    pub sim_time: f64,
+    /// Duration of this round alone (max over selected devices of
+    /// compute+upload, plus server aggregation).
+    pub round_time: f64,
+    pub train_loss: f64,
+    pub eval_accuracy: f64,
+    pub eval_loss: f64,
+    pub selected: Vec<usize>,
+    /// Host seconds actually spent in XLA during this round (real, not sim).
+    pub host_exec_secs: f64,
+}
+
+impl RoundMetrics {
+    /// Hand-rolled JSON object (metrics only contain numbers + one array).
+    pub fn to_json(&self) -> String {
+        let sel: Vec<String> = self.selected.iter().map(|s| s.to_string()).collect();
+        format!(
+            "{{\"round\":{},\"sim_time\":{:.4},\"round_time\":{:.4},\"train_loss\":{:.6},\
+             \"eval_accuracy\":{:.6},\"eval_loss\":{:.6},\"host_exec_secs\":{:.4},\
+             \"selected\":[{}]}}",
+            self.round,
+            self.sim_time,
+            self.round_time,
+            self.train_loss,
+            self.eval_accuracy,
+            self.eval_loss,
+            self.host_exec_secs,
+            sel.join(",")
+        )
+    }
+}
+
+/// Accumulates rounds; answers time-to-accuracy queries; writes logs.
+#[derive(Debug, Default)]
+pub struct MetricsLog {
+    pub rounds: Vec<RoundMetrics>,
+}
+
+impl MetricsLog {
+    pub fn push(&mut self, m: RoundMetrics) {
+        self.rounds.push(m);
+    }
+
+    /// Simulated seconds until eval accuracy first reached `target`
+    /// (None if never reached).
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.rounds
+            .iter()
+            .find(|r| r.eval_accuracy >= target)
+            .map(|r| r.sim_time)
+    }
+
+    /// Rounds until eval accuracy first reached `target`.
+    pub fn rounds_to_accuracy(&self, target: f64) -> Option<usize> {
+        self.rounds
+            .iter()
+            .find(|r| r.eval_accuracy >= target)
+            .map(|r| r.round)
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.rounds.last().map(|r| r.eval_accuracy).unwrap_or(0.0)
+    }
+
+    pub fn best_accuracy(&self) -> f64 {
+        self.rounds.iter().map(|r| r.eval_accuracy).fold(0.0, f64::max)
+    }
+
+    /// Write JSON-lines, one round per line.
+    pub fn write_jsonl(&self, path: &str) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        for r in &self.rounds {
+            writeln!(f, "{}", r.to_json())?;
+        }
+        Ok(())
+    }
+
+    /// Compact TSV of the loss/accuracy curves (EXPERIMENTS.md plots).
+    pub fn write_tsv(&self, path: &str) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "# round\tsim_time\ttrain_loss\teval_accuracy\teval_loss")?;
+        for r in &self.rounds {
+            writeln!(
+                f,
+                "{}\t{:.4}\t{:.6}\t{:.6}\t{:.6}",
+                r.round, r.sim_time, r.train_loss, r.eval_accuracy, r.eval_loss
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round(n: usize, t: f64, acc: f64) -> RoundMetrics {
+        RoundMetrics {
+            round: n,
+            sim_time: t,
+            round_time: 1.0,
+            train_loss: 2.0 / (n + 1) as f64,
+            eval_accuracy: acc,
+            eval_loss: 1.0,
+            selected: vec![1, 2],
+            host_exec_secs: 0.01,
+        }
+    }
+
+    #[test]
+    fn time_to_accuracy_first_crossing() {
+        let mut log = MetricsLog::default();
+        log.push(round(0, 10.0, 0.2));
+        log.push(round(1, 20.0, 0.5));
+        log.push(round(2, 30.0, 0.4));
+        log.push(round(3, 40.0, 0.6));
+        assert_eq!(log.time_to_accuracy(0.5), Some(20.0));
+        assert_eq!(log.rounds_to_accuracy(0.55), Some(3));
+        assert_eq!(log.time_to_accuracy(0.9), None);
+        assert!((log.best_accuracy() - 0.6).abs() < 1e-12);
+        assert!((log.final_accuracy() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_shape() {
+        let j = round(5, 1.5, 0.33).to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"round\":5"));
+        assert!(j.contains("\"selected\":[1,2]"));
+    }
+
+    #[test]
+    fn writers_produce_files() {
+        let mut log = MetricsLog::default();
+        log.push(round(0, 1.0, 0.1));
+        let dir = std::env::temp_dir();
+        let j = dir.join("feddde_m.jsonl");
+        let t = dir.join("feddde_m.tsv");
+        log.write_jsonl(j.to_str().unwrap()).unwrap();
+        log.write_tsv(t.to_str().unwrap()).unwrap();
+        assert!(std::fs::read_to_string(j).unwrap().contains("\"round\":0"));
+        assert!(std::fs::read_to_string(t).unwrap().lines().count() == 2);
+    }
+}

@@ -1,0 +1,122 @@
+//! Privacy accounting across periodic summary refreshes (§2.1 makes DP
+//! accounting non-trivial: summaries are re-released every refresh, so the
+//! per-client budget composes over rounds).
+//!
+//! Implements basic and advanced composition (Dwork & Roth, Thm 3.20) so
+//! the coordinator can report the cumulative (epsilon, delta) guarantee and
+//! refuse refreshes past a budget cap.
+
+/// Tracks cumulative privacy loss for one client (or fleet-uniform policy).
+#[derive(Debug, Clone)]
+pub struct PrivacyAccountant {
+    /// Per-release parameters.
+    pub eps_per_release: f64,
+    pub delta_per_release: f64,
+    /// Number of releases so far.
+    pub releases: u32,
+    /// Hard cap on cumulative epsilon (advanced composition); 0 = unlimited.
+    pub eps_budget: f64,
+}
+
+impl PrivacyAccountant {
+    pub fn new(eps_per_release: f64, delta_per_release: f64, eps_budget: f64) -> Self {
+        PrivacyAccountant {
+            eps_per_release,
+            delta_per_release,
+            releases: 0,
+            eps_budget,
+        }
+    }
+
+    /// Basic composition: epsilons and deltas add.
+    pub fn basic_epsilon(&self) -> f64 {
+        self.releases as f64 * self.eps_per_release
+    }
+
+    /// Advanced composition at slack delta' (Thm 3.20):
+    /// eps_total = sqrt(2k ln(1/delta')) eps + k eps (e^eps - 1).
+    pub fn advanced_epsilon(&self, delta_slack: f64) -> f64 {
+        let k = self.releases as f64;
+        if k == 0.0 {
+            return 0.0;
+        }
+        let e = self.eps_per_release;
+        (2.0 * k * (1.0 / delta_slack).ln()).sqrt() * e + k * e * (e.exp() - 1.0)
+    }
+
+    pub fn total_delta(&self, delta_slack: f64) -> f64 {
+        self.releases as f64 * self.delta_per_release + delta_slack
+    }
+
+    /// Whether another release fits the budget. Uses the tighter of basic
+    /// and advanced composition (advanced only wins for many small
+    /// releases; basic is tighter for few/large ones).
+    pub fn can_release(&self) -> bool {
+        if self.eps_budget <= 0.0 {
+            return true;
+        }
+        let mut next = self.clone();
+        next.releases += 1;
+        let eps = next
+            .basic_epsilon()
+            .min(next.advanced_epsilon(self.delta_per_release.max(1e-12)));
+        eps <= self.eps_budget
+    }
+
+    /// Record one release; returns false (and does not record) if over budget.
+    pub fn record_release(&mut self) -> bool {
+        if !self.can_release() {
+            return false;
+        }
+        self.releases += 1;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_composition_adds() {
+        let mut a = PrivacyAccountant::new(0.5, 1e-6, 0.0);
+        for _ in 0..4 {
+            assert!(a.record_release());
+        }
+        assert!((a.basic_epsilon() - 2.0).abs() < 1e-12);
+        assert!((a.total_delta(1e-9) - 4e-6 - 1e-9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn advanced_beats_basic_for_many_small_releases() {
+        let mut a = PrivacyAccountant::new(0.1, 1e-7, 0.0);
+        for _ in 0..100 {
+            a.record_release();
+        }
+        let basic = a.basic_epsilon(); // 10.0
+        let adv = a.advanced_epsilon(1e-6);
+        assert!(adv < basic, "advanced {adv} should beat basic {basic}");
+    }
+
+    #[test]
+    fn budget_blocks_releases() {
+        let mut a = PrivacyAccountant::new(1.0, 1e-6, 3.0);
+        let mut granted = 0;
+        for _ in 0..50 {
+            if a.record_release() {
+                granted += 1;
+            }
+        }
+        // Basic composition is the tighter bound at eps=1/release: exactly
+        // 3 releases fit an eps-budget of 3.
+        assert_eq!(granted, 3);
+        assert!(a.basic_epsilon() <= 3.0 + 1e-9);
+    }
+
+    #[test]
+    fn zero_releases_zero_loss() {
+        let a = PrivacyAccountant::new(1.0, 1e-6, 0.0);
+        assert_eq!(a.basic_epsilon(), 0.0);
+        assert_eq!(a.advanced_epsilon(1e-6), 0.0);
+    }
+}

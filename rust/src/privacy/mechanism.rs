@@ -1,0 +1,149 @@
+//! Gaussian and Laplace mechanisms for summary perturbation (local DP).
+
+use crate::util::rng::Rng;
+
+/// Local-DP configuration for summary release.
+#[derive(Debug, Clone)]
+pub struct DpConfig {
+    /// Privacy budget per summary release.
+    pub epsilon: f64,
+    /// Failure probability for the Gaussian mechanism.
+    pub delta: f64,
+    /// L2 sensitivity of the released vector (see module docs; conservative
+    /// defaults computed by `summary_sensitivity`).
+    pub l2_sensitivity: f64,
+}
+
+impl DpConfig {
+    pub fn new(epsilon: f64, delta: f64, l2_sensitivity: f64) -> Self {
+        assert!(epsilon > 0.0, "epsilon must be positive");
+        assert!((0.0..1.0).contains(&delta), "delta in [0,1)");
+        assert!(l2_sensitivity > 0.0, "sensitivity must be positive");
+        DpConfig { epsilon, delta, l2_sensitivity }
+    }
+}
+
+/// Classic Gaussian-mechanism noise scale: sigma >= sqrt(2 ln(1.25/delta))
+/// * Delta2 / epsilon  (Dwork & Roth, Thm 3.22; valid for epsilon <= 1,
+/// conservative above).
+pub fn gaussian_sigma(cfg: &DpConfig) -> f64 {
+    (2.0 * (1.25 / cfg.delta).ln()).sqrt() * cfg.l2_sensitivity / cfg.epsilon
+}
+
+/// Conservative L2 sensitivity of the FedDDE summary (`C*H + C` layout)
+/// for a client with `n` samples: feature-mean block 2/n_min per affected
+/// label (bounded by 2*k_proportional floor) + label-dist block sqrt(2)/n.
+/// We use the worst case over blocks.
+pub fn summary_sensitivity(n_samples: usize) -> f64 {
+    let n = n_samples.max(1) as f64;
+    let label_block = std::f64::consts::SQRT_2 / n;
+    // One sample appears in exactly one label's mean; features L2-normed.
+    let feat_block = 2.0 / n;
+    (label_block * label_block + feat_block * feat_block).sqrt()
+}
+
+/// The mechanism applied on-device before upload.
+pub struct DpMechanism {
+    pub cfg: DpConfig,
+    sigma: f64,
+}
+
+impl DpMechanism {
+    pub fn new(cfg: DpConfig) -> Self {
+        let sigma = gaussian_sigma(&cfg);
+        DpMechanism { cfg, sigma }
+    }
+
+    pub fn sigma(&self) -> f64 {
+        self.sigma
+    }
+
+    /// Gaussian mechanism: v + N(0, sigma^2 I). Deterministic in `rng`.
+    pub fn gaussian(&self, v: &mut [f32], rng: &mut Rng) {
+        for x in v.iter_mut() {
+            *x += (self.sigma * rng.normal()) as f32;
+        }
+    }
+
+    /// Laplace mechanism for pure epsilon-DP on low-dim blocks (P(y) style
+    /// releases): v + Lap(l1_sensitivity / epsilon) per coordinate.
+    pub fn laplace(&self, v: &mut [f32], l1_sensitivity: f64, rng: &mut Rng) {
+        let b = l1_sensitivity / self.cfg.epsilon;
+        for x in v.iter_mut() {
+            // Inverse-CDF sampling of Laplace(0, b).
+            let u = rng.f64() - 0.5;
+            let noise = -b * u.signum() * (1.0 - 2.0 * u.abs()).max(1e-300).ln();
+            *x += noise as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn sigma_scales_correctly() {
+        let a = gaussian_sigma(&DpConfig::new(1.0, 1e-5, 0.1));
+        let b = gaussian_sigma(&DpConfig::new(2.0, 1e-5, 0.1)); // more budget -> less noise
+        let c = gaussian_sigma(&DpConfig::new(1.0, 1e-5, 0.2)); // more sensitive -> more noise
+        assert!(b < a);
+        assert!((c - 2.0 * a).abs() < 1e-12);
+        assert!(a > 0.0);
+    }
+
+    #[test]
+    fn gaussian_noise_has_target_std() {
+        let mech = DpMechanism::new(DpConfig::new(1.0, 1e-5, 0.05));
+        let mut rng = Rng::new(1);
+        let n = 20_000;
+        let mut v = vec![0.0f32; n];
+        mech.gaussian(&mut v, &mut rng);
+        let xs: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+        let sd = stats::std_dev(&xs);
+        assert!(
+            (sd - mech.sigma()).abs() < 0.05 * mech.sigma(),
+            "sd={sd} sigma={}",
+            mech.sigma()
+        );
+        assert!(stats::mean(&xs).abs() < 0.02 * mech.sigma());
+    }
+
+    #[test]
+    fn laplace_noise_symmetric_with_target_scale() {
+        let mech = DpMechanism::new(DpConfig::new(0.5, 1e-5, 1.0));
+        let mut rng = Rng::new(2);
+        let n = 20_000;
+        let mut v = vec![0.0f32; n];
+        mech.laplace(&mut v, 1.0, &mut rng);
+        let xs: Vec<f64> = v.iter().map(|&x| x as f64).collect();
+        // Laplace(b): std = b*sqrt(2), b = 1.0/0.5 = 2.0 -> std ~ 2.83.
+        let sd = stats::std_dev(&xs);
+        assert!((sd - 2.0 * (2.0f64).sqrt()).abs() < 0.15, "sd={sd}");
+        assert!(stats::mean(&xs).abs() < 0.1);
+    }
+
+    #[test]
+    fn sensitivity_decreases_with_n() {
+        assert!(summary_sensitivity(10) > summary_sensitivity(100));
+        assert!(summary_sensitivity(100) > summary_sensitivity(10_000));
+        assert!(summary_sensitivity(0).is_finite()); // guarded
+    }
+
+    #[test]
+    #[should_panic(expected = "epsilon")]
+    fn rejects_nonpositive_epsilon() {
+        DpConfig::new(0.0, 1e-5, 0.1);
+    }
+
+    #[test]
+    fn deterministic_in_rng_seed() {
+        let mech = DpMechanism::new(DpConfig::new(1.0, 1e-5, 0.1));
+        let mut a = vec![1.0f32; 16];
+        let mut b = vec![1.0f32; 16];
+        mech.gaussian(&mut a, &mut Rng::new(7));
+        mech.gaussian(&mut b, &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,25 @@
+//! Differential privacy for distribution summaries (paper §5: "our proposed
+//! solution is complementary to privacy-preserving methods that could be
+//! applied on the data summaries, such as differential privacy used in
+//! HACCS").
+//!
+//! A summary is a deterministic function of one client's dataset; releasing
+//! it leaks information about individual samples. HACCS's remedy — adopted
+//! here — is local DP: each device perturbs its summary with calibrated
+//! noise before upload. The Gaussian mechanism needs the summary's
+//! L2-sensitivity, which for FedDDE's summary is small by construction:
+//!
+//! * label-distribution block: replacing one of n samples moves the
+//!   empirical distribution by at most sqrt(2)/n in L2;
+//! * per-label mean block: features are L2-normalized (||f|| = 1), so
+//!   replacing one sample moves its label's mean by at most 2/n_c (n_c =
+//!   that label's count, >= coreset proportionality floor).
+//!
+//! `examples`/`benches` use `bench ablation` style sweeps of epsilon vs
+//! clustering ARI (privacy/utility trade-off).
+
+pub mod accountant;
+pub mod mechanism;
+
+pub use accountant::PrivacyAccountant;
+pub use mechanism::{gaussian_sigma, DpConfig, DpMechanism};

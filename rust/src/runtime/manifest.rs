@@ -1,0 +1,197 @@
+//! Artifact manifest parser: `artifacts/manifest.tsv` (written by
+//! `python/compile/aot.py`) describes every AOT artifact's I/O signature so
+//! the runtime can validate inputs before handing them to PJRT.
+//!
+//! Line format (tab-separated):
+//! `name<TAB>file<TAB>f32[128,62];f32[]<TAB>f32[4030]` — `-` for no inputs.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Element type of a tensor signature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other:?}"),
+        }
+    }
+}
+
+/// Shape + dtype of one input/output tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    /// Parse `f32[128,62]` / `i32[2816]` / `f32[]` (scalar).
+    pub fn parse(s: &str) -> Result<Self> {
+        let open = s.find('[').context("missing '[' in tensor sig")?;
+        if !s.ends_with(']') {
+            bail!("missing ']' in tensor sig {s:?}");
+        }
+        let dtype = DType::parse(&s[..open])?;
+        let dims = &s[open + 1..s.len() - 1];
+        let shape = if dims.is_empty() {
+            Vec::new()
+        } else {
+            dims.split(',')
+                .map(|d| d.trim().parse::<usize>().context("bad dim"))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSig { dtype, shape })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn to_string_sig(&self) -> String {
+        let d = match self.dtype {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        };
+        let dims: Vec<String> = self.shape.iter().map(|x| x.to_string()).collect();
+        format!("{d}[{}]", dims.join(","))
+    }
+}
+
+/// One artifact's manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut artifacts = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim_end();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('\t').collect();
+            if parts.len() != 4 {
+                bail!("manifest line {} malformed: {line:?}", lineno + 1);
+            }
+            let parse_sigs = |s: &str| -> Result<Vec<TensorSig>> {
+                if s == "-" || s.is_empty() {
+                    return Ok(Vec::new());
+                }
+                s.split(';').map(TensorSig::parse).collect()
+            };
+            let spec = ArtifactSpec {
+                name: parts[0].to_string(),
+                file: parts[1].to_string(),
+                inputs: parse_sigs(parts[2])
+                    .with_context(|| format!("inputs of {}", parts[0]))?,
+                outputs: parse_sigs(parts[3])
+                    .with_context(|| format!("outputs of {}", parts[0]))?,
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).with_context(|| {
+            let mut known: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+            known.sort_unstable();
+            format!("artifact {name:?} not in manifest; known: {known:?}")
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "# name\tfile\tinputs\toutputs\n\
+        tiny_init\ttiny_init.hlo.txt\t-\tf32[2948]\n\
+        tiny_train_B8\ttiny_train_B8.hlo.txt\tf32[2948];f32[8,64];f32[8,4];f32[]\tf32[2948];f32[]\n\
+        tiny_kmeans\tk.hlo.txt\tf32[64,36];f32[3,36]\tf32[3,36];i32[64];f32[]\n";
+
+    #[test]
+    fn parse_tensor_sigs() {
+        let t = TensorSig::parse("f32[128,62]").unwrap();
+        assert_eq!(t.dtype, DType::F32);
+        assert_eq!(t.shape, vec![128, 62]);
+        assert_eq!(t.elements(), 128 * 62);
+        let s = TensorSig::parse("f32[]").unwrap();
+        assert!(s.shape.is_empty());
+        assert_eq!(s.elements(), 1);
+        let i = TensorSig::parse("i32[7]").unwrap();
+        assert_eq!(i.dtype, DType::I32);
+        assert_eq!(i.to_string_sig(), "i32[7]");
+    }
+
+    #[test]
+    fn rejects_malformed_sigs() {
+        assert!(TensorSig::parse("f32").is_err());
+        assert!(TensorSig::parse("f64[2]").is_err());
+        assert!(TensorSig::parse("f32[a,b]").is_err());
+    }
+
+    #[test]
+    fn parse_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let init = m.get("tiny_init").unwrap();
+        assert!(init.inputs.is_empty());
+        assert_eq!(init.outputs.len(), 1);
+        let train = m.get("tiny_train_B8").unwrap();
+        assert_eq!(train.inputs.len(), 4);
+        assert_eq!(train.inputs[3].shape, Vec::<usize>::new());
+        let km = m.get("tiny_kmeans").unwrap();
+        assert_eq!(km.outputs[1].dtype, DType::I32);
+    }
+
+    #[test]
+    fn unknown_artifact_error_lists_known() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let err = format!("{:#}", m.get("nope").unwrap_err());
+        assert!(err.contains("tiny_init"));
+    }
+
+    #[test]
+    fn malformed_line_is_error() {
+        assert!(Manifest::parse("bad line no tabs\n").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // Validates against the actual artifacts dir when built.
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.tsv").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.get("tiny_init").is_ok());
+        }
+    }
+}

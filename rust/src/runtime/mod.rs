@@ -1,0 +1,297 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from the
+//! L3 hot path. Python never runs here — the artifacts were lowered at build
+//! time by `python/compile/aot.py`.
+//!
+//! Wiring (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`, with the
+//! output always a 1-tuple-or-more tuple (`return_tuple=True` at lowering).
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{ArtifactSpec, DType, Manifest, TensorSig};
+
+/// Engine: one PJRT client + a compile-once executable cache keyed by
+/// artifact name.
+///
+/// Not `Sync` (the underlying PJRT wrappers hold raw pointers); the
+/// coordinator owns one Engine and serializes calls through it. XLA's CPU
+/// backend parallelizes internally, so this is not the throughput limiter —
+/// see EXPERIMENTS.md §Perf.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    /// Cumulative (calls, time) per artifact for the metrics report.
+    stats: std::cell::RefCell<HashMap<String, (u64, Duration)>>,
+}
+
+impl Engine {
+    /// Open the artifacts directory (must contain `manifest.tsv`).
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            dir,
+            manifest,
+            cache: Default::default(),
+            stats: Default::default(),
+        })
+    }
+
+    /// Locate the artifacts directory: `FEDDDE_ARTIFACTS` env var or
+    /// `<manifest dir>/artifacts` (the repo layout).
+    pub fn default_dir() -> PathBuf {
+        if let Ok(d) = std::env::var("FEDDDE_ARTIFACTS") {
+            return PathBuf::from(d);
+        }
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn open_default() -> Result<Self> {
+        Self::new(Self::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.get(name)?;
+        let path = self.dir.join(&spec.file);
+        let path_str = path
+            .to_str()
+            .with_context(|| format!("non-utf8 path {}", path.display()))?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        log::debug!("compiled {name} in {:?}", t0.elapsed());
+        let rc = std::rc::Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Warm the compile cache (useful before timing request-path latency).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Validate literals against the manifest signature.
+    fn validate(&self, name: &str, inputs: &[xla::Literal]) -> Result<()> {
+        let spec = self.manifest.get(name)?;
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (lit, sig)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            let n = lit.element_count();
+            if n != sig.elements() {
+                bail!(
+                    "artifact {name} input {i}: expected {} elements ({}), got {n}",
+                    sig.elements(),
+                    sig.to_string_sig()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact; returns the decomposed output tuple.
+    pub fn exec(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.exec_timed(name, inputs).map(|(outs, _)| outs)
+    }
+
+    /// Execute and report wall-clock (excluding compile; including H2D/D2H).
+    pub fn exec_timed(
+        &self,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<(Vec<xla::Literal>, Duration)> {
+        self.validate(name, inputs)?;
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing artifact {name}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let outs = tuple.to_tuple().context("decomposing output tuple")?;
+        let dt = t0.elapsed();
+        let mut stats = self.stats.borrow_mut();
+        let e = stats.entry(name.to_string()).or_insert((0, Duration::ZERO));
+        e.0 += 1;
+        e.1 += dt;
+        Ok((outs, dt))
+    }
+
+    /// (calls, total time) per artifact, sorted by total time descending.
+    pub fn stats(&self) -> Vec<(String, u64, Duration)> {
+        let mut v: Vec<(String, u64, Duration)> = self
+            .stats
+            .borrow()
+            .iter()
+            .map(|(k, &(n, d))| (k.clone(), n, d))
+            .collect();
+        v.sort_by(|a, b| b.2.cmp(&a.2));
+        v
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    if data.len() != n {
+        bail!("lit_f32: {} elements for shape {shape:?}", data.len());
+    }
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .context("reshaping literal")
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract all f32 elements of a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal to f32 vec")
+}
+
+/// Extract all i32 elements of a literal.
+pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().context("literal to i32 vec")
+}
+
+/// Extract a scalar f32.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().context("literal to f32 scalar")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let dir = Engine::default_dir();
+        if dir.join("manifest.tsv").exists() {
+            Some(Engine::new(dir).expect("engine"))
+        } else {
+            None // artifacts not built; covered by `make test`
+        }
+    }
+
+    #[test]
+    fn lit_roundtrip() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]).unwrap();
+        assert_eq!(l.element_count(), 6);
+        assert_eq!(to_vec_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let s = lit_f32(&[7.5], &[]).unwrap();
+        assert_eq!(to_scalar_f32(&s).unwrap(), 7.5);
+    }
+
+    #[test]
+    fn lit_shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+    }
+
+    #[test]
+    fn init_and_train_roundtrip() {
+        let Some(eng) = engine() else { return };
+        // tiny_init: () -> params
+        let outs = eng.exec("tiny_init", &[]).unwrap();
+        assert_eq!(outs.len(), 1);
+        let params = to_vec_f32(&outs[0]).unwrap();
+        let spec = eng.spec("tiny_init").unwrap();
+        assert_eq!(params.len(), spec.outputs[0].elements());
+        assert!(params.iter().any(|&v| v != 0.0));
+
+        // one train step must change params and return finite loss
+        let b = 8usize;
+        let f = 64usize;
+        let c = 4usize;
+        let x: Vec<f32> = (0..b * f).map(|i| (i % 13) as f32 / 13.0).collect();
+        let mut oh = vec![0.0f32; b * c];
+        for i in 0..b {
+            oh[i * c + (i % c)] = 1.0;
+        }
+        let ins = [
+            lit_f32(&params, &[params.len()]).unwrap(),
+            lit_f32(&x, &[b, f]).unwrap(),
+            lit_f32(&oh, &[b, c]).unwrap(),
+            lit_scalar(0.1),
+        ];
+        let outs = eng.exec("tiny_train_B8", &ins).unwrap();
+        assert_eq!(outs.len(), 2);
+        let new_params = to_vec_f32(&outs[0]).unwrap();
+        let loss = to_scalar_f32(&outs[1]).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        assert_ne!(new_params, params);
+    }
+
+    #[test]
+    fn validation_catches_wrong_arity_and_shape() {
+        let Some(eng) = engine() else { return };
+        let err = eng.exec("tiny_train_B8", &[]).err().expect("arity error");
+        assert!(format!("{err:#}").contains("expected 4 inputs"));
+        let bad = [
+            lit_f32(&[0.0; 10], &[10]).unwrap(),
+            lit_f32(&[0.0; 10], &[10]).unwrap(),
+            lit_f32(&[0.0; 10], &[10]).unwrap(),
+            lit_scalar(0.1),
+        ];
+        assert!(eng.exec("tiny_train_B8", &bad).is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let Some(eng) = engine() else { return };
+        assert!(eng.exec("does_not_exist", &[]).is_err());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let Some(eng) = engine() else { return };
+        eng.exec("tiny_init", &[]).unwrap();
+        eng.exec("tiny_init", &[]).unwrap();
+        let stats = eng.stats();
+        let init = stats.iter().find(|(n, _, _)| n == "tiny_init").unwrap();
+        assert_eq!(init.1, 2);
+    }
+}

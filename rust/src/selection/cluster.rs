@@ -1,0 +1,199 @@
+//! HACCS-style cluster-based selection (paper §2, Fig. 1): the summaries →
+//! clustering pipeline exists to drive THIS policy. Each round:
+//!
+//! 1. apportion the `k` slots across clusters proportionally to cluster
+//!    size (largest remainder), so every data-distribution group stays
+//!    represented — the statistical-heterogeneity half;
+//! 2. inside each cluster, prefer the *fastest available* devices
+//!    (expected compute + upload time), with an exploration epsilon —
+//!    the system-heterogeneity half;
+//! 3. re-balance leftover slots to other clusters when one has too few
+//!    available devices.
+
+use crate::selection::{ClientView, SelectionPolicy};
+use crate::util::rng::Rng;
+
+pub struct ClusterSelection {
+    /// Probability of picking a uniformly random available device inside a
+    /// cluster instead of the fastest (keeps slow devices' data in play).
+    pub explore_eps: f64,
+    /// Local steps assumed for the duration ranking.
+    pub local_steps: usize,
+}
+
+impl Default for ClusterSelection {
+    fn default() -> Self {
+        ClusterSelection { explore_eps: 0.1, local_steps: 4 }
+    }
+}
+
+impl SelectionPolicy for ClusterSelection {
+    fn name(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn select(
+        &mut self,
+        clients: &[ClientView<'_>],
+        _round: usize,
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        let n_clusters = clients.iter().map(|c| c.cluster).max().map_or(0, |m| m + 1);
+        if n_clusters == 0 {
+            return Vec::new();
+        }
+        // Available device indices per cluster and total cluster sizes.
+        let mut avail: Vec<Vec<usize>> = vec![Vec::new(); n_clusters];
+        let mut size = vec![0usize; n_clusters];
+        for (i, c) in clients.iter().enumerate() {
+            size[c.cluster] += 1;
+            if c.available {
+                avail[c.cluster].push(i);
+            }
+        }
+        let total: usize = size.iter().sum();
+        if total == 0 {
+            return Vec::new();
+        }
+
+        // Largest-remainder apportionment of k across clusters by size.
+        let mut want: Vec<usize> = Vec::with_capacity(n_clusters);
+        let mut rema: Vec<(usize, f64)> = Vec::with_capacity(n_clusters);
+        let mut assigned = 0usize;
+        for cl in 0..n_clusters {
+            let exact = k as f64 * size[cl] as f64 / total as f64;
+            let fl = exact.floor() as usize;
+            want.push(fl);
+            assigned += fl;
+            rema.push((cl, exact - exact.floor()));
+        }
+        rema.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        let mut left = k.saturating_sub(assigned);
+        for &(cl, _) in rema.iter().cycle().take(n_clusters * (k + 1)) {
+            if left == 0 {
+                break;
+            }
+            want[cl] += 1;
+            left -= 1;
+        }
+
+        // Rank within clusters by expected round duration (fastest first).
+        for ids in avail.iter_mut() {
+            ids.sort_by(|&a, &b| {
+                clients[a]
+                    .expected_round_secs(self.local_steps)
+                    .partial_cmp(&clients[b].expected_round_secs(self.local_steps))
+                    .unwrap()
+            });
+        }
+
+        let mut out = Vec::with_capacity(k);
+        let mut overflow = 0usize; // slots clusters could not fill
+        for cl in 0..n_clusters {
+            let ids = &mut avail[cl];
+            let take = want[cl].min(ids.len());
+            overflow += want[cl] - take;
+            for _ in 0..take {
+                let pick = if rng.f64() < self.explore_eps && ids.len() > 1 {
+                    rng.below(ids.len() as u64) as usize
+                } else {
+                    0
+                };
+                out.push(clients[ids.remove(pick)].client_id);
+            }
+        }
+        // Re-balance leftover slots across remaining available devices,
+        // fastest first.
+        if overflow > 0 {
+            let mut rest: Vec<usize> = avail.into_iter().flatten().collect();
+            rest.sort_by(|&a, &b| {
+                clients[a]
+                    .expected_round_secs(self.local_steps)
+                    .partial_cmp(&clients[b].expected_round_secs(self.local_steps))
+                    .unwrap()
+            });
+            for idx in rest.into_iter().take(overflow) {
+                out.push(clients[idx].client_id);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::testutil::Fixture;
+    use crate::selection::validate_selection;
+
+    #[test]
+    fn covers_every_cluster_when_k_allows() {
+        let fx = Fixture::new(80, 4, 11);
+        let mut views = fx.views();
+        for v in &mut views {
+            v.available = true;
+        }
+        let mut p = ClusterSelection::default();
+        let sel = p.select(&views, 0, 8, &mut Rng::new(1));
+        assert!(validate_selection(&sel, &views, 8));
+        let mut clusters_hit = std::collections::HashSet::new();
+        for cid in &sel {
+            clusters_hit.insert(views.iter().find(|v| v.client_id == *cid).unwrap().cluster);
+        }
+        assert_eq!(clusters_hit.len(), 4, "every cluster should be represented");
+    }
+
+    #[test]
+    fn prefers_fast_devices_within_cluster() {
+        let fx = Fixture::new(40, 1, 12);
+        let mut views = fx.views();
+        for v in &mut views {
+            v.available = true;
+        }
+        let mut p = ClusterSelection { explore_eps: 0.0, local_steps: 4 };
+        let sel = p.select(&views, 0, 5, &mut Rng::new(1));
+        // every selected device must be faster than every unselected one
+        let max_sel = sel
+            .iter()
+            .map(|&cid| views[cid].expected_round_secs(4))
+            .fold(0.0, f64::max);
+        let min_unsel = views
+            .iter()
+            .filter(|v| !sel.contains(&v.client_id))
+            .map(|v| v.expected_round_secs(4))
+            .fold(f64::INFINITY, f64::min);
+        assert!(max_sel <= min_unsel + 1e-9, "{max_sel} vs {min_unsel}");
+    }
+
+    #[test]
+    fn rebalances_when_cluster_unavailable() {
+        let fx = Fixture::new(30, 3, 13);
+        let mut views = fx.views();
+        for v in &mut views {
+            // cluster 0 entirely offline
+            v.available = v.cluster != 0;
+        }
+        let mut p = ClusterSelection::default();
+        let sel = p.select(&views, 0, 9, &mut Rng::new(2));
+        assert!(validate_selection(&sel, &views, 9));
+        // all slots still filled from clusters 1,2 (if enough devices)
+        let n_avail = views.iter().filter(|v| v.available).count();
+        assert_eq!(sel.len(), 9.min(n_avail));
+    }
+
+    #[test]
+    fn proportionality_over_large_k() {
+        // 2 clusters, one 3x the other -> slots split ~3:1.
+        let fx = Fixture::new(100, 1, 14);
+        let mut views = fx.views();
+        for (i, v) in views.iter_mut().enumerate() {
+            v.available = true;
+            v.cluster = if i < 75 { 0 } else { 1 };
+        }
+        let mut p = ClusterSelection::default();
+        let sel = p.select(&views, 0, 20, &mut Rng::new(3));
+        let big = sel.iter().filter(|&&cid| views[cid].cluster == 0).count();
+        assert_eq!(big, 15, "expected 15 slots for the 75% cluster, got {big}");
+    }
+}

@@ -1,0 +1,181 @@
+//! Client-selection policies (paper §2): the HACCS-style cluster-based
+//! policy the summaries feed, plus random / round-robin / Oort-like
+//! baselines for the convergence benches (E5).
+
+pub mod cluster;
+pub mod oort;
+pub mod powd;
+pub mod random;
+pub mod round_robin;
+
+use crate::device::DeviceProfile;
+use crate::util::rng::Rng;
+
+pub use cluster::ClusterSelection;
+pub use oort::OortSelection;
+pub use powd::PowDSelection;
+pub use random::RandomSelection;
+pub use round_robin::RoundRobinSelection;
+
+/// What a policy may inspect about each client when selecting.
+#[derive(Debug, Clone)]
+pub struct ClientView<'a> {
+    pub client_id: usize,
+    /// Cluster id from the latest device clustering (0 if unclustered).
+    pub cluster: usize,
+    pub device: &'a DeviceProfile,
+    /// Reachable & idle this round.
+    pub available: bool,
+    pub n_samples: usize,
+    /// Most recent local training loss (None before first selection).
+    pub last_loss: Option<f64>,
+    /// Host seconds one local step costs (for expected-duration ranking).
+    pub step_host_secs: f64,
+    /// Bytes uploaded per round (model update).
+    pub upload_bytes: usize,
+}
+
+impl ClientView<'_> {
+    /// Expected wall-clock for this client to finish a round of
+    /// `local_steps` steps (the straggler model).
+    pub fn expected_round_secs(&self, local_steps: usize) -> f64 {
+        self.device.compute_time(self.step_host_secs * local_steps as f64)
+            + self.device.upload_time(self.upload_bytes)
+    }
+}
+
+/// A device-selection strategy.
+pub trait SelectionPolicy {
+    fn name(&self) -> &'static str;
+
+    /// Choose up to `k` clients for this round from `clients` (the full
+    /// fleet view, including unavailable clients the policy must skip).
+    fn select(
+        &mut self,
+        clients: &[ClientView<'_>],
+        round: usize,
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize>;
+}
+
+/// Build a policy by config name.
+pub fn by_name(name: &str) -> Option<Box<dyn SelectionPolicy>> {
+    match name {
+        "random" => Some(Box::new(RandomSelection)),
+        "round_robin" => Some(Box::new(RoundRobinSelection::default())),
+        "cluster" => Some(Box::new(ClusterSelection::default())),
+        "oort" => Some(Box::new(OortSelection::default())),
+        "powd" => Some(Box::new(PowDSelection::default())),
+        _ => None,
+    }
+}
+
+/// Shared invariant checks used by tests and debug assertions: selections
+/// must be distinct, available, and at most k.
+pub fn validate_selection(sel: &[usize], clients: &[ClientView<'_>], k: usize) -> bool {
+    if sel.len() > k {
+        return false;
+    }
+    let mut seen = std::collections::HashSet::new();
+    for &cid in sel {
+        if !seen.insert(cid) {
+            return false;
+        }
+        match clients.iter().find(|c| c.client_id == cid) {
+            Some(c) if c.available => {}
+            _ => return false,
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::device::FleetModel;
+
+    pub struct Fixture {
+        pub devices: Vec<DeviceProfile>,
+        pub clusters: Vec<usize>,
+        pub available: Vec<bool>,
+        pub n_samples: Vec<usize>,
+        pub losses: Vec<Option<f64>>,
+    }
+
+    impl Fixture {
+        pub fn new(n: usize, n_clusters: usize, seed: u64) -> Self {
+            let devices = FleetModel::default().sample_fleet(n);
+            let mut rng = Rng::new(seed);
+            Fixture {
+                devices,
+                clusters: (0..n).map(|_| rng.below(n_clusters as u64) as usize).collect(),
+                available: (0..n).map(|_| rng.f64() < 0.8).collect(),
+                n_samples: (0..n).map(|_| 20 + rng.below(200) as usize).collect(),
+                losses: (0..n)
+                    .map(|_| if rng.f64() < 0.5 { Some(rng.range_f64(0.1, 3.0)) } else { None })
+                    .collect(),
+            }
+        }
+
+        pub fn views(&self) -> Vec<ClientView<'_>> {
+            (0..self.devices.len())
+                .map(|i| ClientView {
+                    client_id: i,
+                    cluster: self.clusters[i],
+                    device: &self.devices[i],
+                    available: self.available[i],
+                    n_samples: self.n_samples[i],
+                    last_loss: self.losses[i],
+                    step_host_secs: 0.01,
+                    upload_bytes: 1_000_000,
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use testutil::Fixture;
+
+    #[test]
+    fn all_policies_produce_valid_selections() {
+        let fx = Fixture::new(60, 4, 1);
+        let views = fx.views();
+        for name in ["random", "round_robin", "cluster", "oort", "powd"] {
+            let mut p = by_name(name).unwrap();
+            let mut rng = Rng::new(2);
+            for round in 0..10 {
+                let sel = p.select(&views, round, 8, &mut rng);
+                assert!(
+                    validate_selection(&sel, &views, 8),
+                    "{name} produced invalid selection {sel:?}"
+                );
+                assert!(!sel.is_empty(), "{name} selected nothing");
+            }
+        }
+    }
+
+    #[test]
+    fn property_never_selects_unavailable() {
+        crate::util::proptest::check(10, |g| {
+            let n = g.usize_in(5, 50);
+            let fx = Fixture::new(n, g.usize_in(1, 5), g.case as u64);
+            let views = fx.views();
+            let k = g.usize_in(1, n);
+            for name in ["random", "round_robin", "cluster", "oort", "powd"] {
+                let mut p = by_name(name).unwrap();
+                let mut rng = Rng::new(g.case as u64);
+                let sel = p.select(&views, 0, k, &mut rng);
+                assert!(validate_selection(&sel, &views, k), "{name}");
+            }
+        });
+    }
+
+    #[test]
+    fn unknown_policy_is_none() {
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,121 @@
+//! Oort-like utility selection (Lai et al., OSDI'21) — the non-clustering
+//! state-of-the-art baseline: rank clients by statistical utility (loss x
+//! sqrt(samples)) discounted by expected duration, with epsilon-greedy
+//! exploration of never-tried clients.
+
+use crate::selection::{ClientView, SelectionPolicy};
+use crate::util::rng::Rng;
+
+pub struct OortSelection {
+    pub explore_frac: f64,
+    pub local_steps: usize,
+}
+
+impl Default for OortSelection {
+    fn default() -> Self {
+        OortSelection { explore_frac: 0.2, local_steps: 4 }
+    }
+}
+
+impl OortSelection {
+    fn utility(&self, c: &ClientView<'_>) -> f64 {
+        let stat = c.last_loss.unwrap_or(0.0) * (c.n_samples as f64).sqrt();
+        let dur = c.expected_round_secs(self.local_steps).max(1e-6);
+        stat / dur
+    }
+}
+
+impl SelectionPolicy for OortSelection {
+    fn name(&self) -> &'static str {
+        "oort"
+    }
+
+    fn select(
+        &mut self,
+        clients: &[ClientView<'_>],
+        _round: usize,
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        let mut tried: Vec<&ClientView> =
+            clients.iter().filter(|c| c.available && c.last_loss.is_some()).collect();
+        let untried: Vec<&ClientView> =
+            clients.iter().filter(|c| c.available && c.last_loss.is_none()).collect();
+
+        let n_explore = ((k as f64 * self.explore_frac).round() as usize)
+            .min(untried.len())
+            .min(k);
+        let n_exploit = (k - n_explore).min(tried.len());
+
+        tried.sort_by(|a, b| self.utility(b).partial_cmp(&self.utility(a)).unwrap());
+        let mut out: Vec<usize> = tried.iter().take(n_exploit).map(|c| c.client_id).collect();
+
+        if n_explore > 0 {
+            let picks = rng.sample_indices(untried.len(), n_explore);
+            out.extend(picks.into_iter().map(|i| untried[i].client_id));
+        }
+        // Backfill from whichever pool still has members.
+        if out.len() < k {
+            for c in untried.iter().chain(tried.iter()) {
+                if out.len() >= k {
+                    break;
+                }
+                if !out.contains(&c.client_id) {
+                    out.push(c.client_id);
+                }
+            }
+        }
+        out.truncate(k);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::testutil::Fixture;
+    use crate::selection::validate_selection;
+
+    #[test]
+    fn exploits_high_loss_fast_clients() {
+        let fx = Fixture::new(30, 1, 20);
+        let mut views = fx.views();
+        for (i, v) in views.iter_mut().enumerate() {
+            v.available = true;
+            v.last_loss = Some(if i == 5 { 10.0 } else { 0.1 });
+            v.n_samples = 100;
+        }
+        let mut p = OortSelection { explore_frac: 0.0, local_steps: 4 };
+        let sel = p.select(&views, 0, 3, &mut Rng::new(1));
+        assert!(sel.contains(&5), "highest-utility client missing: {sel:?}");
+    }
+
+    #[test]
+    fn explores_untried_clients() {
+        let fx = Fixture::new(20, 1, 21);
+        let mut views = fx.views();
+        for (i, v) in views.iter_mut().enumerate() {
+            v.available = true;
+            v.last_loss = if i < 10 { Some(1.0) } else { None };
+        }
+        let mut p = OortSelection { explore_frac: 0.5, local_steps: 4 };
+        let sel = p.select(&views, 0, 8, &mut Rng::new(2));
+        let explored = sel.iter().filter(|&&cid| cid >= 10).count();
+        assert!(explored >= 3, "expected exploration, got {sel:?}");
+        assert!(validate_selection(&sel, &views, 8));
+    }
+
+    #[test]
+    fn all_untried_cold_start() {
+        let fx = Fixture::new(15, 1, 22);
+        let mut views = fx.views();
+        for v in &mut views {
+            v.available = true;
+            v.last_loss = None;
+        }
+        let mut p = OortSelection::default();
+        let sel = p.select(&views, 0, 6, &mut Rng::new(3));
+        assert_eq!(sel.len(), 6);
+        assert!(validate_selection(&sel, &views, 6));
+    }
+}

@@ -1,0 +1,127 @@
+//! Power-of-d-choices selection (Pisses/THE "Pow-d" baseline from
+//! El Hanchi & Stephens / FedAvg-variant literature): sample d random
+//! candidates per slot, pick the one with the highest local loss —
+//! a cheap middle ground between random and full utility ranking.
+
+use crate::selection::{ClientView, SelectionPolicy};
+use crate::util::rng::Rng;
+
+pub struct PowDSelection {
+    /// Candidates sampled per slot.
+    pub d: usize,
+}
+
+impl Default for PowDSelection {
+    fn default() -> Self {
+        PowDSelection { d: 3 }
+    }
+}
+
+impl SelectionPolicy for PowDSelection {
+    fn name(&self) -> &'static str {
+        "powd"
+    }
+
+    fn select(
+        &mut self,
+        clients: &[ClientView<'_>],
+        _round: usize,
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        let avail: Vec<&ClientView> = clients.iter().filter(|c| c.available).collect();
+        if avail.is_empty() {
+            return Vec::new();
+        }
+        let k = k.min(avail.len());
+        let mut chosen = std::collections::HashSet::new();
+        let mut out = Vec::with_capacity(k);
+        let mut attempts = 0;
+        while out.len() < k && attempts < k * 20 {
+            attempts += 1;
+            // d candidates (with replacement across draws, distinct from chosen)
+            let mut best: Option<&ClientView> = None;
+            for _ in 0..self.d {
+                let c = avail[rng.below(avail.len() as u64) as usize];
+                if chosen.contains(&c.client_id) {
+                    continue;
+                }
+                let score = c.last_loss.unwrap_or(f64::INFINITY); // explore untried first
+                if best
+                    .map(|b| score > b.last_loss.unwrap_or(f64::INFINITY))
+                    .unwrap_or(true)
+                {
+                    best = Some(c);
+                }
+            }
+            if let Some(c) = best {
+                if chosen.insert(c.client_id) {
+                    out.push(c.client_id);
+                }
+            }
+        }
+        // Backfill if rejection sampling stalled.
+        for c in &avail {
+            if out.len() >= k {
+                break;
+            }
+            if chosen.insert(c.client_id) {
+                out.push(c.client_id);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::testutil::Fixture;
+    use crate::selection::validate_selection;
+
+    #[test]
+    fn valid_and_fills_k() {
+        let fx = Fixture::new(40, 2, 30);
+        let views = fx.views();
+        let n_avail = views.iter().filter(|v| v.available).count();
+        let mut p = PowDSelection::default();
+        let sel = p.select(&views, 0, 12, &mut Rng::new(1));
+        assert_eq!(sel.len(), 12.min(n_avail));
+        assert!(validate_selection(&sel, &views, 12));
+    }
+
+    #[test]
+    fn biased_toward_high_loss() {
+        let fx = Fixture::new(60, 1, 31);
+        let mut views = fx.views();
+        for (i, v) in views.iter_mut().enumerate() {
+            v.available = true;
+            v.last_loss = Some(if i < 10 { 5.0 } else { 0.1 }); // 10 hot clients
+        }
+        let mut p = PowDSelection { d: 4 };
+        let mut hot = 0usize;
+        let mut rng = Rng::new(2);
+        for round in 0..60 {
+            for cid in p.select(&views, round, 5, &mut rng) {
+                if cid < 10 {
+                    hot += 1;
+                }
+            }
+        }
+        // 10/60 of the fleet but should win far more than 1/6 of slots.
+        assert!(hot as f64 > 0.30 * 300.0, "hot selections = {hot}/300");
+    }
+
+    #[test]
+    fn d_one_is_uniform_random() {
+        let fx = Fixture::new(30, 1, 32);
+        let mut views = fx.views();
+        for v in &mut views {
+            v.available = true;
+            v.last_loss = Some(1.0);
+        }
+        let mut p = PowDSelection { d: 1 };
+        let sel = p.select(&views, 0, 30, &mut Rng::new(3));
+        assert_eq!(sel.len(), 30); // covers everyone when k = n
+    }
+}

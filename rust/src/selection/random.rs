@@ -1,0 +1,81 @@
+//! Uniform random selection over available devices — the baseline every FL
+//! paper (and HACCS's evaluation) compares against.
+
+use crate::selection::{ClientView, SelectionPolicy};
+use crate::util::rng::Rng;
+
+pub struct RandomSelection;
+
+impl SelectionPolicy for RandomSelection {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn select(
+        &mut self,
+        clients: &[ClientView<'_>],
+        _round: usize,
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        let avail: Vec<usize> = clients
+            .iter()
+            .filter(|c| c.available)
+            .map(|c| c.client_id)
+            .collect();
+        if avail.is_empty() {
+            return Vec::new();
+        }
+        let k = k.min(avail.len());
+        rng.sample_indices(avail.len(), k)
+            .into_iter()
+            .map(|i| avail[i])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::testutil::Fixture;
+
+    #[test]
+    fn selects_k_distinct_available() {
+        let fx = Fixture::new(40, 3, 5);
+        let views = fx.views();
+        let mut p = RandomSelection;
+        let mut rng = Rng::new(1);
+        let sel = p.select(&views, 0, 10, &mut rng);
+        assert_eq!(sel.len(), 10.min(views.iter().filter(|v| v.available).count()));
+        assert!(crate::selection::validate_selection(&sel, &views, 10));
+    }
+
+    #[test]
+    fn covers_fleet_over_many_rounds() {
+        let fx = Fixture::new(20, 2, 6);
+        let mut views = fx.views();
+        for v in &mut views {
+            v.available = true;
+        }
+        let mut p = RandomSelection;
+        let mut rng = Rng::new(2);
+        let mut seen = std::collections::HashSet::new();
+        for round in 0..200 {
+            for cid in p.select(&views, round, 4, &mut rng) {
+                seen.insert(cid);
+            }
+        }
+        assert_eq!(seen.len(), 20, "random never visited some clients");
+    }
+
+    #[test]
+    fn empty_fleet_returns_empty() {
+        let fx = Fixture::new(10, 2, 7);
+        let mut views = fx.views();
+        for v in &mut views {
+            v.available = false;
+        }
+        let mut p = RandomSelection;
+        assert!(p.select(&views, 0, 5, &mut Rng::new(3)).is_empty());
+    }
+}

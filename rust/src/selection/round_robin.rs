@@ -1,0 +1,89 @@
+//! Round-robin selection: cycle through client ids, skipping unavailable
+//! devices. Deterministic full-fleet coverage; no data awareness.
+
+use crate::selection::{ClientView, SelectionPolicy};
+use crate::util::rng::Rng;
+
+#[derive(Default)]
+pub struct RoundRobinSelection {
+    cursor: usize,
+}
+
+impl SelectionPolicy for RoundRobinSelection {
+    fn name(&self) -> &'static str {
+        "round_robin"
+    }
+
+    fn select(
+        &mut self,
+        clients: &[ClientView<'_>],
+        _round: usize,
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        let _ = rng;
+        let n = clients.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(k);
+        let mut scanned = 0;
+        while out.len() < k && scanned < n {
+            let c = &clients[self.cursor % n];
+            self.cursor = (self.cursor + 1) % n;
+            scanned += 1;
+            if c.available {
+                out.push(c.client_id);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::selection::testutil::Fixture;
+
+    #[test]
+    fn cycles_without_repeats_within_pass() {
+        let fx = Fixture::new(12, 2, 8);
+        let mut views = fx.views();
+        for v in &mut views {
+            v.available = true;
+        }
+        let mut p = RoundRobinSelection::default();
+        let mut rng = Rng::new(1);
+        let a = p.select(&views, 0, 4, &mut rng);
+        let b = p.select(&views, 1, 4, &mut rng);
+        let c = p.select(&views, 2, 4, &mut rng);
+        assert_eq!(a, vec![0, 1, 2, 3]);
+        assert_eq!(b, vec![4, 5, 6, 7]);
+        assert_eq!(c, vec![8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn skips_unavailable() {
+        let fx = Fixture::new(6, 2, 9);
+        let mut views = fx.views();
+        for (i, v) in views.iter_mut().enumerate() {
+            v.available = i % 2 == 0; // only even ids
+        }
+        let mut p = RoundRobinSelection::default();
+        let sel = p.select(&views, 0, 3, &mut Rng::new(1));
+        assert_eq!(sel, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn bounded_scan_terminates_when_fleet_mostly_down() {
+        let fx = Fixture::new(5, 1, 10);
+        let mut views = fx.views();
+        for v in &mut views {
+            v.available = false;
+        }
+        views[3].available = true;
+        let mut p = RoundRobinSelection::default();
+        let sel = p.select(&views, 0, 4, &mut Rng::new(1));
+        assert_eq!(sel, vec![3]);
+    }
+}

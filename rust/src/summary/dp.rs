@@ -1,0 +1,119 @@
+//! `DpSummary` — a local-DP decorator around any `SummaryEngine` (paper §5:
+//! DP "could be applied on the data summaries"). The device computes its
+//! summary, calibrates Gaussian noise to the summary's L2 sensitivity for
+//! its own sample count, perturbs, and only then uploads. The server never
+//! sees the clean vector.
+
+use anyhow::Result;
+
+use crate::data::generator::ClientDataset;
+use crate::privacy::mechanism::{summary_sensitivity, DpConfig, DpMechanism};
+use crate::runtime::Engine;
+use crate::summary::SummaryEngine;
+use crate::util::rng::Rng;
+
+pub struct DpSummary {
+    inner: Box<dyn SummaryEngine>,
+    pub epsilon: f64,
+    pub delta: f64,
+}
+
+impl DpSummary {
+    pub fn new(inner: Box<dyn SummaryEngine>, epsilon: f64, delta: f64) -> Self {
+        assert!(epsilon > 0.0, "DpSummary: epsilon must be positive");
+        DpSummary { inner, epsilon, delta }
+    }
+}
+
+impl SummaryEngine for DpSummary {
+    fn name(&self) -> &'static str {
+        "DP"
+    }
+
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn blocks(&self) -> Vec<(usize, usize)> {
+        self.inner.blocks()
+    }
+
+    fn summarize(
+        &self,
+        eng: &Engine,
+        ds: &ClientDataset,
+        rng: &mut Rng,
+    ) -> Result<(Vec<f32>, f64)> {
+        let (mut v, secs) = self.inner.summarize(eng, ds, rng)?;
+        let t0 = std::time::Instant::now();
+        let sens = summary_sensitivity(ds.n);
+        let mech = DpMechanism::new(DpConfig::new(self.epsilon, self.delta, sens));
+        mech.gaussian(&mut v, rng);
+        Ok((v, secs + t0.elapsed().as_secs_f64()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::spec::DatasetSpec;
+    use crate::data::{Generator, Partition};
+    use crate::summary::EncoderSummary;
+
+    fn setup() -> Option<(Engine, DatasetSpec, ClientDataset)> {
+        let dir = Engine::default_dir();
+        if !dir.join("manifest.tsv").exists() {
+            return None;
+        }
+        let spec = DatasetSpec::tiny();
+        let part = Partition::build(&spec);
+        let g = Generator::new(&spec);
+        let ds = g.client_dataset(&part.clients[0], 0);
+        Some((Engine::new(dir).unwrap(), spec, ds))
+    }
+
+    #[test]
+    fn perturbs_but_preserves_scale() {
+        let Some((eng, spec, ds)) = setup() else { return };
+        let clean = EncoderSummary::new(&spec);
+        let noisy = DpSummary::new(Box::new(EncoderSummary::new(&spec)), 5.0, 1e-5);
+        let (a, _) = clean.summarize(&eng, &ds, &mut Rng::new(1)).unwrap();
+        let (b, _) = noisy.summarize(&eng, &ds, &mut Rng::new(1)).unwrap();
+        assert_eq!(a.len(), b.len());
+        assert_ne!(a, b, "DP summary identical to clean one");
+        // Noise magnitude should track the mechanism's calibration:
+        // E||noise||_2 ~= sigma * sqrt(dim). Allow 3x slack.
+        let sens = crate::privacy::mechanism::summary_sensitivity(ds.n);
+        let sigma = crate::privacy::mechanism::gaussian_sigma(
+            &crate::privacy::mechanism::DpConfig::new(5.0, 1e-5, sens),
+        );
+        let expected = sigma * (a.len() as f64).sqrt();
+        let d = crate::util::mat::sqdist(&a, &b).sqrt();
+        assert!(d < 3.0 * expected + 1e-6, "noise {d} >> calibrated {expected}");
+        assert!(d > 0.05 * expected, "noise {d} << calibrated {expected}");
+    }
+
+    #[test]
+    fn lower_epsilon_more_noise() {
+        let Some((eng, spec, ds)) = setup() else { return };
+        let clean = EncoderSummary::new(&spec)
+            .summarize(&eng, &ds, &mut Rng::new(2))
+            .unwrap()
+            .0;
+        let dist_at = |eps: f64| {
+            let e = DpSummary::new(Box::new(EncoderSummary::new(&spec)), eps, 1e-5);
+            let (v, _) = e.summarize(&eng, &ds, &mut Rng::new(2)).unwrap();
+            crate::util::mat::sqdist(&clean, &v).sqrt()
+        };
+        assert!(dist_at(0.1) > dist_at(10.0));
+    }
+
+    #[test]
+    fn deterministic_noise_per_rng() {
+        let Some((eng, spec, ds)) = setup() else { return };
+        let e = DpSummary::new(Box::new(EncoderSummary::new(&spec)), 1.0, 1e-5);
+        let (a, _) = e.summarize(&eng, &ds, &mut Rng::new(3)).unwrap();
+        let (b, _) = e.summarize(&eng, &ds, &mut Rng::new(3)).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,166 @@
+//! The paper's proposed summary (§4.1): label-proportional coreset →
+//! MobileNet-style encoder (L2/L1 artifact, Pallas label-moments kernel) →
+//! flat `[C*H + C]` vector of per-label feature means ⊕ label distribution.
+//!
+//! This is the Table 2 "Encoder+Kmeans" row's summary half; the clustering
+//! half is `cluster::kmeans` over the vectors this engine produces.
+
+use anyhow::Result;
+
+use crate::data::coreset::{build_coreset, one_hot};
+use crate::data::generator::ClientDataset;
+use crate::data::spec::DatasetSpec;
+use crate::runtime::{lit_f32, to_vec_f32, Engine};
+use crate::summary::SummaryEngine;
+use crate::util::rng::Rng;
+
+pub struct EncoderSummary {
+    spec: DatasetSpec,
+}
+
+impl EncoderSummary {
+    pub fn new(spec: &DatasetSpec) -> Self {
+        EncoderSummary { spec: spec.clone() }
+    }
+
+    /// Variant with a non-default coreset size (E7 ablation); requires the
+    /// matching `{ds}_summary_k{k}` artifact to have been compiled.
+    pub fn with_k(spec: &DatasetSpec, k: usize) -> Self {
+        let mut spec = spec.clone();
+        spec.coreset_k = k;
+        EncoderSummary { spec }
+    }
+
+    pub fn artifact(&self) -> String {
+        format!("{}_summary_k{}", self.spec.name, self.spec.coreset_k)
+    }
+}
+
+impl SummaryEngine for EncoderSummary {
+    fn name(&self) -> &'static str {
+        "Encoder+Kmeans"
+    }
+
+    fn dim(&self) -> usize {
+        self.spec.summary_dim()
+    }
+
+    fn blocks(&self) -> Vec<(usize, usize)> {
+        let ch = self.spec.classes * self.spec.feature_dim;
+        vec![(0, ch), (ch, self.spec.classes)]
+    }
+
+    fn summarize(
+        &self,
+        eng: &Engine,
+        ds: &ClientDataset,
+        rng: &mut Rng,
+    ) -> Result<(Vec<f32>, f64)> {
+        let k = self.spec.coreset_k;
+        let (h, w, c) = self.spec.img;
+        // Coreset selection is part of the proposed algorithm's cost: time it.
+        let t0 = std::time::Instant::now();
+        let cs = build_coreset(ds, self.spec.classes, k, rng);
+        let coreset_secs = t0.elapsed().as_secs_f64();
+        let oh = one_hot(&cs.labels, self.spec.classes);
+        let ins = [
+            lit_f32(&cs.images, &[k, h, w, c])?,
+            lit_f32(&oh, &[k, self.spec.classes])?,
+        ];
+        let (outs, dt) = eng.exec_timed(&self.artifact(), &ins)?;
+        Ok((to_vec_f32(&outs[0])?, coreset_secs + dt.as_secs_f64()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Generator, Partition};
+
+    fn engine() -> Option<Engine> {
+        let dir = Engine::default_dir();
+        if dir.join("manifest.tsv").exists() {
+            Some(Engine::new(dir).unwrap())
+        } else {
+            None
+        }
+    }
+
+    fn setup() -> (DatasetSpec, Vec<ClientDataset>) {
+        let spec = DatasetSpec::tiny();
+        let part = Partition::build(&spec);
+        let g = Generator::new(&spec);
+        let ds = part.clients.iter().take(6).map(|c| g.client_dataset(c, 0)).collect();
+        (spec, ds)
+    }
+
+    #[test]
+    fn shape_and_label_distribution() {
+        let Some(eng) = engine() else { return };
+        let (spec, ds) = setup();
+        let e = EncoderSummary::new(&spec);
+        let mut rng = Rng::new(1);
+        let (v, secs) = e.summarize(&eng, &ds[0], &mut rng).unwrap();
+        assert_eq!(v.len(), spec.summary_dim());
+        assert!(secs > 0.0);
+        // trailing C entries are the label distribution
+        let dist = &v[spec.classes * spec.feature_dim..];
+        let total: f32 = dist.iter().sum();
+        assert!((total - 1.0).abs() < 1e-4, "total={total}");
+        assert!(dist.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        assert!(v.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn label_distribution_matches_coreset_proportions() {
+        // The coreset preserves label proportions, so the summary's label
+        // distribution must be close to the client's empirical one.
+        let Some(eng) = engine() else { return };
+        let (spec, ds) = setup();
+        let e = EncoderSummary::new(&spec);
+        let mut rng = Rng::new(2);
+        let (v, _) = e.summarize(&eng, &ds[1], &mut rng).unwrap();
+        let dist = &v[spec.classes * spec.feature_dim..];
+        let counts = ds[1].label_counts(spec.classes);
+        let total: f32 = counts.iter().sum::<usize>() as f32;
+        for (c, (&got, &cnt)) in dist.iter().zip(&counts).enumerate() {
+            let want = cnt as f32 / total;
+            assert!(
+                (got - want).abs() < 0.15,
+                "class {c}: got {got} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn same_group_clients_have_closer_summaries() {
+        // The property K-means clustering depends on (E8 ground truth).
+        let Some(eng) = engine() else { return };
+        let spec = DatasetSpec::tiny();
+        let part = Partition::build(&spec);
+        let g = Generator::new(&spec);
+        let e = EncoderSummary::new(&spec);
+        let mut rng = Rng::new(3);
+        // find two same-group and one cross-group client
+        let g0: Vec<_> = part.clients.iter().filter(|c| c.group == 0).take(2).collect();
+        let g1: Vec<_> = part.clients.iter().filter(|c| c.group == 1).take(1).collect();
+        if g0.len() < 2 || g1.is_empty() {
+            return;
+        }
+        let s0a = e.summarize(&eng, &g.client_dataset(g0[0], 0), &mut rng).unwrap().0;
+        let s0b = e.summarize(&eng, &g.client_dataset(g0[1], 0), &mut rng).unwrap().0;
+        let s1 = e.summarize(&eng, &g.client_dataset(g1[0], 0), &mut rng).unwrap().0;
+        let same = crate::util::mat::sqdist(&s0a, &s0b);
+        let cross = crate::util::mat::sqdist(&s0a, &s1);
+        assert!(same < cross, "same={same} cross={cross}");
+    }
+
+    #[test]
+    fn summary_dramatically_smaller_than_pxy() {
+        let spec = DatasetSpec::femnist();
+        let enc = EncoderSummary::new(&spec);
+        let pxy = crate::summary::PxySummary::new(&spec);
+        // paper: "much smaller than the histogram representation"
+        assert!(enc.summary_bytes() * 50 < pxy.summary_bytes());
+    }
+}

@@ -1,0 +1,99 @@
+//! Distribution-summary engines (paper §3–§4): the proposed
+//! encoder+coreset summary and the P(y) / P(X|y) baselines, all executed
+//! through the AOT Pallas artifacts, plus pure-Rust JL / PCA engines for the
+//! dimension-reduction ablation (E7).
+//!
+//! Every engine returns `(summary_vector, host_seconds)`; the device model
+//! scales host_seconds by the client's compute factor to simulate the
+//! heterogeneous fleet (DESIGN.md §5).
+
+pub mod dp;
+pub mod encoder;
+pub mod projection;
+pub mod pxy;
+pub mod py;
+
+use anyhow::Result;
+
+use crate::data::generator::ClientDataset;
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+pub use dp::DpSummary;
+pub use encoder::EncoderSummary;
+pub use projection::{JlSummary, PcaBasis, PcaSummary};
+pub use pxy::PxySummary;
+pub use py::PySummary;
+
+/// A distribution-summary algorithm (the paper's central abstraction).
+pub trait SummaryEngine {
+    /// Short name used in Table 2 rows ("P(y)", "P(X|y)", "Encoder+Kmeans").
+    fn name(&self) -> &'static str;
+
+    /// Dimension of the produced summary vector.
+    fn dim(&self) -> usize;
+
+    /// Compute the summary for one client's data. Returns the vector and the
+    /// *host* compute seconds actually spent in the kernel/artifact.
+    fn summarize(
+        &self,
+        eng: &Engine,
+        ds: &ClientDataset,
+        rng: &mut Rng,
+    ) -> Result<(Vec<f32>, f64)>;
+
+    /// Bytes a client uploads per summary refresh (network model input).
+    fn summary_bytes(&self) -> usize {
+        self.dim() * std::mem::size_of::<f32>()
+    }
+
+    /// Contiguous column blocks of the summary vector with distinct scales
+    /// (used for block-balanced clustering, `cluster::balance_blocks`).
+    /// Default: one homogeneous block.
+    fn blocks(&self) -> Vec<(usize, usize)> {
+        vec![(0, self.dim())]
+    }
+}
+
+/// Assemble the paper's flat summary from per-label feature sums + counts —
+/// shared by the pure-Rust engines (JL/PCA) and used as the oracle in tests.
+/// Layout matches `python/compile/kernels/summary.py::summary_from_moments`:
+/// `[C*H means, C label distribution]`.
+pub fn assemble_summary(sums: &[f64], counts: &[f64], classes: usize, h: usize) -> Vec<f32> {
+    debug_assert_eq!(sums.len(), classes * h);
+    debug_assert_eq!(counts.len(), classes);
+    let total: f64 = counts.iter().sum::<f64>().max(1.0);
+    let mut out = Vec::with_capacity(classes * h + classes);
+    for c in 0..classes {
+        let n = counts[c];
+        for j in 0..h {
+            let v = if n > 0.0 { sums[c * h + j] / n } else { 0.0 };
+            out.push(v as f32);
+        }
+    }
+    for c in 0..classes {
+        out.push((counts[c] / total) as f32);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assemble_summary_layout() {
+        // 2 classes, H=2; class 0 has 2 samples summing to (2,4); class 1 empty.
+        let sums = vec![2.0, 4.0, 0.0, 0.0];
+        let counts = vec![2.0, 0.0];
+        let s = assemble_summary(&sums, &counts, 2, 2);
+        assert_eq!(s, vec![1.0, 2.0, 0.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn assemble_summary_empty_everything() {
+        let s = assemble_summary(&[0.0; 4], &[0.0; 2], 2, 2);
+        assert!(s.iter().all(|&v| v == 0.0));
+        assert_eq!(s.len(), 6);
+    }
+}

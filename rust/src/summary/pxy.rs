@@ -1,0 +1,158 @@
+//! P(X|y) baseline (HACCS, paper §3): per-label per-feature histograms over
+//! the client's FULL dataset. This is the expensive summary Table 2 measures
+//! at up to 553 s / >64 GB on OpenImage — the cost FedDDE's proposed summary
+//! eliminates. Runs through the `{ds}_pxy_N{bucket}` Pallas-histogram
+//! artifact.
+
+use anyhow::Result;
+
+use crate::data::coreset::one_hot;
+use crate::data::generator::ClientDataset;
+use crate::data::spec::DatasetSpec;
+use crate::runtime::{lit_f32, to_vec_f32, Engine};
+use crate::summary::SummaryEngine;
+use crate::util::rng::Rng;
+
+pub struct PxySummary {
+    spec: DatasetSpec,
+}
+
+impl PxySummary {
+    pub fn new(spec: &DatasetSpec) -> Self {
+        PxySummary { spec: spec.clone() }
+    }
+
+    fn artifact_for(&self, n: usize) -> String {
+        format!("{}_pxy_N{}", self.spec.name, self.spec.size_bucket_for(n))
+    }
+
+    /// Native reference (tests + the "what the kernel must produce" oracle).
+    pub fn compute_native(&self, ds: &ClientDataset) -> Vec<f32> {
+        let b = self.spec.hist_buckets;
+        let c = self.spec.classes;
+        let f = self.spec.flat_dim();
+        let mut hist = vec![0.0f32; b * c * f];
+        let mut counts = vec![0usize; c];
+        for i in 0..ds.n {
+            let label = ds.labels[i] as usize;
+            counts[label] += 1;
+            let img = ds.image(i);
+            for (j, &v) in img.iter().enumerate() {
+                let bucket = ((v * b as f32) as usize).min(b - 1);
+                hist[bucket * c * f + label * f + j] += 1.0;
+            }
+        }
+        // Normalize per (class, feature) like the artifact does.
+        for label in 0..c {
+            let n = counts[label];
+            if n == 0 {
+                continue;
+            }
+            let inv = 1.0 / n as f32;
+            for bucket in 0..b {
+                for j in 0..f {
+                    hist[bucket * c * f + label * f + j] *= inv;
+                }
+            }
+        }
+        hist
+    }
+}
+
+impl SummaryEngine for PxySummary {
+    fn name(&self) -> &'static str {
+        "P(X|y)"
+    }
+
+    fn dim(&self) -> usize {
+        self.spec.pxy_dim()
+    }
+
+    fn summarize(
+        &self,
+        eng: &Engine,
+        ds: &ClientDataset,
+        _rng: &mut Rng,
+    ) -> Result<(Vec<f32>, f64)> {
+        let bucket = self.spec.size_bucket_for(ds.n);
+        let n = ds.n.min(bucket);
+        let f = self.spec.flat_dim();
+        let mut x = Vec::with_capacity(bucket * f);
+        x.extend_from_slice(&ds.images[..n * f]);
+        x.resize(bucket * f, 0.0);
+        let mut labels = Vec::with_capacity(bucket);
+        labels.extend_from_slice(&ds.labels[..n]);
+        labels.resize(bucket, u32::MAX);
+        let oh = one_hot(&labels, self.spec.classes);
+        let ins = [
+            lit_f32(&x, &[bucket, f])?,
+            lit_f32(&oh, &[bucket, self.spec.classes])?,
+        ];
+        let (outs, dt) = eng.exec_timed(&self.artifact_for(ds.n), &ins)?;
+        Ok((to_vec_f32(&outs[0])?, dt.as_secs_f64()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Generator, Partition};
+
+    fn setup() -> (DatasetSpec, ClientDataset) {
+        let spec = DatasetSpec::tiny();
+        let part = Partition::build(&spec);
+        let g = Generator::new(&spec);
+        (spec.clone(), g.client_dataset(&part.clients[1], 0))
+    }
+
+    #[test]
+    fn native_histogram_mass_per_class_feature() {
+        let (spec, ds) = setup();
+        let hist = PxySummary::new(&spec).compute_native(&ds);
+        let b = spec.hist_buckets;
+        let c = spec.classes;
+        let f = spec.flat_dim();
+        let counts = ds.label_counts(c);
+        for label in 0..c {
+            if counts[label] == 0 {
+                continue;
+            }
+            // histogram over buckets for (label, feature 0) sums to 1
+            let total: f32 = (0..b).map(|bk| hist[bk * c * f + label * f]).sum();
+            assert!((total - 1.0).abs() < 1e-4, "label {label} total {total}");
+        }
+    }
+
+    #[test]
+    fn artifact_matches_native() {
+        let dir = Engine::default_dir();
+        if !dir.join("manifest.tsv").exists() {
+            return;
+        }
+        let (spec, ds) = setup();
+        let eng = Engine::new(dir).unwrap();
+        let mut rng = Rng::new(0);
+        let px = PxySummary::new(&spec);
+        let (got, _) = px.summarize(&eng, &ds, &mut rng).unwrap();
+        let want = px.compute_native(&ds);
+        assert_eq!(got.len(), want.len());
+        let mut max_err = 0.0f32;
+        for (a, b) in got.iter().zip(&want) {
+            max_err = max_err.max((a - b).abs());
+        }
+        assert!(max_err < 1e-4, "max_err={max_err}");
+    }
+
+    #[test]
+    fn dim_is_bcf() {
+        let spec = DatasetSpec::femnist();
+        assert_eq!(PxySummary::new(&spec).dim(), 8 * 62 * 784);
+    }
+
+    #[test]
+    fn summary_much_larger_than_proposed() {
+        // The paper's size argument: P(X|y) >> C*H+C.
+        let spec = DatasetSpec::openimage();
+        assert!(PxySummary::new(&spec).dim() > 100 * spec.summary_dim());
+    }
+}

@@ -1,0 +1,128 @@
+//! P(y) baseline (paper §2/§3): the marginal label distribution. Cheap to
+//! compute (<0.01 s in Table 2) but blind to intra-label feature
+//! heterogeneity — "images of both cats and dogs might be labeled as
+//! 'animals', but their features could be quite different".
+
+use anyhow::Result;
+
+use crate::data::coreset::one_hot;
+use crate::data::generator::ClientDataset;
+use crate::data::spec::DatasetSpec;
+use crate::runtime::{lit_f32, to_vec_f32, Engine};
+use crate::summary::SummaryEngine;
+use crate::util::rng::Rng;
+
+/// P(y) via the `{ds}_py_N{bucket}` artifact (padded one-hot reduction).
+pub struct PySummary {
+    spec: DatasetSpec,
+    /// Skip XLA and count natively — used to isolate artifact overhead in
+    /// the perf pass; numerics are identical (tested below).
+    pub native: bool,
+}
+
+impl PySummary {
+    pub fn new(spec: &DatasetSpec) -> Self {
+        PySummary { spec: spec.clone(), native: false }
+    }
+
+    pub fn native(spec: &DatasetSpec) -> Self {
+        PySummary { spec: spec.clone(), native: true }
+    }
+
+    fn artifact_for(&self, n: usize) -> String {
+        format!("{}_py_N{}", self.spec.name, self.spec.size_bucket_for(n))
+    }
+
+    fn compute_native(&self, ds: &ClientDataset) -> Vec<f32> {
+        let counts = ds.label_counts(self.spec.classes);
+        let total = (ds.n.max(1)) as f32;
+        counts.iter().map(|&c| c as f32 / total).collect()
+    }
+}
+
+impl SummaryEngine for PySummary {
+    fn name(&self) -> &'static str {
+        "P(y)"
+    }
+
+    fn dim(&self) -> usize {
+        self.spec.classes
+    }
+
+    fn summarize(
+        &self,
+        eng: &Engine,
+        ds: &ClientDataset,
+        _rng: &mut Rng,
+    ) -> Result<(Vec<f32>, f64)> {
+        if self.native {
+            let t0 = std::time::Instant::now();
+            let v = self.compute_native(ds);
+            return Ok((v, t0.elapsed().as_secs_f64()));
+        }
+        let bucket = self.spec.size_bucket_for(ds.n);
+        let n = ds.n.min(bucket);
+        // Pad labels to the bucket with the all-zero-one-hot convention.
+        let mut labels = Vec::with_capacity(bucket);
+        labels.extend_from_slice(&ds.labels[..n]);
+        labels.resize(bucket, u32::MAX);
+        let oh = one_hot(&labels, self.spec.classes);
+        let lit = lit_f32(&oh, &[bucket, self.spec.classes])?;
+        let (outs, dt) = eng.exec_timed(&self.artifact_for(ds.n), &[lit])?;
+        Ok((to_vec_f32(&outs[0])?, dt.as_secs_f64()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Generator, Partition};
+
+    fn setup() -> (DatasetSpec, ClientDataset) {
+        let spec = DatasetSpec::tiny();
+        let part = Partition::build(&spec);
+        let g = Generator::new(&spec);
+        (spec.clone(), g.client_dataset(&part.clients[0], 0))
+    }
+
+    #[test]
+    fn native_distribution_sums_to_one() {
+        let (spec, ds) = setup();
+        let py = PySummary::native(&spec);
+        let mut rng = Rng::new(0);
+        // Engine unused on the native path; create lazily only when artifacts exist.
+        let dir = Engine::default_dir();
+        if !dir.join("manifest.tsv").exists() {
+            return;
+        }
+        let eng = Engine::new(dir).unwrap();
+        let (v, secs) = py.summarize(&eng, &ds, &mut rng).unwrap();
+        assert_eq!(v.len(), spec.classes);
+        assert!((v.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn artifact_matches_native() {
+        let dir = Engine::default_dir();
+        if !dir.join("manifest.tsv").exists() {
+            return;
+        }
+        let (spec, ds) = setup();
+        let eng = Engine::new(dir).unwrap();
+        let mut rng = Rng::new(0);
+        let (xla_v, _) = PySummary::new(&spec).summarize(&eng, &ds, &mut rng).unwrap();
+        let (nat_v, _) = PySummary::native(&spec).summarize(&eng, &ds, &mut rng).unwrap();
+        for (a, b) in xla_v.iter().zip(&nat_v) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn artifact_name_uses_bucket() {
+        let spec = DatasetSpec::femnist();
+        let py = PySummary::new(&spec);
+        assert_eq!(py.artifact_for(100), "femnist_py_N256");
+        assert_eq!(py.artifact_for(2000), "femnist_py_N8192");
+    }
+}

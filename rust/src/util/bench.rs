@@ -1,0 +1,187 @@
+//! Micro-benchmark harness used by `rust/benches/*` (criterion is not
+//! available offline, so FedDDE carries a small equivalent: warm-up,
+//! adaptive iteration count, mean/std/min, and a stable report format that
+//! EXPERIMENTS.md quotes directly).
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+
+    /// `name  mean ± std  (min, iters)` — the line format benches print.
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12} ± {:<10} (min {:>12}, n={})",
+            self.name,
+            fmt_duration(self.mean),
+            fmt_duration(self.std),
+            fmt_duration(self.min),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per case.
+pub struct Bencher {
+    pub warmup: u32,
+    pub min_iters: u32,
+    pub max_iters: u32,
+    pub budget: Duration,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 50,
+            budget: Duration::from_secs(5),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(budget: Duration) -> Self {
+        Bencher { budget, ..Default::default() }
+    }
+
+    /// Run `f` repeatedly; returns (and records) the measurement.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Measurement {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::new();
+        let start = Instant::now();
+        while (times.len() < self.min_iters as usize)
+            || (times.len() < self.max_iters as usize && start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let n = times.len() as f64;
+        let mean = times.iter().sum::<f64>() / n;
+        let var = times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>() / n;
+        let m = Measurement {
+            name: name.to_string(),
+            iters: times.len() as u32,
+            mean: Duration::from_secs_f64(mean),
+            std: Duration::from_secs_f64(var.sqrt()),
+            min: Duration::from_secs_f64(times.iter().cloned().fold(f64::INFINITY, f64::min)),
+        };
+        println!("{}", m.report_line());
+        self.results.push(m.clone());
+        m
+    }
+
+    /// Measure a closure ONCE (for expensive cases like full clustering runs).
+    pub fn bench_once<F: FnOnce()>(&mut self, name: &str, f: F) -> Measurement {
+        let t0 = Instant::now();
+        f();
+        let d = t0.elapsed();
+        let m = Measurement {
+            name: name.to_string(),
+            iters: 1,
+            mean: d,
+            std: Duration::ZERO,
+            min: d,
+        };
+        println!("{}", m.report_line());
+        self.results.push(m.clone());
+        m
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+
+    /// Write results as TSV (name, mean_s, std_s, min_s, iters) for EXPERIMENTS.md.
+    pub fn write_tsv(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "# name\tmean_s\tstd_s\tmin_s\titers")?;
+        for m in &self.results {
+            writeln!(
+                f,
+                "{}\t{:.6}\t{:.6}\t{:.6}\t{}",
+                m.name,
+                m.mean.as_secs_f64(),
+                m.std.as_secs_f64(),
+                m.min.as_secs_f64(),
+                m.iters
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// Scale-aware quick/full switch shared by all benches: `FEDDDE_BENCH_FULL=1`
+/// runs paper-scale workloads; default is CI scale.
+pub fn full_scale() -> bool {
+    std::env::var("FEDDDE_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        let mut b = Bencher::new(Duration::from_millis(50));
+        let m = b.bench("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(m.iters >= 3);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn bench_once_single_iter() {
+        let mut b = Bencher::default();
+        let m = b.bench_once("sleep", || std::thread::sleep(Duration::from_millis(2)));
+        assert_eq!(m.iters, 1);
+        assert!(m.mean >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(Duration::from_secs(2)).ends_with(" s"));
+        assert!(fmt_duration(Duration::from_millis(5)).ends_with(" ms"));
+        assert!(fmt_duration(Duration::from_micros(5)).ends_with(" µs"));
+    }
+
+    #[test]
+    fn tsv_written() {
+        let mut b = Bencher::new(Duration::from_millis(10));
+        b.bench("x", || {});
+        let path = std::env::temp_dir().join("feddde_bench_test.tsv");
+        b.write_tsv(path.to_str().unwrap()).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.contains("x\t"));
+    }
+}

@@ -1,0 +1,154 @@
+//! Flat row-major f32 matrix used across clustering and summary code.
+//! Cache-friendly (one contiguous allocation) and cheap to hand to the PJRT
+//! runtime as a literal.
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "Mat::from_vec: size mismatch");
+        Mat { data, rows, cols }
+    }
+
+    pub fn from_rows(rows_data: &[Vec<f32>]) -> Self {
+        let rows = rows_data.len();
+        let cols = rows_data.first().map(|r| r.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in rows_data {
+            assert_eq!(r.len(), cols, "Mat::from_rows: ragged input");
+            data.extend_from_slice(r);
+        }
+        Mat { data, rows, cols }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols, "push_row: width mismatch");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Squared Euclidean distance between row `i` and an external vector.
+    #[inline]
+    pub fn sqdist_row(&self, i: usize, other: &[f32]) -> f64 {
+        sqdist(self.row(i), other)
+    }
+}
+
+/// Squared Euclidean distance between two slices.
+///
+/// Perf note (EXPERIMENTS.md §Perf): accumulation is f32 in 8 independent
+/// lanes (compiles to packed AVX FMAs), widened to f64 only at the final
+/// reduce. Pure-f64 accumulation halves SIMD width and serializes on the
+/// single accumulator's dependency chain; the f32 lanes lose no precision
+/// that matters for neighbour thresholding or centroid assignment (inputs
+/// are unit-scale summary features, dims <= ~400k).
+#[inline]
+pub fn sqdist(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut lanes = [0.0f32; 8];
+    let mut i = 0;
+    while i + 8 <= n {
+        // Independent accumulators -> no loop-carried dependency chain.
+        // (Plain d*d + add, NOT f32::mul_add: without -Ctarget-feature=+fma
+        // mul_add lowers to a libm call and is ~10x slower.)
+        for l in 0..8 {
+            let d = a[i + l] - b[i + l];
+            lanes[l] += d * d;
+        }
+        i += 8;
+    }
+    let mut acc = 0.0f64;
+    for l in lanes {
+        acc += l as f64;
+    }
+    while i < n {
+        let d = (a[i] - b[i]) as f64;
+        acc += d * d;
+        i += 1;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Mat::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn from_rows_matches_manual() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn push_row_grows() {
+        let mut m = Mat::zeros(0, 2);
+        m.push_row(&[1.0, 2.0]);
+        m.push_row(&[3.0, 4.0]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn sqdist_various_lengths() {
+        // exercises both the unrolled and the tail loop
+        for n in [1usize, 3, 4, 7, 8, 13] {
+            let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let b: Vec<f32> = (0..n).map(|i| (i + 1) as f32).collect();
+            assert_eq!(sqdist(&a, &b), n as f64);
+        }
+        assert_eq!(sqdist(&[], &[]), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_from_rows_panics() {
+        Mat::from_rows(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+}

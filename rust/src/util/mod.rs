@@ -1,0 +1,10 @@
+//! Support substrates FedDDE carries itself (this build environment has no
+//! crates.io network access): PRNG, statistics, parallelism, bench harness,
+//! property-testing helper.
+
+pub mod bench;
+pub mod mat;
+pub mod parallel;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

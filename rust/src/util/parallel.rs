@@ -1,0 +1,121 @@
+//! Minimal data-parallel substrate built on `std::thread::scope`.
+//!
+//! rayon is not available in this environment, so the clustering and summary
+//! engines use this: chunk an index range across worker threads, run a
+//! closure per chunk, and collect per-chunk outputs in order.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use (capped, respects `FEDDDE_THREADS`).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("FEDDDE_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Apply `f(start, end)` over `[0, n)` split into contiguous chunks, one per
+/// worker; returns the chunk results in chunk order.
+pub fn map_chunks<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 || n == 0 {
+        return vec![f(0, n)];
+    }
+    let chunk = n.div_ceil(threads);
+    let mut bounds = Vec::new();
+    let mut start = 0;
+    while start < n {
+        bounds.push((start, (start + chunk).min(n)));
+        start += chunk;
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = bounds
+            .iter()
+            .map(|&(lo, hi)| s.spawn(move || f(lo, hi)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+/// Parallel-for over `[0, n)` with dynamic work stealing via an atomic
+/// cursor; `f(i)` must be independent per index. Good for irregular work
+/// (e.g. per-client summary computation where client sizes vary 60x).
+pub fn for_each_dynamic<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = threads.clamp(1, n.max(1));
+    if threads <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn map_chunks_covers_range_in_order() {
+        let out = map_chunks(100, 7, |lo, hi| (lo, hi));
+        assert_eq!(out[0].0, 0);
+        assert_eq!(out.last().unwrap().1, 100);
+        for w in out.windows(2) {
+            assert_eq!(w[0].1, w[1].0); // contiguous
+        }
+    }
+
+    #[test]
+    fn map_chunks_single_thread_and_empty() {
+        assert_eq!(map_chunks(10, 1, |lo, hi| hi - lo), vec![10]);
+        assert_eq!(map_chunks(0, 4, |lo, hi| hi - lo), vec![0]);
+    }
+
+    #[test]
+    fn map_chunks_sums_match_serial() {
+        let n = 10_000usize;
+        let partial = map_chunks(n, 8, |lo, hi| (lo..hi).map(|i| i as u64).sum::<u64>());
+        let total: u64 = partial.iter().sum();
+        assert_eq!(total, (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn dynamic_visits_every_index_once() {
+        let n = 5000;
+        let sum = AtomicU64::new(0);
+        for_each_dynamic(n, 8, |i| {
+            sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (n as u64) * (n as u64 + 1) / 2);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,120 @@
+//! Tiny property-based-testing substrate (proptest is unavailable offline).
+//!
+//! `check(seed_cases, |g| ...)` runs a property over `seed_cases` generated
+//! inputs; on failure it reports the failing case index + seed so the run is
+//! reproducible (`FEDDDE_PROP_SEED=<seed>` pins the base seed). Coordinator
+//! invariants (routing, batching, clustering, selection) are tested with
+//! this in their modules and in `rust/tests/proptests.rs`.
+
+use crate::util::rng::Rng;
+
+/// Generator handle passed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len)
+            .map(|_| lo + (hi - lo) * self.rng.f32())
+            .collect()
+    }
+
+    /// A random hard clustering of `n` items into at most `k` labels, with
+    /// every label in [0, k) guaranteed non-empty when n >= k.
+    pub fn labels(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut out: Vec<usize> = (0..n).map(|_| self.usize_in(0, k - 1)).collect();
+        if n >= k {
+            for label in 0..k {
+                out[label] = label; // pin one of each
+            }
+            self.rng.shuffle(&mut out);
+        }
+        out
+    }
+}
+
+fn base_seed() -> u64 {
+    std::env::var("FEDDDE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xFEDD_DE00)
+}
+
+/// Run `property` over `cases` generated inputs. Panics (with the case seed)
+/// on the first failing case. The property signals failure by panicking.
+pub fn check<F: FnMut(&mut Gen)>(cases: usize, mut property: F) {
+    let seed = base_seed();
+    for case in 0..cases {
+        let rng = Rng::substream(seed, &[case as u64]);
+        let mut g = Gen { rng, case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            property(&mut g);
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed at case {case} (FEDDDE_PROP_SEED={seed}); \
+                 re-run with that env var to reproduce"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check(20, |g| {
+            let n = g.usize_in(1, 50);
+            let v = g.vec_f32(n, -1.0, 1.0);
+            assert_eq!(v.len(), n);
+            assert!(v.iter().all(|x| (-1.0..=1.0).contains(x)));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failure() {
+        check(5, |g| {
+            assert!(g.usize_in(0, 10) > 100, "always fails");
+        });
+    }
+
+    #[test]
+    fn labels_cover_all_k() {
+        check(10, |g| {
+            let k = g.usize_in(2, 6);
+            let n = g.usize_in(k, 50);
+            let labels = g.labels(n, k);
+            for want in 0..k {
+                assert!(labels.contains(&want));
+            }
+        });
+    }
+
+    #[test]
+    fn deterministic_per_case() {
+        let mut first = Vec::new();
+        check(3, |g| first.push(g.rng.next_u64()));
+        let mut second = Vec::new();
+        check(3, |g| second.push(g.rng.next_u64()));
+        assert_eq!(first, second);
+    }
+}

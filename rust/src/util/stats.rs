@@ -1,0 +1,215 @@
+//! Small statistics toolbox: summary stats for Table 2 style reporting and
+//! clustering-quality metrics (adjusted Rand index, silhouette).
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Maximum (0.0 for empty).
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max).max(0.0)
+}
+
+/// Linear-interpolated percentile, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Aggregate used all over the benches: (avg, max, p50, p95).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub avg: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub n: usize,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    Summary {
+        avg: mean(xs),
+        max: max(xs),
+        p50: percentile(xs, 50.0),
+        p95: percentile(xs, 95.0),
+        n: xs.len(),
+    }
+}
+
+/// Adjusted Rand Index between two hard clusterings (labels may use any ids).
+/// 1.0 = identical partitions, ~0.0 = random agreement.
+pub fn adjusted_rand_index(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len(), "ARI: length mismatch");
+    let n = a.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let ka = a.iter().max().unwrap() + 1;
+    let kb = b.iter().max().unwrap() + 1;
+    let mut table = vec![0u64; ka * kb];
+    let mut rows = vec![0u64; ka];
+    let mut cols = vec![0u64; kb];
+    for i in 0..n {
+        table[a[i] * kb + b[i]] += 1;
+        rows[a[i]] += 1;
+        cols[b[i]] += 1;
+    }
+    fn c2(x: u64) -> f64 {
+        (x as f64) * (x as f64 - 1.0) / 2.0
+    }
+    let sum_ij: f64 = table.iter().map(|&x| c2(x)).sum();
+    let sum_a: f64 = rows.iter().map(|&x| c2(x)).sum();
+    let sum_b: f64 = cols.iter().map(|&x| c2(x)).sum();
+    let total = c2(n as u64);
+    let expected = sum_a * sum_b / total;
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-12 {
+        return 1.0;
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+/// Mean silhouette coefficient over all points (brute force O(n^2 d);
+/// intended for test-scale inputs).
+pub fn silhouette(points: &[Vec<f32>], labels: &[usize]) -> f64 {
+    let n = points.len();
+    assert_eq!(n, labels.len());
+    if n < 2 {
+        return 0.0;
+    }
+    let k = labels.iter().max().unwrap() + 1;
+    let mut scores = Vec::with_capacity(n);
+    for i in 0..n {
+        // mean distance to every cluster
+        let mut dist_sum = vec![0.0f64; k];
+        let mut count = vec![0usize; k];
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let d = l2(&points[i], &points[j]);
+            dist_sum[labels[j]] += d;
+            count[labels[j]] += 1;
+        }
+        let own = labels[i];
+        if count[own] == 0 {
+            scores.push(0.0);
+            continue;
+        }
+        let a = dist_sum[own] / count[own] as f64;
+        let b = (0..k)
+            .filter(|&c| c != own && count[c] > 0)
+            .map(|c| dist_sum[c] / count[c] as f64)
+            .fold(f64::INFINITY, f64::min);
+        if !b.is_finite() {
+            scores.push(0.0);
+            continue;
+        }
+        scores.push((b - a) / a.max(b));
+    }
+    mean(&scores)
+}
+
+fn l2(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| {
+            let d = (*x - *y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        .sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((max(&xs) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!((std_dev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_slices_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(max(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        let s = summarize(&[]);
+        assert_eq!(s.n, 0);
+    }
+
+    #[test]
+    fn ari_identical_is_one() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-12);
+        // Label permutation doesn't matter.
+        let b = vec![2, 2, 0, 0, 1, 1];
+        assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_single_cluster_vs_split() {
+        let a = vec![0; 8];
+        let b = vec![0, 0, 0, 0, 1, 1, 1, 1];
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari.abs() < 1e-9, "ari={ari}"); // no information agreement
+    }
+
+    #[test]
+    fn ari_random_near_zero() {
+        let mut rng = crate::util::rng::Rng::new(13);
+        let a: Vec<usize> = (0..500).map(|_| rng.below(4) as usize).collect();
+        let b: Vec<usize> = (0..500).map(|_| rng.below(4) as usize).collect();
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari.abs() < 0.07, "ari={ari}");
+    }
+
+    #[test]
+    fn silhouette_separated_blobs_high() {
+        let mut rng = crate::util::rng::Rng::new(14);
+        let mut pts = Vec::new();
+        let mut labels = Vec::new();
+        for c in 0..2 {
+            for _ in 0..20 {
+                let base = if c == 0 { -5.0 } else { 5.0 };
+                pts.push(vec![
+                    (base + rng.normal() * 0.1) as f32,
+                    (base + rng.normal() * 0.1) as f32,
+                ]);
+                labels.push(c);
+            }
+        }
+        assert!(silhouette(&pts, &labels) > 0.9);
+    }
+}

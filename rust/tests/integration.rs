@@ -1,0 +1,227 @@
+//! Integration tests: the full pipeline across modules, always on the
+//! seconds-scale `tiny` artifacts. Skipped gracefully (early return) when
+//! `artifacts/` has not been built — `make test` always builds it first.
+
+use feddde::cluster::{dbscan, kmeans};
+use feddde::config::ExperimentConfig;
+use feddde::coordinator::{refresh_fleet, Coordinator};
+use feddde::data::{DatasetSpec, DriftSchedule, Generator, Partition};
+use feddde::device::FleetModel;
+use feddde::runtime::Engine;
+use feddde::summary::{EncoderSummary, PxySummary, PySummary, SummaryEngine};
+use feddde::util::rng::Rng;
+use feddde::util::stats;
+
+fn engine() -> Option<Engine> {
+    let dir = Engine::default_dir();
+    if dir.join("manifest.tsv").exists() {
+        Some(Engine::new(dir).expect("engine"))
+    } else {
+        eprintln!("artifacts missing; run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn summary_to_clustering_pipeline_recovers_groups() {
+    let Some(eng) = engine() else { return };
+    let spec = DatasetSpec::tiny();
+    let partition = Partition::build(&spec);
+    let generator = Generator::new(&spec);
+    let fleet = FleetModel::default().sample_fleet(spec.n_clients);
+    let se = EncoderSummary::new(&spec);
+    let r = refresh_fleet(
+        &eng,
+        &se,
+        &partition,
+        &generator,
+        &fleet,
+        &DriftSchedule::none(),
+        0,
+        spec.n_groups,
+        1,
+    )
+    .unwrap();
+    let ari = stats::adjusted_rand_index(&r.clusters, &partition.group_truth());
+    assert!(ari > 0.2, "pipeline ARI too low: {ari}");
+    // Summaries are finite and the right shape.
+    assert_eq!(r.summaries.rows(), spec.n_clients);
+    assert_eq!(r.summaries.cols(), spec.summary_dim());
+    for i in 0..r.summaries.rows() {
+        assert!(r.summaries.row(i).iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn all_three_summary_engines_execute_on_all_tiny_clients() {
+    let Some(eng) = engine() else { return };
+    let spec = DatasetSpec::tiny();
+    let partition = Partition::build(&spec);
+    let generator = Generator::new(&spec);
+    let engines: Vec<Box<dyn SummaryEngine>> = vec![
+        Box::new(PySummary::new(&spec)),
+        Box::new(PxySummary::new(&spec)),
+        Box::new(EncoderSummary::new(&spec)),
+    ];
+    for se in &engines {
+        for part in &partition.clients {
+            let ds = generator.client_dataset(part, 0);
+            let mut rng = Rng::new(part.client_id as u64);
+            let (v, secs) = se.summarize(&eng, &ds, &mut rng).unwrap();
+            assert_eq!(v.len(), se.dim(), "{} wrong dim", se.name());
+            assert!(v.iter().all(|x| x.is_finite()), "{} non-finite", se.name());
+            assert!(secs >= 0.0);
+        }
+    }
+}
+
+#[test]
+fn proposed_summary_separates_groups_better_than_py_alone() {
+    // The paper's qualitative claim: P(y) misses feature-level heterogeneity.
+    // Groups in our substrate differ in BOTH label priors and feature
+    // transforms, so encoder summaries should cluster at least as well.
+    let Some(eng) = engine() else { return };
+    let spec = DatasetSpec::tiny();
+    let partition = Partition::build(&spec);
+    let generator = Generator::new(&spec);
+    let truth = partition.group_truth();
+
+    let ari_of = |se: &dyn SummaryEngine| -> f64 {
+        let mut m = feddde::util::mat::Mat::zeros(0, se.dim());
+        for part in &partition.clients {
+            let ds = generator.client_dataset(part, 0);
+            let mut rng = Rng::new(part.client_id as u64);
+            m.push_row(&se.summarize(&eng, &ds, &mut rng).unwrap().0);
+        }
+        let balanced = feddde::cluster::balance_blocks(&m, &se.blocks());
+        let mut cfg = kmeans::KmeansConfig::new(spec.n_groups);
+        cfg.seed = 3;
+        stats::adjusted_rand_index(&kmeans::fit(&balanced, &cfg).assignments, &truth)
+    };
+    let enc = ari_of(&EncoderSummary::new(&spec));
+    let py = ari_of(&PySummary::new(&spec));
+    // tiny has only 24 clients, so ARI is high-variance; the margin here is
+    // a sanity floor. The femnist-scale comparison lives in
+    // benches/ablation_summary.rs where the gap is measured properly.
+    assert!(
+        enc >= py - 0.25,
+        "encoder summary ({enc:.3}) clusters much worse than P(y) ({py:.3})"
+    );
+}
+
+#[test]
+fn end_to_end_training_with_drift_and_refresh() {
+    let Some(_) = engine() else { return };
+    let cfg = ExperimentConfig {
+        dataset: "tiny".into(),
+        rounds: 10,
+        per_round: 4,
+        local_steps: 2,
+        lr: 0.2,
+        policy: "cluster".into(),
+        refresh_every: 4,
+        drift_rounds: vec![5],
+        drift_frac: 1.0,
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(cfg, Engine::open_default().unwrap()).unwrap();
+    let log = coord.run().unwrap();
+    assert_eq!(log.rounds.len(), 10);
+    assert!(log.rounds.iter().all(|r| r.train_loss.is_finite()));
+    // Training still works after the drift round.
+    let post = &log.rounds[9];
+    assert!(post.eval_accuracy >= 0.0 && post.eval_accuracy <= 1.0);
+}
+
+#[test]
+fn target_accuracy_stops_early() {
+    let Some(_) = engine() else { return };
+    let cfg = ExperimentConfig {
+        dataset: "tiny".into(),
+        rounds: 100,
+        per_round: 6,
+        local_steps: 4,
+        lr: 0.3,
+        policy: "random".into(),
+        target_accuracy: 0.5, // tiny converges fast past 0.5
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(cfg, Engine::open_default().unwrap()).unwrap();
+    let log = coord.run().unwrap();
+    assert!(
+        log.rounds.len() < 100,
+        "early stop never triggered ({} rounds, best {:.3})",
+        log.rounds.len(),
+        log.best_accuracy()
+    );
+}
+
+#[test]
+fn hlo_kmeans_step_agrees_with_rust_kmeans_assignment() {
+    // The L1 Pallas distance kernel (via the tiny_kmeans artifact) and the
+    // rust-native assignment must agree on which centroid each point gets.
+    let Some(eng) = engine() else { return };
+    let m = 64usize;
+    let d = DatasetSpec::tiny().summary_dim();
+    let k = 3usize;
+    let mut rng = Rng::new(5);
+    let pts: Vec<f32> = (0..m * d).map(|_| rng.f32()).collect();
+    let cents: Vec<f32> = pts[..k * d].to_vec();
+
+    let ins = [
+        feddde::runtime::lit_f32(&pts, &[m, d]).unwrap(),
+        feddde::runtime::lit_f32(&cents, &[k, d]).unwrap(),
+    ];
+    let outs = eng.exec("tiny_kmeans_M64K3", &ins).unwrap();
+    let hlo_assign = feddde::runtime::to_vec_i32(&outs[1]).unwrap();
+
+    let mat = feddde::util::mat::Mat::from_vec(pts, m, d);
+    let cmat = feddde::util::mat::Mat::from_vec(cents, k, d);
+    let (rust_assign, _) = kmeans::assign(&mat, &cmat, 2);
+    for i in 0..m {
+        assert_eq!(
+            hlo_assign[i] as usize, rust_assign[i],
+            "assignment mismatch at point {i}"
+        );
+    }
+}
+
+#[test]
+fn dbscan_over_pxy_summaries_runs() {
+    // The full HACCS baseline path: P(X|y) histograms -> DBSCAN.
+    let Some(eng) = engine() else { return };
+    let spec = DatasetSpec::tiny();
+    let partition = Partition::build(&spec);
+    let generator = Generator::new(&spec);
+    let se = PxySummary::new(&spec);
+    let mut m = feddde::util::mat::Mat::zeros(0, se.dim());
+    for part in &partition.clients {
+        let ds = generator.client_dataset(part, 0);
+        let mut rng = Rng::new(part.client_id as u64);
+        m.push_row(&se.summarize(&eng, &ds, &mut rng).unwrap().0);
+    }
+    let eps = dbscan::suggest_eps(&m, 3, 16);
+    let res = dbscan::fit(&m, &dbscan::DbscanConfig::new(eps * 1.5, 3));
+    assert_eq!(res.labels.len(), spec.n_clients);
+}
+
+#[test]
+fn metrics_files_are_written() {
+    let Some(_) = engine() else { return };
+    let dir = std::env::temp_dir().join("feddde_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("run.jsonl");
+    let cfg = ExperimentConfig {
+        dataset: "tiny".into(),
+        rounds: 3,
+        per_round: 3,
+        local_steps: 1,
+        ..Default::default()
+    };
+    let mut coord = Coordinator::new(cfg, Engine::open_default().unwrap()).unwrap();
+    coord.run().unwrap();
+    coord.log.write_jsonl(out.to_str().unwrap()).unwrap();
+    let text = std::fs::read_to_string(&out).unwrap();
+    assert_eq!(text.lines().count(), 3);
+    assert!(text.contains("\"eval_accuracy\""));
+}

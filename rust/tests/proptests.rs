@@ -1,0 +1,210 @@
+//! Cross-module property tests (the offline stand-in for proptest): fuzz
+//! coordinator-level invariants over generated fleets, datasets, and
+//! clusterings.
+
+use feddde::cluster::{dbscan, kmeans};
+use feddde::coordinator::fedavg::fedavg;
+use feddde::data::{coreset, DatasetSpec, Generator, Partition};
+use feddde::util::mat::Mat;
+use feddde::util::proptest::check;
+use feddde::util::rng::Rng;
+use feddde::util::stats;
+
+#[test]
+fn coreset_label_counts_never_exceed_client_counts() {
+    check(20, |g| {
+        let spec = DatasetSpec::tiny();
+        let partition = Partition::build(&spec);
+        let generator = Generator::new(&spec);
+        let part = &partition.clients[g.usize_in(0, partition.clients.len() - 1)];
+        let ds = generator.client_dataset(part, 0);
+        let k = g.usize_in(1, 48);
+        let mut rng = Rng::new(g.case as u64);
+        let idxs = coreset::coreset_indices(&ds, spec.classes, k, &mut rng);
+        assert_eq!(idxs.len(), k.min(ds.n));
+        let full = ds.label_counts(spec.classes);
+        let mut sel = vec![0usize; spec.classes];
+        for &i in &idxs {
+            sel[ds.labels[i] as usize] += 1;
+        }
+        for c in 0..spec.classes {
+            assert!(sel[c] <= full[c], "class {c}: coreset {} > client {}", sel[c], full[c]);
+        }
+    });
+}
+
+#[test]
+fn coreset_proportions_approximate_client_distribution() {
+    check(10, |g| {
+        let spec = DatasetSpec::tiny();
+        let partition = Partition::build(&spec);
+        let generator = Generator::new(&spec);
+        let part = &partition.clients[g.usize_in(0, partition.clients.len() - 1)];
+        let ds = generator.client_dataset(part, 0);
+        if ds.n < 16 {
+            return;
+        }
+        let k = 16usize;
+        let mut rng = Rng::new(g.case as u64 + 100);
+        let idxs = coreset::coreset_indices(&ds, spec.classes, k, &mut rng);
+        let full = ds.label_counts(spec.classes);
+        let mut sel = vec![0usize; spec.classes];
+        for &i in &idxs {
+            sel[ds.labels[i] as usize] += 1;
+        }
+        for c in 0..spec.classes {
+            let want = k as f64 * full[c] as f64 / ds.n as f64;
+            assert!(
+                (sel[c] as f64 - want).abs() <= 1.0 + 1e-9,
+                "class {c}: coreset {} vs quota {want:.2}",
+                sel[c]
+            );
+        }
+    });
+}
+
+#[test]
+fn one_hot_rows_sum_to_mask() {
+    check(20, |g| {
+        let classes = g.usize_in(2, 10);
+        let n = g.usize_in(1, 64);
+        let labels: Vec<u32> = (0..n)
+            .map(|_| {
+                if g.bool() {
+                    g.usize_in(0, classes - 1) as u32
+                } else {
+                    u32::MAX // padding
+                }
+            })
+            .collect();
+        let oh = coreset::one_hot(&labels, classes);
+        for (i, &l) in labels.iter().enumerate() {
+            let row_sum: f32 = oh[i * classes..(i + 1) * classes].iter().sum();
+            let want = if l == u32::MAX { 0.0 } else { 1.0 };
+            assert_eq!(row_sum, want);
+        }
+    });
+}
+
+#[test]
+fn fedavg_of_identical_updates_is_identity() {
+    check(15, |g| {
+        let d = g.usize_in(1, 64);
+        let p = g.vec_f32(d, -3.0, 3.0);
+        let n = g.usize_in(1, 6);
+        let updates: Vec<(Vec<f32>, f64)> =
+            (0..n).map(|i| (p.clone(), (i + 1) as f64)).collect();
+        let avg = fedavg(&updates).unwrap();
+        for j in 0..d {
+            assert!((avg[j] - p[j]).abs() < 1e-5);
+        }
+    });
+}
+
+#[test]
+fn kmeans_inertia_no_worse_than_random_assignment() {
+    check(10, |g| {
+        let n = g.usize_in(12, 60);
+        let d = g.usize_in(1, 6);
+        let k = g.usize_in(2, 4);
+        let mut m = Mat::zeros(0, d);
+        for _ in 0..n {
+            m.push_row(&g.vec_f32(d, -4.0, 4.0));
+        }
+        let mut cfg = kmeans::KmeansConfig::new(k);
+        cfg.seed = g.case as u64;
+        let res = kmeans::fit(&m, &cfg);
+        // Random-centroid inertia (first k points, no iterations):
+        let cents = Mat::from_vec(
+            (0..k).flat_map(|i| m.row(i).to_vec()).collect(),
+            k,
+            d,
+        );
+        let (_, random_inertia) = kmeans::assign(&m, &cents, 1);
+        assert!(
+            res.inertia <= random_inertia + 1e-6,
+            "fit ({}) worse than trivial init ({})",
+            res.inertia,
+            random_inertia
+        );
+    });
+}
+
+#[test]
+fn dbscan_clusters_are_eps_connected() {
+    // Every point in a cluster must be within eps of SOME other point of the
+    // same cluster (for clusters of size >= 2) — the density-connectivity
+    // invariant.
+    check(8, |g| {
+        let n = g.usize_in(10, 50);
+        let d = g.usize_in(1, 4);
+        let eps = g.f64_in(0.3, 2.0);
+        let mut m = Mat::zeros(0, d);
+        for _ in 0..n {
+            m.push_row(&g.vec_f32(d, 0.0, 5.0));
+        }
+        let res = dbscan::fit(&m, &dbscan::DbscanConfig::new(eps, 3));
+        for i in 0..n {
+            if res.labels[i] == dbscan::NOISE {
+                continue;
+            }
+            let mut size = 0;
+            let mut connected = false;
+            for j in 0..n {
+                if j != i && res.labels[j] == res.labels[i] {
+                    size += 1;
+                    if feddde::util::mat::sqdist(m.row(i), m.row(j)).sqrt() <= eps + 1e-9 {
+                        connected = true;
+                    }
+                }
+            }
+            if size >= 1 {
+                assert!(connected, "point {i} isolated within its cluster");
+            }
+        }
+    });
+}
+
+#[test]
+fn ari_is_symmetric_and_bounded() {
+    check(15, |g| {
+        let n = g.usize_in(4, 80);
+        let k = g.usize_in(1, 5.min(n));
+        let a = g.labels(n, k);
+        let b = g.labels(n, k);
+        let ab = stats::adjusted_rand_index(&a, &b);
+        let ba = stats::adjusted_rand_index(&b, &a);
+        assert!((ab - ba).abs() < 1e-9, "ARI not symmetric");
+        assert!(ab <= 1.0 + 1e-9, "ARI > 1");
+        assert!((stats::adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-9);
+    });
+}
+
+#[test]
+fn partition_statistics_track_spec_across_seeds() {
+    check(5, |g| {
+        let mut spec = DatasetSpec::femnist().with_clients(600);
+        spec.seed = g.case as u64 * 7919 + 13;
+        let p = Partition::build(&spec);
+        let (avg, _std, max) = p.sample_stats();
+        assert!(max <= spec.samples_max);
+        assert!(avg > spec.samples_avg * 0.5 && avg < spec.samples_avg * 2.0);
+        // group ids are always < n_groups
+        assert!(p.clients.iter().all(|c| c.group < spec.n_groups));
+    });
+}
+
+#[test]
+fn generator_rejects_nothing_and_stays_in_range() {
+    check(8, |g| {
+        let spec = DatasetSpec::tiny();
+        let partition = Partition::build(&spec);
+        let generator = Generator::new(&spec);
+        let part = &partition.clients[g.usize_in(0, partition.clients.len() - 1)];
+        let phase = g.usize_in(0, 3) as u64;
+        let ds = generator.client_dataset(part, phase);
+        assert_eq!(ds.images.len(), ds.n * spec.flat_dim());
+        assert!(ds.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(ds.labels.iter().all(|&l| (l as usize) < spec.classes));
+    });
+}
