@@ -14,7 +14,7 @@
 
 use anyhow::Result;
 
-use feddde::cluster::{dbscan, kmeans};
+use feddde::cluster::{dbscan, kmeans, minibatch};
 use feddde::data::{DatasetSpec, Generator, Partition};
 use feddde::device::FleetModel;
 use feddde::runtime::Engine;
@@ -110,16 +110,30 @@ fn dbscan_time(points: &Mat, full_n: usize) -> ClusterRow {
     ClusterRow { secs, extrapolated, label: "DBSCAN" }
 }
 
-fn kmeans_time(points: &Mat, k: usize, full_n: usize) -> ClusterRow {
+fn kmeans_time(points: &Mat, k: usize, full_n: usize) -> (ClusterRow, Vec<usize>) {
     let mut cfg = kmeans::KmeansConfig::new(k.min(points.rows()));
     cfg.seed = 5;
     let t0 = std::time::Instant::now();
-    let _ = kmeans::fit(points, &cfg);
+    let assignments = kmeans::fit(points, &cfg).assignments;
     let secs = t0.elapsed().as_secs_f64();
     let n = points.rows();
     let extrapolated =
         if full_n > n { Some(secs * full_n as f64 / n as f64) } else { None }; // Lloyd is Theta(N K D I)
-    ClusterRow { secs, extrapolated, label: "K-means" }
+    (ClusterRow { secs, extrapolated, label: "K-means" }, assignments)
+}
+
+fn minibatch_time(points: &Mat, k: usize, full_n: usize) -> (ClusterRow, Vec<usize>) {
+    let mut cfg = minibatch::MinibatchConfig::new(k.min(points.rows()));
+    cfg.seed = 5;
+    let t0 = std::time::Instant::now();
+    let assignments = minibatch::fit(points, &cfg).assignments;
+    let secs = t0.elapsed().as_secs_f64();
+    let n = points.rows();
+    // Iterations are Theta(B K D) regardless of N; only the final full
+    // assignment scales with N — extrapolate that part linearly.
+    let extrapolated =
+        if full_n > n { Some(secs * full_n as f64 / n as f64) } else { None };
+    (ClusterRow { secs, extrapolated, label: "mini-batch" }, assignments)
 }
 
 fn fmt_cluster(r: &ClusterRow) -> String {
@@ -186,7 +200,7 @@ fn report(name: &str, full: bool) -> Result<()> {
     // Encoder+Kmeans (proposed).
     let t_enc = summary_times(&engine, &enc, &partition, &generator, &fleet, sample)?;
     let m_enc = gather(&engine, &enc, &partition, &generator, spec.n_clients)?;
-    let c_enc = kmeans_time(&m_enc, spec.n_groups, full_clients);
+    let (c_enc, enc_labels) = kmeans_time(&m_enc, spec.n_groups, full_clients);
     println!(
         "{:<16} {:>14.4} {:>14.4}   {} ({}, dim {})",
         enc.name(),
@@ -195,6 +209,16 @@ fn report(name: &str, full: bool) -> Result<()> {
         fmt_cluster(&c_enc),
         c_enc.label,
         enc.dim()
+    );
+
+    // Mini-batch backend over the same encoder summaries — what the refresh
+    // pipeline's `auto` backend picks at fleet scale (`--cluster-backend`).
+    let (c_mb, mb_labels) = minibatch_time(&m_enc, spec.n_groups, full_clients);
+    let ari_delta = stats::adjusted_rand_index(&enc_labels, &partition.group_truth())
+        - stats::adjusted_rand_index(&mb_labels, &partition.group_truth());
+    println!(
+        "{:<16} {:>14} {:>14}   {} ({}, ARI delta vs K-means {:.3})",
+        "  (minibatch)", "-", "-", fmt_cluster(&c_mb), c_mb.label, ari_delta
     );
 
     // E4: headline ratios.

@@ -1,0 +1,72 @@
+"""Offline stand-in for the `hypothesis` API surface these tests use.
+
+The real hypothesis is preferred when installed (the test modules try it
+first); this fallback keeps the property sweeps running in environments
+without it by drawing a fixed number of deterministic pseudo-random examples
+per test. Supported: ``given`` with keyword strategies, ``settings`` with
+``max_examples``/``deadline``, ``strategies.integers`` and
+``strategies.sampled_from``.
+"""
+
+import random
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 - mimics the `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: rng.choice(options))
+
+
+st = strategies
+
+
+def given(**strategy_kwargs):
+    """Run the test once per generated example (deterministic per test name)."""
+
+    def decorator(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for case in range(n):
+                rng = random.Random(f"{fn.__module__}.{fn.__qualname__}:{case}")
+                draw = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **draw, **kwargs)
+                except Exception as e:  # pragma: no cover - failure path
+                    raise AssertionError(
+                        f"property failed on stub example {case}: {draw!r}"
+                    ) from e
+
+        # No functools.wraps: pytest would follow __wrapped__ to the original
+        # signature and demand the property arguments as fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._stub_max_examples = _DEFAULT_MAX_EXAMPLES
+        return wrapper
+
+    return decorator
+
+
+def settings(max_examples=None, deadline=None, **_ignored):
+    """Record max_examples on the given-wrapped function; deadline ignored."""
+
+    def decorator(fn):
+        if max_examples is not None:
+            fn._stub_max_examples = max_examples
+        return fn
+
+    return decorator

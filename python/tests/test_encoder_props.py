@@ -5,7 +5,11 @@ padding neutrality) across random configurations."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline image: fall back to the deterministic stub
+    from _hypothesis_stub import given, settings, strategies as st
 
 from compile import encoder as enc
 from compile import model

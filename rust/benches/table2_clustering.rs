@@ -9,13 +9,14 @@
 //! observation — ">64 GB"); those points are measured at a memory cap and
 //! extrapolated with DBSCAN's Theta(N^2 D) law, printed explicitly.
 
-use feddde::cluster::{dbscan, kmeans};
+use feddde::cluster::{dbscan, kmeans, minibatch};
 use feddde::data::{DatasetSpec, Generator, Partition};
 use feddde::runtime::Engine;
 use feddde::summary::{EncoderSummary, PxySummary, PySummary, SummaryEngine};
 use feddde::util::bench::{full_scale, Bencher};
 use feddde::util::mat::Mat;
 use feddde::util::rng::Rng;
+use feddde::util::stats;
 
 fn gather(spec: &DatasetSpec, se: &dyn SummaryEngine, engine: &Engine, cap: usize) -> Mat {
     let partition = Partition::build(spec);
@@ -30,11 +31,77 @@ fn gather(spec: &DatasetSpec, se: &dyn SummaryEngine, engine: &Engine, cap: usiz
     m
 }
 
+/// Lloyd vs warm-started mini-batch at fleet scale: synthetic group-
+/// structured summaries (no artifacts needed), n_clients >= 1000 — the
+/// ISSUE-2 acceptance line: mini-batch beats Lloyd's wall clock while
+/// keeping ARI within 0.1.
+fn bench_minibatch_vs_lloyd(b: &mut Bencher) {
+    let sizes: &[usize] = if full_scale() { &[1000, 4000, 16000] } else { &[1000, 4000] };
+    for &n in sizes {
+        let k = 8usize;
+        let d = 128usize;
+        // Planted groups: k well-separated Gaussian blobs in d dims.
+        let mut rng = Rng::new(3);
+        let mut centers = Vec::with_capacity(k);
+        for _ in 0..k {
+            let c: Vec<f32> = (0..d).map(|_| (rng.normal() * 4.0) as f32).collect();
+            centers.push(c);
+        }
+        let mut pts = Mat::zeros(0, d);
+        let mut truth = Vec::with_capacity(n);
+        for i in 0..n {
+            let g = i % k;
+            let row: Vec<f32> = centers[g]
+                .iter()
+                .map(|&c| c + rng.normal() as f32)
+                .collect();
+            pts.push_row(&row);
+            truth.push(g);
+        }
+
+        let mut lcfg = kmeans::KmeansConfig::new(k);
+        lcfg.seed = 5;
+        let mut lloyd_assign = Vec::new();
+        let ml = b.bench_once(&format!("lloyd/N{n}xD{d}K{k}"), || {
+            lloyd_assign = kmeans::fit(&pts, &lcfg).assignments;
+        });
+
+        let mut mcfg = minibatch::MinibatchConfig::new(k);
+        mcfg.seed = 5;
+        let mut mb_assign = Vec::new();
+        let mm = b.bench_once(&format!("minibatch/N{n}xD{d}K{k}"), || {
+            mb_assign = minibatch::fit(&pts, &mcfg).assignments;
+        });
+
+        let ari_l = stats::adjusted_rand_index(&lloyd_assign, &truth);
+        let ari_m = stats::adjusted_rand_index(&mb_assign, &truth);
+        println!(
+            "    -> N={n}: minibatch {:.2}x faster than Lloyd (ARI {ari_m:.3} vs {ari_l:.3}, \
+             delta {:.3}; target: faster at N>=1000, ARI within 0.1)",
+            ml.mean_secs() / mm.mean_secs().max(1e-9),
+            ari_l - ari_m
+        );
+    }
+}
+
 fn main() {
     println!("table2_clustering — clustering time vs summary family\n");
-    let engine = Engine::open_default().expect("artifacts missing: run `make artifacts`");
     let mut b = Bencher::new(std::time::Duration::from_secs(10));
     std::fs::create_dir_all("results").ok();
+
+    println!("mini-batch vs Lloyd at fleet scale (synthetic planted groups):");
+    bench_minibatch_vs_lloyd(&mut b);
+    println!();
+
+    let engine = match Engine::open_default() {
+        Ok(e) if Engine::runtime_available() => e,
+        _ => {
+            println!("(skipping summary-family section: AOT bundle or PJRT backend missing)");
+            b.write_tsv("results/table2_clustering.tsv").unwrap();
+            println!("wrote results/table2_clustering.tsv");
+            return;
+        }
+    };
 
     for name in ["femnist", "openimage"] {
         let preset = DatasetSpec::by_name(name).unwrap();

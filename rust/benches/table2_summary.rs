@@ -1,5 +1,8 @@
 //! Bench E2 — Table 2 left half: per-client summary-computation time for
-//! P(y), P(X|y), and the proposed Encoder summary on both dataset families.
+//! P(y), P(X|y), and the proposed Encoder summary on both dataset families,
+//! plus the fleet-refresh parallel-scaling section (host seconds to refresh
+//! a 1000-client fleet at 1 thread vs all cores — the ISSUE-2 acceptance
+//! line: >= 2x reduction on a multi-core host).
 //!
 //!     cargo bench --bench table2_summary          # CI scale
 //!     FEDDDE_BENCH_FULL=1 cargo bench ...         # paper-scale fleets
@@ -7,11 +10,17 @@
 //! Reports host kernel time per client workload size (the simulator scales
 //! these by device factors; see examples/overhead_report.rs for the full
 //! Table 2 with fleet simulation). Results land in results/table2_summary.tsv.
+//! The per-client artifact section needs the AOT bundle; the refresh section
+//! runs everywhere (pure-Rust JL engine).
 
-use feddde::data::{DatasetSpec, Generator, Partition};
+use feddde::cluster::ClusterBackend;
+use feddde::coordinator::{FleetRefresher, RefreshOptions};
+use feddde::data::{DatasetSpec, DriftSchedule, Generator, Partition};
+use feddde::device::FleetModel;
 use feddde::runtime::Engine;
-use feddde::summary::{EncoderSummary, PxySummary, PySummary, SummaryEngine};
+use feddde::summary::{EncoderSummary, JlSummary, PxySummary, PySummary, SummaryEngine};
 use feddde::util::bench::{full_scale, Bencher};
+use feddde::util::parallel::default_threads;
 use feddde::util::rng::Rng;
 
 fn bench_dataset(b: &mut Bencher, name: &str) {
@@ -51,11 +60,79 @@ fn bench_dataset(b: &mut Bencher, name: &str) {
     }
 }
 
+/// Fleet-refresh scaling: serial vs parallel summarization of a 1000-client
+/// fleet through the refresh subsystem (JL engine: pure Rust, runs without
+/// artifacts; the parallel structure is identical for artifact engines).
+fn bench_fleet_refresh(b: &mut Bencher) {
+    let n = if full_scale() { 2800 } else { 1000 };
+    let spec = DatasetSpec::femnist().with_clients(n);
+    let partition = Partition::build(&spec);
+    let generator = Generator::new(&spec);
+    let fleet = FleetModel::default().sample_fleet(spec.n_clients);
+    let engine = Engine::without_artifacts().expect("manifest-free engine");
+    let jl = JlSummary::new(&spec);
+    let drift = DriftSchedule::none();
+
+    let mut host_secs = Vec::new();
+    for threads in [1usize, default_threads()] {
+        let mut refresher = FleetRefresher::new(RefreshOptions {
+            threads,
+            backend: ClusterBackend::Minibatch,
+            use_cache: false,
+            ..Default::default()
+        });
+        let mut last = 0.0;
+        b.bench_once(&format!("refresh_fleet/jl/N{n}/threads{threads}"), || {
+            let r = refresher
+                .refresh(
+                    &engine, &jl, &partition, &generator, &fleet, &drift, 0,
+                    spec.n_groups, 7,
+                )
+                .expect("refresh");
+            last = r.host_secs;
+            std::hint::black_box(r.summaries.rows());
+        });
+        host_secs.push(last);
+    }
+    if host_secs.len() == 2 && host_secs[1] > 0.0 {
+        println!(
+            "    -> refresh host-seconds speedup at {} threads: {:.2}x (target >= 2x)",
+            default_threads(),
+            host_secs[0] / host_secs[1]
+        );
+    }
+
+    // Incremental refresh: steady-state cost with the summary cache on.
+    let mut cached = FleetRefresher::new(RefreshOptions {
+        backend: ClusterBackend::Minibatch,
+        ..Default::default()
+    });
+    cached
+        .refresh(&engine, &jl, &partition, &generator, &fleet, &drift, 0, spec.n_groups, 7)
+        .expect("cold refresh");
+    b.bench(&format!("refresh_fleet/jl/N{n}/cached_no_drift"), || {
+        let r = cached
+            .refresh(&engine, &jl, &partition, &generator, &fleet, &drift, 1, spec.n_groups, 7)
+            .expect("cached refresh");
+        assert!(r.recomputed.is_empty());
+        std::hint::black_box(r.clusters.len());
+    });
+}
+
 fn main() {
     println!("table2_summary — per-client summary time (host kernel seconds)\n");
     let mut b = Bencher::new(std::time::Duration::from_secs(3));
-    bench_dataset(&mut b, "femnist");
-    bench_dataset(&mut b, "openimage");
+    match Engine::open_default() {
+        Ok(_) if Engine::runtime_available() => {
+            bench_dataset(&mut b, "femnist");
+            bench_dataset(&mut b, "openimage");
+        }
+        _ => println!(
+            "(skipping per-client artifact section: AOT bundle or PJRT backend missing)\n"
+        ),
+    }
+    println!("fleet refresh scaling (pure-Rust JL engine):");
+    bench_fleet_refresh(&mut b);
     std::fs::create_dir_all("results").ok();
     b.write_tsv("results/table2_summary.tsv").unwrap();
     println!("\nwrote results/table2_summary.tsv");

@@ -62,12 +62,18 @@ pub fn kmeanspp_init(points: &Mat, k: usize, rng: &mut Rng) -> Mat {
 }
 
 /// Assign each point to its nearest centroid; returns (assignments, inertia).
+///
+/// The inertia is reduced serially in point order from per-point values, NOT
+/// from per-chunk partial sums: f64 addition is non-associative, so chunked
+/// partials would make the total (and anything derived from it, like Lloyd's
+/// convergence round) depend on the thread count. This keeps the whole
+/// clustering pipeline bitwise thread-count invariant.
 pub fn assign(points: &Mat, centroids: &Mat, threads: usize) -> (Vec<usize>, f64) {
     let n = points.rows();
     let k = centroids.rows();
     let chunks = map_chunks(n, threads, |lo, hi| {
         let mut a = Vec::with_capacity(hi - lo);
-        let mut inertia = 0.0f64;
+        let mut d2 = Vec::with_capacity(hi - lo);
         for i in lo..hi {
             let row = points.row(i);
             let mut best = 0usize;
@@ -80,15 +86,17 @@ pub fn assign(points: &Mat, centroids: &Mat, threads: usize) -> (Vec<usize>, f64
                 }
             }
             a.push(best);
-            inertia += best_d;
+            d2.push(best_d);
         }
-        (a, inertia)
+        (a, d2)
     });
     let mut assignments = Vec::with_capacity(n);
-    let mut inertia = 0.0;
-    for (a, i) in chunks {
+    let mut inertia = 0.0f64;
+    for (a, d2) in chunks {
         assignments.extend(a);
-        inertia += i;
+        for d in d2 {
+            inertia += d;
+        }
     }
     (assignments, inertia)
 }

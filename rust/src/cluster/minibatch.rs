@@ -1,0 +1,321 @@
+//! Mini-batch K-means (Sculley 2010, "Web-scale k-means clustering") with
+//! warm-started centroids — the fleet-scale clustering backend the refresh
+//! pipeline selects for large fleets (config `cluster_backend`, see
+//! `coordinator::summaries`).
+//!
+//! Per iteration the engine samples a deterministic mini-batch, assigns it
+//! to the nearest centroids, and moves each hit centroid toward its batch
+//! points with a per-centroid learning rate `1/count`. Cost per iteration is
+//! `Θ(B·K·D)` versus Lloyd's `Θ(N·K·D)`, which is what makes million-client
+//! fleets tractable; the survey in PAPERS.md (arXiv 2211.01549) names this
+//! the standard remedy at fleet scale.
+//!
+//! Warm starts: a [`WarmState`] (centroids + per-centroid counts) carried
+//! from the previous refresh both seeds the centroids and keeps the learning
+//! rates small, so a refresh after little drift converges in a handful of
+//! iterations (tested in `warm_start_converges_faster`).
+//!
+//! Determinism: the batch schedule is a pure function of `cfg.seed`, centroid
+//! updates are applied serially in batch order, and the final full-fleet
+//! assignment uses the chunk-deterministic `kmeans::assign`. Output is
+//! therefore bitwise identical for any `threads` setting.
+
+use crate::cluster::kmeans::{assign, kmeanspp_init, KmeansResult};
+use crate::util::mat::Mat;
+use crate::util::parallel::default_threads;
+use crate::util::rng::Rng;
+
+/// Fleet sizes below this use full Lloyd's under the `auto` backend: the
+/// exact solve is already fast, and mini-batch sampling noise buys nothing.
+pub const MINIBATCH_AUTO_THRESHOLD: usize = 512;
+
+/// Mini-batch K-means configuration.
+#[derive(Debug, Clone)]
+pub struct MinibatchConfig {
+    pub k: usize,
+    /// Mini-batch size (capped at n).
+    pub batch: usize,
+    pub max_iters: usize,
+    /// Stop once the summed squared centroid movement of an iteration falls
+    /// below this (absolute; summaries are block-balanced to ~unit scale).
+    pub tol: f64,
+    pub seed: u64,
+    /// Threads for the final full-fleet assignment pass.
+    pub threads: usize,
+    /// Re-seed a centroid that attracted no batch point for this many
+    /// consecutive iterations (empty-cluster repair).
+    pub reseed_after: usize,
+    /// Sample size for the cold-start k-means++ init (capped at n).
+    pub init_sample: usize,
+}
+
+impl MinibatchConfig {
+    pub fn new(k: usize) -> Self {
+        MinibatchConfig {
+            k,
+            batch: 256,
+            max_iters: 100,
+            tol: 1e-3,
+            seed: 0,
+            threads: default_threads(),
+            reseed_after: 10,
+            init_sample: 2048,
+        }
+    }
+}
+
+/// Centroids + per-centroid sample counts carried between refreshes.
+#[derive(Debug, Clone)]
+pub struct WarmState {
+    pub centroids: Mat,
+    pub counts: Vec<u64>,
+}
+
+impl WarmState {
+    /// Usable only if the geometry still matches the request.
+    fn matches(&self, k: usize, dim: usize) -> bool {
+        self.centroids.rows() == k
+            && self.centroids.cols() == dim
+            && self.counts.len() == k
+    }
+}
+
+/// Cold-start fit.
+pub fn fit(points: &Mat, cfg: &MinibatchConfig) -> KmeansResult {
+    fit_warm(points, cfg, None).result
+}
+
+/// Result of a warm-startable fit: the clustering plus the state to carry
+/// into the next refresh.
+pub struct MinibatchFit {
+    pub result: KmeansResult,
+    pub warm: WarmState,
+}
+
+/// Fit with optional warm state from a previous refresh. A warm state whose
+/// geometry no longer matches (k or dim changed) is ignored.
+pub fn fit_warm(points: &Mat, cfg: &MinibatchConfig, warm: Option<&WarmState>) -> MinibatchFit {
+    let n = points.rows();
+    let d = points.cols();
+    assert!(n >= cfg.k, "minibatch kmeans: fewer points than clusters");
+    assert!(cfg.k > 0, "minibatch kmeans: k must be positive");
+    let mut rng = Rng::substream(cfg.seed, &[0x3B17]);
+
+    let (mut centroids, mut counts) = match warm {
+        Some(w) if w.matches(cfg.k, d) => (w.centroids.clone(), w.counts.clone()),
+        _ => {
+            // Cold start: k-means++ on a deterministic subsample.
+            let m = cfg.init_sample.clamp(cfg.k, n);
+            let idx = rng.sample_indices(n, m);
+            let mut sample = Mat::zeros(0, d);
+            for &i in &idx {
+                sample.push_row(points.row(i));
+            }
+            (kmeanspp_init(&sample, cfg.k, &mut rng), vec![0u64; cfg.k])
+        }
+    };
+
+    let batch = cfg.batch.clamp(1, n);
+    let mut starved = vec![0usize; cfg.k];
+    let mut iters = 0;
+    for it in 0..cfg.max_iters {
+        iters = it + 1;
+        let idx = rng.sample_indices(n, batch);
+        let mut moved = 0.0f64;
+        let mut hit = vec![false; cfg.k];
+        for &i in &idx {
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for c in 0..cfg.k {
+                let dist = points.sqdist_row(i, centroids.row(c));
+                if dist < best_d {
+                    best_d = dist;
+                    best = c;
+                }
+            }
+            counts[best] += 1;
+            hit[best] = true;
+            let eta = 1.0 / counts[best] as f64;
+            let point = points.row(i);
+            let cent = centroids.row_mut(best);
+            for (cv, &pv) in cent.iter_mut().zip(point) {
+                let delta = eta * (pv as f64 - *cv as f64);
+                *cv = (*cv as f64 + delta) as f32;
+                moved += delta * delta;
+            }
+        }
+        // Empty-cluster repair: a centroid nobody has hit for a while is
+        // dead weight — re-seed it on a random point with a fresh (fast)
+        // learning rate.
+        for c in 0..cfg.k {
+            if hit[c] {
+                starved[c] = 0;
+            } else {
+                starved[c] += 1;
+                if starved[c] >= cfg.reseed_after.max(1) {
+                    let j = rng.below(n as u64) as usize;
+                    let row = points.row(j).to_vec();
+                    centroids.row_mut(c).copy_from_slice(&row);
+                    counts[c] = 0;
+                    starved[c] = 0;
+                }
+            }
+        }
+        if moved < cfg.tol {
+            break;
+        }
+    }
+
+    let (assignments, inertia) = assign(points, &centroids, cfg.threads.max(1));
+    MinibatchFit {
+        warm: WarmState { centroids: centroids.clone(), counts },
+        result: KmeansResult { centroids, assignments, inertia, iters },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::kmeans::{self, KmeansConfig};
+    use crate::util::stats::adjusted_rand_index;
+
+    fn blobs(n_per: usize, centers: &[(f32, f32)], spread: f32, seed: u64) -> (Mat, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut m = Mat::zeros(0, 2);
+        let mut truth = Vec::new();
+        for (g, &(cx, cy)) in centers.iter().enumerate() {
+            for _ in 0..n_per {
+                m.push_row(&[
+                    cx + spread * rng.normal() as f32,
+                    cy + spread * rng.normal() as f32,
+                ]);
+                truth.push(g);
+            }
+        }
+        (m, truth)
+    }
+
+    #[test]
+    fn recovers_blobs_close_to_lloyds() {
+        let (pts, truth) = blobs(400, &[(0.0, 0.0), (10.0, 10.0), (-10.0, 10.0)], 0.8, 1);
+        let mut cfg = MinibatchConfig::new(3);
+        cfg.seed = 2;
+        let mb = fit(&pts, &cfg);
+        let mut lcfg = KmeansConfig::new(3);
+        lcfg.seed = 2;
+        let lloyd = kmeans::fit(&pts, &lcfg);
+        let ari_mb = adjusted_rand_index(&mb.assignments, &truth);
+        let ari_ll = adjusted_rand_index(&lloyd.assignments, &truth);
+        assert!(
+            ari_mb >= ari_ll - 0.1,
+            "minibatch ARI {ari_mb:.3} vs lloyd {ari_ll:.3}"
+        );
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let (pts, _) = blobs(300, &[(0.0, 0.0), (6.0, 6.0), (-6.0, 6.0)], 1.0, 3);
+        let mut a_cfg = MinibatchConfig::new(3);
+        a_cfg.seed = 5;
+        a_cfg.threads = 1;
+        let mut b_cfg = a_cfg.clone();
+        b_cfg.threads = 8;
+        let a = fit(&pts, &a_cfg);
+        let b = fit(&pts, &b_cfg);
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.centroids, b.centroids);
+        assert_eq!(a.inertia.to_bits(), b.inertia.to_bits());
+    }
+
+    #[test]
+    fn warm_start_converges_faster() {
+        let (pts, _) = blobs(500, &[(0.0, 0.0), (8.0, 0.0), (0.0, 8.0), (8.0, 8.0)], 0.7, 4);
+        let mut cfg = MinibatchConfig::new(4);
+        cfg.seed = 6;
+        let cold = fit_warm(&pts, &cfg, None);
+        assert!(cold.result.iters >= 2, "cold start converged suspiciously fast");
+        let warm = fit_warm(&pts, &cfg, Some(&cold.warm));
+        assert!(
+            warm.result.iters <= cold.result.iters,
+            "warm {} iters, cold {} iters",
+            warm.result.iters,
+            cold.result.iters
+        );
+        // A mature fleet state (large centroid counts => tiny learning
+        // rates near the optimum) must converge strictly faster.
+        let mut mature = cold.warm.clone();
+        for c in &mut mature.counts {
+            *c = (*c).max(100_000);
+        }
+        let fast = fit_warm(&pts, &cfg, Some(&mature));
+        assert!(
+            fast.result.iters < cold.result.iters,
+            "mature warm start {} iters, cold {} iters",
+            fast.result.iters,
+            cold.result.iters
+        );
+        // And the warm fit does not lose the structure.
+        let ari = adjusted_rand_index(&warm.result.assignments, &cold.result.assignments);
+        assert!(ari > 0.9, "warm restart drifted away: ari={ari}");
+    }
+
+    #[test]
+    fn mismatched_warm_state_is_ignored() {
+        let (pts, _) = blobs(100, &[(0.0, 0.0), (5.0, 5.0)], 0.5, 7);
+        let stale = WarmState { centroids: Mat::zeros(3, 9), counts: vec![1; 3] };
+        let mut cfg = MinibatchConfig::new(2);
+        cfg.seed = 8;
+        let with_stale = fit_warm(&pts, &cfg, Some(&stale));
+        let cold = fit_warm(&pts, &cfg, None);
+        assert_eq!(with_stale.result.assignments, cold.result.assignments);
+    }
+
+    #[test]
+    fn starved_centroid_is_reseeded() {
+        // Warm state with one centroid far outside the data: it never
+        // attracts a point, so the repair path must bring it back and the
+        // final clustering must use all k clusters.
+        let (pts, _truth) = blobs(200, &[(0.0, 0.0), (10.0, 0.0), (0.0, 10.0)], 0.5, 9);
+        let mut dead = Mat::zeros(0, 2);
+        dead.push_row(&[0.0, 0.0]);
+        dead.push_row(&[10.0, 0.0]);
+        dead.push_row(&[1e6, 1e6]);
+        let warm = WarmState { centroids: dead, counts: vec![50, 50, 50] };
+        let mut cfg = MinibatchConfig::new(3);
+        cfg.seed = 10;
+        cfg.reseed_after = 3;
+        cfg.max_iters = 60;
+        // Movement stays large while clusters re-arrange; keep iterating.
+        cfg.tol = 0.0;
+        let dead_inertia = assign(&pts, &warm.centroids, 1).1;
+        let out = fit_warm(&pts, &cfg, Some(&warm));
+        let mut used = out.result.assignments.clone();
+        used.sort_unstable();
+        used.dedup();
+        assert_eq!(used.len(), 3, "dead centroid never reseeded");
+        assert!(
+            out.result.inertia < dead_inertia * 0.5,
+            "reseeding did not repair the fit: {} vs dead {}",
+            out.result.inertia,
+            dead_inertia
+        );
+    }
+
+    #[test]
+    fn batch_larger_than_n_is_capped() {
+        let (pts, truth) = blobs(20, &[(0.0, 0.0), (9.0, 9.0)], 0.3, 11);
+        let mut cfg = MinibatchConfig::new(2);
+        cfg.batch = 10_000;
+        cfg.seed = 12;
+        let res = fit(&pts, &cfg);
+        assert_eq!(res.assignments.len(), 40);
+        assert!(adjusted_rand_index(&res.assignments, &truth) > 0.95);
+    }
+
+    #[test]
+    #[should_panic(expected = "fewer points")]
+    fn too_few_points_panics() {
+        let (pts, _) = blobs(1, &[(0.0, 0.0)], 0.0, 13);
+        fit(&pts, &MinibatchConfig::new(5));
+    }
+}

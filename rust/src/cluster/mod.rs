@@ -1,13 +1,52 @@
-//! Server-side clustering service: K-means (proposed, §4.2) and DBSCAN
-//! (HACCS baseline, §3), plus quality metrics via `util::stats`.
+//! Server-side clustering service: K-means (proposed, §4.2), mini-batch
+//! K-means (the fleet-scale variant the refresh pipeline selects for large
+//! fleets) and DBSCAN (HACCS baseline, §3), plus quality metrics via
+//! `util::stats`.
 
 pub mod dbscan;
 pub mod kmeans;
+pub mod minibatch;
 
 pub use dbscan::{DbscanConfig, DbscanResult, NOISE};
 pub use kmeans::{KmeansConfig, KmeansResult};
+pub use minibatch::{MinibatchConfig, WarmState, MINIBATCH_AUTO_THRESHOLD};
 
 use crate::util::mat::Mat;
+
+/// Which K-means engine the fleet refresh uses (`cluster_backend` in
+/// `ExperimentConfig` / `--cluster-backend` on the CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ClusterBackend {
+    /// Full Lloyd iterations (`cluster::kmeans`): exact, Θ(N·K·D) per iter.
+    Lloyd,
+    /// Mini-batch SGD K-means (`cluster::minibatch`): Θ(B·K·D) per iter,
+    /// warm-started across refreshes.
+    Minibatch,
+    /// Lloyd below [`MINIBATCH_AUTO_THRESHOLD`] clients, mini-batch above.
+    #[default]
+    Auto,
+}
+
+impl ClusterBackend {
+    /// Parse a config/CLI string; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "lloyd" | "kmeans" => Some(ClusterBackend::Lloyd),
+            "minibatch" => Some(ClusterBackend::Minibatch),
+            "auto" => Some(ClusterBackend::Auto),
+            _ => None,
+        }
+    }
+
+    /// Resolve `Auto` for a concrete fleet size.
+    pub fn use_minibatch(self, n_clients: usize) -> bool {
+        match self {
+            ClusterBackend::Lloyd => false,
+            ClusterBackend::Minibatch => true,
+            ClusterBackend::Auto => n_clients >= MINIBATCH_AUTO_THRESHOLD,
+        }
+    }
+}
 
 /// Column z-scoring before clustering. Summary vectors concatenate blocks of
 /// very different scales (C*H feature means around ~0.1, C label-probability
@@ -175,5 +214,18 @@ mod tests {
     fn standardize_empty_is_noop() {
         let m = Mat::zeros(0, 4);
         assert_eq!(standardize_columns(&m).rows(), 0);
+    }
+
+    #[test]
+    fn backend_parse_and_auto_threshold() {
+        assert_eq!(ClusterBackend::parse("lloyd"), Some(ClusterBackend::Lloyd));
+        assert_eq!(ClusterBackend::parse("kmeans"), Some(ClusterBackend::Lloyd));
+        assert_eq!(ClusterBackend::parse("minibatch"), Some(ClusterBackend::Minibatch));
+        assert_eq!(ClusterBackend::parse("auto"), Some(ClusterBackend::Auto));
+        assert_eq!(ClusterBackend::parse("nope"), None);
+        assert!(!ClusterBackend::Auto.use_minibatch(MINIBATCH_AUTO_THRESHOLD - 1));
+        assert!(ClusterBackend::Auto.use_minibatch(MINIBATCH_AUTO_THRESHOLD));
+        assert!(!ClusterBackend::Lloyd.use_minibatch(1_000_000));
+        assert!(ClusterBackend::Minibatch.use_minibatch(2));
     }
 }

@@ -168,8 +168,18 @@ pub struct ExperimentConfig {
     pub policy: String,
     /// K for K-means device clustering.
     pub clusters: usize,
+    /// Clustering engine for fleet refreshes: auto / lloyd / minibatch
+    /// (`auto` = Lloyd's below cluster::MINIBATCH_AUTO_THRESHOLD clients,
+    /// warm-started mini-batch K-means above).
+    pub cluster_backend: String,
     /// Re-compute summaries + recluster every N rounds (0 = only once).
     pub refresh_every: usize,
+    /// Worker threads for per-client summarization during a refresh
+    /// (0 = auto; respects FEDDDE_THREADS). Output is thread-count invariant.
+    pub refresh_threads: usize,
+    /// Serve unchanged clients from the summary cache on refreshes after
+    /// round 0 (only drifted clients are recomputed).
+    pub summary_cache: bool,
     /// Summary engine: encoder / py / pxy / jl.
     pub summary: String,
     /// Target accuracy for time-to-accuracy reporting (0 = disabled).
@@ -202,7 +212,10 @@ impl Default for ExperimentConfig {
             lr: 0.1,
             policy: "cluster".into(),
             clusters: 0, // 0 = dataset's n_groups
+            cluster_backend: "auto".into(),
             refresh_every: 0,
+            refresh_threads: 0,
+            summary_cache: true,
             summary: "encoder".into(),
             target_accuracy: 0.0,
             seed: 1,
@@ -242,7 +255,10 @@ impl ExperimentConfig {
             lr: t.float_or("lr", d.lr),
             policy: t.str_or("policy", &d.policy),
             clusters: t.int_or("clusters", d.clusters as i64) as usize,
+            cluster_backend: t.str_or("cluster_backend", &d.cluster_backend),
             refresh_every: t.int_or("refresh_every", d.refresh_every as i64) as usize,
+            refresh_threads: t.int_or("refresh_threads", d.refresh_threads as i64) as usize,
+            summary_cache: t.bool_or("summary_cache", d.summary_cache),
             summary: t.str_or("summary", &d.summary),
             target_accuracy: t.float_or("target_accuracy", d.target_accuracy),
             seed: t.int_or("seed", d.seed as i64) as u64,
@@ -311,6 +327,21 @@ mod tests {
         assert!((c.drift_frac - 0.25).abs() < 1e-12);
         // defaults survive
         assert_eq!(c.summary, "encoder");
+        assert_eq!(c.cluster_backend, "auto");
+        assert_eq!(c.refresh_threads, 0);
+        assert!(c.summary_cache);
+    }
+
+    #[test]
+    fn refresh_pipeline_knobs_from_toml() {
+        let t = Toml::parse(
+            "cluster_backend = \"minibatch\"\nrefresh_threads = 4\nsummary_cache = false\n",
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&t);
+        assert_eq!(c.cluster_backend, "minibatch");
+        assert_eq!(c.refresh_threads, 4);
+        assert!(!c.summary_cache);
     }
 
     #[test]

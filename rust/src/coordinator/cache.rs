@@ -1,0 +1,156 @@
+//! Incremental summary cache: skip re-summarizing clients whose data did
+//! not change.
+//!
+//! A client's summary is a pure function of `(dataset seed, client_id,
+//! drift phase)` — the generator materializes the same samples and the
+//! summary rng substream is keyed on the same triple (see
+//! `coordinator::summaries`). So between refreshes only clients whose
+//! *drift phase* changed can produce a different vector, and everyone else
+//! can be served from this cache byte-for-byte. That converts the steady
+//! state cost of a refresh from Θ(fleet) to Θ(drifted clients), which is
+//! the paper's "re-compute distribution summary periodically as data
+//! changes" (§2.1) done incrementally.
+//!
+//! Invalidation is explicit: [`SummaryCache::invalidate_stale`] runs at the
+//! start of every refresh and drops exactly the entries whose stored phase
+//! no longer matches the client's current phase (i.e. the clients hit by a
+//! drift round). One entry per client bounds memory at `O(n_clients · dim)`.
+
+use std::collections::HashMap;
+
+/// One cached per-client summary.
+#[derive(Debug, Clone)]
+pub struct CachedSummary {
+    /// Drift phase the vector was computed under.
+    pub phase: u64,
+    /// The summary vector (exactly what `SummaryEngine::summarize` returned).
+    pub vec: Vec<f32>,
+    /// Deterministic modeled host seconds (`SummaryEngine::model_host_secs`),
+    /// cached so device-time accounting is identical on hits and misses.
+    pub model_secs: f64,
+}
+
+/// Per-fleet summary cache keyed by client id, storing the drift phase each
+/// entry was computed under.
+#[derive(Debug, Default)]
+pub struct SummaryCache {
+    rows: HashMap<usize, CachedSummary>,
+    hits: u64,
+    misses: u64,
+}
+
+impl SummaryCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Look up `client_id` at `phase`; counts a hit only when the stored
+    /// entry matches the requested phase.
+    pub fn get(&mut self, client_id: usize, phase: u64) -> Option<&CachedSummary> {
+        match self.rows.get(&client_id) {
+            Some(entry) if entry.phase == phase => {
+                self.hits += 1;
+                self.rows.get(&client_id)
+            }
+            _ => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Store (or replace) a client's summary.
+    pub fn insert(&mut self, client_id: usize, phase: u64, vec: Vec<f32>, model_secs: f64) {
+        self.rows.insert(client_id, CachedSummary { phase, vec, model_secs });
+    }
+
+    /// Drop every entry whose stored phase differs from the client's current
+    /// phase; returns how many entries were invalidated. Called at the start
+    /// of each refresh so drift rounds explicitly evict exactly the drifted
+    /// clients.
+    pub fn invalidate_stale(&mut self, current: &[(usize, u64)]) -> usize {
+        let mut dropped = 0;
+        for &(client_id, phase) in current {
+            if let Some(entry) = self.rows.get(&client_id) {
+                if entry.phase != phase {
+                    self.rows.remove(&client_id);
+                    dropped += 1;
+                }
+            }
+        }
+        dropped
+    }
+
+    /// Forget everything (e.g. when the summary engine itself changes).
+    pub fn clear(&mut self) {
+        self.rows.clear();
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Lifetime hit count (entries served without recomputation).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lifetime miss count (lookups that required recomputation).
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_requires_matching_phase() {
+        let mut c = SummaryCache::new();
+        assert!(c.get(7, 0).is_none());
+        c.insert(7, 0, vec![1.0, 2.0], 0.5);
+        assert_eq!(c.get(7, 0).unwrap().vec, vec![1.0, 2.0]);
+        assert!(c.get(7, 1).is_none(), "stale phase served");
+        assert_eq!(c.hits(), 1);
+        assert_eq!(c.misses(), 2);
+    }
+
+    #[test]
+    fn insert_replaces_per_client() {
+        let mut c = SummaryCache::new();
+        c.insert(3, 0, vec![1.0], 0.1);
+        c.insert(3, 1, vec![2.0], 0.2);
+        assert_eq!(c.len(), 1);
+        assert!(c.get(3, 0).is_none());
+        assert_eq!(c.get(3, 1).unwrap().vec, vec![2.0]);
+    }
+
+    #[test]
+    fn invalidate_stale_drops_exactly_phase_changes() {
+        let mut c = SummaryCache::new();
+        for id in 0..10 {
+            c.insert(id, 0, vec![id as f32], 0.1);
+        }
+        // Clients 2 and 5 advanced to phase 1; everyone else unchanged.
+        let current: Vec<(usize, u64)> =
+            (0..10).map(|id| (id, if id == 2 || id == 5 { 1 } else { 0 })).collect();
+        assert_eq!(c.invalidate_stale(&current), 2);
+        assert_eq!(c.len(), 8);
+        assert!(c.get(2, 1).is_none());
+        assert!(c.get(1, 0).is_some());
+    }
+
+    #[test]
+    fn clear_empties() {
+        let mut c = SummaryCache::new();
+        c.insert(1, 0, vec![0.0], 0.0);
+        assert!(!c.is_empty());
+        c.clear();
+        assert!(c.is_empty());
+    }
+}

@@ -3,11 +3,13 @@
 //! training (AOT train artifact per selected device) → FedAvg → eval —
 //! with simulated wall-clock accounting over the heterogeneous fleet.
 
+pub mod cache;
 pub mod fedavg;
 pub mod summaries;
 
 use anyhow::{bail, Context, Result};
 
+use crate::cluster::ClusterBackend;
 use crate::config::ExperimentConfig;
 use crate::data::drift::DriftSchedule;
 use crate::data::generator::{ClientDataset, Generator};
@@ -21,8 +23,9 @@ use crate::summary::{EncoderSummary, JlSummary, PxySummary, PySummary, SummaryEn
 use crate::util::mat::Mat;
 use crate::util::rng::Rng;
 
+pub use cache::SummaryCache;
 pub use fedavg::fedavg;
-pub use summaries::{refresh_fleet, RefreshResult};
+pub use summaries::{refresh_fleet, FleetRefresher, RefreshOptions, RefreshResult};
 
 /// Everything the server tracks about the fleet between rounds.
 pub struct Coordinator {
@@ -35,6 +38,8 @@ pub struct Coordinator {
     pub drift: DriftSchedule,
     policy: Box<dyn SelectionPolicy>,
     summary_engine: Box<dyn SummaryEngine>,
+    /// Stateful refresh subsystem: summary cache + warm-start clustering.
+    refresher: FleetRefresher,
     /// Global model parameters (flat, the artifacts' convention).
     pub params: Vec<f32>,
     /// Latest cluster assignment per client.
@@ -85,6 +90,17 @@ impl Coordinator {
             ));
         }
 
+        // The refresh subsystem: parallel summarization + summary cache +
+        // backend-selectable clustering (see coordinator::summaries docs).
+        let backend = ClusterBackend::parse(&cfg.cluster_backend)
+            .with_context(|| format!("unknown cluster_backend {:?}", cfg.cluster_backend))?;
+        let refresher = FleetRefresher::new(RefreshOptions {
+            threads: cfg.refresh_threads,
+            backend,
+            use_cache: cfg.summary_cache,
+            ..Default::default()
+        });
+
         // Initial global parameters from the init artifact.
         let outs = engine.exec(&format!("{}_init", spec.name), &[])?;
         let params = to_vec_f32(&outs[0])?;
@@ -104,6 +120,7 @@ impl Coordinator {
             drift,
             policy,
             summary_engine,
+            refresher,
             params,
             clusters: vec![0; n],
             summaries: None,
@@ -206,7 +223,7 @@ impl Coordinator {
             return Ok(0.0);
         }
         let k = if self.cfg.clusters > 0 { self.cfg.clusters } else { self.spec.n_groups };
-        let r = refresh_fleet(
+        let r = self.refresher.refresh(
             &self.engine,
             self.summary_engine.as_ref(),
             &self.partition,
@@ -217,14 +234,16 @@ impl Coordinator {
             k,
             self.cfg.seed,
         )?;
-        self.clusters = r.clusters.clone();
-        self.summaries = Some(r.summaries.clone());
+        self.clusters = r.clusters;
         log::info!(
-            "round {round}: refreshed {} summaries (sim {:.2}s, cluster {:.3}s)",
+            "round {round}: refreshed {}/{} summaries ({} cached; sim {:.2}s, cluster {:.3}s)",
+            r.recomputed.len(),
             self.spec.n_clients,
+            self.spec.n_clients - r.recomputed.len(),
             r.sim_secs,
             r.cluster_secs
         );
+        self.summaries = Some(r.summaries);
         Ok(r.sim_secs)
     }
 
@@ -361,11 +380,8 @@ mod tests {
     use super::*;
 
     fn coordinator(cfg: ExperimentConfig) -> Option<Coordinator> {
-        let dir = Engine::default_dir();
-        if !dir.join("manifest.tsv").exists() {
-            return None;
-        }
-        Some(Coordinator::new(cfg, Engine::new(dir).unwrap()).unwrap())
+        let engine = crate::runtime::test_engine()?;
+        Some(Coordinator::new(cfg, engine).unwrap())
     }
 
     fn tiny_cfg() -> ExperimentConfig {
@@ -516,14 +532,19 @@ mod tests {
     }
 
     #[test]
-    fn unknown_dataset_and_policy_rejected() {
-        let dir = Engine::default_dir();
-        if !dir.join("manifest.tsv").exists() {
-            return;
-        }
+    fn unknown_dataset_policy_and_backend_rejected() {
+        let Some(engine) = crate::runtime::test_engine() else { return };
         let bad = ExperimentConfig { dataset: "nope".into(), ..Default::default() };
-        assert!(Coordinator::new(bad, Engine::new(dir.clone()).unwrap()).is_err());
+        assert!(Coordinator::new(bad, engine).is_err());
+        let Some(engine) = crate::runtime::test_engine() else { return };
         let bad2 = ExperimentConfig { policy: "nope".into(), dataset: "tiny".into(), ..Default::default() };
-        assert!(Coordinator::new(bad2, Engine::new(dir).unwrap()).is_err());
+        assert!(Coordinator::new(bad2, engine).is_err());
+        let Some(engine) = crate::runtime::test_engine() else { return };
+        let bad3 = ExperimentConfig {
+            cluster_backend: "nope".into(),
+            dataset: "tiny".into(),
+            ..Default::default()
+        };
+        assert!(Coordinator::new(bad3, engine).is_err());
     }
 }

@@ -1,12 +1,44 @@
-//! Fleet summary service: computes every client's distribution summary
-//! through a `SummaryEngine`, times it per client (host + simulated device
-//! seconds), and clusters the resulting vectors — the Figure 1 workflow's
-//! "distribution summary" + "clustering" stages, refreshed periodically for
-//! non-stationary data (paper §2.1).
+//! Fleet summary service — the Figure 1 workflow's "distribution summary" +
+//! "clustering" stages, refreshed periodically for non-stationary data
+//! (paper §2.1), rebuilt as a scalable subsystem:
+//!
+//! * **Parallel summarization.** Per-client summaries are computed across
+//!   worker threads (`util::parallel::for_each_dynamic_init`, dynamic
+//!   work-stealing — client workloads vary ~60x). Each worker owns its own
+//!   runtime `Engine` (the PJRT wrappers are not `Sync`); each client's
+//!   vector is written into its pre-allocated row of the output `Mat`, so
+//!   the result is **bitwise identical for any `FEDDDE_THREADS`**.
+//! * **Incremental refresh.** A [`SummaryCache`] keyed by `(client_id,
+//!   drift_phase)` serves unchanged clients byte-for-byte; only clients
+//!   whose drift phase moved are recomputed ([`RefreshResult::recomputed`]).
+//!   Stale entries are explicitly invalidated at the start of every refresh.
+//! * **Scalable clustering.** `cluster_backend` picks full Lloyd's
+//!   (`cluster::kmeans`) or mini-batch K-means (`cluster::minibatch`) with
+//!   centroids + learning-rate counts warm-started across refreshes; `auto`
+//!   switches to mini-batch at `MINIBATCH_AUTO_THRESHOLD` clients.
+//!
+//! Determinism contract: a client's summary is a pure function of
+//! `(seed, client_id, drift_phase)` — the rng substream and the generator are
+//! both keyed on that triple — which is exactly what makes the cache exact.
+//! Simulated per-device seconds use the engine's *deterministic cost model*
+//! (`SummaryEngine::model_host_secs`) scaled by each device's compute factor;
+//! measured wall-clock (inherently run-dependent) is reported separately in
+//! [`RefreshResult::host_secs`]. Everything is bitwise identical across
+//! thread counts; summaries/device_secs are also bitwise identical across
+//! cold vs cached refreshes, and clusters are too under the Lloyd backend.
+//! A warm-started mini-batch refresher deliberately carries centroid state,
+//! so its assignments may differ from a cold run at the same round (quality
+//! is held to within 0.1 ARI of Lloyd's instead).
+//! `rust/tests/determinism.rs` enforces all of this element-for-element.
 
-use anyhow::Result;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cluster::kmeans::{self, KmeansConfig};
+use crate::cluster::minibatch::{self, MinibatchConfig, WarmState};
+use crate::cluster::ClusterBackend;
+use crate::coordinator::cache::SummaryCache;
 use crate::data::drift::DriftSchedule;
 use crate::data::generator::Generator;
 use crate::data::partition::Partition;
@@ -14,8 +46,39 @@ use crate::device::DeviceProfile;
 use crate::runtime::Engine;
 use crate::summary::SummaryEngine;
 use crate::util::mat::Mat;
+use crate::util::parallel::{default_threads, for_each_dynamic_init};
 use crate::util::rng::Rng;
 use crate::util::stats;
+
+/// Substream salt for per-client summary randomness. Keyed on the drift
+/// *phase*, not the round: the summary must be a pure function of the
+/// client's data so cached rows equal recomputed ones.
+const SUMMARY_SALT: u64 = 0x5;
+
+/// Tuning knobs for the refresh subsystem (see module docs).
+#[derive(Debug, Clone)]
+pub struct RefreshOptions {
+    /// Worker threads for per-client summarization (0 = `default_threads()`,
+    /// which respects `FEDDDE_THREADS`). Output is identical for any value.
+    pub threads: usize,
+    /// Clustering engine selection (config `cluster_backend`).
+    pub backend: ClusterBackend,
+    /// Serve unchanged clients from the summary cache.
+    pub use_cache: bool,
+    /// Mini-batch size override (0 = `MinibatchConfig` default).
+    pub minibatch_batch: usize,
+}
+
+impl Default for RefreshOptions {
+    fn default() -> Self {
+        RefreshOptions {
+            threads: 0,
+            backend: ClusterBackend::default(),
+            use_cache: true,
+            minibatch_batch: 0,
+        }
+    }
+}
 
 /// Result of one fleet-wide summary refresh.
 pub struct RefreshResult {
@@ -23,10 +86,12 @@ pub struct RefreshResult {
     pub summaries: Mat,
     /// Cluster assignment per client.
     pub clusters: Vec<usize>,
-    /// Per-client *simulated device* seconds (host kernel time x device
-    /// compute factor) — Table 2's "time calculating summary" distribution.
+    /// Per-client *simulated device* seconds (deterministic modeled host
+    /// cost x device compute factor) — Table 2's "time calculating summary"
+    /// distribution, bitwise reproducible across thread counts and cache
+    /// hits.
     pub device_secs: Vec<f64>,
-    /// Host seconds actually spent (all clients, wall clock).
+    /// Host seconds actually spent summarizing (wall clock, this process).
     pub host_secs: f64,
     /// Server-side clustering seconds (real, measured).
     pub cluster_secs: f64,
@@ -34,9 +99,251 @@ pub struct RefreshResult {
     /// fleet-wide cost is max(compute + upload), then clustering runs on
     /// the server.
     pub sim_secs: f64,
+    /// Client indices recomputed this refresh: everyone on a cold refresh,
+    /// exactly the drifted clients on a cached one.
+    pub recomputed: Vec<usize>,
 }
 
-/// Compute summaries for the whole fleet and cluster them.
+impl RefreshResult {
+    /// (avg, max) of simulated per-device summary seconds — the Table 2 row.
+    pub fn summary_time_stats(&self) -> (f64, f64) {
+        (stats::mean(&self.device_secs), stats::max(&self.device_secs))
+    }
+}
+
+/// Stateful refresh service: owns the summary cache and the warm-start
+/// clustering state carried between refreshes. The `Coordinator` holds one;
+/// one-shot callers can use the [`refresh_fleet`] convenience wrapper.
+pub struct FleetRefresher {
+    pub opts: RefreshOptions,
+    cache: SummaryCache,
+    warm: Option<WarmState>,
+    /// (seed, summary dim) the carried state was computed under. Summaries
+    /// are pure functions of the seed, so a different seed (or a different
+    /// summary engine) must drop the cache instead of serving stale rows.
+    state_key: Option<(u64, usize)>,
+}
+
+impl FleetRefresher {
+    pub fn new(opts: RefreshOptions) -> Self {
+        FleetRefresher { opts, cache: SummaryCache::new(), warm: None, state_key: None }
+    }
+
+    /// Cache statistics (hits/misses/size) for logging and tests.
+    pub fn cache(&self) -> &SummaryCache {
+        &self.cache
+    }
+
+    /// Drop all carried state (cache + warm centroids). `refresh` calls this
+    /// itself when the seed or summary dimensionality changes between calls;
+    /// call it manually when swapping summary engines of equal dim.
+    pub fn reset(&mut self) {
+        self.cache.clear();
+        self.warm = None;
+        self.state_key = None;
+    }
+
+    /// Compute summaries for the whole fleet and cluster them.
+    #[allow(clippy::too_many_arguments)]
+    pub fn refresh(
+        &mut self,
+        engine: &Engine,
+        summary: &dyn SummaryEngine,
+        partition: &Partition,
+        generator: &Generator,
+        fleet: &[DeviceProfile],
+        drift: &DriftSchedule,
+        round: usize,
+        k_clusters: usize,
+        seed: u64,
+    ) -> Result<RefreshResult> {
+        let n = partition.clients.len();
+        let dim = summary.dim();
+        if fleet.is_empty() {
+            bail!("refresh: empty device fleet");
+        }
+        let threads = if self.opts.threads == 0 { default_threads() } else { self.opts.threads };
+        // Carried state (cache rows, warm centroids) is only valid for the
+        // seed + dim it was computed under; a change must not serve stale rows.
+        if self.state_key != Some((seed, dim)) {
+            self.reset();
+            self.state_key = Some((seed, dim));
+        }
+        let t0 = std::time::Instant::now();
+
+        // Phase per client, then explicit invalidation of drifted entries.
+        let phases: Vec<u64> = partition
+            .clients
+            .iter()
+            .map(|part| drift.client_phase(part.client_id, round, seed))
+            .collect();
+        if self.opts.use_cache {
+            let current: Vec<(usize, u64)> = partition
+                .clients
+                .iter()
+                .zip(&phases)
+                .map(|(part, &phase)| (part.client_id, phase))
+                .collect();
+            self.cache.invalidate_stale(&current);
+        }
+
+        // Partition the fleet into cache hits (copied out) and a worklist.
+        let mut summaries = Mat::zeros(n, dim);
+        let mut model_secs = vec![0.0f64; n];
+        let mut recomputed: Vec<usize> = Vec::new();
+        for (i, part) in partition.clients.iter().enumerate() {
+            if self.opts.use_cache {
+                if let Some(hit) = self.cache.get(part.client_id, phases[i]) {
+                    if hit.vec.len() == dim {
+                        summaries.row_mut(i).copy_from_slice(&hit.vec);
+                        model_secs[i] = hit.model_secs;
+                        continue;
+                    }
+                }
+            }
+            recomputed.push(i);
+        }
+
+        // Summarize the worklist: one result slot per item so any
+        // index→worker mapping produces the same output.
+        let compute = |eng: &Engine, i: usize| -> Result<(Vec<f32>, f64)> {
+            let part = &partition.clients[i];
+            let ds = generator.client_dataset(part, phases[i]);
+            let mut rng =
+                Rng::substream(seed, &[SUMMARY_SALT, part.client_id as u64, phases[i]]);
+            let (vec, _measured) = summary.summarize(eng, &ds, &mut rng)?;
+            if vec.len() != dim {
+                bail!(
+                    "summary engine {} returned {} values, expected {dim}",
+                    summary.name(),
+                    vec.len()
+                );
+            }
+            let model = summary.model_host_secs(&ds);
+            Ok((vec, model))
+        };
+
+        let slots: Vec<Mutex<Option<Result<(Vec<f32>, f64)>>>> =
+            (0..recomputed.len()).map(|_| Mutex::new(None)).collect();
+        let mut work_threads = threads.clamp(1, recomputed.len().max(1));
+        // Worker engines are opened per refresh (PJRT handles are neither
+        // Send nor Sync, so they cannot persist across worker threads), and
+        // for artifact engines each worker recompiles the summary artifact
+        // once. On a small worklist — a tiny test fleet, or a handful of
+        // drifted clients on a cached refresh — those compiles outweigh the
+        // parallel win; stay on the caller's engine and its warm compile
+        // cache instead. Output is identical either way (per-slot writes).
+        const MIN_PARALLEL_WORK: usize = 64;
+        if summary.needs_runtime() && recomputed.len() < MIN_PARALLEL_WORK {
+            work_threads = 1;
+        }
+        if work_threads <= 1 {
+            for (slot, &i) in slots.iter().zip(&recomputed) {
+                *slot.lock().unwrap() = Some(compute(engine, i));
+            }
+        } else {
+            // Each worker opens its own Engine: compilation caches are
+            // per-worker (one artifact compile each, amortized over the
+            // fleet), and pure-Rust engines get a manifest-free handle.
+            let needs_rt = summary.needs_runtime();
+            let dir = engine.dir().to_path_buf();
+            let work = &recomputed;
+            for_each_dynamic_init(
+                work.len(),
+                work_threads,
+                || {
+                    if needs_rt {
+                        Engine::new(&dir)
+                    } else {
+                        Engine::without_artifacts()
+                    }
+                },
+                |worker_engine, j| {
+                    let out = match worker_engine {
+                        Ok(eng) => compute(eng, work[j]),
+                        Err(e) => Err(anyhow!("opening per-worker engine: {e:#}")),
+                    };
+                    *slots[j].lock().unwrap() = Some(out);
+                },
+            );
+        }
+
+        // Deterministic assembly: write each result into its client's row.
+        for (slot, &i) in slots.into_iter().zip(&recomputed) {
+            let out = slot
+                .into_inner()
+                .unwrap()
+                .expect("refresh worker left an index uncomputed");
+            let part = &partition.clients[i];
+            let (vec, model) = out
+                .with_context(|| format!("summarizing client {}", part.client_id))?;
+            summaries.row_mut(i).copy_from_slice(&vec);
+            model_secs[i] = model;
+            if self.opts.use_cache {
+                self.cache.insert(part.client_id, phases[i], vec, model);
+            }
+        }
+        let host_secs = t0.elapsed().as_secs_f64();
+
+        // Simulated device accounting from the deterministic cost model.
+        let mut device_secs = Vec::with_capacity(n);
+        let mut upload_secs = Vec::with_capacity(n);
+        for (i, model) in model_secs.iter().enumerate() {
+            let dev = &fleet[i % fleet.len()];
+            device_secs.push(dev.compute_time(*model));
+            upload_secs.push(dev.upload_time(summary.summary_bytes()));
+        }
+
+        // Server-side clustering via the configured backend.
+        let tc = std::time::Instant::now();
+        let clusters = if k_clusters <= 1 || n <= k_clusters {
+            self.warm = None;
+            vec![0; n]
+        } else {
+            // Balance summary blocks first: the proposed summary concatenates
+            // a feature-mean block and a label-distribution block of very
+            // different scales (see cluster::balance_blocks).
+            let balanced = crate::cluster::balance_blocks(&summaries, &summary.blocks());
+            if self.opts.backend.use_minibatch(n) {
+                let mut cfg = MinibatchConfig::new(k_clusters);
+                cfg.seed = seed;
+                cfg.threads = threads;
+                if self.opts.minibatch_batch > 0 {
+                    cfg.batch = self.opts.minibatch_batch;
+                }
+                let out = minibatch::fit_warm(&balanced, &cfg, self.warm.as_ref());
+                self.warm = Some(out.warm);
+                out.result.assignments
+            } else {
+                self.warm = None;
+                let mut cfg = KmeansConfig::new(k_clusters);
+                cfg.seed = seed;
+                cfg.threads = threads;
+                kmeans::fit(&balanced, &cfg).assignments
+            }
+        };
+        let cluster_secs = tc.elapsed().as_secs_f64();
+
+        let parallel_device_max = device_secs
+            .iter()
+            .zip(&upload_secs)
+            .map(|(c, u)| c + u)
+            .fold(0.0f64, f64::max);
+        Ok(RefreshResult {
+            summaries,
+            clusters,
+            device_secs,
+            host_secs,
+            cluster_secs,
+            sim_secs: parallel_device_max + cluster_secs,
+            recomputed,
+        })
+    }
+}
+
+/// One-shot fleet refresh (no cache, no warm start carried): the stateless
+/// entry point the CLI `summarize`/`cluster` subcommands and older callers
+/// use. Parallel over `default_threads()`; clustering backend is `auto`.
 #[allow(clippy::too_many_arguments)]
 pub fn refresh_fleet(
     engine: &Engine,
@@ -49,57 +356,10 @@ pub fn refresh_fleet(
     k_clusters: usize,
     seed: u64,
 ) -> Result<RefreshResult> {
-    let n = partition.clients.len();
-    let mut summaries = Mat::zeros(0, summary.dim());
-    let mut device_secs = Vec::with_capacity(n);
-    let mut upload_secs = Vec::with_capacity(n);
-    let t0 = std::time::Instant::now();
-    for (i, part) in partition.clients.iter().enumerate() {
-        let phase = drift.client_phase(part.client_id, round, seed);
-        let ds = generator.client_dataset(part, phase);
-        let mut rng = Rng::substream(seed, &[0x5u64, part.client_id as u64, round as u64]);
-        let (vec, host) = summary.summarize(engine, &ds, &mut rng)?;
-        summaries.push_row(&vec);
-        let dev = &fleet[i % fleet.len()];
-        device_secs.push(dev.compute_time(host));
-        upload_secs.push(dev.upload_time(summary.summary_bytes()));
-    }
-    let host_secs = t0.elapsed().as_secs_f64();
-
-    let tc = std::time::Instant::now();
-    let clusters = if k_clusters <= 1 || n <= k_clusters {
-        vec![0; n]
-    } else {
-        // Balance summary blocks first: the proposed summary concatenates a
-        // feature-mean block and a label-distribution block of very
-        // different scales (see cluster::balance_blocks).
-        let balanced = crate::cluster::balance_blocks(&summaries, &summary.blocks());
-        let mut cfg = KmeansConfig::new(k_clusters);
-        cfg.seed = seed;
-        kmeans::fit(&balanced, &cfg).assignments
-    };
-    let cluster_secs = tc.elapsed().as_secs_f64();
-
-    let parallel_device_max = device_secs
-        .iter()
-        .zip(&upload_secs)
-        .map(|(c, u)| c + u)
-        .fold(0.0f64, f64::max);
-    Ok(RefreshResult {
-        summaries,
-        clusters,
-        device_secs,
-        host_secs,
-        cluster_secs,
-        sim_secs: parallel_device_max + cluster_secs,
-    })
-}
-
-impl RefreshResult {
-    /// (avg, max) of simulated per-device summary seconds — the Table 2 row.
-    pub fn summary_time_stats(&self) -> (f64, f64) {
-        (stats::mean(&self.device_secs), stats::max(&self.device_secs))
-    }
+    let opts = RefreshOptions { use_cache: false, ..Default::default() };
+    FleetRefresher::new(opts).refresh(
+        engine, summary, partition, generator, fleet, drift, round, k_clusters, seed,
+    )
 }
 
 #[cfg(test)]
@@ -107,18 +367,26 @@ mod tests {
     use super::*;
     use crate::data::spec::DatasetSpec;
     use crate::device::FleetModel;
-    use crate::summary::EncoderSummary;
+    use crate::summary::{EncoderSummary, JlSummary};
 
     fn setup() -> Option<(Engine, DatasetSpec, Partition, Generator, Vec<DeviceProfile>)> {
-        let dir = Engine::default_dir();
-        if !dir.join("manifest.tsv").exists() {
-            return None;
-        }
+        let eng = crate::runtime::test_engine()?;
         let spec = DatasetSpec::tiny();
         let part = Partition::build(&spec);
         let gen = Generator::new(&spec);
         let fleet = FleetModel::default().sample_fleet(spec.n_clients);
-        Some((Engine::new(dir).unwrap(), spec, part, gen, fleet))
+        Some((eng, spec, part, gen, fleet))
+    }
+
+    /// Same fixture against the pure-Rust JL engine: runs in every
+    /// environment, artifacts or not.
+    fn setup_native() -> (Engine, DatasetSpec, Partition, Generator, Vec<DeviceProfile>) {
+        let eng = Engine::without_artifacts().unwrap();
+        let spec = DatasetSpec::tiny();
+        let part = Partition::build(&spec);
+        let gen = Generator::new(&spec);
+        let fleet = FleetModel::default().sample_fleet(spec.n_clients);
+        (eng, spec, part, gen, fleet)
     }
 
     #[test]
@@ -143,6 +411,7 @@ mod tests {
         assert!(r.host_secs > 0.0 && r.cluster_secs >= 0.0 && r.sim_secs > 0.0);
         let (avg, max) = r.summary_time_stats();
         assert!(avg > 0.0 && max >= avg);
+        assert_eq!(r.recomputed.len(), spec.n_clients); // one-shot: all cold
     }
 
     #[test]
@@ -178,5 +447,77 @@ mod tests {
             refresh_fleet(&eng, &e, &part, &gen, &fleet, &drift, 10, spec.n_groups, 7).unwrap();
         let d = crate::util::mat::sqdist(r0.summaries.row(0), r1.summaries.row(0));
         assert!(d > 1e-6, "post-drift summaries identical (d={d})");
+    }
+
+    #[test]
+    fn native_refresh_runs_without_artifacts() {
+        let (eng, spec, part, gen, fleet) = setup_native();
+        let jl = JlSummary::new(&spec);
+        let r = refresh_fleet(
+            &eng,
+            &jl,
+            &part,
+            &gen,
+            &fleet,
+            &DriftSchedule::none(),
+            0,
+            spec.n_groups,
+            7,
+        )
+        .unwrap();
+        assert_eq!(r.summaries.rows(), spec.n_clients);
+        // JL projections are noisier than the encoder path; on 24 clients the
+        // ARI lands ~0.3, so this is a beats-chance floor, not a quality bar.
+        let ari = stats::adjusted_rand_index(&r.clusters, &part.group_truth());
+        assert!(ari > 0.15, "JL pipeline ARI too low: {ari}");
+    }
+
+    #[test]
+    fn cached_refresher_skips_unchanged_clients() {
+        let (eng, spec, part, gen, fleet) = setup_native();
+        let jl = JlSummary::new(&spec);
+        let drift = DriftSchedule::at(vec![3], 0.5);
+        let mut refresher = FleetRefresher::new(RefreshOptions::default());
+        let seed = 9;
+        let r0 = refresher
+            .refresh(&eng, &jl, &part, &gen, &fleet, &drift, 0, spec.n_groups, seed)
+            .unwrap();
+        assert_eq!(r0.recomputed.len(), spec.n_clients);
+        // Same round again: everything served from cache.
+        let r1 = refresher
+            .refresh(&eng, &jl, &part, &gen, &fleet, &drift, 0, spec.n_groups, seed)
+            .unwrap();
+        assert!(r1.recomputed.is_empty(), "cache missed: {:?}", r1.recomputed);
+        assert_eq!(r0.summaries, r1.summaries);
+        // Past the drift round: exactly the affected clients recompute.
+        let r2 = refresher
+            .refresh(&eng, &jl, &part, &gen, &fleet, &drift, 5, spec.n_groups, seed)
+            .unwrap();
+        let expected: Vec<usize> = (0..spec.n_clients)
+            .filter(|&i| drift.client_phase(part.clients[i].client_id, 5, seed) != 0)
+            .collect();
+        assert_eq!(r2.recomputed, expected);
+        assert!(!expected.is_empty() && expected.len() < spec.n_clients);
+        for i in 0..spec.n_clients {
+            if !expected.contains(&i) {
+                assert_eq!(r0.summaries.row(i), r2.summaries.row(i), "row {i} changed");
+            }
+        }
+    }
+
+    #[test]
+    fn refresher_reset_forces_full_recompute() {
+        let (eng, spec, part, gen, fleet) = setup_native();
+        let jl = JlSummary::new(&spec);
+        let mut refresher = FleetRefresher::new(RefreshOptions::default());
+        let none = DriftSchedule::none();
+        refresher
+            .refresh(&eng, &jl, &part, &gen, &fleet, &none, 0, spec.n_groups, 3)
+            .unwrap();
+        refresher.reset();
+        let r = refresher
+            .refresh(&eng, &jl, &part, &gen, &fleet, &none, 1, spec.n_groups, 3)
+            .unwrap();
+        assert_eq!(r.recomputed.len(), spec.n_clients);
     }
 }

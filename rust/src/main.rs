@@ -13,7 +13,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Context, Result};
 
-use feddde::cluster::{dbscan, kmeans};
+use feddde::cluster::{dbscan, kmeans, minibatch};
 use feddde::config::ExperimentConfig;
 use feddde::coordinator::{refresh_fleet, Coordinator};
 use feddde::data::{DatasetSpec, DriftSchedule, Generator, Partition};
@@ -73,6 +73,15 @@ fn cfg_from_flags(flags: &HashMap<String, String>) -> Result<ExperimentConfig> {
     }
     if let Some(v) = flags.get("refresh-every") {
         cfg.refresh_every = v.parse().context("--refresh-every")?;
+    }
+    if let Some(v) = flags.get("cluster-backend") {
+        cfg.cluster_backend = v.clone();
+    }
+    if let Some(v) = flags.get("refresh-threads") {
+        cfg.refresh_threads = v.parse().context("--refresh-threads")?;
+    }
+    if let Some(v) = flags.get("summary-cache") {
+        cfg.summary_cache = v.parse().context("--summary-cache")?;
     }
     if let Some(v) = flags.get("target-accuracy") {
         cfg.target_accuracy = v.parse().context("--target-accuracy")?;
@@ -199,6 +208,11 @@ fn cmd_cluster(flags: HashMap<String, String>) -> Result<()> {
             kcfg.seed = spec.seed;
             kmeans::fit(&r.summaries, &kcfg).assignments
         }
+        "minibatch" => {
+            let mut mcfg = minibatch::MinibatchConfig::new(spec.n_groups);
+            mcfg.seed = spec.seed;
+            minibatch::fit(&r.summaries, &mcfg).assignments
+        }
         "dbscan" => {
             let eps = flags
                 .get("eps")
@@ -243,9 +257,13 @@ fn main() -> Result<()> {
                 "feddde — Efficient Data Distribution Estimation for Accelerated FL\n\n\
                  usage: feddde <train|summarize|cluster|artifacts> [--flags]\n\
                    train      --dataset tiny --rounds 30 --policy cluster [--config f.toml]\n\
+                              refresh pipeline: --cluster-backend auto|lloyd|minibatch\n\
+                              --refresh-threads N (0=auto) --summary-cache true|false\n\
                    summarize  --dataset tiny --method encoder|py|pxy|jl [--clients N]\n\
-                   cluster    --dataset tiny --method kmeans|dbscan [--summary encoder]\n\
-                   artifacts  list AOT artifacts"
+                   cluster    --dataset tiny --method kmeans|minibatch|dbscan [--summary encoder]\n\
+                   artifacts  list AOT artifacts\n\
+                 env: FEDDDE_THREADS caps refresh parallelism (output is identical\n\
+                 for any value; see rust/tests/determinism.rs)"
             );
             Ok(())
         }

@@ -38,6 +38,15 @@ impl SummaryEngine for DpSummary {
         self.inner.blocks()
     }
 
+    fn needs_runtime(&self) -> bool {
+        self.inner.needs_runtime()
+    }
+
+    fn model_host_secs(&self, ds: &ClientDataset) -> f64 {
+        // Inner summary plus one Gaussian draw per output coordinate.
+        self.inner.model_host_secs(ds) + 2e-9 * self.dim() as f64
+    }
+
     fn summarize(
         &self,
         eng: &Engine,
@@ -61,15 +70,12 @@ mod tests {
     use crate::summary::EncoderSummary;
 
     fn setup() -> Option<(Engine, DatasetSpec, ClientDataset)> {
-        let dir = Engine::default_dir();
-        if !dir.join("manifest.tsv").exists() {
-            return None;
-        }
+        let eng = crate::runtime::test_engine()?;
         let spec = DatasetSpec::tiny();
         let part = Partition::build(&spec);
         let g = Generator::new(&spec);
         let ds = g.client_dataset(&part.clients[0], 0);
-        Some((Engine::new(dir).unwrap(), spec, ds))
+        Some((eng, spec, ds))
     }
 
     #[test]

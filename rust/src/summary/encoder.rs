@@ -50,6 +50,13 @@ impl SummaryEngine for EncoderSummary {
         vec![(0, ch), (ch, self.spec.classes)]
     }
 
+    fn model_host_secs(&self, ds: &ClientDataset) -> f64 {
+        // Coreset scan over the client's n samples, then the encoder artifact
+        // over k coreset images (cost ~ k * pixels * feature_dim).
+        let enc_flops = self.spec.coreset_k * self.spec.flat_dim() * self.spec.feature_dim;
+        2e-9 * ds.n as f64 + 1.5e-10 * enc_flops as f64 + 5e-6
+    }
+
     fn summarize(
         &self,
         eng: &Engine,
@@ -78,12 +85,7 @@ mod tests {
     use crate::data::{Generator, Partition};
 
     fn engine() -> Option<Engine> {
-        let dir = Engine::default_dir();
-        if dir.join("manifest.tsv").exists() {
-            Some(Engine::new(dir).unwrap())
-        } else {
-            None
-        }
+        crate::runtime::test_engine()
     }
 
     fn setup() -> (DatasetSpec, Vec<ClientDataset>) {

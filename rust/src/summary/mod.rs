@@ -26,7 +26,12 @@ pub use pxy::PxySummary;
 pub use py::PySummary;
 
 /// A distribution-summary algorithm (the paper's central abstraction).
-pub trait SummaryEngine {
+///
+/// `Send + Sync` so the fleet refresher can summarize many clients across
+/// worker threads through one shared engine reference — implementations hold
+/// only immutable state (spec + fixed bases); all per-call randomness comes
+/// in through the `rng` argument.
+pub trait SummaryEngine: Send + Sync {
     /// Short name used in Table 2 rows ("P(y)", "P(X|y)", "Encoder+Kmeans").
     fn name(&self) -> &'static str;
 
@@ -52,6 +57,26 @@ pub trait SummaryEngine {
     /// Default: one homogeneous block.
     fn blocks(&self) -> Vec<(usize, usize)> {
         vec![(0, self.dim())]
+    }
+
+    /// Does `summarize` execute AOT artifacts through the PJRT runtime?
+    /// Pure-Rust engines (JL/PCA, native P(y)) override this to `false`,
+    /// which lets the refresher give worker threads manifest-free engines.
+    fn needs_runtime(&self) -> bool {
+        true
+    }
+
+    /// Deterministic model of the host seconds needed to summarize `ds`,
+    /// replacing measured wall-clock in the *simulated* device accounting
+    /// (`coordinator::summaries`). The simulation must be bitwise
+    /// reproducible across thread counts and cache hits, which measured
+    /// timing can never be; engines override with a cost matching their
+    /// algorithm's complexity, with constants on the order of the measured
+    /// CI-host times. Real measured time is still reported separately
+    /// (`RefreshResult::host_secs`, the overhead benches).
+    fn model_host_secs(&self, ds: &ClientDataset) -> f64 {
+        // Default: one linear scan of the client's data plus output write.
+        1e-8 * (ds.n * ds.flat_dim) as f64 + 1e-9 * self.dim() as f64 + 1e-6
     }
 }
 

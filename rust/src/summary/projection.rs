@@ -81,6 +81,16 @@ impl SummaryEngine for JlSummary {
         vec![(0, ch), (ch, self.spec.classes)]
     }
 
+    fn needs_runtime(&self) -> bool {
+        false
+    }
+
+    fn model_host_secs(&self, ds: &ClientDataset) -> f64 {
+        // Coreset scan + dense projection of k coreset images onto h rows.
+        let proj_flops = self.spec.coreset_k * self.spec.flat_dim() * self.basis.rows();
+        2e-9 * ds.n as f64 + 2.5e-10 * proj_flops as f64 + 1e-6
+    }
+
     fn summarize(
         &self,
         _eng: &Engine,
@@ -218,6 +228,16 @@ impl SummaryEngine for PcaSummary {
         vec![(0, ch), (ch, self.spec.classes)]
     }
 
+    fn needs_runtime(&self) -> bool {
+        false
+    }
+
+    fn model_host_secs(&self, ds: &ClientDataset) -> f64 {
+        let proj_flops =
+            self.spec.coreset_k * self.spec.flat_dim() * self.basis.components.rows();
+        2e-9 * ds.n as f64 + 2.5e-10 * proj_flops as f64 + 1e-6
+    }
+
     fn summarize(
         &self,
         _eng: &Engine,
@@ -290,13 +310,9 @@ mod tests {
         let g = Generator::new(&spec);
         let ds = g.client_dataset(&part.clients[0], 0);
         let jl = JlSummary::new(&spec);
-        // Engine is unused by JL; fabricate via a dummy — pass any Engine
-        // only when artifacts exist, else skip (Engine creation needs PJRT).
-        let dir = Engine::default_dir();
-        if !dir.join("manifest.tsv").exists() {
-            return;
-        }
-        let eng = Engine::new(dir).unwrap();
+        // Engine is unused by JL: a manifest-free one lets this run in every
+        // environment.
+        let eng = Engine::without_artifacts().unwrap();
         let (a, _) = jl.summarize(&eng, &ds, &mut Rng::new(7)).unwrap();
         let (b, _) = jl.summarize(&eng, &ds, &mut Rng::new(7)).unwrap();
         assert_eq!(a.len(), spec.summary_dim());
@@ -313,11 +329,7 @@ mod tests {
         let spec = DatasetSpec::tiny();
         let part = Partition::build(&spec);
         let g = Generator::new(&spec);
-        let dir = Engine::default_dir();
-        if !dir.join("manifest.tsv").exists() {
-            return;
-        }
-        let eng = Engine::new(dir).unwrap();
+        let eng = Engine::without_artifacts().unwrap();
         let jl = JlSummary::new(&spec);
         let rng = Rng::new(8);
         let by_group = |grp: usize, n: usize| -> Vec<Vec<f32>> {

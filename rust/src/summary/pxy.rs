@@ -68,6 +68,13 @@ impl SummaryEngine for PxySummary {
         self.spec.pxy_dim()
     }
 
+    fn model_host_secs(&self, ds: &ClientDataset) -> f64 {
+        // Bucketing every pixel of every sample plus writing the huge
+        // B*C*F histogram — the Table 2 row that is 1-2 orders of magnitude
+        // slower than the proposed summary.
+        3e-8 * (ds.n * self.spec.flat_dim()) as f64 + 1e-8 * self.dim() as f64 + 2e-6
+    }
+
     fn summarize(
         &self,
         eng: &Engine,
@@ -125,12 +132,8 @@ mod tests {
 
     #[test]
     fn artifact_matches_native() {
-        let dir = Engine::default_dir();
-        if !dir.join("manifest.tsv").exists() {
-            return;
-        }
+        let Some(eng) = crate::runtime::test_engine() else { return };
         let (spec, ds) = setup();
-        let eng = Engine::new(dir).unwrap();
         let mut rng = Rng::new(0);
         let px = PxySummary::new(&spec);
         let (got, _) = px.summarize(&eng, &ds, &mut rng).unwrap();

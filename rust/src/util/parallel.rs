@@ -54,22 +54,43 @@ pub fn for_each_dynamic<F>(n: usize, threads: usize, f: F)
 where
     F: Fn(usize) + Sync,
 {
+    for_each_dynamic_init(n, threads, || (), |_, i| f(i));
+}
+
+/// [`for_each_dynamic`] with per-worker state: every worker thread calls
+/// `init` once and passes the resulting state to each `f(&mut state, i)` it
+/// executes. The fleet refresher uses this to give each worker its own
+/// runtime `Engine` handle (the PJRT wrappers are not `Sync`, so the handle
+/// cannot be shared across threads).
+///
+/// Every index is visited exactly once; the index→worker mapping is
+/// non-deterministic, so `f` must write only to per-index slots for the
+/// overall result to be deterministic.
+pub fn for_each_dynamic_init<S, I, F>(n: usize, threads: usize, init: I, f: F)
+where
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) + Sync,
+{
     let threads = threads.clamp(1, n.max(1));
     if threads <= 1 {
+        let mut state = init();
         for i in 0..n {
-            f(i);
+            f(&mut state, i);
         }
         return;
     }
     let cursor = AtomicUsize::new(0);
     std::thread::scope(|s| {
         for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            s.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    f(&mut state, i);
                 }
-                f(i);
             });
         }
     });
@@ -117,5 +138,40 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn dynamic_init_runs_init_once_per_worker() {
+        use std::sync::atomic::AtomicUsize;
+        let inits = AtomicUsize::new(0);
+        let sum = AtomicU64::new(0);
+        let n = 1000;
+        for_each_dynamic_init(
+            n,
+            4,
+            || inits.fetch_add(1, Ordering::Relaxed),
+            |_, i| {
+                sum.fetch_add(i as u64 + 1, Ordering::Relaxed);
+            },
+        );
+        let workers = inits.load(Ordering::Relaxed);
+        assert!(workers >= 1 && workers <= 4, "workers={workers}");
+        assert_eq!(sum.load(Ordering::Relaxed), (n as u64) * (n as u64 + 1) / 2);
+    }
+
+    #[test]
+    fn dynamic_init_state_is_per_worker_mutable() {
+        // Single-threaded: state accumulates across every index.
+        let total = AtomicU64::new(0);
+        for_each_dynamic_init(
+            10,
+            1,
+            || 0u64,
+            |s, i| {
+                *s += i as u64;
+                total.store(*s, Ordering::Relaxed);
+            },
+        );
+        assert_eq!(total.load(Ordering::Relaxed), 45);
     }
 }

@@ -1,0 +1,288 @@
+//! Determinism oracle suite for the fleet refresh subsystem
+//! (`coordinator::summaries`): the parallel path must equal the serial path
+//! element-for-element, cached refreshes must equal cold refreshes, and the
+//! mini-batch clustering backend must be thread-count invariant and close to
+//! Lloyd's in quality.
+//!
+//! Everything here runs against the pure-Rust `JlSummary` engine and a
+//! manifest-free `Engine`, so the oracle holds in every environment — no AOT
+//! artifacts or PJRT backend required. `FEDDDE_THREADS` is exercised through
+//! `RefreshOptions::threads` (the same value the env var feeds via
+//! `util::parallel::default_threads`); passing it explicitly keeps the tests
+//! independent of process-global env state.
+
+use feddde::cluster::kmeans::{self, KmeansConfig};
+use feddde::cluster::{minibatch, ClusterBackend, MinibatchConfig};
+use feddde::coordinator::{FleetRefresher, RefreshOptions, RefreshResult};
+use feddde::data::{DatasetSpec, DriftSchedule, Generator, Partition};
+use feddde::device::{DeviceProfile, FleetModel};
+use feddde::runtime::Engine;
+use feddde::summary::{JlSummary, SummaryEngine};
+use feddde::util::stats;
+
+struct Fixture {
+    spec: DatasetSpec,
+    partition: Partition,
+    generator: Generator,
+    fleet: Vec<DeviceProfile>,
+    engine: Engine,
+    summary: JlSummary,
+}
+
+fn fixture(n_clients: usize) -> Fixture {
+    let spec = if n_clients == 0 {
+        DatasetSpec::tiny()
+    } else {
+        DatasetSpec::tiny().with_clients(n_clients)
+    };
+    let partition = Partition::build(&spec);
+    let generator = Generator::new(&spec);
+    let fleet = FleetModel::default().sample_fleet(spec.n_clients);
+    let engine = Engine::without_artifacts().unwrap();
+    let summary = JlSummary::new(&spec);
+    Fixture { spec, partition, generator, fleet, engine, summary }
+}
+
+fn refresh(
+    fx: &Fixture,
+    opts: RefreshOptions,
+    drift: &DriftSchedule,
+    round: usize,
+    seed: u64,
+) -> RefreshResult {
+    FleetRefresher::new(opts)
+        .refresh(
+            &fx.engine,
+            &fx.summary,
+            &fx.partition,
+            &fx.generator,
+            &fx.fleet,
+            drift,
+            round,
+            fx.spec.n_groups,
+            seed,
+        )
+        .unwrap()
+}
+
+/// Bitwise equality of two refresh results (summaries, clusters, simulated
+/// device seconds). Measured wall-clock fields are deliberately excluded.
+fn assert_bitwise_equal(a: &RefreshResult, b: &RefreshResult, what: &str) {
+    assert_eq!(a.summaries.rows(), b.summaries.rows(), "{what}: row count");
+    assert_eq!(a.summaries.cols(), b.summaries.cols(), "{what}: col count");
+    for (i, (x, y)) in a.summaries.data().iter().zip(b.summaries.data()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: summaries differ at flat index {i}: {x} vs {y}"
+        );
+    }
+    assert_eq!(a.clusters, b.clusters, "{what}: cluster assignments differ");
+    assert_eq!(a.device_secs.len(), b.device_secs.len(), "{what}: device_secs len");
+    for (i, (x, y)) in a.device_secs.iter().zip(&b.device_secs).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: device_secs differ at client {i}: {x} vs {y}"
+        );
+    }
+}
+
+fn lloyd_opts(threads: usize) -> RefreshOptions {
+    RefreshOptions {
+        threads,
+        backend: ClusterBackend::Lloyd,
+        use_cache: false,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn parallel_refresh_equals_serial_for_all_thread_counts() {
+    let fx = fixture(0);
+    let drift = DriftSchedule::none();
+    let serial = refresh(&fx, lloyd_opts(1), &drift, 0, 7);
+    for threads in [2, 4, 8] {
+        let parallel = refresh(&fx, lloyd_opts(threads), &drift, 0, 7);
+        assert_bitwise_equal(&serial, &parallel, &format!("threads=1 vs {threads}"));
+    }
+}
+
+#[test]
+fn parallel_refresh_equals_serial_mid_drift() {
+    // Thread-count invariance must also hold when clients sit in different
+    // drift phases (irregular per-client work).
+    let fx = fixture(48);
+    let drift = DriftSchedule::at(vec![2, 5], 0.4);
+    for round in [0, 3, 6] {
+        let serial = refresh(&fx, lloyd_opts(1), &drift, round, 11);
+        let parallel = refresh(&fx, lloyd_opts(8), &drift, round, 11);
+        assert_bitwise_equal(&serial, &parallel, &format!("round {round}"));
+    }
+}
+
+#[test]
+fn cached_refresh_equals_cold_refresh_under_drift() {
+    // The central cache oracle: at every round of a drift schedule, a
+    // refresher that reuses cached rows must equal a cold refresher that
+    // recomputes everything — bitwise.
+    let fx = fixture(0);
+    let drift = DriftSchedule::at(vec![3, 7], 0.5);
+    let seed = 9;
+    let mut cached = FleetRefresher::new(RefreshOptions {
+        backend: ClusterBackend::Lloyd,
+        ..Default::default()
+    });
+    let mut saw_partial_recompute = false;
+    for round in 0..10 {
+        let warm = cached
+            .refresh(
+                &fx.engine,
+                &fx.summary,
+                &fx.partition,
+                &fx.generator,
+                &fx.fleet,
+                &drift,
+                round,
+                fx.spec.n_groups,
+                seed,
+            )
+            .unwrap();
+        let cold = refresh(&fx, lloyd_opts(0), &drift, round, seed);
+        assert_bitwise_equal(&cold, &warm, &format!("cold vs cached at round {round}"));
+        if round > 0 && !warm.recomputed.is_empty() && warm.recomputed.len() < fx.spec.n_clients
+        {
+            saw_partial_recompute = true;
+        }
+    }
+    assert!(
+        saw_partial_recompute,
+        "drift schedule never produced a partial recompute — cache untested"
+    );
+    assert!(cached.cache().hits() > 0);
+}
+
+#[test]
+fn cache_recomputes_nothing_without_drift() {
+    let fx = fixture(0);
+    let drift = DriftSchedule::none();
+    let mut refresher = FleetRefresher::new(RefreshOptions {
+        backend: ClusterBackend::Lloyd,
+        ..Default::default()
+    });
+    let first = refresher
+        .refresh(
+            &fx.engine,
+            &fx.summary,
+            &fx.partition,
+            &fx.generator,
+            &fx.fleet,
+            &drift,
+            0,
+            fx.spec.n_groups,
+            5,
+        )
+        .unwrap();
+    assert_eq!(first.recomputed.len(), fx.spec.n_clients);
+    for round in 1..5 {
+        let next = refresher
+            .refresh(
+                &fx.engine,
+                &fx.summary,
+                &fx.partition,
+                &fx.generator,
+                &fx.fleet,
+                &drift,
+                round,
+                fx.spec.n_groups,
+                5,
+            )
+            .unwrap();
+        assert!(next.recomputed.is_empty(), "round {round} recomputed {:?}", next.recomputed);
+        assert_bitwise_equal(&first, &next, &format!("cached round {round}"));
+    }
+}
+
+#[test]
+fn minibatch_backend_is_thread_count_invariant() {
+    let fx = fixture(64);
+    let drift = DriftSchedule::none();
+    let opts = |threads| RefreshOptions {
+        threads,
+        backend: ClusterBackend::Minibatch,
+        use_cache: false,
+        ..Default::default()
+    };
+    let serial = refresh(&fx, opts(1), &drift, 0, 13);
+    let parallel = refresh(&fx, opts(8), &drift, 0, 13);
+    assert_bitwise_equal(&serial, &parallel, "minibatch threads=1 vs 8");
+}
+
+#[test]
+fn auto_backend_switches_to_minibatch_at_scale() {
+    // Above the threshold the auto backend must still produce a valid,
+    // thread-count-invariant clustering.
+    let fx = fixture(600); // >= MINIBATCH_AUTO_THRESHOLD
+    let drift = DriftSchedule::none();
+    let opts = |threads| RefreshOptions {
+        threads,
+        backend: ClusterBackend::Auto,
+        use_cache: false,
+        ..Default::default()
+    };
+    let a = refresh(&fx, opts(1), &drift, 0, 17);
+    let b = refresh(&fx, opts(4), &drift, 0, 17);
+    assert_bitwise_equal(&a, &b, "auto backend at 600 clients");
+    let ari = stats::adjusted_rand_index(&a.clusters, &fx.partition.group_truth());
+    assert!(ari > 0.2, "auto/minibatch clustering lost group structure: ari={ari}");
+}
+
+#[test]
+fn minibatch_ari_within_tolerance_of_lloyds_on_tiny() {
+    // The satellite oracle: mini-batch assignments recover the planted
+    // groups (ARI vs partition.group_truth()) within 0.1 of Lloyd's.
+    let fx = fixture(0);
+    let drift = DriftSchedule::none();
+    let truth = fx.partition.group_truth();
+    let lloyd = refresh(&fx, lloyd_opts(0), &drift, 0, 7);
+    let mb = refresh(
+        &fx,
+        RefreshOptions {
+            backend: ClusterBackend::Minibatch,
+            use_cache: false,
+            ..Default::default()
+        },
+        &drift,
+        0,
+        7,
+    );
+    let ari_lloyd = stats::adjusted_rand_index(&lloyd.clusters, &truth);
+    let ari_mb = stats::adjusted_rand_index(&mb.clusters, &truth);
+    assert!(
+        ari_mb >= ari_lloyd - 0.1,
+        "minibatch ARI {ari_mb:.3} more than 0.1 below Lloyd's {ari_lloyd:.3}"
+    );
+}
+
+#[test]
+fn direct_minibatch_and_lloyd_agree_on_separated_summaries() {
+    // Belt-and-braces on the raw engines (no refresher): same summary
+    // matrix, both backends, ARI within 0.1.
+    let fx = fixture(96);
+    let drift = DriftSchedule::none();
+    let r = refresh(&fx, lloyd_opts(0), &drift, 0, 23);
+    let balanced = feddde::cluster::balance_blocks(&r.summaries, &fx.summary.blocks());
+    let mut kcfg = KmeansConfig::new(fx.spec.n_groups);
+    kcfg.seed = 23;
+    let lloyd = kmeans::fit(&balanced, &kcfg);
+    let mut mcfg = MinibatchConfig::new(fx.spec.n_groups);
+    mcfg.seed = 23;
+    let mb = minibatch::fit(&balanced, &mcfg);
+    let truth = fx.partition.group_truth();
+    let ari_lloyd = stats::adjusted_rand_index(&lloyd.assignments, &truth);
+    let ari_mb = stats::adjusted_rand_index(&mb.assignments, &truth);
+    assert!(
+        ari_mb >= ari_lloyd - 0.1,
+        "minibatch {ari_mb:.3} vs lloyd {ari_lloyd:.3}"
+    );
+}

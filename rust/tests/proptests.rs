@@ -2,9 +2,13 @@
 //! coordinator-level invariants over generated fleets, datasets, and
 //! clusterings.
 
-use feddde::cluster::{dbscan, kmeans};
+use feddde::cluster::{dbscan, kmeans, ClusterBackend};
 use feddde::coordinator::fedavg::fedavg;
-use feddde::data::{coreset, DatasetSpec, Generator, Partition};
+use feddde::coordinator::{FleetRefresher, RefreshOptions};
+use feddde::data::{coreset, DatasetSpec, DriftSchedule, Generator, Partition};
+use feddde::device::FleetModel;
+use feddde::runtime::Engine;
+use feddde::summary::JlSummary;
 use feddde::util::mat::Mat;
 use feddde::util::proptest::check;
 use feddde::util::rng::Rng;
@@ -191,6 +195,109 @@ fn partition_statistics_track_spec_across_seeds() {
         assert!(avg > spec.samples_avg * 0.5 && avg < spec.samples_avg * 2.0);
         // group ids are always < n_groups
         assert!(p.clients.iter().all(|c| c.group < spec.n_groups));
+    });
+}
+
+#[test]
+fn summary_cache_recomputes_exactly_the_drifted_clients() {
+    // For random drift schedules: between two refreshes, the cached
+    // refresher recomputes exactly the clients whose drift phase changed,
+    // and every non-drifted row is byte-identical to the previous refresh.
+    check(6, |g| {
+        let spec = DatasetSpec::tiny();
+        let partition = Partition::build(&spec);
+        let generator = Generator::new(&spec);
+        let fleet = FleetModel::default().sample_fleet(spec.n_clients);
+        let engine = Engine::without_artifacts().unwrap();
+        let jl = JlSummary::new(&spec);
+
+        let n_changes = g.usize_in(1, 3);
+        let change_rounds: Vec<usize> = (0..n_changes).map(|_| g.usize_in(1, 15)).collect();
+        let frac = g.f64_in(0.1, 1.0);
+        let drift = DriftSchedule::at(change_rounds, frac);
+        let seed = 1000 + g.case as u64;
+        let r1_round = g.usize_in(0, 8);
+        let r2_round = r1_round + g.usize_in(0, 8);
+
+        let mut refresher = FleetRefresher::new(RefreshOptions {
+            backend: ClusterBackend::Lloyd,
+            ..Default::default()
+        });
+        let r1 = refresher
+            .refresh(
+                &engine, &jl, &partition, &generator, &fleet, &drift, r1_round,
+                spec.n_groups, seed,
+            )
+            .unwrap();
+        assert_eq!(r1.recomputed.len(), spec.n_clients, "cold refresh must compute all");
+
+        let r2 = refresher
+            .refresh(
+                &engine, &jl, &partition, &generator, &fleet, &drift, r2_round,
+                spec.n_groups, seed,
+            )
+            .unwrap();
+        let expected: Vec<usize> = (0..spec.n_clients)
+            .filter(|&i| {
+                let id = partition.clients[i].client_id;
+                drift.client_phase(id, r1_round, seed) != drift.client_phase(id, r2_round, seed)
+            })
+            .collect();
+        assert_eq!(
+            r2.recomputed, expected,
+            "recompute set != drifted set (rounds {r1_round}->{r2_round})"
+        );
+        for i in 0..spec.n_clients {
+            if !expected.contains(&i) {
+                let a = r1.summaries.row(i);
+                let b = r2.summaries.row(i);
+                let same = a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(same, "non-drifted row {i} not byte-identical");
+            }
+        }
+    });
+}
+
+#[test]
+fn cached_device_secs_match_cold_for_random_schedules() {
+    // The simulated device accounting must be identical whether a row came
+    // from the cache or from a recompute.
+    check(4, |g| {
+        let spec = DatasetSpec::tiny();
+        let partition = Partition::build(&spec);
+        let generator = Generator::new(&spec);
+        let fleet = FleetModel::default().sample_fleet(spec.n_clients);
+        let engine = Engine::without_artifacts().unwrap();
+        let jl = JlSummary::new(&spec);
+        let drift = DriftSchedule::at(vec![g.usize_in(1, 6)], g.f64_in(0.2, 0.9));
+        let seed = 2000 + g.case as u64;
+
+        let mut cached = FleetRefresher::new(RefreshOptions {
+            backend: ClusterBackend::Lloyd,
+            ..Default::default()
+        });
+        for round in [0, g.usize_in(1, 10)] {
+            let warm = cached
+                .refresh(
+                    &engine, &jl, &partition, &generator, &fleet, &drift, round,
+                    spec.n_groups, seed,
+                )
+                .unwrap();
+            let cold = FleetRefresher::new(RefreshOptions {
+                backend: ClusterBackend::Lloyd,
+                use_cache: false,
+                ..Default::default()
+            })
+            .refresh(
+                &engine, &jl, &partition, &generator, &fleet, &drift, round,
+                spec.n_groups, seed,
+            )
+            .unwrap();
+            for (i, (a, b)) in warm.device_secs.iter().zip(&cold.device_secs).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "device_secs client {i} round {round}");
+            }
+            assert_eq!(warm.clusters, cold.clusters, "clusters at round {round}");
+        }
     });
 }
 

@@ -1,0 +1,136 @@
+//! Minimal offline stand-in for the `anyhow` crate, covering exactly the
+//! surface this repository uses: `Result`, `Error`, the `Context` extension
+//! trait on `Result` and `Option`, and the `bail!` / `anyhow!` macros.
+//!
+//! Semantics match the real crate where it matters to callers here:
+//! `Display` shows the outermost message; `{:#}` (alternate) joins the whole
+//! context chain with `": "`, outermost first — test assertions like
+//! `format!("{err:#}").contains(...)` behave identically.
+
+use std::fmt;
+
+/// An error with a chain of context messages (outermost first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a context message (what `Context::context` does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `.unwrap()` on an Err prints this; mirror anyhow's Debug layout
+        // (message, then the context chain as causes).
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        for cause in self.chain.iter().skip(1) {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `anyhow::Result<T>` alias with our Error as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        // `{:#}` so an inner `anyhow::Error` keeps its full chain.
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with a formatted `Err(anyhow::Error)`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Construct an `anyhow::Error` from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("root {}", 42)
+    }
+
+    #[test]
+    fn display_and_alternate_chain() {
+        let err = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{err}"), "outer");
+        assert_eq!(format!("{err:#}"), "outer: root 42");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let err = v.with_context(|| format!("missing {}", "x")).unwrap_err();
+        assert_eq!(format!("{err:#}"), "missing x");
+    }
+
+    #[test]
+    fn std_error_converts() {
+        let e: Error = "nan".parse::<f64>().unwrap_err().into();
+        assert!(!format!("{e}").is_empty());
+    }
+}

@@ -1,0 +1,60 @@
+//! Minimal offline stand-in for the `log` crate: the five level macros,
+//! printing to stderr when `RUST_LOG` is set and doing nothing otherwise.
+
+/// True when logging output is enabled (any non-empty `RUST_LOG`).
+pub fn enabled() -> bool {
+    std::env::var_os("RUST_LOG").map(|v| !v.is_empty()).unwrap_or(false)
+}
+
+#[doc(hidden)]
+pub fn emit(level: &str, args: std::fmt::Arguments<'_>) {
+    eprintln!("[{level}] {args}");
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => {
+        if $crate::enabled() { $crate::emit("TRACE", format_args!($($arg)*)); }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::enabled() { $crate::emit("DEBUG", format_args!($($arg)*)); }
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::enabled() { $crate::emit("INFO", format_args!($($arg)*)); }
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        if $crate::enabled() { $crate::emit("WARN", format_args!($($arg)*)); }
+    };
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => {
+        if $crate::enabled() { $crate::emit("ERROR", format_args!($($arg)*)); }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn macros_compile_and_run() {
+        // No assertion on output — just exercise every macro's expansion.
+        trace!("t {}", 1);
+        debug!("d {}", 2);
+        info!("i {}", 3);
+        warn!("w {}", 4);
+        error!("e {}", 5);
+    }
+}

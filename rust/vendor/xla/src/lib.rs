@@ -1,0 +1,250 @@
+//! Offline **stub** of the XLA/PJRT binding the runtime layer targets.
+//!
+//! `Literal` is fully functional (typed storage + shape + reshape +
+//! element access) so the literal-helper code paths and their tests run for
+//! real. The PJRT half — HLO parsing, compilation, execution — returns
+//! errors: there is no XLA runtime in this environment. `feddde::runtime`
+//! gates everything artifact-dependent on [`runtime_available`], which a real
+//! binding's shim should override to `true` (see vendor/README.md).
+
+use std::fmt;
+
+/// True when a real PJRT backend is linked. This stub has none.
+pub fn runtime_available() -> bool {
+    false
+}
+
+/// Stub error type.
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: PJRT runtime unavailable (vendored xla stub — swap in a real \
+         binding per rust/vendor/README.md)"
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Literal: functional
+// ---------------------------------------------------------------------------
+
+/// Element types a literal can hold.
+#[derive(Debug, Clone, PartialEq)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host tensor: typed flat storage plus dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Conversion trait for typed element access (implemented for f32 and i32).
+pub trait NativeType: Sized + Copy {
+    fn extract(lit: &Literal) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn extract(lit: &Literal) -> Option<&[f32]> {
+        match &lit.data {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn extract(lit: &Literal) -> Option<&[i32]> {
+        match &lit.data {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Scalar f32 literal (shape `[]`).
+    pub fn scalar(v: f32) -> Literal {
+        Literal { data: Data::F32(vec![v]), dims: Vec::new() }
+    }
+
+    /// Rank-1 f32 literal.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: Data::F32(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    /// Rank-1 i32 literal.
+    pub fn vec1_i32(data: &[i32]) -> Literal {
+        Literal { data: Data::I32(data.to_vec()), dims: vec![data.len() as i64] }
+    }
+
+    /// A tuple literal (what executions return).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { data: Data::Tuple(elements), dims: Vec::new() }
+    }
+
+    /// Reinterpret with new dimensions; errors if the element count differs.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want as usize != self.element_count() {
+            return Err(XlaError(format!(
+                "reshape: {} elements into shape {dims:?}",
+                self.element_count()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(t) => t.len(),
+        }
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// All elements as `T` (errors on dtype mismatch or tuple).
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| XlaError("to_vec: literal dtype mismatch".into()))
+    }
+
+    /// First element as `T`.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::extract(self)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| XlaError("get_first_element: empty or dtype mismatch".into()))
+    }
+
+    /// Decompose a tuple literal into its elements.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            Data::Tuple(t) => Ok(t.clone()),
+            _ => Err(XlaError("to_tuple: literal is not a tuple".into())),
+        }
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT: stubbed
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO module (stub: never constructible from text here).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(unavailable(&format!("parsing HLO text {path}")))
+    }
+}
+
+/// An XLA computation (stub).
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A PJRT client handle. Creation succeeds (cheap, lets manifest-free
+/// engines exist for pure-Rust summary paths); compilation does not.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("compiling"))
+    }
+}
+
+/// A compiled executable (stub: never constructible).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("executing"))
+    }
+}
+
+/// A device buffer (stub: never constructible).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("fetching buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.shape(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(7.5);
+        assert_eq!(s.get_first_element::<f32>().unwrap(), 7.5);
+        let t = Literal::tuple(vec![s.clone(), Literal::vec1_i32(&[1, 2])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].to_vec::<i32>().unwrap(), vec![1, 2]);
+        assert!(s.to_tuple().is_err());
+    }
+
+    #[test]
+    fn pjrt_is_stubbed() {
+        assert!(!runtime_available());
+        assert!(PjRtClient::cpu().is_ok());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
