@@ -14,12 +14,12 @@
 
 use anyhow::Result;
 
-use feddde::cluster::{dbscan, kmeans, minibatch};
+use feddde::cluster::{dbscan, kmeans, minibatch, Pruning};
 use feddde::data::{DatasetSpec, Generator, Partition};
 use feddde::device::FleetModel;
 use feddde::runtime::Engine;
 use feddde::summary::{EncoderSummary, PxySummary, PySummary, SummaryEngine};
-use feddde::util::mat::Mat;
+use feddde::util::mat::{gemm_nt, gemm_nt_f64_serial, Mat};
 use feddde::util::rng::Rng;
 use feddde::util::stats;
 
@@ -221,6 +221,36 @@ fn report(name: &str, full: bool) -> Result<()> {
         "  (minibatch)", "-", "-", fmt_cluster(&c_mb), c_mb.label, ari_delta
     );
 
+    // Kernel-layer rows (BENCH_kernels.json carries the precise numbers):
+    // the same encoder summaries through naive vs bound-pruned Lloyd. The
+    // assignments are bitwise identical by contract — asserted here too.
+    let mut cfg_off = kmeans::KmeansConfig::new(spec.n_groups.min(m_enc.rows()));
+    cfg_off.seed = 5;
+    cfg_off.pruning = Pruning::Off;
+    let mut cfg_on = cfg_off.clone();
+    cfg_on.pruning = Pruning::Bounds;
+    let t0 = std::time::Instant::now();
+    let r_off = kmeans::fit(&m_enc, &cfg_off);
+    let naive_s = t0.elapsed().as_secs_f64();
+    let t1 = std::time::Instant::now();
+    let r_on = kmeans::fit(&m_enc, &cfg_on);
+    let pruned_s = t1.elapsed().as_secs_f64();
+    assert_eq!(
+        r_off.assignments, r_on.assignments,
+        "pruned clustering diverged from naive — kernel contract broken"
+    );
+    println!(
+        "{:<16} {:>14} {:>14}   naive {:.3}s vs pruned {:.3}s ({:.1}x, \
+         skip {:.0}%, bitwise-identical)",
+        "  (kernels)",
+        "-",
+        "-",
+        naive_s,
+        pruned_s,
+        naive_s / pruned_s.max(1e-9),
+        r_on.stats.skip_rate() * 100.0
+    );
+
     // E4: headline ratios.
     let sum_speedup = t_pxy.max / t_enc.max.max(1e-9);
     let pxy_cluster = c_pxy.extrapolated.unwrap_or(c_pxy.secs);
@@ -233,9 +263,36 @@ fn report(name: &str, full: bool) -> Result<()> {
     Ok(())
 }
 
+/// Projection-kernel micro-row: the per-client summary hot path (coreset
+/// images x basis) as a scalar f64 GEMV vs the blocked lane GEMM.
+fn projection_kernel_row() {
+    let (ck, fd, h) = feddde::util::bench::PROJECTION_WORKLOAD_SHAPE;
+    let (imgs, basis) = feddde::util::bench::projection_workload();
+    let reps = 20;
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        // Same shared baseline BENCH_kernels.json measures against.
+        std::hint::black_box(gemm_nt_f64_serial(&imgs, &basis).data()[0]);
+    }
+    let naive_s = t0.elapsed().as_secs_f64() / reps as f64;
+    let t1 = std::time::Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(gemm_nt(&imgs, &basis).data()[0]);
+    }
+    let gemm_s = t1.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "kernel layer: projection ({ck}x{fd} onto {h}) scalar GEMV {:.2}ms vs \
+         blocked GEMM {:.2}ms — {:.1}x\n",
+        naive_s * 1e3,
+        gemm_s * 1e3,
+        naive_s / gemm_s.max(1e-9)
+    );
+}
+
 fn main() -> Result<()> {
     let full = std::env::args().any(|a| a == "--full");
     println!("Table 2 — overhead comparison (simulated heterogeneous devices; DESIGN.md §5)\n");
+    projection_kernel_row();
     report("femnist", full)?;
     report("openimage", full)?;
     if !full {

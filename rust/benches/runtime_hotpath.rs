@@ -1,19 +1,22 @@
 //! Perf-pass bench: request-path latency of every AOT artifact the
 //! coordinator executes per round, plus rust-native vs HLO K-means, the new
-//! mini-batch K-means hot path, and the FedAvg aggregation loop.
-//! EXPERIMENTS.md §Perf quotes these lines.
+//! mini-batch K-means hot path, the kernel layer (naive vs GEMM projection,
+//! naive vs bound-pruned assignment), and the FedAvg aggregation loop.
+//! EXPERIMENTS.md §Perf quotes these lines; the kernel section also emits
+//! `results/BENCH_kernels.json` with speedups + distance-skip stats.
 //!
 //!     cargo bench --bench runtime_hotpath
 //!
 //! Artifact sections need the AOT bundle + a real PJRT backend; the
-//! server-side hot loops (K-means, mini-batch, FedAvg) run everywhere.
+//! server-side hot loops (K-means, mini-batch, kernels, FedAvg) run
+//! everywhere.
 
-use feddde::cluster::{kmeans, minibatch};
+use feddde::cluster::{kmeans, minibatch, Pruning};
 use feddde::coordinator::fedavg::fedavg;
 use feddde::data::{DatasetSpec, Generator, Partition};
 use feddde::runtime::{lit_f32, lit_scalar, to_vec_f32, Engine};
-use feddde::util::bench::Bencher;
-use feddde::util::mat::Mat;
+use feddde::util::bench::{Bencher, Measurement};
+use feddde::util::mat::{gemm_nt, gemm_nt_f64_serial, Mat};
 use feddde::util::rng::Rng;
 
 fn bench_artifacts(b: &mut Bencher, engine: &Engine) -> Vec<f32> {
@@ -71,6 +74,114 @@ fn bench_artifacts(b: &mut Bencher, engine: &Engine) -> Vec<f32> {
     params
 }
 
+/// Kernel-layer section: measures the two GEMM-ified hot paths against
+/// their naive baselines and returns the BENCH_kernels.json payload.
+fn bench_kernels(b: &mut Bencher) -> String {
+    // Projection shape: coreset_k images of flat_dim pixels onto h basis
+    // rows — the per-client work in summary::projection. The workload is
+    // the shared fixture overhead_report also measures.
+    let (ck, fd, h) = feddde::util::bench::PROJECTION_WORKLOAD_SHAPE;
+    let (imgs, basis) = feddde::util::bench::projection_workload();
+    let m_proj_naive = b.bench(&format!("kernels/projection_naive_{ck}x{fd}x{h}"), || {
+        // The pre-kernel-layer path: one scalar f64 GEMV per image
+        // (shared baseline, see util::mat::gemm_nt_f64_serial).
+        std::hint::black_box(gemm_nt_f64_serial(&imgs, &basis).data()[0]);
+    });
+    let m_proj_gemm = b.bench(&format!("kernels/projection_gemm_{ck}x{fd}x{h}"), || {
+        std::hint::black_box(gemm_nt(&imgs, &basis).data()[0]);
+    });
+
+    // Clustered workload at the acceptance scale (N >= 1000, k >= 16):
+    // summary vectors cluster by construction, so blobs are the
+    // representative geometry for the bounds.
+    let (n, d, k) = (2048usize, 64usize, 16usize);
+    let mut rng = Rng::new(7);
+    let centers: Vec<f32> = (0..k * d).map(|_| (rng.normal() * 8.0) as f32).collect();
+    let mut data = Vec::with_capacity(n * d);
+    for i in 0..n {
+        let c = i % k;
+        for j in 0..d {
+            data.push(centers[c * d + j] + (rng.normal() * 0.5) as f32);
+        }
+    }
+    let pts = Mat::from_vec(data, n, d);
+    let threads = feddde::util::parallel::default_threads();
+
+    let fit_cfg = |pruning: Pruning| {
+        let mut cfg = kmeans::KmeansConfig::new(k);
+        cfg.seed = 8;
+        cfg.threads = threads;
+        cfg.pruning = pruning;
+        cfg
+    };
+    // Converged centroids + warm hints: the steady-state Lloyd round.
+    let fitted = kmeans::fit(&pts, &fit_cfg(Pruning::Off));
+    let hints = fitted.assignments.clone();
+    let m_assign_naive = b.bench(&format!("kernels/assign_naive_{n}x{d}x{k}"), || {
+        std::hint::black_box(kmeans::assign(&pts, &fitted.centroids, threads).1);
+    });
+    let mut assign_stats = kmeans::AssignStats::default();
+    let m_assign_pruned = b.bench(&format!("kernels/assign_pruned_{n}x{d}x{k}"), || {
+        let (_, inertia, st) =
+            kmeans::assign_pruned(&pts, &fitted.centroids, threads, Some(&hints));
+        assign_stats = st;
+        std::hint::black_box(inertia);
+    });
+
+    let m_fit_naive = b.bench_once(&format!("kernels/lloyd_fit_naive_{n}x{d}x{k}"), || {
+        std::hint::black_box(kmeans::fit(&pts, &fit_cfg(Pruning::Off)).inertia);
+    });
+    let mut fit_stats = kmeans::AssignStats::default();
+    let mut fit_iters = 0usize;
+    let m_fit_pruned = b.bench_once(&format!("kernels/lloyd_fit_pruned_{n}x{d}x{k}"), || {
+        let r = kmeans::fit(&pts, &fit_cfg(Pruning::Bounds));
+        fit_stats = r.stats;
+        fit_iters = r.iters;
+        std::hint::black_box(r.inertia);
+    });
+    println!(
+        "kernels: projection speedup {:.1}x; steady-state assign speedup {:.1}x \
+         (skip {:.1}%); Lloyd fit speedup {:.1}x over {} iters (skip {:.1}%)",
+        speedup(&m_proj_naive, &m_proj_gemm),
+        speedup(&m_assign_naive, &m_assign_pruned),
+        assign_stats.skip_rate() * 100.0,
+        speedup(&m_fit_naive, &m_fit_pruned),
+        fit_iters,
+        fit_stats.skip_rate() * 100.0,
+    );
+
+    format!(
+        "{{\n  \"projection\": {{\"m\": {ck}, \"f\": {fd}, \"h\": {h}, \
+         \"naive_s\": {:.6e}, \"gemm_s\": {:.6e}, \"speedup\": {:.2}}},\n  \
+         \"assign\": {{\"n\": {n}, \"d\": {d}, \"k\": {k}, \
+         \"naive_s\": {:.6e}, \"pruned_s\": {:.6e}, \"speedup\": {:.2}, \
+         \"skip_rate\": {:.4}, \"exact_evals\": {}, \"pairs\": {}}},\n  \
+         \"lloyd_fit\": {{\"n\": {n}, \"d\": {d}, \"k\": {k}, \"iters\": {fit_iters}, \
+         \"naive_s\": {:.6e}, \"pruned_s\": {:.6e}, \"speedup\": {:.2}, \
+         \"skip_rate\": {:.4}, \"exact_evals\": {}, \"screened\": {}, \"pairs\": {}}}\n}}\n",
+        m_proj_naive.mean_secs(),
+        m_proj_gemm.mean_secs(),
+        speedup(&m_proj_naive, &m_proj_gemm),
+        m_assign_naive.mean_secs(),
+        m_assign_pruned.mean_secs(),
+        speedup(&m_assign_naive, &m_assign_pruned),
+        assign_stats.skip_rate(),
+        assign_stats.exact,
+        assign_stats.pairs,
+        m_fit_naive.mean_secs(),
+        m_fit_pruned.mean_secs(),
+        speedup(&m_fit_naive, &m_fit_pruned),
+        fit_stats.skip_rate(),
+        fit_stats.exact,
+        fit_stats.screened,
+        fit_stats.pairs,
+    )
+}
+
+fn speedup(naive: &Measurement, fast: &Measurement) -> f64 {
+    naive.mean_secs() / fast.mean_secs().max(1e-12)
+}
+
 fn main() {
     println!("runtime_hotpath — per-call artifact latency + server-side hot loops\n");
     let mut b = Bencher::new(std::time::Duration::from_secs(3));
@@ -126,6 +237,14 @@ fn main() {
         cfg.max_iters = 30;
         std::hint::black_box(minibatch::fit(&mat, &cfg).inertia);
     });
+
+    // --- kernel layer: naive vs GEMM projection, naive vs pruned assign ------
+    // Runs in every environment (no artifacts needed) and always writes
+    // results/BENCH_kernels.json; artifact sections above keep their gating.
+    let kernels = bench_kernels(&mut b);
+    std::fs::write("results/BENCH_kernels.json", &kernels)
+        .expect("writing results/BENCH_kernels.json");
+    println!("\nwrote results/BENCH_kernels.json");
 
     // --- FedAvg over 10 updates of femnist params -----------------------------
     let updates: Vec<(Vec<f32>, f64)> =

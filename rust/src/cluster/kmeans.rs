@@ -2,8 +2,17 @@
 //! iterations, parallel over points. This is the server-side clustering
 //! engine for the proposed encoder summaries; `runtime::KmeansHlo` offers
 //! the same Lloyd step through the AOT Pallas-kernel artifact.
+//!
+//! Two assignment kernels share the loop: the naive full scan ([`assign`])
+//! and the bound-pruned path ([`assign_pruned`]) built on the
+//! `‖x‖² − 2x·c + ‖c‖²` decomposition with cached norms plus Hamerly-style
+//! triangle-inequality bounds. Pruning only ever skips a centroid it can
+//! *prove* cannot win; every surviving candidate is decided by the exact
+//! [`sqdist`], so both kernels return bitwise-identical assignments and
+//! inertia (property-tested here and in `rust/tests/proptests.rs`).
 
-use crate::util::mat::{sqdist, Mat};
+use crate::cluster::Pruning;
+use crate::util::mat::{dot8, row_sqnorms, sqdist, Mat};
 use crate::util::parallel::{default_threads, map_chunks};
 use crate::util::rng::Rng;
 
@@ -16,11 +25,54 @@ pub struct KmeansConfig {
     pub tol: f64,
     pub seed: u64,
     pub threads: usize,
+    /// Assignment kernel selection (bitwise-identical either way).
+    pub pruning: Pruning,
 }
 
 impl KmeansConfig {
     pub fn new(k: usize) -> Self {
-        KmeansConfig { k, max_iters: 50, tol: 1e-4, seed: 0, threads: default_threads() }
+        KmeansConfig {
+            k,
+            max_iters: 50,
+            tol: 1e-4,
+            seed: 0,
+            threads: default_threads(),
+            pruning: Pruning::default(),
+        }
+    }
+}
+
+/// Distance-computation accounting for one assignment pass (or a whole fit,
+/// via [`AssignStats::merge`]). `runtime_hotpath` reports these in
+/// `BENCH_kernels.json`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AssignStats {
+    /// point × centroid pairs considered.
+    pub pairs: u64,
+    /// Exact `sqdist` evaluations performed.
+    pub exact: u64,
+    /// Decomposed-screen dot products (the no-hint first pass).
+    pub screened: u64,
+}
+
+impl AssignStats {
+    pub fn merge(&mut self, o: &AssignStats) {
+        self.pairs += o.pairs;
+        self.exact += o.exact;
+        self.screened += o.screened;
+    }
+
+    /// Fraction of pairs that needed no exact distance evaluation — the
+    /// "distance-computation skip rate" the benches report. `exact ≤ pairs`
+    /// always (at most one evaluation per pair), so this lies in [0, 1].
+    /// Screening dot products are cheaper than `sqdist` and are accounted
+    /// separately in [`AssignStats::screened`] (quoted alongside the skip
+    /// rate in `BENCH_kernels.json`), not folded into this rate.
+    pub fn skip_rate(&self) -> f64 {
+        if self.pairs == 0 {
+            return 0.0;
+        }
+        1.0 - self.exact as f64 / self.pairs as f64
     }
 }
 
@@ -31,6 +83,9 @@ pub struct KmeansResult {
     pub assignments: Vec<usize>,
     pub inertia: f64,
     pub iters: usize,
+    /// Aggregate distance-computation accounting across all Lloyd rounds
+    /// (all-exact when the naive kernel ran).
+    pub stats: AssignStats,
 }
 
 /// k-means++ initialization (Arthur & Vassilvitskii 2007).
@@ -101,6 +156,164 @@ pub fn assign(points: &Mat, centroids: &Mat, threads: usize) -> (Vec<usize>, f64
     (assignments, inertia)
 }
 
+/// Relative safety factor for the pruning inequalities: covers the rounding
+/// of the lane-accumulated `sqdist`/`dot8` values (error grows with the
+/// dimension) so a bound never skips a centroid the exact comparison could
+/// still pick. Costs a negligible amount of skip rate on real data.
+#[inline]
+pub(crate) fn prune_margin(dims: usize) -> f64 {
+    1.0 + 1e-3 + 4.0 * dims as f64 * (f32::EPSILON as f64)
+}
+
+/// Bound-pruned nearest-centroid assignment — **bitwise identical** to
+/// [`assign`] (same assignments, same inertia bits) but skipping most exact
+/// distance computations:
+///
+/// 1. A starting candidate per point: the caller's `hint` (the previous
+///    Lloyd round's assignment) when present, else the lexicographic argmin
+///    of the `‖x‖² − 2x·c + ‖c‖²` decomposition over cached row norms — one
+///    cheap screening dot per centroid instead of a full `sqdist`.
+/// 2. One exact `sqdist` to the candidate gives the upper bound `ub²`.
+///    Hamerly fast path: if the nearest *other* centroid satisfies
+///    `‖c_b − c_j‖² > 4·ub²` for all j (via the cached min inter-centroid
+///    distance), every other centroid is provably farther and the point is
+///    done after a single exact evaluation.
+/// 3. Otherwise each remaining centroid is tested against the triangle
+///    bound `‖c_best − c_j‖² > 4·best²` (with [`prune_margin`] slack) and
+///    skipped only when it provably cannot win; survivors are decided by
+///    the exact [`sqdist`] with [`assign`]'s tie-break (lowest index).
+///
+/// The inertia is reduced serially in point order from per-point exact
+/// values, like [`assign`], so the whole result — and therefore Lloyd's
+/// convergence trajectory — is bitwise thread-count invariant.
+pub fn assign_pruned(
+    points: &Mat,
+    centroids: &Mat,
+    threads: usize,
+    hints: Option<&[usize]>,
+) -> (Vec<usize>, f64, AssignStats) {
+    let n = points.rows();
+    let k = centroids.rows();
+    let d = points.cols();
+    let margin = prune_margin(d);
+    // Exact inter-centroid distances + Hamerly's s (min over other
+    // centroids): k²·d work, negligible against n·k·d for n >> k.
+    let mut cc2 = vec![0.0f64; k * k];
+    for a in 0..k {
+        for b in (a + 1)..k {
+            let v = sqdist(centroids.row(a), centroids.row(b));
+            cc2[a * k + b] = v;
+            cc2[b * k + a] = v;
+        }
+    }
+    // Hamerly's s: nearest OTHER centroid per centroid. A row containing
+    // any non-finite entry (overflow/NaN) gets s = ∞, which the fast
+    // path's `is_finite` gate rejects: an overflowed distance carries no
+    // magnitude information, so the fast path may not vouch for that row —
+    // a finite min over only the well-behaved entries would wrongly prune
+    // the overflowed centroid itself, which can be the true nearest.
+    let mut s = vec![f64::INFINITY; k];
+    for a in 0..k {
+        for b in 0..k {
+            if a == b {
+                continue;
+            }
+            let v = cc2[a * k + b];
+            if !v.is_finite() {
+                s[a] = f64::INFINITY;
+                break;
+            }
+            if v < s[a] {
+                s[a] = v;
+            }
+        }
+    }
+    let c2 = if hints.is_none() { row_sqnorms(centroids) } else { Vec::new() };
+
+    let chunks = map_chunks(n, threads, |lo, hi| {
+        let mut a_out = Vec::with_capacity(hi - lo);
+        let mut d2_out = Vec::with_capacity(hi - lo);
+        let mut stats = AssignStats::default();
+        for i in lo..hi {
+            let row = points.row(i);
+            stats.pairs += k as u64;
+            let b0 = match hints {
+                Some(h) if h[i] < k => h[i],
+                Some(_) => 0,
+                None => {
+                    // Decomposed screen: x² − 2x·c + c² per centroid,
+                    // lexicographic argmin — a good first guess that makes
+                    // the exact upper bound tight.
+                    let x2 = dot8(row, row);
+                    let mut best = 0usize;
+                    let mut best_t = f64::INFINITY;
+                    for c in 0..k {
+                        let t = x2 - 2.0 * dot8(row, centroids.row(c)) + c2[c];
+                        stats.screened += 1;
+                        if t < best_t {
+                            best_t = t;
+                            best = c;
+                        }
+                    }
+                    best
+                }
+            };
+            // Mirror [`assign`]'s semantics exactly, including non-finite
+            // data: there a NaN (or +∞) distance never wins (`d < best_d`
+            // is false), so a non-finite candidate evaluation falls back to
+            // naive's (0, ∞) start — and every bound below uses a strict
+            // `>` against `best_d`, which disables itself at ∞.
+            let d0 = sqdist(row, centroids.row(b0));
+            stats.exact += 1;
+            let (mut best, mut best_d) =
+                if d0 < f64::INFINITY { (b0, d0) } else { (0, f64::INFINITY) };
+            // Hamerly fast path: no other centroid can possibly win. The
+            // bound value must be FINITE to prune: an overflowed (+∞)
+            // inter-centroid distance carries no magnitude information —
+            // the true gap may be far smaller than the overflowed lanes
+            // suggest — so ∞ entries fall through to exact evaluation,
+            // exactly like naive's.
+            if k <= 1 || (s[best].is_finite() && s[best] > 4.0 * best_d * margin) {
+                a_out.push(best);
+                d2_out.push(best_d);
+                continue;
+            }
+            for c in 0..k {
+                if c == b0 {
+                    continue;
+                }
+                // Triangle bound: ‖c_best − c‖ ≥ 2·‖x − c_best‖ proves
+                // ‖x − c‖ ≥ ‖x − c_best‖, strictly with the margin (finite
+                // entries only — see the fast-path note).
+                let cc = cc2[best * k + c];
+                if cc.is_finite() && cc > 4.0 * best_d * margin {
+                    continue;
+                }
+                let dd = sqdist(row, centroids.row(c));
+                stats.exact += 1;
+                if dd < best_d || (dd == best_d && c < best) {
+                    best_d = dd;
+                    best = c;
+                }
+            }
+            a_out.push(best);
+            d2_out.push(best_d);
+        }
+        (a_out, d2_out, stats)
+    });
+    let mut assignments = Vec::with_capacity(n);
+    let mut inertia = 0.0f64;
+    let mut stats = AssignStats::default();
+    for (a, d2, st) in chunks {
+        assignments.extend(a);
+        for v in d2 {
+            inertia += v;
+        }
+        stats.merge(&st);
+    }
+    (assignments, inertia, stats)
+}
+
 /// Recompute centroids as cluster means; empty clusters are re-seeded to the
 /// point farthest from its centroid (standard Lloyd repair).
 fn update_centroids(points: &Mat, assignments: &[usize], k: usize, prev: &Mat) -> Mat {
@@ -128,14 +341,35 @@ fn update_centroids(points: &Mat, assignments: &[usize], k: usize, prev: &Mat) -
             }
         }
     }
-    // Re-seed empty clusters to the farthest points.
+    // Re-seed empty clusters to the farthest points. Ordering is (finite
+    // distance desc, point index asc) with NaN distances LAST — a strict
+    // total order, so the selection is deterministic, NaN-safe (the old
+    // `partial_cmp().unwrap()` panicked), two empty clusters can never be
+    // re-seeded to the same point (each point index appears once), and a
+    // NaN-poisoned row is only chosen once every finite point is taken —
+    // re-seeding a centroid to NaN would leave it permanently unwinnable.
+    // `select_nth_unstable_by` finds the top-|empties| in O(n) instead of
+    // sorting all n points.
     if !empties.is_empty() {
         let mut far: Vec<(f64, usize)> = assignments
             .iter()
             .enumerate()
             .map(|(i, &a)| (points.sqdist_row(i, out.row(a)), i))
             .collect();
-        far.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let cmp = |a: &(f64, usize), b: &(f64, usize)| {
+            match (a.0.is_nan(), b.0.is_nan()) {
+                (true, true) => a.1.cmp(&b.1),
+                (true, false) => std::cmp::Ordering::Greater,
+                (false, true) => std::cmp::Ordering::Less,
+                (false, false) => b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)),
+            }
+        };
+        let take = empties.len().min(far.len());
+        if far.len() > take {
+            far.select_nth_unstable_by(take - 1, cmp);
+            far.truncate(take);
+        }
+        far.sort_unstable_by(cmp);
         for (e, c) in empties.into_iter().enumerate() {
             if e < far.len() {
                 let idx = far[e].1;
@@ -147,17 +381,34 @@ fn update_centroids(points: &Mat, assignments: &[usize], k: usize, prev: &Mat) -
     out
 }
 
-/// Full Lloyd fit.
+/// Full Lloyd fit. With pruning enabled (the `Auto` default at scale) each
+/// round feeds the previous round's assignments back into
+/// [`assign_pruned`] as hints: near convergence almost every point takes
+/// the Hamerly fast path and the round costs ~one exact distance per point
+/// instead of k. Assignments, inertia, and the convergence trajectory are
+/// bitwise identical to the naive path.
 pub fn fit(points: &Mat, cfg: &KmeansConfig) -> KmeansResult {
     assert!(points.rows() >= cfg.k, "kmeans: fewer points than clusters");
+    let n = points.rows();
+    let use_bounds = cfg.pruning.use_bounds(n, cfg.k);
     let mut rng = Rng::new(cfg.seed);
     let mut centroids = kmeanspp_init(points, cfg.k, &mut rng);
     let mut prev_inertia = f64::INFINITY;
     let mut assignments = Vec::new();
     let mut inertia = 0.0;
     let mut iters = 0;
+    let mut stats = AssignStats::default();
     for it in 0..cfg.max_iters {
-        let (a, i) = assign(points, &centroids, cfg.threads);
+        let (a, i) = if use_bounds {
+            let hints = if it == 0 { None } else { Some(assignments.as_slice()) };
+            let (a, i, st) = assign_pruned(points, &centroids, cfg.threads, hints);
+            stats.merge(&st);
+            (a, i)
+        } else {
+            let pairs = (n * cfg.k) as u64;
+            stats.merge(&AssignStats { pairs, exact: pairs, screened: 0 });
+            assign(points, &centroids, cfg.threads)
+        };
         assignments = a;
         inertia = i;
         iters = it + 1;
@@ -168,7 +419,7 @@ pub fn fit(points: &Mat, cfg: &KmeansConfig) -> KmeansResult {
         prev_inertia = inertia;
         centroids = update_centroids(points, &assignments, cfg.k, &centroids);
     }
-    KmeansResult { centroids, assignments, inertia, iters }
+    KmeansResult { centroids, assignments, inertia, iters, stats }
 }
 
 #[cfg(test)]
@@ -258,6 +509,206 @@ mod tests {
     fn too_few_points_panics() {
         let (pts, _) = blobs(1, &[(0.0, 0.0)], 0.0, 6);
         fit(&pts, &KmeansConfig::new(5));
+    }
+
+    /// The tentpole oracle: the bound-pruned kernel equals the naive scan
+    /// bitwise — assignments AND inertia bits — across random point sets,
+    /// dims, centroid counts, thread counts, and hint regimes (none,
+    /// garbage, realistic warm hints), including exact-duplicate centroids
+    /// that force index tie-breaks.
+    #[test]
+    fn property_pruned_assign_matches_naive_bitwise() {
+        crate::util::proptest::check(30, |g| {
+            let n = g.usize_in(3, 60);
+            let d = g.usize_in(1, 24);
+            let k = g.usize_in(1, 10.min(n));
+            let mut pts = Mat::zeros(0, d);
+            for _ in 0..n {
+                pts.push_row(&g.vec_f32(d, -4.0, 4.0));
+            }
+            let mut cents = Mat::zeros(0, d);
+            for c in 0..k {
+                if c == 1 && g.bool() {
+                    // duplicate of centroid 0: ties must break to index 0
+                    let row = cents.row(0).to_vec();
+                    cents.push_row(&row);
+                } else {
+                    cents.push_row(&g.vec_f32(d, -4.0, 4.0));
+                }
+            }
+            let hints: Option<Vec<usize>> = match g.usize_in(0, 2) {
+                0 => None,
+                // Garbage hints, deliberately including out-of-range values
+                // (>= k) to exercise the fallback-to-0 branch.
+                1 => Some((0..n).map(|_| g.usize_in(0, 2 * k)).collect()),
+                _ => Some(assign(&pts, &cents, 1).0), // realistic warm hints
+            };
+            let (want_a, want_i) = assign(&pts, &cents, 1);
+            for threads in [1usize, 4, 8] {
+                let (got_a, got_i, st) =
+                    assign_pruned(&pts, &cents, threads, hints.as_deref());
+                assert_eq!(got_a, want_a, "threads={threads} hints={hints:?}");
+                assert_eq!(got_i.to_bits(), want_i.to_bits(), "inertia, threads={threads}");
+                assert_eq!(st.pairs, (n * k) as u64);
+                assert!(st.exact <= st.pairs);
+            }
+        });
+    }
+
+    #[test]
+    fn fit_is_bitwise_identical_for_every_pruning_mode() {
+        let (pts, _) = blobs(80, &[(0.0, 0.0), (6.0, 0.0), (0.0, 6.0), (6.0, 6.0)], 0.8, 21);
+        let fit_with = |pruning: crate::cluster::Pruning, threads: usize| {
+            let mut cfg = KmeansConfig::new(4);
+            cfg.seed = 9;
+            cfg.threads = threads;
+            cfg.pruning = pruning;
+            fit(&pts, &cfg)
+        };
+        let base = fit_with(crate::cluster::Pruning::Off, 1);
+        for pruning in [crate::cluster::Pruning::Auto, crate::cluster::Pruning::Bounds] {
+            for threads in [1usize, 4, 8] {
+                let r = fit_with(pruning, threads);
+                assert_eq!(r.assignments, base.assignments, "{pruning:?} t={threads}");
+                assert_eq!(r.inertia.to_bits(), base.inertia.to_bits());
+                assert_eq!(r.iters, base.iters);
+                assert_eq!(r.centroids, base.centroids);
+            }
+        }
+        // And the pruned run actually skipped work.
+        let pruned = fit_with(crate::cluster::Pruning::Bounds, 1);
+        assert!(
+            pruned.stats.skip_rate() > 0.0,
+            "bounds path skipped nothing: {:?}",
+            pruned.stats
+        );
+    }
+
+    #[test]
+    fn pruned_hamerly_fast_path_on_separated_blobs() {
+        // Tight, well-separated blobs + warm hints: almost every point must
+        // resolve with a single exact evaluation.
+        let (pts, _) = blobs(200, &[(0.0, 0.0), (40.0, 0.0), (0.0, 40.0), (40.0, 40.0)], 0.2, 22);
+        let mut cfg = KmeansConfig::new(4);
+        cfg.seed = 3;
+        cfg.pruning = crate::cluster::Pruning::Bounds;
+        let r = fit(&pts, &cfg);
+        let (hints, _) = assign(&pts, &r.centroids, 1);
+        let (a, _, st) = assign_pruned(&pts, &r.centroids, 1, Some(&hints));
+        assert_eq!(a, hints);
+        assert_eq!(st.exact, pts.rows() as u64, "fast path missed: {st:?}");
+        assert!(st.skip_rate() > 0.5, "skip rate {:.3}", st.skip_rate());
+    }
+
+    #[test]
+    fn pruned_assign_handles_non_finite_points_like_naive() {
+        // NaN / huge rows produce NaN / +inf distances; naive `assign`
+        // rejects those via `d < best_d` and falls back to (0, inf). The
+        // pruned kernel must reproduce that bit-for-bit, with and without
+        // hints (a hinted b0 whose distance is NaN must not win).
+        let mut pts = Mat::zeros(0, 4);
+        pts.push_row(&[f32::NAN, 0.0, 0.0, 0.0]); // NaN to every centroid
+        pts.push_row(&[1.0, 1.0, 1.0, 1.0]);
+        pts.push_row(&[f32::MAX, f32::MAX, 0.0, 0.0]); // sqdist overflows
+        pts.push_row(&[-1.0, 2.0, 0.5, 0.0]);
+        let cents = Mat::from_rows(&[
+            vec![0.0, 0.0, 0.0, 0.0],
+            vec![1.0, 1.0, 1.0, 0.0],
+            vec![f32::NAN, 0.0, 0.0, 0.0], // NaN centroid
+        ]);
+        let (want_a, want_i) = assign(&pts, &cents, 1);
+        for hints in [None, Some(vec![2usize, 2, 2, 2]), Some(vec![1, 0, 1, 0])] {
+            let (got_a, got_i, _) = assign_pruned(&pts, &cents, 1, hints.as_deref());
+            assert_eq!(got_a, want_a, "hints={hints:?}");
+            assert_eq!(got_i.to_bits(), want_i.to_bits(), "hints={hints:?}");
+        }
+
+        // Overflow boundary: the inter-centroid distance overflows an f32
+        // lane to +∞ ((1.9e19)² > f32::MAX; dim ≥ 8 so the lane loop runs,
+        // not the f64 tail) while the point's distances stay finite — an ∞
+        // bound must NOT prune (it proves nothing about the true gap).
+        // Here c1 really is nearer to x than the hinted c0.
+        let mut row_x = vec![0.0f32; 8];
+        row_x[0] = 1.0e19;
+        let mut row_c1 = vec![0.0f32; 8];
+        row_c1[0] = 1.9e19;
+        let mut pts2 = Mat::zeros(0, 8);
+        pts2.push_row(&row_x);
+        let cents2 = Mat::from_rows(&[vec![0.0f32; 8], row_c1]);
+        let (want_a2, want_i2) = assign(&pts2, &cents2, 1);
+        assert_eq!(want_a2, vec![1]); // sanity: naive picks the near one
+        for hints in [None, Some(vec![0usize])] {
+            let (got_a2, got_i2, _) = assign_pruned(&pts2, &cents2, 1, hints.as_deref());
+            assert_eq!(got_a2, want_a2, "overflow case, hints={hints:?}");
+            assert_eq!(got_i2.to_bits(), want_i2.to_bits());
+        }
+
+        // Hamerly fast-path overflow hole (k = 3, dim 9 so the 9th
+        // coordinate rides the f64 tail): cc2[c0][c1] overflows an f32
+        // lane to +∞ while cc2[c0][c2] is a huge FINITE tail value — a min
+        // over only the finite entries would let the fast path prune c1,
+        // the true nearest. s must treat the whole row as unusable.
+        let mut x = vec![0.0f32; 9];
+        x[0] = 1.0e19;
+        let mut c_best = vec![0.0f32; 9];
+        c_best[8] = 1.0e30;
+        let mut c_near = vec![0.0f32; 9];
+        c_near[0] = 2.0e19; // lane (2e19)² overflows f32 in cc2[c0][c1]
+        let mut c_far = vec![0.0f32; 9];
+        c_far[8] = 5.0e30; // tail (4e30)² = 1.6e61, finite in f64
+        let mut pts3 = Mat::zeros(0, 9);
+        pts3.push_row(&x);
+        let cents3 = Mat::from_rows(&[c_best, c_near, c_far]);
+        let (want_a3, want_i3) = assign(&pts3, &cents3, 1);
+        assert_eq!(want_a3, vec![1]); // sanity: naive picks c_near
+        for hints in [None, Some(vec![0usize])] {
+            let (got_a3, got_i3, _) = assign_pruned(&pts3, &cents3, 1, hints.as_deref());
+            assert_eq!(got_a3, want_a3, "fast-path overflow case, hints={hints:?}");
+            assert_eq!(got_i3.to_bits(), want_i3.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_cluster_repair_is_nan_safe_and_reseeds_distinct_points() {
+        // A NaN coordinate used to panic the repair sort
+        // (`partial_cmp().unwrap()`); `total_cmp` must survive it, and two
+        // empty clusters must land on two different points.
+        let mut pts = Mat::zeros(0, 2);
+        pts.push_row(&[f32::NAN, 0.0]);
+        for i in 0..6 {
+            pts.push_row(&[i as f32, 1.0]);
+        }
+        let prev = Mat::from_rows(&[
+            vec![0.0, 0.0],
+            vec![100.0, 100.0],
+            vec![200.0, 200.0],
+            vec![300.0, 300.0],
+        ]);
+        // Clusters 2 and 3 are empty; the NaN distances (the NaN row and
+        // everything measured against its NaN-poisoned cluster-0 mean)
+        // must not panic AND must rank below every finite distance: the
+        // re-seeds land on the farthest finite points of cluster 1 (tied
+        // at distance 1 → lower index first), never on a NaN row.
+        let assignments = vec![0, 0, 0, 1, 1, 1, 0];
+        let out = update_centroids(&pts, &assignments, 4, &prev);
+        assert_eq!(out.rows(), 4);
+        assert_eq!(out.row(2), &[2.0, 1.0]);
+        assert_eq!(out.row(3), &[4.0, 1.0]);
+
+        // All-finite case with tied distances: the two empties must be
+        // re-seeded to two DIFFERENT points (distance desc, index asc).
+        let pts2 = Mat::from_rows(&[
+            vec![0.0, 0.0],
+            vec![10.0, 0.0],
+            vec![-10.0, 0.0], // same distance to centroid 0 as point 1
+            vec![0.0, 1.0],
+        ]);
+        let assignments2 = vec![0, 0, 0, 0];
+        let out2 = update_centroids(&pts2, &assignments2, 3, &prev);
+        assert_ne!(out2.row(1), out2.row(2), "two empties re-seeded to the same point");
+        // Tie at max distance: stable order picks the lower index first.
+        assert_eq!(out2.row(1), &[10.0, 0.0]);
+        assert_eq!(out2.row(2), &[-10.0, 0.0]);
     }
 
     #[test]

@@ -17,11 +17,24 @@
 //!
 //! Determinism: the batch schedule is a pure function of `cfg.seed`, centroid
 //! updates are applied serially in batch order, and the final full-fleet
-//! assignment uses the chunk-deterministic `kmeans::assign`. Output is
+//! assignment uses the chunk-deterministic `kmeans::assign` /
+//! `kmeans::assign_pruned` (bitwise equal to each other). Output is
 //! therefore bitwise identical for any `threads` setting.
+//!
+//! Pruning: the sequential SGD step mutates a centroid after every batch
+//! point, which invalidates any batched GEMM or inter-centroid distance
+//! table — so the step uses the cheapest exact-safe layer of the kernel
+//! stack instead: cached row norms (`util::mat::row_sqnorms` for points
+//! once; recomputed in O(d) for the one centroid each SGD step moves) feed
+//! the reverse-triangle lower
+//! bound `(‖x‖ − ‖c‖)² ≤ ‖x − c‖²`, and any centroid the bound cannot
+//! exclude is decided by the exact `sqdist`. Decisions — and therefore the
+//! whole fit — stay bitwise identical to the unpruned path
+//! (`pruned_minibatch_is_bitwise_identical`).
 
-use crate::cluster::kmeans::{assign, kmeanspp_init, KmeansResult};
-use crate::util::mat::Mat;
+use crate::cluster::kmeans::{assign, assign_pruned, kmeanspp_init, AssignStats, KmeansResult};
+use crate::cluster::Pruning;
+use crate::util::mat::{dot8, row_sqnorms, Mat};
 use crate::util::parallel::default_threads;
 use crate::util::rng::Rng;
 
@@ -47,6 +60,9 @@ pub struct MinibatchConfig {
     pub reseed_after: usize,
     /// Sample size for the cold-start k-means++ init (capped at n).
     pub init_sample: usize,
+    /// Assignment kernel selection (bitwise-identical either way): norm
+    /// bounds in the SGD step, `assign_pruned` for the final fleet pass.
+    pub pruning: Pruning,
 }
 
 impl MinibatchConfig {
@@ -60,6 +76,7 @@ impl MinibatchConfig {
             threads: default_threads(),
             reseed_after: 10,
             init_sample: 2048,
+            pruning: Pruning::default(),
         }
     }
 }
@@ -118,6 +135,27 @@ pub fn fit_warm(points: &Mat, cfg: &MinibatchConfig, warm: Option<&WarmState>) -
     let batch = cfg.batch.clamp(1, n);
     let mut starved = vec![0usize; cfg.k];
     let mut iters = 0;
+    let mut stats = AssignStats::default();
+    // Cached norms for the reverse-triangle screen: point norms once (the
+    // points never change); a centroid's norm is recomputed with one O(d)
+    // `dot8` after each SGD update that moves it — ~1/k of a full scan,
+    // amortized. `sqrt` is taken at (re)computation, not per candidate.
+    let use_screen = cfg.pruning.use_bounds(n, cfg.k);
+    let margin = crate::cluster::kmeans::prune_margin(d);
+    // Absolute-error slack for the norm difference: `px − pc` cancels
+    // catastrophically when the two norms are close, so the relative
+    // `margin` on best_d alone cannot cover the norms' own rounding
+    // (≤ 2·d·ε relative each, generously). The gap is shrunk by the summed
+    // absolute bound before squaring; only a provably-positive remainder
+    // may prune.
+    let norm_rel = 2.0 * d as f64 * (f32::EPSILON as f64);
+    let px_norm: Vec<f64> =
+        if use_screen { row_sqnorms(points).iter().map(|v| v.sqrt()).collect() } else { Vec::new() };
+    let mut c_norm: Vec<f64> = if use_screen {
+        (0..cfg.k).map(|c| dot8(centroids.row(c), centroids.row(c)).sqrt()).collect()
+    } else {
+        Vec::new()
+    };
     for it in 0..cfg.max_iters {
         iters = it + 1;
         let idx = rng.sample_indices(n, batch);
@@ -126,8 +164,20 @@ pub fn fit_warm(points: &Mat, cfg: &MinibatchConfig, warm: Option<&WarmState>) -
         for &i in &idx {
             let mut best = 0usize;
             let mut best_d = f64::INFINITY;
+            stats.pairs += cfg.k as u64;
             for c in 0..cfg.k {
+                if use_screen && best_d.is_finite() {
+                    // (‖x‖ − ‖c‖)² > best (with margin + norm slack) proves
+                    // this centroid is strictly farther than the running
+                    // best: skip without touching its coordinates.
+                    let gap = (px_norm[i] - c_norm[c]).abs()
+                        - (px_norm[i] + c_norm[c]) * norm_rel;
+                    if gap > 0.0 && gap * gap > best_d * margin {
+                        continue;
+                    }
+                }
                 let dist = points.sqdist_row(i, centroids.row(c));
+                stats.exact += 1;
                 if dist < best_d {
                     best_d = dist;
                     best = c;
@@ -142,6 +192,9 @@ pub fn fit_warm(points: &Mat, cfg: &MinibatchConfig, warm: Option<&WarmState>) -
                 let delta = eta * (pv as f64 - *cv as f64);
                 *cv = (*cv as f64 + delta) as f32;
                 moved += delta * delta;
+            }
+            if use_screen {
+                c_norm[best] = dot8(centroids.row(best), centroids.row(best)).sqrt();
             }
         }
         // Empty-cluster repair: a centroid nobody has hit for a while is
@@ -158,6 +211,9 @@ pub fn fit_warm(points: &Mat, cfg: &MinibatchConfig, warm: Option<&WarmState>) -
                     centroids.row_mut(c).copy_from_slice(&row);
                     counts[c] = 0;
                     starved[c] = 0;
+                    if use_screen {
+                        c_norm[c] = dot8(centroids.row(c), centroids.row(c)).sqrt();
+                    }
                 }
             }
         }
@@ -166,10 +222,19 @@ pub fn fit_warm(points: &Mat, cfg: &MinibatchConfig, warm: Option<&WarmState>) -
         }
     }
 
-    let (assignments, inertia) = assign(points, &centroids, cfg.threads.max(1));
+    let threads = cfg.threads.max(1);
+    let (assignments, inertia) = if use_screen {
+        let (a, i, st) = assign_pruned(points, &centroids, threads, None);
+        stats.merge(&st);
+        (a, i)
+    } else {
+        let pairs = (n * cfg.k) as u64;
+        stats.merge(&AssignStats { pairs, exact: pairs, screened: 0 });
+        assign(points, &centroids, threads)
+    };
     MinibatchFit {
         warm: WarmState { centroids: centroids.clone(), counts },
-        result: KmeansResult { centroids, assignments, inertia, iters },
+        result: KmeansResult { centroids, assignments, inertia, iters, stats },
     }
 }
 
@@ -299,6 +364,41 @@ mod tests {
             out.result.inertia,
             dead_inertia
         );
+    }
+
+    /// Norm screen + pruned final assignment must not change a single bit
+    /// of the fit: same assignments, centroids, inertia bits, and warm
+    /// state as the unpruned path, across seeds and batch sizes.
+    #[test]
+    fn pruned_minibatch_is_bitwise_identical() {
+        crate::util::proptest::check(8, |g| {
+            let k = g.usize_in(2, 5);
+            let n_per = g.usize_in(30, 80);
+            // Half the cases live far from the origin: ‖x‖ ≈ ‖c‖ ≫ ‖x − c‖
+            // is exactly where the norm-difference screen cancels and the
+            // slack term must keep it sound.
+            let off = if g.bool() { 300.0f32 } else { 0.0 };
+            let centers: Vec<(f32, f32)> = (0..k)
+                .map(|c| (off + 8.0 * (c % 3) as f32, off + 8.0 * (c / 3) as f32))
+                .collect();
+            let (pts, _) = blobs(n_per, &centers, 0.8, g.case as u64 + 40);
+            let mut cfg_off = MinibatchConfig::new(k);
+            cfg_off.seed = g.case as u64;
+            cfg_off.batch = g.usize_in(16, 128);
+            cfg_off.max_iters = 20;
+            cfg_off.pruning = Pruning::Off;
+            let mut cfg_on = cfg_off.clone();
+            cfg_on.pruning = Pruning::Bounds;
+            let a = fit_warm(&pts, &cfg_off, None);
+            let b = fit_warm(&pts, &cfg_on, None);
+            assert_eq!(a.result.assignments, b.result.assignments);
+            assert_eq!(a.result.centroids, b.result.centroids);
+            assert_eq!(a.result.inertia.to_bits(), b.result.inertia.to_bits());
+            assert_eq!(a.result.iters, b.result.iters);
+            assert_eq!(a.warm.centroids, b.warm.centroids);
+            assert_eq!(a.warm.counts, b.warm.counts);
+            assert!(b.result.stats.exact <= b.result.stats.pairs);
+        });
     }
 
     #[test]

@@ -8,10 +8,52 @@ pub mod kmeans;
 pub mod minibatch;
 
 pub use dbscan::{DbscanConfig, DbscanResult, NOISE};
-pub use kmeans::{KmeansConfig, KmeansResult};
+pub use kmeans::{AssignStats, KmeansConfig, KmeansResult};
 pub use minibatch::{MinibatchConfig, WarmState, MINIBATCH_AUTO_THRESHOLD};
 
 use crate::util::mat::Mat;
+
+/// Whether the K-means engines use the bound-pruned assignment path
+/// (`cluster::kmeans::assign_pruned`: norm-decomposed screening + exact
+/// triangle-inequality bounds) instead of the naive full scan
+/// (`kmeans_pruning` in `ExperimentConfig` / `--kmeans-pruning` on the CLI).
+///
+/// Pruned and naive assignment are **bitwise identical by construction** —
+/// every surviving candidate is decided by the exact `sqdist` — so this knob
+/// only trades setup overhead against skipped distance computations; it is
+/// an escape hatch and a benchmarking aid, never a correctness choice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Pruning {
+    /// Bounds when the workload amortizes the k×k centroid-distance table
+    /// (n·k ≥ 4096 and k ≥ 4), naive below.
+    #[default]
+    Auto,
+    /// Always the naive full scan.
+    Off,
+    /// Always the bound-pruned path.
+    Bounds,
+}
+
+impl Pruning {
+    /// Parse a config/CLI string; `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "auto" => Some(Pruning::Auto),
+            "off" | "naive" => Some(Pruning::Off),
+            "bounds" => Some(Pruning::Bounds),
+            _ => None,
+        }
+    }
+
+    /// Resolve `Auto` for a concrete workload size.
+    pub fn use_bounds(self, n_points: usize, k: usize) -> bool {
+        match self {
+            Pruning::Off => false,
+            Pruning::Bounds => true,
+            Pruning::Auto => n_points * k >= 4096 && k >= 4,
+        }
+    }
+}
 
 /// Which K-means engine the fleet refresh uses (`cluster_backend` in
 /// `ExperimentConfig` / `--cluster-backend` on the CLI).
@@ -214,6 +256,20 @@ mod tests {
     fn standardize_empty_is_noop() {
         let m = Mat::zeros(0, 4);
         assert_eq!(standardize_columns(&m).rows(), 0);
+    }
+
+    #[test]
+    fn pruning_parse_and_auto_threshold() {
+        assert_eq!(Pruning::parse("auto"), Some(Pruning::Auto));
+        assert_eq!(Pruning::parse("off"), Some(Pruning::Off));
+        assert_eq!(Pruning::parse("naive"), Some(Pruning::Off));
+        assert_eq!(Pruning::parse("bounds"), Some(Pruning::Bounds));
+        assert_eq!(Pruning::parse("nope"), None);
+        assert!(!Pruning::Off.use_bounds(1_000_000, 64));
+        assert!(Pruning::Bounds.use_bounds(2, 1));
+        assert!(Pruning::Auto.use_bounds(1024, 4));
+        assert!(!Pruning::Auto.use_bounds(1024, 2)); // k too small
+        assert!(!Pruning::Auto.use_bounds(100, 4)); // n·k below threshold
     }
 
     #[test]

@@ -172,6 +172,10 @@ pub struct ExperimentConfig {
     /// (`auto` = Lloyd's below cluster::MINIBATCH_AUTO_THRESHOLD clients,
     /// warm-started mini-batch K-means above).
     pub cluster_backend: String,
+    /// Bound-pruned K-means assignment: auto / off / bounds. Pruned and
+    /// naive clustering are bitwise identical (see cluster::Pruning); the
+    /// knob exists as an escape hatch and for benchmarking the naive path.
+    pub kmeans_pruning: String,
     /// Re-compute summaries + recluster every N rounds (0 = only once).
     pub refresh_every: usize,
     /// Worker threads for per-client summarization during a refresh
@@ -213,6 +217,7 @@ impl Default for ExperimentConfig {
             policy: "cluster".into(),
             clusters: 0, // 0 = dataset's n_groups
             cluster_backend: "auto".into(),
+            kmeans_pruning: "auto".into(),
             refresh_every: 0,
             refresh_threads: 0,
             summary_cache: true,
@@ -256,6 +261,7 @@ impl ExperimentConfig {
             policy: t.str_or("policy", &d.policy),
             clusters: t.int_or("clusters", d.clusters as i64) as usize,
             cluster_backend: t.str_or("cluster_backend", &d.cluster_backend),
+            kmeans_pruning: t.str_or("kmeans_pruning", &d.kmeans_pruning),
             refresh_every: t.int_or("refresh_every", d.refresh_every as i64) as usize,
             refresh_threads: t.int_or("refresh_threads", d.refresh_threads as i64) as usize,
             summary_cache: t.bool_or("summary_cache", d.summary_cache),
@@ -328,6 +334,7 @@ mod tests {
         // defaults survive
         assert_eq!(c.summary, "encoder");
         assert_eq!(c.cluster_backend, "auto");
+        assert_eq!(c.kmeans_pruning, "auto");
         assert_eq!(c.refresh_threads, 0);
         assert!(c.summary_cache);
     }
@@ -335,13 +342,15 @@ mod tests {
     #[test]
     fn refresh_pipeline_knobs_from_toml() {
         let t = Toml::parse(
-            "cluster_backend = \"minibatch\"\nrefresh_threads = 4\nsummary_cache = false\n",
+            "cluster_backend = \"minibatch\"\nrefresh_threads = 4\nsummary_cache = false\n\
+             kmeans_pruning = \"off\"\n",
         )
         .unwrap();
         let c = ExperimentConfig::from_toml(&t);
         assert_eq!(c.cluster_backend, "minibatch");
         assert_eq!(c.refresh_threads, 4);
         assert!(!c.summary_cache);
+        assert_eq!(c.kmeans_pruning, "off");
     }
 
     #[test]

@@ -9,7 +9,7 @@ pub mod summaries;
 
 use anyhow::{bail, Context, Result};
 
-use crate::cluster::ClusterBackend;
+use crate::cluster::{ClusterBackend, Pruning};
 use crate::config::ExperimentConfig;
 use crate::data::drift::DriftSchedule;
 use crate::data::generator::{ClientDataset, Generator};
@@ -94,10 +94,13 @@ impl Coordinator {
         // backend-selectable clustering (see coordinator::summaries docs).
         let backend = ClusterBackend::parse(&cfg.cluster_backend)
             .with_context(|| format!("unknown cluster_backend {:?}", cfg.cluster_backend))?;
+        let pruning = Pruning::parse(&cfg.kmeans_pruning)
+            .with_context(|| format!("unknown kmeans_pruning {:?}", cfg.kmeans_pruning))?;
         let refresher = FleetRefresher::new(RefreshOptions {
             threads: cfg.refresh_threads,
             backend,
             use_cache: cfg.summary_cache,
+            pruning,
             ..Default::default()
         });
 
@@ -546,5 +549,12 @@ mod tests {
             ..Default::default()
         };
         assert!(Coordinator::new(bad3, engine).is_err());
+        let Some(engine) = crate::runtime::test_engine() else { return };
+        let bad4 = ExperimentConfig {
+            kmeans_pruning: "nope".into(),
+            dataset: "tiny".into(),
+            ..Default::default()
+        };
+        assert!(Coordinator::new(bad4, engine).is_err());
     }
 }

@@ -37,7 +37,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cluster::kmeans::{self, KmeansConfig};
 use crate::cluster::minibatch::{self, MinibatchConfig, WarmState};
-use crate::cluster::ClusterBackend;
+use crate::cluster::{ClusterBackend, Pruning};
 use crate::coordinator::cache::SummaryCache;
 use crate::data::drift::DriftSchedule;
 use crate::data::generator::Generator;
@@ -67,6 +67,10 @@ pub struct RefreshOptions {
     pub use_cache: bool,
     /// Mini-batch size override (0 = `MinibatchConfig` default).
     pub minibatch_batch: usize,
+    /// Bound-pruned K-means assignment (config `kmeans_pruning`). Pruned
+    /// and naive clustering are bitwise identical; this is an escape hatch
+    /// and a benchmarking aid (see `cluster::Pruning`).
+    pub pruning: Pruning,
 }
 
 impl Default for RefreshOptions {
@@ -76,6 +80,7 @@ impl Default for RefreshOptions {
             backend: ClusterBackend::default(),
             use_cache: true,
             minibatch_batch: 0,
+            pruning: Pruning::default(),
         }
     }
 }
@@ -308,6 +313,7 @@ impl FleetRefresher {
                 let mut cfg = MinibatchConfig::new(k_clusters);
                 cfg.seed = seed;
                 cfg.threads = threads;
+                cfg.pruning = self.opts.pruning;
                 if self.opts.minibatch_batch > 0 {
                     cfg.batch = self.opts.minibatch_batch;
                 }
@@ -319,6 +325,7 @@ impl FleetRefresher {
                 let mut cfg = KmeansConfig::new(k_clusters);
                 cfg.seed = seed;
                 cfg.threads = threads;
+                cfg.pruning = self.opts.pruning;
                 kmeans::fit(&balanced, &cfg).assignments
             }
         };

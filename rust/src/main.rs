@@ -77,6 +77,9 @@ fn cfg_from_flags(flags: &HashMap<String, String>) -> Result<ExperimentConfig> {
     if let Some(v) = flags.get("cluster-backend") {
         cfg.cluster_backend = v.clone();
     }
+    if let Some(v) = flags.get("kmeans-pruning") {
+        cfg.kmeans_pruning = v.clone();
+    }
     if let Some(v) = flags.get("refresh-threads") {
         cfg.refresh_threads = v.parse().context("--refresh-threads")?;
     }
@@ -259,6 +262,8 @@ fn main() -> Result<()> {
                    train      --dataset tiny --rounds 30 --policy cluster [--config f.toml]\n\
                               refresh pipeline: --cluster-backend auto|lloyd|minibatch\n\
                               --refresh-threads N (0=auto) --summary-cache true|false\n\
+                              --kmeans-pruning auto|off|bounds (bound-pruned K-means;\n\
+                              bitwise identical to the naive scan, just faster)\n\
                    summarize  --dataset tiny --method encoder|py|pxy|jl [--clients N]\n\
                    cluster    --dataset tiny --method kmeans|minibatch|dbscan [--summary encoder]\n\
                    artifacts  list AOT artifacts\n\

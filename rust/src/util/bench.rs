@@ -146,6 +146,28 @@ pub fn full_scale() -> bool {
     std::env::var("FEDDDE_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Shape of the shared projection-kernel benchmark workload:
+/// (coreset images, flat pixels per image, basis rows).
+pub const PROJECTION_WORKLOAD_SHAPE: (usize, usize, usize) = (128, 784, 64);
+
+/// The projection-kernel benchmark workload `(images, basis)` — femnist-like
+/// coreset images against a JL-scaled basis. ONE definition shared by
+/// `runtime_hotpath` (which writes `BENCH_kernels.json`) and
+/// `examples/overhead_report`, so the two quoted naive-vs-GEMM speedups can
+/// never drift onto different workloads.
+pub fn projection_workload() -> (crate::util::mat::Mat, crate::util::mat::Mat) {
+    use crate::util::mat::Mat;
+    let (m, f, h) = PROJECTION_WORKLOAD_SHAPE;
+    let mut rng = crate::util::rng::Rng::new(6);
+    let imgs = Mat::from_vec((0..m * f).map(|_| rng.f32()).collect(), m, f);
+    let basis = Mat::from_vec(
+        (0..h * f).map(|_| (rng.normal() * 0.125) as f32).collect(),
+        h,
+        f,
+    );
+    (imgs, basis)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

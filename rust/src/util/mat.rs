@@ -1,6 +1,21 @@
-//! Flat row-major f32 matrix used across clustering and summary code.
+//! Flat row-major f32 matrix used across clustering and summary code, plus
+//! the blocked linear-algebra kernel layer every hot path rides on:
+//!
+//! * [`sqdist`] / [`dot8`] — 8-lane f32 accumulation, f64 reduce (see the
+//!   perf note on `sqdist`). Both fix the accumulation order, so results are
+//!   independent of call site, blocking, and thread count.
+//! * [`gemm_nt`] — cache-blocked `A·Bᵀ` whose every output element equals
+//!   `dot8(a.row(i), b.row(j))` bitwise ([`gemm_nt_naive`] is the unblocked
+//!   oracle the property tests compare against).
+//! * [`xty`] / [`xty_scaled`] — row-streamed `Tᵀ·X` with per-element f64
+//!   accumulation in row order (the PCA subspace-iteration kernel).
+//! * [`row_sqnorms`] — cached `‖row‖²` for norm-decomposed distance bounds
+//!   (`cluster::kmeans::assign_pruned`, `cluster::minibatch`).
+//!
 //! Cache-friendly (one contiguous allocation) and cheap to hand to the PJRT
 //! runtime as a literal.
+
+use crate::util::parallel::map_chunks;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Mat {
@@ -108,9 +123,205 @@ pub fn sqdist(a: &[f32], b: &[f32]) -> f64 {
     acc
 }
 
+/// Dot product of two slices with the same fixed accumulation order as
+/// [`sqdist`]: 8 independent f32 lanes (packed FMAs, no loop-carried
+/// dependency chain), widened to f64 only at the final lane-order reduce,
+/// f64 tail. The order is part of the contract — every kernel built on
+/// `dot8` ([`gemm_nt`], the assignment screen) produces results independent
+/// of blocking and thread count because each output element is exactly one
+/// `dot8`.
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut lanes = [0.0f32; 8];
+    let mut i = 0;
+    while i + 8 <= n {
+        for l in 0..8 {
+            lanes[l] += a[i + l] * b[i + l];
+        }
+        i += 8;
+    }
+    let mut acc = 0.0f64;
+    for l in lanes {
+        acc += l as f64;
+    }
+    while i < n {
+        acc += (a[i] as f64) * (b[i] as f64);
+        i += 1;
+    }
+    acc
+}
+
+/// `‖row‖²` for every row, computed as `dot8(row, row)` — the cached norms
+/// the `‖x‖² − 2x·c + ‖c‖²` decomposition and the pruning bounds consume.
+pub fn row_sqnorms(m: &Mat) -> Vec<f64> {
+    (0..m.rows()).map(|i| dot8(m.row(i), m.row(i))).collect()
+}
+
+/// Rows of B processed per panel: keeps the active B panel resident in L1/L2
+/// while a block of A rows streams against it.
+const GEMM_J_BLOCK: usize = 32;
+
+/// `C = A·Bᵀ` (`a`: m×k, `b`: n×k, both row-major over the shared inner
+/// dimension k). Cache-blocked with a 4-row micro-kernel: each loaded B
+/// chunk is reused across 4 rows of A (memory traffic ÷4), and every one of
+/// the 4 concurrent accumulations keeps its own 8 f32 lanes — so each output
+/// element is bitwise `dot8(a.row(i), b.row(j))`, identical to
+/// [`gemm_nt_naive`] for any blocking.
+pub fn gemm_nt(a: &Mat, b: &Mat) -> Mat {
+    gemm_nt_threads(a, b, 1)
+}
+
+/// [`gemm_nt`] parallelized over row-chunks of A (`util::parallel`). Each
+/// output element is an independent `dot8`, so the result is bitwise
+/// identical for any `threads`.
+pub fn gemm_nt_threads(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "gemm_nt: inner dimension mismatch");
+    let m = a.rows();
+    let n = b.rows();
+    let chunks = map_chunks(m, threads, |lo, hi| {
+        let mut block = vec![0.0f32; (hi - lo) * n];
+        gemm_nt_block(a, b, lo, hi, &mut block);
+        block
+    });
+    let mut data = Vec::with_capacity(m * n);
+    for c in chunks {
+        data.extend_from_slice(&c);
+    }
+    Mat::from_vec(data, m, n)
+}
+
+/// Micro-kernel for rows `[lo, hi)` of A; `out` is the (hi-lo)×n block.
+fn gemm_nt_block(a: &Mat, b: &Mat, lo: usize, hi: usize, out: &mut [f32]) {
+    let n = b.rows();
+    let k = a.cols();
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + GEMM_J_BLOCK).min(n);
+        let mut i = lo;
+        while i + 4 <= hi {
+            let (a0, a1, a2, a3) = (a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3));
+            for j in j0..j1 {
+                let br = b.row(j);
+                let mut lanes = [[0.0f32; 8]; 4];
+                let mut p = 0;
+                while p + 8 <= k {
+                    for l in 0..8 {
+                        let bv = br[p + l];
+                        lanes[0][l] += a0[p + l] * bv;
+                        lanes[1][l] += a1[p + l] * bv;
+                        lanes[2][l] += a2[p + l] * bv;
+                        lanes[3][l] += a3[p + l] * bv;
+                    }
+                    p += 8;
+                }
+                for (r, ar) in [a0, a1, a2, a3].into_iter().enumerate() {
+                    let mut acc = 0.0f64;
+                    for l in lanes[r] {
+                        acc += l as f64;
+                    }
+                    let mut q = p;
+                    while q < k {
+                        acc += (ar[q] as f64) * (br[q] as f64);
+                        q += 1;
+                    }
+                    out[(i - lo + r) * n + j] = acc as f32;
+                }
+            }
+            i += 4;
+        }
+        while i < hi {
+            for j in j0..j1 {
+                out[(i - lo) * n + j] = dot8(a.row(i), b.row(j)) as f32;
+            }
+            i += 1;
+        }
+        j0 = j1;
+    }
+}
+
+/// Unblocked fixed-order reference for [`gemm_nt`]: one `dot8` per output
+/// element. The property tests assert the blocked kernel matches this
+/// bitwise; benches use it as the naive baseline.
+pub fn gemm_nt_naive(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "gemm_nt_naive: inner dimension mismatch");
+    let mut out = Mat::zeros(a.rows(), b.rows());
+    for i in 0..a.rows() {
+        let dst = out.row_mut(i);
+        for (j, v) in dst.iter_mut().enumerate() {
+            *v = dot8(a.row(i), b.row(j)) as f32;
+        }
+    }
+    out
+}
+
+/// The pre-kernel-layer scalar baseline: one serial f64 dot per output
+/// element (no lanes, no blocking) — exactly the loop the summary
+/// projection ran before the kernel layer existed. Kept ONLY as the shared
+/// benchmark baseline the quoted kernel speedups are measured against
+/// (`runtime_hotpath`'s `BENCH_kernels.json` and
+/// `examples/overhead_report`); hot paths must use [`gemm_nt`].
+pub fn gemm_nt_f64_serial(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "gemm_nt_f64_serial: inner dimension mismatch");
+    let mut out = Mat::zeros(a.rows(), b.rows());
+    for i in 0..a.rows() {
+        let ar = a.row(i);
+        let dst = out.row_mut(i);
+        for (j, v) in dst.iter_mut().enumerate() {
+            let mut acc = 0.0f64;
+            for (x, y) in ar.iter().zip(b.row(j)) {
+                acc += (*x as f64) * (*y as f64);
+            }
+            *v = acc as f32;
+        }
+    }
+    out
+}
+
+/// `Tᵀ·X` (`t`: n×h, `x`: n×f → h×f), streamed over rows of X with one f64
+/// accumulator per output element. Per element the additions happen in row
+/// order i = 0..n regardless of streaming or the `threads` partition (workers
+/// own disjoint output rows), so the result is deterministic and equal to
+/// the naive per-element loop.
+pub fn xty(t: &Mat, x: &Mat, threads: usize) -> Mat {
+    xty_scaled(t, x, 1.0, threads)
+}
+
+/// [`xty`] with a final f64 scale applied before the f32 store (e.g. `1/n`
+/// for the PCA covariance product) — scaling before the cast keeps the full
+/// f64 accumulation precision.
+pub fn xty_scaled(t: &Mat, x: &Mat, scale: f64, threads: usize) -> Mat {
+    assert_eq!(t.rows(), x.rows(), "xty: row count mismatch");
+    let n = t.rows();
+    let h = t.cols();
+    let f = x.cols();
+    let chunks = map_chunks(h, threads, |jlo, jhi| {
+        let mut acc = vec![0.0f64; (jhi - jlo) * f];
+        for i in 0..n {
+            let xr = x.row(i);
+            let tr = t.row(i);
+            for j in jlo..jhi {
+                let w = tr[j] as f64;
+                let dst = &mut acc[(j - jlo) * f..(j - jlo + 1) * f];
+                for (o, &xv) in dst.iter_mut().zip(xr) {
+                    *o += w * xv as f64;
+                }
+            }
+        }
+        acc
+    });
+    let mut data = Vec::with_capacity(h * f);
+    for c in chunks {
+        data.extend(c.into_iter().map(|v| (v * scale) as f32));
+    }
+    Mat::from_vec(data, h, f)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn construction_and_access() {
@@ -150,5 +361,124 @@ mod tests {
     #[should_panic]
     fn ragged_from_rows_panics() {
         Mat::from_rows(&[vec![1.0], vec![1.0, 2.0]]);
+    }
+
+    fn random_mat(rng: &mut Rng, rows: usize, cols: usize, scale: f32) -> Mat {
+        let data: Vec<f32> =
+            (0..rows * cols).map(|_| (rng.normal() as f32) * scale).collect();
+        Mat::from_vec(data, rows, cols)
+    }
+
+    #[test]
+    fn dot8_matches_f64_reference_within_tolerance() {
+        let mut rng = Rng::new(11);
+        for n in [0usize, 1, 7, 8, 9, 64, 129] {
+            let a = random_mat(&mut rng, 1, n, 1.0);
+            let b = random_mat(&mut rng, 1, n, 1.0);
+            let got = dot8(a.row(0), b.row(0));
+            let want: f64 = a
+                .row(0)
+                .iter()
+                .zip(b.row(0))
+                .map(|(x, y)| (*x as f64) * (*y as f64))
+                .sum();
+            assert!((got - want).abs() <= 1e-3 * (1.0 + want.abs()), "n={n}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn row_sqnorms_match_dot8() {
+        let mut rng = Rng::new(12);
+        let m = random_mat(&mut rng, 5, 37, 2.0);
+        let norms = row_sqnorms(&m);
+        for (i, &n2) in norms.iter().enumerate() {
+            assert_eq!(n2.to_bits(), dot8(m.row(i), m.row(i)).to_bits());
+            assert!(n2 >= 0.0);
+        }
+    }
+
+    /// The kernel-layer contract: blocked/threaded GEMM is bitwise equal to
+    /// the naive fixed-order reference across shapes that exercise every
+    /// path (micro-kernel rows, row tail, lane tail, j-panel boundary).
+    #[test]
+    fn property_gemm_blocked_matches_naive_bitwise() {
+        crate::util::proptest::check(25, |g| {
+            let m = g.usize_in(1, 23);
+            let n = g.usize_in(1, GEMM_J_BLOCK + 5);
+            let k = g.usize_in(1, 40);
+            let mut rng = Rng::new(g.case as u64 + 100);
+            let scale = [0.001f32, 1.0, 1000.0][g.usize_in(0, 2)];
+            let a = random_mat(&mut rng, m, k, scale);
+            let b = random_mat(&mut rng, n, k, scale);
+            let naive = gemm_nt_naive(&a, &b);
+            for threads in [1usize, 2, 5] {
+                let blocked = gemm_nt_threads(&a, &b, threads);
+                assert_eq!(blocked.rows(), m);
+                assert_eq!(blocked.cols(), n);
+                for (x, y) in blocked.data().iter().zip(naive.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "threads={threads}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn xty_matches_naive_per_element_bitwise() {
+        crate::util::proptest::check(15, |g| {
+            let n = g.usize_in(1, 20);
+            let h = g.usize_in(1, 9);
+            let f = g.usize_in(1, 17);
+            let mut rng = Rng::new(g.case as u64 + 300);
+            let t = random_mat(&mut rng, n, h, 1.0);
+            let x = random_mat(&mut rng, n, f, 1.0);
+            let scale = 1.0 / n as f64;
+            // Naive per-element loop: one f64 accumulator, rows in order.
+            let mut want = Mat::zeros(h, f);
+            for j in 0..h {
+                for k in 0..f {
+                    let mut acc = 0.0f64;
+                    for i in 0..n {
+                        acc += (t.row(i)[j] as f64) * (x.row(i)[k] as f64);
+                    }
+                    want.row_mut(j)[k] = (acc * scale) as f32;
+                }
+            }
+            for threads in [1usize, 3] {
+                let got = xty_scaled(&t, &x, scale, threads);
+                for (x_, y_) in got.data().iter().zip(want.data()) {
+                    assert_eq!(x_.to_bits(), y_.to_bits(), "threads={threads}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn f64_serial_baseline_agrees_with_kernel_within_tolerance() {
+        // The benchmark baseline must stay the same computation (up to
+        // accumulation order) as the kernel it is quoted against.
+        let mut rng = Rng::new(13);
+        let a = random_mat(&mut rng, 9, 37, 1.0);
+        let b = random_mat(&mut rng, 6, 37, 1.0);
+        let base = gemm_nt_f64_serial(&a, &b);
+        let fast = gemm_nt(&a, &b);
+        for (x, y) in base.data().iter().zip(fast.data()) {
+            assert!((x - y).abs() <= 1e-4 * (1.0 + x.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gemm_empty_edges() {
+        let a = Mat::zeros(0, 4);
+        let b = Mat::zeros(3, 4);
+        let c = gemm_nt(&a, &b);
+        assert_eq!((c.rows(), c.cols()), (0, 3));
+        let d = gemm_nt(&b, &Mat::zeros(0, 4));
+        assert_eq!((d.rows(), d.cols()), (3, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dimension")]
+    fn gemm_dim_mismatch_panics() {
+        gemm_nt(&Mat::zeros(2, 3), &Mat::zeros(2, 4));
     }
 }

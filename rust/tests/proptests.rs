@@ -2,7 +2,7 @@
 //! coordinator-level invariants over generated fleets, datasets, and
 //! clusterings.
 
-use feddde::cluster::{dbscan, kmeans, ClusterBackend};
+use feddde::cluster::{dbscan, kmeans, ClusterBackend, Pruning};
 use feddde::coordinator::fedavg::fedavg;
 use feddde::coordinator::{FleetRefresher, RefreshOptions};
 use feddde::data::{coreset, DatasetSpec, DriftSchedule, Generator, Partition};
@@ -131,6 +131,79 @@ fn kmeans_inertia_no_worse_than_random_assignment() {
             res.inertia,
             random_inertia
         );
+    });
+}
+
+#[test]
+fn pruned_assign_matches_naive_bitwise_across_workloads() {
+    // Crate-boundary version of the kernel oracle: the bound-pruned
+    // assignment must equal the naive scan bitwise for random point sets,
+    // dims, centroid counts, thread counts, and hint regimes.
+    check(20, |g| {
+        let n = g.usize_in(4, 80);
+        let d = g.usize_in(1, 40);
+        let k = g.usize_in(1, 8.min(n));
+        let scale = [0.01f32, 1.0, 100.0][g.usize_in(0, 2)];
+        let mut pts = Mat::zeros(0, d);
+        for _ in 0..n {
+            pts.push_row(&g.vec_f32(d, -4.0 * scale, 4.0 * scale));
+        }
+        let mut cents = Mat::zeros(0, d);
+        for _ in 0..k {
+            // centroids drawn from the points half the time (exact ties)
+            if g.bool() {
+                let row = pts.row(g.usize_in(0, n - 1)).to_vec();
+                cents.push_row(&row);
+            } else {
+                cents.push_row(&g.vec_f32(d, -4.0 * scale, 4.0 * scale));
+            }
+        }
+        let (want_a, want_i) = kmeans::assign(&pts, &cents, 1);
+        let hints: Option<Vec<usize>> =
+            if g.bool() { Some(want_a.clone()) } else { None };
+        for threads in [1usize, 4, 8] {
+            let (got_a, got_i, _) =
+                kmeans::assign_pruned(&pts, &cents, threads, hints.as_deref());
+            assert_eq!(got_a, want_a, "threads={threads}");
+            assert_eq!(got_i.to_bits(), want_i.to_bits(), "threads={threads}");
+        }
+    });
+}
+
+#[test]
+fn refresher_clusters_identical_with_and_without_pruning() {
+    // End-to-end: a fleet refresh with bound-pruned clustering must produce
+    // the same clusters as one with pruning off, for both backends.
+    check(4, |g| {
+        let spec = DatasetSpec::tiny();
+        let partition = Partition::build(&spec);
+        let generator = Generator::new(&spec);
+        let fleet = FleetModel::default().sample_fleet(spec.n_clients);
+        let engine = Engine::without_artifacts().unwrap();
+        let jl = JlSummary::new(&spec);
+        let drift = DriftSchedule::none();
+        let seed = 3000 + g.case as u64;
+        let backend =
+            if g.bool() { ClusterBackend::Lloyd } else { ClusterBackend::Minibatch };
+        let run = |pruning: Pruning| {
+            FleetRefresher::new(RefreshOptions {
+                backend,
+                use_cache: false,
+                pruning,
+                ..Default::default()
+            })
+            .refresh(
+                &engine, &jl, &partition, &generator, &fleet, &drift, 0,
+                spec.n_groups, seed,
+            )
+            .unwrap()
+        };
+        let off = run(Pruning::Off);
+        let on = run(Pruning::Bounds);
+        assert_eq!(off.clusters, on.clusters, "backend {backend:?}");
+        for (a, b) in off.summaries.data().iter().zip(on.summaries.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     });
 }
 
