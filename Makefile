@@ -1,7 +1,7 @@
 # FedDDE build orchestration. The Rust crate lives in rust/, the AOT
 # compiler (JAX + Pallas -> HLO text artifacts) in python/.
 
-.PHONY: artifacts build test bench python-test clean
+.PHONY: artifacts build test bench bench-smoke python-test clean
 
 # AOT-lower every JAX graph / Pallas kernel into rust/artifacts (manifest.tsv
 # + *.hlo.txt). Requires jax; runs on CPU.
@@ -23,6 +23,15 @@ python-test:
 
 bench:
 	cd rust && cargo bench --bench table2_summary --bench table2_clustering --bench runtime_hotpath
+
+# CI-scale streaming-refresh benchmark: runs only the fused-vs-materialized
+# memory section of table2_summary (pure Rust, no artifacts needed) and
+# emits machine-readable rust/results/BENCH_refresh.json — clients/sec,
+# bytes allocated per client, peak live heap, store arena bytes.
+bench-smoke:
+	cd rust && FEDDDE_BENCH_REFRESH_ONLY=1 cargo bench --bench table2_summary
+	@test -s rust/results/BENCH_refresh.json
+	@echo "wrote rust/results/BENCH_refresh.json"
 
 clean:
 	cd rust && cargo clean

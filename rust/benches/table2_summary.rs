@@ -1,17 +1,29 @@
 //! Bench E2 — Table 2 left half: per-client summary-computation time for
 //! P(y), P(X|y), and the proposed Encoder summary on both dataset families,
-//! plus the fleet-refresh parallel-scaling section (host seconds to refresh
-//! a 1000-client fleet at 1 thread vs all cores — the ISSUE-2 acceptance
-//! line: >= 2x reduction on a multi-core host).
+//! the fleet-refresh parallel-scaling section (host seconds to refresh a
+//! 1000-client fleet at 1 thread vs all cores — the ISSUE-2 acceptance
+//! line: >= 2x reduction on a multi-core host), and the streaming-refresh
+//! memory section, which measures the fused generate→coreset→project
+//! pipeline against the materialize-everything baseline through a counting
+//! global allocator and emits machine-readable
+//! `results/BENCH_refresh.json` (clients/sec, bytes allocated per client,
+//! peak live heap, store arena bytes). The ISSUE-4 acceptance lines: >= 5x
+//! fewer bytes generated per client fused-vs-materialized, and a cold
+//! 10x-fleet fused refresh peaking under the materialized run's peak.
 //!
 //!     cargo bench --bench table2_summary          # CI scale
 //!     FEDDDE_BENCH_FULL=1 cargo bench ...         # paper-scale fleets
+//!     FEDDDE_BENCH_REFRESH_ONLY=1 ...             # just BENCH_refresh.json
+//!                                                 #   (`make bench-smoke`)
 //!
 //! Reports host kernel time per client workload size (the simulator scales
 //! these by device factors; see examples/overhead_report.rs for the full
 //! Table 2 with fleet simulation). Results land in results/table2_summary.tsv.
-//! The per-client artifact section needs the AOT bundle; the refresh section
-//! runs everywhere (pure-Rust JL engine).
+//! The per-client artifact section needs the AOT bundle; the refresh
+//! sections run everywhere (pure-Rust JL engine).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 use feddde::cluster::ClusterBackend;
 use feddde::coordinator::{FleetRefresher, RefreshOptions};
@@ -22,6 +34,66 @@ use feddde::summary::{EncoderSummary, JlSummary, PxySummary, PySummary, SummaryE
 use feddde::util::bench::{full_scale, Bencher};
 use feddde::util::parallel::default_threads;
 use feddde::util::rng::Rng;
+
+/// Counting allocator: total bytes ever allocated, live bytes, and a
+/// resettable live-bytes high-water mark. This is what turns "the fused
+/// path doesn't materialize raw data" from prose into numbers.
+struct CountingAlloc;
+
+static TOTAL: AtomicU64 = AtomicU64::new(0);
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            TOTAL.fetch_add(layout.size() as u64, Ordering::Relaxed);
+            let live = LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
+            PEAK.fetch_max(live, Ordering::Relaxed);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            if new_size > layout.size() {
+                let grow = new_size - layout.size();
+                TOTAL.fetch_add(grow as u64, Ordering::Relaxed);
+                let live = LIVE.fetch_add(grow, Ordering::Relaxed) + grow;
+                PEAK.fetch_max(live, Ordering::Relaxed);
+            } else {
+                LIVE.fetch_sub(layout.size() - new_size, Ordering::Relaxed);
+            }
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// (total_allocated_so_far, live_at_start) — call at phase start after
+/// resetting the peak to the current live level.
+fn alloc_phase_start() -> (u64, usize) {
+    let live = LIVE.load(Ordering::Relaxed);
+    PEAK.store(live, Ordering::Relaxed);
+    (TOTAL.load(Ordering::Relaxed), live)
+}
+
+/// (bytes allocated during the phase, peak live bytes above the phase's
+/// starting level).
+fn alloc_phase_end(start: (u64, usize)) -> (u64, usize) {
+    let allocated = TOTAL.load(Ordering::Relaxed) - start.0;
+    let peak = PEAK.load(Ordering::Relaxed).saturating_sub(start.1);
+    (allocated, peak)
+}
 
 fn bench_dataset(b: &mut Bencher, name: &str) {
     let preset = DatasetSpec::by_name(name).unwrap();
@@ -102,7 +174,7 @@ fn bench_fleet_refresh(b: &mut Bencher) {
         );
     }
 
-    // Incremental refresh: steady-state cost with the summary cache on.
+    // Incremental refresh: steady-state cost with the summary store on.
     let mut cached = FleetRefresher::new(RefreshOptions {
         backend: ClusterBackend::Minibatch,
         ..Default::default()
@@ -119,21 +191,148 @@ fn bench_fleet_refresh(b: &mut Bencher) {
     });
 }
 
-fn main() {
-    println!("table2_summary — per-client summary time (host kernel seconds)\n");
-    let mut b = Bencher::new(std::time::Duration::from_secs(3));
-    match Engine::open_default() {
-        Ok(_) if Engine::runtime_available() => {
-            bench_dataset(&mut b, "femnist");
-            bench_dataset(&mut b, "openimage");
-        }
-        _ => println!(
-            "(skipping per-client artifact section: AOT bundle or PJRT backend missing)\n"
-        ),
+/// Streaming-refresh workload: openimage-style clients (3072 px, ~228
+/// samples each) with a compact summary (10 classes × 8 features), so the
+/// measured memory is dominated by what this PR changes — raw-data
+/// generation — not by the unavoidable `n_clients × dim` summary arena.
+fn refresh_bench_spec(n: usize) -> DatasetSpec {
+    let mut s = DatasetSpec::openimage().with_clients(n);
+    s.name = "refresh-bench".into();
+    s.classes = 10;
+    s.feature_dim = 8;
+    s.n_groups = 8;
+    s.coreset_k = 64;
+    s
+}
+
+struct RefreshPhase {
+    n: usize,
+    secs: f64,
+    clients_per_sec: f64,
+    bytes_per_client: f64,
+    peak_live_bytes: usize,
+    store_bytes: usize,
+}
+
+/// One measured cold refresh over a fresh refresher.
+fn run_refresh_phase(n: usize, fused: bool, emit: bool) -> RefreshPhase {
+    let spec = refresh_bench_spec(n);
+    let partition = Partition::build(&spec);
+    let generator = Generator::new(&spec);
+    let fleet = FleetModel::default().sample_fleet(spec.n_clients);
+    let engine = Engine::without_artifacts().expect("manifest-free engine");
+    let jl = JlSummary::new(&spec);
+    let drift = DriftSchedule::none();
+    let mut refresher = FleetRefresher::new(RefreshOptions {
+        backend: ClusterBackend::Minibatch,
+        fused,
+        emit_summaries: emit,
+        ..Default::default()
+    });
+    let start = alloc_phase_start();
+    let t0 = std::time::Instant::now();
+    let r = refresher
+        .refresh(&engine, &jl, &partition, &generator, &fleet, &drift, 0, spec.n_groups, 7)
+        .expect("refresh");
+    let secs = t0.elapsed().as_secs_f64();
+    let (allocated, peak) = alloc_phase_end(start);
+    std::hint::black_box(r.clusters.len());
+    RefreshPhase {
+        n,
+        secs,
+        clients_per_sec: n as f64 / secs.max(1e-9),
+        bytes_per_client: allocated as f64 / n as f64,
+        peak_live_bytes: peak,
+        store_bytes: r.store.bytes,
     }
-    println!("fleet refresh scaling (pure-Rust JL engine):");
-    bench_fleet_refresh(&mut b);
+}
+
+fn phase_json(tag: &str, p: &RefreshPhase) -> String {
+    format!(
+        "  \"{tag}\": {{\"n\": {}, \"secs\": {:.4}, \"clients_per_sec\": {:.1}, \
+         \"bytes_per_client\": {:.0}, \"peak_live_bytes\": {}, \"store_bytes\": {}}}",
+        p.n, p.secs, p.clients_per_sec, p.bytes_per_client, p.peak_live_bytes, p.store_bytes
+    )
+}
+
+/// The streaming-refresh memory benchmark: fused vs materialized at equal
+/// fleet size (per-client bytes), then fused at 10x the fleet (peak memory
+/// must stay under the materialized small-fleet run's). Writes
+/// results/BENCH_refresh.json.
+fn bench_refresh_memory() {
+    let n_small = if full_scale() { 10_000 } else { 1_000 };
+    let n_large = n_small * 10;
+    println!("\nstreaming refresh memory (JL engine, {n_small}/{n_large} clients):");
+
+    let materialized = run_refresh_phase(n_small, false, true);
+    println!(
+        "  materialized N{:<6}  {:>8.2}s  {:>9.0} clients/s  {:>12.0} B/client  peak {:>6.1} MiB",
+        materialized.n,
+        materialized.secs,
+        materialized.clients_per_sec,
+        materialized.bytes_per_client,
+        materialized.peak_live_bytes as f64 / (1 << 20) as f64,
+    );
+    let fused = run_refresh_phase(n_small, true, true);
+    println!(
+        "  fused        N{:<6}  {:>8.2}s  {:>9.0} clients/s  {:>12.0} B/client  peak {:>6.1} MiB",
+        fused.n,
+        fused.secs,
+        fused.clients_per_sec,
+        fused.bytes_per_client,
+        fused.peak_live_bytes as f64 / (1 << 20) as f64,
+    );
+    let fused_large = run_refresh_phase(n_large, true, false);
+    println!(
+        "  fused        N{:<6}  {:>8.2}s  {:>9.0} clients/s  {:>12.0} B/client  peak {:>6.1} MiB (zero-copy store)",
+        fused_large.n,
+        fused_large.secs,
+        fused_large.clients_per_sec,
+        fused_large.bytes_per_client,
+        fused_large.peak_live_bytes as f64 / (1 << 20) as f64,
+    );
+
+    let bytes_reduction = materialized.bytes_per_client / fused.bytes_per_client.max(1.0);
+    let peak_ok = fused_large.peak_live_bytes < materialized.peak_live_bytes;
+    println!(
+        "    -> bytes generated per client: {bytes_reduction:.1}x reduction (target >= 5x); \
+         10x-fleet fused peak under materialized peak: {peak_ok}"
+    );
+
+    let json = format!(
+        "{{\n{},\n{},\n{},\n  \"bytes_reduction\": {:.2},\n  \"speedup\": {:.2},\n  \"peak_ok\": {}\n}}\n",
+        phase_json("materialized", &materialized),
+        phase_json("fused", &fused),
+        phase_json("fused_large", &fused_large),
+        bytes_reduction,
+        materialized.secs / fused.secs.max(1e-9),
+        peak_ok,
+    );
+    std::fs::write("results/BENCH_refresh.json", json)
+        .expect("writing results/BENCH_refresh.json");
+    println!("\nwrote results/BENCH_refresh.json");
+}
+
+fn main() {
+    let refresh_only =
+        std::env::var("FEDDDE_BENCH_REFRESH_ONLY").map(|v| v == "1").unwrap_or(false);
+    println!("table2_summary — per-client summary time (host kernel seconds)\n");
     std::fs::create_dir_all("results").ok();
-    b.write_tsv("results/table2_summary.tsv").unwrap();
-    println!("\nwrote results/table2_summary.tsv");
+    let mut b = Bencher::new(std::time::Duration::from_secs(3));
+    if !refresh_only {
+        match Engine::open_default() {
+            Ok(_) if Engine::runtime_available() => {
+                bench_dataset(&mut b, "femnist");
+                bench_dataset(&mut b, "openimage");
+            }
+            _ => println!(
+                "(skipping per-client artifact section: AOT bundle or PJRT backend missing)\n"
+            ),
+        }
+        println!("fleet refresh scaling (pure-Rust JL engine):");
+        bench_fleet_refresh(&mut b);
+        b.write_tsv("results/table2_summary.tsv").unwrap();
+        println!("\nwrote results/table2_summary.tsv");
+    }
+    bench_refresh_memory();
 }

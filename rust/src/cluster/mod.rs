@@ -2,6 +2,11 @@
 //! K-means (the fleet-scale variant the refresh pipeline selects for large
 //! fleets) and DBSCAN (HACCS baseline, §3), plus quality metrics via
 //! `util::stats`.
+//!
+//! Every engine consumes a borrowed row-major `Mat` of summary vectors. The
+//! fleet refresher hands them the columnar `SummaryStore`'s arena directly
+//! (zero-copy) when the store is fleet-resident; only the block-balancing
+//! pre-scale (`balance_blocks`) makes a working copy, because it rescales.
 
 pub mod dbscan;
 pub mod kmeans;

@@ -181,9 +181,18 @@ pub struct ExperimentConfig {
     /// Worker threads for per-client summarization during a refresh
     /// (0 = auto; respects FEDDDE_THREADS). Output is thread-count invariant.
     pub refresh_threads: usize,
-    /// Serve unchanged clients from the summary cache on refreshes after
+    /// Serve unchanged clients from the summary store on refreshes after
     /// round 0 (only drifted clients are recomputed).
     pub summary_cache: bool,
+    /// Streaming fused generate→coreset→project summarization (default
+    /// true). `false` materializes each client's full raw dataset first —
+    /// the bitwise-identical oracle path, kept for verification and the
+    /// `BENCH_refresh.json` baseline.
+    pub summary_fused: bool,
+    /// Maximum resident rows in the columnar summary store (0 = unbounded,
+    /// one row per client). Bounding trades recompute for memory; evicted
+    /// rows recompute bitwise identically.
+    pub store_capacity: usize,
     /// Summary engine: encoder / py / pxy / jl.
     pub summary: String,
     /// Target accuracy for time-to-accuracy reporting (0 = disabled).
@@ -221,6 +230,8 @@ impl Default for ExperimentConfig {
             refresh_every: 0,
             refresh_threads: 0,
             summary_cache: true,
+            summary_fused: true,
+            store_capacity: 0,
             summary: "encoder".into(),
             target_accuracy: 0.0,
             seed: 1,
@@ -265,6 +276,8 @@ impl ExperimentConfig {
             refresh_every: t.int_or("refresh_every", d.refresh_every as i64) as usize,
             refresh_threads: t.int_or("refresh_threads", d.refresh_threads as i64) as usize,
             summary_cache: t.bool_or("summary_cache", d.summary_cache),
+            summary_fused: t.bool_or("summary_fused", d.summary_fused),
+            store_capacity: t.int_or("store_capacity", d.store_capacity as i64) as usize,
             summary: t.str_or("summary", &d.summary),
             target_accuracy: t.float_or("target_accuracy", d.target_accuracy),
             seed: t.int_or("seed", d.seed as i64) as u64,
@@ -343,7 +356,7 @@ mod tests {
     fn refresh_pipeline_knobs_from_toml() {
         let t = Toml::parse(
             "cluster_backend = \"minibatch\"\nrefresh_threads = 4\nsummary_cache = false\n\
-             kmeans_pruning = \"off\"\n",
+             kmeans_pruning = \"off\"\nsummary_fused = false\nstore_capacity = 5000\n",
         )
         .unwrap();
         let c = ExperimentConfig::from_toml(&t);
@@ -351,6 +364,15 @@ mod tests {
         assert_eq!(c.refresh_threads, 4);
         assert!(!c.summary_cache);
         assert_eq!(c.kmeans_pruning, "off");
+        assert!(!c.summary_fused);
+        assert_eq!(c.store_capacity, 5000);
+    }
+
+    #[test]
+    fn streaming_knob_defaults() {
+        let c = ExperimentConfig::from_toml(&Toml::parse("").unwrap());
+        assert!(c.summary_fused, "fused must be the default path");
+        assert_eq!(c.store_capacity, 0, "store unbounded by default");
     }
 
     #[test]

@@ -3,8 +3,8 @@
 //! training (AOT train artifact per selected device) → FedAvg → eval —
 //! with simulated wall-clock accounting over the heterogeneous fleet.
 
-pub mod cache;
 pub mod fedavg;
+pub mod store;
 pub mod summaries;
 
 use anyhow::{bail, Context, Result};
@@ -23,8 +23,8 @@ use crate::summary::{EncoderSummary, JlSummary, PxySummary, PySummary, SummaryEn
 use crate::util::mat::Mat;
 use crate::util::rng::Rng;
 
-pub use cache::SummaryCache;
 pub use fedavg::fedavg;
+pub use store::{StoreStats, SummaryStore};
 pub use summaries::{refresh_fleet, FleetRefresher, RefreshOptions, RefreshResult};
 
 /// Everything the server tracks about the fleet between rounds.
@@ -101,6 +101,8 @@ impl Coordinator {
             backend,
             use_cache: cfg.summary_cache,
             pruning,
+            fused: cfg.summary_fused,
+            store_capacity: cfg.store_capacity,
             ..Default::default()
         });
 

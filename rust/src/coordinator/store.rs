@@ -1,0 +1,526 @@
+//! Columnar fleet summary store: ONE flat arena (`util::mat::Mat`,
+//! row-per-client) plus per-row bookkeeping, replacing the old
+//! `SummaryCache`'s `HashMap<client, Vec<f32>>` of scattered heap vectors.
+//!
+//! Why columnar: at fleet scale the summaries ARE the server's hot state —
+//! every refresh reads/writes them and clustering scans all of them. One
+//! contiguous `rows × dim` allocation means (1) cache hits cost zero copies
+//! and zero allocator traffic (the row is already where it lives), (2) a
+//! refresh writes recomputed rows *in place*, and (3)
+//! `cluster::{kmeans,minibatch}` can read the arena as the fleet matrix
+//! zero-copy ([`SummaryStore::fleet_matrix`]) instead of gathering
+//! n_clients heap vectors. The cache becomes row-generation bookkeeping:
+//! each slot carries the `(client, drift_phase)` it was computed under,
+//! its deterministic modeled host seconds, and an LRU tick.
+//!
+//! Memory is explicitly bounded: `capacity` rows max. When full, inserting
+//! a new client evicts the least-recently-used slot (ties broken by client
+//! id — deterministic, since the refresher touches the store serially).
+//! Evicted rows lose nothing but time: summaries are pure functions of
+//! `(seed, client_id, drift_phase)`, so a re-insert reproduces the evicted
+//! bits exactly (`tests/determinism.rs::bounded_store_evictions_recompute_bitwise`).
+//! [`SummaryStore::compact`] repacks occupied rows to the front and frees
+//! the tail when a fleet shrinks. Eviction/compaction counters surface in
+//! `RefreshResult` via [`StoreStats`].
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::util::mat::Mat;
+
+const NO_SLOT: u32 = u32::MAX;
+const NO_CLIENT: u32 = u32::MAX;
+
+/// Counter/size snapshot surfaced in `RefreshResult` (lifetime counters,
+/// current sizes).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StoreStats {
+    /// Occupied rows.
+    pub rows: usize,
+    /// Allocated arena rows (occupied + free).
+    pub allocated: usize,
+    /// Maximum rows the store will hold (0 = unbounded).
+    pub capacity: usize,
+    /// Arena bytes currently allocated (rows × dim × 4).
+    pub bytes: usize,
+    /// Lifetime lookup hits (rows served without recomputation).
+    pub hits: u64,
+    /// Lifetime lookup misses.
+    pub misses: u64,
+    /// Lifetime LRU evictions (capacity pressure only — phase invalidations
+    /// are counted by the refresher, not here).
+    pub evictions: u64,
+    /// Lifetime arena compactions.
+    pub compactions: u64,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct RowMeta {
+    /// Owning client, or `NO_CLIENT` for a free slot.
+    client: u32,
+    /// Drift phase the row was computed under.
+    phase: u64,
+    /// Deterministic modeled host seconds (`SummaryEngine::model_host_secs`),
+    /// cached so device-time accounting is identical on hits and misses.
+    model_secs: f64,
+    /// LRU clock value at last touch.
+    tick: u64,
+}
+
+/// Arena-backed per-fleet summary store. All access is serial (the refresher
+/// touches it outside the parallel section), so tick order — and with it
+/// eviction choice — is deterministic.
+#[derive(Debug)]
+pub struct SummaryStore {
+    dim: usize,
+    capacity: usize,
+    /// The arena: `allocated × dim`, rows addressed by slot.
+    data: Mat,
+    meta: Vec<RowMeta>,
+    /// client_id → slot (dense; grows with the largest client id seen).
+    index: Vec<u32>,
+    /// Free slots, kept sorted descending so `pop()` hands out the smallest
+    /// slot first (keeps the arena client-ordered through drift churn).
+    free: Vec<u32>,
+    /// Lazy-deletion min-heap over `(tick, client, slot)` for O(log) LRU
+    /// victim selection — maintained only when the store is bounded (an
+    /// unbounded store never evicts, and pushing on every touch would grow
+    /// without bound). Entries whose `(tick, client)` no longer match the
+    /// slot's meta are stale and skipped at pop time; the heap is rebuilt
+    /// from meta when stale entries pile up. Victim choice is exactly the
+    /// linear scan's min `(tick, client)`, so eviction order is unchanged.
+    lru: BinaryHeap<Reverse<(u64, u32, u32)>>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    compactions: u64,
+}
+
+impl SummaryStore {
+    /// `capacity` = maximum resident rows; 0 means unbounded (one row per
+    /// client ever seen, the resident-fleet mode).
+    pub fn new(dim: usize, capacity: usize) -> Self {
+        assert!(dim > 0, "SummaryStore: zero dim");
+        SummaryStore {
+            dim,
+            capacity: if capacity == 0 { usize::MAX } else { capacity },
+            data: Mat::zeros(0, dim),
+            meta: Vec::new(),
+            index: Vec::new(),
+            free: Vec::new(),
+            lru: BinaryHeap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            compactions: 0,
+        }
+    }
+
+    #[inline]
+    fn slot_of(&self, client: usize) -> Option<usize> {
+        match self.index.get(client) {
+            Some(&s) if s != NO_SLOT => Some(s as usize),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    fn bounded(&self) -> bool {
+        self.capacity != usize::MAX
+    }
+
+    /// Record a touch in the eviction heap (bounded stores only). Invariant:
+    /// every occupied slot's *current* `(tick, client)` is in the heap;
+    /// superseded entries are detected by mismatch at pop time.
+    fn lru_push(&mut self, tick: u64, client: u32, slot: u32) {
+        if self.bounded() {
+            self.lru.push(Reverse((tick, client, slot)));
+            if self.lru.len() > 2 * self.meta.len() + 64 {
+                self.rebuild_lru();
+            }
+        }
+    }
+
+    fn rebuild_lru(&mut self) {
+        self.lru.clear();
+        for (slot, m) in self.meta.iter().enumerate() {
+            if m.client != NO_CLIENT {
+                self.lru.push(Reverse((m.tick, m.client, slot as u32)));
+            }
+        }
+    }
+
+    /// Look up `client` at `phase`; counts a hit (and touches the LRU clock)
+    /// only when the stored row matches the requested phase.
+    pub fn lookup(&mut self, client: usize, phase: u64) -> Option<usize> {
+        match self.slot_of(client) {
+            Some(slot) if self.meta[slot].phase == phase => {
+                self.hits += 1;
+                self.tick += 1;
+                self.meta[slot].tick = self.tick;
+                self.lru_push(self.tick, self.meta[slot].client, slot as u32);
+                Some(slot)
+            }
+            _ => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Claim a slot for `(client, phase)` and return it; the caller then
+    /// writes the summary into [`SummaryStore::row_mut`] — rows are written
+    /// in place, never through intermediate heap vectors. Reuses the
+    /// client's existing slot, then the lowest free slot, then a fresh arena
+    /// row, and finally (at capacity) evicts the least-recently-used row.
+    pub fn upsert(&mut self, client: usize, phase: u64, model_secs: f64) -> usize {
+        self.tick += 1;
+        if client >= self.index.len() {
+            self.index.resize(client + 1, NO_SLOT);
+        }
+        let slot = if let Some(slot) = self.slot_of(client) {
+            slot
+        } else if let Some(slot) = self.free.pop() {
+            slot as usize
+        } else if self.meta.len() < self.capacity {
+            self.data.push_zero_row();
+            self.meta.push(RowMeta { client: NO_CLIENT, phase: 0, model_secs: 0.0, tick: 0 });
+            self.meta.len() - 1
+        } else {
+            // LRU eviction: smallest (tick, client) among occupied slots,
+            // found in O(log) through the lazy heap (ticks are unique, so
+            // the victim is exactly the linear scan's). Stale entries — a
+            // slot touched, reassigned, or freed since the push — fail the
+            // meta match and are discarded.
+            let victim = loop {
+                let Reverse((tick, cl, slot)) =
+                    self.lru.pop().expect("bounded store: eviction heap empty");
+                let m = &self.meta[slot as usize];
+                if m.client == cl && m.tick == tick {
+                    break slot as usize;
+                }
+            };
+            self.index[self.meta[victim].client as usize] = NO_SLOT;
+            self.evictions += 1;
+            victim
+        };
+        self.index[client] = slot as u32;
+        self.meta[slot] =
+            RowMeta { client: client as u32, phase, model_secs, tick: self.tick };
+        self.lru_push(self.tick, client as u32, slot as u32);
+        slot
+    }
+
+    /// Drop every row whose stored phase differs from its client's current
+    /// phase; returns how many rows were invalidated. Called at the start of
+    /// each refresh so drift rounds explicitly free exactly the drifted
+    /// clients' rows (their slots are handed back lowest-first, which keeps
+    /// the arena client-ordered when they recompute in client order).
+    pub fn invalidate_stale(&mut self, current: &[(usize, u64)]) -> usize {
+        let mut dropped = 0;
+        for &(client, phase) in current {
+            if let Some(slot) = self.slot_of(client) {
+                if self.meta[slot].phase != phase {
+                    self.meta[slot].client = NO_CLIENT;
+                    self.index[client] = NO_SLOT;
+                    self.free.push(slot as u32);
+                    dropped += 1;
+                }
+            }
+        }
+        if dropped > 0 {
+            self.free.sort_unstable_by(|a, b| b.cmp(a));
+        }
+        dropped
+    }
+
+    /// Repack occupied rows to the front of the arena (preserving slot
+    /// order) and release the free tail. Worth calling when a fleet shrinks;
+    /// the refresher does so when more than half the arena is free.
+    pub fn compact(&mut self) {
+        if self.free.is_empty() {
+            return;
+        }
+        let mut data = Mat::zeros(0, self.dim);
+        let mut meta = Vec::with_capacity(self.meta.len() - self.free.len());
+        for slot in 0..self.meta.len() {
+            let m = self.meta[slot];
+            if m.client == NO_CLIENT {
+                continue;
+            }
+            self.index[m.client as usize] = meta.len() as u32;
+            data.push_row(self.data.row(slot));
+            meta.push(m);
+        }
+        self.data = data;
+        self.meta = meta;
+        self.free.clear();
+        if self.bounded() {
+            // Relocation renumbered every slot: all heap entries are stale.
+            self.rebuild_lru();
+        }
+        self.compactions += 1;
+    }
+
+    /// Is more than half the arena free? (The refresher's compaction cue.)
+    pub fn mostly_free(&self) -> bool {
+        self.free.len() > self.meta.len() / 2
+    }
+
+    /// Pre-size the arena for an expected fleet (one reservation instead of
+    /// growth-doubling churn on a cold 100k-client fill).
+    pub fn reserve(&mut self, rows: usize) {
+        let target = rows.min(self.capacity);
+        if target > self.meta.len() {
+            let add = target - self.meta.len();
+            self.meta.reserve(add);
+            self.data.reserve_rows(add);
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, slot: usize) -> &[f32] {
+        self.data.row(slot)
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, slot: usize) -> &mut [f32] {
+        self.data.row_mut(slot)
+    }
+
+    #[inline]
+    pub fn model_secs(&self, slot: usize) -> f64 {
+        self.meta[slot].model_secs
+    }
+
+    /// The raw arena. When [`SummaryStore::fleet_matrix`] says the store is
+    /// fleet-resident, this IS the `n_clients × dim` summary matrix.
+    pub fn mat(&self) -> &Mat {
+        &self.data
+    }
+
+    /// Zero-copy fleet view: `Some(arena)` iff the arena holds exactly the
+    /// given fleet, in order — slot `i` is client `current[i].0` at phase
+    /// `current[i].1`. This is the steady state of every unbounded store
+    /// refreshed over a fixed fleet (cold refreshes fill slots in client
+    /// order; drift refreshes free and refill the same slots), and it is
+    /// what lets clustering read summaries without a gather.
+    pub fn fleet_matrix(&self, current: &[(usize, u64)]) -> Option<&Mat> {
+        if self.meta.len() != current.len() || !self.free.is_empty() {
+            return None;
+        }
+        // No free slots (guard above) means every row is occupied, so the
+        // client/phase comparison alone decides residency.
+        for (slot, &(client, phase)) in current.iter().enumerate() {
+            let m = &self.meta[slot];
+            if m.client as usize != client || m.phase != phase {
+                return None;
+            }
+        }
+        Some(&self.data)
+    }
+
+    /// Forget everything (e.g. when the summary engine or seed changes).
+    pub fn clear(&mut self) {
+        self.data = Mat::zeros(0, self.dim);
+        self.meta.clear();
+        self.index.clear();
+        self.free.clear();
+        self.lru.clear();
+    }
+
+    /// Occupied rows.
+    pub fn len(&self) -> usize {
+        self.meta.len() - self.free.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lifetime hit count (rows served without recomputation).
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lifetime miss count (lookups that required recomputation).
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Lifetime LRU evictions.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Arena bytes currently allocated.
+    pub fn bytes(&self) -> usize {
+        self.meta.len() * self.dim * std::mem::size_of::<f32>()
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            rows: self.len(),
+            allocated: self.meta.len(),
+            // Unbounded is stored as a usize::MAX sentinel internally;
+            // report it back as the configured 0, not the sentinel.
+            capacity: if self.bounded() { self.capacity } else { 0 },
+            bytes: self.bytes(),
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            compactions: self.compactions,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(store: &mut SummaryStore, client: usize, phase: u64, v: f32) -> usize {
+        let slot = store.upsert(client, phase, v as f64);
+        store.row_mut(slot).fill(v);
+        slot
+    }
+
+    #[test]
+    fn hit_requires_matching_phase() {
+        let mut s = SummaryStore::new(2, 0);
+        assert!(s.lookup(7, 0).is_none());
+        filled(&mut s, 7, 0, 1.5);
+        let slot = s.lookup(7, 0).unwrap();
+        assert_eq!(s.row(slot), &[1.5, 1.5]);
+        assert_eq!(s.model_secs(slot), 1.5);
+        assert!(s.lookup(7, 1).is_none(), "stale phase served");
+        assert_eq!(s.hits(), 1);
+        assert_eq!(s.misses(), 2);
+    }
+
+    #[test]
+    fn upsert_replaces_in_place_per_client() {
+        let mut s = SummaryStore::new(1, 0);
+        let a = filled(&mut s, 3, 0, 1.0);
+        let b = filled(&mut s, 3, 1, 2.0);
+        assert_eq!(a, b, "same client must reuse its slot");
+        assert_eq!(s.len(), 1);
+        assert!(s.lookup(3, 0).is_none());
+        assert_eq!(s.row(s.lookup(3, 1).unwrap()), &[2.0]);
+    }
+
+    #[test]
+    fn cold_fill_is_client_ordered_and_fleet_resident() {
+        let mut s = SummaryStore::new(3, 0);
+        let current: Vec<(usize, u64)> = (0..10).map(|c| (c, 0)).collect();
+        for &(c, p) in &current {
+            assert_eq!(filled(&mut s, c, p, c as f32), c, "slot != client order");
+        }
+        let m = s.fleet_matrix(&current).expect("resident fleet");
+        assert_eq!(m.rows(), 10);
+        for c in 0..10 {
+            assert_eq!(m.row(c), &[c as f32; 3]);
+        }
+    }
+
+    #[test]
+    fn invalidate_stale_frees_exactly_phase_changes_and_reuse_keeps_order() {
+        let mut s = SummaryStore::new(2, 0);
+        for c in 0..10 {
+            filled(&mut s, c, 0, c as f32);
+        }
+        let current: Vec<(usize, u64)> =
+            (0..10).map(|c| (c, if c == 2 || c == 5 { 1 } else { 0 })).collect();
+        assert_eq!(s.invalidate_stale(&current), 2);
+        assert_eq!(s.len(), 8);
+        assert!(s.fleet_matrix(&current).is_none(), "holes cannot be resident");
+        // Recompute the drifted clients in client order: lowest free slot
+        // first restores the client-ordered arena.
+        assert_eq!(filled(&mut s, 2, 1, 20.0), 2);
+        assert_eq!(filled(&mut s, 5, 1, 50.0), 5);
+        assert!(s.fleet_matrix(&current).is_some());
+    }
+
+    #[test]
+    fn capacity_bound_evicts_lru_deterministically() {
+        let mut s = SummaryStore::new(1, 3);
+        for c in 0..3 {
+            filled(&mut s, c, 0, c as f32);
+        }
+        // Touch 0 and 2: client 1 is now LRU.
+        s.lookup(0, 0).unwrap();
+        s.lookup(2, 0).unwrap();
+        filled(&mut s, 9, 0, 9.0);
+        assert_eq!(s.evictions(), 1);
+        assert!(s.lookup(1, 0).is_none(), "LRU row should be gone");
+        assert!(s.lookup(0, 0).is_some());
+        assert!(s.lookup(2, 0).is_some());
+        assert!(s.lookup(9, 0).is_some());
+        assert_eq!(s.len(), 3);
+        assert_eq!(s.bytes(), 3 * 4);
+    }
+
+    #[test]
+    fn eviction_prefers_oldest_tick() {
+        let mut s = SummaryStore::new(1, 2);
+        filled(&mut s, 5, 0, 5.0);
+        filled(&mut s, 1, 0, 1.0);
+        filled(&mut s, 7, 0, 7.0); // evicts client 5 (oldest tick)
+        assert!(s.lookup(5, 0).is_none());
+        assert!(s.lookup(1, 0).is_some());
+    }
+
+    #[test]
+    fn compact_repacks_and_counts() {
+        let mut s = SummaryStore::new(2, 0);
+        for c in 0..8 {
+            filled(&mut s, c, 0, c as f32);
+        }
+        let current: Vec<(usize, u64)> = (0..8).map(|c| (c, if c < 6 { 1 } else { 0 })).collect();
+        assert_eq!(s.invalidate_stale(&current), 6);
+        assert!(s.mostly_free());
+        let before = s.bytes();
+        s.compact();
+        assert_eq!(s.stats().compactions, 1);
+        assert!(s.bytes() < before);
+        assert_eq!(s.len(), 2);
+        // Surviving rows still resolve to their bits.
+        assert_eq!(s.row(s.lookup(6, 0).unwrap()), &[6.0, 6.0]);
+        assert_eq!(s.row(s.lookup(7, 0).unwrap()), &[7.0, 7.0]);
+    }
+
+    #[test]
+    fn unbounded_store_reports_capacity_zero() {
+        let mut s = SummaryStore::new(2, 0);
+        filled(&mut s, 0, 0, 0.0);
+        assert_eq!(s.stats().capacity, 0, "sentinel must not leak into stats");
+        assert_eq!(s.evictions(), 0);
+    }
+
+    #[test]
+    fn clear_empties() {
+        let mut s = SummaryStore::new(4, 0);
+        filled(&mut s, 1, 0, 0.5);
+        assert!(!s.is_empty());
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.bytes(), 0);
+    }
+
+    #[test]
+    fn stats_snapshot_consistent() {
+        let mut s = SummaryStore::new(2, 5);
+        filled(&mut s, 0, 0, 0.0);
+        filled(&mut s, 1, 0, 1.0);
+        s.lookup(0, 0);
+        s.lookup(0, 9);
+        let st = s.stats();
+        assert_eq!(st.rows, 2);
+        assert_eq!(st.capacity, 5);
+        assert_eq!(st.hits, 1);
+        assert_eq!(st.misses, 1);
+        assert_eq!(st.evictions, 0);
+        assert_eq!(st.bytes, 2 * 2 * 4);
+    }
+}

@@ -2,34 +2,51 @@
 //! "clustering" stages, refreshed periodically for non-stationary data
 //! (paper §2.1), rebuilt as a scalable subsystem:
 //!
+//! * **Streaming fused summarization.** By default ([`RefreshOptions::fused`])
+//!   each client is summarized straight off the generator's split label /
+//!   pixel substreams (`SummaryEngine::summarize_streaming`): labels are
+//!   drawn alone, the coreset is chosen from labels, and only the chosen
+//!   `coreset_k` rows' pixels are ever synthesized — per-client generation
+//!   work drops from `O(n_samples × flat_dim)` to
+//!   `O(n_samples + coreset_k × flat_dim)` with zero full-dataset
+//!   allocation. The materialized path (`fused = false`) is kept as the
+//!   bitwise oracle and benchmark baseline.
 //! * **Parallel summarization.** Per-client summaries are computed across
 //!   worker threads (`util::parallel::for_each_dynamic_init`, dynamic
 //!   work-stealing — client workloads vary ~60x). Each worker owns its own
 //!   runtime `Engine` (the PJRT wrappers are not `Sync`); each client's
-//!   vector is written into its pre-allocated row of the output `Mat`, so
-//!   the result is **bitwise identical for any `FEDDDE_THREADS`**.
-//! * **Incremental refresh.** A [`SummaryCache`] keyed by `(client_id,
-//!   drift_phase)` serves unchanged clients byte-for-byte; only clients
-//!   whose drift phase moved are recomputed ([`RefreshResult::recomputed`]).
-//!   Stale entries are explicitly invalidated at the start of every refresh.
+//!   vector lands in its pre-assigned slot, so the result is **bitwise
+//!   identical for any `FEDDDE_THREADS`**.
+//! * **Columnar incremental store.** Fleet summaries live in a
+//!   [`SummaryStore`] — one flat arena `Mat`, row per client, tagged with
+//!   the drift phase it was computed under. Cache hits are rows that simply
+//!   stay in place; recomputed rows are written in place; clustering reads
+//!   the arena zero-copy whenever the store is fleet-resident
+//!   ([`SummaryStore::fleet_matrix`]). Stale rows are explicitly
+//!   invalidated at the start of every refresh; capacity, LRU-eviction and
+//!   compaction counters surface in [`RefreshResult`].
 //! * **Scalable clustering.** `cluster_backend` picks full Lloyd's
 //!   (`cluster::kmeans`) or mini-batch K-means (`cluster::minibatch`) with
 //!   centroids + learning-rate counts warm-started across refreshes; `auto`
 //!   switches to mini-batch at `MINIBATCH_AUTO_THRESHOLD` clients.
 //!
 //! Determinism contract: a client's summary is a pure function of
-//! `(seed, client_id, drift_phase)` — the rng substream and the generator are
-//! both keyed on that triple — which is exactly what makes the cache exact.
-//! Simulated per-device seconds use the engine's *deterministic cost model*
-//! (`SummaryEngine::model_host_secs`) scaled by each device's compute factor;
-//! measured wall-clock (inherently run-dependent) is reported separately in
-//! [`RefreshResult::host_secs`]. Everything is bitwise identical across
-//! thread counts; summaries/device_secs are also bitwise identical across
-//! cold vs cached refreshes, and clusters are too under the Lloyd backend.
-//! A warm-started mini-batch refresher deliberately carries centroid state,
-//! so its assignments may differ from a cold run at the same round (quality
-//! is held to within 0.1 ARI of Lloyd's instead).
-//! `rust/tests/determinism.rs` enforces all of this element-for-element.
+//! `(seed, client_id, drift_phase)` — the rng substream and both generator
+//! substreams are keyed on that triple — which is exactly what makes the
+//! store exact AND what makes the fused path bitwise equal to
+//! materialize-then-summarize. Simulated per-device seconds use the
+//! engine's *deterministic cost model* (`SummaryEngine::model_host_secs`,
+//! a function of the client's sample count) scaled by each device's compute
+//! factor; measured wall-clock (inherently run-dependent) is reported
+//! separately in [`RefreshResult::host_secs`]. Everything is bitwise
+//! identical across thread counts; summaries/device_secs are also bitwise
+//! identical across cold vs cached refreshes, fused vs materialized paths,
+//! and store evictions (an evicted row recomputes to the same bits), and
+//! clusters are too under the Lloyd backend. A warm-started mini-batch
+//! refresher deliberately carries centroid state, so its assignments may
+//! differ from a cold run at the same round (quality is held to within 0.1
+//! ARI of Lloyd's instead). `rust/tests/determinism.rs` enforces all of
+//! this element-for-element.
 
 use std::sync::Mutex;
 
@@ -38,7 +55,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::cluster::kmeans::{self, KmeansConfig};
 use crate::cluster::minibatch::{self, MinibatchConfig, WarmState};
 use crate::cluster::{ClusterBackend, Pruning};
-use crate::coordinator::cache::SummaryCache;
+use crate::coordinator::store::{StoreStats, SummaryStore};
 use crate::data::drift::DriftSchedule;
 use crate::data::generator::Generator;
 use crate::data::partition::Partition;
@@ -63,7 +80,7 @@ pub struct RefreshOptions {
     pub threads: usize,
     /// Clustering engine selection (config `cluster_backend`).
     pub backend: ClusterBackend,
-    /// Serve unchanged clients from the summary cache.
+    /// Serve unchanged clients from the summary store.
     pub use_cache: bool,
     /// Mini-batch size override (0 = `MinibatchConfig` default).
     pub minibatch_batch: usize,
@@ -71,6 +88,24 @@ pub struct RefreshOptions {
     /// and naive clustering are bitwise identical; this is an escape hatch
     /// and a benchmarking aid (see `cluster::Pruning`).
     pub pruning: Pruning,
+    /// Streaming fused generate→coreset→project summarization (config
+    /// `summary_fused`). `false` materializes every client's full dataset
+    /// first — the pre-streaming path, kept as the bitwise oracle and the
+    /// benchmark baseline (`BENCH_refresh.json` quotes fused vs
+    /// materialized bytes/client).
+    pub fused: bool,
+    /// Maximum resident rows in the summary store (config `store_capacity`;
+    /// 0 = unbounded, i.e. one row per client). Bounding trades recompute
+    /// for memory: LRU-evicted rows recompute bitwise identically.
+    pub store_capacity: usize,
+    /// Return an owned copy of the fleet summary matrix in
+    /// [`RefreshResult::summaries`]. When `false`, `summaries` always comes
+    /// back empty (0 × dim); with an unbounded store this additionally keeps
+    /// exactly one copy (the arena) alive and clustering reads it zero-copy.
+    /// (A bounded store, or `use_cache = false`, still needs a transient
+    /// internal matrix to back the clustering read — it is dropped, not
+    /// returned.)
+    pub emit_summaries: bool,
 }
 
 impl Default for RefreshOptions {
@@ -81,13 +116,17 @@ impl Default for RefreshOptions {
             use_cache: true,
             minibatch_batch: 0,
             pruning: Pruning::default(),
+            fused: true,
+            store_capacity: 0,
+            emit_summaries: true,
         }
     }
 }
 
 /// Result of one fleet-wide summary refresh.
 pub struct RefreshResult {
-    /// n_clients x summary_dim.
+    /// n_clients x summary_dim (empty when `emit_summaries = false`; the
+    /// canonical rows then live only in the refresher's store).
     pub summaries: Mat,
     /// Cluster assignment per client.
     pub clusters: Vec<usize>,
@@ -107,6 +146,16 @@ pub struct RefreshResult {
     /// Client indices recomputed this refresh: everyone on a cold refresh,
     /// exactly the drifted clients on a cached one.
     pub recomputed: Vec<usize>,
+    /// Rows dropped at the start of this refresh because their drift phase
+    /// moved (explicit invalidation).
+    pub invalidated: usize,
+    /// LRU evictions performed during this refresh (capacity pressure;
+    /// always 0 with an unbounded store).
+    pub evicted: u64,
+    /// Store snapshot after this refresh: sizes + lifetime counters
+    /// (hits/misses/evictions/compactions). Default-zero when the store is
+    /// disabled (`use_cache = false`).
+    pub store: StoreStats,
 }
 
 impl RefreshResult {
@@ -116,34 +165,37 @@ impl RefreshResult {
     }
 }
 
-/// Stateful refresh service: owns the summary cache and the warm-start
+/// Stateful refresh service: owns the summary store and the warm-start
 /// clustering state carried between refreshes. The `Coordinator` holds one;
 /// one-shot callers can use the [`refresh_fleet`] convenience wrapper.
 pub struct FleetRefresher {
     pub opts: RefreshOptions,
-    cache: SummaryCache,
+    /// Columnar summary arena; created lazily (its width is the engine's
+    /// summary dim, unknown until the first refresh).
+    store: Option<SummaryStore>,
     warm: Option<WarmState>,
     /// (seed, summary dim) the carried state was computed under. Summaries
     /// are pure functions of the seed, so a different seed (or a different
-    /// summary engine) must drop the cache instead of serving stale rows.
+    /// summary engine) must drop the store instead of serving stale rows.
     state_key: Option<(u64, usize)>,
 }
 
 impl FleetRefresher {
     pub fn new(opts: RefreshOptions) -> Self {
-        FleetRefresher { opts, cache: SummaryCache::new(), warm: None, state_key: None }
+        FleetRefresher { opts, store: None, warm: None, state_key: None }
     }
 
-    /// Cache statistics (hits/misses/size) for logging and tests.
-    pub fn cache(&self) -> &SummaryCache {
-        &self.cache
+    /// The summary store (statistics, zero-copy reads). `None` until the
+    /// first cached refresh.
+    pub fn store(&self) -> Option<&SummaryStore> {
+        self.store.as_ref()
     }
 
-    /// Drop all carried state (cache + warm centroids). `refresh` calls this
+    /// Drop all carried state (store + warm centroids). `refresh` calls this
     /// itself when the seed or summary dimensionality changes between calls;
     /// call it manually when swapping summary engines of equal dim.
     pub fn reset(&mut self) {
-        self.cache.clear();
+        self.store = None;
         self.warm = None;
         self.state_key = None;
     }
@@ -168,55 +220,83 @@ impl FleetRefresher {
             bail!("refresh: empty device fleet");
         }
         let threads = if self.opts.threads == 0 { default_threads() } else { self.opts.threads };
-        // Carried state (cache rows, warm centroids) is only valid for the
+        // Carried state (store rows, warm centroids) is only valid for the
         // seed + dim it was computed under; a change must not serve stale rows.
         if self.state_key != Some((seed, dim)) {
             self.reset();
             self.state_key = Some((seed, dim));
         }
+        let use_cache = self.opts.use_cache;
+        let bounded = self.opts.store_capacity != 0 && self.opts.store_capacity < n;
+        // The owned output matrix is skipped only when the resident store's
+        // arena itself backs every read (zero-copy mode). A bounded store can
+        // evict a hit row mid-refresh, so hits must be copied out eagerly.
+        let want_out = !use_cache || self.opts.emit_summaries || bounded;
         let t0 = std::time::Instant::now();
 
-        // Phase per client, then explicit invalidation of drifted entries.
+        // Phase per client, then explicit invalidation of drifted rows.
         let phases: Vec<u64> = partition
             .clients
             .iter()
             .map(|part| drift.client_phase(part.client_id, round, seed))
             .collect();
-        if self.opts.use_cache {
-            let current: Vec<(usize, u64)> = partition
-                .clients
-                .iter()
-                .zip(&phases)
-                .map(|(part, &phase)| (part.client_id, phase))
-                .collect();
-            self.cache.invalidate_stale(&current);
-        }
+        let current: Vec<(usize, u64)> = partition
+            .clients
+            .iter()
+            .zip(&phases)
+            .map(|(part, &phase)| (part.client_id, phase))
+            .collect();
 
-        // Partition the fleet into cache hits (copied out) and a worklist.
-        let mut summaries = Mat::zeros(n, dim);
+        let mut invalidated = 0usize;
+        let mut evictions_before = 0u64;
+        let mut store = if use_cache {
+            let cap = self.opts.store_capacity;
+            let store = self.store.get_or_insert_with(|| SummaryStore::new(dim, cap));
+            store.reserve(n);
+            invalidated = store.invalidate_stale(&current);
+            evictions_before = store.evictions();
+            Some(store)
+        } else {
+            None
+        };
+
+        // Partition the fleet into store hits and a worklist. Hit rows stay
+        // in place in the arena; they are copied out only when an owned
+        // result matrix was requested (or the store is bounded, where a
+        // later eviction could reuse a hit row mid-refresh).
+        let mut out = Mat::zeros(if want_out { n } else { 0 }, dim);
+        let mut slots: Vec<usize> = vec![usize::MAX; n];
         let mut model_secs = vec![0.0f64; n];
         let mut recomputed: Vec<usize> = Vec::new();
         for (i, part) in partition.clients.iter().enumerate() {
-            if self.opts.use_cache {
-                if let Some(hit) = self.cache.get(part.client_id, phases[i]) {
-                    if hit.vec.len() == dim {
-                        summaries.row_mut(i).copy_from_slice(&hit.vec);
-                        model_secs[i] = hit.model_secs;
-                        continue;
+            if let Some(store) = store.as_deref_mut() {
+                if let Some(slot) = store.lookup(part.client_id, phases[i]) {
+                    model_secs[i] = store.model_secs(slot);
+                    slots[i] = slot;
+                    if want_out {
+                        out.row_mut(i).copy_from_slice(store.row(slot));
                     }
+                    continue;
                 }
             }
             recomputed.push(i);
         }
 
         // Summarize the worklist: one result slot per item so any
-        // index→worker mapping produces the same output.
+        // index→worker mapping produces the same output. The fused path
+        // streams each client straight off the generator's label/pixel
+        // substreams; the materialized path is the bitwise oracle.
+        let fused = self.opts.fused;
         let compute = |eng: &Engine, i: usize| -> Result<(Vec<f32>, f64)> {
             let part = &partition.clients[i];
-            let ds = generator.client_dataset(part, phases[i]);
             let mut rng =
                 Rng::substream(seed, &[SUMMARY_SALT, part.client_id as u64, phases[i]]);
-            let (vec, _measured) = summary.summarize(eng, &ds, &mut rng)?;
+            let (vec, _measured) = if fused {
+                summary.summarize_streaming(eng, generator, part, phases[i], &mut rng)?
+            } else {
+                let ds = generator.client_dataset(part, phases[i]);
+                summary.summarize(eng, &ds, &mut rng)?
+            };
             if vec.len() != dim {
                 bail!(
                     "summary engine {} returned {} values, expected {dim}",
@@ -224,11 +304,11 @@ impl FleetRefresher {
                     vec.len()
                 );
             }
-            let model = summary.model_host_secs(&ds);
+            let model = summary.model_host_secs(part.n_samples);
             Ok((vec, model))
         };
 
-        let slots: Vec<Mutex<Option<Result<(Vec<f32>, f64)>>>> =
+        let result_slots: Vec<Mutex<Option<Result<(Vec<f32>, f64)>>>> =
             (0..recomputed.len()).map(|_| Mutex::new(None)).collect();
         let mut work_threads = threads.clamp(1, recomputed.len().max(1));
         // Worker engines are opened per refresh (PJRT handles are neither
@@ -243,7 +323,7 @@ impl FleetRefresher {
             work_threads = 1;
         }
         if work_threads <= 1 {
-            for (slot, &i) in slots.iter().zip(&recomputed) {
+            for (slot, &i) in result_slots.iter().zip(&recomputed) {
                 *slot.lock().unwrap() = Some(compute(engine, i));
             }
         } else {
@@ -264,30 +344,39 @@ impl FleetRefresher {
                     }
                 },
                 |worker_engine, j| {
-                    let out = match worker_engine {
+                    let result = match worker_engine {
                         Ok(eng) => compute(eng, work[j]),
                         Err(e) => Err(anyhow!("opening per-worker engine: {e:#}")),
                     };
-                    *slots[j].lock().unwrap() = Some(out);
+                    *result_slots[j].lock().unwrap() = Some(result);
                 },
             );
         }
 
-        // Deterministic assembly: write each result into its client's row.
-        for (slot, &i) in slots.into_iter().zip(&recomputed) {
-            let out = slot
+        // Deterministic assembly: write each result into its client's arena
+        // row (in place) and/or the owned output row.
+        for (slot, &i) in result_slots.into_iter().zip(&recomputed) {
+            let computed = slot
                 .into_inner()
                 .unwrap()
                 .expect("refresh worker left an index uncomputed");
             let part = &partition.clients[i];
-            let (vec, model) = out
+            let (vec, model) = computed
                 .with_context(|| format!("summarizing client {}", part.client_id))?;
-            summaries.row_mut(i).copy_from_slice(&vec);
             model_secs[i] = model;
-            if self.opts.use_cache {
-                self.cache.insert(part.client_id, phases[i], vec, model);
+            if let Some(store) = store.as_deref_mut() {
+                let s = store.upsert(part.client_id, phases[i], model);
+                store.row_mut(s).copy_from_slice(&vec);
+                slots[i] = s;
+            }
+            if want_out {
+                out.row_mut(i).copy_from_slice(&vec);
             }
         }
+        let evicted = store
+            .as_deref()
+            .map(|s| s.evictions() - evictions_before)
+            .unwrap_or(0);
         let host_secs = t0.elapsed().as_secs_f64();
 
         // Simulated device accounting from the deterministic cost model.
@@ -299,7 +388,28 @@ impl FleetRefresher {
             upload_secs.push(dev.upload_time(summary.summary_bytes()));
         }
 
-        // Server-side clustering via the configured backend.
+        // Server-side clustering via the configured backend, reading the
+        // store's arena zero-copy when it is fleet-resident and no owned
+        // output was materialized.
+        let gathered: Mat;
+        let cluster_src: &Mat = if want_out {
+            &out
+        } else {
+            let store_ref = store.as_deref().expect("zero-copy mode requires the store");
+            match store_ref.fleet_matrix(&current) {
+                Some(m) => m,
+                None => {
+                    // Store holds the fleet but not in client order (e.g.
+                    // membership churn): gather through the recorded slots.
+                    let mut gm = Mat::zeros(n, dim);
+                    for i in 0..n {
+                        gm.row_mut(i).copy_from_slice(store_ref.row(slots[i]));
+                    }
+                    gathered = gm;
+                    &gathered
+                }
+            }
+        };
         let tc = std::time::Instant::now();
         let clusters = if k_clusters <= 1 || n <= k_clusters {
             self.warm = None;
@@ -308,7 +418,7 @@ impl FleetRefresher {
             // Balance summary blocks first: the proposed summary concatenates
             // a feature-mean block and a label-distribution block of very
             // different scales (see cluster::balance_blocks).
-            let balanced = crate::cluster::balance_blocks(&summaries, &summary.blocks());
+            let balanced = crate::cluster::balance_blocks(cluster_src, &summary.blocks());
             if self.opts.backend.use_minibatch(n) {
                 let mut cfg = MinibatchConfig::new(k_clusters);
                 cfg.seed = seed;
@@ -317,9 +427,9 @@ impl FleetRefresher {
                 if self.opts.minibatch_batch > 0 {
                     cfg.batch = self.opts.minibatch_batch;
                 }
-                let out = minibatch::fit_warm(&balanced, &cfg, self.warm.as_ref());
-                self.warm = Some(out.warm);
-                out.result.assignments
+                let fitted = minibatch::fit_warm(&balanced, &cfg, self.warm.as_ref());
+                self.warm = Some(fitted.warm);
+                fitted.result.assignments
             } else {
                 self.warm = None;
                 let mut cfg = KmeansConfig::new(k_clusters);
@@ -331,11 +441,27 @@ impl FleetRefresher {
         };
         let cluster_secs = tc.elapsed().as_secs_f64();
 
+        // Compact only after every read through recorded slots is done
+        // (compaction relocates rows). A fleet shrink or heavy invalidation
+        // without re-fill can leave the arena mostly holes.
+        if let Some(store) = store.as_deref_mut() {
+            if store.mostly_free() {
+                store.compact();
+            }
+        }
+
         let parallel_device_max = device_secs
             .iter()
             .zip(&upload_secs)
             .map(|(c, u)| c + u)
             .fold(0.0f64, f64::max);
+        let store_stats = store.as_deref().map(|s| s.stats()).unwrap_or_default();
+        // `want_out` may have materialized an internal matrix (bounded store,
+        // or no store at all) purely to back the clustering read — the
+        // emit_summaries contract still holds: callers that opted out get an
+        // empty matrix back, never a surprise n × dim allocation they own.
+        let summaries =
+            if self.opts.emit_summaries { out } else { Mat::zeros(0, dim) };
         Ok(RefreshResult {
             summaries,
             clusters,
@@ -344,13 +470,17 @@ impl FleetRefresher {
             cluster_secs,
             sim_secs: parallel_device_max + cluster_secs,
             recomputed,
+            invalidated,
+            evicted,
+            store: store_stats,
         })
     }
 }
 
-/// One-shot fleet refresh (no cache, no warm start carried): the stateless
+/// One-shot fleet refresh (no store, no warm start carried): the stateless
 /// entry point the CLI `summarize`/`cluster` subcommands and older callers
-/// use. Parallel over `default_threads()`; clustering backend is `auto`.
+/// use. Parallel over `default_threads()`; clustering backend is `auto`;
+/// summarization is streaming-fused.
 #[allow(clippy::too_many_arguments)]
 pub fn refresh_fleet(
     engine: &Engine,
@@ -419,6 +549,7 @@ mod tests {
         let (avg, max) = r.summary_time_stats();
         assert!(avg > 0.0 && max >= avg);
         assert_eq!(r.recomputed.len(), spec.n_clients); // one-shot: all cold
+        assert_eq!(r.store, StoreStats::default()); // store disabled
     }
 
     #[test]
@@ -490,12 +621,16 @@ mod tests {
             .refresh(&eng, &jl, &part, &gen, &fleet, &drift, 0, spec.n_groups, seed)
             .unwrap();
         assert_eq!(r0.recomputed.len(), spec.n_clients);
-        // Same round again: everything served from cache.
+        assert_eq!(r0.store.rows, spec.n_clients);
+        assert_eq!(r0.store.bytes, spec.n_clients * jl.dim() * 4);
+        // Same round again: everything served from the store, in place.
         let r1 = refresher
             .refresh(&eng, &jl, &part, &gen, &fleet, &drift, 0, spec.n_groups, seed)
             .unwrap();
-        assert!(r1.recomputed.is_empty(), "cache missed: {:?}", r1.recomputed);
+        assert!(r1.recomputed.is_empty(), "store missed: {:?}", r1.recomputed);
         assert_eq!(r0.summaries, r1.summaries);
+        assert_eq!(r1.invalidated, 0);
+        assert_eq!(r1.evicted, 0);
         // Past the drift round: exactly the affected clients recompute.
         let r2 = refresher
             .refresh(&eng, &jl, &part, &gen, &fleet, &drift, 5, spec.n_groups, seed)
@@ -504,10 +639,60 @@ mod tests {
             .filter(|&i| drift.client_phase(part.clients[i].client_id, 5, seed) != 0)
             .collect();
         assert_eq!(r2.recomputed, expected);
+        assert_eq!(r2.invalidated, expected.len());
         assert!(!expected.is_empty() && expected.len() < spec.n_clients);
         for i in 0..spec.n_clients {
             if !expected.contains(&i) {
                 assert_eq!(r0.summaries.row(i), r2.summaries.row(i), "row {i} changed");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_and_materialized_refreshes_are_bitwise_equal() {
+        // Module-level smoke for the tentpole oracle (the full sweep lives
+        // in tests/determinism.rs): same fleet, fused on vs off.
+        let (eng, spec, part, gen, fleet) = setup_native();
+        let jl = JlSummary::new(&spec);
+        let drift = DriftSchedule::at(vec![2], 0.6);
+        let run = |fused: bool| {
+            FleetRefresher::new(RefreshOptions { fused, ..Default::default() })
+                .refresh(&eng, &jl, &part, &gen, &fleet, &drift, 4, spec.n_groups, 21)
+                .unwrap()
+        };
+        let a = run(true);
+        let b = run(false);
+        for (x, y) in a.summaries.data().iter().zip(b.summaries.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.clusters, b.clusters);
+    }
+
+    #[test]
+    fn zero_copy_mode_clusters_from_the_arena() {
+        // emit_summaries = false: no owned matrix is returned, clustering
+        // reads the store's arena, clusters match the emitting run.
+        let (eng, spec, part, gen, fleet) = setup_native();
+        let jl = JlSummary::new(&spec);
+        let none = DriftSchedule::none();
+        let mut zc = FleetRefresher::new(RefreshOptions {
+            emit_summaries: false,
+            ..Default::default()
+        });
+        let r = zc
+            .refresh(&eng, &jl, &part, &gen, &fleet, &none, 0, spec.n_groups, 7)
+            .unwrap();
+        assert_eq!(r.summaries.rows(), 0, "zero-copy mode must not emit");
+        assert_eq!(r.clusters.len(), spec.n_clients);
+        let full = FleetRefresher::new(RefreshOptions::default())
+            .refresh(&eng, &jl, &part, &gen, &fleet, &none, 0, spec.n_groups, 7)
+            .unwrap();
+        assert_eq!(r.clusters, full.clusters);
+        // The arena holds the same bits the emitting run returned.
+        let store = zc.store().unwrap();
+        for i in 0..spec.n_clients {
+            for (x, y) in store.mat().row(i).iter().zip(full.summaries.row(i)) {
+                assert_eq!(x.to_bits(), y.to_bits(), "arena row {i}");
             }
         }
     }

@@ -5,23 +5,40 @@
 //! label histogram is the best integer approximation of the client's, then
 //! samples without replacement within each label.
 
-use crate::data::generator::ClientDataset;
+use crate::data::generator::{ClientDataset, Generator};
+use crate::data::partition::ClientPartition;
 use crate::util::rng::Rng;
 
 /// Indices of the selected coreset (len <= k; == k when the client has at
 /// least k samples, otherwise every sample is taken).
+///
+/// Convenience wrapper over [`coreset_indices_from_labels`] for callers
+/// that already materialized the dataset.
 pub fn coreset_indices(ds: &ClientDataset, classes: usize, k: usize, rng: &mut Rng) -> Vec<usize> {
-    if ds.n <= k {
-        return (0..ds.n).collect();
+    coreset_indices_from_labels(&ds.labels, classes, k, rng)
+}
+
+/// Coreset selection from labels alone — the fused pipeline's entry point.
+/// Label-proportional selection never looks at a pixel, so the streaming
+/// path can pick its rows from the generator's label substream and
+/// synthesize only the winners.
+pub fn coreset_indices_from_labels(
+    labels: &[u32],
+    classes: usize,
+    k: usize,
+    rng: &mut Rng,
+) -> Vec<usize> {
+    if labels.len() <= k {
+        return (0..labels.len()).collect();
     }
     // Group sample indices by label.
     let mut by_label: Vec<Vec<usize>> = vec![Vec::new(); classes];
-    for (i, &l) in ds.labels.iter().enumerate() {
+    for (i, &l) in labels.iter().enumerate() {
         by_label[l as usize].push(i);
     }
 
     // Largest-remainder apportionment of k slots across labels.
-    let n = ds.n as f64;
+    let n = labels.len() as f64;
     let mut quota: Vec<(usize, usize, f64)> = Vec::new(); // (label, floor, remainder)
     let mut assigned = 0usize;
     for (label, idxs) in by_label.iter().enumerate() {
@@ -92,6 +109,41 @@ pub fn build_coreset(ds: &ClientDataset, classes: usize, k: usize, rng: &mut Rng
         images.extend(std::iter::repeat(0.0f32).take(ds.flat_dim));
         labels.push(u32::MAX);
     }
+    Coreset { images, labels, k, real }
+}
+
+/// [`build_coreset`] without ever materializing the client's dataset: draw
+/// the label stream, apportion the coreset from labels alone, then
+/// synthesize only the chosen rows' pixels straight into the padded
+/// `k × flat_dim` buffer. Per-client generation work drops from
+/// `O(n_samples × flat_dim)` to `O(n_samples + coreset_k × flat_dim)`;
+/// the result is bitwise identical to materialize-then-select under the
+/// generator's stream-split contract (tested below).
+pub fn build_coreset_streaming(
+    gen: &Generator,
+    part: &ClientPartition,
+    phase: u64,
+    classes: usize,
+    k: usize,
+    rng: &mut Rng,
+) -> Coreset {
+    let flat = gen.spec().flat_dim();
+    let all_labels = gen.client_labels(part, phase);
+    let idxs = coreset_indices_from_labels(&all_labels, classes, k, rng);
+    let real = idxs.len();
+    let mut images = vec![0.0f32; k * flat];
+    let mut labels = Vec::with_capacity(k);
+    for (row, &i) in idxs.iter().enumerate() {
+        gen.write_sample_pixels(
+            part,
+            phase,
+            i,
+            all_labels[i],
+            &mut images[row * flat..(row + 1) * flat],
+        );
+        labels.push(all_labels[i]);
+    }
+    labels.resize(k, u32::MAX); // padding rows stay zero-pixel
     Coreset { images, labels, k, real }
 }
 
@@ -201,5 +253,41 @@ mod tests {
     fn one_hot_handles_padding() {
         let oh = one_hot(&[1, u32::MAX, 0], 3);
         assert_eq!(oh, vec![0.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn streaming_coreset_matches_materialized_bitwise() {
+        // The fused pipeline's foundation: for every client and drift phase,
+        // build_coreset_streaming == build_coreset(client_dataset) exactly —
+        // images, labels, padding.
+        let spec = DatasetSpec::tiny();
+        let part = Partition::build(&spec);
+        let g = Generator::new(&spec);
+        for c in part.clients.iter().take(8) {
+            for phase in [0u64, 2] {
+                let seed = c.client_id as u64 + phase;
+                let ds = g.client_dataset(c, phase);
+                let a = build_coreset(&ds, spec.classes, spec.coreset_k, &mut Rng::new(seed));
+                let b = build_coreset_streaming(
+                    &g,
+                    c,
+                    phase,
+                    spec.classes,
+                    spec.coreset_k,
+                    &mut Rng::new(seed),
+                );
+                assert_eq!(a.real, b.real, "client {}", c.client_id);
+                assert_eq!(a.labels, b.labels, "client {}", c.client_id);
+                assert_eq!(a.images.len(), b.images.len());
+                for (i, (x, y)) in a.images.iter().zip(&b.images).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "client {} phase {phase} flat index {i}",
+                        c.client_id
+                    );
+                }
+            }
+        }
     }
 }

@@ -7,12 +7,41 @@
 //! P(y) differs across groups (label priors) AND P(X|y) differs across
 //! groups (group transforms), so both summary families have signal, while
 //! sample noise keeps per-client variance realistic.
+//!
+//! ## RNG stream-split contract
+//!
+//! A client's randomness is split into two independent substreams, both
+//! keyed on `(seed, client_id, drift_phase)`:
+//!
+//! * **label stream** ([`LABEL_STREAM_SALT`]) — draws the `n_samples`
+//!   labels in sample order, via the client's precomputed [`CumTable`];
+//! * **pixel streams** ([`PIXEL_STREAM_SALT`]) — one substream *per
+//!   sample*, additionally keyed on the sample index, drawing that sample's
+//!   `flat_dim` noise values.
+//!
+//! The split is what makes the fused summarization pipeline possible:
+//! labels can be generated alone (O(n) draws, no pixels), the coreset can
+//! be chosen from labels alone, and only the chosen rows' pixels are ever
+//! synthesized — each from its own substream, so random access to sample
+//! `i` produces bit-for-bit the pixels a full materialization would.
+//! [`Generator::client_dataset`] is itself built on the two streams, which
+//! is why `tests::fused_rows_match_materialized_rows_bitwise` can demand
+//! exact equality rather than tolerance. Like PR 3's lane-kernel contract,
+//! adopting the split moved the generated values relative to the old
+//! single-interleaved-stream generator; every determinism property
+//! (pure function of `(seed, client_id, phase)`, thread-count invariance,
+//! cold==cached) is unchanged.
 
 use std::sync::Arc;
 
 use crate::data::partition::ClientPartition;
 use crate::data::spec::DatasetSpec;
 use crate::util::rng::Rng;
+
+/// Substream salt for the per-client label stream.
+pub const LABEL_STREAM_SALT: u64 = 0xDA7A_001;
+/// Substream salt for the per-sample pixel streams.
+pub const PIXEL_STREAM_SALT: u64 = 0xDA7A_002;
 
 /// One client's materialized dataset (NHWC images flattened row-major).
 #[derive(Debug, Clone)]
@@ -114,22 +143,54 @@ impl Generator {
         &self.spec
     }
 
-    /// Materialize one client's dataset (deterministic in (seed, client, phase)).
+    /// The client's labels alone — the label substream, no pixel work.
+    /// O(n_samples) draws through the precomputed cumulative table; this is
+    /// all the fused pipeline needs to pick its coreset.
+    pub fn client_labels(&self, part: &ClientPartition, phase: u64) -> Vec<u32> {
+        let mut rng = Rng::substream(
+            self.spec.seed,
+            &[LABEL_STREAM_SALT, part.client_id as u64, phase],
+        );
+        let table = part.label_cum();
+        (0..part.n_samples).map(|_| table.sample(&mut rng) as u32).collect()
+    }
+
+    /// Synthesize exactly one sample's pixels into `out` (`len == flat_dim`)
+    /// from the sample's own pixel substream. Random access: sample `i` of a
+    /// client is the same bit pattern whether the rest of the dataset is
+    /// materialized or not.
+    pub fn write_sample_pixels(
+        &self,
+        part: &ClientPartition,
+        phase: u64,
+        sample: usize,
+        label: u32,
+        out: &mut [f32],
+    ) {
+        let proto = &self.prototypes[label as usize];
+        debug_assert_eq!(out.len(), proto.len());
+        let (bright, contrast) = self.group_transform[part.group % self.group_transform.len()];
+        let mut rng = Rng::substream(
+            self.spec.seed,
+            &[PIXEL_STREAM_SALT, part.client_id as u64, phase, sample as u64],
+        );
+        for (o, &p) in out.iter_mut().zip(proto.iter()) {
+            let v = (p - 0.5) * contrast + 0.5 + bright + self.noise * rng.normal() as f32;
+            *o = v.clamp(0.0, 1.0);
+        }
+    }
+
+    /// Materialize one client's dataset (deterministic in (seed, client,
+    /// phase)). Built on the same label/pixel substreams as the streaming
+    /// accessors above, so a materialized row is bitwise what
+    /// [`Generator::write_sample_pixels`] would synthesize on its own.
     pub fn client_dataset(&self, part: &ClientPartition, phase: u64) -> ClientDataset {
         let flat = self.spec.flat_dim();
-        let mut rng = Rng::substream(self.spec.seed, &[0xDA7A, part.client_id as u64, phase]);
         let n = part.n_samples;
-        let mut images = Vec::with_capacity(n * flat);
-        let mut labels = Vec::with_capacity(n);
-        let (bright, contrast) = self.group_transform[part.group % self.group_transform.len()];
-        for _ in 0..n {
-            let label = rng.weighted_index(&part.label_dist);
-            labels.push(label as u32);
-            let proto = &self.prototypes[label];
-            for &p in proto.iter() {
-                let v = (p - 0.5) * contrast + 0.5 + bright + self.noise * rng.normal() as f32;
-                images.push(v.clamp(0.0, 1.0));
-            }
+        let labels = self.client_labels(part, phase);
+        let mut images = vec![0.0f32; n * flat];
+        for (i, chunk) in images.chunks_exact_mut(flat).enumerate() {
+            self.write_sample_pixels(part, phase, i, labels[i], chunk);
         }
         ClientDataset { client_id: part.client_id, images, labels, n, flat_dim: flat }
     }
@@ -167,6 +228,50 @@ mod tests {
         assert_eq!(a.images, b.images);
         assert_eq!(a.labels, b.labels);
         assert_ne!(a.images, c.images); // drift phase regenerates
+    }
+
+    #[test]
+    fn labels_only_match_materialized_labels() {
+        // The label substream is THE label source: streaming labels equal the
+        // materialized dataset's, element for element.
+        let (_spec, part, g) = setup();
+        for c in part.clients.iter().take(6) {
+            for phase in [0u64, 1] {
+                let ds = g.client_dataset(c, phase);
+                assert_eq!(g.client_labels(c, phase), ds.labels);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_rows_match_materialized_rows_bitwise() {
+        // Random access via write_sample_pixels reproduces materialized rows
+        // exactly — the stream-split contract the fused pipeline rides on.
+        let (spec, part, g) = setup();
+        let c = &part.clients[2];
+        let ds = g.client_dataset(c, 0);
+        let mut row = vec![0.0f32; spec.flat_dim()];
+        for i in (0..ds.n).rev() {
+            // reverse order: no hidden sequential-stream dependence
+            g.write_sample_pixels(c, 0, i, ds.labels[i], &mut row);
+            for (a, b) in row.iter().zip(ds.image(i)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "sample {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn label_and_pixel_streams_are_independent() {
+        // Synthesizing pixels must not consume label-stream state: labels
+        // drawn before and after heavy pixel synthesis are identical.
+        let (_spec, part, g) = setup();
+        let c = &part.clients[3];
+        let before = g.client_labels(c, 0);
+        let mut buf = vec![0.0f32; g.spec().flat_dim()];
+        for i in 0..c.n_samples {
+            g.write_sample_pixels(c, 0, i, before[i], &mut buf);
+        }
+        assert_eq!(g.client_labels(c, 0), before);
     }
 
     #[test]

@@ -8,7 +8,10 @@ pub mod generator;
 pub mod partition;
 pub mod spec;
 
-pub use coreset::{build_coreset, coreset_indices, one_hot, Coreset};
+pub use coreset::{
+    build_coreset, build_coreset_streaming, coreset_indices, coreset_indices_from_labels, one_hot,
+    Coreset,
+};
 pub use drift::DriftSchedule;
 pub use generator::{ClientDataset, Generator};
 pub use partition::{ClientPartition, Partition};

@@ -7,7 +7,7 @@
 //! (ARI) instead of eyeballing.
 
 use crate::data::spec::DatasetSpec;
-use crate::util::rng::Rng;
+use crate::util::rng::{CumTable, Rng};
 
 /// Per-client partition metadata (cheap; the actual samples are generated
 /// lazily by `generator.rs`).
@@ -19,6 +19,16 @@ pub struct ClientPartition {
     /// Label distribution this client samples from (len = classes).
     pub label_dist: Vec<f64>,
     pub n_samples: usize,
+}
+
+impl ClientPartition {
+    /// Cumulative label-distribution table for this client: built once per
+    /// summarization (O(classes)), then every label draw is a binary search
+    /// instead of `Rng::weighted_index`'s O(classes) scan — the generator's
+    /// label stream draws `n_samples` times from the same distribution.
+    pub fn label_cum(&self) -> CumTable {
+        CumTable::new(&self.label_dist)
+    }
 }
 
 /// The full fleet partition.
@@ -192,6 +202,25 @@ mod tests {
         let m_same = crate::util::stats::mean(&same);
         let m_cross = crate::util::stats::mean(&cross);
         assert!(m_same * 2.0 < m_cross, "same={m_same} cross={m_cross}");
+    }
+
+    #[test]
+    fn label_cum_draws_follow_label_dist() {
+        let spec = small_spec();
+        let p = Partition::build(&spec);
+        let c = &p.clients[0];
+        let table = c.label_cum();
+        let mut rng = Rng::new(77);
+        let n = 50_000;
+        let mut counts = vec![0usize; spec.classes];
+        for _ in 0..n {
+            counts[table.sample(&mut rng)] += 1;
+        }
+        for (cls, &cnt) in counts.iter().enumerate() {
+            let want = c.label_dist[cls];
+            let got = cnt as f64 / n as f64;
+            assert!((got - want).abs() < 0.02, "class {cls}: got {got} want {want}");
+        }
     }
 
     #[test]

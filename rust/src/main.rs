@@ -86,6 +86,12 @@ fn cfg_from_flags(flags: &HashMap<String, String>) -> Result<ExperimentConfig> {
     if let Some(v) = flags.get("summary-cache") {
         cfg.summary_cache = v.parse().context("--summary-cache")?;
     }
+    if let Some(v) = flags.get("summary-fused") {
+        cfg.summary_fused = v.parse().context("--summary-fused")?;
+    }
+    if let Some(v) = flags.get("store-capacity") {
+        cfg.store_capacity = v.parse().context("--store-capacity")?;
+    }
     if let Some(v) = flags.get("target-accuracy") {
         cfg.target_accuracy = v.parse().context("--target-accuracy")?;
     }
@@ -264,6 +270,10 @@ fn main() -> Result<()> {
                               --refresh-threads N (0=auto) --summary-cache true|false\n\
                               --kmeans-pruning auto|off|bounds (bound-pruned K-means;\n\
                               bitwise identical to the naive scan, just faster)\n\
+                              --summary-fused true|false (streaming generate->coreset->\n\
+                              project; false materializes raw data — bitwise identical)\n\
+                              --store-capacity N (bound the columnar summary store;\n\
+                              0 = one row per client, LRU eviction recomputes exactly)\n\
                    summarize  --dataset tiny --method encoder|py|pxy|jl [--clients N]\n\
                    cluster    --dataset tiny --method kmeans|minibatch|dbscan [--summary encoder]\n\
                    artifacts  list AOT artifacts\n\

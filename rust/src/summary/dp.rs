@@ -42,9 +42,9 @@ impl SummaryEngine for DpSummary {
         self.inner.needs_runtime()
     }
 
-    fn model_host_secs(&self, ds: &ClientDataset) -> f64 {
+    fn model_host_secs(&self, n_samples: usize) -> f64 {
         // Inner summary plus one Gaussian draw per output coordinate.
-        self.inner.model_host_secs(ds) + 2e-9 * self.dim() as f64
+        self.inner.model_host_secs(n_samples) + 2e-9 * self.dim() as f64
     }
 
     fn summarize(
@@ -53,9 +53,37 @@ impl SummaryEngine for DpSummary {
         ds: &ClientDataset,
         rng: &mut Rng,
     ) -> Result<(Vec<f32>, f64)> {
-        let (mut v, secs) = self.inner.summarize(eng, ds, rng)?;
+        let (v, secs) = self.inner.summarize(eng, ds, rng)?;
+        self.perturb(v, ds.n, secs, rng)
+    }
+
+    /// Streaming passes straight through to the inner engine (which may be
+    /// fused), then perturbs exactly as the materialized path does — the
+    /// noise draws consume the same rng state either way, so DP summaries
+    /// stay bitwise equal across the two paths.
+    fn summarize_streaming(
+        &self,
+        eng: &Engine,
+        gen: &crate::data::generator::Generator,
+        part: &crate::data::partition::ClientPartition,
+        phase: u64,
+        rng: &mut Rng,
+    ) -> Result<(Vec<f32>, f64)> {
+        let (v, secs) = self.inner.summarize_streaming(eng, gen, part, phase, rng)?;
+        self.perturb(v, part.n_samples, secs, rng)
+    }
+}
+
+impl DpSummary {
+    fn perturb(
+        &self,
+        mut v: Vec<f32>,
+        n_samples: usize,
+        secs: f64,
+        rng: &mut Rng,
+    ) -> Result<(Vec<f32>, f64)> {
         let t0 = std::time::Instant::now();
-        let sens = summary_sensitivity(ds.n);
+        let sens = summary_sensitivity(n_samples);
         let mech = DpMechanism::new(DpConfig::new(self.epsilon, self.delta, sens));
         mech.gaussian(&mut v, rng);
         Ok((v, secs + t0.elapsed().as_secs_f64()))

@@ -7,8 +7,9 @@
 
 use anyhow::Result;
 
-use crate::data::coreset::{build_coreset, one_hot};
-use crate::data::generator::ClientDataset;
+use crate::data::coreset::{build_coreset, build_coreset_streaming, one_hot, Coreset};
+use crate::data::generator::{ClientDataset, Generator};
+use crate::data::partition::ClientPartition;
 use crate::data::spec::DatasetSpec;
 use crate::runtime::{lit_f32, to_vec_f32, Engine};
 use crate::summary::SummaryEngine;
@@ -50,11 +51,11 @@ impl SummaryEngine for EncoderSummary {
         vec![(0, ch), (ch, self.spec.classes)]
     }
 
-    fn model_host_secs(&self, ds: &ClientDataset) -> f64 {
+    fn model_host_secs(&self, n_samples: usize) -> f64 {
         // Coreset scan over the client's n samples, then the encoder artifact
         // over k coreset images (cost ~ k * pixels * feature_dim).
         let enc_flops = self.spec.coreset_k * self.spec.flat_dim() * self.spec.feature_dim;
-        2e-9 * ds.n as f64 + 1.5e-10 * enc_flops as f64 + 5e-6
+        2e-9 * n_samples as f64 + 1.5e-10 * enc_flops as f64 + 5e-6
     }
 
     fn summarize(
@@ -63,12 +64,45 @@ impl SummaryEngine for EncoderSummary {
         ds: &ClientDataset,
         rng: &mut Rng,
     ) -> Result<(Vec<f32>, f64)> {
-        let k = self.spec.coreset_k;
-        let (h, w, c) = self.spec.img;
         // Coreset selection is part of the proposed algorithm's cost: time it.
         let t0 = std::time::Instant::now();
-        let cs = build_coreset(ds, self.spec.classes, k, rng);
+        let cs = build_coreset(ds, self.spec.classes, self.spec.coreset_k, rng);
         let coreset_secs = t0.elapsed().as_secs_f64();
+        self.exec_coreset(eng, &cs, coreset_secs)
+    }
+
+    /// Fused path: labels → coreset choice → synthesize only the chosen
+    /// `coreset_k` rows' pixels into the artifact's input buffer. The
+    /// artifact sees bitwise the same coreset as the materialized path
+    /// (`data::coreset::build_coreset_streaming`), so the summary is
+    /// identical; the client never allocates its `n_samples × flat_dim`
+    /// raw dataset.
+    fn summarize_streaming(
+        &self,
+        eng: &Engine,
+        gen: &Generator,
+        part: &ClientPartition,
+        phase: u64,
+        rng: &mut Rng,
+    ) -> Result<(Vec<f32>, f64)> {
+        let t0 = std::time::Instant::now();
+        let cs = build_coreset_streaming(
+            gen,
+            part,
+            phase,
+            self.spec.classes,
+            self.spec.coreset_k,
+            rng,
+        );
+        let coreset_secs = t0.elapsed().as_secs_f64();
+        self.exec_coreset(eng, &cs, coreset_secs)
+    }
+}
+
+impl EncoderSummary {
+    fn exec_coreset(&self, eng: &Engine, cs: &Coreset, coreset_secs: f64) -> Result<(Vec<f32>, f64)> {
+        let k = self.spec.coreset_k;
+        let (h, w, c) = self.spec.img;
         let oh = one_hot(&cs.labels, self.spec.classes);
         let ins = [
             lit_f32(&cs.images, &[k, h, w, c])?,
@@ -155,6 +189,28 @@ mod tests {
         let same = crate::util::mat::sqdist(&s0a, &s0b);
         let cross = crate::util::mat::sqdist(&s0a, &s1);
         assert!(same < cross, "same={same} cross={cross}");
+    }
+
+    #[test]
+    fn streaming_matches_materialized_bitwise() {
+        // Artifact-gated: the fused coreset feeds the artifact the exact
+        // bits the materialized path would, so the summaries are equal.
+        let Some(eng) = engine() else { return };
+        let spec = DatasetSpec::tiny();
+        let part = Partition::build(&spec);
+        let g = Generator::new(&spec);
+        let e = EncoderSummary::new(&spec);
+        for c in part.clients.iter().take(4) {
+            let seed = 50 + c.client_id as u64;
+            let ds = g.client_dataset(c, 0);
+            let (a, _) = e.summarize(&eng, &ds, &mut Rng::new(seed)).unwrap();
+            let (b, _) =
+                e.summarize_streaming(&eng, &g, c, 0, &mut Rng::new(seed)).unwrap();
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "client {}", c.client_id);
+            }
+        }
     }
 
     #[test]

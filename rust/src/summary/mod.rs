@@ -15,7 +15,8 @@ pub mod py;
 
 use anyhow::Result;
 
-use crate::data::generator::ClientDataset;
+use crate::data::generator::{ClientDataset, Generator};
+use crate::data::partition::ClientPartition;
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
 
@@ -47,6 +48,27 @@ pub trait SummaryEngine: Send + Sync {
         rng: &mut Rng,
     ) -> Result<(Vec<f32>, f64)>;
 
+    /// Streaming entry point: summarize a client straight from the
+    /// generator's label/pixel substreams, without materializing the raw
+    /// dataset. Engines whose summary only touches the coreset (encoder,
+    /// JL, PCA) or the labels (native P(y)) override this with a fused
+    /// generate→coreset→project path whose output is **bitwise identical**
+    /// to `summarize(client_dataset(..))` under the stream-split contract
+    /// (`data::generator` module docs); the default materializes and
+    /// delegates, which is always correct and what full-scan engines
+    /// (P(X|y)) keep.
+    fn summarize_streaming(
+        &self,
+        eng: &Engine,
+        gen: &Generator,
+        part: &ClientPartition,
+        phase: u64,
+        rng: &mut Rng,
+    ) -> Result<(Vec<f32>, f64)> {
+        let ds = gen.client_dataset(part, phase);
+        self.summarize(eng, &ds, rng)
+    }
+
     /// Bytes a client uploads per summary refresh (network model input).
     fn summary_bytes(&self) -> usize {
         self.dim() * std::mem::size_of::<f32>()
@@ -66,18 +88,17 @@ pub trait SummaryEngine: Send + Sync {
         true
     }
 
-    /// Deterministic model of the host seconds needed to summarize `ds`,
-    /// replacing measured wall-clock in the *simulated* device accounting
-    /// (`coordinator::summaries`). The simulation must be bitwise
-    /// reproducible across thread counts and cache hits, which measured
-    /// timing can never be; engines override with a cost matching their
-    /// algorithm's complexity, with constants on the order of the measured
-    /// CI-host times. Real measured time is still reported separately
-    /// (`RefreshResult::host_secs`, the overhead benches).
-    fn model_host_secs(&self, ds: &ClientDataset) -> f64 {
-        // Default: one linear scan of the client's data plus output write.
-        1e-8 * (ds.n * ds.flat_dim) as f64 + 1e-9 * self.dim() as f64 + 1e-6
-    }
+    /// Deterministic model of the host seconds needed to summarize a client
+    /// holding `n_samples` samples, replacing measured wall-clock in the
+    /// *simulated* device accounting (`coordinator::summaries`). The
+    /// simulation must be bitwise reproducible across thread counts and
+    /// cache hits, which measured timing can never be; engines implement a
+    /// cost matching their algorithm's complexity, with constants on the
+    /// order of the measured CI-host times. Real measured time is still
+    /// reported separately (`RefreshResult::host_secs`, the overhead
+    /// benches). Takes the sample count (not a dataset) so the fused
+    /// refresh path can account device time without materializing anything.
+    fn model_host_secs(&self, n_samples: usize) -> f64;
 }
 
 /// Assemble the paper's flat summary from per-label feature sums + counts —

@@ -11,11 +11,13 @@
 
 use anyhow::Result;
 
-use crate::data::generator::ClientDataset;
+use crate::data::coreset::coreset_indices_from_labels;
+use crate::data::generator::{ClientDataset, Generator};
+use crate::data::partition::ClientPartition;
 use crate::data::spec::DatasetSpec;
 use crate::runtime::Engine;
 use crate::summary::{assemble_summary, SummaryEngine};
-use crate::util::mat::{gemm_nt, gemm_nt_threads, xty_scaled, Mat};
+use crate::util::mat::{gemm_nt, gemm_nt_stream, gemm_nt_threads, xty_scaled, Mat};
 use crate::util::parallel::default_threads;
 use crate::util::rng::Rng;
 
@@ -80,6 +82,47 @@ fn project_and_assemble(
     assemble_summary(&sums, &counts, c, h)
 }
 
+/// The fused generate→coreset→project pipeline: draw the client's label
+/// stream, apportion the coreset from labels alone, then synthesize each
+/// chosen row's pixels from its per-sample substream directly into
+/// [`gemm_nt_stream`]'s 4-row tile. The client's raw dataset — and even the
+/// `coreset_k × flat_dim` coreset matrix — are never materialized; peak
+/// per-client pixel memory is one tile.
+///
+/// Bitwise identical to [`project_and_assemble`] over
+/// `Generator::client_dataset` under the stream-split contract: labels are
+/// the same stream, `coreset_indices_from_labels` sees the same labels and
+/// rng, per-sample pixel substreams reproduce materialized rows exactly,
+/// and every projected element is the same `dot8` (tested below and in
+/// `tests/determinism.rs` at the refresh level).
+fn project_streaming(
+    spec: &DatasetSpec,
+    gen: &Generator,
+    part: &ClientPartition,
+    phase: u64,
+    basis: &Mat,
+    rng: &mut Rng,
+) -> Vec<f32> {
+    let h = basis.rows();
+    let c = spec.classes;
+    let flat = spec.flat_dim();
+    let labels = gen.client_labels(part, phase);
+    let idxs = coreset_indices_from_labels(&labels, c, spec.coreset_k, rng);
+    let proj = gemm_nt_stream(idxs.len(), flat, basis, |r, buf| {
+        gen.write_sample_pixels(part, phase, idxs[r], labels[idxs[r]], buf)
+    });
+    let mut sums = vec![0.0f64; c * h];
+    let mut counts = vec![0.0f64; c];
+    for (r, &i) in idxs.iter().enumerate() {
+        let label = labels[i] as usize;
+        counts[label] += 1.0;
+        for (j, &p) in proj.row(r).iter().enumerate() {
+            sums[label * h + j] += p as f64;
+        }
+    }
+    assemble_summary(&sums, &counts, c, h)
+}
+
 /// Johnson–Lindenstrauss random projection summary.
 pub struct JlSummary {
     spec: DatasetSpec,
@@ -119,9 +162,9 @@ impl SummaryEngine for JlSummary {
         false
     }
 
-    fn model_host_secs(&self, ds: &ClientDataset) -> f64 {
+    fn model_host_secs(&self, n_samples: usize) -> f64 {
         projection_model_host_secs(
-            ds.n,
+            n_samples,
             self.spec.coreset_k,
             self.spec.flat_dim(),
             self.basis.rows(),
@@ -136,6 +179,19 @@ impl SummaryEngine for JlSummary {
     ) -> Result<(Vec<f32>, f64)> {
         let t0 = std::time::Instant::now();
         let v = project_and_assemble(&self.spec, ds, &self.basis, rng);
+        Ok((v, t0.elapsed().as_secs_f64()))
+    }
+
+    fn summarize_streaming(
+        &self,
+        _eng: &Engine,
+        gen: &Generator,
+        part: &ClientPartition,
+        phase: u64,
+        rng: &mut Rng,
+    ) -> Result<(Vec<f32>, f64)> {
+        let t0 = std::time::Instant::now();
+        let v = project_streaming(&self.spec, gen, part, phase, &self.basis, rng);
         Ok((v, t0.elapsed().as_secs_f64()))
     }
 }
@@ -266,9 +322,9 @@ impl SummaryEngine for PcaSummary {
         false
     }
 
-    fn model_host_secs(&self, ds: &ClientDataset) -> f64 {
+    fn model_host_secs(&self, n_samples: usize) -> f64 {
         projection_model_host_secs(
-            ds.n,
+            n_samples,
             self.spec.coreset_k,
             self.spec.flat_dim(),
             self.basis.components.rows(),
@@ -283,6 +339,19 @@ impl SummaryEngine for PcaSummary {
     ) -> Result<(Vec<f32>, f64)> {
         let t0 = std::time::Instant::now();
         let v = project_and_assemble(&self.spec, ds, &self.basis.components, rng);
+        Ok((v, t0.elapsed().as_secs_f64()))
+    }
+
+    fn summarize_streaming(
+        &self,
+        _eng: &Engine,
+        gen: &Generator,
+        part: &ClientPartition,
+        phase: u64,
+        rng: &mut Rng,
+    ) -> Result<(Vec<f32>, f64)> {
+        let t0 = std::time::Instant::now();
+        let v = project_streaming(&self.spec, gen, part, phase, &self.basis.components, rng);
         Ok((v, t0.elapsed().as_secs_f64()))
     }
 }
@@ -418,8 +487,50 @@ mod tests {
         );
         let want_pca =
             projection_model_host_secs(ds.n, spec.coreset_k, spec.flat_dim(), h);
-        assert_eq!(jl.model_host_secs(&ds).to_bits(), want_jl.to_bits());
-        assert_eq!(pca.model_host_secs(&ds).to_bits(), want_pca.to_bits());
+        assert_eq!(jl.model_host_secs(ds.n).to_bits(), want_jl.to_bits());
+        assert_eq!(pca.model_host_secs(ds.n).to_bits(), want_pca.to_bits());
+    }
+
+    #[test]
+    fn streaming_projection_matches_materialized_bitwise() {
+        // The tentpole oracle at engine level: the fused generate→coreset→
+        // project path equals materialize-then-summarize bit for bit, for
+        // both dense-projection engines, across clients and drift phases.
+        let spec = DatasetSpec::tiny();
+        let part = Partition::build(&spec);
+        let g = Generator::new(&spec);
+        let eng = Engine::without_artifacts().unwrap();
+        let jl = JlSummary::new(&spec);
+        let mut sample = Mat::zeros(0, spec.flat_dim());
+        let mut srng = Rng::new(9);
+        for _ in 0..10 {
+            let row: Vec<f32> = (0..spec.flat_dim()).map(|_| srng.normal() as f32).collect();
+            sample.push_row(&row);
+        }
+        let pca = PcaSummary::new(&spec, PcaBasis::fit(&sample, spec.feature_dim, 2, 4));
+        let engines: [&dyn SummaryEngine; 2] = [&jl, &pca];
+        for se in engines {
+            for c in part.clients.iter().take(6) {
+                for phase in [0u64, 1] {
+                    let seed = 70 + c.client_id as u64;
+                    let ds = g.client_dataset(c, phase);
+                    let (a, _) = se.summarize(&eng, &ds, &mut Rng::new(seed)).unwrap();
+                    let (b, _) = se
+                        .summarize_streaming(&eng, &g, c, phase, &mut Rng::new(seed))
+                        .unwrap();
+                    assert_eq!(a.len(), b.len());
+                    for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "{} client {} phase {phase} index {i}",
+                            se.name(),
+                            c.client_id
+                        );
+                    }
+                }
+            }
+        }
     }
 
     #[test]

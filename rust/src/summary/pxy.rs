@@ -68,11 +68,13 @@ impl SummaryEngine for PxySummary {
         self.spec.pxy_dim()
     }
 
-    fn model_host_secs(&self, ds: &ClientDataset) -> f64 {
+    fn model_host_secs(&self, n_samples: usize) -> f64 {
         // Bucketing every pixel of every sample plus writing the huge
         // B*C*F histogram — the Table 2 row that is 1-2 orders of magnitude
-        // slower than the proposed summary.
-        3e-8 * (ds.n * self.spec.flat_dim()) as f64 + 1e-8 * self.dim() as f64 + 2e-6
+        // slower than the proposed summary. P(X|y) scans the full dataset,
+        // so it keeps the trait's materializing `summarize_streaming`
+        // default: there is no coreset to fuse over.
+        3e-8 * (n_samples * self.spec.flat_dim()) as f64 + 1e-8 * self.dim() as f64 + 2e-6
     }
 
     fn summarize(

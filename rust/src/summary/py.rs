@@ -34,8 +34,15 @@ impl PySummary {
     }
 
     fn compute_native(&self, ds: &ClientDataset) -> Vec<f32> {
-        let counts = ds.label_counts(self.spec.classes);
-        let total = (ds.n.max(1)) as f32;
+        Self::dist_from_labels(&ds.labels, self.spec.classes)
+    }
+
+    fn dist_from_labels(labels: &[u32], classes: usize) -> Vec<f32> {
+        let mut counts = vec![0usize; classes];
+        for &l in labels {
+            counts[l as usize] += 1;
+        }
+        let total = labels.len().max(1) as f32;
         counts.iter().map(|&c| c as f32 / total).collect()
     }
 }
@@ -53,9 +60,40 @@ impl SummaryEngine for PySummary {
         !self.native
     }
 
-    fn model_host_secs(&self, ds: &ClientDataset) -> f64 {
+    fn model_host_secs(&self, n_samples: usize) -> f64 {
         // One pass over the labels (Table 2: "<0.01s").
-        2e-9 * ds.n as f64 + 2e-7
+        2e-9 * n_samples as f64 + 2e-7
+    }
+
+    /// Native P(y) needs nothing but the label stream: the fused path draws
+    /// labels and never touches a pixel — O(n) draws, zero image bytes.
+    /// Bitwise equal to the materialized path (labels are the same stream).
+    fn summarize_streaming(
+        &self,
+        eng: &Engine,
+        gen: &crate::data::generator::Generator,
+        part: &crate::data::partition::ClientPartition,
+        phase: u64,
+        _rng: &mut Rng,
+    ) -> Result<(Vec<f32>, f64)> {
+        if self.native {
+            let t0 = std::time::Instant::now();
+            let labels = gen.client_labels(part, phase);
+            let v = Self::dist_from_labels(&labels, self.spec.classes);
+            return Ok((v, t0.elapsed().as_secs_f64()));
+        }
+        // Artifact path consumes a padded one-hot of the whole label vector;
+        // it still profits from label-only generation (no pixels).
+        let labels = gen.client_labels(part, phase);
+        let bucket = self.spec.size_bucket_for(labels.len());
+        let n = labels.len().min(bucket);
+        let mut padded = Vec::with_capacity(bucket);
+        padded.extend_from_slice(&labels[..n]);
+        padded.resize(bucket, u32::MAX);
+        let oh = one_hot(&padded, self.spec.classes);
+        let lit = lit_f32(&oh, &[bucket, self.spec.classes])?;
+        let (outs, dt) = eng.exec_timed(&self.artifact_for(labels.len()), &[lit])?;
+        Ok((to_vec_f32(&outs[0])?, dt.as_secs_f64()))
     }
 
     fn summarize(
@@ -117,6 +155,24 @@ mod tests {
         let (nat_v, _) = PySummary::native(&spec).summarize(&eng, &ds, &mut rng).unwrap();
         for (a, b) in xla_v.iter().zip(&nat_v) {
             assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn streaming_native_matches_materialized_bitwise() {
+        let spec = DatasetSpec::tiny();
+        let part = Partition::build(&spec);
+        let g = Generator::new(&spec);
+        let py = PySummary::native(&spec);
+        let eng = Engine::without_artifacts().unwrap();
+        for c in part.clients.iter().take(5) {
+            let ds = g.client_dataset(c, 0);
+            let (a, _) = py.summarize(&eng, &ds, &mut Rng::new(1)).unwrap();
+            let (b, _) = py.summarize_streaming(&eng, &g, c, 0, &mut Rng::new(1)).unwrap();
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
         }
     }
 

@@ -80,6 +80,17 @@ impl Mat {
         self.rows += 1;
     }
 
+    /// Append one all-zero row without a temporary buffer.
+    pub fn push_zero_row(&mut self) {
+        self.data.resize(self.data.len() + self.cols, 0.0);
+        self.rows += 1;
+    }
+
+    /// Reserve space for `additional` more rows (amortizes arena growth).
+    pub fn reserve_rows(&mut self, additional: usize) {
+        self.data.reserve(additional * self.cols);
+    }
+
     /// Squared Euclidean distance between row `i` and an external vector.
     #[inline]
     pub fn sqdist_row(&self, i: usize, other: &[f32]) -> f64 {
@@ -239,6 +250,40 @@ fn gemm_nt_block(a: &Mat, b: &Mat, lo: usize, hi: usize, out: &mut [f32]) {
         }
         j0 = j1;
     }
+}
+
+/// `A·Bᵀ` where A's rows are *generated on demand*, 4-row tile by 4-row
+/// tile, instead of materialized up front. `fill_row(i, buf)` writes row
+/// `i` of A into `buf` (`len == a_cols`); at most one 4×`a_cols` tile of A
+/// ever exists. This is the fused summarization pipeline's projection
+/// kernel: coreset rows stream from the generator's per-sample pixel
+/// substreams straight through the micro-kernel, so per-client memory for
+/// raw pixels drops from `coreset_k × flat_dim` to one tile.
+///
+/// Every output element goes through the same 4-row micro-kernel as
+/// [`gemm_nt`] (or the `dot8` tail), so the result is bitwise identical to
+/// `gemm_nt(materialized_a, b)` for any tiling (property-tested below).
+pub fn gemm_nt_stream<F>(a_rows: usize, a_cols: usize, b: &Mat, mut fill_row: F) -> Mat
+where
+    F: FnMut(usize, &mut [f32]),
+{
+    assert_eq!(a_cols, b.cols(), "gemm_nt_stream: inner dimension mismatch");
+    let n = b.rows();
+    let mut out = Mat::zeros(a_rows, n);
+    if a_rows == 0 {
+        return out;
+    }
+    let mut tile = Mat::zeros(4, a_cols);
+    let mut i = 0;
+    while i < a_rows {
+        let t = (a_rows - i).min(4);
+        for r in 0..t {
+            fill_row(i + r, tile.row_mut(r));
+        }
+        gemm_nt_block(&tile, b, 0, t, &mut out.data[i * n..(i + t) * n]);
+        i += t;
+    }
+    out
 }
 
 /// Unblocked fixed-order reference for [`gemm_nt`]: one `dot8` per output
@@ -420,6 +465,35 @@ mod tests {
                 }
             }
         });
+    }
+
+    /// The streaming kernel's contract: generating A rows tile-by-tile
+    /// produces exactly the blocked GEMM's bits, across row counts that
+    /// exercise full tiles, partial tails, and single rows.
+    #[test]
+    fn property_gemm_stream_matches_materialized_bitwise() {
+        crate::util::proptest::check(25, |g| {
+            let m = g.usize_in(1, 19);
+            let n = g.usize_in(1, GEMM_J_BLOCK + 3);
+            let k = g.usize_in(1, 40);
+            let mut rng = Rng::new(g.case as u64 + 500);
+            let scale = [0.001f32, 1.0, 1000.0][g.usize_in(0, 2)];
+            let a = random_mat(&mut rng, m, k, scale);
+            let b = random_mat(&mut rng, n, k, scale);
+            let want = gemm_nt(&a, &b);
+            let got = gemm_nt_stream(m, k, &b, |i, buf| buf.copy_from_slice(a.row(i)));
+            assert_eq!((got.rows(), got.cols()), (m, n));
+            for (x, y) in got.data().iter().zip(want.data()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn gemm_stream_empty_rows() {
+        let b = Mat::zeros(3, 5);
+        let c = gemm_nt_stream(0, 5, &b, |_, _| unreachable!("no rows to fill"));
+        assert_eq!((c.rows(), c.cols()), (0, 3));
     }
 
     #[test]

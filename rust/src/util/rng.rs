@@ -150,6 +150,11 @@ impl Rng {
     }
 
     /// Sample an index from an (unnormalized) weight vector.
+    ///
+    /// One-shot convenience: O(classes) per draw. Hot loops that draw many
+    /// indices from the *same* weights (the data generator's label stream)
+    /// use a precomputed [`CumTable`] instead — O(log classes) per draw via
+    /// binary search, bitwise-identical to the table's linear-scan reference.
     pub fn weighted_index(&mut self, weights: &[f64]) -> usize {
         let total: f64 = weights.iter().sum();
         assert!(total > 0.0, "weighted_index: all-zero weights");
@@ -181,6 +186,82 @@ impl Rng {
         }
         idx.truncate(k);
         idx
+    }
+}
+
+/// Precomputed cumulative-weight table for repeated categorical draws.
+///
+/// Built once per weight vector (one fixed-order f64 prefix-sum pass), then
+/// every draw costs one uniform plus a binary search instead of
+/// [`Rng::weighted_index`]'s O(classes) subtraction scan. The decision
+/// boundaries are the prefix sums themselves: draw `u = rng.f64() * total`
+/// and return the first index `i` with `u < cum[i + 1]`. Binary search and
+/// the linear scan over the same boundaries pick the same index for every
+/// `u` by construction — [`CumTable::sample`] and
+/// [`CumTable::sample_linear`] are bitwise-identical (property-tested
+/// below), which is what lets the data generator's label stream switch to
+/// the table without moving a single draw.
+///
+/// Zero-weight categories have `cum[i + 1] == cum[i]` and can never win;
+/// draws that land at or past the final boundary (possible only through
+/// rounding in `u = f64() * total`) clamp to the last positive-weight index,
+/// matching the scan's fall-through.
+#[derive(Debug, Clone)]
+pub struct CumTable {
+    /// Prefix sums: `cum[0] = 0`, `cum[i + 1] = cum[i] + w[i]`, fixed order.
+    cum: Vec<f64>,
+    /// Last index with positive weight (the fall-through clamp target).
+    last: usize,
+    total: f64,
+}
+
+impl CumTable {
+    pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty(), "CumTable: empty weights");
+        let mut cum = Vec::with_capacity(weights.len() + 1);
+        cum.push(0.0f64);
+        let mut acc = 0.0f64;
+        let mut last = usize::MAX;
+        for (i, &w) in weights.iter().enumerate() {
+            assert!(w >= 0.0 && w.is_finite(), "CumTable: bad weight {w}");
+            if w > 0.0 {
+                last = i;
+            }
+            acc += w;
+            cum.push(acc);
+        }
+        assert!(last != usize::MAX && acc > 0.0, "CumTable: all-zero weights");
+        CumTable { cum, last, total: acc }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.cum.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // construction rejects empty weight vectors
+    }
+
+    /// Draw one index: binary search over the prefix sums.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64() * self.total;
+        // First i with cum[i + 1] > u  ==  partition point of cum[1..] <= u.
+        let i = self.cum[1..].partition_point(|&c| c <= u);
+        i.min(self.last)
+    }
+
+    /// Linear-scan reference over the same boundaries (the oracle `sample`
+    /// is tested against; also documents the decision rule).
+    pub fn sample_linear(&self, rng: &mut Rng) -> usize {
+        let u = rng.f64() * self.total;
+        for i in 0..self.len() {
+            if u < self.cum[i + 1] {
+                return i.min(self.last);
+            }
+        }
+        self.last
     }
 }
 
@@ -307,6 +388,60 @@ mod tests {
         dedup.sort_unstable();
         dedup.dedup();
         assert_eq!(dedup.len(), 10);
+    }
+
+    #[test]
+    fn cum_table_binary_search_matches_linear_scan_bitwise() {
+        // The satellite contract: for random weight vectors (zeros included)
+        // and long draw sequences, binary search over the prefix table picks
+        // the same index as the linear scan — draw for draw.
+        let mut wrng = Rng::new(40);
+        for case in 0..50 {
+            let k = 1 + (wrng.below(40) as usize);
+            let weights: Vec<f64> = (0..k)
+                .map(|_| if wrng.f64() < 0.3 { 0.0 } else { wrng.f64() * 10.0 })
+                .collect();
+            if weights.iter().all(|&w| w == 0.0) {
+                continue;
+            }
+            let table = CumTable::new(&weights);
+            let mut a = Rng::new(1000 + case);
+            let mut b = Rng::new(1000 + case);
+            for draw in 0..2000 {
+                let fast = table.sample(&mut a);
+                let slow = table.sample_linear(&mut b);
+                assert_eq!(fast, slow, "case {case} draw {draw}: {fast} vs {slow}");
+                assert!(weights[fast] > 0.0, "zero-weight index {fast} drawn");
+            }
+        }
+    }
+
+    #[test]
+    fn cum_table_frequencies_match_weights() {
+        let weights = [1.0, 0.0, 9.0];
+        let table = CumTable::new(&weights);
+        let mut r = Rng::new(41);
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[table.sample(&mut r)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        assert!(counts[2] > counts[0] * 5, "counts={counts:?}");
+    }
+
+    #[test]
+    fn cum_table_degenerate_single_class() {
+        let table = CumTable::new(&[0.0, 0.0, 1.0, 0.0]);
+        let mut r = Rng::new(42);
+        for _ in 0..200 {
+            assert_eq!(table.sample(&mut r), 2);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "all-zero")]
+    fn cum_table_rejects_all_zero() {
+        CumTable::new(&[0.0, 0.0]);
     }
 
     #[test]

@@ -1,8 +1,10 @@
 //! Determinism oracle suite for the fleet refresh subsystem
 //! (`coordinator::summaries`): the parallel path must equal the serial path
-//! element-for-element, cached refreshes must equal cold refreshes, and the
-//! mini-batch clustering backend must be thread-count invariant and close to
-//! Lloyd's in quality.
+//! element-for-element, cached refreshes must equal cold refreshes, the
+//! streaming fused generate→coreset→project path must equal the
+//! materialize-then-summarize path, bounded-store evictions must recompute
+//! to the same bits, and the mini-batch clustering backend must be
+//! thread-count invariant and close to Lloyd's in quality.
 //!
 //! Everything here runs against the pure-Rust `JlSummary` engine and a
 //! manifest-free `Engine`, so the oracle holds in every environment — no AOT
@@ -159,7 +161,128 @@ fn cached_refresh_equals_cold_refresh_under_drift() {
         saw_partial_recompute,
         "drift schedule never produced a partial recompute — cache untested"
     );
-    assert!(cached.cache().hits() > 0);
+    assert!(cached.store().unwrap().hits() > 0);
+}
+
+#[test]
+fn fused_refresh_equals_materialized_for_all_thread_counts() {
+    // The tentpole oracle: the streaming fused pipeline (labels → coreset →
+    // tile-streamed projection, zero raw-data materialization) is bitwise
+    // equal to materialize-then-summarize, at every thread count, with
+    // clients spread across drift phases (irregular per-client work).
+    let fx = fixture(48);
+    let drift = DriftSchedule::at(vec![2, 5], 0.4);
+    let opts = |threads, fused| RefreshOptions {
+        threads,
+        backend: ClusterBackend::Lloyd,
+        use_cache: false,
+        fused,
+        ..Default::default()
+    };
+    for round in [0usize, 6] {
+        let materialized = refresh(&fx, opts(1, false), &drift, round, 31);
+        for threads in [1, 4, 8] {
+            let fused = refresh(&fx, opts(threads, true), &drift, round, 31);
+            assert_bitwise_equal(
+                &materialized,
+                &fused,
+                &format!("fused(threads={threads}) vs materialized at round {round}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_equals_materialized_across_cache_hits_and_misses() {
+    // Two cached refreshers — one fused, one materialized — walked through a
+    // drift schedule must agree bitwise at every round, with identical
+    // recompute sets (hits and misses land on the same clients).
+    let fx = fixture(0);
+    let drift = DriftSchedule::at(vec![2, 6], 0.5);
+    let seed = 33;
+    let mk = |fused| {
+        FleetRefresher::new(RefreshOptions {
+            backend: ClusterBackend::Lloyd,
+            fused,
+            ..Default::default()
+        })
+    };
+    let mut fused = mk(true);
+    let mut materialized = mk(false);
+    let mut saw_hit_round = false;
+    for round in 0..9 {
+        let run = |r: &mut FleetRefresher| {
+            r.refresh(
+                &fx.engine,
+                &fx.summary,
+                &fx.partition,
+                &fx.generator,
+                &fx.fleet,
+                &drift,
+                round,
+                fx.spec.n_groups,
+                seed,
+            )
+            .unwrap()
+        };
+        let a = run(&mut fused);
+        let b = run(&mut materialized);
+        assert_bitwise_equal(&a, &b, &format!("fused vs materialized, cached, round {round}"));
+        assert_eq!(a.recomputed, b.recomputed, "recompute sets diverged at round {round}");
+        if a.recomputed.len() < fx.spec.n_clients {
+            saw_hit_round = true;
+        }
+    }
+    assert!(saw_hit_round, "schedule never exercised cache hits");
+    assert!(fused.store().unwrap().hits() > 0);
+}
+
+#[test]
+fn bounded_store_evictions_recompute_bitwise() {
+    // Memory-bounded store: with capacity for only a third of the fleet the
+    // refresher thrashes through LRU evictions, yet every refresh result is
+    // bitwise identical to the unbounded refresher's — evicted rows lose
+    // nothing but time.
+    let fx = fixture(48);
+    let drift = DriftSchedule::at(vec![3], 0.5);
+    let seed = 37;
+    let mut bounded = FleetRefresher::new(RefreshOptions {
+        backend: ClusterBackend::Lloyd,
+        store_capacity: fx.spec.n_clients / 3,
+        ..Default::default()
+    });
+    let mut unbounded = FleetRefresher::new(RefreshOptions {
+        backend: ClusterBackend::Lloyd,
+        ..Default::default()
+    });
+    let mut total_evicted = 0;
+    for round in 0..6 {
+        let run = |r: &mut FleetRefresher| {
+            r.refresh(
+                &fx.engine,
+                &fx.summary,
+                &fx.partition,
+                &fx.generator,
+                &fx.fleet,
+                &drift,
+                round,
+                fx.spec.n_groups,
+                seed,
+            )
+            .unwrap()
+        };
+        let b = run(&mut bounded);
+        let u = run(&mut unbounded);
+        assert_bitwise_equal(&u, &b, &format!("bounded vs unbounded at round {round}"));
+        total_evicted += b.evicted;
+        assert!(
+            b.store.rows <= fx.spec.n_clients / 3,
+            "store exceeded its capacity: {} rows",
+            b.store.rows
+        );
+    }
+    assert!(total_evicted > 0, "capacity bound never forced an eviction — test inert");
+    assert_eq!(unbounded.store().unwrap().evictions(), 0);
 }
 
 #[test]

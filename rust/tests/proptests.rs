@@ -375,6 +375,80 @@ fn cached_device_secs_match_cold_for_random_schedules() {
 }
 
 #[test]
+fn streaming_coreset_equals_materialized_for_random_k() {
+    // Fuzz the fused coreset builder: for random clients, phases, coreset
+    // sizes, and rng seeds, build_coreset_streaming must reproduce
+    // build_coreset(client_dataset) bit for bit — images, labels, padding.
+    check(20, |g| {
+        let spec = DatasetSpec::tiny();
+        let partition = Partition::build(&spec);
+        let generator = Generator::new(&spec);
+        let part = &partition.clients[g.usize_in(0, partition.clients.len() - 1)];
+        let phase = g.usize_in(0, 2) as u64;
+        let k = g.usize_in(1, 40);
+        let seed = g.case as u64 + 4000;
+        let ds = generator.client_dataset(part, phase);
+        let a = coreset::build_coreset(&ds, spec.classes, k, &mut Rng::new(seed));
+        let b = coreset::build_coreset_streaming(
+            &generator,
+            part,
+            phase,
+            spec.classes,
+            k,
+            &mut Rng::new(seed),
+        );
+        assert_eq!(a.real, b.real);
+        assert_eq!(a.labels, b.labels);
+        for (x, y) in a.images.iter().zip(&b.images) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    });
+}
+
+#[test]
+fn fused_refresh_equals_materialized_for_random_schedules() {
+    // Crate-boundary fuzz of the tentpole oracle: random drift schedules,
+    // rounds, seeds, and thread counts — the fused refresh must be bitwise
+    // identical to the materialized one (summaries, clusters, device secs).
+    check(5, |g| {
+        let spec = DatasetSpec::tiny();
+        let partition = Partition::build(&spec);
+        let generator = Generator::new(&spec);
+        let fleet = FleetModel::default().sample_fleet(spec.n_clients);
+        let engine = Engine::without_artifacts().unwrap();
+        let jl = JlSummary::new(&spec);
+        let drift = DriftSchedule::at(vec![g.usize_in(1, 6)], g.f64_in(0.2, 1.0));
+        let round = g.usize_in(0, 10);
+        let seed = 5000 + g.case as u64;
+        let threads = [1, 4, 8][g.usize_in(0, 2)];
+        let use_cache = g.case % 2 == 0;
+        let run = |fused: bool| {
+            FleetRefresher::new(RefreshOptions {
+                backend: ClusterBackend::Lloyd,
+                use_cache,
+                threads,
+                fused,
+                ..Default::default()
+            })
+            .refresh(
+                &engine, &jl, &partition, &generator, &fleet, &drift, round,
+                spec.n_groups, seed,
+            )
+            .unwrap()
+        };
+        let a = run(true);
+        let b = run(false);
+        for (x, y) in a.summaries.data().iter().zip(b.summaries.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.clusters, b.clusters);
+        for (x, y) in a.device_secs.iter().zip(&b.device_secs) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    });
+}
+
+#[test]
 fn generator_rejects_nothing_and_stays_in_range() {
     check(8, |g| {
         let spec = DatasetSpec::tiny();
