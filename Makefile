@@ -1,7 +1,7 @@
 # FedDDE build orchestration. The Rust crate lives in rust/, the AOT
 # compiler (JAX + Pallas -> HLO text artifacts) in python/.
 
-.PHONY: artifacts build test bench bench-smoke python-test clean
+.PHONY: artifacts build test bench bench-smoke sim-smoke python-test clean
 
 # AOT-lower every JAX graph / Pallas kernel into rust/artifacts (manifest.tsv
 # + *.hlo.txt). Requires jax; runs on CPU.
@@ -32,6 +32,15 @@ bench-smoke:
 	cd rust && FEDDDE_BENCH_REFRESH_ONLY=1 cargo bench --bench table2_summary
 	@test -s rust/results/BENCH_refresh.json
 	@echo "wrote rust/results/BENCH_refresh.json"
+
+# End-to-end fleet-simulator smoke: all five selection strategies at
+# N in {100, 1000} plus the 50-client x 5-round scenario-catalog matrix
+# (pure Rust, no artifacts needed). Emits rust/results/BENCH_sim.json with
+# per-run wall-clock breakdowns, coverage, and bitwise event digests.
+sim-smoke:
+	cd rust && cargo bench --bench sim_overhead
+	@test -s rust/results/BENCH_sim.json
+	@echo "wrote rust/results/BENCH_sim.json"
 
 clean:
 	cd rust && cargo clean

@@ -1,0 +1,103 @@
+//! End-to-end selection-overhead bench (the paper's Table-3-style study,
+//! run through the discrete-event fleet simulator): every selection
+//! strategy drives full FL rounds — availability, over-selection with
+//! deadlines, stragglers, dropouts, FedAvg, drift-triggered incremental
+//! refresh — with the coordinator's own summary/clustering time charged on
+//! the simulated clock. Emits `results/BENCH_sim.json` with two sections:
+//!
+//! 1. **Strategy sweep** — all `selection::STRATEGY_NAMES` at N ∈ {100,
+//!    1000} clients (plus 10 000 under `FEDDDE_BENCH_FULL=1`) on the
+//!    `straggler_cut` scenario: simulated round-time breakdown (refresh /
+//!    selection / compute / upload / wait), coverage, and stragglers
+//!    dropped, per strategy.
+//! 2. **Scenario matrix** — a 50-client × 5-round sweep over the scenario
+//!    catalog under the cluster policy (`make sim-smoke`'s payload).
+//!
+//! Everything is pure Rust (JL summaries, no AOT artifacts needed), so this
+//! runs in every environment. Event digests are quoted per run: equal
+//! digests across machines/thread counts certify the simulated streams
+//! matched bitwise.
+//!
+//!     cargo bench --bench sim_overhead
+
+use feddde::config::SimConfig;
+use feddde::selection::STRATEGY_NAMES;
+use feddde::sim::{bench_json, Scenario, Simulator};
+use feddde::util::bench::full_scale;
+
+fn run_one(cfg: SimConfig, scenario: &str) -> String {
+    let sc = Scenario::by_name(scenario).expect("unknown scenario");
+    let t0 = std::time::Instant::now();
+    let rep = Simulator::new(cfg, sc)
+        .expect("simulator construction")
+        .run()
+        .expect("simulation run");
+    let host = t0.elapsed().as_secs_f64();
+    let t = rep.totals();
+    println!(
+        "{:<14} {:<12} n={:<6} sim {:>10.1}s  refresh {:>8.2}s ({:>4.1}%)  \
+         select {:>7.4}s  compute {:>8.1}s  upload {:>6.1}s  cov {:.3}  \
+         done/drop/cut {}/{}/{}  [host {:.2}s]",
+        rep.scenario,
+        rep.policy,
+        rep.n_clients,
+        t.sim_secs,
+        t.refresh_secs,
+        100.0 * t.refresh_secs / t.sim_secs.max(1e-12),
+        t.selection_secs,
+        t.compute_secs,
+        t.upload_secs,
+        t.coverage,
+        t.completed,
+        t.dropped,
+        t.timed_out,
+        host
+    );
+    rep.bench_entry_json(host)
+}
+
+fn main() {
+    println!("sim_overhead — end-to-end selection overhead via the fleet simulator\n");
+    std::fs::create_dir_all("results").ok();
+    let mut entries: Vec<String> = Vec::new();
+
+    // --- Section 1: strategy sweep at scale ---------------------------------
+    let mut scales = vec![100usize, 1000];
+    if full_scale() {
+        scales.push(10_000);
+    }
+    println!("== strategy sweep (scenario straggler_cut) ==");
+    for &n in &scales {
+        for policy in STRATEGY_NAMES {
+            let cfg = SimConfig {
+                n_clients: n,
+                rounds: 5,
+                per_round: (n / 10).clamp(4, 100),
+                policy: policy.into(),
+                refresh_every: 2,
+                seed: 1,
+                ..Default::default()
+            };
+            entries.push(run_one(cfg, "straggler_cut"));
+        }
+        println!();
+    }
+
+    // --- Section 2: scenario matrix (the sim-smoke payload) -----------------
+    println!("== scenario matrix (50 clients x 5 rounds, cluster policy) ==");
+    for sc in Scenario::NAMES {
+        let cfg = SimConfig {
+            n_clients: 50,
+            rounds: 5,
+            per_round: 10,
+            refresh_every: 2,
+            seed: 2,
+            ..Default::default()
+        };
+        entries.push(run_one(cfg, sc));
+    }
+
+    std::fs::write("results/BENCH_sim.json", bench_json(&entries))
+        .expect("writing results/BENCH_sim.json");
+    println!("\nwrote results/BENCH_sim.json ({} runs)", entries.len());
+}

@@ -297,6 +297,88 @@ impl ExperimentConfig {
     }
 }
 
+/// Typed configuration for the discrete-event fleet simulator (`run-sim`
+/// CLI; `[sim]` section in config files). Scenario-specific behavior
+/// (availability waves, stragglers, drift, aggregation rule) lives in
+/// `sim::scenario`; this struct carries the run-shape knobs.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Scenario name from `sim::Scenario::NAMES`, a comma list, or "all".
+    pub scenario: String,
+    pub n_clients: usize,
+    pub rounds: usize,
+    /// Aggregation target per round (over-selection multiplies on top).
+    pub per_round: usize,
+    pub local_steps: usize,
+    /// Selection strategy (`selection::STRATEGY_NAMES`).
+    pub policy: String,
+    /// Summary engine for the cluster policy's refreshes
+    /// (`summary::ENGINE_NAMES`; default `jl` — pure Rust, runs without the
+    /// AOT bundle).
+    pub summary: String,
+    /// K for device clustering (0 = the dataset's n_groups).
+    pub clusters: usize,
+    /// Re-summarize + recluster every N rounds (scenarios may override).
+    pub refresh_every: usize,
+    /// Refresh worker threads (0 = auto). Never changes results.
+    pub threads: usize,
+    /// Modeled host seconds for one local SGD step (scaled per device).
+    pub train_step_host_secs: f64,
+    /// Model-update upload bytes per selected client per round.
+    pub update_bytes: usize,
+    pub seed: u64,
+    /// Directory for per-scenario JSONL reports (empty = no files).
+    pub out_dir: String,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            scenario: "sync_baseline".into(),
+            n_clients: 100,
+            rounds: 10,
+            per_round: 10,
+            local_steps: 4,
+            policy: "cluster".into(),
+            summary: "jl".into(),
+            clusters: 0,
+            refresh_every: 5,
+            threads: 0,
+            train_step_host_secs: 0.02,
+            update_bytes: 400_000,
+            seed: 1,
+            out_dir: String::new(),
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn from_toml(t: &Toml) -> Self {
+        let d = SimConfig::default();
+        SimConfig {
+            scenario: t.str_or("sim.scenario", &d.scenario),
+            n_clients: t.int_or("sim.clients", d.n_clients as i64) as usize,
+            rounds: t.int_or("sim.rounds", d.rounds as i64) as usize,
+            per_round: t.int_or("sim.per_round", d.per_round as i64) as usize,
+            local_steps: t.int_or("sim.local_steps", d.local_steps as i64) as usize,
+            policy: t.str_or("sim.policy", &d.policy),
+            summary: t.str_or("sim.summary", &d.summary),
+            clusters: t.int_or("sim.clusters", d.clusters as i64) as usize,
+            refresh_every: t.int_or("sim.refresh_every", d.refresh_every as i64) as usize,
+            threads: t.int_or("sim.threads", d.threads as i64) as usize,
+            train_step_host_secs: t.float_or("sim.train_step_host_secs", d.train_step_host_secs),
+            update_bytes: t.int_or("sim.update_bytes", d.update_bytes as i64) as usize,
+            seed: t.int_or("sim.seed", d.seed as i64) as u64,
+            out_dir: t.str_or("sim.out_dir", &d.out_dir),
+        }
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Ok(Self::from_toml(&Toml::parse(&text)?))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -379,5 +461,33 @@ mod tests {
     fn int_promotes_to_float() {
         let t = Toml::parse("lr = 1\n").unwrap();
         assert_eq!(t.float_or("lr", 0.0), 1.0);
+    }
+
+    #[test]
+    fn sim_config_defaults_and_toml_section() {
+        let d = SimConfig::from_toml(&Toml::parse("").unwrap());
+        assert_eq!(d.scenario, "sync_baseline");
+        assert_eq!(d.n_clients, 100);
+        assert_eq!(d.policy, "cluster");
+        assert_eq!(d.summary, "jl", "sim must run without the AOT bundle by default");
+        let t = Toml::parse(
+            "[sim]\nscenario = \"heavy_tail\"\nclients = 500\nrounds = 20\n\
+             per_round = 25\npolicy = \"oort\"\nrefresh_every = 4\nthreads = 2\n\
+             train_step_host_secs = 0.05\nupdate_bytes = 123456\nseed = 9\n\
+             out_dir = \"results/simx\"\n",
+        )
+        .unwrap();
+        let c = SimConfig::from_toml(&t);
+        assert_eq!(c.scenario, "heavy_tail");
+        assert_eq!(c.n_clients, 500);
+        assert_eq!(c.rounds, 20);
+        assert_eq!(c.per_round, 25);
+        assert_eq!(c.policy, "oort");
+        assert_eq!(c.refresh_every, 4);
+        assert_eq!(c.threads, 2);
+        assert!((c.train_step_host_secs - 0.05).abs() < 1e-12);
+        assert_eq!(c.update_bytes, 123_456);
+        assert_eq!(c.seed, 9);
+        assert_eq!(c.out_dir, "results/simx");
     }
 }

@@ -17,6 +17,14 @@ pub fn fedavg(updates: &[(Vec<f32>, f64)]) -> Result<Vec<f32>> {
             bail!("fedavg: parameter dim mismatch {} vs {dim}", p.len());
         }
     }
+    // Each weight must individually be non-negative and finite: opposing
+    // negative weights can sum to a positive total while pushing the
+    // "average" outside the hull of the updates.
+    for (i, (_, w)) in updates.iter().enumerate() {
+        if !w.is_finite() || *w < 0.0 {
+            bail!("fedavg: invalid weight {w} for update {i}");
+        }
+    }
     let total: f64 = updates.iter().map(|(_, w)| *w).sum();
     if total <= 0.0 {
         bail!("fedavg: non-positive total weight");
@@ -83,6 +91,21 @@ mod tests {
         assert!(fedavg(&[]).is_err());
         assert!(fedavg(&[(vec![1.0], 1.0), (vec![1.0, 2.0], 1.0)]).is_err());
         assert!(fedavg(&[(vec![1.0], 0.0)]).is_err());
+    }
+
+    #[test]
+    fn negative_weights_rejected_even_with_positive_total() {
+        // (-1, +3) sums to +2 but the "average" of [0] and [10] would be 15 —
+        // outside the hull. The per-update check must catch it.
+        let bad = [(vec![0.0], -1.0), (vec![10.0], 3.0)];
+        assert!(fedavg(&bad).is_err());
+        // A single negative weight is rejected too, as are non-finite ones.
+        assert!(fedavg(&[(vec![1.0], -0.5)]).is_err());
+        assert!(fedavg(&[(vec![1.0], f64::NAN)]).is_err());
+        assert!(fedavg(&[(vec![1.0], f64::INFINITY)]).is_err());
+        // Zero individual weights remain fine when the total is positive.
+        let ok = fedavg(&[(vec![2.0], 0.0), (vec![4.0], 2.0)]).unwrap();
+        assert_eq!(ok, vec![4.0]);
     }
 
     #[test]

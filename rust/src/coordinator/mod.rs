@@ -19,7 +19,7 @@ use crate::device::{DeviceProfile, FleetModel};
 use crate::metrics::{MetricsLog, RoundMetrics};
 use crate::runtime::{lit_f32, lit_scalar, to_scalar_f32, to_vec_f32, Engine};
 use crate::selection::{self, ClientView, SelectionPolicy};
-use crate::summary::{EncoderSummary, JlSummary, PxySummary, PySummary, SummaryEngine};
+use crate::summary::SummaryEngine;
 use crate::util::mat::Mat;
 use crate::util::rng::Rng;
 
@@ -66,21 +66,17 @@ impl Coordinator {
         }
         let partition = Partition::build(&spec);
         let generator = Generator::new(&spec);
-        let fleet = FleetModel::default().sample_fleet(spec.n_clients);
         let drift = if cfg.drift_rounds.is_empty() {
             DriftSchedule::none()
         } else {
             DriftSchedule::at(cfg.drift_rounds.clone(), cfg.drift_frac)
         };
-        let policy = selection::by_name(&cfg.policy)
-            .with_context(|| format!("unknown policy {:?}", cfg.policy))?;
-        let mut summary_engine: Box<dyn SummaryEngine> = match cfg.summary.as_str() {
-            "encoder" => Box::new(EncoderSummary::new(&spec)),
-            "py" => Box::new(PySummary::new(&spec)),
-            "pxy" => Box::new(PxySummary::new(&spec)),
-            "jl" => Box::new(JlSummary::new(&spec)),
-            other => bail!("unknown summary engine {other:?}"),
-        };
+        // The fleet is provisioned at the drift phase the run starts in
+        // (phase 0 unless a change point sits at round 0).
+        let fleet =
+            FleetModel::default().sample_fleet_at(spec.n_clients, drift.phase_at(0));
+        let policy = selection::from_config(&cfg)?;
+        let mut summary_engine = crate::summary::by_name(&cfg.summary, &spec)?;
         // Local DP on summaries (paper §5): perturb on-device before upload.
         if cfg.dp_epsilon > 0.0 {
             summary_engine = Box::new(crate::summary::DpSummary::new(
@@ -321,6 +317,7 @@ impl Coordinator {
             round,
             sim_time: self.sim_time,
             round_time: refresh_secs + round_time,
+            refresh_secs,
             train_loss: crate::util::stats::mean(&train_losses),
             eval_accuracy: acc,
             eval_loss,

@@ -139,9 +139,27 @@ pub struct RefreshResult {
     pub host_secs: f64,
     /// Server-side clustering seconds (real, measured).
     pub cluster_secs: f64,
-    /// Simulated refresh duration: devices summarize in parallel, so the
-    /// fleet-wide cost is max(compute + upload), then clustering runs on
-    /// the server.
+    /// Iterations the clustering backend ran (0 when clustering was trivial).
+    /// Deterministic: both backends are thread-count invariant.
+    pub cluster_iters: usize,
+    /// *Modeled* server-side clustering seconds — a deterministic function of
+    /// (backend, n, k, dim, iterations) with the same per-FLOP constant as
+    /// `SummaryEngine::model_host_secs`, so the discrete-event simulator can
+    /// charge coordinator overhead on its clock bitwise-reproducibly.
+    /// Measured wall-clock stays in [`RefreshResult::cluster_secs`].
+    pub cluster_model_secs: f64,
+    /// Deterministic fleet-parallel device time: max over the devices that
+    /// actually *recomputed* this refresh of (modeled summary compute +
+    /// summary upload). Cache hits cost the devices nothing, so a
+    /// fully-cached refresh reports 0 here — that is the incremental
+    /// refresh's entire point. The simulator charges this plus
+    /// [`RefreshResult::cluster_model_secs`] per refresh.
+    pub device_parallel_secs: f64,
+    /// Simulated refresh duration: recomputed devices summarize in
+    /// parallel, so the fleet-wide cost is max(compute + upload) over the
+    /// recompute set ([`RefreshResult::device_parallel_secs`]), then
+    /// clustering runs on the server (measured seconds here; the bitwise
+    /// deterministic variant is [`RefreshResult::sim_model_secs`]).
     pub sim_secs: f64,
     /// Client indices recomputed this refresh: everyone on a cold refresh,
     /// exactly the drifted clients on a cached one.
@@ -163,6 +181,37 @@ impl RefreshResult {
     pub fn summary_time_stats(&self) -> (f64, f64) {
         (stats::mean(&self.device_secs), stats::max(&self.device_secs))
     }
+
+    /// Total deterministic refresh duration on the simulated clock: the
+    /// fleet summarizes in parallel, then the server clusters.
+    pub fn sim_model_secs(&self) -> f64 {
+        self.device_parallel_secs + self.cluster_model_secs
+    }
+}
+
+/// Deterministic model of server-side clustering seconds: multiply-adds per
+/// iteration × the shared per-FLOP constant (`2.5e-10`, the same order the
+/// summary cost models use). Lloyd scans the whole fleet each iteration;
+/// mini-batch scans one batch per iteration plus one final full assignment
+/// pass. Pruning only changes measured time, never the model — the model
+/// prices the naive workload so strategy comparisons stay stable.
+pub fn cluster_model_secs(
+    minibatch: bool,
+    n: usize,
+    k: usize,
+    dim: usize,
+    iters: usize,
+    batch: usize,
+) -> f64 {
+    const SECS_PER_MADD: f64 = 2.5e-10;
+    const SETUP_SECS: f64 = 5e-6;
+    let per_point = (k * dim) as f64;
+    let madds = if minibatch {
+        iters as f64 * batch.min(n) as f64 * per_point + n as f64 * per_point
+    } else {
+        iters as f64 * n as f64 * per_point
+    };
+    SECS_PER_MADD * madds + SETUP_SECS
 }
 
 /// Stateful refresh service: owns the summary store and the warm-start
@@ -411,15 +460,17 @@ impl FleetRefresher {
             }
         };
         let tc = std::time::Instant::now();
-        let clusters = if k_clusters <= 1 || n <= k_clusters {
+        let use_minibatch = self.opts.backend.use_minibatch(n);
+        let mut minibatch_batch = 0usize;
+        let (clusters, cluster_iters) = if k_clusters <= 1 || n <= k_clusters {
             self.warm = None;
-            vec![0; n]
+            (vec![0; n], 0)
         } else {
             // Balance summary blocks first: the proposed summary concatenates
             // a feature-mean block and a label-distribution block of very
             // different scales (see cluster::balance_blocks).
             let balanced = crate::cluster::balance_blocks(cluster_src, &summary.blocks());
-            if self.opts.backend.use_minibatch(n) {
+            if use_minibatch {
                 let mut cfg = MinibatchConfig::new(k_clusters);
                 cfg.seed = seed;
                 cfg.threads = threads;
@@ -427,19 +478,28 @@ impl FleetRefresher {
                 if self.opts.minibatch_batch > 0 {
                     cfg.batch = self.opts.minibatch_batch;
                 }
+                minibatch_batch = cfg.batch;
                 let fitted = minibatch::fit_warm(&balanced, &cfg, self.warm.as_ref());
                 self.warm = Some(fitted.warm);
-                fitted.result.assignments
+                (fitted.result.assignments, fitted.result.iters)
             } else {
                 self.warm = None;
                 let mut cfg = KmeansConfig::new(k_clusters);
                 cfg.seed = seed;
                 cfg.threads = threads;
                 cfg.pruning = self.opts.pruning;
-                kmeans::fit(&balanced, &cfg).assignments
+                let fitted = kmeans::fit(&balanced, &cfg);
+                (fitted.assignments, fitted.iters)
             }
         };
         let cluster_secs = tc.elapsed().as_secs_f64();
+        // Trivial clusterings (k <= 1, n <= k) never ran the backend; they
+        // cost nothing on the simulated clock.
+        let cluster_model = if cluster_iters == 0 {
+            0.0
+        } else {
+            cluster_model_secs(use_minibatch, n, k_clusters, dim, cluster_iters, minibatch_batch)
+        };
 
         // Compact only after every read through recorded slots is done
         // (compaction relocates rows). A fleet shrink or heavy invalidation
@@ -450,10 +510,14 @@ impl FleetRefresher {
             }
         }
 
-        let parallel_device_max = device_secs
+        // Fleet-parallel refresh duration: only the clients that actually
+        // recomputed did device work (a store hit is served server-side —
+        // the device computes and uploads nothing), so the parallel max runs
+        // over the recompute set. A fully-cached refresh costs the fleet
+        // zero seconds; only clustering remains.
+        let parallel_device_max = recomputed
             .iter()
-            .zip(&upload_secs)
-            .map(|(c, u)| c + u)
+            .map(|&i| device_secs[i] + upload_secs[i])
             .fold(0.0f64, f64::max);
         let store_stats = store.as_deref().map(|s| s.stats()).unwrap_or_default();
         // `want_out` may have materialized an internal matrix (bounded store,
@@ -468,6 +532,9 @@ impl FleetRefresher {
             device_secs,
             host_secs,
             cluster_secs,
+            cluster_iters,
+            cluster_model_secs: cluster_model,
+            device_parallel_secs: parallel_device_max,
             sim_secs: parallel_device_max + cluster_secs,
             recomputed,
             invalidated,
@@ -631,6 +698,12 @@ mod tests {
         assert_eq!(r0.summaries, r1.summaries);
         assert_eq!(r1.invalidated, 0);
         assert_eq!(r1.evicted, 0);
+        // A fully-cached refresh costs the devices nothing on the simulated
+        // clock (only server-side clustering remains) — the incremental
+        // refresh's modeled payoff.
+        assert!(r0.device_parallel_secs > 0.0);
+        assert_eq!(r1.device_parallel_secs, 0.0);
+        assert!(r1.sim_model_secs() < r0.sim_model_secs());
         // Past the drift round: exactly the affected clients recompute.
         let r2 = refresher
             .refresh(&eng, &jl, &part, &gen, &fleet, &drift, 5, spec.n_groups, seed)
@@ -695,6 +768,39 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "arena row {i}");
             }
         }
+    }
+
+    #[test]
+    fn modeled_refresh_clock_is_deterministic_and_positive() {
+        // The simulator's clock source: device_parallel_secs +
+        // cluster_model_secs must be positive, reproducible run-to-run, and
+        // independent of worker threads (measured host/cluster secs are not).
+        let (eng, spec, part, gen, fleet) = setup_native();
+        let jl = JlSummary::new(&spec);
+        let none = DriftSchedule::none();
+        let run = |threads: usize| {
+            FleetRefresher::new(RefreshOptions { threads, use_cache: false, ..Default::default() })
+                .refresh(&eng, &jl, &part, &gen, &fleet, &none, 0, spec.n_groups, 7)
+                .unwrap()
+        };
+        let a = run(1);
+        let b = run(4);
+        assert!(a.device_parallel_secs > 0.0);
+        assert!(a.cluster_model_secs > 0.0);
+        assert!(a.cluster_iters > 0, "non-trivial clustering must iterate");
+        assert_eq!(a.device_parallel_secs.to_bits(), b.device_parallel_secs.to_bits());
+        assert_eq!(a.cluster_model_secs.to_bits(), b.cluster_model_secs.to_bits());
+        assert_eq!(a.cluster_iters, b.cluster_iters);
+        assert_eq!(
+            a.sim_model_secs().to_bits(),
+            (a.device_parallel_secs + a.cluster_model_secs).to_bits()
+        );
+        // The standalone model: more iterations can only cost more.
+        assert!(
+            cluster_model_secs(false, 100, 4, 16, 5, 0)
+                > cluster_model_secs(false, 100, 4, 16, 2, 0)
+        );
+        assert!(cluster_model_secs(true, 5000, 8, 32, 10, 256) > 0.0);
     }
 
     #[test]

@@ -28,6 +28,15 @@ impl DriftSchedule {
         DriftSchedule { change_rounds: r, affected_frac: affected_frac.clamp(0.0, 1.0) }
     }
 
+    /// Periodic drift bursts: `count` change points starting at `start`,
+    /// spaced `every` rounds apart, each hitting `affected_frac` of the
+    /// fleet. The simulator's `drift_burst` scenario uses this to keep the
+    /// incremental refresher busy at a fixed cadence.
+    pub fn bursts(start: usize, every: usize, count: usize, affected_frac: f64) -> Self {
+        assert!(every > 0 || count <= 1, "bursts: zero spacing with multiple bursts");
+        Self::at((0..count).map(|i| start + i * every).collect(), affected_frac)
+    }
+
     /// Data phase at `round`: number of change points passed.
     pub fn phase_at(&self, round: usize) -> u64 {
         self.change_rounds.iter().filter(|&&r| r <= round).count() as u64
@@ -77,6 +86,18 @@ mod tests {
         assert_eq!(d.phase_at(49), 1);
         assert_eq!(d.phase_at(50), 2);
         assert_eq!(d.phase_at(500), 2);
+    }
+
+    #[test]
+    fn bursts_space_change_points_evenly() {
+        let d = DriftSchedule::bursts(5, 5, 3, 0.4);
+        assert_eq!(d.change_rounds, vec![5, 10, 15]);
+        assert_eq!(d.phase_at(4), 0);
+        assert_eq!(d.phase_at(5), 1);
+        assert_eq!(d.phase_at(12), 2);
+        assert_eq!(d.phase_at(100), 3);
+        assert!((d.affected_frac - 0.4).abs() < 1e-12);
+        assert_eq!(DriftSchedule::bursts(0, 7, 0, 1.0).change_rounds, Vec::<usize>::new());
     }
 
     #[test]

@@ -52,10 +52,25 @@ impl Default for FleetModel {
 }
 
 impl FleetModel {
+    /// Sample a fleet at drift phase 0 (the common stationary case).
     pub fn sample_fleet(&self, n: usize) -> Vec<DeviceProfile> {
+        self.sample_fleet_at(n, 0)
+    }
+
+    /// Sample a fleet whose data already sits at `round0_phase` when the run
+    /// begins (a drift change point at round 0, or a simulator scenario that
+    /// starts mid-drift). Device capabilities co-vary with the data phase —
+    /// a re-provisioned fleet is a different fleet — but phase 0 keeps the
+    /// historical per-device streams bitwise so existing fixtures and cached
+    /// summaries stay valid.
+    pub fn sample_fleet_at(&self, n: usize, round0_phase: u64) -> Vec<DeviceProfile> {
         (0..n)
             .map(|id| {
-                let mut rng = Rng::substream(self.seed, &[id as u64]);
+                let mut rng = if round0_phase == 0 {
+                    Rng::substream(self.seed, &[id as u64])
+                } else {
+                    Rng::substream(self.seed, &[id as u64, round0_phase])
+                };
                 DeviceProfile {
                     device_id: id,
                     compute_factor: rng.lognormal(self.compute_mu, self.compute_sigma).clamp(1.0, 60.0),
@@ -103,6 +118,45 @@ mod tests {
             assert!(x.bandwidth_mbps > 0.0);
             assert!((0.0..=1.0).contains(&x.availability));
         }
+    }
+
+    #[test]
+    fn round0_phase_changes_fleet_but_phase0_is_stable() {
+        let m = FleetModel::default();
+        let base = m.sample_fleet(50);
+        let same = m.sample_fleet_at(50, 0);
+        for (x, y) in base.iter().zip(&same) {
+            assert_eq!(x.compute_factor.to_bits(), y.compute_factor.to_bits());
+            assert_eq!(x.bandwidth_mbps.to_bits(), y.bandwidth_mbps.to_bits());
+        }
+        let shifted = m.sample_fleet_at(50, 2);
+        let moved = base
+            .iter()
+            .zip(&shifted)
+            .filter(|(x, y)| x.compute_factor != y.compute_factor)
+            .count();
+        assert!(moved > 40, "phase-2 fleet barely moved: {moved}/50");
+        // And the shifted fleet is still a valid fleet.
+        for d in &shifted {
+            assert!(d.compute_factor >= 1.0 && d.compute_factor <= 60.0);
+            assert!((0.0..=1.0).contains(&d.availability));
+        }
+    }
+
+    #[test]
+    fn lognormal_median_compute_factor_matches_model() {
+        // Fleet-realism regression guard: the default model centers the
+        // compute factor at e^mu = 8x the host. The sample median must land
+        // near that (clamping at [1, 60] barely moves the middle).
+        let fleet = FleetModel::default().sample_fleet(4000);
+        let mut f: Vec<f64> = fleet.iter().map(|d| d.compute_factor).collect();
+        f.sort_by(f64::total_cmp);
+        let median = (f[f.len() / 2 - 1] + f[f.len() / 2]) / 2.0;
+        let target = FleetModel::default().compute_mu.exp();
+        assert!(
+            (median - target).abs() / target < 0.15,
+            "median compute_factor {median:.2} drifted from the modeled {target:.2}"
+        );
     }
 
     #[test]

@@ -21,5 +21,6 @@ pub mod metrics;
 pub mod privacy;
 pub mod runtime;
 pub mod selection;
+pub mod sim;
 pub mod summary;
 pub mod util;

@@ -4,6 +4,8 @@
 //!   train      run federated training (the Figure 1 workflow end-to-end)
 //!   summarize  compute fleet distribution summaries, report Table-2 stats
 //!   cluster    cluster fleet summaries (kmeans / dbscan), report quality
+//!   run-sim    discrete-event fleet simulator (scenario catalog, per-round
+//!              wall-clock breakdown, BENCH_sim.json aggregate)
 //!   artifacts  list the AOT artifacts the runtime can execute
 //!
 //! Flags are `--key value` pairs; `train` also accepts `--config file.toml`
@@ -14,12 +16,14 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 use feddde::cluster::{dbscan, kmeans, minibatch};
-use feddde::config::ExperimentConfig;
+use feddde::config::{ExperimentConfig, SimConfig};
 use feddde::coordinator::{refresh_fleet, Coordinator};
 use feddde::data::{DatasetSpec, DriftSchedule, Generator, Partition};
 use feddde::device::FleetModel;
 use feddde::runtime::Engine;
-use feddde::summary::{EncoderSummary, JlSummary, PxySummary, PySummary, SummaryEngine};
+use feddde::selection::STRATEGY_NAMES;
+use feddde::sim::{bench_json, Scenario, Simulator};
+use feddde::summary::SummaryEngine as _;
 use feddde::util::stats;
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
@@ -104,14 +108,129 @@ fn cfg_from_flags(flags: &HashMap<String, String>) -> Result<ExperimentConfig> {
     Ok(cfg)
 }
 
-fn summary_engine(name: &str, spec: &DatasetSpec) -> Result<Box<dyn SummaryEngine>> {
-    Ok(match name {
-        "encoder" => Box::new(EncoderSummary::new(spec)),
-        "py" => Box::new(PySummary::new(spec)),
-        "pxy" => Box::new(PxySummary::new(spec)),
-        "jl" => Box::new(JlSummary::new(spec)),
-        other => bail!("unknown summary method {other:?}"),
-    })
+fn sim_cfg_from_flags(flags: &HashMap<String, String>) -> Result<SimConfig> {
+    let mut cfg = if let Some(path) = flags.get("config") {
+        SimConfig::load(path)?
+    } else {
+        SimConfig::default()
+    };
+    if let Some(v) = flags.get("scenario") {
+        cfg.scenario = v.clone();
+    }
+    if let Some(v) = flags.get("clients") {
+        cfg.n_clients = v.parse().context("--clients")?;
+    }
+    if let Some(v) = flags.get("rounds") {
+        cfg.rounds = v.parse().context("--rounds")?;
+    }
+    if let Some(v) = flags.get("per-round") {
+        cfg.per_round = v.parse().context("--per-round")?;
+    }
+    if let Some(v) = flags.get("local-steps") {
+        cfg.local_steps = v.parse().context("--local-steps")?;
+    }
+    if let Some(v) = flags.get("policy") {
+        cfg.policy = v.clone();
+    }
+    if let Some(v) = flags.get("summary") {
+        cfg.summary = v.clone();
+    }
+    if let Some(v) = flags.get("clusters") {
+        cfg.clusters = v.parse().context("--clusters")?;
+    }
+    if let Some(v) = flags.get("refresh-every") {
+        cfg.refresh_every = v.parse().context("--refresh-every")?;
+    }
+    if let Some(v) = flags.get("threads") {
+        cfg.threads = v.parse().context("--threads")?;
+    }
+    if let Some(v) = flags.get("step-secs") {
+        cfg.train_step_host_secs = v.parse().context("--step-secs")?;
+    }
+    if let Some(v) = flags.get("update-bytes") {
+        cfg.update_bytes = v.parse().context("--update-bytes")?;
+    }
+    if let Some(v) = flags.get("seed") {
+        cfg.seed = v.parse().context("--seed")?;
+    }
+    if let Some(v) = flags.get("out-dir") {
+        cfg.out_dir = v.clone();
+    }
+    Ok(cfg)
+}
+
+fn cmd_run_sim(flags: HashMap<String, String>) -> Result<()> {
+    if flags.contains_key("list-scenarios") {
+        for sc in Scenario::catalog() {
+            println!("{:<16} {}", sc.name, sc.blurb);
+        }
+        return Ok(());
+    }
+    let cfg = sim_cfg_from_flags(&flags)?;
+    let names: Vec<String> = if cfg.scenario == "all" {
+        Scenario::NAMES.iter().map(|s| s.to_string()).collect()
+    } else {
+        cfg.scenario.split(',').map(|s| s.trim().to_string()).collect()
+    };
+    if !cfg.out_dir.is_empty() {
+        std::fs::create_dir_all(&cfg.out_dir)?;
+    }
+    let mut entries = Vec::new();
+    for name in &names {
+        let sc = Scenario::by_name(name)
+            .with_context(|| format!("unknown scenario {name:?} (try --list-scenarios)"))?;
+        let t0 = std::time::Instant::now();
+        let rep = Simulator::new(cfg.clone(), sc)?.run()?;
+        let host = t0.elapsed().as_secs_f64();
+        let t = rep.totals();
+        println!(
+            "scenario {:<16} policy {:<12} n {:>6}  sim {:>10.1}s  \
+             refresh {:>8.1}s  select {:>7.3}s  compute {:>8.1}s  upload {:>7.1}s  \
+             coverage {:.3}  completed/dropped/timed_out {}/{}/{}",
+            rep.scenario,
+            rep.policy,
+            rep.n_clients,
+            t.sim_secs,
+            t.refresh_secs,
+            t.selection_secs,
+            t.compute_secs,
+            t.upload_secs,
+            t.coverage,
+            t.completed,
+            t.dropped,
+            t.timed_out
+        );
+        for r in &rep.rounds {
+            println!(
+                "  round {:>3}  {:>9.1}s  sel {:>3}  done {:>3}  drop {:>2}  cut {:>2}  \
+                 refresh {:>7.2}s  cov {:.3}",
+                r.round,
+                r.round_secs,
+                r.selected,
+                r.completed,
+                r.dropped,
+                r.timed_out,
+                r.refresh_secs,
+                r.coverage
+            );
+        }
+        if !cfg.out_dir.is_empty() {
+            let path = format!("{}/sim_{}_{}.jsonl", cfg.out_dir, rep.scenario, rep.policy);
+            rep.write_jsonl(&path)?;
+            println!("  wrote {path}");
+        }
+        entries.push(rep.bench_entry_json(host));
+    }
+    if let Some(path) = flags.get("bench-json") {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, bench_json(&entries))?;
+        println!("wrote {path}");
+    }
+    Ok(())
 }
 
 fn cmd_train(flags: HashMap<String, String>) -> Result<()> {
@@ -156,7 +275,7 @@ fn cmd_summarize(flags: HashMap<String, String>) -> Result<()> {
     }
     let method = flags.get("method").map(String::as_str).unwrap_or("encoder");
     let engine = Engine::open_default()?;
-    let se = summary_engine(method, &spec)?;
+    let se = feddde::summary::by_name(method, &spec)?;
     let partition = Partition::build(&spec);
     let generator = Generator::new(&spec);
     let fleet = FleetModel::default().sample_fleet(spec.n_clients);
@@ -195,7 +314,7 @@ fn cmd_cluster(flags: HashMap<String, String>) -> Result<()> {
     let method = flags.get("method").map(String::as_str).unwrap_or("kmeans");
     let summary = flags.get("summary").map(String::as_str).unwrap_or("encoder");
     let engine = Engine::open_default()?;
-    let se = summary_engine(summary, &spec)?;
+    let se = feddde::summary::by_name(summary, &spec)?;
     let partition = Partition::build(&spec);
     let generator = Generator::new(&spec);
     let fleet = FleetModel::default().sample_fleet(spec.n_clients);
@@ -260,11 +379,12 @@ fn main() -> Result<()> {
         "train" => cmd_train(flags),
         "summarize" => cmd_summarize(flags),
         "cluster" => cmd_cluster(flags),
+        "run-sim" => cmd_run_sim(flags),
         "artifacts" => cmd_artifacts(),
         _ => {
             println!(
                 "feddde — Efficient Data Distribution Estimation for Accelerated FL\n\n\
-                 usage: feddde <train|summarize|cluster|artifacts> [--flags]\n\
+                 usage: feddde <train|summarize|cluster|run-sim|artifacts> [--flags]\n\
                    train      --dataset tiny --rounds 30 --policy cluster [--config f.toml]\n\
                               refresh pipeline: --cluster-backend auto|lloyd|minibatch\n\
                               --refresh-threads N (0=auto) --summary-cache true|false\n\
@@ -276,9 +396,17 @@ fn main() -> Result<()> {
                               0 = one row per client, LRU eviction recomputes exactly)\n\
                    summarize  --dataset tiny --method encoder|py|pxy|jl [--clients N]\n\
                    cluster    --dataset tiny --method kmeans|minibatch|dbscan [--summary encoder]\n\
+                   run-sim    discrete-event fleet simulator (end-to-end overhead study):\n\
+                              --scenario <name|name,name|all> (--list-scenarios to list)\n\
+                              --clients N --rounds R --per-round K --policy {}\n\
+                              --summary jl|encoder|py|pxy --refresh-every N --threads T\n\
+                              --step-secs S --update-bytes B --seed S [--config f.toml [sim]]\n\
+                              --out-dir results/sim (per-round JSONL + event stream)\n\
+                              --bench-json results/BENCH_sim.json (aggregate artifact)\n\
                    artifacts  list AOT artifacts\n\
                  env: FEDDDE_THREADS caps refresh parallelism (output is identical\n\
-                 for any value; see rust/tests/determinism.rs)"
+                 for any value; see rust/tests/determinism.rs)",
+                STRATEGY_NAMES.join("|")
             );
             Ok(())
         }

@@ -13,6 +13,10 @@ pub struct RoundMetrics {
     /// Duration of this round alone (max over selected devices of
     /// compute+upload, plus server aggregation).
     pub round_time: f64,
+    /// Portion of `round_time` spent on the coordinator's summary +
+    /// clustering refresh (0 on non-refresh rounds) — the selection
+    /// overhead the paper measures, broken out of the training time.
+    pub refresh_secs: f64,
     pub train_loss: f64,
     pub eval_accuracy: f64,
     pub eval_loss: f64,
@@ -26,12 +30,14 @@ impl RoundMetrics {
     pub fn to_json(&self) -> String {
         let sel: Vec<String> = self.selected.iter().map(|s| s.to_string()).collect();
         format!(
-            "{{\"round\":{},\"sim_time\":{:.4},\"round_time\":{:.4},\"train_loss\":{:.6},\
+            "{{\"round\":{},\"sim_time\":{:.4},\"round_time\":{:.4},\"refresh_secs\":{:.4},\
+             \"train_loss\":{:.6},\
              \"eval_accuracy\":{:.6},\"eval_loss\":{:.6},\"host_exec_secs\":{:.4},\
              \"selected\":[{}]}}",
             self.round,
             self.sim_time,
             self.round_time,
+            self.refresh_secs,
             self.train_loss,
             self.eval_accuracy,
             self.eval_loss,
@@ -110,6 +116,7 @@ mod tests {
             round: n,
             sim_time: t,
             round_time: 1.0,
+            refresh_secs: 0.25,
             train_loss: 2.0 / (n + 1) as f64,
             eval_accuracy: acc,
             eval_loss: 1.0,
@@ -137,6 +144,7 @@ mod tests {
         let j = round(5, 1.5, 0.33).to_json();
         assert!(j.starts_with('{') && j.ends_with('}'));
         assert!(j.contains("\"round\":5"));
+        assert!(j.contains("\"refresh_secs\":0.2500"));
         assert!(j.contains("\"selected\":[1,2]"));
     }
 

@@ -59,16 +59,40 @@ pub trait SelectionPolicy {
     ) -> Vec<usize>;
 }
 
-/// Build a policy by config name.
+/// Canonical registry of strategy names. The CLI help, the coordinator, the
+/// simulator's strategy sweep, and `benches/sim_overhead` all read this one
+/// list instead of each hand-maintaining its own match arms.
+pub const STRATEGY_NAMES: [&str; 5] = ["random", "round_robin", "cluster", "oort", "powd"];
+
+/// Build a policy by name, wiring the round's local-step count into the
+/// duration-aware strategies (cluster, oort) so their expected-duration
+/// ranking matches what the round will actually run.
+pub fn build(name: &str, local_steps: usize) -> anyhow::Result<Box<dyn SelectionPolicy>> {
+    let local_steps = local_steps.max(1);
+    Ok(match name {
+        "random" => Box::new(RandomSelection),
+        "round_robin" => Box::new(RoundRobinSelection::default()),
+        "cluster" => Box::new(ClusterSelection { local_steps, ..Default::default() }),
+        "oort" => Box::new(OortSelection { local_steps, ..Default::default() }),
+        "powd" => Box::new(PowDSelection::default()),
+        other => anyhow::bail!(
+            "unknown selection policy {other:?} (known: {})",
+            STRATEGY_NAMES.join(", ")
+        ),
+    })
+}
+
+/// The one strategy factory shared by the `train` CLI, the coordinator, and
+/// the fleet simulator: `ExperimentConfig::policy` + `local_steps` in, boxed
+/// policy out.
+pub fn from_config(cfg: &crate::config::ExperimentConfig) -> anyhow::Result<Box<dyn SelectionPolicy>> {
+    build(&cfg.policy, cfg.local_steps)
+}
+
+/// Build a policy by config name (legacy `Option` form; `build` carries the
+/// error message and the local-steps wiring).
 pub fn by_name(name: &str) -> Option<Box<dyn SelectionPolicy>> {
-    match name {
-        "random" => Some(Box::new(RandomSelection)),
-        "round_robin" => Some(Box::new(RoundRobinSelection::default())),
-        "cluster" => Some(Box::new(ClusterSelection::default())),
-        "oort" => Some(Box::new(OortSelection::default())),
-        "powd" => Some(Box::new(PowDSelection::default())),
-        _ => None,
-    }
+    build(name, 4).ok()
 }
 
 /// Shared invariant checks used by tests and debug assertions: selections
@@ -177,5 +201,27 @@ mod tests {
     #[test]
     fn unknown_policy_is_none() {
         assert!(by_name("nope").is_none());
+        assert!(build("nope", 4).is_err());
+    }
+
+    #[test]
+    fn registry_names_all_build() {
+        for name in STRATEGY_NAMES {
+            let p = build(name, 2).unwrap();
+            assert_eq!(p.name(), name, "registry name and policy name diverged");
+        }
+    }
+
+    #[test]
+    fn from_config_wires_local_steps() {
+        let cfg = crate::config::ExperimentConfig {
+            policy: "cluster".into(),
+            local_steps: 7,
+            ..Default::default()
+        };
+        let p = from_config(&cfg).unwrap();
+        assert_eq!(p.name(), "cluster");
+        let bad = crate::config::ExperimentConfig { policy: "nope".into(), ..Default::default() };
+        assert!(from_config(&bad).is_err());
     }
 }

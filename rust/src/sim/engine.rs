@@ -1,0 +1,773 @@
+//! Deterministic discrete-event core: a tie-broken binary-heap event queue
+//! and the [`Simulator`] that advances a heterogeneous device fleet through
+//! full FL rounds on a simulated wall clock.
+//!
+//! **Event model.** Every event is `(time, event_id, round, kind)`. The
+//! queue is a min-heap ordered by `(time, event_id)` — `event_id` is a
+//! monotone scheduling counter, so simultaneous events always pop in the
+//! order they were scheduled and the event stream is a pure function of the
+//! seed. Times are finite non-negative f64; `f64::total_cmp` makes the
+//! ordering total.
+//!
+//! **Clock-charging rules.** Each round charges, in order:
+//! 1. *refresh* — on refresh rounds of the `cluster` policy, the fleet
+//!    summarization + server clustering from the deterministic cost models
+//!    ([`RefreshResult::sim_model_secs`]): recomputed devices summarize in
+//!    parallel (max of modeled compute + summary upload; store hits are
+//!    free device-side), then the server clusters
+//!    ([`cluster_model_secs`]). This is the paper's selection *overhead*,
+//!    competing with training time on the same clock.
+//! 2. *selection* — a deterministic per-policy ranking-cost model
+//!    ([`selection_model_secs`]).
+//! 3. *training* — every selected client runs `local_steps` at
+//!    `train_step_host_secs × compute_factor × straggler multiplier`, then
+//!    uploads `update_bytes` over its uplink; the round closes per the
+//!    scenario's aggregation rule (sync: the first `per_round` completions,
+//!    the deadline, or every selected client resolving — whichever is
+//!    first; quorum: the first `frac × selected` completions).
+//!
+//! Every selected client terminates in exactly one of three states:
+//! *completed* (update aggregated), *dropped* (its dropout event fired
+//! before the round closed), or *timed out* (still in flight when the round
+//! closed — cut by the deadline or the quorum). FedAvg runs over the
+//! completed updates only.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::SimConfig;
+use crate::coordinator::fedavg::fedavg;
+use crate::coordinator::summaries::{FleetRefresher, RefreshOptions};
+use crate::data::generator::Generator;
+use crate::data::partition::Partition;
+use crate::data::spec::DatasetSpec;
+use crate::device::{DeviceProfile, FleetModel};
+use crate::runtime::Engine;
+use crate::selection::{self, ClientView, SelectionPolicy};
+use crate::sim::report::{RoundReport, SimEventRecord, SimReport};
+use crate::sim::scenario::{Aggregation, Scenario};
+use crate::summary::SummaryEngine;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Dimension of the synthetic flat parameter vector the simulator's FedAvg
+/// aggregates (the sim measures systems overhead, not learning curves, so
+/// the model is deliberately small).
+pub const UPDATE_DIM: usize = 32;
+
+/// Substream salts (sim-local; disjoint from coordinator/data salts).
+const SALT_SELECT: u64 = 0x51E1_0;
+const SALT_DROPOUT: u64 = 0xD0D0_0;
+const SALT_UPDATE: u64 = 0x0DA7_0;
+const SALT_LOSS: u64 = 0x1055_0;
+
+/// What happens when an event fires.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EventKind {
+    /// A selected client finished local training + upload.
+    ClientDone { client: usize },
+    /// A selected client went offline mid-round; its update is lost.
+    ClientDropout { client: usize },
+    /// The round's straggler deadline expired.
+    Deadline,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::ClientDone { .. } => "client_done",
+            EventKind::ClientDropout { .. } => "client_dropout",
+            EventKind::Deadline => "deadline",
+        }
+    }
+
+    pub fn client(&self) -> Option<usize> {
+        match self {
+            EventKind::ClientDone { client } | EventKind::ClientDropout { client } => {
+                Some(*client)
+            }
+            EventKind::Deadline => None,
+        }
+    }
+}
+
+/// One scheduled occurrence.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub time: f64,
+    /// Monotone scheduling counter — the deterministic tie-break.
+    pub id: u64,
+    pub round: usize,
+    pub kind: EventKind,
+}
+
+/// Heap entry ordered ascending by `(time, id)`; `total_cmp` keeps the
+/// order total (times are asserted finite at schedule time anyway).
+struct Entry(Event);
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.time.to_bits() == other.0.time.to_bits() && self.0.id == other.0.id
+    }
+}
+impl Eq for Entry {}
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.time.total_cmp(&other.0.time).then(self.0.id.cmp(&other.0.id))
+    }
+}
+
+/// Min-heap event queue with the `(time, event_id)` tie-break. Pops are
+/// non-decreasing in time and events never fire before their scheduled
+/// time; both are asserted.
+#[derive(Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<Entry>>,
+    next_id: u64,
+    last_popped: f64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        EventQueue { heap: BinaryHeap::new(), next_id: 0, last_popped: 0.0 }
+    }
+
+    /// Schedule `kind` at `time`; returns the event id. Scheduling into the
+    /// popped past is an engine bug, not a scenario property.
+    pub fn schedule(&mut self, time: f64, round: usize, kind: EventKind) -> u64 {
+        assert!(time.is_finite() && time >= 0.0, "event at bad time {time}");
+        assert!(
+            time >= self.last_popped,
+            "event scheduled at {time} before the clock ({})",
+            self.last_popped
+        );
+        let id = self.next_id;
+        self.next_id += 1;
+        self.heap.push(Reverse(Entry(Event { time, id, round, kind })));
+        id
+    }
+
+    pub fn pop(&mut self) -> Option<Event> {
+        let ev = self.heap.pop()?.0 .0;
+        debug_assert!(ev.time >= self.last_popped, "time ran backwards");
+        self.last_popped = ev.time;
+        Some(ev)
+    }
+
+    /// Cancel every pending event (a closed round's in-flight work): the
+    /// events never fire, never enter the stream, and never advance the
+    /// clock — the coordinator simply stops listening. Returns how many
+    /// were cancelled.
+    pub fn cancel_all(&mut self) -> usize {
+        let n = self.heap.len();
+        self.heap.clear();
+        n
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// Deterministic model of the coordinator's per-round selection compute:
+/// rough per-policy ranking costs (sorts for the ranking policies, a linear
+/// scan for the simple ones), priced with the same per-op constants the
+/// summary/cluster models use. Tiny next to refresh/training, but charged
+/// on the clock so "selection overhead" is never free.
+pub fn selection_model_secs(policy: &str, n_clients: usize, k: usize) -> f64 {
+    let n = n_clients.max(1) as f64;
+    let lg = n.max(2.0).log2();
+    let base = 1e-6;
+    base + match policy {
+        "random" => 3e-9 * n,
+        "round_robin" => 2e-9 * n,
+        "cluster" => 8e-9 * n * lg,
+        "oort" => 1.2e-8 * n * lg,
+        // One O(n) availability scan plus d(=3) candidate draws per slot.
+        "powd" => 3e-9 * n + 2.4e-8 * k.max(1) as f64 * 3.0,
+        _ => 5e-9 * n,
+    }
+}
+
+/// A selected client's scheduled work for the current round.
+#[derive(Clone, Copy)]
+struct Launched {
+    compute: f64,
+    upload: f64,
+    done_t: f64,
+}
+
+/// The discrete-event fleet simulator. Build with [`Simulator::new`], run
+/// with [`Simulator::run`]; the returned [`SimReport`] carries per-round
+/// wall-clock breakdowns plus the full popped-event stream (the determinism
+/// oracle's subject).
+pub struct Simulator {
+    cfg: SimConfig,
+    scenario: Scenario,
+    spec: DatasetSpec,
+    partition: Partition,
+    generator: Generator,
+    fleet: Vec<DeviceProfile>,
+    engine: Engine,
+    summary: Box<dyn SummaryEngine>,
+    refresher: FleetRefresher,
+    policy: Box<dyn SelectionPolicy>,
+    clusters: Vec<usize>,
+    last_loss: Vec<Option<f64>>,
+    completed_ever: Vec<bool>,
+    global: Vec<f32>,
+    clock: f64,
+    queue: EventQueue,
+}
+
+impl Simulator {
+    pub fn new(cfg: SimConfig, scenario: Scenario) -> Result<Self> {
+        if cfg.rounds == 0 || cfg.per_round == 0 {
+            bail!("sim: rounds and per_round must be positive");
+        }
+        let mut spec = DatasetSpec::tiny();
+        if cfg.n_clients > 0 {
+            spec = spec.with_clients(cfg.n_clients);
+        }
+        if spec.n_clients <= spec.n_groups {
+            bail!("sim: need more than {} clients", spec.n_groups);
+        }
+        if cfg.per_round > spec.n_clients {
+            bail!(
+                "sim: per_round {} exceeds the fleet size {}",
+                cfg.per_round,
+                spec.n_clients
+            );
+        }
+        let summary = crate::summary::by_name(&cfg.summary, &spec)?;
+        // Only the cluster policy ever summarizes; other policies must not
+        // fail on machines without the AOT bundle just because an
+        // artifact-backed summary engine was configured.
+        let engine = if cfg.policy == "cluster" && summary.needs_runtime() {
+            Engine::open_default().context("sim: summary engine needs the AOT runtime")?
+        } else {
+            Engine::without_artifacts()?
+        };
+        let partition = Partition::build(&spec);
+        let generator = Generator::new(&spec);
+        // The fleet is provisioned at the drift phase the run starts in
+        // (phase 0 unless the scenario drifts at round 0).
+        let fleet = FleetModel::default()
+            .sample_fleet_at(spec.n_clients, scenario.drift.phase_at(0));
+        let policy = selection::build(&cfg.policy, cfg.local_steps)?;
+        let refresher = FleetRefresher::new(RefreshOptions {
+            threads: cfg.threads,
+            // Zero-copy mode: the store's arena IS the fleet matrix the
+            // cluster backend reads; no owned summary copy is emitted.
+            emit_summaries: false,
+            ..Default::default()
+        });
+        let n = spec.n_clients;
+        Ok(Simulator {
+            cfg,
+            scenario,
+            spec,
+            partition,
+            generator,
+            fleet,
+            engine,
+            summary,
+            refresher,
+            policy,
+            clusters: vec![0; n],
+            last_loss: vec![None; n],
+            completed_ever: vec![false; n],
+            global: vec![0.0; UPDATE_DIM],
+            clock: 0.0,
+            queue: EventQueue::new(),
+        })
+    }
+
+    /// Is a summary + clustering refresh due at `round`?
+    fn refresh_due(&self, round: usize) -> bool {
+        if self.cfg.policy != "cluster" {
+            return false;
+        }
+        let every = self.scenario.refresh_every(self.cfg.refresh_every);
+        round == 0 || (every > 0 && round % every == 0)
+    }
+
+    /// Run the refresh pipeline and charge its deterministic modeled time.
+    /// Returns `(modeled seconds, clients recomputed)`.
+    fn maybe_refresh(&mut self, round: usize) -> Result<(f64, usize)> {
+        if !self.refresh_due(round) {
+            return Ok((0.0, 0));
+        }
+        let k = if self.cfg.clusters > 0 { self.cfg.clusters } else { self.spec.n_groups };
+        let r = self.refresher.refresh(
+            &self.engine,
+            self.summary.as_ref(),
+            &self.partition,
+            &self.generator,
+            &self.fleet,
+            &self.scenario.drift,
+            round,
+            k,
+            self.cfg.seed,
+        )?;
+        self.clusters = r.clusters;
+        Ok((r.sim_model_secs(), r.recomputed.len()))
+    }
+
+    /// Deterministic synthetic local loss after a completed round — decays
+    /// over rounds with per-(client, round) jitter; feeds the loss-aware
+    /// policies (oort, powd).
+    fn observed_loss(&self, client: usize, round: usize) -> f64 {
+        let mut rng =
+            Rng::substream(self.cfg.seed, &[SALT_LOSS, client as u64, round as u64]);
+        2.5 * (-0.08 * round as f64).exp() * (0.8 + 0.4 * rng.f64())
+    }
+
+    /// Deterministic synthetic model update for FedAvg: the current global
+    /// parameters plus a small per-(client, round) delta.
+    fn client_update(&self, client: usize, round: usize) -> Vec<f32> {
+        let mut rng =
+            Rng::substream(self.cfg.seed, &[SALT_UPDATE, client as u64, round as u64]);
+        self.global
+            .iter()
+            .map(|&g| g + 0.1 * (rng.f64() as f32 - 0.5))
+            .collect()
+    }
+
+    /// Run all configured rounds; consumes the simulator.
+    pub fn run(mut self) -> Result<SimReport> {
+        let n = self.spec.n_clients;
+        let mut report = SimReport::new(
+            &self.scenario.name,
+            &self.cfg.policy,
+            n,
+            self.cfg.per_round,
+            self.cfg.rounds,
+            self.cfg.seed,
+        );
+        for round in 0..self.cfg.rounds {
+            let t_start = self.clock;
+            let (refresh_secs, refresh_recomputed) = self.maybe_refresh(round)?;
+
+            // Availability + fleet view, then selection (with over-selection).
+            let want = ((self.cfg.per_round as f64) * self.scenario.over_select.max(1.0))
+                .ceil() as usize;
+            let want = want.clamp(self.cfg.per_round, n);
+            let selection_secs = selection_model_secs(&self.cfg.policy, n, want);
+            let t_sel = t_start + refresh_secs + selection_secs;
+
+            let views: Vec<ClientView<'_>> = self
+                .partition
+                .clients
+                .iter()
+                .enumerate()
+                .map(|(i, c)| ClientView {
+                    client_id: c.client_id,
+                    cluster: self.clusters[i],
+                    device: &self.fleet[i],
+                    available: self.scenario.available(&self.fleet[i], round, self.cfg.seed),
+                    n_samples: c.n_samples,
+                    last_loss: self.last_loss[i],
+                    step_host_secs: self.cfg.train_step_host_secs,
+                    upload_bytes: self.cfg.update_bytes,
+                })
+                .collect();
+            let mut sel_rng =
+                Rng::substream(self.cfg.seed, &[SALT_SELECT, round as u64]);
+            let selected = self.policy.select(&views, round, want, &mut sel_rng);
+            debug_assert!(selection::validate_selection(&selected, &views, want));
+
+            if selected.is_empty() {
+                // Nobody reachable (e.g. a flash-crowd trough): charge the
+                // coordinator overhead and move on.
+                self.clock = t_sel;
+                report.push_round(RoundReport {
+                    round,
+                    t_start,
+                    t_end: t_sel,
+                    round_secs: t_sel - t_start,
+                    refresh_secs,
+                    selection_secs,
+                    compute_secs: 0.0,
+                    upload_secs: 0.0,
+                    wait_secs: 0.0,
+                    selected: 0,
+                    completed: 0,
+                    dropped: 0,
+                    timed_out: 0,
+                    refresh_recomputed,
+                    aggregated: false,
+                    coverage: coverage(&self.completed_ever),
+                });
+                continue;
+            }
+
+            // Schedule every selected client's terminal event, then the
+            // round deadline (client events first: at equal times the
+            // earlier-scheduled event pops first).
+            let mut launched: Vec<(usize, Launched)> = Vec::with_capacity(selected.len());
+            let mut expected: Vec<f64> = Vec::with_capacity(selected.len());
+            for &cid in &selected {
+                let v = &views[cid];
+                expected.push(v.expected_round_secs(self.cfg.local_steps));
+                let mult = self.scenario.straggler_mult(cid, round, self.cfg.seed);
+                let compute = self
+                    .fleet[cid]
+                    .compute_time(self.cfg.train_step_host_secs * self.cfg.local_steps as f64)
+                    * mult;
+                let upload = self.fleet[cid].upload_time(self.cfg.update_bytes);
+                // Sum compute + upload BEFORE adding the clock so the
+                // duration associates exactly like `expected_round_secs` —
+                // the p100 deadline then ties bitwise with the slowest
+                // client's completion instead of cutting it by one ulp.
+                let duration = compute + upload;
+                let done_t = t_sel + duration;
+                let mut drop_rng = Rng::substream(
+                    self.cfg.seed,
+                    &[SALT_DROPOUT, cid as u64, round as u64],
+                );
+                if drop_rng.f64() < self.scenario.dropout_rate {
+                    let at = t_sel + drop_rng.f64() * duration;
+                    self.queue.schedule(at, round, EventKind::ClientDropout { client: cid });
+                } else {
+                    self.queue.schedule(done_t, round, EventKind::ClientDone { client: cid });
+                }
+                launched.push((cid, Launched { compute, upload, done_t }));
+            }
+            drop(views);
+            let deadline_pct = self.scenario.deadline_pct.clamp(1.0, 100.0);
+            let deadline_t = t_sel + stats::percentile(&expected, deadline_pct);
+            self.queue.schedule(deadline_t, round, EventKind::Deadline);
+
+            // Aggregation target: sync closes once `per_round` clients have
+            // completed (over-selected extras are cut — that is what
+            // over-selection buys), at the deadline, or when everyone has
+            // resolved; partial-async (quorum) closes on the first
+            // `frac × selected` completions.
+            let target = match self.scenario.aggregation {
+                Aggregation::Sync => self.cfg.per_round.min(selected.len()),
+                Aggregation::Quorum { frac } => {
+                    ((selected.len() as f64 * frac).ceil() as usize).clamp(1, selected.len())
+                }
+            };
+
+            // Run the round to its close. Events still pending at the close
+            // are CANCELLED, not fired: the coordinator stops listening, so
+            // those events never enter the stream and never advance the
+            // clock — which keeps the global event stream monotone across
+            // rounds.
+            let mut completed: Vec<usize> = Vec::new();
+            let mut dropped: Vec<usize> = Vec::new();
+            let mut close_t: Option<f64> = None;
+            while close_t.is_none() {
+                let ev = self
+                    .queue
+                    .pop()
+                    .expect("round cannot close: queue empty before the deadline");
+                report.push_event(SimEventRecord {
+                    time: ev.time,
+                    id: ev.id,
+                    round: ev.round,
+                    kind: ev.kind.name(),
+                    client: ev.kind.client(),
+                });
+                match &ev.kind {
+                    EventKind::ClientDone { client } => {
+                        completed.push(*client);
+                        if completed.len() >= target
+                            || completed.len() + dropped.len() == selected.len()
+                        {
+                            close_t = Some(ev.time);
+                        }
+                    }
+                    EventKind::ClientDropout { client } => {
+                        dropped.push(*client);
+                        if completed.len() + dropped.len() == selected.len() {
+                            close_t = Some(ev.time);
+                        }
+                    }
+                    EventKind::Deadline => {
+                        close_t = Some(ev.time);
+                    }
+                }
+            }
+            let close_t = close_t.expect("loop exits only with a close time");
+            self.queue.cancel_all();
+            // Everything selected but neither completed nor dropped by the
+            // close was cut in flight: timed out. (Bool-vec membership keeps
+            // this O(selected), not O(selected²), at fleet scale.)
+            let mut resolved = vec![false; n];
+            for &c in completed.iter().chain(&dropped) {
+                resolved[c] = true;
+            }
+            let timed_out: Vec<usize> = launched
+                .iter()
+                .map(|(c, _)| *c)
+                .filter(|&c| !resolved[c])
+                .collect();
+            debug_assert_eq!(
+                completed.len() + dropped.len() + timed_out.len(),
+                selected.len(),
+                "client terminal states must partition the selection"
+            );
+
+            // FedAvg over the completed updates (sample-count weighted).
+            let aggregated = !completed.is_empty();
+            if aggregated {
+                let updates: Vec<(Vec<f32>, f64)> = completed
+                    .iter()
+                    .map(|&cid| {
+                        (
+                            self.client_update(cid, round),
+                            self.partition.clients[cid].n_samples as f64,
+                        )
+                    })
+                    .collect();
+                self.global = fedavg(&updates)?;
+                for &cid in &completed {
+                    self.completed_ever[cid] = true;
+                    self.last_loss[cid] = Some(self.observed_loss(cid, round));
+                }
+            }
+
+            // Wall-clock breakdown: the round's training segment is gated by
+            // the last completion; any tail beyond it (waiting out dropouts
+            // or the deadline) is `wait`.
+            let gating = completed
+                .last()
+                .map(|&cid| launched.iter().find(|(c, _)| *c == cid).unwrap().1);
+            let (compute_secs, upload_secs) =
+                gating.map(|l| (l.compute, l.upload)).unwrap_or((0.0, 0.0));
+            let wait_secs = match gating {
+                Some(l) => (close_t - l.done_t).max(0.0),
+                None => close_t - t_sel,
+            };
+            self.clock = close_t;
+            report.push_round(RoundReport {
+                round,
+                t_start,
+                t_end: close_t,
+                round_secs: close_t - t_start,
+                refresh_secs,
+                selection_secs,
+                compute_secs,
+                upload_secs,
+                wait_secs,
+                selected: selected.len(),
+                completed: completed.len(),
+                dropped: dropped.len(),
+                timed_out: timed_out.len(),
+                refresh_recomputed,
+                aggregated,
+                coverage: coverage(&self.completed_ever),
+            });
+        }
+        Ok(report)
+    }
+}
+
+fn coverage(completed_ever: &[bool]) -> f64 {
+    completed_ever.iter().filter(|&&c| c).count() as f64 / completed_ever.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::scenario::Scenario;
+
+    #[test]
+    fn queue_orders_by_time_then_id() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, 0, EventKind::Deadline);
+        q.schedule(1.0, 0, EventKind::ClientDone { client: 3 });
+        q.schedule(1.0, 0, EventKind::ClientDropout { client: 4 });
+        q.schedule(0.5, 0, EventKind::ClientDone { client: 5 });
+        let order: Vec<(f64, u64)> = std::iter::from_fn(|| q.pop().map(|e| (e.time, e.id)))
+            .collect();
+        assert_eq!(order, vec![(0.5, 3), (1.0, 1), (1.0, 2), (2.0, 0)]);
+    }
+
+    #[test]
+    fn queue_pops_are_monotone_under_interleaved_scheduling() {
+        let mut q = EventQueue::new();
+        let mut rng = Rng::new(5);
+        let mut last = 0.0f64;
+        q.schedule(0.0, 0, EventKind::Deadline);
+        for _ in 0..200 {
+            let e = q.pop().unwrap();
+            assert!(e.time >= last);
+            last = e.time;
+            // Schedule 1-2 future events relative to the popped time.
+            for _ in 0..1 + (rng.below(2) as usize) {
+                if q.len() < 64 {
+                    q.schedule(e.time + rng.f64(), 0, EventKind::Deadline);
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "before the clock")]
+    fn queue_rejects_scheduling_into_the_past() {
+        let mut q = EventQueue::new();
+        q.schedule(5.0, 0, EventKind::Deadline);
+        q.pop().unwrap();
+        q.schedule(1.0, 0, EventKind::Deadline);
+    }
+
+    #[test]
+    fn selection_cost_model_is_positive_and_policy_dependent() {
+        for name in crate::selection::STRATEGY_NAMES {
+            assert!(selection_model_secs(name, 1000, 10) > 0.0, "{name}");
+        }
+        assert!(
+            selection_model_secs("oort", 100_000, 10)
+                > selection_model_secs("round_robin", 100_000, 10)
+        );
+    }
+
+    fn smoke_cfg() -> SimConfig {
+        SimConfig {
+            n_clients: 30,
+            rounds: 4,
+            per_round: 6,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn simulator_classifies_every_selected_client() {
+        for name in ["sync_baseline", "straggler_cut", "partial_async"] {
+            let sc = Scenario::by_name(name).unwrap();
+            let rep = Simulator::new(smoke_cfg(), sc).unwrap().run().unwrap();
+            assert_eq!(rep.rounds.len(), 4, "{name}");
+            for r in &rep.rounds {
+                assert_eq!(
+                    r.completed + r.dropped + r.timed_out,
+                    r.selected,
+                    "{name} round {} leaked a client",
+                    r.round
+                );
+                assert!(r.round_secs >= 0.0 && r.t_end >= r.t_start);
+                let parts = r.refresh_secs
+                    + r.selection_secs
+                    + r.compute_secs
+                    + r.upload_secs
+                    + r.wait_secs;
+                assert!(
+                    (parts - r.round_secs).abs() < 1e-9 * r.round_secs.max(1.0),
+                    "{name} round {}: breakdown {parts} != round {}",
+                    r.round,
+                    r.round_secs
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sim_clock_is_monotone_and_coverage_nondecreasing() {
+        let sc = Scenario::by_name("sync_baseline").unwrap();
+        let rep = Simulator::new(smoke_cfg(), sc).unwrap().run().unwrap();
+        let mut last_end = 0.0;
+        let mut last_cov = 0.0;
+        for r in &rep.rounds {
+            assert!(r.t_start >= last_end - 1e-12);
+            assert!(r.t_end >= r.t_start);
+            assert!(r.coverage >= last_cov);
+            assert!((0.0..=1.0).contains(&r.coverage));
+            last_end = r.t_end;
+            last_cov = r.coverage;
+        }
+        assert!(last_cov > 0.0, "nothing ever completed");
+    }
+
+    #[test]
+    fn cluster_policy_charges_refresh_on_refresh_rounds_only() {
+        let cfg = SimConfig { refresh_every: 2, ..smoke_cfg() };
+        let sc = Scenario::by_name("sync_baseline").unwrap();
+        let rep = Simulator::new(cfg, sc).unwrap().run().unwrap();
+        for r in &rep.rounds {
+            if r.round % 2 == 0 {
+                assert!(r.refresh_secs > 0.0, "round {} missed its refresh", r.round);
+            } else {
+                assert_eq!(r.refresh_secs, 0.0, "round {} charged a refresh", r.round);
+            }
+        }
+        // Non-cluster policies never pay refresh.
+        let cfg = SimConfig { policy: "random".into(), ..smoke_cfg() };
+        let rep = Simulator::new(cfg, Scenario::by_name("sync_baseline").unwrap())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(rep.rounds.iter().all(|r| r.refresh_secs == 0.0));
+    }
+
+    #[test]
+    fn quorum_closes_no_later_than_sync() {
+        let sync = Simulator::new(smoke_cfg(), Scenario::by_name("sync_baseline").unwrap())
+            .unwrap()
+            .run()
+            .unwrap();
+        let mut sc = Scenario::by_name("sync_baseline").unwrap();
+        sc.aggregation = Aggregation::Quorum { frac: 0.5 };
+        let quorum = Simulator::new(smoke_cfg(), sc).unwrap().run().unwrap();
+        let t_sync = sync.rounds.last().unwrap().t_end;
+        let t_q = quorum.rounds.last().unwrap().t_end;
+        assert!(t_q <= t_sync + 1e-9, "quorum ran longer than sync: {t_q} vs {t_sync}");
+    }
+
+    #[test]
+    fn dropouts_are_counted_and_cut_into_completions() {
+        let mut sc = Scenario::by_name("sync_baseline").unwrap();
+        sc.dropout_rate = 0.5;
+        let rep = Simulator::new(smoke_cfg(), sc).unwrap().run().unwrap();
+        let dropped: usize = rep.rounds.iter().map(|r| r.dropped).sum();
+        assert!(dropped > 0, "50% dropout produced zero drops");
+    }
+
+    #[test]
+    fn non_cluster_policies_run_without_the_aot_runtime() {
+        // An artifact-backed summary engine is irrelevant to policies that
+        // never refresh; construction must not demand the runtime.
+        let cfg = SimConfig {
+            policy: "random".into(),
+            summary: "encoder".into(),
+            ..smoke_cfg()
+        };
+        let rep = Simulator::new(cfg, Scenario::by_name("sync_baseline").unwrap())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(rep.rounds.len(), 4);
+    }
+
+    #[test]
+    fn rejects_degenerate_configs() {
+        let sc = Scenario::by_name("sync_baseline").unwrap();
+        assert!(Simulator::new(SimConfig { rounds: 0, ..Default::default() }, sc.clone()).is_err());
+        assert!(
+            Simulator::new(SimConfig { per_round: 0, ..Default::default() }, sc.clone()).is_err()
+        );
+        assert!(
+            Simulator::new(SimConfig { policy: "nope".into(), ..Default::default() }, sc.clone())
+                .is_err()
+        );
+        // per_round > fleet is a validation error, not a clamp panic.
+        assert!(Simulator::new(
+            SimConfig { n_clients: 20, per_round: 30, ..Default::default() },
+            sc
+        )
+        .is_err());
+    }
+}

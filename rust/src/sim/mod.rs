@@ -1,0 +1,30 @@
+//! Discrete-event fleet simulator (the end-to-end overhead study): composes
+//! the device heterogeneity model (`device/`), every selection strategy
+//! (`selection/`), the streaming refresh pipeline + `SummaryStore`
+//! (`coordinator/`), FedAvg, and drift (`data/drift`) into full FL rounds
+//! on one simulated wall clock — so a selection strategy's *own* overhead
+//! (summary time, clustering time, ranking time) competes with training and
+//! upload time exactly as in the paper's Table-3-style study.
+//!
+//! * [`engine`] — the tie-broken binary-heap event queue and the
+//!   [`Simulator`] round loop (availability → selection → over-selection
+//!   with deadlines, stragglers and dropouts → FedAvg → drift-triggered
+//!   incremental refresh).
+//! * [`scenario`] — the named scenario catalog (`sync_baseline`,
+//!   `straggler_cut`, `partial_async`, `diurnal`, `flash_crowd`,
+//!   `heavy_tail`, `drift_burst`).
+//! * [`report`] — per-round JSONL, the popped-event stream, and the
+//!   aggregate entries `results/BENCH_sim.json` is built from.
+//!
+//! Everything is deterministic in the run seed: the event stream, round
+//! reports and digests are bitwise identical across reruns and refresh
+//! thread counts (`rust/tests/determinism.rs` enforces it; event-queue
+//! invariants are fuzzed in `rust/tests/proptests.rs`).
+
+pub mod engine;
+pub mod report;
+pub mod scenario;
+
+pub use engine::{selection_model_secs, Event, EventKind, EventQueue, Simulator, UPDATE_DIM};
+pub use report::{bench_json, RoundReport, SimEventRecord, SimReport, SimTotals};
+pub use scenario::{Aggregation, AvailabilityModel, Scenario, StragglerModel};

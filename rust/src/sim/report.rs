@@ -1,0 +1,397 @@
+//! Simulation reporting: per-round wall-clock breakdowns, the popped-event
+//! stream, JSONL writers, and the aggregate entries `benches/sim_overhead`
+//! assembles into `results/BENCH_sim.json`.
+//!
+//! All JSON is hand-rolled (no serde offline). Every f64 is printed with
+//! Rust's shortest-round-trip `Display`, so two reports serialize to equal
+//! bytes **iff** the underlying f64s are bitwise equal — that is what lets
+//! the determinism suite compare event streams as strings and what makes
+//! "identical `BENCH_sim.json` event digests across thread counts" a
+//! meaningful check.
+
+use std::io::Write;
+
+/// One popped event, in pop order (the canonical event stream).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimEventRecord {
+    pub time: f64,
+    pub id: u64,
+    pub round: usize,
+    pub kind: &'static str,
+    pub client: Option<usize>,
+}
+
+impl SimEventRecord {
+    pub fn to_json(&self) -> String {
+        let client = match self.client {
+            Some(c) => c.to_string(),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"type\":\"event\",\"t\":{},\"id\":{},\"round\":{},\"kind\":\"{}\",\"client\":{}}}",
+            self.time, self.id, self.round, self.kind, client
+        )
+    }
+}
+
+/// One round's record: where the simulated wall clock went.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundReport {
+    pub round: usize,
+    pub t_start: f64,
+    pub t_end: f64,
+    pub round_secs: f64,
+    /// Coordinator overhead: modeled fleet summarization + clustering.
+    pub refresh_secs: f64,
+    /// Coordinator overhead: modeled policy ranking cost.
+    pub selection_secs: f64,
+    /// The gating (last aggregated) client's local-training segment.
+    pub compute_secs: f64,
+    /// The gating client's upload segment.
+    pub upload_secs: f64,
+    /// Tail past the last aggregated completion (deadline/dropout waits).
+    pub wait_secs: f64,
+    pub selected: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    pub timed_out: usize,
+    /// Clients re-summarized by this round's refresh (0 = no refresh).
+    pub refresh_recomputed: usize,
+    /// Did FedAvg run (at least one completion)?
+    pub aggregated: bool,
+    /// Cumulative fraction of the fleet that has ever completed a round.
+    pub coverage: f64,
+}
+
+impl RoundReport {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"type\":\"round\",\"round\":{},\"t_start\":{},\"t_end\":{},\"round_secs\":{},\
+             \"refresh_secs\":{},\"selection_secs\":{},\"compute_secs\":{},\"upload_secs\":{},\
+             \"wait_secs\":{},\"selected\":{},\"completed\":{},\"dropped\":{},\"timed_out\":{},\
+             \"refresh_recomputed\":{},\"aggregated\":{},\"coverage\":{}}}",
+            self.round,
+            self.t_start,
+            self.t_end,
+            self.round_secs,
+            self.refresh_secs,
+            self.selection_secs,
+            self.compute_secs,
+            self.upload_secs,
+            self.wait_secs,
+            self.selected,
+            self.completed,
+            self.dropped,
+            self.timed_out,
+            self.refresh_recomputed,
+            self.aggregated,
+            self.coverage
+        )
+    }
+}
+
+/// Whole-run aggregate (what the bench compares across strategies).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SimTotals {
+    pub sim_secs: f64,
+    pub refresh_secs: f64,
+    pub selection_secs: f64,
+    pub compute_secs: f64,
+    pub upload_secs: f64,
+    pub wait_secs: f64,
+    pub selected: usize,
+    pub completed: usize,
+    pub dropped: usize,
+    pub timed_out: usize,
+    pub aggregated_rounds: usize,
+    /// Final cumulative coverage.
+    pub coverage: f64,
+}
+
+/// A full simulation run: config echo, per-round records, event stream.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub scenario: String,
+    pub policy: String,
+    pub n_clients: usize,
+    pub per_round: usize,
+    pub planned_rounds: usize,
+    pub seed: u64,
+    pub rounds: Vec<RoundReport>,
+    pub events: Vec<SimEventRecord>,
+}
+
+impl SimReport {
+    pub fn new(
+        scenario: &str,
+        policy: &str,
+        n_clients: usize,
+        per_round: usize,
+        planned_rounds: usize,
+        seed: u64,
+    ) -> Self {
+        SimReport {
+            scenario: scenario.to_string(),
+            policy: policy.to_string(),
+            n_clients,
+            per_round,
+            planned_rounds,
+            seed,
+            rounds: Vec::new(),
+            events: Vec::new(),
+        }
+    }
+
+    pub fn push_round(&mut self, r: RoundReport) {
+        self.rounds.push(r);
+    }
+
+    pub fn push_event(&mut self, e: SimEventRecord) {
+        self.events.push(e);
+    }
+
+    pub fn totals(&self) -> SimTotals {
+        let mut t = SimTotals::default();
+        for r in &self.rounds {
+            t.sim_secs += r.round_secs;
+            t.refresh_secs += r.refresh_secs;
+            t.selection_secs += r.selection_secs;
+            t.compute_secs += r.compute_secs;
+            t.upload_secs += r.upload_secs;
+            t.wait_secs += r.wait_secs;
+            t.selected += r.selected;
+            t.completed += r.completed;
+            t.dropped += r.dropped;
+            t.timed_out += r.timed_out;
+            t.aggregated_rounds += r.aggregated as usize;
+            t.coverage = r.coverage;
+        }
+        t
+    }
+
+    /// The event stream as JSONL — the determinism oracle's subject.
+    pub fn events_jsonl(&self) -> String {
+        let mut s = String::with_capacity(self.events.len() * 80);
+        for e in &self.events {
+            s.push_str(&e.to_json());
+            s.push('\n');
+        }
+        s
+    }
+
+    /// FNV-1a 64 over the serialized event stream: a compact fingerprint
+    /// quoted in `BENCH_sim.json` so thread-count invariance is checkable
+    /// from the artifact alone.
+    pub fn event_digest(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in self.events_jsonl().bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3); // FNV-1a 64 prime
+        }
+        h
+    }
+
+    fn header_json(&self) -> String {
+        format!(
+            "{{\"type\":\"sim\",\"scenario\":\"{}\",\"policy\":\"{}\",\"n_clients\":{},\
+             \"per_round\":{},\"rounds\":{},\"seed\":{},\"event_digest\":\"{:#018x}\"}}",
+            self.scenario,
+            self.policy,
+            self.n_clients,
+            self.per_round,
+            self.planned_rounds,
+            self.seed,
+            self.event_digest()
+        )
+    }
+
+    /// Write the full report as JSONL: one `sim` header line, one `round`
+    /// line per round, one `event` line per popped event.
+    pub fn write_jsonl(&self, path: &str) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "{}", self.header_json())?;
+        for r in &self.rounds {
+            writeln!(f, "{}", r.to_json())?;
+        }
+        for e in &self.events {
+            writeln!(f, "{}", e.to_json())?;
+        }
+        Ok(())
+    }
+
+    /// One aggregate entry for `BENCH_sim.json` (`host_secs` is the real
+    /// wall-clock the run took — the only non-deterministic field, kept so
+    /// the artifact also answers "what does simulating this cost us").
+    pub fn bench_entry_json(&self, host_secs: f64) -> String {
+        let t = self.totals();
+        format!(
+            "{{\"scenario\": \"{}\", \"policy\": \"{}\", \"n\": {}, \"rounds\": {}, \
+             \"sim_secs\": {}, \"refresh_secs\": {}, \"selection_secs\": {}, \
+             \"compute_secs\": {}, \"upload_secs\": {}, \"wait_secs\": {}, \
+             \"selected\": {}, \"completed\": {}, \"dropped\": {}, \"timed_out\": {}, \
+             \"aggregated_rounds\": {}, \"coverage\": {:.6}, \
+             \"event_digest\": \"{:#018x}\", \"host_secs\": {:.4}}}",
+            self.scenario,
+            self.policy,
+            self.n_clients,
+            self.rounds.len(),
+            t.sim_secs,
+            t.refresh_secs,
+            t.selection_secs,
+            t.compute_secs,
+            t.upload_secs,
+            t.wait_secs,
+            t.selected,
+            t.completed,
+            t.dropped,
+            t.timed_out,
+            t.aggregated_rounds,
+            t.coverage,
+            self.event_digest(),
+            host_secs
+        )
+    }
+}
+
+/// Assemble `BENCH_sim.json` from per-run entries (the bench, `make
+/// sim-smoke` and the CI artifact all go through this one shape).
+pub fn bench_json(entries: &[String]) -> String {
+    let mut s = String::from("{\n  \"runs\": [\n");
+    for (i, e) in entries.iter().enumerate() {
+        s.push_str("    ");
+        s.push_str(e);
+        if i + 1 < entries.len() {
+            s.push(',');
+        }
+        s.push('\n');
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round(n: usize) -> RoundReport {
+        RoundReport {
+            round: n,
+            t_start: n as f64,
+            t_end: n as f64 + 1.5,
+            round_secs: 1.5,
+            refresh_secs: 0.25,
+            selection_secs: 0.05,
+            compute_secs: 1.0,
+            upload_secs: 0.1,
+            wait_secs: 0.1,
+            selected: 8,
+            completed: 6,
+            dropped: 1,
+            timed_out: 1,
+            refresh_recomputed: 10,
+            aggregated: true,
+            coverage: 0.1 * (n + 1) as f64,
+        }
+    }
+
+    fn report() -> SimReport {
+        let mut rep = SimReport::new("sync_baseline", "cluster", 50, 8, 2, 1);
+        rep.push_round(round(0));
+        rep.push_round(round(1));
+        rep.push_event(SimEventRecord {
+            time: 0.5,
+            id: 0,
+            round: 0,
+            kind: "client_done",
+            client: Some(3),
+        });
+        rep.push_event(SimEventRecord {
+            time: 1.5,
+            id: 1,
+            round: 0,
+            kind: "deadline",
+            client: None,
+        });
+        rep
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let t = report().totals();
+        assert_eq!(t.selected, 16);
+        assert_eq!(t.completed, 12);
+        assert_eq!(t.dropped, 2);
+        assert_eq!(t.timed_out, 2);
+        assert_eq!(t.aggregated_rounds, 2);
+        assert!((t.sim_secs - 3.0).abs() < 1e-12);
+        assert!((t.coverage - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_lines_are_well_shaped() {
+        let rep = report();
+        let r = rep.rounds[0].to_json();
+        assert!(r.starts_with('{') && r.ends_with('}'));
+        assert!(r.contains("\"type\":\"round\""));
+        assert!(r.contains("\"refresh_secs\":0.25"));
+        let e = rep.events[1].to_json();
+        assert!(e.contains("\"kind\":\"deadline\"") && e.contains("\"client\":null"));
+        assert!(rep.events[0].to_json().contains("\"client\":3"));
+    }
+
+    #[test]
+    fn event_digest_is_standard_fnv1a64() {
+        // The artifact advertises a standard FNV-1a 64; pin the offset basis
+        // (empty stream) and an independently computed reference value so
+        // the constants cannot silently regress.
+        let empty = SimReport::new("s", "p", 1, 1, 0, 0);
+        assert_eq!(empty.event_digest(), 0xcbf2_9ce4_8422_2325);
+        let mut one = SimReport::new("s", "p", 1, 1, 0, 0);
+        one.push_event(SimEventRecord {
+            time: 0.5,
+            id: 0,
+            round: 0,
+            kind: "client_done",
+            client: Some(3),
+        });
+        assert_eq!(one.event_digest(), 0x719e_847b_6435_d85b);
+    }
+
+    #[test]
+    fn event_digest_tracks_stream_content() {
+        let a = report();
+        let b = report();
+        assert_eq!(a.event_digest(), b.event_digest());
+        let mut c = report();
+        c.events[0].time = 0.5000001;
+        assert_ne!(a.event_digest(), c.event_digest());
+    }
+
+    #[test]
+    fn writer_produces_header_rounds_events() {
+        let rep = report();
+        let path = std::env::temp_dir().join("feddde_sim_report.jsonl");
+        rep.write_jsonl(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1 + 2 + 2);
+        assert!(lines[0].contains("\"type\":\"sim\""));
+        assert!(lines[0].contains("\"event_digest\""));
+        assert!(lines[1].contains("\"type\":\"round\""));
+        assert!(lines[3].contains("\"type\":\"event\""));
+    }
+
+    #[test]
+    fn bench_json_shape() {
+        let entries = vec![
+            report().bench_entry_json(0.1),
+            report().bench_entry_json(0.2),
+        ];
+        let s = bench_json(&entries);
+        assert!(s.starts_with("{\n  \"runs\": [\n"));
+        assert!(s.trim_end().ends_with('}'));
+        assert_eq!(s.matches("\"scenario\"").count(), 2);
+        // A separating comma between the two run entries.
+        assert!(s.contains("},\n"));
+    }
+}

@@ -1,0 +1,312 @@
+//! Declarative scenario catalog for the fleet simulator: each named
+//! scenario bundles an aggregation rule, an availability model, a straggler
+//! model, dropout/over-selection/deadline knobs and a drift schedule. The
+//! `run-sim` CLI, `benches/sim_overhead` and the test suites all resolve
+//! scenarios through [`Scenario::by_name`] / [`Scenario::catalog`], so a new
+//! scenario added here is immediately runnable everywhere.
+//!
+//! Adding a scenario: append an arm to [`Scenario::by_name`] (start from
+//! [`Scenario::baseline`]), add its name to [`Scenario::NAMES`], and say in
+//! the blurb what question the scenario answers. Every knob is a plain
+//! field — no trait objects — so scenarios stay diffable data.
+
+use crate::data::drift::DriftSchedule;
+use crate::device::DeviceProfile;
+use crate::util::rng::Rng;
+
+/// Substream salts for scenario-owned randomness (disjoint from the
+/// engine's and the device model's).
+const SALT_WAVE: u64 = 0x3A7E;
+const SALT_CROWD: u64 = 0xC207;
+const SALT_TAIL: u64 = 0x7A11;
+
+/// When the server closes a round and aggregates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Aggregation {
+    /// Close once `per_round` clients have completed, at the deadline, or
+    /// when every selected client has resolved — whichever comes first.
+    /// Over-selected extras still in flight at the close are cut
+    /// (timed-out); that is what over-selection buys.
+    Sync,
+    /// Partial-async: close as soon as `frac` of the selected clients have
+    /// completed (FedBuff-style buffered aggregation, deadline still armed).
+    Quorum { frac: f64 },
+}
+
+/// How per-round device availability is drawn.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AvailabilityModel {
+    /// Each device's own `availability` probability, i.i.d. per round.
+    Base,
+    /// Diurnal wave: availability scaled by `1 + amplitude·sin(2π·round/period)`
+    /// — fleets breathe as timezones sleep and wake.
+    Diurnal { period: usize, amplitude: f64 },
+    /// Flash crowd: a hash-chosen `frac` of the fleet exists only in rounds
+    /// `[join_round, leave_round)` (app-launch churn).
+    FlashCrowd { join_round: usize, leave_round: usize, frac: f64 },
+}
+
+/// Extra per-(client, round) compute slowdowns beyond the static profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StragglerModel {
+    Off,
+    /// A `frac` of launches draw a lognormal slowdown (thermal throttling,
+    /// background load) — the heavy tail the deadline exists to cut.
+    HeavyTail { frac: f64, mult_mu: f64, mult_sigma: f64 },
+}
+
+/// One named simulation scenario (see module docs for the extension guide).
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub blurb: &'static str,
+    pub aggregation: Aggregation,
+    pub availability: AvailabilityModel,
+    pub straggler: StragglerModel,
+    /// Per-launch probability a selected client drops mid-round.
+    pub dropout_rate: f64,
+    /// Selection multiplier (≥ 1): select `ceil(per_round × over_select)`.
+    pub over_select: f64,
+    /// Deadline percentile over the *expected* durations of the selected
+    /// set (100 = the slowest expected client; stragglers still overshoot).
+    pub deadline_pct: f64,
+    pub drift: DriftSchedule,
+    /// Refresh cadence override (0 = use the run config's `refresh_every`).
+    pub refresh_every_override: usize,
+}
+
+impl Scenario {
+    /// Catalog names, in presentation order.
+    pub const NAMES: [&'static str; 7] = [
+        "sync_baseline",
+        "straggler_cut",
+        "partial_async",
+        "diurnal",
+        "flash_crowd",
+        "heavy_tail",
+        "drift_burst",
+    ];
+
+    /// The neutral starting point every catalog entry derives from.
+    pub fn baseline(name: &str, blurb: &'static str) -> Self {
+        Scenario {
+            name: name.to_string(),
+            blurb,
+            aggregation: Aggregation::Sync,
+            availability: AvailabilityModel::Base,
+            straggler: StragglerModel::Off,
+            dropout_rate: 0.0,
+            over_select: 1.0,
+            deadline_pct: 100.0,
+            drift: DriftSchedule::none(),
+            refresh_every_override: 0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Self> {
+        Some(match name {
+            "sync_baseline" => {
+                Self::baseline("sync_baseline", "synchronous rounds, no cuts — the control")
+            }
+            "straggler_cut" => Scenario {
+                over_select: 1.5,
+                deadline_pct: 70.0,
+                ..Self::baseline(
+                    "straggler_cut",
+                    "over-select 1.5x, cut at the p70 expected duration",
+                )
+            },
+            "partial_async" => Scenario {
+                aggregation: Aggregation::Quorum { frac: 0.6 },
+                over_select: 1.5,
+                ..Self::baseline(
+                    "partial_async",
+                    "buffered aggregation: close on the first 60% of completions",
+                )
+            },
+            "diurnal" => Scenario {
+                availability: AvailabilityModel::Diurnal { period: 12, amplitude: 0.6 },
+                over_select: 1.2,
+                deadline_pct: 90.0,
+                ..Self::baseline("diurnal", "availability waves with a 12-round day")
+            },
+            "flash_crowd" => Scenario {
+                availability: AvailabilityModel::FlashCrowd {
+                    join_round: 3,
+                    leave_round: 12,
+                    frac: 0.5,
+                },
+                dropout_rate: 0.05,
+                over_select: 1.2,
+                ..Self::baseline(
+                    "flash_crowd",
+                    "half the fleet joins at round 3 and churns out at round 12",
+                )
+            },
+            "heavy_tail" => Scenario {
+                straggler: StragglerModel::HeavyTail {
+                    frac: 0.15,
+                    mult_mu: 8.0f64.ln(),
+                    mult_sigma: 0.75,
+                },
+                over_select: 1.3,
+                deadline_pct: 95.0,
+                dropout_rate: 0.02,
+                ..Self::baseline(
+                    "heavy_tail",
+                    "15% of launches draw an ~8x lognormal slowdown; deadline cuts the tail",
+                )
+            },
+            "drift_burst" => Scenario {
+                drift: DriftSchedule::bursts(2, 3, 4, 0.5),
+                over_select: 1.2,
+                deadline_pct: 95.0,
+                refresh_every_override: 3,
+                ..Self::baseline(
+                    "drift_burst",
+                    "drift hits half the fleet every 3 rounds; incremental refresh keeps up",
+                )
+            },
+            _ => return None,
+        })
+    }
+
+    /// The whole catalog, in [`Scenario::NAMES`] order.
+    pub fn catalog() -> Vec<Scenario> {
+        Self::NAMES
+            .iter()
+            .map(|n| Self::by_name(n).expect("catalog name missing"))
+            .collect()
+    }
+
+    /// Effective refresh cadence given the run config's value.
+    pub fn refresh_every(&self, cfg_refresh_every: usize) -> usize {
+        if self.refresh_every_override > 0 {
+            self.refresh_every_override
+        } else {
+            cfg_refresh_every
+        }
+    }
+
+    /// Is `dev` reachable & idle at `round` under this scenario?
+    /// Deterministic in `(seed, device, round)`.
+    pub fn available(&self, dev: &DeviceProfile, round: usize, seed: u64) -> bool {
+        match self.availability {
+            AvailabilityModel::Base => dev.available(round, seed),
+            AvailabilityModel::Diurnal { period, amplitude } => {
+                let period = period.max(1);
+                let phase =
+                    2.0 * std::f64::consts::PI * (round % period) as f64 / period as f64;
+                let p = (dev.availability * (1.0 + amplitude * phase.sin())).clamp(0.0, 1.0);
+                let mut rng = Rng::substream(
+                    seed,
+                    &[SALT_WAVE, dev.device_id as u64, round as u64],
+                );
+                rng.f64() < p
+            }
+            AvailabilityModel::FlashCrowd { join_round, leave_round, frac } => {
+                let mut rng = Rng::substream(seed, &[SALT_CROWD, dev.device_id as u64]);
+                let churner = rng.f64() < frac;
+                if churner && !(join_round..leave_round).contains(&round) {
+                    false
+                } else {
+                    dev.available(round, seed)
+                }
+            }
+        }
+    }
+
+    /// Compute-slowdown multiplier for one launch (≥ 1). Deterministic in
+    /// `(seed, client, round)`.
+    pub fn straggler_mult(&self, client: usize, round: usize, seed: u64) -> f64 {
+        match self.straggler {
+            StragglerModel::Off => 1.0,
+            StragglerModel::HeavyTail { frac, mult_mu, mult_sigma } => {
+                let mut rng =
+                    Rng::substream(seed, &[SALT_TAIL, client as u64, round as u64]);
+                if rng.f64() < frac {
+                    rng.lognormal(mult_mu, mult_sigma).clamp(1.0, 200.0)
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::FleetModel;
+
+    #[test]
+    fn catalog_is_complete_and_named_consistently() {
+        let cat = Scenario::catalog();
+        assert_eq!(cat.len(), Scenario::NAMES.len());
+        for (sc, want) in cat.iter().zip(Scenario::NAMES) {
+            assert_eq!(sc.name, want);
+            assert!(!sc.blurb.is_empty());
+            assert!(sc.over_select >= 1.0);
+            assert!(sc.deadline_pct > 0.0 && sc.deadline_pct <= 100.0);
+            assert!((0.0..1.0).contains(&sc.dropout_rate));
+        }
+        assert!(Scenario::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn diurnal_wave_modulates_availability() {
+        let sc = Scenario::by_name("diurnal").unwrap();
+        let fleet = FleetModel::default().sample_fleet(400);
+        let frac_at = |round: usize| {
+            fleet.iter().filter(|d| sc.available(d, round, 7)).count() as f64 / 400.0
+        };
+        // Peak of the wave (sin ≈ 1 at round 3 of a 12-round period) vs the
+        // trough (round 9): availability must visibly swing.
+        assert!(
+            frac_at(3) > frac_at(9) + 0.2,
+            "diurnal wave flat: peak {} trough {}",
+            frac_at(3),
+            frac_at(9)
+        );
+    }
+
+    #[test]
+    fn flash_crowd_members_absent_outside_window() {
+        let sc = Scenario::by_name("flash_crowd").unwrap();
+        let fleet = FleetModel::default().sample_fleet(500);
+        let avail = |round: usize| fleet.iter().filter(|d| sc.available(d, round, 7)).count();
+        // Before the join round roughly half the fleet is gone.
+        let before = avail(0);
+        let during = avail(5);
+        assert!(
+            (during as f64) > (before as f64) * 1.5,
+            "crowd never joined: before={before} during={during}"
+        );
+        assert!(avail(20) < during, "crowd never left");
+    }
+
+    #[test]
+    fn heavy_tail_stragglers_are_rare_but_large_and_deterministic() {
+        let sc = Scenario::by_name("heavy_tail").unwrap();
+        let mults: Vec<f64> =
+            (0..2000).map(|c| sc.straggler_mult(c, 1, 9)).collect();
+        let again: Vec<f64> = (0..2000).map(|c| sc.straggler_mult(c, 1, 9)).collect();
+        assert_eq!(mults, again, "straggler draw not deterministic");
+        let slow = mults.iter().filter(|&&m| m > 1.0).count();
+        let frac = slow as f64 / 2000.0;
+        assert!((frac - 0.15).abs() < 0.04, "straggler frac {frac}");
+        let maxm = mults.iter().cloned().fold(1.0, f64::max);
+        assert!(maxm > 4.0, "tail too light: max mult {maxm}");
+        let sc0 = Scenario::by_name("sync_baseline").unwrap();
+        assert_eq!(sc0.straggler_mult(3, 1, 9), 1.0);
+    }
+
+    #[test]
+    fn drift_burst_schedule_and_refresh_override() {
+        let sc = Scenario::by_name("drift_burst").unwrap();
+        assert_eq!(sc.drift.change_rounds, vec![2, 5, 8, 11]);
+        assert_eq!(sc.refresh_every(5), 3, "override must win");
+        let base = Scenario::by_name("sync_baseline").unwrap();
+        assert_eq!(base.refresh_every(5), 5, "no override falls back to cfg");
+    }
+}

@@ -101,6 +101,29 @@ pub trait SummaryEngine: Send + Sync {
     fn model_host_secs(&self, n_samples: usize) -> f64;
 }
 
+/// Canonical registry of summary-engine names (`--summary` on the CLI,
+/// `summary` in the config, the simulator's engine knob).
+pub const ENGINE_NAMES: [&str; 4] = ["encoder", "py", "pxy", "jl"];
+
+/// The one summary-engine factory shared by the CLI, the coordinator, and
+/// the fleet simulator (DP wrapping stays at the call site — it composes on
+/// top of any base engine).
+pub fn by_name(
+    name: &str,
+    spec: &crate::data::spec::DatasetSpec,
+) -> Result<Box<dyn SummaryEngine>> {
+    Ok(match name {
+        "encoder" => Box::new(EncoderSummary::new(spec)),
+        "py" => Box::new(PySummary::new(spec)),
+        "pxy" => Box::new(PxySummary::new(spec)),
+        "jl" => Box::new(JlSummary::new(spec)),
+        other => anyhow::bail!(
+            "unknown summary engine {other:?} (known: {})",
+            ENGINE_NAMES.join(", ")
+        ),
+    })
+}
+
 /// Assemble the paper's flat summary from per-label feature sums + counts —
 /// shared by the pure-Rust engines (JL/PCA) and used as the oracle in tests.
 /// Layout matches `python/compile/kernels/summary.py::summary_from_moments`:
@@ -141,5 +164,15 @@ mod tests {
         let s = assemble_summary(&[0.0; 4], &[0.0; 2], 2, 2);
         assert!(s.iter().all(|&v| v == 0.0));
         assert_eq!(s.len(), 6);
+    }
+
+    #[test]
+    fn engine_registry_builds_every_name() {
+        let spec = crate::data::spec::DatasetSpec::tiny();
+        for name in ENGINE_NAMES {
+            let e = by_name(name, &spec).unwrap();
+            assert!(e.dim() > 0, "{name} has zero dim");
+        }
+        assert!(by_name("nope", &spec).is_err());
     }
 }

@@ -221,3 +221,91 @@ fn metrics_files_are_written() {
     assert_eq!(text.lines().count(), 3);
     assert!(text.contains("\"eval_accuracy\""));
 }
+
+// ---------------------------------------------------------------------------
+// Fleet simulator end-to-end (pure Rust — never skipped): at least three
+// named scenarios run full rounds, produce per-round wall-clock breakdowns,
+// and write well-formed JSONL + BENCH_sim.json-shaped aggregates.
+
+#[test]
+fn run_sim_executes_named_scenarios_end_to_end() {
+    use feddde::config::SimConfig;
+    use feddde::sim::{bench_json, Scenario, Simulator};
+
+    let dir = std::env::temp_dir().join("feddde_sim_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut entries = Vec::new();
+    for name in ["sync_baseline", "heavy_tail", "drift_burst", "partial_async"] {
+        let cfg = SimConfig {
+            n_clients: 40,
+            rounds: 5,
+            per_round: 8,
+            refresh_every: 2,
+            seed: 5,
+            ..Default::default()
+        };
+        let rep = Simulator::new(cfg, Scenario::by_name(name).unwrap())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(rep.rounds.len(), 5, "{name}");
+        let t = rep.totals();
+        assert!(t.sim_secs > 0.0, "{name}: no simulated time elapsed");
+        assert!(t.completed > 0, "{name}: nothing ever completed");
+        assert!(
+            t.refresh_secs > 0.0,
+            "{name}: cluster policy must pay refresh overhead"
+        );
+        assert!(t.selection_secs > 0.0, "{name}");
+        assert!(t.coverage > 0.0 && t.coverage <= 1.0, "{name}");
+        // Per-round breakdown components are non-negative and sum to the
+        // round's wall clock.
+        for r in &rep.rounds {
+            for part in [r.refresh_secs, r.selection_secs, r.compute_secs, r.upload_secs, r.wait_secs]
+            {
+                assert!(part >= 0.0, "{name} round {}: negative component", r.round);
+            }
+        }
+        let path = dir.join(format!("sim_{name}.jsonl"));
+        rep.write_jsonl(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() > 5 + 1, "{name}: JSONL too short");
+        assert!(text.lines().next().unwrap().contains(&format!("\"scenario\":\"{name}\"")));
+        entries.push(rep.bench_entry_json(0.0));
+    }
+    let agg = bench_json(&entries);
+    assert_eq!(agg.matches("\"scenario\"").count(), 4);
+    assert!(agg.contains("\"event_digest\""));
+    let out = dir.join("BENCH_sim.json");
+    std::fs::write(&out, agg).unwrap();
+    assert!(std::fs::metadata(&out).unwrap().len() > 0);
+}
+
+#[test]
+fn heavy_tail_scenario_cuts_more_stragglers_than_baseline() {
+    use feddde::config::SimConfig;
+    use feddde::sim::{Scenario, Simulator};
+
+    let cfg = || SimConfig {
+        n_clients: 60,
+        rounds: 6,
+        per_round: 12,
+        refresh_every: 0,
+        seed: 8,
+        ..Default::default()
+    };
+    let base = Simulator::new(cfg(), Scenario::by_name("sync_baseline").unwrap())
+        .unwrap()
+        .run()
+        .unwrap();
+    let tail = Simulator::new(cfg(), Scenario::by_name("heavy_tail").unwrap())
+        .unwrap()
+        .run()
+        .unwrap();
+    let base_cut = base.totals().timed_out + base.totals().dropped;
+    let tail_cut = tail.totals().timed_out + tail.totals().dropped;
+    assert!(
+        tail_cut > base_cut,
+        "heavy_tail cut {tail_cut} vs baseline {base_cut} — straggler model inert"
+    );
+}

@@ -3,11 +3,14 @@
 //! clusterings.
 
 use feddde::cluster::{dbscan, kmeans, ClusterBackend, Pruning};
+use feddde::config::SimConfig;
 use feddde::coordinator::fedavg::fedavg;
 use feddde::coordinator::{FleetRefresher, RefreshOptions};
 use feddde::data::{coreset, DatasetSpec, DriftSchedule, Generator, Partition};
 use feddde::device::FleetModel;
 use feddde::runtime::Engine;
+use feddde::selection::STRATEGY_NAMES;
+use feddde::sim::{Aggregation, AvailabilityModel, Scenario, Simulator, StragglerModel};
 use feddde::summary::JlSummary;
 use feddde::util::mat::Mat;
 use feddde::util::proptest::check;
@@ -460,5 +463,116 @@ fn generator_rejects_nothing_and_stays_in_range() {
         assert_eq!(ds.images.len(), ds.n * spec.flat_dim());
         assert!(ds.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
         assert!(ds.labels.iter().all(|&l| (l as usize) < spec.classes));
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Fleet-simulator fuzz: random scenarios must never violate the event-queue
+// contract (pops monotone in time, nothing fires before its round began) or
+// leak a client out of the completed/dropped/timed-out partition.
+
+#[test]
+fn sim_random_scenarios_preserve_event_and_client_invariants() {
+    check(8, |g| {
+        let mut sc = Scenario::baseline("fuzz", "randomized scenario");
+        sc.aggregation = if g.bool() {
+            Aggregation::Sync
+        } else {
+            Aggregation::Quorum { frac: g.f64_in(0.2, 0.9) }
+        };
+        sc.availability = match g.usize_in(0, 2) {
+            0 => AvailabilityModel::Base,
+            1 => AvailabilityModel::Diurnal {
+                period: g.usize_in(2, 10),
+                amplitude: g.f64_in(0.1, 0.8),
+            },
+            _ => AvailabilityModel::FlashCrowd {
+                join_round: g.usize_in(0, 2),
+                leave_round: g.usize_in(3, 6),
+                frac: g.f64_in(0.1, 0.6),
+            },
+        };
+        sc.straggler = if g.bool() {
+            StragglerModel::Off
+        } else {
+            StragglerModel::HeavyTail {
+                frac: g.f64_in(0.05, 0.4),
+                mult_mu: g.f64_in(0.5, 2.5),
+                mult_sigma: g.f64_in(0.2, 1.0),
+            }
+        };
+        sc.dropout_rate = g.f64_in(0.0, 0.5);
+        sc.over_select = g.f64_in(1.0, 2.0);
+        sc.deadline_pct = g.f64_in(50.0, 100.0);
+        if g.bool() {
+            sc.drift = DriftSchedule::at(vec![g.usize_in(1, 3)], g.f64_in(0.2, 1.0));
+        }
+        let cfg = SimConfig {
+            n_clients: g.usize_in(10, 50),
+            rounds: g.usize_in(2, 5),
+            per_round: g.usize_in(2, 8),
+            refresh_every: g.usize_in(0, 3),
+            policy: STRATEGY_NAMES[g.usize_in(0, STRATEGY_NAMES.len() - 1)].into(),
+            seed: 100 + g.case as u64,
+            ..Default::default()
+        };
+        let rounds = cfg.rounds;
+        let rep = Simulator::new(cfg, sc).unwrap().run().unwrap();
+
+        // Every selected client terminates in exactly one of the three
+        // states, rounds are well-formed, coverage is monotone.
+        assert_eq!(rep.rounds.len(), rounds);
+        let mut last_end = 0.0f64;
+        let mut last_cov = 0.0f64;
+        for r in &rep.rounds {
+            assert_eq!(
+                r.completed + r.dropped + r.timed_out,
+                r.selected,
+                "round {}: {} + {} + {} != {}",
+                r.round,
+                r.completed,
+                r.dropped,
+                r.timed_out,
+                r.selected
+            );
+            assert!(r.t_start >= last_end - 1e-12 && r.t_end >= r.t_start);
+            assert!(r.coverage >= last_cov && (0.0..=1.0).contains(&r.coverage));
+            let parts = r.refresh_secs
+                + r.selection_secs
+                + r.compute_secs
+                + r.upload_secs
+                + r.wait_secs;
+            assert!(
+                (parts - r.round_secs).abs() <= 1e-9 * r.round_secs.max(1.0),
+                "round {} breakdown mismatch",
+                r.round
+            );
+            last_end = r.t_end;
+            last_cov = r.coverage;
+        }
+
+        // Event stream: pops are globally monotone in time, ties broken so
+        // ids never regress at equal times, and no event fires before its
+        // round started.
+        let mut last_t = 0.0f64;
+        let mut last_id_at_t = None::<u64>;
+        for e in &rep.events {
+            assert!(e.time >= last_t, "event time ran backwards");
+            if e.time == last_t {
+                if let Some(prev) = last_id_at_t {
+                    assert!(e.id > prev, "tie-break violated at t={}", e.time);
+                }
+            }
+            let r = &rep.rounds[e.round];
+            assert!(
+                e.time >= r.t_start,
+                "round {} event at {} before round start {}",
+                e.round,
+                e.time,
+                r.t_start
+            );
+            last_id_at_t = Some(e.id);
+            last_t = e.time;
+        }
     });
 }
