@@ -1,7 +1,7 @@
 # FedDDE build orchestration. The Rust crate lives in rust/, the AOT
 # compiler (JAX + Pallas -> HLO text artifacts) in python/.
 
-.PHONY: artifacts build test bench bench-smoke sim-smoke python-test clean
+.PHONY: artifacts build test bench bench-smoke sim-smoke replay-smoke python-test clean
 
 # AOT-lower every JAX graph / Pallas kernel into rust/artifacts (manifest.tsv
 # + *.hlo.txt). Requires jax; runs on CPU.
@@ -41,6 +41,19 @@ sim-smoke:
 	cd rust && cargo bench --bench sim_overhead
 	@test -s rust/results/BENCH_sim.json
 	@echo "wrote rust/results/BENCH_sim.json"
+
+# Crash-recovery smoke: run both crash scenarios through the CLI. Each one
+# runs an uninterrupted twin, kills a second run at the scenario's crash
+# point (mid-append for mid_round_restart — the journal ends in a torn
+# line), recovers from the journal, resumes, and diffs the recovered
+# journal + event digests against the twin's; any mismatch fails the run.
+replay-smoke:
+	cd rust && cargo run --release -- run-sim \
+		--scenario coordinator_failure,mid_round_restart \
+		--clients 50 --rounds 6 --per-round 10 --out-dir results/replay
+	@test -s rust/results/replay/sim_coordinator_failure_cluster.journal
+	@test -s rust/results/replay/sim_mid_round_restart_cluster.journal
+	@echo "replay smoke ok: recovered digests matched the uninterrupted runs"
 
 clean:
 	cd rust && cargo clean

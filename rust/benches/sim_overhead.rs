@@ -22,16 +22,32 @@
 
 use feddde::config::SimConfig;
 use feddde::selection::STRATEGY_NAMES;
-use feddde::sim::{bench_json, Scenario, Simulator};
+use feddde::sim::{bench_json, run_with_recovery, Scenario, Simulator};
 use feddde::util::bench::full_scale;
+use feddde::util::cli::{CommandSpec, FlagSpec, Parsed};
+
+const SPEC: CommandSpec = CommandSpec {
+    name: "sim_overhead",
+    blurb: "end-to-end selection overhead via the fleet simulator",
+    flags: &[
+        FlagSpec::switch("full", "include the 10k-client scale (same as FEDDDE_BENCH_FULL=1)"),
+        FlagSpec::arg("out", "PATH", "aggregate JSON artifact (default results/BENCH_sim.json)"),
+    ],
+};
 
 fn run_one(cfg: SimConfig, scenario: &str) -> String {
     let sc = Scenario::by_name(scenario).expect("unknown scenario");
     let t0 = std::time::Instant::now();
-    let rep = Simulator::new(cfg, sc)
-        .expect("simulator construction")
-        .run()
-        .expect("simulation run");
+    // Crash scenarios charge the full kill → recover → resume protocol to
+    // the host clock (recovery overhead is exactly what they benchmark).
+    let rep = if sc.crash.is_some() {
+        run_with_recovery(cfg, sc).expect("crash/recovery run").report
+    } else {
+        Simulator::new(cfg, sc)
+            .expect("simulator construction")
+            .run()
+            .expect("simulation run")
+    };
     let host = t0.elapsed().as_secs_f64();
     let t = rep.totals();
     println!(
@@ -57,13 +73,25 @@ fn run_one(cfg: SimConfig, scenario: &str) -> String {
 }
 
 fn main() {
+    // Cargo passes through args after `--`; "--bench" also shows up when run
+    // via `cargo bench`, so drop non-flag noise before parsing.
+    let args: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| a.starts_with("--") && a != "--bench")
+        .collect();
+    let flags = Parsed::parse(&SPEC, &args).expect("bench flags");
+    if flags.help {
+        println!("{}", SPEC.help());
+        return;
+    }
+    let out = flags.get("out").unwrap_or("results/BENCH_sim.json").to_string();
     println!("sim_overhead — end-to-end selection overhead via the fleet simulator\n");
     std::fs::create_dir_all("results").ok();
     let mut entries: Vec<String> = Vec::new();
 
     // --- Section 1: strategy sweep at scale ---------------------------------
     let mut scales = vec![100usize, 1000];
-    if full_scale() {
+    if full_scale() || flags.has("full") {
         scales.push(10_000);
     }
     println!("== strategy sweep (scenario straggler_cut) ==");
@@ -97,7 +125,6 @@ fn main() {
         entries.push(run_one(cfg, sc));
     }
 
-    std::fs::write("results/BENCH_sim.json", bench_json(&entries))
-        .expect("writing results/BENCH_sim.json");
-    println!("\nwrote results/BENCH_sim.json ({} runs)", entries.len());
+    std::fs::write(&out, bench_json(&entries)).expect("writing the aggregate artifact");
+    println!("\nwrote {out} ({} runs)", entries.len());
 }

@@ -4,6 +4,14 @@
 //! Supported syntax: `[section]` headers, `key = value` with string
 //! (`"x"`), integer, float, boolean, and flat arrays (`[1, 2, 3]`);
 //! `#` comments. That covers every config FedDDE ships.
+//!
+//! `ExperimentConfig::from_toml` / `SimConfig::from_toml` are strict: a key
+//! neither struct knows is an error listing every offending key (a typoed
+//! `refresh_evry` silently running defaults cost us real debugging time).
+//! `from_toml_with(.., true)` — the CLI's `--allow-unknown-keys` — downgrades
+//! that to a warning. Each struct only polices its own namespace:
+//! `ExperimentConfig` ignores the `[sim]` section and vice versa, so one
+//! file can configure both.
 
 use std::collections::HashMap;
 
@@ -151,6 +159,37 @@ impl Toml {
     }
 }
 
+/// Unknown-key policing shared by both typed configs: every key inside this
+/// config's namespace (`in_scope`) must be in `known`; keys outside the
+/// namespace belong to the other config and are left alone. Offenders are
+/// reported sorted, all at once.
+fn check_known_keys(
+    t: &Toml,
+    known: &[&str],
+    in_scope: impl Fn(&str) -> bool,
+    allow_unknown: bool,
+) -> Result<()> {
+    let mut unknown: Vec<&str> = t
+        .values
+        .keys()
+        .map(String::as_str)
+        .filter(|k| in_scope(k) && !known.contains(k))
+        .collect();
+    if unknown.is_empty() {
+        return Ok(());
+    }
+    unknown.sort_unstable();
+    if allow_unknown {
+        log::warn!("ignoring unknown config keys: {}", unknown.join(", "));
+        return Ok(());
+    }
+    bail!(
+        "unknown config keys: {} (known: {}; pass --allow-unknown-keys to ignore)",
+        unknown.join(", "),
+        known.join(", ")
+    )
+}
+
 /// Typed experiment configuration (the `feddde train` CLI and examples).
 #[derive(Debug, Clone)]
 pub struct ExperimentConfig {
@@ -212,6 +251,10 @@ pub struct ExperimentConfig {
     pub drift_frac: f64,
     /// Output metrics path (JSON lines); empty = stdout summary only.
     pub out: String,
+    /// Event-journal path: the coordinator persists its transition journal
+    /// here after every round, and `feddde run --resume` recovers from it
+    /// (empty = journaling off).
+    pub journal: String,
 }
 
 impl Default for ExperimentConfig {
@@ -242,12 +285,53 @@ impl Default for ExperimentConfig {
             drift_rounds: Vec::new(),
             drift_frac: 1.0,
             out: String::new(),
+            journal: String::new(),
         }
     }
 }
 
+/// The keys `ExperimentConfig::from_toml` consumes (the strict-parsing
+/// whitelist; also the `feddde run --help` key reference).
+pub const EXPERIMENT_KEYS: [&str; 26] = [
+    "dataset",
+    "n_clients",
+    "rounds",
+    "per_round",
+    "local_steps",
+    "lr",
+    "policy",
+    "clusters",
+    "cluster_backend",
+    "kmeans_pruning",
+    "refresh_every",
+    "refresh_threads",
+    "summary_cache",
+    "summary_fused",
+    "store_capacity",
+    "summary",
+    "target_accuracy",
+    "seed",
+    "dp.epsilon",
+    "dp.delta",
+    "over_select",
+    "deadline_pct",
+    "drift.rounds",
+    "drift.frac",
+    "out",
+    "journal",
+];
+
 impl ExperimentConfig {
-    pub fn from_toml(t: &Toml) -> Self {
+    /// Strict typed load: unknown keys (outside the `[sim]` namespace) are
+    /// an error listing every offender.
+    pub fn from_toml(t: &Toml) -> Result<Self> {
+        Self::from_toml_with(t, false)
+    }
+
+    /// Typed load with the `--allow-unknown-keys` escape hatch: when
+    /// `allow_unknown`, offending keys are warned about and ignored.
+    pub fn from_toml_with(t: &Toml, allow_unknown: bool) -> Result<Self> {
+        check_known_keys(t, &EXPERIMENT_KEYS, |k| !k.starts_with("sim."), allow_unknown)?;
         let d = ExperimentConfig::default();
         let drift_rounds = t
             .get("drift.rounds")
@@ -262,7 +346,7 @@ impl ExperimentConfig {
                 _ => None,
             })
             .unwrap_or_default();
-        ExperimentConfig {
+        Ok(ExperimentConfig {
             dataset: t.str_or("dataset", &d.dataset),
             n_clients: t.int_or("n_clients", d.n_clients as i64) as usize,
             rounds: t.int_or("rounds", d.rounds as i64) as usize,
@@ -288,12 +372,17 @@ impl ExperimentConfig {
             drift_rounds,
             drift_frac: t.float_or("drift.frac", d.drift_frac),
             out: t.str_or("out", &d.out),
-        }
+            journal: t.str_or("journal", &d.journal),
+        })
     }
 
     pub fn load(path: &str) -> Result<Self> {
+        Self::load_with(path, false)
+    }
+
+    pub fn load_with(path: &str, allow_unknown: bool) -> Result<Self> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        Ok(Self::from_toml(&Toml::parse(&text)?))
+        Self::from_toml_with(&Toml::parse(&text)?, allow_unknown)
     }
 }
 
@@ -352,10 +441,36 @@ impl Default for SimConfig {
     }
 }
 
+/// The keys `SimConfig::from_toml` consumes (all under `[sim]`).
+pub const SIM_KEYS: [&str; 14] = [
+    "sim.scenario",
+    "sim.clients",
+    "sim.rounds",
+    "sim.per_round",
+    "sim.local_steps",
+    "sim.policy",
+    "sim.summary",
+    "sim.clusters",
+    "sim.refresh_every",
+    "sim.threads",
+    "sim.train_step_host_secs",
+    "sim.update_bytes",
+    "sim.seed",
+    "sim.out_dir",
+];
+
 impl SimConfig {
-    pub fn from_toml(t: &Toml) -> Self {
+    /// Strict typed load: unknown `sim.*` keys are an error listing every
+    /// offender (keys outside `[sim]` belong to `ExperimentConfig`).
+    pub fn from_toml(t: &Toml) -> Result<Self> {
+        Self::from_toml_with(t, false)
+    }
+
+    /// Typed load with the `--allow-unknown-keys` escape hatch.
+    pub fn from_toml_with(t: &Toml, allow_unknown: bool) -> Result<Self> {
+        check_known_keys(t, &SIM_KEYS, |k| k.starts_with("sim."), allow_unknown)?;
         let d = SimConfig::default();
-        SimConfig {
+        Ok(SimConfig {
             scenario: t.str_or("sim.scenario", &d.scenario),
             n_clients: t.int_or("sim.clients", d.n_clients as i64) as usize,
             rounds: t.int_or("sim.rounds", d.rounds as i64) as usize,
@@ -370,12 +485,16 @@ impl SimConfig {
             update_bytes: t.int_or("sim.update_bytes", d.update_bytes as i64) as usize,
             seed: t.int_or("sim.seed", d.seed as i64) as u64,
             out_dir: t.str_or("sim.out_dir", &d.out_dir),
-        }
+        })
     }
 
     pub fn load(path: &str) -> Result<Self> {
+        Self::load_with(path, false)
+    }
+
+    pub fn load_with(path: &str, allow_unknown: bool) -> Result<Self> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        Ok(Self::from_toml(&Toml::parse(&text)?))
+        Self::from_toml_with(&Toml::parse(&text)?, allow_unknown)
     }
 }
 
@@ -421,7 +540,7 @@ mod tests {
              [drift]\nrounds = [3]\nfrac = 0.25\n",
         )
         .unwrap();
-        let c = ExperimentConfig::from_toml(&t);
+        let c = ExperimentConfig::from_toml(&t).unwrap();
         assert_eq!(c.rounds, 7);
         assert_eq!(c.policy, "random");
         assert_eq!(c.drift_rounds, vec![3]);
@@ -441,7 +560,7 @@ mod tests {
              kmeans_pruning = \"off\"\nsummary_fused = false\nstore_capacity = 5000\n",
         )
         .unwrap();
-        let c = ExperimentConfig::from_toml(&t);
+        let c = ExperimentConfig::from_toml(&t).unwrap();
         assert_eq!(c.cluster_backend, "minibatch");
         assert_eq!(c.refresh_threads, 4);
         assert!(!c.summary_cache);
@@ -452,9 +571,48 @@ mod tests {
 
     #[test]
     fn streaming_knob_defaults() {
-        let c = ExperimentConfig::from_toml(&Toml::parse("").unwrap());
+        let c = ExperimentConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
         assert!(c.summary_fused, "fused must be the default path");
         assert_eq!(c.store_capacity, 0, "store unbounded by default");
+    }
+
+    #[test]
+    fn unknown_keys_rejected_and_listed() {
+        // A typo and a stray key are both reported, sorted, in one error.
+        let t = Toml::parse("refresh_evry = 3\nzzz = 1\nrounds = 5\n").unwrap();
+        let err = ExperimentConfig::from_toml(&t).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("refresh_evry, zzz"), "offenders missing/unsorted: {msg}");
+        assert!(msg.contains("--allow-unknown-keys"), "no escape-hatch hint: {msg}");
+        // The escape hatch parses anyway, keeping the known keys.
+        let c = ExperimentConfig::from_toml_with(&t, true).unwrap();
+        assert_eq!(c.rounds, 5);
+    }
+
+    #[test]
+    fn each_config_ignores_the_other_namespace() {
+        // One file can configure the batch run AND the simulator: each
+        // struct only polices its own keys.
+        let t = Toml::parse("rounds = 5\n[sim]\nrounds = 9\nclients = 50\n").unwrap();
+        let e = ExperimentConfig::from_toml(&t).unwrap();
+        assert_eq!(e.rounds, 5);
+        let s = SimConfig::from_toml(&t).unwrap();
+        assert_eq!(s.rounds, 9);
+        assert_eq!(s.n_clients, 50);
+        // But a typo inside [sim] is still caught by SimConfig.
+        let t = Toml::parse("[sim]\nclinets = 50\n").unwrap();
+        assert!(ExperimentConfig::from_toml(&t).is_ok());
+        let err = SimConfig::from_toml(&t).unwrap_err();
+        assert!(format!("{err:#}").contains("sim.clinets"));
+        assert!(SimConfig::from_toml_with(&t, true).is_ok());
+    }
+
+    #[test]
+    fn journal_path_from_toml() {
+        let t = Toml::parse("journal = \"results/run.journal\"\n").unwrap();
+        let c = ExperimentConfig::from_toml(&t).unwrap();
+        assert_eq!(c.journal, "results/run.journal");
+        assert_eq!(ExperimentConfig::default().journal, "");
     }
 
     #[test]
@@ -465,7 +623,7 @@ mod tests {
 
     #[test]
     fn sim_config_defaults_and_toml_section() {
-        let d = SimConfig::from_toml(&Toml::parse("").unwrap());
+        let d = SimConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
         assert_eq!(d.scenario, "sync_baseline");
         assert_eq!(d.n_clients, 100);
         assert_eq!(d.policy, "cluster");
@@ -477,7 +635,7 @@ mod tests {
              out_dir = \"results/simx\"\n",
         )
         .unwrap();
-        let c = SimConfig::from_toml(&t);
+        let c = SimConfig::from_toml(&t).unwrap();
         assert_eq!(c.scenario, "heavy_tail");
         assert_eq!(c.n_clients, 500);
         assert_eq!(c.rounds, 20);

@@ -1,0 +1,773 @@
+//! Event-sourced coordinator core: the phase state machine both the batch
+//! [`Coordinator`](crate::coordinator::Coordinator) and the discrete-event
+//! [`Simulator`](crate::sim::Simulator) drive their round loops through,
+//! plus the append-only [`EventJournal`] every applied transition lands in.
+//!
+//! **State machine.** A round advances through
+//!
+//! ```text
+//! Idle ──start_round──▶ Rendezvous ──rendezvous──▶ Selecting
+//!      ──start_training──▶ Training ──end_training──▶ Aggregating
+//!      ──aggregate──▶ RoundClosed ──start_round──▶ Rendezvous …
+//! ```
+//!
+//! (the XAIN coordinator's message vocabulary: rendezvous / start-training /
+//! end-training). [`CoordinatorMachine::apply`] validates every message
+//! against the current [`Phase`] and the gapless round counter before the
+//! handler's effects are committed, so an out-of-order or replayed-twice
+//! message is an error, never silent corruption.
+//!
+//! **Journal.** Each applied transition appends one JSONL record. Like
+//! `sim::report`'s event stream, all JSON is hand-rolled and digested with
+//! FNV-1a 64, so two journals serialize to equal bytes iff they recorded the
+//! same transitions. The journal is the crash-recovery substrate:
+//!
+//! * [`EventJournal::parse`] tolerates a torn final line (a crash mid-append
+//!   loses at most the record being written — the journal recovers to the
+//!   last complete transition);
+//! * [`EventJournal::complete_prefix`] drops a trailing partially-journaled
+//!   round (recovery rolls back to the last `RoundClosed` and re-runs the
+//!   interrupted round from its start);
+//! * [`CoordinatorMachine::begin_replay`] arms a verify cursor: during
+//!   recovery the owning run loop re-executes the journaled rounds and the
+//!   machine asserts every re-derived transition equals the journaled one
+//!   bitwise — divergence means the journal and the seed disagree, and
+//!   recovery fails loudly instead of silently forking history.
+//!
+//! Because every transition payload is a pure function of the run seed and
+//! the round number, re-execution is exact: a run recovered at *any* journal
+//! prefix converges to the same event stream and digests as an uninterrupted
+//! run (`rust/tests/determinism.rs` and the recover-at-every-prefix sweep in
+//! `rust/tests/proptests.rs` enforce this).
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Context, Result};
+
+/// FNV-1a 64 over a string — the one digest primitive the journal and
+/// `sim::report` share (quoted in artifacts so bitwise equality is checkable
+/// from JSON alone).
+pub fn fnv1a64(text: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3); // FNV-1a 64 prime
+    }
+    h
+}
+
+/// Where the coordinator stands inside a round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Before the first round.
+    Idle,
+    /// Gathering the fleet: availability is being established.
+    Rendezvous,
+    /// The selection policy is ranking the rendezvoused fleet.
+    Selecting,
+    /// Selected clients are training (events in flight).
+    Training,
+    /// The round closed; FedAvg over the completed updates.
+    Aggregating,
+    /// Round done, metrics emitted; the next `start_round` re-arms.
+    RoundClosed,
+}
+
+impl Phase {
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Idle => "idle",
+            Phase::Rendezvous => "rendezvous",
+            Phase::Selecting => "selecting",
+            Phase::Training => "training",
+            Phase::Aggregating => "aggregating",
+            Phase::RoundClosed => "round_closed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Phase> {
+        Some(match s {
+            "idle" => Phase::Idle,
+            "rendezvous" => Phase::Rendezvous,
+            "selecting" => Phase::Selecting,
+            "training" => Phase::Training,
+            "aggregating" => Phase::Aggregating,
+            "round_closed" => Phase::RoundClosed,
+            _ => return None,
+        })
+    }
+}
+
+/// A typed message driving the machine; applying one is a transition.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Transition {
+    /// `Idle`/`RoundClosed` → `Rendezvous`. Handler: refresh scheduling
+    /// (summaries + clustering on refresh rounds).
+    RoundStarted { round: usize },
+    /// `Rendezvous` → `Selecting`. Handler: availability draws over the
+    /// fleet; `available` is how many devices answered.
+    FleetRendezvoused { round: usize, available: usize },
+    /// `Selecting` → `Training`. Handler: policy ranking + over-selection;
+    /// the chosen client ids are the payload (possibly empty — an empty
+    /// round still walks every phase so the journal stays uniform).
+    ClientsSelected { round: usize, selected: Vec<usize> },
+    /// `Training` → `Aggregating`. Handler: the round's terminal
+    /// classification — every selected client lands in exactly one bucket.
+    TrainingEnded {
+        round: usize,
+        completed: Vec<usize>,
+        dropped: Vec<usize>,
+        timed_out: Vec<usize>,
+    },
+    /// `Aggregating` → `RoundClosed`. Handler: the FedAvg trigger
+    /// (`aggregated` = at least one completion) and metrics emission.
+    RoundAggregated { round: usize, aggregated: bool },
+}
+
+impl Transition {
+    pub fn round(&self) -> usize {
+        match self {
+            Transition::RoundStarted { round }
+            | Transition::FleetRendezvoused { round, .. }
+            | Transition::ClientsSelected { round, .. }
+            | Transition::TrainingEnded { round, .. }
+            | Transition::RoundAggregated { round, .. } => *round,
+        }
+    }
+
+    /// The message name (the XAIN-style verb), serialized as `kind`.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Transition::RoundStarted { .. } => "start_round",
+            Transition::FleetRendezvoused { .. } => "rendezvous",
+            Transition::ClientsSelected { .. } => "start_training",
+            Transition::TrainingEnded { .. } => "end_training",
+            Transition::RoundAggregated { .. } => "aggregate",
+        }
+    }
+
+    /// The phase this transition lands in.
+    pub fn to_phase(&self) -> Phase {
+        match self {
+            Transition::RoundStarted { .. } => Phase::Rendezvous,
+            Transition::FleetRendezvoused { .. } => Phase::Selecting,
+            Transition::ClientsSelected { .. } => Phase::Training,
+            Transition::TrainingEnded { .. } => Phase::Aggregating,
+            Transition::RoundAggregated { .. } => Phase::RoundClosed,
+        }
+    }
+}
+
+/// One appended transition (seq is the journal's gapless record counter).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JournalRecord {
+    pub seq: u64,
+    pub transition: Transition,
+}
+
+fn ids_json(ids: &[usize]) -> String {
+    let items: Vec<String> = ids.iter().map(|i| i.to_string()).collect();
+    format!("[{}]", items.join(","))
+}
+
+impl JournalRecord {
+    /// One JSONL line. Field order is fixed (seq, round, kind, to, payload)
+    /// so serialization is byte-stable and `"round":` always first-matches
+    /// the real round field.
+    pub fn to_json(&self) -> String {
+        let t = &self.transition;
+        let head = format!(
+            "{{\"type\":\"transition\",\"seq\":{},\"round\":{},\"kind\":\"{}\",\"to\":\"{}\"",
+            self.seq,
+            t.round(),
+            t.kind(),
+            t.to_phase().name()
+        );
+        match t {
+            Transition::RoundStarted { .. } => format!("{head}}}"),
+            Transition::FleetRendezvoused { available, .. } => {
+                format!("{head},\"available\":{available}}}")
+            }
+            Transition::ClientsSelected { selected, .. } => {
+                format!("{head},\"selected\":{}}}", ids_json(selected))
+            }
+            Transition::TrainingEnded { completed, dropped, timed_out, .. } => format!(
+                "{head},\"completed\":{},\"dropped\":{},\"timed_out\":{}}}",
+                ids_json(completed),
+                ids_json(dropped),
+                ids_json(timed_out)
+            ),
+            Transition::RoundAggregated { aggregated, .. } => {
+                format!("{head},\"aggregated\":{aggregated}}}")
+            }
+        }
+    }
+}
+
+/// Run identity echoed in the journal's first line: recovery refuses a
+/// journal whose header does not match the run configuration it is asked to
+/// resume (wrong seed / fleet / policy → silently different history).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JournalHeader {
+    /// "train" (batch coordinator) or "sim" (discrete-event simulator).
+    pub kind: String,
+    pub seed: u64,
+    pub rounds: usize,
+    pub n_clients: usize,
+    pub per_round: usize,
+    pub policy: String,
+    /// Scenario name for sim journals; "" for train journals.
+    pub scenario: String,
+}
+
+impl JournalHeader {
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"type\":\"journal\",\"version\":1,\"kind\":\"{}\",\"seed\":{},\"rounds\":{},\
+             \"n_clients\":{},\"per_round\":{},\"policy\":\"{}\",\"scenario\":\"{}\"}}",
+            self.kind,
+            self.seed,
+            self.rounds,
+            self.n_clients,
+            self.per_round,
+            self.policy,
+            self.scenario
+        )
+    }
+}
+
+// --- flat-JSON field extraction (the journal fully controls its writer, so
+// --- a scanning parser is exact: values are numbers, bools, bare-name
+// --- strings, or flat arrays of ints — no escapes, no nesting).
+
+fn extract<'a>(line: &'a str, key: &str) -> Result<&'a str> {
+    let pat = format!("\"{key}\":");
+    let start = line
+        .find(&pat)
+        .with_context(|| format!("missing field {key:?} in {line:?}"))?
+        + pat.len();
+    let rest = &line[start..];
+    let end = if let Some(r) = rest.strip_prefix('[') {
+        r.find(']').with_context(|| format!("unterminated array for {key:?}"))? + 2
+    } else if let Some(r) = rest.strip_prefix('"') {
+        r.find('"').with_context(|| format!("unterminated string for {key:?}"))? + 2
+    } else {
+        rest.find([',', '}'])
+            .with_context(|| format!("unterminated value for {key:?}"))?
+    };
+    Ok(&rest[..end])
+}
+
+fn unquote(raw: &str) -> Result<&str> {
+    raw.strip_prefix('"')
+        .and_then(|r| r.strip_suffix('"'))
+        .with_context(|| format!("expected a quoted string, got {raw:?}"))
+}
+
+fn parse_ids(raw: &str) -> Result<Vec<usize>> {
+    let inner = raw
+        .strip_prefix('[')
+        .and_then(|r| r.strip_suffix(']'))
+        .with_context(|| format!("expected an id array, got {raw:?}"))?;
+    if inner.is_empty() {
+        return Ok(Vec::new());
+    }
+    inner
+        .split(',')
+        .map(|s| s.trim().parse::<usize>().with_context(|| format!("bad id in {raw:?}")))
+        .collect()
+}
+
+fn parse_header(line: &str) -> Result<JournalHeader> {
+    if unquote(extract(line, "type")?)? != "journal" {
+        bail!("first journal line is not a header: {line:?}");
+    }
+    let version: u64 = extract(line, "version")?.parse()?;
+    if version != 1 {
+        bail!("unsupported journal version {version}");
+    }
+    Ok(JournalHeader {
+        kind: unquote(extract(line, "kind")?)?.to_string(),
+        seed: extract(line, "seed")?.parse()?,
+        rounds: extract(line, "rounds")?.parse()?,
+        n_clients: extract(line, "n_clients")?.parse()?,
+        per_round: extract(line, "per_round")?.parse()?,
+        policy: unquote(extract(line, "policy")?)?.to_string(),
+        scenario: unquote(extract(line, "scenario")?)?.to_string(),
+    })
+}
+
+fn parse_record(line: &str) -> Result<JournalRecord> {
+    // A torn final line cannot end in '}' — cheap first screen.
+    if !line.ends_with('}') {
+        bail!("truncated record line: {line:?}");
+    }
+    if unquote(extract(line, "type")?)? != "transition" {
+        bail!("not a transition record: {line:?}");
+    }
+    let seq: u64 = extract(line, "seq")?.parse()?;
+    let round: usize = extract(line, "round")?.parse()?;
+    let kind = unquote(extract(line, "kind")?)?;
+    let transition = match kind {
+        "start_round" => Transition::RoundStarted { round },
+        "rendezvous" => Transition::FleetRendezvoused {
+            round,
+            available: extract(line, "available")?.parse()?,
+        },
+        "start_training" => Transition::ClientsSelected {
+            round,
+            selected: parse_ids(extract(line, "selected")?)?,
+        },
+        "end_training" => Transition::TrainingEnded {
+            round,
+            completed: parse_ids(extract(line, "completed")?)?,
+            dropped: parse_ids(extract(line, "dropped")?)?,
+            timed_out: parse_ids(extract(line, "timed_out")?)?,
+        },
+        "aggregate" => Transition::RoundAggregated {
+            round,
+            aggregated: extract(line, "aggregated")?.parse()?,
+        },
+        other => bail!("unknown transition kind {other:?}"),
+    };
+    // Cross-check the recorded target phase — catches bit rot that still
+    // parses field-by-field.
+    let to = unquote(extract(line, "to")?)?;
+    if Phase::parse(to) != Some(transition.to_phase()) {
+        bail!("record {seq}: phase {to:?} does not match kind {kind:?}");
+    }
+    Ok(JournalRecord { seq, transition })
+}
+
+/// The append-only transition journal: header + records, JSONL on disk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventJournal {
+    header: JournalHeader,
+    records: Vec<JournalRecord>,
+}
+
+impl EventJournal {
+    pub fn new(header: JournalHeader) -> Self {
+        EventJournal { header, records: Vec::new() }
+    }
+
+    pub fn header(&self) -> &JournalHeader {
+        &self.header
+    }
+
+    pub fn records(&self) -> &[JournalRecord] {
+        &self.records
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    fn append(&mut self, r: JournalRecord) {
+        debug_assert_eq!(r.seq, self.records.len() as u64, "journal seq gap");
+        self.records.push(r);
+    }
+
+    /// Rounds fully closed (one `aggregate` record each).
+    pub fn rounds_closed(&self) -> usize {
+        self.records
+            .iter()
+            .filter(|r| matches!(r.transition, Transition::RoundAggregated { .. }))
+            .count()
+    }
+
+    /// The prefix up to (and including) the last `RoundClosed` — what
+    /// recovery replays. A trailing partially-journaled round is dropped and
+    /// re-run from its start.
+    pub fn complete_prefix(&self) -> &[JournalRecord] {
+        let end = self
+            .records
+            .iter()
+            .rposition(|r| matches!(r.transition, Transition::RoundAggregated { .. }))
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        &self.records[..end]
+    }
+
+    /// A copy truncated to the first `n` records (the recover-at-every-prefix
+    /// sweep's subject).
+    pub fn truncated(&self, n: usize) -> EventJournal {
+        EventJournal {
+            header: self.header.clone(),
+            records: self.records[..n.min(self.records.len())].to_vec(),
+        }
+    }
+
+    /// Serialize: one header line, one line per record.
+    pub fn to_jsonl(&self) -> String {
+        let mut s = String::with_capacity(64 + self.records.len() * 96);
+        s.push_str(&self.header.to_json());
+        s.push('\n');
+        for r in &self.records {
+            s.push_str(&r.to_json());
+            s.push('\n');
+        }
+        s
+    }
+
+    /// FNV-1a 64 over the serialized journal: equal digests ⇔ equal header
+    /// and transition history, bitwise.
+    pub fn digest(&self) -> u64 {
+        fnv1a64(&self.to_jsonl())
+    }
+
+    /// Parse a serialized journal. A malformed or torn FINAL line is dropped
+    /// (a crash mid-append loses only the record being written); anything
+    /// malformed earlier is corruption and errors. Every accepted record is
+    /// re-validated through a fresh machine, so an illegal transition
+    /// sequence can never round-trip.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut lines = text.lines().enumerate();
+        let (_, first) = lines.next().context("empty journal")?;
+        let header = parse_header(first).context("parsing journal header")?;
+        let rest: Vec<(usize, &str)> = lines.collect();
+        let mut machine = CoordinatorMachine::new(header.clone());
+        for (i, (lineno, line)) in rest.iter().enumerate() {
+            let last = i + 1 == rest.len();
+            let applied = parse_record(line).and_then(|r| {
+                if r.seq != machine.journal.records.len() as u64 {
+                    bail!("line {}: seq {} out of order", lineno + 1, r.seq);
+                }
+                machine.apply(r.transition)
+            });
+            match applied {
+                Ok(()) => {}
+                Err(_) if last => break, // torn tail from a crash mid-append
+                Err(e) => {
+                    return Err(e.context(format!("journal line {}", lineno + 1)));
+                }
+            }
+        }
+        Ok(machine.into_journal())
+    }
+
+    pub fn write(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_jsonl()).with_context(|| format!("writing {path}"))
+    }
+
+    pub fn load(path: &str) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Self::parse(&text)
+    }
+}
+
+/// The event-sourced state machine. Owns the journal; every `apply` is
+/// validate → (optionally verify against a replay cursor) → append.
+#[derive(Debug)]
+pub struct CoordinatorMachine {
+    journal: EventJournal,
+    phase: Phase,
+    /// Rounds closed so far; the next `start_round` must carry exactly this
+    /// value (gapless round numbering is a machine invariant).
+    rounds_closed: usize,
+    /// While `Some`, recovery is re-executing journaled rounds: every
+    /// applied transition must equal the journaled one bitwise.
+    replay: Option<VecDeque<JournalRecord>>,
+}
+
+impl CoordinatorMachine {
+    pub fn new(header: JournalHeader) -> Self {
+        CoordinatorMachine {
+            journal: EventJournal::new(header),
+            phase: Phase::Idle,
+            rounds_closed: 0,
+            replay: None,
+        }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    /// Rounds fully closed — also the next round's number.
+    pub fn rounds_closed(&self) -> usize {
+        self.rounds_closed
+    }
+
+    pub fn journal(&self) -> &EventJournal {
+        &self.journal
+    }
+
+    pub fn into_journal(self) -> EventJournal {
+        self.journal
+    }
+
+    pub fn replaying(&self) -> bool {
+        self.replay.is_some()
+    }
+
+    /// Arm the replay cursor on a fresh machine. The owning run loop then
+    /// re-executes rounds normally; `apply` verifies each transition against
+    /// `expected` and `end_replay` asserts the cursor drained.
+    pub fn begin_replay(&mut self, expected: Vec<JournalRecord>) {
+        assert!(
+            self.journal.is_empty() && self.phase == Phase::Idle,
+            "replay must start on a fresh machine"
+        );
+        self.replay = Some(expected.into());
+    }
+
+    pub fn end_replay(&mut self) -> Result<()> {
+        match self.replay.take() {
+            Some(q) if !q.is_empty() => {
+                bail!("replay ended with {} journaled transitions unconsumed", q.len())
+            }
+            _ => Ok(()),
+        }
+    }
+
+    fn check_legal(&self, t: &Transition) -> Result<()> {
+        use Transition::*;
+        let ok = match (&self.phase, t) {
+            (Phase::Idle | Phase::RoundClosed, RoundStarted { .. }) => true,
+            (Phase::Rendezvous, FleetRendezvoused { .. }) => true,
+            (Phase::Selecting, ClientsSelected { .. }) => true,
+            (Phase::Training, TrainingEnded { .. }) => true,
+            (Phase::Aggregating, RoundAggregated { .. }) => true,
+            _ => false,
+        };
+        if !ok {
+            bail!(
+                "illegal transition {:?} from phase {:?}",
+                t.kind(),
+                self.phase.name()
+            );
+        }
+        if t.round() != self.rounds_closed {
+            bail!(
+                "transition {:?} carries round {} but the machine is at round {}",
+                t.kind(),
+                t.round(),
+                self.rounds_closed
+            );
+        }
+        Ok(())
+    }
+
+    /// Validate `t` against the current phase and append it. In replay mode
+    /// the transition must equal the journaled one bitwise.
+    pub fn apply(&mut self, t: Transition) -> Result<()> {
+        self.check_legal(&t)?;
+        if let Some(expected) = self.replay.as_mut() {
+            match expected.pop_front() {
+                Some(want) if want.transition == t => {}
+                Some(want) => bail!(
+                    "journal divergence at seq {}: journal has {:?}, live run produced {:?} \
+                     (seed and journal disagree — refusing to fork history)",
+                    want.seq,
+                    want.transition,
+                    t
+                ),
+                None => bail!("live run produced {:?} past the end of the replay cursor", t),
+            }
+        }
+        let seq = self.journal.records.len() as u64;
+        self.phase = t.to_phase();
+        if matches!(t, Transition::RoundAggregated { .. }) {
+            self.rounds_closed += 1;
+        }
+        self.journal.append(JournalRecord { seq, transition: t });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn header() -> JournalHeader {
+        JournalHeader {
+            kind: "sim".into(),
+            seed: 7,
+            rounds: 3,
+            n_clients: 40,
+            per_round: 8,
+            policy: "cluster".into(),
+            scenario: "sync_baseline".into(),
+        }
+    }
+
+    fn round_transitions(round: usize) -> Vec<Transition> {
+        vec![
+            Transition::RoundStarted { round },
+            Transition::FleetRendezvoused { round, available: 30 },
+            Transition::ClientsSelected { round, selected: vec![1, 5, 9] },
+            Transition::TrainingEnded {
+                round,
+                completed: vec![1, 9],
+                dropped: vec![],
+                timed_out: vec![5],
+            },
+            Transition::RoundAggregated { round, aggregated: true },
+        ]
+    }
+
+    fn machine_after(rounds: usize) -> CoordinatorMachine {
+        let mut m = CoordinatorMachine::new(header());
+        for r in 0..rounds {
+            for t in round_transitions(r) {
+                m.apply(t).unwrap();
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn legal_round_cycle_advances_phases() {
+        let mut m = CoordinatorMachine::new(header());
+        assert_eq!(m.phase(), Phase::Idle);
+        let expect = [
+            Phase::Rendezvous,
+            Phase::Selecting,
+            Phase::Training,
+            Phase::Aggregating,
+            Phase::RoundClosed,
+        ];
+        for (t, want) in round_transitions(0).into_iter().zip(expect) {
+            m.apply(t).unwrap();
+            assert_eq!(m.phase(), want);
+        }
+        assert_eq!(m.rounds_closed(), 1);
+        // The next round re-arms from RoundClosed.
+        m.apply(Transition::RoundStarted { round: 1 }).unwrap();
+        assert_eq!(m.phase(), Phase::Rendezvous);
+    }
+
+    #[test]
+    fn illegal_messages_and_round_gaps_rejected() {
+        let mut m = CoordinatorMachine::new(header());
+        // Cannot select before rendezvous.
+        assert!(m
+            .apply(Transition::ClientsSelected { round: 0, selected: vec![] })
+            .is_err());
+        // Round must be gapless.
+        assert!(m.apply(Transition::RoundStarted { round: 1 }).is_err());
+        m.apply(Transition::RoundStarted { round: 0 }).unwrap();
+        // Applying start_round twice is illegal.
+        assert!(m.apply(Transition::RoundStarted { round: 0 }).is_err());
+        // Skipping a phase is illegal.
+        assert!(m
+            .apply(Transition::TrainingEnded {
+                round: 0,
+                completed: vec![],
+                dropped: vec![],
+                timed_out: vec![],
+            })
+            .is_err());
+    }
+
+    #[test]
+    fn journal_roundtrip_is_bitwise() {
+        let j = machine_after(3).into_journal();
+        let text = j.to_jsonl();
+        let parsed = EventJournal::parse(&text).unwrap();
+        assert_eq!(parsed, j);
+        assert_eq!(parsed.to_jsonl(), text, "serialize → parse → serialize moved bytes");
+        assert_eq!(parsed.digest(), j.digest());
+        assert_eq!(j.rounds_closed(), 3);
+        assert_eq!(j.complete_prefix().len(), 15);
+    }
+
+    #[test]
+    fn truncated_tail_recovers_to_last_complete_transition() {
+        let j = machine_after(2).into_journal();
+        let text = j.to_jsonl();
+        // Cut in the middle of the last record's line.
+        let cut = text.trim_end().len() - 7;
+        let parsed = EventJournal::parse(&text[..cut]).unwrap();
+        assert_eq!(parsed.len(), j.len() - 1, "exactly the torn record dropped");
+        assert!(text.starts_with(&parsed.to_jsonl()[..parsed.to_jsonl().len() - 1]));
+        // The partial round rolls back to the last closed one.
+        assert_eq!(parsed.rounds_closed(), 1);
+        assert_eq!(parsed.complete_prefix().len(), 10);
+    }
+
+    #[test]
+    fn corruption_before_the_tail_is_an_error() {
+        let j = machine_after(2).into_journal();
+        let mut lines: Vec<String> = j.to_jsonl().lines().map(String::from).collect();
+        lines[3] = lines[3].replace("\"kind\":\"start_training\"", "\"kind\":\"bogus\"");
+        assert!(EventJournal::parse(&lines.join("\n")).is_err());
+        // An illegal-but-well-formed interior transition also fails.
+        let mut lines: Vec<String> = j.to_jsonl().lines().map(String::from).collect();
+        lines.remove(2); // drop rendezvous -> select becomes illegal (and seqs gap)
+        assert!(EventJournal::parse(&lines.join("\n")).is_err());
+    }
+
+    #[test]
+    fn replay_cursor_verifies_and_detects_divergence() {
+        let j = machine_after(1).into_journal();
+        // Faithful replay drains the cursor.
+        let mut m = CoordinatorMachine::new(header());
+        m.begin_replay(j.records().to_vec());
+        for t in round_transitions(0) {
+            m.apply(t).unwrap();
+        }
+        m.end_replay().unwrap();
+        assert_eq!(m.into_journal().to_jsonl(), j.to_jsonl());
+        // A diverging transition is refused.
+        let mut m = CoordinatorMachine::new(header());
+        m.begin_replay(j.records().to_vec());
+        m.apply(Transition::RoundStarted { round: 0 }).unwrap();
+        let err = m
+            .apply(Transition::FleetRendezvoused { round: 0, available: 31 })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("divergence"));
+        // An unconsumed cursor is an error.
+        let mut m = CoordinatorMachine::new(header());
+        m.begin_replay(j.records().to_vec());
+        m.apply(Transition::RoundStarted { round: 0 }).unwrap();
+        assert!(m.end_replay().is_err());
+    }
+
+    #[test]
+    fn digest_tracks_history_and_header() {
+        let a = machine_after(2).into_journal();
+        let b = machine_after(2).into_journal();
+        assert_eq!(a.digest(), b.digest());
+        let c = machine_after(1).into_journal();
+        assert_ne!(a.digest(), c.digest());
+        let mut other = header();
+        other.seed = 8;
+        let mut m = CoordinatorMachine::new(other);
+        for r in 0..2 {
+            for t in round_transitions(r) {
+                m.apply(t).unwrap();
+            }
+        }
+        assert_ne!(a.digest(), m.into_journal().digest(), "header must be digested");
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_values() {
+        // Offset basis (empty input) and an independently computed value —
+        // the same pins `sim::report::event_digest` relies on.
+        assert_eq!(fnv1a64(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64("a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn truncation_at_every_byte_yields_a_record_prefix() {
+        let j = machine_after(2).into_journal();
+        let text = j.to_jsonl();
+        let header_len = text.find('\n').unwrap() + 1;
+        for cut in header_len..=text.len() {
+            let parsed = EventJournal::parse(&text[..cut])
+                .unwrap_or_else(|e| panic!("cut at {cut} failed: {e:#}"));
+            // Records = exactly the complete lines within the cut.
+            let complete = text[..cut].lines().skip(1).filter(|l| l.ends_with('}')).count();
+            assert_eq!(parsed.len(), complete, "cut at {cut}");
+            assert_eq!(parsed.records(), &j.records()[..complete]);
+        }
+    }
+}

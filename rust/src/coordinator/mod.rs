@@ -2,8 +2,18 @@
 //! summary refresh → device clustering → cluster-based selection → local
 //! training (AOT train artifact per selected device) → FedAvg → eval —
 //! with simulated wall-clock accounting over the heterogeneous fleet.
+//!
+//! The round loop is event-sourced: every round runs through the
+//! [`journal::CoordinatorMachine`] phase machine (Idle → Rendezvous →
+//! Selecting → Training → Aggregating → RoundClosed) shared with the fleet
+//! simulator, and every applied transition lands in an append-only
+//! [`journal::EventJournal`]. [`Coordinator::recover`] rebuilds a crashed
+//! run from its journal by deterministic re-execution and resumes where it
+//! left off; `ExperimentConfig::journal` persists the journal after every
+//! round so a crash always leaves a recoverable file behind.
 
 pub mod fedavg;
+pub mod journal;
 pub mod store;
 pub mod summaries;
 
@@ -24,6 +34,10 @@ use crate::util::mat::Mat;
 use crate::util::rng::Rng;
 
 pub use fedavg::fedavg;
+pub use journal::{
+    fnv1a64, CoordinatorMachine, EventJournal, JournalHeader, JournalRecord, Phase,
+    Transition,
+};
 pub use store::{StoreStats, SummaryStore};
 pub use summaries::{refresh_fleet, FleetRefresher, RefreshOptions, RefreshResult};
 
@@ -55,6 +69,9 @@ pub struct Coordinator {
     eval_oh: Vec<f32>,
     pub log: MetricsLog,
     sim_time: f64,
+    /// The event-sourced phase machine the round loop runs through; owns
+    /// the transition journal.
+    machine: CoordinatorMachine,
 }
 
 impl Coordinator {
@@ -75,7 +92,7 @@ impl Coordinator {
         // (phase 0 unless a change point sits at round 0).
         let fleet =
             FleetModel::default().sample_fleet_at(spec.n_clients, drift.phase_at(0));
-        let policy = selection::from_config(&cfg)?;
+        let policy = selection::Builder::from_config(&cfg).build()?;
         let mut summary_engine = crate::summary::by_name(&cfg.summary, &spec)?;
         // Local DP on summaries (paper §5): perturb on-device before upload.
         if cfg.dp_epsilon > 0.0 {
@@ -111,6 +128,15 @@ impl Coordinator {
         let (eval_x, eval_oh) = build_eval_batch(&spec, &generator);
 
         let n = spec.n_clients;
+        let machine = CoordinatorMachine::new(JournalHeader {
+            kind: "train".into(),
+            seed: cfg.seed,
+            rounds: cfg.rounds,
+            n_clients: n,
+            per_round: cfg.per_round,
+            policy: cfg.policy.clone(),
+            scenario: String::new(),
+        });
         Ok(Coordinator {
             spec,
             cfg,
@@ -131,7 +157,23 @@ impl Coordinator {
             eval_oh,
             log: MetricsLog::default(),
             sim_time: 0.0,
+            machine,
         })
+    }
+
+    /// The phase machine (and through it the journal accumulated so far).
+    pub fn machine(&self) -> &CoordinatorMachine {
+        &self.machine
+    }
+
+    /// The transition journal accumulated so far.
+    pub fn journal(&self) -> &EventJournal {
+        self.machine.journal()
+    }
+
+    /// Rounds fully closed so far — also the next round's number.
+    pub fn rounds_closed(&self) -> usize {
+        self.machine.rounds_closed()
     }
 
     fn train_artifact(&self) -> String {
@@ -248,8 +290,12 @@ impl Coordinator {
         Ok(r.sim_secs)
     }
 
-    /// Run one round; returns the metrics recorded.
+    /// Run one round through the phase machine; returns the metrics
+    /// recorded. `round` must be the next unclosed round (the machine
+    /// rejects gaps and replays).
     pub fn step(&mut self, round: usize) -> Result<RoundMetrics> {
+        // start_round handler: refresh scheduling (summaries + clustering).
+        self.machine.apply(Transition::RoundStarted { round })?;
         let refresh_secs = self.maybe_refresh(round)?;
 
         // Temporarily detach the policy so `views` (which borrows &self)
@@ -259,6 +305,7 @@ impl Coordinator {
             Box::new(crate::selection::RandomSelection),
         );
         let views = self.views(round);
+        let available = views.iter().filter(|v| v.available).count();
         let mut rng = Rng::substream(self.cfg.seed, &[0x5E1u64, round as u64]);
         // Straggler mitigation: over-select, then cut the slowest tail at
         // the configured deadline percentile (FedScale/HACCS-style).
@@ -285,6 +332,11 @@ impl Coordinator {
         }
         drop(views);
         self.policy = policy;
+        // rendezvous handler (availability) and start_training handler (the
+        // selection), applied after the fleet views release their borrows.
+        self.machine.apply(Transition::FleetRendezvoused { round, available })?;
+        self.machine
+            .apply(Transition::ClientsSelected { round, selected: selected.clone() })?;
         if selected.is_empty() {
             bail!("round {round}: no clients available");
         }
@@ -309,9 +361,20 @@ impl Coordinator {
             train_losses.push(loss);
             updates.push((new_params, part.n_samples as f64));
         }
+        // end_training handler: the batch path trains every selected client
+        // to completion — no dropouts, no deadline cuts (those live in the
+        // expected-duration cut above and in the discrete-event simulator).
+        self.machine.apply(Transition::TrainingEnded {
+            round,
+            completed: selected.clone(),
+            dropped: Vec::new(),
+            timed_out: Vec::new(),
+        })?;
+        // aggregate handler: FedAvg, then evaluation + metrics emission.
         self.params = fedavg(&updates)?;
 
         let (acc, eval_loss) = self.evaluate()?;
+        self.machine.apply(Transition::RoundAggregated { round, aggregated: true })?;
         self.sim_time += refresh_secs + round_time;
         let m = RoundMetrics {
             round,
@@ -328,11 +391,18 @@ impl Coordinator {
         Ok(m)
     }
 
-    /// Run the configured number of rounds (stopping early at
-    /// `target_accuracy` when set). Returns the metrics log.
+    /// Run the remaining rounds (all of them on a fresh coordinator; the
+    /// unfinished tail on a recovered one), stopping early at
+    /// `target_accuracy` when set. When `cfg.journal` names a path, the
+    /// journal is persisted after every round so a crash always leaves a
+    /// recoverable file. Returns the metrics log.
     pub fn run(&mut self) -> Result<&MetricsLog> {
-        for round in 0..self.cfg.rounds {
+        while self.machine.rounds_closed() < self.cfg.rounds {
+            let round = self.machine.rounds_closed();
             let m = self.step(round)?;
+            if !self.cfg.journal.is_empty() {
+                self.machine.journal().write(&self.cfg.journal)?;
+            }
             log::info!(
                 "round {round}: loss={:.4} acc={:.4} sim_t={:.1}s",
                 m.train_loss,
@@ -344,6 +414,37 @@ impl Coordinator {
             }
         }
         Ok(&self.log)
+    }
+
+    /// Rebuild a crashed run from its journal and position the coordinator
+    /// to resume (`run()` then finishes the remaining rounds). Recovery is
+    /// deterministic re-execution: the journal's complete rounds are re-run
+    /// with the machine's replay cursor armed, so every re-derived
+    /// transition is asserted equal to the journaled one; a trailing
+    /// partially-journaled round is discarded and re-runs live.
+    pub fn recover(cfg: ExperimentConfig, engine: Engine, journal: &EventJournal) -> Result<Self> {
+        let mut coord = Coordinator::new(cfg, engine)?;
+        if journal.header() != coord.machine.journal().header() {
+            bail!(
+                "journal header does not match the run configuration: journal {:?}, run {:?}",
+                journal.header(),
+                coord.machine.journal().header()
+            );
+        }
+        let prefix = journal.complete_prefix().to_vec();
+        let closed = prefix
+            .iter()
+            .filter(|r| matches!(r.transition, Transition::RoundAggregated { .. }))
+            .count();
+        coord.machine.begin_replay(prefix);
+        while coord.machine.rounds_closed() < closed {
+            let round = coord.machine.rounds_closed();
+            coord
+                .step(round)
+                .context("re-executing journaled rounds during recovery")?;
+        }
+        coord.machine.end_replay()?;
+        Ok(coord)
     }
 }
 
@@ -531,6 +632,57 @@ mod tests {
         let t_a = a.log.rounds.last().unwrap().sim_time;
         let t_b = b.log.rounds.last().unwrap().sim_time;
         assert!(t_b <= t_a * 1.2, "deadline made rounds slower: {t_b} vs {t_a}");
+    }
+
+    #[test]
+    fn every_round_journals_five_transitions() {
+        let Some(mut c) = coordinator(tiny_cfg()) else { return };
+        c.run().unwrap();
+        let journal = c.journal();
+        assert_eq!(journal.rounds_closed(), 6);
+        assert_eq!(journal.len(), 6 * 5);
+        assert_eq!(c.machine().phase(), Phase::RoundClosed);
+        // The journal round-trips bitwise through its own parser.
+        let parsed = EventJournal::parse(&journal.to_jsonl()).unwrap();
+        assert_eq!(parsed.digest(), journal.digest());
+    }
+
+    #[test]
+    fn recover_resumes_and_matches_uninterrupted_run() {
+        let Some(mut full) = coordinator(tiny_cfg()) else { return };
+        full.run().unwrap();
+        let uninterrupted = full.journal().digest();
+
+        // Crash after round 2: keep 3 closed rounds plus a torn half of
+        // round 3's first record, as a mid-write kill would leave behind.
+        let jsonl = full.journal().to_jsonl();
+        let keep: Vec<&str> = jsonl.lines().take(1 + 3 * 5 + 1).collect();
+        let mut torn = keep[..keep.len() - 1].join("\n");
+        let half = keep[keep.len() - 1];
+        torn.push('\n');
+        torn.push_str(&half[..half.len() / 2]);
+        let journal = EventJournal::parse(&torn).unwrap();
+        assert_eq!(journal.rounds_closed(), 3);
+
+        let Some(engine) = crate::runtime::test_engine() else { return };
+        let mut rec = Coordinator::recover(tiny_cfg(), engine, &journal).unwrap();
+        assert_eq!(rec.rounds_closed(), 3);
+        assert_eq!(rec.log.rounds.len(), 3);
+        rec.run().unwrap();
+        assert_eq!(rec.journal().digest(), uninterrupted);
+        let sel_full: Vec<_> = full.log.rounds.iter().map(|r| r.selected.clone()).collect();
+        let sel_rec: Vec<_> = rec.log.rounds.iter().map(|r| r.selected.clone()).collect();
+        assert_eq!(sel_full, sel_rec);
+    }
+
+    #[test]
+    fn recover_rejects_mismatched_header() {
+        let Some(mut c) = coordinator(tiny_cfg()) else { return };
+        c.run().unwrap();
+        let journal = c.journal().clone();
+        let Some(engine) = crate::runtime::test_engine() else { return };
+        let other = ExperimentConfig { seed: 999, ..tiny_cfg() };
+        assert!(Coordinator::recover(other, engine, &journal).is_err());
     }
 
     #[test]

@@ -7,166 +7,178 @@
 //!   run-sim    discrete-event fleet simulator (scenario catalog, per-round
 //!              wall-clock breakdown, BENCH_sim.json aggregate)
 //!   artifacts  list the AOT artifacts the runtime can execute
+//!   journal    inspect an event journal: header, round counts, digest
 //!
-//! Flags are `--key value` pairs; `train` also accepts `--config file.toml`
-//! (see `rust/src/config.rs` for the schema).
-
-use std::collections::HashMap;
+//! Each subcommand's flags live in one `util::cli::CommandSpec` table the
+//! parser and `--help` both read, so help can never drift from what the
+//! parser accepts. `feddde <cmd> --help` prints the command's flag table.
 
 use anyhow::{bail, Context, Result};
 
 use feddde::cluster::{dbscan, kmeans, minibatch};
 use feddde::config::{ExperimentConfig, SimConfig};
-use feddde::coordinator::{refresh_fleet, Coordinator};
+use feddde::coordinator::{refresh_fleet, Coordinator, EventJournal};
 use feddde::data::{DatasetSpec, DriftSchedule, Generator, Partition};
 use feddde::device::FleetModel;
 use feddde::runtime::Engine;
 use feddde::selection::STRATEGY_NAMES;
-use feddde::sim::{bench_json, Scenario, Simulator};
+use feddde::sim::{bench_json, run_with_recovery, Scenario, Simulator};
 use feddde::summary::SummaryEngine as _;
+use feddde::util::cli::{CommandSpec, FlagSpec, Parsed};
 use feddde::util::stats;
 
-fn parse_flags(args: &[String]) -> HashMap<String, String> {
-    let mut out = HashMap::new();
-    let mut i = 0;
-    while i < args.len() {
-        if let Some(key) = args[i].strip_prefix("--") {
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                out.insert(key.to_string(), args[i + 1].clone());
-                i += 2;
-            } else {
-                out.insert(key.to_string(), "true".to_string());
-                i += 1;
-            }
-        } else {
-            i += 1;
-        }
-    }
-    out
-}
+const TRAIN: CommandSpec = CommandSpec {
+    name: "train",
+    blurb: "run federated training (the Figure 1 workflow end-to-end)",
+    flags: &[
+        FlagSpec::arg("config", "FILE", "TOML config (flags override it)"),
+        FlagSpec::switch("allow-unknown-keys", "warn instead of erroring on unknown config keys"),
+        FlagSpec::arg("dataset", "NAME", "dataset preset: femnist|openimage|tiny"),
+        FlagSpec::arg("clients", "N", "override client count (0 = preset default)"),
+        FlagSpec::arg("rounds", "R", "federated rounds"),
+        FlagSpec::arg("per-round", "K", "devices selected per round"),
+        FlagSpec::arg("local-steps", "N", "local SGD steps per selected device"),
+        FlagSpec::arg("lr", "F", "local learning rate"),
+        FlagSpec::arg("policy", "NAME", "selection policy (see STRATEGY_NAMES)"),
+        FlagSpec::arg("summary", "NAME", "summary engine: encoder|py|pxy|jl"),
+        FlagSpec::arg("refresh-every", "N", "re-summarize + recluster every N rounds"),
+        FlagSpec::arg("cluster-backend", "NAME", "auto|lloyd|minibatch"),
+        FlagSpec::arg("kmeans-pruning", "NAME", "auto|off|bounds (bitwise identical, faster)"),
+        FlagSpec::arg("refresh-threads", "N", "refresh worker threads (0 = auto)"),
+        FlagSpec::arg("summary-cache", "BOOL", "serve unchanged clients from the store"),
+        FlagSpec::arg("summary-fused", "BOOL", "streaming fused summarization (bitwise identical)"),
+        FlagSpec::arg("store-capacity", "N", "bound the columnar summary store (0 = unbounded)"),
+        FlagSpec::arg("target-accuracy", "F", "stop early at this eval accuracy (0 = off)"),
+        FlagSpec::arg("seed", "N", "run seed"),
+        FlagSpec::arg("out", "PATH", "metrics JSONL output path"),
+        FlagSpec::arg("journal", "PATH", "persist the event journal here after every round"),
+        FlagSpec::switch("resume", "recover from --journal and finish the remaining rounds"),
+    ],
+};
 
-fn cfg_from_flags(flags: &HashMap<String, String>) -> Result<ExperimentConfig> {
-    let mut cfg = if let Some(path) = flags.get("config") {
-        ExperimentConfig::load(path)?
+const SUMMARIZE: CommandSpec = CommandSpec {
+    name: "summarize",
+    blurb: "compute fleet distribution summaries, report Table-2 stats",
+    flags: &[
+        FlagSpec::arg("dataset", "NAME", "dataset preset: femnist|openimage|tiny"),
+        FlagSpec::arg("clients", "N", "override client count"),
+        FlagSpec::arg("method", "NAME", "summary engine: encoder|py|pxy|jl"),
+    ],
+};
+
+const CLUSTER: CommandSpec = CommandSpec {
+    name: "cluster",
+    blurb: "cluster fleet summaries (kmeans / minibatch / dbscan), report quality",
+    flags: &[
+        FlagSpec::arg("dataset", "NAME", "dataset preset: femnist|openimage|tiny"),
+        FlagSpec::arg("clients", "N", "override client count"),
+        FlagSpec::arg("method", "NAME", "kmeans|minibatch|dbscan"),
+        FlagSpec::arg("summary", "NAME", "summary engine feeding the clustering"),
+        FlagSpec::arg("eps", "F", "dbscan radius (default: suggest_eps)"),
+    ],
+};
+
+const RUN_SIM: CommandSpec = CommandSpec {
+    name: "run-sim",
+    blurb: "discrete-event fleet simulator (end-to-end overhead study)",
+    flags: &[
+        FlagSpec::arg("config", "FILE", "TOML config, [sim] section (flags override it)"),
+        FlagSpec::switch("allow-unknown-keys", "warn instead of erroring on unknown config keys"),
+        FlagSpec::arg("scenario", "NAMES", "scenario name, comma list, or \"all\""),
+        FlagSpec::switch("list-scenarios", "list the scenario catalog and exit"),
+        FlagSpec::arg("clients", "N", "fleet size"),
+        FlagSpec::arg("rounds", "R", "simulated rounds"),
+        FlagSpec::arg("per-round", "K", "aggregation target per round"),
+        FlagSpec::arg("local-steps", "N", "local SGD steps per selected device"),
+        FlagSpec::arg("policy", "NAME", "selection strategy"),
+        FlagSpec::arg("summary", "NAME", "summary engine for cluster refreshes"),
+        FlagSpec::arg("clusters", "K", "device clusters (0 = dataset groups)"),
+        FlagSpec::arg("refresh-every", "N", "re-summarize + recluster every N rounds"),
+        FlagSpec::arg("threads", "N", "refresh worker threads (never changes results)"),
+        FlagSpec::arg("step-secs", "F", "modeled host seconds per local step"),
+        FlagSpec::arg("update-bytes", "B", "model-update upload bytes per client"),
+        FlagSpec::arg("seed", "N", "run seed"),
+        FlagSpec::arg("out-dir", "DIR", "per-scenario JSONL reports + journals"),
+        FlagSpec::arg("bench-json", "PATH", "aggregate BENCH_sim.json artifact"),
+    ],
+};
+
+const ARTIFACTS: CommandSpec = CommandSpec {
+    name: "artifacts",
+    blurb: "list the AOT artifacts the runtime can execute",
+    flags: &[],
+};
+
+const JOURNAL: CommandSpec = CommandSpec {
+    name: "journal",
+    blurb: "inspect an event journal: header, phase counts, digest",
+    flags: &[FlagSpec::arg("path", "FILE", "journal JSONL to inspect")],
+};
+
+const COMMANDS: &[&CommandSpec] =
+    &[&TRAIN, &SUMMARIZE, &CLUSTER, &RUN_SIM, &ARTIFACTS, &JOURNAL];
+
+fn cfg_from_flags(p: &Parsed) -> Result<ExperimentConfig> {
+    let allow_unknown = p.has("allow-unknown-keys");
+    let mut cfg = if let Some(path) = p.get("config") {
+        ExperimentConfig::load_with(path, allow_unknown)?
     } else {
         ExperimentConfig::default()
     };
-    if let Some(v) = flags.get("dataset") {
-        cfg.dataset = v.clone();
-    }
-    if let Some(v) = flags.get("clients") {
-        cfg.n_clients = v.parse().context("--clients")?;
-    }
-    if let Some(v) = flags.get("rounds") {
-        cfg.rounds = v.parse().context("--rounds")?;
-    }
-    if let Some(v) = flags.get("per-round") {
-        cfg.per_round = v.parse().context("--per-round")?;
-    }
-    if let Some(v) = flags.get("local-steps") {
-        cfg.local_steps = v.parse().context("--local-steps")?;
-    }
-    if let Some(v) = flags.get("lr") {
-        cfg.lr = v.parse().context("--lr")?;
-    }
-    if let Some(v) = flags.get("policy") {
-        cfg.policy = v.clone();
-    }
-    if let Some(v) = flags.get("summary") {
-        cfg.summary = v.clone();
-    }
-    if let Some(v) = flags.get("refresh-every") {
-        cfg.refresh_every = v.parse().context("--refresh-every")?;
-    }
-    if let Some(v) = flags.get("cluster-backend") {
-        cfg.cluster_backend = v.clone();
-    }
-    if let Some(v) = flags.get("kmeans-pruning") {
-        cfg.kmeans_pruning = v.clone();
-    }
-    if let Some(v) = flags.get("refresh-threads") {
-        cfg.refresh_threads = v.parse().context("--refresh-threads")?;
-    }
-    if let Some(v) = flags.get("summary-cache") {
-        cfg.summary_cache = v.parse().context("--summary-cache")?;
-    }
-    if let Some(v) = flags.get("summary-fused") {
-        cfg.summary_fused = v.parse().context("--summary-fused")?;
-    }
-    if let Some(v) = flags.get("store-capacity") {
-        cfg.store_capacity = v.parse().context("--store-capacity")?;
-    }
-    if let Some(v) = flags.get("target-accuracy") {
-        cfg.target_accuracy = v.parse().context("--target-accuracy")?;
-    }
-    if let Some(v) = flags.get("seed") {
-        cfg.seed = v.parse().context("--seed")?;
-    }
-    if let Some(v) = flags.get("out") {
-        cfg.out = v.clone();
-    }
+    p.set_str("dataset", &mut cfg.dataset);
+    p.set("clients", &mut cfg.n_clients)?;
+    p.set("rounds", &mut cfg.rounds)?;
+    p.set("per-round", &mut cfg.per_round)?;
+    p.set("local-steps", &mut cfg.local_steps)?;
+    p.set("lr", &mut cfg.lr)?;
+    p.set_str("policy", &mut cfg.policy);
+    p.set_str("summary", &mut cfg.summary);
+    p.set("refresh-every", &mut cfg.refresh_every)?;
+    p.set_str("cluster-backend", &mut cfg.cluster_backend);
+    p.set_str("kmeans-pruning", &mut cfg.kmeans_pruning);
+    p.set("refresh-threads", &mut cfg.refresh_threads)?;
+    p.set("summary-cache", &mut cfg.summary_cache)?;
+    p.set("summary-fused", &mut cfg.summary_fused)?;
+    p.set("store-capacity", &mut cfg.store_capacity)?;
+    p.set("target-accuracy", &mut cfg.target_accuracy)?;
+    p.set("seed", &mut cfg.seed)?;
+    p.set_str("out", &mut cfg.out);
+    p.set_str("journal", &mut cfg.journal);
     Ok(cfg)
 }
 
-fn sim_cfg_from_flags(flags: &HashMap<String, String>) -> Result<SimConfig> {
-    let mut cfg = if let Some(path) = flags.get("config") {
-        SimConfig::load(path)?
+fn sim_cfg_from_flags(p: &Parsed) -> Result<SimConfig> {
+    let allow_unknown = p.has("allow-unknown-keys");
+    let mut cfg = if let Some(path) = p.get("config") {
+        SimConfig::load_with(path, allow_unknown)?
     } else {
         SimConfig::default()
     };
-    if let Some(v) = flags.get("scenario") {
-        cfg.scenario = v.clone();
-    }
-    if let Some(v) = flags.get("clients") {
-        cfg.n_clients = v.parse().context("--clients")?;
-    }
-    if let Some(v) = flags.get("rounds") {
-        cfg.rounds = v.parse().context("--rounds")?;
-    }
-    if let Some(v) = flags.get("per-round") {
-        cfg.per_round = v.parse().context("--per-round")?;
-    }
-    if let Some(v) = flags.get("local-steps") {
-        cfg.local_steps = v.parse().context("--local-steps")?;
-    }
-    if let Some(v) = flags.get("policy") {
-        cfg.policy = v.clone();
-    }
-    if let Some(v) = flags.get("summary") {
-        cfg.summary = v.clone();
-    }
-    if let Some(v) = flags.get("clusters") {
-        cfg.clusters = v.parse().context("--clusters")?;
-    }
-    if let Some(v) = flags.get("refresh-every") {
-        cfg.refresh_every = v.parse().context("--refresh-every")?;
-    }
-    if let Some(v) = flags.get("threads") {
-        cfg.threads = v.parse().context("--threads")?;
-    }
-    if let Some(v) = flags.get("step-secs") {
-        cfg.train_step_host_secs = v.parse().context("--step-secs")?;
-    }
-    if let Some(v) = flags.get("update-bytes") {
-        cfg.update_bytes = v.parse().context("--update-bytes")?;
-    }
-    if let Some(v) = flags.get("seed") {
-        cfg.seed = v.parse().context("--seed")?;
-    }
-    if let Some(v) = flags.get("out-dir") {
-        cfg.out_dir = v.clone();
-    }
+    p.set_str("scenario", &mut cfg.scenario);
+    p.set("clients", &mut cfg.n_clients)?;
+    p.set("rounds", &mut cfg.rounds)?;
+    p.set("per-round", &mut cfg.per_round)?;
+    p.set("local-steps", &mut cfg.local_steps)?;
+    p.set_str("policy", &mut cfg.policy);
+    p.set_str("summary", &mut cfg.summary);
+    p.set("clusters", &mut cfg.clusters)?;
+    p.set("refresh-every", &mut cfg.refresh_every)?;
+    p.set("threads", &mut cfg.threads)?;
+    p.set("step-secs", &mut cfg.train_step_host_secs)?;
+    p.set("update-bytes", &mut cfg.update_bytes)?;
+    p.set("seed", &mut cfg.seed)?;
+    p.set_str("out-dir", &mut cfg.out_dir);
     Ok(cfg)
 }
 
-fn cmd_run_sim(flags: HashMap<String, String>) -> Result<()> {
-    if flags.contains_key("list-scenarios") {
+fn cmd_run_sim(p: Parsed) -> Result<()> {
+    if p.has("list-scenarios") {
         for sc in Scenario::catalog() {
-            println!("{:<16} {}", sc.name, sc.blurb);
+            println!("{:<20} {}", sc.name, sc.blurb);
         }
         return Ok(());
     }
-    let cfg = sim_cfg_from_flags(&flags)?;
+    let cfg = sim_cfg_from_flags(&p)?;
     let names: Vec<String> = if cfg.scenario == "all" {
         Scenario::NAMES.iter().map(|s| s.to_string()).collect()
     } else {
@@ -180,13 +192,27 @@ fn cmd_run_sim(flags: HashMap<String, String>) -> Result<()> {
         let sc = Scenario::by_name(name)
             .with_context(|| format!("unknown scenario {name:?} (try --list-scenarios)"))?;
         let t0 = std::time::Instant::now();
-        let rep = Simulator::new(cfg.clone(), sc)?.run()?;
+        // Crash scenarios run the full kill → recover-from-journal → resume
+        // protocol and assert digest equality with an uninterrupted twin;
+        // the rest run straight through (journaled either way).
+        let (rep, journal) = if let Some(crash) = sc.crash {
+            let r = run_with_recovery(cfg.clone(), sc)?;
+            println!(
+                "  [{name}] crashed at {crash:?}, recovered {} closed rounds from the \
+                 journal; resumed run matches the uninterrupted digest {:#018x}",
+                r.recovered_rounds,
+                r.uninterrupted_digest
+            );
+            (r.report, r.journal)
+        } else {
+            Simulator::new(cfg.clone(), sc)?.run_journaled()?
+        };
         let host = t0.elapsed().as_secs_f64();
         let t = rep.totals();
         println!(
-            "scenario {:<16} policy {:<12} n {:>6}  sim {:>10.1}s  \
+            "scenario {:<20} policy {:<12} n {:>6}  sim {:>10.1}s  \
              refresh {:>8.1}s  select {:>7.3}s  compute {:>8.1}s  upload {:>7.1}s  \
-             coverage {:.3}  completed/dropped/timed_out {}/{}/{}",
+             coverage {:.3}  completed/dropped/timed_out {}/{}/{}  journal {:#018x}",
             rep.scenario,
             rep.policy,
             rep.n_clients,
@@ -198,7 +224,8 @@ fn cmd_run_sim(flags: HashMap<String, String>) -> Result<()> {
             t.coverage,
             t.completed,
             t.dropped,
-            t.timed_out
+            t.timed_out,
+            journal.digest()
         );
         for r in &rep.rounds {
             println!(
@@ -217,11 +244,13 @@ fn cmd_run_sim(flags: HashMap<String, String>) -> Result<()> {
         if !cfg.out_dir.is_empty() {
             let path = format!("{}/sim_{}_{}.jsonl", cfg.out_dir, rep.scenario, rep.policy);
             rep.write_jsonl(&path)?;
-            println!("  wrote {path}");
+            let jpath = format!("{}/sim_{}_{}.journal", cfg.out_dir, rep.scenario, rep.policy);
+            journal.write(&jpath)?;
+            println!("  wrote {path} and {jpath}");
         }
         entries.push(rep.bench_entry_json(host));
     }
-    if let Some(path) = flags.get("bench-json") {
+    if let Some(path) = p.get("bench-json") {
         if let Some(dir) = std::path::Path::new(path).parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)?;
@@ -233,8 +262,8 @@ fn cmd_run_sim(flags: HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(flags: HashMap<String, String>) -> Result<()> {
-    let cfg = cfg_from_flags(&flags)?;
+fn cmd_train(p: Parsed) -> Result<()> {
+    let cfg = cfg_from_flags(&p)?;
     let out = cfg.out.clone();
     println!(
         "feddde train: dataset={} clients={} rounds={} policy={} summary={}",
@@ -244,7 +273,22 @@ fn cmd_train(flags: HashMap<String, String>) -> Result<()> {
         cfg.policy,
         cfg.summary
     );
-    let mut coord = Coordinator::new(cfg, Engine::open_default()?)?;
+    let mut coord = if p.has("resume") {
+        if cfg.journal.is_empty() {
+            bail!("--resume needs --journal PATH (or journal = \"...\" in the config)");
+        }
+        let journal = EventJournal::load(&cfg.journal)?;
+        let coord = Coordinator::recover(cfg, Engine::open_default()?, &journal)?;
+        println!(
+            "recovered {} closed rounds from {} (journal digest {:#018x})",
+            coord.rounds_closed(),
+            coord.cfg.journal,
+            coord.journal().digest()
+        );
+        coord
+    } else {
+        Coordinator::new(cfg, Engine::open_default()?)?
+    };
     coord.run()?;
     let log = &coord.log;
     for r in &log.rounds {
@@ -254,11 +298,12 @@ fn cmd_train(flags: HashMap<String, String>) -> Result<()> {
         );
     }
     println!(
-        "final acc {:.4} (best {:.4}) after {} rounds, sim time {:.1}s",
+        "final acc {:.4} (best {:.4}) after {} rounds, sim time {:.1}s, journal digest {:#018x}",
         log.final_accuracy(),
         log.best_accuracy(),
         log.rounds.len(),
-        log.rounds.last().map(|r| r.sim_time).unwrap_or(0.0)
+        log.rounds.last().map(|r| r.sim_time).unwrap_or(0.0),
+        coord.journal().digest()
     );
     if !out.is_empty() {
         log.write_jsonl(&out)?;
@@ -267,13 +312,13 @@ fn cmd_train(flags: HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_summarize(flags: HashMap<String, String>) -> Result<()> {
-    let dataset = flags.get("dataset").map(String::as_str).unwrap_or("tiny");
+fn cmd_summarize(p: Parsed) -> Result<()> {
+    let dataset = p.get("dataset").unwrap_or("tiny");
     let mut spec = DatasetSpec::by_name(dataset).context("unknown dataset")?;
-    if let Some(v) = flags.get("clients") {
-        spec = spec.with_clients(v.parse()?);
+    if let Some(v) = p.opt::<usize>("clients")? {
+        spec = spec.with_clients(v);
     }
-    let method = flags.get("method").map(String::as_str).unwrap_or("encoder");
+    let method = p.get("method").unwrap_or("encoder");
     let engine = Engine::open_default()?;
     let se = feddde::summary::by_name(method, &spec)?;
     let partition = Partition::build(&spec);
@@ -305,14 +350,14 @@ fn cmd_summarize(flags: HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_cluster(flags: HashMap<String, String>) -> Result<()> {
-    let dataset = flags.get("dataset").map(String::as_str).unwrap_or("tiny");
+fn cmd_cluster(p: Parsed) -> Result<()> {
+    let dataset = p.get("dataset").unwrap_or("tiny");
     let mut spec = DatasetSpec::by_name(dataset).context("unknown dataset")?;
-    if let Some(v) = flags.get("clients") {
-        spec = spec.with_clients(v.parse()?);
+    if let Some(v) = p.opt::<usize>("clients")? {
+        spec = spec.with_clients(v);
     }
-    let method = flags.get("method").map(String::as_str).unwrap_or("kmeans");
-    let summary = flags.get("summary").map(String::as_str).unwrap_or("encoder");
+    let method = p.get("method").unwrap_or("kmeans");
+    let summary = p.get("summary").unwrap_or("encoder");
     let engine = Engine::open_default()?;
     let se = feddde::summary::by_name(summary, &spec)?;
     let partition = Partition::build(&spec);
@@ -342,10 +387,8 @@ fn cmd_cluster(flags: HashMap<String, String>) -> Result<()> {
             minibatch::fit(&r.summaries, &mcfg).assignments
         }
         "dbscan" => {
-            let eps = flags
-                .get("eps")
-                .map(|v| v.parse())
-                .transpose()?
+            let eps = p
+                .opt::<f64>("eps")?
                 .unwrap_or_else(|| dbscan::suggest_eps(&r.summaries, 4, 64));
             dbscan::fit(&r.summaries, &dbscan::DbscanConfig::new(eps, 4)).total_labels()
         }
@@ -371,44 +414,61 @@ fn cmd_artifacts() -> Result<()> {
     Ok(())
 }
 
+fn cmd_journal(p: Parsed) -> Result<()> {
+    let path = p.get("path").context("--path FILE is required")?;
+    let j = EventJournal::load(path)?;
+    let h = j.header();
+    println!(
+        "{path}: {} journal (seed {} policy {} scenario {:?})",
+        h.kind, h.seed, h.policy, h.scenario
+    );
+    println!(
+        "  {} records, {} of {} rounds closed, complete prefix {} records",
+        j.len(),
+        j.rounds_closed(),
+        h.rounds,
+        j.complete_prefix().len()
+    );
+    println!("  digest {:#018x}", j.digest());
+    Ok(())
+}
+
+fn usage() -> String {
+    let mut s = String::from(
+        "feddde — Efficient Data Distribution Estimation for Accelerated FL\n\n\
+         usage: feddde <command> [flags]   (feddde <command> --help for flags)\n\n",
+    );
+    for c in COMMANDS {
+        s.push_str(&format!("  {:<10} {}\n", c.name, c.blurb));
+    }
+    s.push_str(&format!(
+        "\nselection policies: {}\n\
+         env: FEDDDE_THREADS caps refresh parallelism (output is identical\n\
+         for any value; see rust/tests/determinism.rs)",
+        STRATEGY_NAMES.join("|")
+    ));
+    s
+}
+
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let cmd = args.first().map(String::as_str).unwrap_or("help");
-    let flags = parse_flags(&args[1.min(args.len())..]);
+    let Some(spec) = COMMANDS.iter().find(|c| c.name == cmd) else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let p = Parsed::parse(spec, &args[1..])?;
+    if p.help {
+        println!("{}", spec.help());
+        return Ok(());
+    }
     match cmd {
-        "train" => cmd_train(flags),
-        "summarize" => cmd_summarize(flags),
-        "cluster" => cmd_cluster(flags),
-        "run-sim" => cmd_run_sim(flags),
+        "train" => cmd_train(p),
+        "summarize" => cmd_summarize(p),
+        "cluster" => cmd_cluster(p),
+        "run-sim" => cmd_run_sim(p),
         "artifacts" => cmd_artifacts(),
-        _ => {
-            println!(
-                "feddde — Efficient Data Distribution Estimation for Accelerated FL\n\n\
-                 usage: feddde <train|summarize|cluster|run-sim|artifacts> [--flags]\n\
-                   train      --dataset tiny --rounds 30 --policy cluster [--config f.toml]\n\
-                              refresh pipeline: --cluster-backend auto|lloyd|minibatch\n\
-                              --refresh-threads N (0=auto) --summary-cache true|false\n\
-                              --kmeans-pruning auto|off|bounds (bound-pruned K-means;\n\
-                              bitwise identical to the naive scan, just faster)\n\
-                              --summary-fused true|false (streaming generate->coreset->\n\
-                              project; false materializes raw data — bitwise identical)\n\
-                              --store-capacity N (bound the columnar summary store;\n\
-                              0 = one row per client, LRU eviction recomputes exactly)\n\
-                   summarize  --dataset tiny --method encoder|py|pxy|jl [--clients N]\n\
-                   cluster    --dataset tiny --method kmeans|minibatch|dbscan [--summary encoder]\n\
-                   run-sim    discrete-event fleet simulator (end-to-end overhead study):\n\
-                              --scenario <name|name,name|all> (--list-scenarios to list)\n\
-                              --clients N --rounds R --per-round K --policy {}\n\
-                              --summary jl|encoder|py|pxy --refresh-every N --threads T\n\
-                              --step-secs S --update-bytes B --seed S [--config f.toml [sim]]\n\
-                              --out-dir results/sim (per-round JSONL + event stream)\n\
-                              --bench-json results/BENCH_sim.json (aggregate artifact)\n\
-                   artifacts  list AOT artifacts\n\
-                 env: FEDDDE_THREADS caps refresh parallelism (output is identical\n\
-                 for any value; see rust/tests/determinism.rs)",
-                STRATEGY_NAMES.join("|")
-            );
-            Ok(())
-        }
+        "journal" => cmd_journal(p),
+        _ => unreachable!(),
     }
 }

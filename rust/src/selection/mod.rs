@@ -64,35 +64,54 @@ pub trait SelectionPolicy {
 /// list instead of each hand-maintaining its own match arms.
 pub const STRATEGY_NAMES: [&str; 5] = ["random", "round_robin", "cluster", "oort", "powd"];
 
-/// Build a policy by name, wiring the round's local-step count into the
-/// duration-aware strategies (cluster, oort) so their expected-duration
-/// ranking matches what the round will actually run.
-pub fn build(name: &str, local_steps: usize) -> anyhow::Result<Box<dyn SelectionPolicy>> {
-    let local_steps = local_steps.max(1);
-    Ok(match name {
-        "random" => Box::new(RandomSelection),
-        "round_robin" => Box::new(RoundRobinSelection::default()),
-        "cluster" => Box::new(ClusterSelection { local_steps, ..Default::default() }),
-        "oort" => Box::new(OortSelection { local_steps, ..Default::default() }),
-        "powd" => Box::new(PowDSelection::default()),
-        other => anyhow::bail!(
-            "unknown selection policy {other:?} (known: {})",
-            STRATEGY_NAMES.join(", ")
-        ),
-    })
+/// The one policy factory — shared by the `train` CLI, the coordinator, the
+/// fleet simulator, and `benches/sim_overhead` (it replaced the old
+/// `build`/`by_name`/`from_config` trio). Name in, boxed policy out, one
+/// `anyhow::Result` error path:
+///
+/// ```ignore
+/// let policy = selection::Builder::new("cluster").local_steps(4).build()?;
+/// let policy = selection::Builder::from_config(&cfg).build()?;
+/// ```
+#[derive(Debug, Clone)]
+pub struct Builder {
+    name: String,
+    local_steps: usize,
 }
 
-/// The one strategy factory shared by the `train` CLI, the coordinator, and
-/// the fleet simulator: `ExperimentConfig::policy` + `local_steps` in, boxed
-/// policy out.
-pub fn from_config(cfg: &crate::config::ExperimentConfig) -> anyhow::Result<Box<dyn SelectionPolicy>> {
-    build(&cfg.policy, cfg.local_steps)
-}
+impl Builder {
+    /// Start from a strategy name (validated at `build` time).
+    pub fn new(name: &str) -> Self {
+        Builder { name: name.to_string(), local_steps: 4 }
+    }
 
-/// Build a policy by config name (legacy `Option` form; `build` carries the
-/// error message and the local-steps wiring).
-pub fn by_name(name: &str) -> Option<Box<dyn SelectionPolicy>> {
-    build(name, 4).ok()
+    /// Start from an experiment config: policy name + local-step count.
+    pub fn from_config(cfg: &crate::config::ExperimentConfig) -> Self {
+        Builder::new(&cfg.policy).local_steps(cfg.local_steps)
+    }
+
+    /// Wire the round's local-step count into the duration-aware strategies
+    /// (cluster, oort) so their expected-duration ranking matches what the
+    /// round will actually run. Clamped to at least 1.
+    pub fn local_steps(mut self, n: usize) -> Self {
+        self.local_steps = n.max(1);
+        self
+    }
+
+    pub fn build(self) -> anyhow::Result<Box<dyn SelectionPolicy>> {
+        let local_steps = self.local_steps;
+        Ok(match self.name.as_str() {
+            "random" => Box::new(RandomSelection),
+            "round_robin" => Box::new(RoundRobinSelection::default()),
+            "cluster" => Box::new(ClusterSelection { local_steps, ..Default::default() }),
+            "oort" => Box::new(OortSelection { local_steps, ..Default::default() }),
+            "powd" => Box::new(PowDSelection::default()),
+            other => anyhow::bail!(
+                "unknown selection policy {other:?} (known: {})",
+                STRATEGY_NAMES.join(", ")
+            ),
+        })
+    }
 }
 
 /// Shared invariant checks used by tests and debug assertions: selections
@@ -168,8 +187,8 @@ mod tests {
     fn all_policies_produce_valid_selections() {
         let fx = Fixture::new(60, 4, 1);
         let views = fx.views();
-        for name in ["random", "round_robin", "cluster", "oort", "powd"] {
-            let mut p = by_name(name).unwrap();
+        for name in STRATEGY_NAMES {
+            let mut p = Builder::new(name).build().unwrap();
             let mut rng = Rng::new(2);
             for round in 0..10 {
                 let sel = p.select(&views, round, 8, &mut rng);
@@ -189,8 +208,8 @@ mod tests {
             let fx = Fixture::new(n, g.usize_in(1, 5), g.case as u64);
             let views = fx.views();
             let k = g.usize_in(1, n);
-            for name in ["random", "round_robin", "cluster", "oort", "powd"] {
-                let mut p = by_name(name).unwrap();
+            for name in STRATEGY_NAMES {
+                let mut p = Builder::new(name).build().unwrap();
                 let mut rng = Rng::new(g.case as u64);
                 let sel = p.select(&views, 0, k, &mut rng);
                 assert!(validate_selection(&sel, &views, k), "{name}");
@@ -199,15 +218,15 @@ mod tests {
     }
 
     #[test]
-    fn unknown_policy_is_none() {
-        assert!(by_name("nope").is_none());
-        assert!(build("nope", 4).is_err());
+    fn unknown_policy_is_an_error() {
+        let err = Builder::new("nope").build().unwrap_err();
+        assert!(format!("{err:#}").contains("known:"), "error should list known names");
     }
 
     #[test]
     fn registry_names_all_build() {
         for name in STRATEGY_NAMES {
-            let p = build(name, 2).unwrap();
+            let p = Builder::new(name).local_steps(2).build().unwrap();
             assert_eq!(p.name(), name, "registry name and policy name diverged");
         }
     }
@@ -219,9 +238,12 @@ mod tests {
             local_steps: 7,
             ..Default::default()
         };
-        let p = from_config(&cfg).unwrap();
+        let p = Builder::from_config(&cfg).build().unwrap();
         assert_eq!(p.name(), "cluster");
         let bad = crate::config::ExperimentConfig { policy: "nope".into(), ..Default::default() };
-        assert!(from_config(&bad).is_err());
+        assert!(Builder::from_config(&bad).build().is_err());
+        // local_steps is clamped to at least 1.
+        let p = Builder::new("oort").local_steps(0).build().unwrap();
+        assert_eq!(p.name(), "oort");
     }
 }

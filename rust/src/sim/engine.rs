@@ -31,6 +31,17 @@
 //! before the round closed), or *timed out* (still in flight when the round
 //! closed — cut by the deadline or the quorum). FedAvg runs over the
 //! completed updates only.
+//!
+//! **State machine + journal.** Every round is driven through the same
+//! [`CoordinatorMachine`] the batch coordinator uses: `start_round` (refresh
+//! handler) → `rendezvous` (availability) → `start_training` (selection) →
+//! `end_training` (terminal classification) → `aggregate` (FedAvg +
+//! metrics), with each transition appended to the run's [`EventJournal`].
+//! [`Simulator::recover`] rebuilds a crashed run from its journal by
+//! deterministic re-execution (the machine asserts every re-derived
+//! transition against the journaled one), and [`run_with_recovery`] is the
+//! self-verifying kill → recover → resume harness the crash scenarios and
+//! `make replay-smoke` run through.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -39,6 +50,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::SimConfig;
 use crate::coordinator::fedavg::fedavg;
+use crate::coordinator::journal::{
+    CoordinatorMachine, EventJournal, JournalHeader, Transition,
+};
 use crate::coordinator::summaries::{FleetRefresher, RefreshOptions};
 use crate::data::generator::Generator;
 use crate::data::partition::Partition;
@@ -47,7 +61,7 @@ use crate::device::{DeviceProfile, FleetModel};
 use crate::runtime::Engine;
 use crate::selection::{self, ClientView, SelectionPolicy};
 use crate::sim::report::{RoundReport, SimEventRecord, SimReport};
-use crate::sim::scenario::{Aggregation, Scenario};
+use crate::sim::scenario::{Aggregation, CrashPoint, Scenario};
 use crate::summary::SummaryEngine;
 use crate::util::rng::Rng;
 use crate::util::stats;
@@ -229,6 +243,11 @@ pub struct Simulator {
     global: Vec<f32>,
     clock: f64,
     queue: EventQueue,
+    /// The event-sourced phase machine every round runs through; owns the
+    /// transition journal.
+    machine: CoordinatorMachine,
+    /// Accumulating run report (rounds + popped-event stream).
+    report: SimReport,
 }
 
 impl Simulator {
@@ -265,7 +284,7 @@ impl Simulator {
         // (phase 0 unless the scenario drifts at round 0).
         let fleet = FleetModel::default()
             .sample_fleet_at(spec.n_clients, scenario.drift.phase_at(0));
-        let policy = selection::build(&cfg.policy, cfg.local_steps)?;
+        let policy = selection::Builder::new(&cfg.policy).local_steps(cfg.local_steps).build()?;
         let refresher = FleetRefresher::new(RefreshOptions {
             threads: cfg.threads,
             // Zero-copy mode: the store's arena IS the fleet matrix the
@@ -274,6 +293,23 @@ impl Simulator {
             ..Default::default()
         });
         let n = spec.n_clients;
+        let machine = CoordinatorMachine::new(JournalHeader {
+            kind: "sim".into(),
+            seed: cfg.seed,
+            rounds: cfg.rounds,
+            n_clients: n,
+            per_round: cfg.per_round,
+            policy: cfg.policy.clone(),
+            scenario: scenario.name.clone(),
+        });
+        let report = SimReport::new(
+            &scenario.name,
+            &cfg.policy,
+            n,
+            cfg.per_round,
+            cfg.rounds,
+            cfg.seed,
+        );
         Ok(Simulator {
             cfg,
             scenario,
@@ -291,7 +327,19 @@ impl Simulator {
             global: vec![0.0; UPDATE_DIM],
             clock: 0.0,
             queue: EventQueue::new(),
+            machine,
+            report,
         })
+    }
+
+    /// The phase machine (and through it the journal accumulated so far).
+    pub fn machine(&self) -> &CoordinatorMachine {
+        &self.machine
+    }
+
+    /// Rounds fully closed so far — also the next round's number.
+    pub fn rounds_closed(&self) -> usize {
+        self.machine.rounds_closed()
     }
 
     /// Is a summary + clustering refresh due at `round`?
@@ -345,236 +393,398 @@ impl Simulator {
             .collect()
     }
 
-    /// Run all configured rounds; consumes the simulator.
-    pub fn run(mut self) -> Result<SimReport> {
+    /// Run the next round through the phase machine: every phase boundary is
+    /// a journaled transition (`start_round` → `rendezvous` →
+    /// `start_training` → `end_training` → `aggregate`).
+    pub fn run_round(&mut self) -> Result<()> {
         let n = self.spec.n_clients;
-        let mut report = SimReport::new(
-            &self.scenario.name,
-            &self.cfg.policy,
-            n,
-            self.cfg.per_round,
-            self.cfg.rounds,
-            self.cfg.seed,
-        );
-        for round in 0..self.cfg.rounds {
-            let t_start = self.clock;
-            let (refresh_secs, refresh_recomputed) = self.maybe_refresh(round)?;
+        let round = self.machine.rounds_closed();
+        let t_start = self.clock;
 
-            // Availability + fleet view, then selection (with over-selection).
-            let want = ((self.cfg.per_round as f64) * self.scenario.over_select.max(1.0))
-                .ceil() as usize;
-            let want = want.clamp(self.cfg.per_round, n);
-            let selection_secs = selection_model_secs(&self.cfg.policy, n, want);
-            let t_sel = t_start + refresh_secs + selection_secs;
+        // start_round handler: refresh scheduling (summaries + clustering).
+        self.machine.apply(Transition::RoundStarted { round })?;
+        let (refresh_secs, refresh_recomputed) = self.maybe_refresh(round)?;
 
-            let views: Vec<ClientView<'_>> = self
-                .partition
-                .clients
-                .iter()
-                .enumerate()
-                .map(|(i, c)| ClientView {
-                    client_id: c.client_id,
-                    cluster: self.clusters[i],
-                    device: &self.fleet[i],
-                    available: self.scenario.available(&self.fleet[i], round, self.cfg.seed),
-                    n_samples: c.n_samples,
-                    last_loss: self.last_loss[i],
-                    step_host_secs: self.cfg.train_step_host_secs,
-                    upload_bytes: self.cfg.update_bytes,
-                })
-                .collect();
-            let mut sel_rng =
-                Rng::substream(self.cfg.seed, &[SALT_SELECT, round as u64]);
-            let selected = self.policy.select(&views, round, want, &mut sel_rng);
-            debug_assert!(selection::validate_selection(&selected, &views, want));
+        // rendezvous handler: establish per-device availability.
+        let avail: Vec<bool> = self
+            .fleet
+            .iter()
+            .map(|d| self.scenario.available(d, round, self.cfg.seed))
+            .collect();
+        let available = avail.iter().filter(|&&a| a).count();
+        self.machine.apply(Transition::FleetRendezvoused { round, available })?;
 
-            if selected.is_empty() {
-                // Nobody reachable (e.g. a flash-crowd trough): charge the
-                // coordinator overhead and move on.
-                self.clock = t_sel;
-                report.push_round(RoundReport {
-                    round,
-                    t_start,
-                    t_end: t_sel,
-                    round_secs: t_sel - t_start,
-                    refresh_secs,
-                    selection_secs,
-                    compute_secs: 0.0,
-                    upload_secs: 0.0,
-                    wait_secs: 0.0,
-                    selected: 0,
-                    completed: 0,
-                    dropped: 0,
-                    timed_out: 0,
-                    refresh_recomputed,
-                    aggregated: false,
-                    coverage: coverage(&self.completed_ever),
-                });
-                continue;
-            }
+        // start_training handler: policy ranking with over-selection.
+        let want = ((self.cfg.per_round as f64) * self.scenario.over_select.max(1.0))
+            .ceil() as usize;
+        let want = want.clamp(self.cfg.per_round, n);
+        let selection_secs = selection_model_secs(&self.cfg.policy, n, want);
+        let t_sel = t_start + refresh_secs + selection_secs;
 
-            // Schedule every selected client's terminal event, then the
-            // round deadline (client events first: at equal times the
-            // earlier-scheduled event pops first).
-            let mut launched: Vec<(usize, Launched)> = Vec::with_capacity(selected.len());
-            let mut expected: Vec<f64> = Vec::with_capacity(selected.len());
-            for &cid in &selected {
-                let v = &views[cid];
-                expected.push(v.expected_round_secs(self.cfg.local_steps));
-                let mult = self.scenario.straggler_mult(cid, round, self.cfg.seed);
-                let compute = self
-                    .fleet[cid]
-                    .compute_time(self.cfg.train_step_host_secs * self.cfg.local_steps as f64)
-                    * mult;
-                let upload = self.fleet[cid].upload_time(self.cfg.update_bytes);
-                // Sum compute + upload BEFORE adding the clock so the
-                // duration associates exactly like `expected_round_secs` —
-                // the p100 deadline then ties bitwise with the slowest
-                // client's completion instead of cutting it by one ulp.
-                let duration = compute + upload;
-                let done_t = t_sel + duration;
-                let mut drop_rng = Rng::substream(
-                    self.cfg.seed,
-                    &[SALT_DROPOUT, cid as u64, round as u64],
-                );
-                if drop_rng.f64() < self.scenario.dropout_rate {
-                    let at = t_sel + drop_rng.f64() * duration;
-                    self.queue.schedule(at, round, EventKind::ClientDropout { client: cid });
-                } else {
-                    self.queue.schedule(done_t, round, EventKind::ClientDone { client: cid });
-                }
-                launched.push((cid, Launched { compute, upload, done_t }));
-            }
+        let views: Vec<ClientView<'_>> = self
+            .partition
+            .clients
+            .iter()
+            .enumerate()
+            .map(|(i, c)| ClientView {
+                client_id: c.client_id,
+                cluster: self.clusters[i],
+                device: &self.fleet[i],
+                available: avail[i],
+                n_samples: c.n_samples,
+                last_loss: self.last_loss[i],
+                step_host_secs: self.cfg.train_step_host_secs,
+                upload_bytes: self.cfg.update_bytes,
+            })
+            .collect();
+        let mut sel_rng = Rng::substream(self.cfg.seed, &[SALT_SELECT, round as u64]);
+        let selected = self.policy.select(&views, round, want, &mut sel_rng);
+        debug_assert!(selection::validate_selection(&selected, &views, want));
+        self.machine
+            .apply(Transition::ClientsSelected { round, selected: selected.clone() })?;
+
+        if selected.is_empty() {
+            // Nobody reachable (e.g. a flash-crowd trough): charge the
+            // coordinator overhead and close an empty round — it still walks
+            // every phase so the journal stays uniform (5 records/round).
             drop(views);
-            let deadline_pct = self.scenario.deadline_pct.clamp(1.0, 100.0);
-            let deadline_t = t_sel + stats::percentile(&expected, deadline_pct);
-            self.queue.schedule(deadline_t, round, EventKind::Deadline);
+            self.machine.apply(Transition::TrainingEnded {
+                round,
+                completed: Vec::new(),
+                dropped: Vec::new(),
+                timed_out: Vec::new(),
+            })?;
+            self.machine.apply(Transition::RoundAggregated { round, aggregated: false })?;
+            self.clock = t_sel;
+            self.report.push_round(RoundReport {
+                round,
+                t_start,
+                t_end: t_sel,
+                round_secs: t_sel - t_start,
+                refresh_secs,
+                selection_secs,
+                compute_secs: 0.0,
+                upload_secs: 0.0,
+                wait_secs: 0.0,
+                selected: 0,
+                completed: 0,
+                dropped: 0,
+                timed_out: 0,
+                refresh_recomputed,
+                aggregated: false,
+                coverage: coverage(&self.completed_ever),
+            });
+            return Ok(());
+        }
 
-            // Aggregation target: sync closes once `per_round` clients have
-            // completed (over-selected extras are cut — that is what
-            // over-selection buys), at the deadline, or when everyone has
-            // resolved; partial-async (quorum) closes on the first
-            // `frac × selected` completions.
-            let target = match self.scenario.aggregation {
-                Aggregation::Sync => self.cfg.per_round.min(selected.len()),
-                Aggregation::Quorum { frac } => {
-                    ((selected.len() as f64 * frac).ceil() as usize).clamp(1, selected.len())
-                }
-            };
+        // Schedule every selected client's terminal event, then the
+        // round deadline (client events first: at equal times the
+        // earlier-scheduled event pops first).
+        let mut launched: Vec<(usize, Launched)> = Vec::with_capacity(selected.len());
+        let mut expected: Vec<f64> = Vec::with_capacity(selected.len());
+        for &cid in &selected {
+            let v = &views[cid];
+            expected.push(v.expected_round_secs(self.cfg.local_steps));
+            let mult = self.scenario.straggler_mult(cid, round, self.cfg.seed);
+            let compute = self
+                .fleet[cid]
+                .compute_time(self.cfg.train_step_host_secs * self.cfg.local_steps as f64)
+                * mult;
+            let upload = self.fleet[cid].upload_time(self.cfg.update_bytes);
+            // Sum compute + upload BEFORE adding the clock so the
+            // duration associates exactly like `expected_round_secs` —
+            // the p100 deadline then ties bitwise with the slowest
+            // client's completion instead of cutting it by one ulp.
+            let duration = compute + upload;
+            let done_t = t_sel + duration;
+            let mut drop_rng = Rng::substream(
+                self.cfg.seed,
+                &[SALT_DROPOUT, cid as u64, round as u64],
+            );
+            if drop_rng.f64() < self.scenario.dropout_rate {
+                let at = t_sel + drop_rng.f64() * duration;
+                self.queue.schedule(at, round, EventKind::ClientDropout { client: cid });
+            } else {
+                self.queue.schedule(done_t, round, EventKind::ClientDone { client: cid });
+            }
+            launched.push((cid, Launched { compute, upload, done_t }));
+        }
+        drop(views);
+        let deadline_pct = self.scenario.deadline_pct.clamp(1.0, 100.0);
+        let deadline_t = t_sel + stats::percentile(&expected, deadline_pct);
+        self.queue.schedule(deadline_t, round, EventKind::Deadline);
 
-            // Run the round to its close. Events still pending at the close
-            // are CANCELLED, not fired: the coordinator stops listening, so
-            // those events never enter the stream and never advance the
-            // clock — which keeps the global event stream monotone across
-            // rounds.
-            let mut completed: Vec<usize> = Vec::new();
-            let mut dropped: Vec<usize> = Vec::new();
-            let mut close_t: Option<f64> = None;
-            while close_t.is_none() {
-                let ev = self
-                    .queue
-                    .pop()
-                    .expect("round cannot close: queue empty before the deadline");
-                report.push_event(SimEventRecord {
-                    time: ev.time,
-                    id: ev.id,
-                    round: ev.round,
-                    kind: ev.kind.name(),
-                    client: ev.kind.client(),
-                });
-                match &ev.kind {
-                    EventKind::ClientDone { client } => {
-                        completed.push(*client);
-                        if completed.len() >= target
-                            || completed.len() + dropped.len() == selected.len()
-                        {
-                            close_t = Some(ev.time);
-                        }
-                    }
-                    EventKind::ClientDropout { client } => {
-                        dropped.push(*client);
-                        if completed.len() + dropped.len() == selected.len() {
-                            close_t = Some(ev.time);
-                        }
-                    }
-                    EventKind::Deadline => {
+        // Aggregation target: sync closes once `per_round` clients have
+        // completed (over-selected extras are cut — that is what
+        // over-selection buys), at the deadline, or when everyone has
+        // resolved; partial-async (quorum) closes on the first
+        // `frac × selected` completions.
+        let target = match self.scenario.aggregation {
+            Aggregation::Sync => self.cfg.per_round.min(selected.len()),
+            Aggregation::Quorum { frac } => {
+                ((selected.len() as f64 * frac).ceil() as usize).clamp(1, selected.len())
+            }
+        };
+
+        // Run the round to its close. Events still pending at the close
+        // are CANCELLED, not fired: the coordinator stops listening, so
+        // those events never enter the stream and never advance the
+        // clock — which keeps the global event stream monotone across
+        // rounds.
+        let mut completed: Vec<usize> = Vec::new();
+        let mut dropped: Vec<usize> = Vec::new();
+        let mut close_t: Option<f64> = None;
+        while close_t.is_none() {
+            let ev = self
+                .queue
+                .pop()
+                .expect("round cannot close: queue empty before the deadline");
+            self.report.push_event(SimEventRecord {
+                time: ev.time,
+                id: ev.id,
+                round: ev.round,
+                kind: ev.kind.name(),
+                client: ev.kind.client(),
+            });
+            match &ev.kind {
+                EventKind::ClientDone { client } => {
+                    completed.push(*client);
+                    if completed.len() >= target
+                        || completed.len() + dropped.len() == selected.len()
+                    {
                         close_t = Some(ev.time);
                     }
                 }
-            }
-            let close_t = close_t.expect("loop exits only with a close time");
-            self.queue.cancel_all();
-            // Everything selected but neither completed nor dropped by the
-            // close was cut in flight: timed out. (Bool-vec membership keeps
-            // this O(selected), not O(selected²), at fleet scale.)
-            let mut resolved = vec![false; n];
-            for &c in completed.iter().chain(&dropped) {
-                resolved[c] = true;
-            }
-            let timed_out: Vec<usize> = launched
-                .iter()
-                .map(|(c, _)| *c)
-                .filter(|&c| !resolved[c])
-                .collect();
-            debug_assert_eq!(
-                completed.len() + dropped.len() + timed_out.len(),
-                selected.len(),
-                "client terminal states must partition the selection"
-            );
-
-            // FedAvg over the completed updates (sample-count weighted).
-            let aggregated = !completed.is_empty();
-            if aggregated {
-                let updates: Vec<(Vec<f32>, f64)> = completed
-                    .iter()
-                    .map(|&cid| {
-                        (
-                            self.client_update(cid, round),
-                            self.partition.clients[cid].n_samples as f64,
-                        )
-                    })
-                    .collect();
-                self.global = fedavg(&updates)?;
-                for &cid in &completed {
-                    self.completed_ever[cid] = true;
-                    self.last_loss[cid] = Some(self.observed_loss(cid, round));
+                EventKind::ClientDropout { client } => {
+                    dropped.push(*client);
+                    if completed.len() + dropped.len() == selected.len() {
+                        close_t = Some(ev.time);
+                    }
+                }
+                EventKind::Deadline => {
+                    close_t = Some(ev.time);
                 }
             }
-
-            // Wall-clock breakdown: the round's training segment is gated by
-            // the last completion; any tail beyond it (waiting out dropouts
-            // or the deadline) is `wait`.
-            let gating = completed
-                .last()
-                .map(|&cid| launched.iter().find(|(c, _)| *c == cid).unwrap().1);
-            let (compute_secs, upload_secs) =
-                gating.map(|l| (l.compute, l.upload)).unwrap_or((0.0, 0.0));
-            let wait_secs = match gating {
-                Some(l) => (close_t - l.done_t).max(0.0),
-                None => close_t - t_sel,
-            };
-            self.clock = close_t;
-            report.push_round(RoundReport {
-                round,
-                t_start,
-                t_end: close_t,
-                round_secs: close_t - t_start,
-                refresh_secs,
-                selection_secs,
-                compute_secs,
-                upload_secs,
-                wait_secs,
-                selected: selected.len(),
-                completed: completed.len(),
-                dropped: dropped.len(),
-                timed_out: timed_out.len(),
-                refresh_recomputed,
-                aggregated,
-                coverage: coverage(&self.completed_ever),
-            });
         }
-        Ok(report)
+        let close_t = close_t.expect("loop exits only with a close time");
+        self.queue.cancel_all();
+        // Everything selected but neither completed nor dropped by the
+        // close was cut in flight: timed out. (Bool-vec membership keeps
+        // this O(selected), not O(selected²), at fleet scale.)
+        let mut resolved = vec![false; n];
+        for &c in completed.iter().chain(&dropped) {
+            resolved[c] = true;
+        }
+        let timed_out: Vec<usize> = launched
+            .iter()
+            .map(|(c, _)| *c)
+            .filter(|&c| !resolved[c])
+            .collect();
+        debug_assert_eq!(
+            completed.len() + dropped.len() + timed_out.len(),
+            selected.len(),
+            "client terminal states must partition the selection"
+        );
+        // end_training handler: the terminal classification is the payload.
+        self.machine.apply(Transition::TrainingEnded {
+            round,
+            completed: completed.clone(),
+            dropped: dropped.clone(),
+            timed_out: timed_out.clone(),
+        })?;
+
+        // aggregate handler: FedAvg over the completed updates
+        // (sample-count weighted), then metrics emission.
+        let aggregated = !completed.is_empty();
+        if aggregated {
+            let updates: Vec<(Vec<f32>, f64)> = completed
+                .iter()
+                .map(|&cid| {
+                    (
+                        self.client_update(cid, round),
+                        self.partition.clients[cid].n_samples as f64,
+                    )
+                })
+                .collect();
+            self.global = fedavg(&updates)?;
+            for &cid in &completed {
+                self.completed_ever[cid] = true;
+                self.last_loss[cid] = Some(self.observed_loss(cid, round));
+            }
+        }
+        self.machine.apply(Transition::RoundAggregated { round, aggregated })?;
+
+        // Wall-clock breakdown: the round's training segment is gated by
+        // the last completion; any tail beyond it (waiting out dropouts
+        // or the deadline) is `wait`.
+        let gating = completed
+            .last()
+            .map(|&cid| launched.iter().find(|(c, _)| *c == cid).unwrap().1);
+        let (compute_secs, upload_secs) =
+            gating.map(|l| (l.compute, l.upload)).unwrap_or((0.0, 0.0));
+        let wait_secs = match gating {
+            Some(l) => (close_t - l.done_t).max(0.0),
+            None => close_t - t_sel,
+        };
+        self.clock = close_t;
+        self.report.push_round(RoundReport {
+            round,
+            t_start,
+            t_end: close_t,
+            round_secs: close_t - t_start,
+            refresh_secs,
+            selection_secs,
+            compute_secs,
+            upload_secs,
+            wait_secs,
+            selected: selected.len(),
+            completed: completed.len(),
+            dropped: dropped.len(),
+            timed_out: timed_out.len(),
+            refresh_recomputed,
+            aggregated,
+            coverage: coverage(&self.completed_ever),
+        });
+        Ok(())
     }
+
+    /// Run all configured rounds; consumes the simulator.
+    pub fn run(self) -> Result<SimReport> {
+        Ok(self.run_journaled()?.0)
+    }
+
+    /// Run all configured rounds and return the report plus the transition
+    /// journal; the report's header quotes the journal digest.
+    pub fn run_journaled(mut self) -> Result<(SimReport, EventJournal)> {
+        while self.machine.rounds_closed() < self.cfg.rounds {
+            self.run_round()?;
+        }
+        self.report.journal_digest = Some(self.machine.journal().digest());
+        Ok((self.report, self.machine.into_journal()))
+    }
+
+    /// Run up to the crash point, then die: returns the journal text as a
+    /// restart would find it on disk. An `AfterRound` crash leaves a clean
+    /// journal; a `MidRound` crash keeps the interrupted round's first three
+    /// records and tears the fourth mid-write.
+    pub fn run_until_crash(mut self, crash: CrashPoint) -> Result<String> {
+        let upto = match crash {
+            CrashPoint::AfterRound(r) | CrashPoint::MidRound(r) => r + 1,
+        };
+        while self.machine.rounds_closed() < upto.min(self.cfg.rounds) {
+            self.run_round()?;
+        }
+        let journal = self.machine.into_journal();
+        // Every round journals exactly 5 transitions, so record offsets map
+        // directly to round boundaries.
+        let keep = match crash {
+            CrashPoint::AfterRound(r) => (r + 1) * 5,
+            CrashPoint::MidRound(r) => r * 5 + 3,
+        }
+        .min(journal.len());
+        Ok(torn_jsonl(&journal, keep))
+    }
+
+    /// Rebuild a crashed run from its journal. Recovery is deterministic
+    /// re-execution: the journal's complete rounds are re-run with the
+    /// machine's replay cursor armed (every re-derived transition must equal
+    /// the journaled one bitwise), a trailing partial round is discarded and
+    /// will re-run live. The returned simulator is positioned to resume.
+    pub fn recover(cfg: SimConfig, scenario: Scenario, journal: &EventJournal) -> Result<Self> {
+        let mut sim = Simulator::new(cfg, scenario)?;
+        if journal.header() != sim.machine.journal().header() {
+            bail!(
+                "journal header does not match the run configuration: journal {:?}, run {:?}",
+                journal.header(),
+                sim.machine.journal().header()
+            );
+        }
+        let prefix = journal.complete_prefix().to_vec();
+        let closed = prefix
+            .iter()
+            .filter(|r| matches!(r.transition, Transition::RoundAggregated { .. }))
+            .count();
+        sim.machine.begin_replay(prefix);
+        while sim.machine.rounds_closed() < closed {
+            sim.run_round().context("re-executing journaled rounds during recovery")?;
+        }
+        sim.machine.end_replay()?;
+        Ok(sim)
+    }
+}
+
+/// Serialize `journal`'s first `keep` records, with the next record (if any)
+/// torn halfway through — exactly what a crash mid-append leaves on disk.
+fn torn_jsonl(journal: &EventJournal, keep: usize) -> String {
+    let mut s = String::with_capacity(64 + keep * 96);
+    s.push_str(&journal.header().to_json());
+    s.push('\n');
+    for r in &journal.records()[..keep] {
+        s.push_str(&r.to_json());
+        s.push('\n');
+    }
+    if let Some(next) = journal.records().get(keep) {
+        let line = next.to_json();
+        s.push_str(&line[..line.len() / 2]);
+    }
+    s
+}
+
+/// One self-verifying crash-recovery run (what the crash scenarios in the
+/// catalog execute): an uninterrupted twin, a twin killed at the scenario's
+/// crash point, recovery from the surviving (possibly torn) journal, and a
+/// live resume — with the recovered journal and event digests asserted
+/// bitwise-equal to the uninterrupted run's before returning.
+pub struct RecoveryRun {
+    /// The recovered-and-resumed run's report (digest-equal to the twin's).
+    pub report: SimReport,
+    /// The recovered-and-resumed run's full journal.
+    pub journal: EventJournal,
+    /// Rounds replayed from the journal during recovery.
+    pub recovered_rounds: usize,
+    /// Event digest of the uninterrupted twin (== `report.event_digest()`).
+    pub uninterrupted_digest: u64,
+}
+
+/// Kill → recover → resume under `scenario` (which must carry a
+/// [`CrashPoint`]), asserting the recovered run converges to the
+/// uninterrupted twin bitwise. `make replay-smoke` and the crash scenarios
+/// in `run-sim`/`benches/sim_overhead` all go through here.
+pub fn run_with_recovery(cfg: SimConfig, scenario: Scenario) -> Result<RecoveryRun> {
+    let crash = scenario
+        .crash
+        .with_context(|| format!("scenario {:?} has no crash point", scenario.name))?;
+    // The uninterrupted twin — the oracle.
+    let (ref_report, ref_journal) =
+        Simulator::new(cfg.clone(), scenario.clone())?.run_journaled()?;
+    // The crashed twin: same seed, killed at the crash point. All that
+    // survives is the journal file, torn mid-append for MidRound crashes.
+    let on_disk = Simulator::new(cfg.clone(), scenario.clone())?.run_until_crash(crash)?;
+    let journal = EventJournal::parse(&on_disk).context("parsing the surviving journal")?;
+    // Restart: rebuild state by replaying the journal, then resume live.
+    let mut sim = Simulator::recover(cfg, scenario, &journal)?;
+    let recovered_rounds = sim.machine.rounds_closed();
+    let (report, journal) = sim.run_journaled()?;
+    if journal.digest() != ref_journal.digest() {
+        bail!(
+            "recovered journal digest {:#018x} != uninterrupted {:#018x}",
+            journal.digest(),
+            ref_journal.digest()
+        );
+    }
+    if report.event_digest() != ref_report.event_digest() {
+        bail!(
+            "recovered event digest {:#018x} != uninterrupted {:#018x}",
+            report.event_digest(),
+            ref_report.event_digest()
+        );
+    }
+    Ok(RecoveryRun {
+        report,
+        journal,
+        recovered_rounds,
+        uninterrupted_digest: ref_report.event_digest(),
+    })
 }
 
 fn coverage(completed_ever: &[bool]) -> f64 {
@@ -750,6 +960,77 @@ mod tests {
             .run()
             .unwrap();
         assert_eq!(rep.rounds.len(), 4);
+    }
+
+    #[test]
+    fn every_round_journals_five_transitions() {
+        let sc = Scenario::by_name("sync_baseline").unwrap();
+        let (rep, journal) =
+            Simulator::new(smoke_cfg(), sc).unwrap().run_journaled().unwrap();
+        assert_eq!(journal.len(), 4 * 5);
+        assert_eq!(journal.rounds_closed(), 4);
+        assert_eq!(rep.journal_digest, Some(journal.digest()));
+        // The journal round-trips bitwise through its serialization.
+        let parsed = crate::coordinator::journal::EventJournal::parse(&journal.to_jsonl())
+            .unwrap();
+        assert_eq!(parsed.to_jsonl(), journal.to_jsonl());
+    }
+
+    #[test]
+    fn illegal_replay_round_is_rejected_by_the_machine() {
+        let sc = Scenario::by_name("sync_baseline").unwrap();
+        let mut sim = Simulator::new(smoke_cfg(), sc).unwrap();
+        sim.run_round().unwrap();
+        assert_eq!(sim.rounds_closed(), 1);
+        assert_eq!(
+            sim.machine().phase(),
+            crate::coordinator::journal::Phase::RoundClosed
+        );
+    }
+
+    #[test]
+    fn recovery_converges_for_both_crash_kinds() {
+        for name in ["coordinator_failure", "mid_round_restart"] {
+            let sc = Scenario::by_name(name).unwrap();
+            let cfg = SimConfig { rounds: 6, ..smoke_cfg() };
+            let rec = run_with_recovery(cfg, sc).unwrap_or_else(|e| {
+                panic!("{name}: recovery diverged: {e:#}")
+            });
+            assert_eq!(rec.report.event_digest(), rec.uninterrupted_digest);
+            assert!(rec.recovered_rounds > 0, "{name}: nothing replayed");
+            assert!(
+                rec.recovered_rounds < 6,
+                "{name}: nothing left to resume live"
+            );
+            assert_eq!(rec.journal.rounds_closed(), 6);
+        }
+    }
+
+    #[test]
+    fn recover_rejects_a_mismatched_header() {
+        let sc = Scenario::by_name("sync_baseline").unwrap();
+        let (_, journal) = Simulator::new(smoke_cfg(), sc.clone())
+            .unwrap()
+            .run_journaled()
+            .unwrap();
+        // Different seed => different header => recovery must refuse.
+        let other = SimConfig { seed: 99, ..smoke_cfg() };
+        assert!(Simulator::recover(other, sc, &journal).is_err());
+    }
+
+    #[test]
+    fn torn_journal_drops_only_the_partial_round() {
+        let sc = Scenario::by_name("mid_round_restart").unwrap();
+        let cfg = SimConfig { rounds: 6, ..smoke_cfg() };
+        let text = Simulator::new(cfg, sc)
+            .unwrap()
+            .run_until_crash(CrashPoint::MidRound(3))
+            .unwrap();
+        assert!(!text.ends_with('\n'), "crash should tear the final line");
+        let journal = crate::coordinator::journal::EventJournal::parse(&text).unwrap();
+        assert_eq!(journal.len(), 3 * 5 + 3, "three records of round 3 survive");
+        assert_eq!(journal.rounds_closed(), 3);
+        assert_eq!(journal.complete_prefix().len(), 3 * 5);
     }
 
     #[test]

@@ -12,19 +12,31 @@
 //!   incremental refresh).
 //! * [`scenario`] — the named scenario catalog (`sync_baseline`,
 //!   `straggler_cut`, `partial_async`, `diurnal`, `flash_crowd`,
-//!   `heavy_tail`, `drift_burst`).
+//!   `heavy_tail`, `drift_burst`, `coordinator_failure`,
+//!   `mid_round_restart`).
 //! * [`report`] — per-round JSONL, the popped-event stream, and the
 //!   aggregate entries `results/BENCH_sim.json` is built from.
 //!
+//! Every round runs through the event-sourced
+//! [`CoordinatorMachine`](crate::coordinator::journal::CoordinatorMachine)
+//! shared with the batch coordinator, journaling each phase transition; the
+//! crash scenarios kill the coordinator, recover from the journal
+//! ([`Simulator::recover`]) and resume, asserting digest equality with the
+//! uninterrupted run ([`engine::run_with_recovery`]).
+//!
 //! Everything is deterministic in the run seed: the event stream, round
-//! reports and digests are bitwise identical across reruns and refresh
-//! thread counts (`rust/tests/determinism.rs` enforces it; event-queue
+//! reports, journals and digests are bitwise identical across reruns,
+//! refresh thread counts, and crash/recovery boundaries
+//! (`rust/tests/determinism.rs` enforces it; event-queue and journal
 //! invariants are fuzzed in `rust/tests/proptests.rs`).
 
 pub mod engine;
 pub mod report;
 pub mod scenario;
 
-pub use engine::{selection_model_secs, Event, EventKind, EventQueue, Simulator, UPDATE_DIM};
+pub use engine::{
+    run_with_recovery, selection_model_secs, Event, EventKind, EventQueue, RecoveryRun,
+    Simulator, UPDATE_DIM,
+};
 pub use report::{bench_json, RoundReport, SimEventRecord, SimReport, SimTotals};
-pub use scenario::{Aggregation, AvailabilityModel, Scenario, StragglerModel};
+pub use scenario::{Aggregation, AvailabilityModel, CrashPoint, Scenario, StragglerModel};

@@ -119,6 +119,10 @@ pub struct SimReport {
     pub seed: u64,
     pub rounds: Vec<RoundReport>,
     pub events: Vec<SimEventRecord>,
+    /// FNV-1a 64 of the run's transition journal (None when the run did not
+    /// go through `Simulator::run_journaled`). Quoted next to the event
+    /// digest so replayability is checkable from the artifact alone.
+    pub journal_digest: Option<u64>,
 }
 
 impl SimReport {
@@ -139,6 +143,7 @@ impl SimReport {
             seed,
             rounds: Vec::new(),
             events: Vec::new(),
+            journal_digest: None,
         }
     }
 
@@ -181,27 +186,33 @@ impl SimReport {
 
     /// FNV-1a 64 over the serialized event stream: a compact fingerprint
     /// quoted in `BENCH_sim.json` so thread-count invariance is checkable
-    /// from the artifact alone.
+    /// from the artifact alone. (Same primitive as the journal digest —
+    /// `coordinator::journal::fnv1a64`.)
     pub fn event_digest(&self) -> u64 {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in self.events_jsonl().bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x100_0000_01b3); // FNV-1a 64 prime
+        crate::coordinator::journal::fnv1a64(&self.events_jsonl())
+    }
+
+    /// The journal digest formatted for JSON (`null` when absent).
+    fn journal_digest_json(&self) -> String {
+        match self.journal_digest {
+            Some(d) => format!("\"{d:#018x}\""),
+            None => "null".to_string(),
         }
-        h
     }
 
     fn header_json(&self) -> String {
         format!(
             "{{\"type\":\"sim\",\"scenario\":\"{}\",\"policy\":\"{}\",\"n_clients\":{},\
-             \"per_round\":{},\"rounds\":{},\"seed\":{},\"event_digest\":\"{:#018x}\"}}",
+             \"per_round\":{},\"rounds\":{},\"seed\":{},\"event_digest\":\"{:#018x}\",\
+             \"journal_digest\":{}}}",
             self.scenario,
             self.policy,
             self.n_clients,
             self.per_round,
             self.planned_rounds,
             self.seed,
-            self.event_digest()
+            self.event_digest(),
+            self.journal_digest_json()
         )
     }
 
@@ -230,7 +241,8 @@ impl SimReport {
              \"compute_secs\": {}, \"upload_secs\": {}, \"wait_secs\": {}, \
              \"selected\": {}, \"completed\": {}, \"dropped\": {}, \"timed_out\": {}, \
              \"aggregated_rounds\": {}, \"coverage\": {:.6}, \
-             \"event_digest\": \"{:#018x}\", \"host_secs\": {:.4}}}",
+             \"event_digest\": \"{:#018x}\", \"journal_digest\": {}, \
+             \"host_secs\": {:.4}}}",
             self.scenario,
             self.policy,
             self.n_clients,
@@ -248,6 +260,7 @@ impl SimReport {
             t.aggregated_rounds,
             t.coverage,
             self.event_digest(),
+            self.journal_digest_json(),
             host_secs
         )
     }
@@ -379,6 +392,20 @@ mod tests {
         assert!(lines[0].contains("\"event_digest\""));
         assert!(lines[1].contains("\"type\":\"round\""));
         assert!(lines[3].contains("\"type\":\"event\""));
+    }
+
+    #[test]
+    fn journal_digest_quoted_when_present_null_otherwise() {
+        let mut rep = report();
+        assert!(rep.header_json().contains("\"journal_digest\":null"));
+        assert!(rep.bench_entry_json(0.1).contains("\"journal_digest\": null"));
+        rep.journal_digest = Some(0x1234_5678_9abc_def0);
+        assert!(rep
+            .header_json()
+            .contains("\"journal_digest\":\"0x123456789abcdef0\""));
+        assert!(rep
+            .bench_entry_json(0.1)
+            .contains("\"journal_digest\": \"0x123456789abcdef0\""));
     }
 
     #[test]

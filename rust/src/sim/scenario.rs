@@ -55,6 +55,20 @@ pub enum StragglerModel {
     HeavyTail { frac: f64, mult_mu: f64, mult_sigma: f64 },
 }
 
+/// Where the coordinator process dies in a crash scenario. The scenarios
+/// that set this run through [`run_with_recovery`](crate::sim::engine::run_with_recovery):
+/// a twin run is killed here, recovered from its journal, resumed, and the
+/// recovered event digests are asserted equal to the uninterrupted run's.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CrashPoint {
+    /// Dies between rounds: the journal ends cleanly at `round`'s close.
+    AfterRound(usize),
+    /// Dies inside `round`, mid-append: the journal holds the round's
+    /// `start_round`/`rendezvous`/`start_training` records plus a torn
+    /// partial line — recovery rolls the round back and re-runs it.
+    MidRound(usize),
+}
+
 /// One named simulation scenario (see module docs for the extension guide).
 #[derive(Debug, Clone)]
 pub struct Scenario {
@@ -73,11 +87,15 @@ pub struct Scenario {
     pub drift: DriftSchedule,
     /// Refresh cadence override (0 = use the run config's `refresh_every`).
     pub refresh_every_override: usize,
+    /// Coordinator crash point (None = the coordinator stays up). Scenarios
+    /// with a crash are run through the kill → recover-from-journal → resume
+    /// path and assert digest equality with the uninterrupted run.
+    pub crash: Option<CrashPoint>,
 }
 
 impl Scenario {
     /// Catalog names, in presentation order.
-    pub const NAMES: [&'static str; 7] = [
+    pub const NAMES: [&'static str; 9] = [
         "sync_baseline",
         "straggler_cut",
         "partial_async",
@@ -85,6 +103,8 @@ impl Scenario {
         "flash_crowd",
         "heavy_tail",
         "drift_burst",
+        "coordinator_failure",
+        "mid_round_restart",
     ];
 
     /// The neutral starting point every catalog entry derives from.
@@ -100,6 +120,7 @@ impl Scenario {
             deadline_pct: 100.0,
             drift: DriftSchedule::none(),
             refresh_every_override: 0,
+            crash: None,
         }
     }
 
@@ -165,6 +186,24 @@ impl Scenario {
                 ..Self::baseline(
                     "drift_burst",
                     "drift hits half the fleet every 3 rounds; incremental refresh keeps up",
+                )
+            },
+            "coordinator_failure" => Scenario {
+                crash: Some(CrashPoint::AfterRound(2)),
+                dropout_rate: 0.05,
+                over_select: 1.2,
+                ..Self::baseline(
+                    "coordinator_failure",
+                    "coordinator dies after round 2; restart recovers from the journal",
+                )
+            },
+            "mid_round_restart" => Scenario {
+                crash: Some(CrashPoint::MidRound(3)),
+                over_select: 1.5,
+                deadline_pct: 80.0,
+                ..Self::baseline(
+                    "mid_round_restart",
+                    "coordinator dies inside round 3 mid-append; the torn round re-runs",
                 )
             },
             _ => return None,
@@ -299,6 +338,23 @@ mod tests {
         assert!(maxm > 4.0, "tail too light: max mult {maxm}");
         let sc0 = Scenario::by_name("sync_baseline").unwrap();
         assert_eq!(sc0.straggler_mult(3, 1, 9), 1.0);
+    }
+
+    #[test]
+    fn crash_scenarios_carry_crash_points() {
+        let cf = Scenario::by_name("coordinator_failure").unwrap();
+        assert_eq!(cf.crash, Some(CrashPoint::AfterRound(2)));
+        let mr = Scenario::by_name("mid_round_restart").unwrap();
+        assert_eq!(mr.crash, Some(CrashPoint::MidRound(3)));
+        // Only the crash scenarios crash.
+        for name in Scenario::NAMES {
+            let sc = Scenario::by_name(name).unwrap();
+            assert_eq!(
+                sc.crash.is_some(),
+                name == "coordinator_failure" || name == "mid_round_restart",
+                "{name}"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,237 @@
+//! Tiny typed CLI layer shared by the `feddde` binary and the bench entry
+//! points: one flag table per subcommand, parsed into typed values, with
+//! per-subcommand `--help` generated from the same table (so help can never
+//! drift from what the parser accepts).
+//!
+//! The old scheme — an untyped `HashMap<String, String>` populated by
+//! position — silently swallowed typos (`--round 5` simply did nothing).
+//! Here an unknown flag is an error listing the command's known flags, and
+//! every value is parsed through `FromStr` with the flag name in the error.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+/// One `--flag` a command accepts. `value` names the operand in help text
+/// ("N", "PATH", …); an empty `value` makes it a boolean switch taking no
+/// operand.
+#[derive(Debug, Clone, Copy)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub value: &'static str,
+    pub help: &'static str,
+}
+
+impl FlagSpec {
+    pub const fn switch(name: &'static str, help: &'static str) -> Self {
+        FlagSpec { name, value: "", help }
+    }
+
+    pub const fn arg(name: &'static str, value: &'static str, help: &'static str) -> Self {
+        FlagSpec { name, value, help }
+    }
+
+    fn is_switch(&self) -> bool {
+        self.value.is_empty()
+    }
+}
+
+/// A subcommand: its name, a one-line blurb, and the flags it accepts.
+#[derive(Debug, Clone, Copy)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub blurb: &'static str,
+    pub flags: &'static [FlagSpec],
+}
+
+impl CommandSpec {
+    fn flag(&self, name: &str) -> Option<&FlagSpec> {
+        self.flags.iter().find(|f| f.name == name)
+    }
+
+    /// The generated `--help` text: usage line + aligned flag table.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nusage: feddde {} [flags]\n", self.name, self.blurb, self.name);
+        let width = self
+            .flags
+            .iter()
+            .map(|f| f.name.len() + 1 + f.value.len())
+            .max()
+            .unwrap_or(0);
+        for f in self.flags {
+            let head = if f.is_switch() {
+                format!("--{}", f.name)
+            } else {
+                format!("--{} {}", f.name, f.value)
+            };
+            s.push_str(&format!("  {head:<w$}  {}\n", f.help, w = width + 2));
+        }
+        s
+    }
+}
+
+/// Flags parsed against one [`CommandSpec`]. Switches present map to
+/// `"true"`; absent flags are absent (defaults live in the config structs).
+#[derive(Debug, Default)]
+pub struct Parsed {
+    values: HashMap<&'static str, String>,
+    /// True when `--help` was among the args (callers print and return).
+    pub help: bool,
+}
+
+impl Parsed {
+    /// Parse `args` (everything after the subcommand) against `spec`.
+    /// Accepts `--flag value`, `--flag=value`, and bare switches.
+    pub fn parse(spec: &CommandSpec, args: &[String]) -> Result<Parsed> {
+        let mut p = Parsed::default();
+        let mut i = 0;
+        while i < args.len() {
+            let raw = args[i]
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got {:?}", args[i]))?;
+            let (name, inline) = match raw.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (raw, None),
+            };
+            if name == "help" {
+                p.help = true;
+                i += 1;
+                continue;
+            }
+            let Some(f) = spec.flag(name) else {
+                let known: Vec<&str> = spec.flags.iter().map(|f| f.name).collect();
+                bail!(
+                    "unknown flag --{name} for {} (known: --{}; try --help)",
+                    spec.name,
+                    known.join(", --")
+                );
+            };
+            let value = if f.is_switch() {
+                match inline {
+                    Some(v) => bail!("--{name} takes no value, got {v:?}"),
+                    None => "true".to_string(),
+                }
+            } else if let Some(v) = inline {
+                v
+            } else {
+                i += 1;
+                args.get(i)
+                    .with_context(|| format!("--{name} expects a value ({})", f.value))?
+                    .clone()
+            };
+            p.values.insert(f.name, value);
+            i += 1;
+        }
+        Ok(p)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.values.contains_key(name)
+    }
+
+    /// The flag's value parsed through `FromStr`, or `None` when absent.
+    pub fn opt<T>(&self, name: &str) -> Result<Option<T>>
+    where
+        T: std::str::FromStr,
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        self.get(name)
+            .map(|v| v.parse::<T>().with_context(|| format!("--{name} {v:?}")))
+            .transpose()
+    }
+
+    /// Copy the flag's string value into `slot` when present.
+    pub fn set_str(&self, name: &str, slot: &mut String) {
+        if let Some(v) = self.get(name) {
+            *slot = v.to_string();
+        }
+    }
+
+    /// Parse the flag into `slot` when present (typed counterpart of
+    /// [`Parsed::set_str`]).
+    pub fn set<T>(&self, name: &str, slot: &mut T) -> Result<()>
+    where
+        T: std::str::FromStr,
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        if let Some(v) = self.opt(name)? {
+            *slot = v;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: CommandSpec = CommandSpec {
+        name: "demo",
+        blurb: "a test command",
+        flags: &[
+            FlagSpec::arg("rounds", "N", "round count"),
+            FlagSpec::arg("out", "PATH", "output path"),
+            FlagSpec::switch("verbose", "log more"),
+        ],
+    };
+
+    fn args(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_pairs_switches_and_equals_form() {
+        let p = Parsed::parse(&SPEC, &args(&["--rounds", "7", "--verbose", "--out=x.json"]))
+            .unwrap();
+        assert_eq!(p.opt::<usize>("rounds").unwrap(), Some(7));
+        assert!(p.has("verbose"));
+        assert_eq!(p.get("out"), Some("x.json"));
+        assert_eq!(p.get("missing"), None);
+        assert_eq!(p.opt::<usize>("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn unknown_flag_lists_known_ones() {
+        let err = Parsed::parse(&SPEC, &args(&["--round", "7"])).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--round"), "{msg}");
+        assert!(msg.contains("--rounds"), "should list known flags: {msg}");
+    }
+
+    #[test]
+    fn value_errors_carry_the_flag_name() {
+        let p = Parsed::parse(&SPEC, &args(&["--rounds", "seven"])).unwrap();
+        let err = p.opt::<usize>("rounds").unwrap_err();
+        assert!(format!("{err:#}").contains("--rounds"));
+        // Missing operand is a parse error.
+        assert!(Parsed::parse(&SPEC, &args(&["--rounds"])).is_err());
+        // Switches refuse an inline value.
+        assert!(Parsed::parse(&SPEC, &args(&["--verbose=no"])).is_err());
+    }
+
+    #[test]
+    fn set_helpers_update_only_when_present() {
+        let p = Parsed::parse(&SPEC, &args(&["--rounds", "3"])).unwrap();
+        let mut rounds = 30usize;
+        let mut out = "default.json".to_string();
+        p.set("rounds", &mut rounds).unwrap();
+        p.set_str("out", &mut out);
+        assert_eq!(rounds, 3);
+        assert_eq!(out, "default.json");
+    }
+
+    #[test]
+    fn help_flag_and_generated_text() {
+        let p = Parsed::parse(&SPEC, &args(&["--help"])).unwrap();
+        assert!(p.help);
+        let h = SPEC.help();
+        assert!(h.contains("usage: feddde demo"));
+        assert!(h.contains("--rounds N"));
+        assert!(h.contains("--verbose"));
+        assert!(h.contains("round count"));
+    }
+}

@@ -1,8 +1,9 @@
 //! Support substrates FedDDE carries itself (this build environment has no
 //! crates.io network access): PRNG, statistics, parallelism, bench harness,
-//! property-testing helper.
+//! property-testing helper, and the typed CLI flag tables.
 
 pub mod bench;
+pub mod cli;
 pub mod mat;
 pub mod parallel;
 pub mod proptest;

@@ -456,6 +456,66 @@ fn sim_replay_from_seed_is_bitwise_identical() {
     assert_ne!(a.event_digest(), c.event_digest(), "seed had no effect");
 }
 
+// ---------------------------------------------------------------------------
+// Event-journal replay oracle: a simulator recovered from a run's journal
+// re-executes every journaled round under the machine's replay cursor (each
+// re-derived transition asserted equal to the journaled one bitwise), and the
+// finished replay must reproduce the live run — event stream, round reports,
+// and journal digest — at every refresh thread count. The crash scenarios
+// exercise the same machinery through a kill mid-journal.
+
+fn sim_cfg(threads: usize, seed: u64) -> SimConfig {
+    SimConfig {
+        n_clients: 40,
+        rounds: 6,
+        per_round: 8,
+        refresh_every: 2,
+        threads,
+        seed,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn journal_replay_reproduces_the_live_run_at_every_thread_count() {
+    for threads in [1usize, 4, 8] {
+        let cfg = sim_cfg(threads, 11);
+        let sc = Scenario::by_name("sync_baseline").unwrap();
+        let (live_rep, live_journal) =
+            Simulator::new(cfg.clone(), sc.clone()).unwrap().run_journaled().unwrap();
+        // Round-trip the journal through its serialized form, then replay.
+        let parsed = feddde::coordinator::EventJournal::parse(&live_journal.to_jsonl()).unwrap();
+        let replayed = Simulator::recover(cfg, sc, &parsed).unwrap();
+        let (rep, journal) = replayed.run_journaled().unwrap();
+        assert_sim_bitwise_equal(&live_rep, &rep, &format!("replay threads={threads}"));
+        assert_eq!(
+            journal.digest(),
+            live_journal.digest(),
+            "replay journal digest diverged at threads={threads}"
+        );
+    }
+}
+
+#[test]
+fn crash_scenarios_recover_to_the_uninterrupted_digest() {
+    for name in ["coordinator_failure", "mid_round_restart"] {
+        for threads in [1usize, 4, 8] {
+            let sc = Scenario::by_name(name).unwrap();
+            // run_with_recovery bails internally unless the recovered run's
+            // journal AND event digests equal the uninterrupted twin's; the
+            // asserts below keep the oracle visible here too.
+            let r = feddde::sim::run_with_recovery(sim_cfg(threads, 17), sc).unwrap();
+            assert!(r.recovered_rounds > 0, "{name}: recovery replayed nothing");
+            assert_eq!(
+                r.journal.digest(),
+                r.uninterrupted_digest,
+                "{name} threads={threads}: digests diverged"
+            );
+            assert_eq!(r.report.rounds.len(), 6, "{name}: resumed run incomplete");
+        }
+    }
+}
+
 #[test]
 fn direct_minibatch_and_lloyd_agree_on_separated_summaries() {
     // Belt-and-braces on the raw engines (no refresher): same summary

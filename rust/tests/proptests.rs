@@ -5,7 +5,10 @@
 use feddde::cluster::{dbscan, kmeans, ClusterBackend, Pruning};
 use feddde::config::SimConfig;
 use feddde::coordinator::fedavg::fedavg;
-use feddde::coordinator::{FleetRefresher, RefreshOptions};
+use feddde::coordinator::{
+    CoordinatorMachine, EventJournal, FleetRefresher, JournalHeader, RefreshOptions,
+    Transition,
+};
 use feddde::data::{coreset, DatasetSpec, DriftSchedule, Generator, Partition};
 use feddde::device::FleetModel;
 use feddde::runtime::Engine;
@@ -464,6 +467,111 @@ fn generator_rejects_nothing_and_stays_in_range() {
         assert!(ds.images.iter().all(|&v| (0.0..=1.0).contains(&v)));
         assert!(ds.labels.iter().all(|&l| (l as usize) < spec.classes));
     });
+}
+
+// ---------------------------------------------------------------------------
+// Event-journal fuzz: random transition histories must round-trip through
+// JSONL bitwise, truncation at any byte must recover exactly the complete
+// record prefix, and a simulator recovered at EVERY journal prefix must
+// converge to the same event digest as the uninterrupted run.
+
+/// A random but legal transition history: `rounds` full rounds with random
+/// payloads (including empty selections and non-aggregated rounds).
+fn random_journal(g: &mut feddde::util::proptest::Gen, rounds: usize) -> EventJournal {
+    let n_clients = g.usize_in(5, 60);
+    let header = JournalHeader {
+        kind: if g.bool() { "sim".into() } else { "train".into() },
+        seed: g.case as u64,
+        rounds,
+        n_clients,
+        per_round: g.usize_in(1, n_clients),
+        policy: ["random", "cluster", "oort"][g.usize_in(0, 2)].into(),
+        scenario: if g.bool() { "sync_baseline".into() } else { String::new() },
+    };
+    let mut m = CoordinatorMachine::new(header);
+    for round in 0..rounds {
+        m.apply(Transition::RoundStarted { round }).unwrap();
+        let available = g.usize_in(0, n_clients);
+        m.apply(Transition::FleetRendezvoused { round, available }).unwrap();
+        let k = g.usize_in(0, n_clients.min(8));
+        let selected: Vec<usize> = (0..k).map(|i| i * 2 + 1).collect();
+        m.apply(Transition::ClientsSelected { round, selected: selected.clone() }).unwrap();
+        // Partition the selection into the three terminal buckets.
+        let cut1 = g.usize_in(0, selected.len());
+        let cut2 = g.usize_in(cut1, selected.len());
+        m.apply(Transition::TrainingEnded {
+            round,
+            completed: selected[..cut1].to_vec(),
+            dropped: selected[cut1..cut2].to_vec(),
+            timed_out: selected[cut2..].to_vec(),
+        })
+        .unwrap();
+        m.apply(Transition::RoundAggregated { round, aggregated: cut1 > 0 }).unwrap();
+    }
+    m.into_journal()
+}
+
+#[test]
+fn journal_roundtrip_is_bitwise_for_random_histories() {
+    check(15, |g| {
+        let j = random_journal(g, g.usize_in(1, 6));
+        let text = j.to_jsonl();
+        let parsed = EventJournal::parse(&text).unwrap();
+        assert_eq!(parsed.to_jsonl(), text, "serialize → parse → serialize moved bytes");
+        assert_eq!(parsed.digest(), j.digest());
+        assert_eq!(parsed.records(), j.records());
+    });
+}
+
+#[test]
+fn truncated_journal_recovers_to_the_last_complete_transition() {
+    check(10, |g| {
+        let j = random_journal(g, g.usize_in(1, 4));
+        let text = j.to_jsonl();
+        let header_len = text.find('\n').unwrap() + 1;
+        // Random byte cuts, always including a mid-line tear.
+        for _ in 0..12 {
+            let cut = g.usize_in(header_len, text.len());
+            let parsed = EventJournal::parse(&text[..cut])
+                .unwrap_or_else(|e| panic!("cut at {cut}: {e:#}"));
+            let complete = text[..cut].lines().skip(1).filter(|l| l.ends_with('}')).count();
+            assert_eq!(parsed.len(), complete, "cut at byte {cut}");
+            assert_eq!(parsed.records(), &j.records()[..complete]);
+        }
+    });
+}
+
+#[test]
+fn sim_recovered_at_every_journal_prefix_converges_to_the_same_digest() {
+    // The recover-at-every-prefix sweep: truncate the journal after each
+    // record in turn, recover a simulator from it, finish the run, and
+    // require the exact digests of the uninterrupted run — crash timing can
+    // never fork history.
+    let cfg = SimConfig {
+        n_clients: 30,
+        rounds: 4,
+        per_round: 6,
+        refresh_every: 2,
+        seed: 41,
+        ..Default::default()
+    };
+    let sc = Scenario::by_name("sync_baseline").unwrap();
+    let (rep, journal) = Simulator::new(cfg.clone(), sc.clone())
+        .unwrap()
+        .run_journaled()
+        .unwrap();
+    let want_journal = journal.digest();
+    let want_events = rep.event_digest();
+    for keep in 0..=journal.len() {
+        let truncated = journal.truncated(keep);
+        let resumed = Simulator::recover(cfg.clone(), sc.clone(), &truncated)
+            .unwrap_or_else(|e| panic!("recover at prefix {keep}: {e:#}"));
+        let (rep2, j2) = resumed
+            .run_journaled()
+            .unwrap_or_else(|e| panic!("resume from prefix {keep}: {e:#}"));
+        assert_eq!(j2.digest(), want_journal, "journal digest diverged at prefix {keep}");
+        assert_eq!(rep2.event_digest(), want_events, "event digest diverged at prefix {keep}");
+    }
 }
 
 // ---------------------------------------------------------------------------
