@@ -24,14 +24,19 @@ python-test:
 bench:
 	cd rust && cargo bench --bench table2_summary --bench table2_clustering --bench runtime_hotpath
 
-# CI-scale streaming-refresh benchmark: runs only the fused-vs-materialized
-# memory section of table2_summary (pure Rust, no artifacts needed) and
-# emits machine-readable rust/results/BENCH_refresh.json — clients/sec,
-# bytes allocated per client, peak live heap, store arena bytes.
+# CI-scale benchmark smoke: the fused-vs-materialized + quantized-store
+# memory sections of table2_summary and the kernel sections of
+# runtime_hotpath (both pure Rust, no artifacts needed). Emits
+# rust/results/BENCH_refresh.json (clients/sec, bytes allocated per client,
+# peak live heap, store arena bytes, quantized-store reduction + ARI) and
+# rust/results/BENCH_kernels.json (GEMM/pruned/int8-quantized kernel
+# speedups, skip rates, ARI-vs-exact).
 bench-smoke:
 	cd rust && FEDDDE_BENCH_REFRESH_ONLY=1 cargo bench --bench table2_summary
+	cd rust && cargo bench --bench runtime_hotpath
 	@test -s rust/results/BENCH_refresh.json
-	@echo "wrote rust/results/BENCH_refresh.json"
+	@test -s rust/results/BENCH_kernels.json
+	@echo "wrote rust/results/BENCH_refresh.json + BENCH_kernels.json"
 
 # End-to-end fleet-simulator smoke: all five selection strategies at
 # N in {100, 1000} plus the 50-client x 5-round scenario-catalog matrix

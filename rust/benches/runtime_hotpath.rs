@@ -16,8 +16,9 @@ use feddde::coordinator::fedavg::fedavg;
 use feddde::data::{DatasetSpec, Generator, Partition};
 use feddde::runtime::{lit_f32, lit_scalar, to_vec_f32, Engine};
 use feddde::util::bench::{Bencher, Measurement};
-use feddde::util::mat::{gemm_nt, gemm_nt_f64_serial, Mat};
+use feddde::util::mat::{gemm_nt, gemm_nt_f64_serial, Mat, QuantMat};
 use feddde::util::rng::Rng;
+use feddde::util::stats;
 
 fn bench_artifacts(b: &mut Bencher, engine: &Engine) -> Vec<f32> {
     // --- femnist train step (the most-called artifact in training) ---------
@@ -139,15 +140,37 @@ fn bench_kernels(b: &mut Bencher) -> String {
         fit_iters = r.iters;
         std::hint::black_box(r.inertia);
     });
+    // Int8-quantized assignment: compressed codes + dequant-free norm
+    // screen against the same converged centroids. Approximate (quoted as
+    // ARI vs the exact f32 assignment) at 1/4 the point bytes.
+    let qpts = QuantMat::from_mat(&pts);
+    let exact_assign = kmeans::assign(&pts, &fitted.centroids, threads).0;
+    let mut quant_stats = kmeans::AssignStats::default();
+    let mut quant_assign: Vec<usize> = Vec::new();
+    let m_assign_quant = b.bench(&format!("kernels/assign_quant_{n}x{d}x{k}"), || {
+        let (a, inertia, st) =
+            kmeans::assign_quantized(&qpts, &fitted.centroids, threads, Some(&hints));
+        quant_stats = st;
+        quant_assign = a;
+        std::hint::black_box(inertia);
+    });
+    let quant_ari = stats::adjusted_rand_index(&quant_assign, &exact_assign);
+
     println!(
         "kernels: projection speedup {:.1}x; steady-state assign speedup {:.1}x \
-         (skip {:.1}%); Lloyd fit speedup {:.1}x over {} iters (skip {:.1}%)",
+         (skip {:.1}%); Lloyd fit speedup {:.1}x over {} iters (skip {:.1}%); \
+         quantized assign {:.1}x vs naive (skip {:.1}%, ARI {:.4}, {}B/point vs {}B)",
         speedup(&m_proj_naive, &m_proj_gemm),
         speedup(&m_assign_naive, &m_assign_pruned),
         assign_stats.skip_rate() * 100.0,
         speedup(&m_fit_naive, &m_fit_pruned),
         fit_iters,
         fit_stats.skip_rate() * 100.0,
+        speedup(&m_assign_naive, &m_assign_quant),
+        quant_stats.skip_rate() * 100.0,
+        quant_ari,
+        d,
+        d * 4,
     );
 
     format!(
@@ -158,7 +181,11 @@ fn bench_kernels(b: &mut Bencher) -> String {
          \"skip_rate\": {:.4}, \"exact_evals\": {}, \"pairs\": {}}},\n  \
          \"lloyd_fit\": {{\"n\": {n}, \"d\": {d}, \"k\": {k}, \"iters\": {fit_iters}, \
          \"naive_s\": {:.6e}, \"pruned_s\": {:.6e}, \"speedup\": {:.2}, \
-         \"skip_rate\": {:.4}, \"exact_evals\": {}, \"screened\": {}, \"pairs\": {}}}\n}}\n",
+         \"skip_rate\": {:.4}, \"exact_evals\": {}, \"screened\": {}, \"pairs\": {}}},\n  \
+         \"assign_quantized\": {{\"n\": {n}, \"d\": {d}, \"k\": {k}, \
+         \"naive_s\": {:.6e}, \"quant_s\": {:.6e}, \"speedup\": {:.2}, \
+         \"skip_rate\": {:.4}, \"ari_vs_exact\": {:.4}, \
+         \"point_bytes\": {d}, \"f32_point_bytes\": {}}}\n}}\n",
         m_proj_naive.mean_secs(),
         m_proj_gemm.mean_secs(),
         speedup(&m_proj_naive, &m_proj_gemm),
@@ -175,6 +202,12 @@ fn bench_kernels(b: &mut Bencher) -> String {
         fit_stats.exact,
         fit_stats.screened,
         fit_stats.pairs,
+        m_assign_naive.mean_secs(),
+        m_assign_quant.mean_secs(),
+        speedup(&m_assign_naive, &m_assign_quant),
+        quant_stats.skip_rate(),
+        quant_ari,
+        d * 4,
     )
 }
 

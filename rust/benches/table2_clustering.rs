@@ -14,7 +14,7 @@ use feddde::data::{DatasetSpec, Generator, Partition};
 use feddde::runtime::Engine;
 use feddde::summary::{EncoderSummary, PxySummary, PySummary, SummaryEngine};
 use feddde::util::bench::{full_scale, Bencher};
-use feddde::util::mat::Mat;
+use feddde::util::mat::{Mat, QuantMat};
 use feddde::util::rng::Rng;
 use feddde::util::stats;
 
@@ -78,8 +78,20 @@ fn bench_minibatch_vs_lloyd(b: &mut Bencher) {
             mb_assign = minibatch::fit(&pts, &mcfg).assignments;
         });
 
+        // Int8-quantized Lloyd on the same points: the compressed-store
+        // clustering path. Quoted as ARI vs the exact f32 fit — the
+        // tentpole acceptance line is ARI >= 0.95.
+        let qpts = QuantMat::from_mat(&pts);
+        let mut qcfg = kmeans::KmeansConfig::new(k);
+        qcfg.seed = 5;
+        let mut q_assign = Vec::new();
+        let mq = b.bench_once(&format!("lloyd_quant/N{n}xD{d}K{k}"), || {
+            q_assign = kmeans::fit_quantized(&qpts, &qcfg).assignments;
+        });
+
         let ari_l = stats::adjusted_rand_index(&lloyd_assign, &truth);
         let ari_m = stats::adjusted_rand_index(&mb_assign, &truth);
+        let ari_q = stats::adjusted_rand_index(&q_assign, &lloyd_assign);
         println!(
             "    -> N={n}: minibatch {:.2}x faster than Lloyd (ARI {ari_m:.3} vs {ari_l:.3}, \
              delta {:.3}; target: faster at N>=1000, ARI within 0.1); \
@@ -87,6 +99,12 @@ fn bench_minibatch_vs_lloyd(b: &mut Bencher) {
             ml.mean_secs() / mm.mean_secs().max(1e-9),
             ari_l - ari_m,
             lloyd_skip * 100.0
+        );
+        println!(
+            "    -> N={n}: int8 Lloyd {:.2}x vs f32 Lloyd, ARI-vs-exact {ari_q:.3} \
+             (target >= 0.95) at {d} B/point instead of {} B",
+            ml.mean_secs() / mq.mean_secs().max(1e-9),
+            d * 4
         );
     }
 }

@@ -9,7 +9,10 @@
 //! `results/BENCH_refresh.json` (clients/sec, bytes allocated per client,
 //! peak live heap, store arena bytes). The ISSUE-4 acceptance lines: >= 5x
 //! fewer bytes generated per client fused-vs-materialized, and a cold
-//! 10x-fleet fused refresh peaking under the materialized run's peak.
+//! 10x-fleet fused refresh peaking under the materialized run's peak. A
+//! fourth phase runs the fused fleet on the int8-quantized store
+//! (`store_quantized`) and quotes resident store bytes/client (target:
+//! >= 4x reduction) plus clustering ARI vs the exact run (target >= 0.95).
 //!
 //!     cargo bench --bench table2_summary          # CI scale
 //!     FEDDDE_BENCH_FULL=1 cargo bench ...         # paper-scale fleets
@@ -34,6 +37,7 @@ use feddde::summary::{EncoderSummary, JlSummary, PxySummary, PySummary, SummaryE
 use feddde::util::bench::{full_scale, Bencher};
 use feddde::util::parallel::default_threads;
 use feddde::util::rng::Rng;
+use feddde::util::stats;
 
 /// Counting allocator: total bytes ever allocated, live bytes, and a
 /// resettable live-bytes high-water mark. This is what turns "the fused
@@ -212,10 +216,12 @@ struct RefreshPhase {
     bytes_per_client: f64,
     peak_live_bytes: usize,
     store_bytes: usize,
+    store_param_bytes: usize,
+    clusters: Vec<usize>,
 }
 
 /// One measured cold refresh over a fresh refresher.
-fn run_refresh_phase(n: usize, fused: bool, emit: bool) -> RefreshPhase {
+fn run_refresh_phase(n: usize, fused: bool, emit: bool, quantized: bool) -> RefreshPhase {
     let spec = refresh_bench_spec(n);
     let partition = Partition::build(&spec);
     let generator = Generator::new(&spec);
@@ -227,6 +233,7 @@ fn run_refresh_phase(n: usize, fused: bool, emit: bool) -> RefreshPhase {
         backend: ClusterBackend::Minibatch,
         fused,
         emit_summaries: emit,
+        store_quantized: quantized,
         ..Default::default()
     });
     let start = alloc_phase_start();
@@ -244,14 +251,23 @@ fn run_refresh_phase(n: usize, fused: bool, emit: bool) -> RefreshPhase {
         bytes_per_client: allocated as f64 / n as f64,
         peak_live_bytes: peak,
         store_bytes: r.store.bytes,
+        store_param_bytes: r.store.param_bytes,
+        clusters: r.clusters,
     }
 }
 
 fn phase_json(tag: &str, p: &RefreshPhase) -> String {
     format!(
         "  \"{tag}\": {{\"n\": {}, \"secs\": {:.4}, \"clients_per_sec\": {:.1}, \
-         \"bytes_per_client\": {:.0}, \"peak_live_bytes\": {}, \"store_bytes\": {}}}",
-        p.n, p.secs, p.clients_per_sec, p.bytes_per_client, p.peak_live_bytes, p.store_bytes
+         \"bytes_per_client\": {:.0}, \"peak_live_bytes\": {}, \"store_bytes\": {}, \
+         \"store_param_bytes\": {}}}",
+        p.n,
+        p.secs,
+        p.clients_per_sec,
+        p.bytes_per_client,
+        p.peak_live_bytes,
+        p.store_bytes,
+        p.store_param_bytes
     )
 }
 
@@ -264,7 +280,7 @@ fn bench_refresh_memory() {
     let n_large = n_small * 10;
     println!("\nstreaming refresh memory (JL engine, {n_small}/{n_large} clients):");
 
-    let materialized = run_refresh_phase(n_small, false, true);
+    let materialized = run_refresh_phase(n_small, false, true, false);
     println!(
         "  materialized N{:<6}  {:>8.2}s  {:>9.0} clients/s  {:>12.0} B/client  peak {:>6.1} MiB",
         materialized.n,
@@ -273,7 +289,7 @@ fn bench_refresh_memory() {
         materialized.bytes_per_client,
         materialized.peak_live_bytes as f64 / (1 << 20) as f64,
     );
-    let fused = run_refresh_phase(n_small, true, true);
+    let fused = run_refresh_phase(n_small, true, true, false);
     println!(
         "  fused        N{:<6}  {:>8.2}s  {:>9.0} clients/s  {:>12.0} B/client  peak {:>6.1} MiB",
         fused.n,
@@ -282,7 +298,7 @@ fn bench_refresh_memory() {
         fused.bytes_per_client,
         fused.peak_live_bytes as f64 / (1 << 20) as f64,
     );
-    let fused_large = run_refresh_phase(n_large, true, false);
+    let fused_large = run_refresh_phase(n_large, true, false, false);
     println!(
         "  fused        N{:<6}  {:>8.2}s  {:>9.0} clients/s  {:>12.0} B/client  peak {:>6.1} MiB (zero-copy store)",
         fused_large.n,
@@ -292,21 +308,48 @@ fn bench_refresh_memory() {
         fused_large.peak_live_bytes as f64 / (1 << 20) as f64,
     );
 
+    // Int8-quantized store: same fused fleet held compressed. The tentpole
+    // acceptance lines: >= 4x fewer resident store bytes per client, and
+    // clusters within 0.95 ARI of the exact-f32 fused run.
+    let quantized = run_refresh_phase(n_small, true, true, true);
+    println!(
+        "  quantized    N{:<6}  {:>8.2}s  {:>9.0} clients/s  {:>12.0} B/client  store {:>6.1} KiB (+{} B params)",
+        quantized.n,
+        quantized.secs,
+        quantized.clients_per_sec,
+        quantized.bytes_per_client,
+        quantized.store_bytes as f64 / 1024.0,
+        quantized.store_param_bytes,
+    );
+
     let bytes_reduction = materialized.bytes_per_client / fused.bytes_per_client.max(1.0);
     let peak_ok = fused_large.peak_live_bytes < materialized.peak_live_bytes;
     println!(
         "    -> bytes generated per client: {bytes_reduction:.1}x reduction (target >= 5x); \
          10x-fleet fused peak under materialized peak: {peak_ok}"
     );
+    let store_reduction = fused.store_bytes as f64 / quantized.store_bytes.max(1) as f64;
+    let quant_ari = stats::adjusted_rand_index(&quantized.clusters, &fused.clusters);
+    println!(
+        "    -> quantized store: {:.0} -> {:.0} B/client ({store_reduction:.1}x reduction, \
+         target >= 4x); clusters ARI vs exact {quant_ari:.3} (target >= 0.95)",
+        fused.store_bytes as f64 / fused.n as f64,
+        quantized.store_bytes as f64 / quantized.n as f64,
+    );
 
     let json = format!(
-        "{{\n{},\n{},\n{},\n  \"bytes_reduction\": {:.2},\n  \"speedup\": {:.2},\n  \"peak_ok\": {}\n}}\n",
+        "{{\n{},\n{},\n{},\n{},\n  \"bytes_reduction\": {:.2},\n  \"speedup\": {:.2},\n  \
+         \"peak_ok\": {},\n  \"quant_store_reduction\": {:.2},\n  \
+         \"quant_ari_vs_exact\": {:.4}\n}}\n",
         phase_json("materialized", &materialized),
         phase_json("fused", &fused),
         phase_json("fused_large", &fused_large),
+        phase_json("quantized", &quantized),
         bytes_reduction,
         materialized.secs / fused.secs.max(1e-9),
         peak_ok,
+        store_reduction,
+        quant_ari,
     );
     std::fs::write("results/BENCH_refresh.json", json)
         .expect("writing results/BENCH_refresh.json");

@@ -12,7 +12,9 @@
 //! inertia (property-tested here and in `rust/tests/proptests.rs`).
 
 use crate::cluster::Pruning;
-use crate::util::mat::{dot8, row_sqnorms, sqdist, Mat};
+use crate::util::mat::{
+    dot8, dot8_i8, quant_sqnorm, row_sqnorms, sqdist, sqdist_quant, sum_i8, Mat, QuantMat,
+};
 use crate::util::parallel::{default_threads, map_chunks};
 use crate::util::rng::Rng;
 
@@ -312,6 +314,268 @@ pub fn assign_pruned(
         stats.merge(&st);
     }
     (assignments, inertia, stats)
+}
+
+/// Per-row integer moments of a [`QuantMat`] — `Σq²` ([`dot8_i8`] with
+/// itself), `Σq` ([`sum_i8`]), and the dequantized norm `‖x̂‖` — cached once
+/// and reused across every distance the quantized kernels compute.
+struct QuantMoments {
+    qq: Vec<i64>,
+    qsum: Vec<i64>,
+    /// `‖x̂‖` (the square root of [`quant_sqnorm`]), for the norm screen.
+    norm: Vec<f64>,
+}
+
+impl QuantMoments {
+    fn of(m: &QuantMat) -> Self {
+        let n = m.rows();
+        let d = m.cols();
+        let mut qq = Vec::with_capacity(n);
+        let mut qsum = Vec::with_capacity(n);
+        let mut norm = Vec::with_capacity(n);
+        for i in 0..n {
+            let row = m.row(i);
+            let a = dot8_i8(row, row);
+            let s = sum_i8(row);
+            qq.push(a);
+            qsum.push(s);
+            norm.push(quant_sqnorm(m.params(i), a, s, d).max(0.0).sqrt());
+        }
+        QuantMoments { qq, qsum, norm }
+    }
+}
+
+/// Nearest-centroid assignment over int8-quantized points with a
+/// **dequant-free** screen: no f32 row is ever materialized. Centroids are
+/// quantized once per call; per point the reverse-triangle norm bound
+/// `(‖x̂‖ − ‖ĉ‖)² ≤ ‖x̂ − ĉ‖²` (norms from cached integer moments) skips
+/// centroids that provably cannot beat the current best, and survivors are
+/// decided by the exact-affine [`sqdist_quant`] (one [`dot8_i8`] each).
+///
+/// Unlike [`assign_pruned`] this path is *approximate* relative to the f32
+/// oracle — quantization error moves points — so it is validated by
+/// ARI-vs-exact (benches, Python port), not bitwise equality. It IS
+/// bitwise deterministic in its own right: integer kernels are exact, the
+/// f64 combining order is fixed, and the inertia reduces serially in point
+/// order — so results are identical across thread counts and reruns.
+pub fn assign_quantized(
+    points: &QuantMat,
+    centroids: &Mat,
+    threads: usize,
+    hints: Option<&[usize]>,
+) -> (Vec<usize>, f64, AssignStats) {
+    let n = points.rows();
+    let k = centroids.rows();
+    let qc = QuantMat::from_mat(centroids);
+    let cm = QuantMoments::of(&qc);
+    let pm = QuantMoments::of(points);
+
+    let chunks = map_chunks(n, threads, |lo, hi| {
+        let mut a_out = Vec::with_capacity(hi - lo);
+        let mut d2_out = Vec::with_capacity(hi - lo);
+        let mut stats = AssignStats::default();
+        for i in lo..hi {
+            let row = points.row(i);
+            let (pq, ps, pn) = (pm.qq[i], pm.qsum[i], pm.norm[i]);
+            let pp = points.params(i);
+            stats.pairs += k as u64;
+            let dist = |c: usize| {
+                sqdist_quant(row, pp, pq, ps, qc.row(c), qc.params(c), cm.qq[c], cm.qsum[c])
+            };
+            // Warm start: the hinted centroid's exact distance makes the
+            // norm bound tight from the first comparison.
+            let b0 = match hints {
+                Some(h) if h[i] < k => h[i],
+                _ => 0,
+            };
+            let mut best = b0;
+            let mut best_d = dist(b0);
+            stats.exact += 1;
+            for c in 0..k {
+                if c == b0 {
+                    continue;
+                }
+                let gap = pn - cm.norm[c];
+                stats.screened += 1;
+                if gap * gap > best_d {
+                    continue; // provably farther than the current best
+                }
+                let dd = dist(c);
+                stats.exact += 1;
+                if dd < best_d || (dd == best_d && c < best) {
+                    best_d = dd;
+                    best = c;
+                }
+            }
+            a_out.push(best);
+            d2_out.push(best_d);
+        }
+        (a_out, d2_out, stats)
+    });
+    let mut assignments = Vec::with_capacity(n);
+    let mut inertia = 0.0f64;
+    let mut stats = AssignStats::default();
+    for (a, d2, st) in chunks {
+        assignments.extend(a);
+        for v in d2 {
+            inertia += v;
+        }
+        stats.merge(&st);
+    }
+    (assignments, inertia, stats)
+}
+
+/// k-means++ over quantized points: seeding distances are point-to-point
+/// [`sqdist_quant`] (dequant-free); only the `k` chosen seed rows are
+/// dequantized, into the returned f32 centroid matrix. Deterministic for a
+/// given seed, like [`kmeanspp_init`].
+fn kmeanspp_init_quant(points: &QuantMat, k: usize, rng: &mut Rng) -> Mat {
+    let n = points.rows();
+    assert!(n >= k, "kmeans++ (quant): n={n} < k={k}");
+    let m = QuantMoments::of(points);
+    let dist = |i: usize, j: usize| {
+        sqdist_quant(
+            points.row(i),
+            points.params(i),
+            m.qq[i],
+            m.qsum[i],
+            points.row(j),
+            points.params(j),
+            m.qq[j],
+            m.qsum[j],
+        )
+    };
+    let mut centroids = Mat::zeros(k, points.cols());
+    let mut chosen = Vec::with_capacity(k);
+    let first = rng.below(n as u64) as usize;
+    chosen.push(first);
+    points.dequantize_row_into(first, centroids.row_mut(0));
+    let mut d2: Vec<f64> = (0..n).map(|i| dist(i, first)).collect();
+    for c in 1..k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            rng.below(n as u64) as usize
+        } else {
+            rng.weighted_index(&d2)
+        };
+        chosen.push(next);
+        points.dequantize_row_into(next, centroids.row_mut(c));
+        for i in 0..n {
+            let d = dist(i, next);
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    centroids
+}
+
+/// Centroid update over quantized points: each point's contribution is
+/// dequantized on the fly (`scale·q + zero` per element, f64 accumulate in
+/// point order) — no materialized f32 matrix. Empty clusters are re-seeded
+/// to the farthest (dequantized) points, mirroring [`update_centroids`]'s
+/// deterministic (distance desc, index asc) repair; quantized distances
+/// are always finite so no NaN arm is needed.
+fn update_centroids_quant(
+    points: &QuantMat,
+    assignments: &[usize],
+    k: usize,
+    prev: &Mat,
+) -> Mat {
+    let d = points.cols();
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0usize; k];
+    for (i, &a) in assignments.iter().enumerate() {
+        counts[a] += 1;
+        let p = points.params(i);
+        let (s, z) = (p.scale as f64, p.zero as f64);
+        let dst = &mut sums[a * d..(a + 1) * d];
+        for (acc, &q) in dst.iter_mut().zip(points.row(i)) {
+            *acc += s * q as f64 + z;
+        }
+    }
+    let mut out = Mat::zeros(k, d);
+    let mut empties = Vec::new();
+    for c in 0..k {
+        if counts[c] == 0 {
+            empties.push(c);
+            out.row_mut(c).copy_from_slice(prev.row(c));
+        } else {
+            let inv = 1.0 / counts[c] as f64;
+            for (j, v) in out.row_mut(c).iter_mut().enumerate() {
+                *v = (sums[c * d + j] * inv) as f32;
+            }
+        }
+    }
+    if !empties.is_empty() {
+        let qo = QuantMat::from_mat(&out);
+        let om = QuantMoments::of(&qo);
+        let pm = QuantMoments::of(points);
+        let mut far: Vec<(f64, usize)> = assignments
+            .iter()
+            .enumerate()
+            .map(|(i, &a)| {
+                let dd = sqdist_quant(
+                    points.row(i),
+                    points.params(i),
+                    pm.qq[i],
+                    pm.qsum[i],
+                    qo.row(a),
+                    qo.params(a),
+                    om.qq[a],
+                    om.qsum[a],
+                );
+                (dd, i)
+            })
+            .collect();
+        let cmp =
+            |a: &(f64, usize), b: &(f64, usize)| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1));
+        let take = empties.len().min(far.len());
+        if far.len() > take {
+            far.select_nth_unstable_by(take - 1, cmp);
+            far.truncate(take);
+        }
+        far.sort_unstable_by(cmp);
+        for (e, c) in empties.into_iter().enumerate() {
+            if e < far.len() {
+                points.dequantize_row_into(far[e].1, out.row_mut(c));
+            }
+        }
+    }
+    out
+}
+
+/// Full Lloyd fit over int8-quantized points — the compressed-store
+/// clustering path. Same shape as [`fit`] (k-means++ seeding, warm-hinted
+/// assignment, tol-based convergence) but every distance goes through the
+/// dequant-free quantized kernels; only seed rows, empty-cluster repairs,
+/// and centroid means touch f32. Deterministic across thread counts and
+/// reruns; accuracy versus the f32 oracle is held to ARI (≥ 0.95 on the
+/// bench scenarios) rather than bitwise equality.
+pub fn fit_quantized(points: &QuantMat, cfg: &KmeansConfig) -> KmeansResult {
+    assert!(points.rows() >= cfg.k, "kmeans (quant): fewer points than clusters");
+    let mut rng = Rng::new(cfg.seed);
+    let mut centroids = kmeanspp_init_quant(points, cfg.k, &mut rng);
+    let mut prev_inertia = f64::INFINITY;
+    let mut assignments = Vec::new();
+    let mut inertia = 0.0;
+    let mut iters = 0;
+    let mut stats = AssignStats::default();
+    for it in 0..cfg.max_iters {
+        let hints = if it == 0 { None } else { Some(assignments.as_slice()) };
+        let (a, i, st) = assign_quantized(points, &centroids, cfg.threads, hints);
+        stats.merge(&st);
+        assignments = a;
+        inertia = i;
+        iters = it + 1;
+        if prev_inertia.is_finite() && (prev_inertia - inertia) <= cfg.tol * prev_inertia.max(1e-12)
+        {
+            break;
+        }
+        prev_inertia = inertia;
+        centroids = update_centroids_quant(points, &assignments, cfg.k, &centroids);
+    }
+    KmeansResult { centroids, assignments, inertia, iters, stats }
 }
 
 /// Recompute centroids as cluster means; empty clusters are re-seeded to the
@@ -709,6 +973,114 @@ mod tests {
         // Tie at max distance: stable order picks the lower index first.
         assert_eq!(out2.row(1), &[10.0, 0.0]);
         assert_eq!(out2.row(2), &[-10.0, 0.0]);
+    }
+
+    #[test]
+    fn quantized_fit_matches_exact_oracle_on_blobs() {
+        // The quantized-path acceptance oracle at test scale: int8-store
+        // clustering must agree with the exact f32 fit to ARI ≥ 0.95 on
+        // planted blobs (and with the ground truth).
+        let (pts, truth) = blobs(60, &[(0.0, 0.0), (10.0, 10.0), (-10.0, 10.0), (10.0, -10.0)], 0.4, 31);
+        let q = QuantMat::from_mat(&pts);
+        let mut cfg = KmeansConfig::new(4);
+        cfg.seed = 5;
+        let exact = fit(&pts, &cfg);
+        let quant = fit_quantized(&q, &cfg);
+        let ari_vs_exact =
+            crate::util::stats::adjusted_rand_index(&quant.assignments, &exact.assignments);
+        let ari_vs_truth = crate::util::stats::adjusted_rand_index(&quant.assignments, &truth);
+        assert!(ari_vs_exact >= 0.95, "ARI vs exact {ari_vs_exact}");
+        assert!(ari_vs_truth >= 0.95, "ARI vs truth {ari_vs_truth}");
+    }
+
+    #[test]
+    fn quantized_assign_is_bitwise_thread_invariant() {
+        let (pts, _) = blobs(70, &[(0.0, 0.0), (6.0, 0.0), (0.0, 6.0)], 1.0, 32);
+        let q = QuantMat::from_mat(&pts);
+        let cents = Mat::from_rows(&[vec![0.0, 0.0], vec![6.0, 0.0], vec![0.0, 6.0]]);
+        let (a1, i1, s1) = assign_quantized(&q, &cents, 1, None);
+        for threads in [4usize, 8] {
+            let (a, i, s) = assign_quantized(&q, &cents, threads, None);
+            assert_eq!(a, a1, "threads={threads}");
+            assert_eq!(i.to_bits(), i1.to_bits(), "threads={threads}");
+            assert_eq!((s.pairs, s.exact), (s1.pairs, s1.exact), "threads={threads}");
+        }
+        // Warm hints change work, never the result.
+        let (ah, ih, sh) = assign_quantized(&q, &cents, 1, Some(&a1));
+        assert_eq!(ah, a1);
+        assert_eq!(ih.to_bits(), i1.to_bits());
+        assert!(sh.exact <= s1.exact, "hints did not help: {sh:?} vs {s1:?}");
+        // And the norm screen actually skips work on separated data.
+        assert!(s1.skip_rate() > 0.0, "screen skipped nothing: {s1:?}");
+    }
+
+    /// The quantized assignment against the *dequantized* matrix oracle:
+    /// feeding assign() the materialized dequantized points must produce
+    /// the same assignments (distances differ only in f32-lane vs
+    /// exact-affine rounding; planted separations dwarf that).
+    #[test]
+    fn property_quantized_assign_matches_dequantized_naive() {
+        crate::util::proptest::check(15, |g| {
+            let n = g.usize_in(4, 40);
+            let d = g.usize_in(1, 16);
+            let k = g.usize_in(1, 5.min(n));
+            let mut pts = Mat::zeros(0, d);
+            for _ in 0..n {
+                pts.push_row(&g.vec_f32(d, -4.0, 4.0));
+            }
+            let mut cents = Mat::zeros(0, d);
+            for _ in 0..k {
+                cents.push_row(&g.vec_f32(d, -4.0, 4.0));
+            }
+            let q = QuantMat::from_mat(&pts);
+            let deq = q.dequantize();
+            let (want_a, _) = assign(&deq, &cents, 1);
+            let (got_a, _, st) = assign_quantized(&q, &cents, 1, None);
+            assert_eq!(st.pairs, (n * k) as u64);
+            // Allow disagreement only where the two nearest centroids are
+            // within the rounding band of each other.
+            for i in 0..n {
+                if got_a[i] == want_a[i] {
+                    continue;
+                }
+                let dg = sqdist(deq.row(i), cents.row(got_a[i]));
+                let dw = sqdist(deq.row(i), cents.row(want_a[i]));
+                assert!(
+                    (dg - dw).abs() <= 1e-4 * (1.0 + dw.abs()),
+                    "point {i}: quant chose {} (d {dg}), oracle {} (d {dw})",
+                    got_a[i],
+                    want_a[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn fit_quantized_is_deterministic_and_repairs_empties() {
+        let (pts, _) = blobs(30, &[(0.0, 0.0), (5.0, 5.0)], 0.8, 33);
+        let q = QuantMat::from_mat(&pts);
+        let mut cfg = KmeansConfig::new(2);
+        cfg.seed = 7;
+        let a = fit_quantized(&q, &cfg);
+        let mut cfg8 = cfg.clone();
+        cfg8.threads = 8;
+        let b = fit_quantized(&q, &cfg8);
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.inertia.to_bits(), b.inertia.to_bits());
+        assert_eq!(a.centroids, b.centroids);
+        // k close to n forces empty-cluster repair through the quantized
+        // update; it must stay finite and deterministic.
+        let mut small = Mat::zeros(0, 2);
+        for _ in 0..6 {
+            small.push_row(&[1.0, 2.0]);
+        }
+        small.push_row(&[9.0, 9.0]);
+        let qs = QuantMat::from_mat(&small);
+        let mut cfg_rep = KmeansConfig::new(4);
+        cfg_rep.seed = 1;
+        let r = fit_quantized(&qs, &cfg_rep);
+        assert_eq!(r.assignments.len(), 7);
+        assert!(r.centroids.data().iter().all(|v| v.is_finite()));
     }
 
     #[test]

@@ -32,9 +32,11 @@
 //! whole fit — stay bitwise identical to the unpruned path
 //! (`pruned_minibatch_is_bitwise_identical`).
 
-use crate::cluster::kmeans::{assign, assign_pruned, kmeanspp_init, AssignStats, KmeansResult};
+use crate::cluster::kmeans::{
+    assign, assign_pruned, assign_quantized, kmeanspp_init, AssignStats, KmeansResult,
+};
 use crate::cluster::Pruning;
-use crate::util::mat::{dot8, row_sqnorms, Mat};
+use crate::util::mat::{dot8, dot8_i8, quant_sqnorm, row_sqnorms, sqdist, sum_i8, Mat, QuantMat};
 use crate::util::parallel::default_threads;
 use crate::util::rng::Rng;
 
@@ -238,6 +240,138 @@ pub fn fit_warm(points: &Mat, cfg: &MinibatchConfig, warm: Option<&WarmState>) -
     }
 }
 
+/// Warm-startable mini-batch fit over int8-quantized points — the
+/// compressed-store backend for large fleets. The n×d f32 fleet matrix is
+/// never materialized: the norm screen's per-point `‖x̂‖` comes straight
+/// from the cached integer moments ([`dot8_i8`]/[`sum_i8`] through
+/// [`quant_sqnorm`] — the dequant-free screen), only the `batch` rows of
+/// each SGD iteration are dequantized into a one-row scratch for the
+/// centroid updates, and the final fleet pass is
+/// [`assign_quantized`]. Deterministic for a given seed and thread count
+/// (batch schedule, serial updates, chunk-deterministic assignment), like
+/// [`fit_warm`]; accuracy versus the f32 path is ARI-validated, not
+/// bitwise.
+pub fn fit_warm_quant(
+    points: &QuantMat,
+    cfg: &MinibatchConfig,
+    warm: Option<&WarmState>,
+) -> MinibatchFit {
+    let n = points.rows();
+    let d = points.cols();
+    assert!(n >= cfg.k, "minibatch kmeans (quant): fewer points than clusters");
+    assert!(cfg.k > 0, "minibatch kmeans (quant): k must be positive");
+    let mut rng = Rng::substream(cfg.seed, &[0x3B17]);
+
+    let (mut centroids, mut counts) = match warm {
+        Some(w) if w.matches(cfg.k, d) => (w.centroids.clone(), w.counts.clone()),
+        _ => {
+            // Cold start: k-means++ on a deterministic dequantized
+            // subsample (init_sample rows, not the fleet).
+            let m = cfg.init_sample.clamp(cfg.k, n);
+            let idx = rng.sample_indices(n, m);
+            let mut sample = Mat::zeros(idx.len(), d);
+            for (r, &i) in idx.iter().enumerate() {
+                points.dequantize_row_into(i, sample.row_mut(r));
+            }
+            (kmeanspp_init(&sample, cfg.k, &mut rng), vec![0u64; cfg.k])
+        }
+    };
+
+    let batch = cfg.batch.clamp(1, n);
+    let mut starved = vec![0usize; cfg.k];
+    let mut iters = 0;
+    let mut stats = AssignStats::default();
+    let use_screen = cfg.pruning.use_bounds(n, cfg.k);
+    let margin = crate::cluster::kmeans::prune_margin(d);
+    let norm_rel = 2.0 * d as f64 * (f32::EPSILON as f64);
+    // Dequant-free point norms: one integer-moment pass over the arena
+    // instead of materializing n×d floats.
+    let px_norm: Vec<f64> = if use_screen {
+        (0..n)
+            .map(|i| {
+                let row = points.row(i);
+                quant_sqnorm(points.params(i), dot8_i8(row, row), sum_i8(row), d)
+                    .max(0.0)
+                    .sqrt()
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let mut c_norm: Vec<f64> = if use_screen {
+        (0..cfg.k).map(|c| dot8(centroids.row(c), centroids.row(c)).sqrt()).collect()
+    } else {
+        Vec::new()
+    };
+    let mut scratch = vec![0.0f32; d];
+    for it in 0..cfg.max_iters {
+        iters = it + 1;
+        let idx = rng.sample_indices(n, batch);
+        let mut moved = 0.0f64;
+        let mut hit = vec![false; cfg.k];
+        for &i in &idx {
+            points.dequantize_row_into(i, &mut scratch);
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            stats.pairs += cfg.k as u64;
+            for c in 0..cfg.k {
+                if use_screen && best_d.is_finite() {
+                    let gap = (px_norm[i] - c_norm[c]).abs()
+                        - (px_norm[i] + c_norm[c]) * norm_rel;
+                    if gap > 0.0 && gap * gap > best_d * margin {
+                        continue;
+                    }
+                }
+                let dist = sqdist(&scratch, centroids.row(c));
+                stats.exact += 1;
+                if dist < best_d {
+                    best_d = dist;
+                    best = c;
+                }
+            }
+            counts[best] += 1;
+            hit[best] = true;
+            let eta = 1.0 / counts[best] as f64;
+            let cent = centroids.row_mut(best);
+            for (cv, &pv) in cent.iter_mut().zip(&scratch) {
+                let delta = eta * (pv as f64 - *cv as f64);
+                *cv = (*cv as f64 + delta) as f32;
+                moved += delta * delta;
+            }
+            if use_screen {
+                c_norm[best] = dot8(centroids.row(best), centroids.row(best)).sqrt();
+            }
+        }
+        for c in 0..cfg.k {
+            if hit[c] {
+                starved[c] = 0;
+            } else {
+                starved[c] += 1;
+                if starved[c] >= cfg.reseed_after.max(1) {
+                    let j = rng.below(n as u64) as usize;
+                    points.dequantize_row_into(j, centroids.row_mut(c));
+                    counts[c] = 0;
+                    starved[c] = 0;
+                    if use_screen {
+                        c_norm[c] = dot8(centroids.row(c), centroids.row(c)).sqrt();
+                    }
+                }
+            }
+        }
+        if moved < cfg.tol {
+            break;
+        }
+    }
+
+    let threads = cfg.threads.max(1);
+    let (assignments, inertia, st) = assign_quantized(points, &centroids, threads, None);
+    stats.merge(&st);
+    MinibatchFit {
+        warm: WarmState { centroids: centroids.clone(), counts },
+        result: KmeansResult { centroids, assignments, inertia, iters, stats },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -399,6 +533,44 @@ mod tests {
             assert_eq!(a.warm.counts, b.warm.counts);
             assert!(b.result.stats.exact <= b.result.stats.pairs);
         });
+    }
+
+    #[test]
+    fn quantized_minibatch_matches_f32_path_by_ari() {
+        let (pts, truth) = blobs(300, &[(0.0, 0.0), (10.0, 10.0), (-10.0, 10.0)], 0.8, 41);
+        let q = QuantMat::from_mat(&pts);
+        let mut cfg = MinibatchConfig::new(3);
+        cfg.seed = 2;
+        let f = fit_warm(&pts, &cfg, None);
+        let g = fit_warm_quant(&q, &cfg, None);
+        let ari_vs_f32 =
+            adjusted_rand_index(&g.result.assignments, &f.result.assignments);
+        let ari_vs_truth = adjusted_rand_index(&g.result.assignments, &truth);
+        assert!(ari_vs_f32 >= 0.95, "ARI vs f32 minibatch {ari_vs_f32}");
+        assert!(ari_vs_truth >= 0.95, "ARI vs truth {ari_vs_truth}");
+        // The dequant-free screen skipped work.
+        assert!(g.result.stats.exact < g.result.stats.pairs, "{:?}", g.result.stats);
+    }
+
+    #[test]
+    fn quantized_minibatch_is_deterministic_and_warm_startable() {
+        let (pts, _) = blobs(200, &[(0.0, 0.0), (8.0, 0.0), (0.0, 8.0)], 0.7, 42);
+        let q = QuantMat::from_mat(&pts);
+        let mut cfg = MinibatchConfig::new(3);
+        cfg.seed = 6;
+        cfg.threads = 1;
+        let a = fit_warm_quant(&q, &cfg, None);
+        let mut cfg8 = cfg.clone();
+        cfg8.threads = 8;
+        let b = fit_warm_quant(&q, &cfg8, None);
+        assert_eq!(a.result.assignments, b.result.assignments);
+        assert_eq!(a.result.centroids, b.result.centroids);
+        assert_eq!(a.result.inertia.to_bits(), b.result.inertia.to_bits());
+        // Warm restart from the converged state must not lose structure.
+        let warm = fit_warm_quant(&q, &cfg, Some(&a.warm));
+        assert!(warm.result.iters <= a.result.iters);
+        let ari = adjusted_rand_index(&warm.result.assignments, &a.result.assignments);
+        assert!(ari > 0.9, "quant warm restart drifted: ari={ari}");
     }
 
     #[test]

@@ -232,6 +232,10 @@ pub struct ExperimentConfig {
     /// one row per client). Bounding trades recompute for memory; evicted
     /// rows recompute bitwise identically.
     pub store_capacity: usize,
+    /// Keep summary-store rows int8 scalar-quantized (default false): 4x
+    /// smaller arena, clustering on compressed codes. Approximate vs the
+    /// exact f32 path (>= 0.95 ARI) but deterministic in its own right.
+    pub store_quantized: bool,
     /// Summary engine: encoder / py / pxy / jl.
     pub summary: String,
     /// Target accuracy for time-to-accuracy reporting (0 = disabled).
@@ -275,6 +279,7 @@ impl Default for ExperimentConfig {
             summary_cache: true,
             summary_fused: true,
             store_capacity: 0,
+            store_quantized: false,
             summary: "encoder".into(),
             target_accuracy: 0.0,
             seed: 1,
@@ -292,7 +297,7 @@ impl Default for ExperimentConfig {
 
 /// The keys `ExperimentConfig::from_toml` consumes (the strict-parsing
 /// whitelist; also the `feddde run --help` key reference).
-pub const EXPERIMENT_KEYS: [&str; 26] = [
+pub const EXPERIMENT_KEYS: [&str; 27] = [
     "dataset",
     "n_clients",
     "rounds",
@@ -308,6 +313,7 @@ pub const EXPERIMENT_KEYS: [&str; 26] = [
     "summary_cache",
     "summary_fused",
     "store_capacity",
+    "store_quantized",
     "summary",
     "target_accuracy",
     "seed",
@@ -362,6 +368,7 @@ impl ExperimentConfig {
             summary_cache: t.bool_or("summary_cache", d.summary_cache),
             summary_fused: t.bool_or("summary_fused", d.summary_fused),
             store_capacity: t.int_or("store_capacity", d.store_capacity as i64) as usize,
+            store_quantized: t.bool_or("store_quantized", d.store_quantized),
             summary: t.str_or("summary", &d.summary),
             target_accuracy: t.float_or("target_accuracy", d.target_accuracy),
             seed: t.int_or("seed", d.seed as i64) as u64,
@@ -411,6 +418,9 @@ pub struct SimConfig {
     pub refresh_every: usize,
     /// Refresh worker threads (0 = auto). Never changes results.
     pub threads: usize,
+    /// Run scenario refreshes on an int8-quantized summary store (see
+    /// `ExperimentConfig::store_quantized`).
+    pub store_quantized: bool,
     /// Modeled host seconds for one local SGD step (scaled per device).
     pub train_step_host_secs: f64,
     /// Model-update upload bytes per selected client per round.
@@ -433,6 +443,7 @@ impl Default for SimConfig {
             clusters: 0,
             refresh_every: 5,
             threads: 0,
+            store_quantized: false,
             train_step_host_secs: 0.02,
             update_bytes: 400_000,
             seed: 1,
@@ -442,7 +453,7 @@ impl Default for SimConfig {
 }
 
 /// The keys `SimConfig::from_toml` consumes (all under `[sim]`).
-pub const SIM_KEYS: [&str; 14] = [
+pub const SIM_KEYS: [&str; 15] = [
     "sim.scenario",
     "sim.clients",
     "sim.rounds",
@@ -453,6 +464,7 @@ pub const SIM_KEYS: [&str; 14] = [
     "sim.clusters",
     "sim.refresh_every",
     "sim.threads",
+    "sim.store_quantized",
     "sim.train_step_host_secs",
     "sim.update_bytes",
     "sim.seed",
@@ -481,6 +493,7 @@ impl SimConfig {
             clusters: t.int_or("sim.clusters", d.clusters as i64) as usize,
             refresh_every: t.int_or("sim.refresh_every", d.refresh_every as i64) as usize,
             threads: t.int_or("sim.threads", d.threads as i64) as usize,
+            store_quantized: t.bool_or("sim.store_quantized", d.store_quantized),
             train_step_host_secs: t.float_or("sim.train_step_host_secs", d.train_step_host_secs),
             update_bytes: t.int_or("sim.update_bytes", d.update_bytes as i64) as usize,
             seed: t.int_or("sim.seed", d.seed as i64) as u64,
@@ -557,7 +570,8 @@ mod tests {
     fn refresh_pipeline_knobs_from_toml() {
         let t = Toml::parse(
             "cluster_backend = \"minibatch\"\nrefresh_threads = 4\nsummary_cache = false\n\
-             kmeans_pruning = \"off\"\nsummary_fused = false\nstore_capacity = 5000\n",
+             kmeans_pruning = \"off\"\nsummary_fused = false\nstore_capacity = 5000\n\
+             store_quantized = true\n",
         )
         .unwrap();
         let c = ExperimentConfig::from_toml(&t).unwrap();
@@ -567,6 +581,7 @@ mod tests {
         assert_eq!(c.kmeans_pruning, "off");
         assert!(!c.summary_fused);
         assert_eq!(c.store_capacity, 5000);
+        assert!(c.store_quantized);
     }
 
     #[test]
@@ -574,6 +589,7 @@ mod tests {
         let c = ExperimentConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
         assert!(c.summary_fused, "fused must be the default path");
         assert_eq!(c.store_capacity, 0, "store unbounded by default");
+        assert!(!c.store_quantized, "exact f32 store must be the default");
     }
 
     #[test]
@@ -647,5 +663,8 @@ mod tests {
         assert_eq!(c.update_bytes, 123_456);
         assert_eq!(c.seed, 9);
         assert_eq!(c.out_dir, "results/simx");
+        assert!(!d.store_quantized, "sim store must default to exact f32");
+        let t = Toml::parse("[sim]\nstore_quantized = true\n").unwrap();
+        assert!(SimConfig::from_toml(&t).unwrap().store_quantized);
     }
 }

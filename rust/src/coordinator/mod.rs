@@ -116,6 +116,7 @@ impl Coordinator {
             pruning,
             fused: cfg.summary_fused,
             store_capacity: cfg.store_capacity,
+            store_quantized: cfg.store_quantized,
             ..Default::default()
         });
 

@@ -22,11 +22,21 @@
 //! [`SummaryStore::compact`] repacks occupied rows to the front and frees
 //! the tail when a fleet shrinks. Eviction/compaction counters surface in
 //! `RefreshResult` via [`StoreStats`].
+//!
+//! Optionally ([`SummaryStore::with_mode`], config `store_quantized`) the
+//! arena holds int8 scalar-quantized rows instead of f32: 1 byte/value plus
+//! a per-row `(scale, zero)` pair kept as bookkeeping next to `RowMeta`.
+//! Writes quantize in place ([`SummaryStore::write_row`]); reads either
+//! dequantize ([`SummaryStore::read_row_into`]) or hand the raw codes to the
+//! compressed distance kernels ([`SummaryStore::qrow`],
+//! [`SummaryStore::gather_quant`] → `cluster::kmeans::fit_quantized`).
+//! Everything else — LRU bounding, invalidation, compaction, determinism of
+//! the stored bits — is mode-independent.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::util::mat::Mat;
+use crate::util::mat::{dequantize_row, quantize_row, Mat, QuantMat, QuantParams};
 
 const NO_SLOT: u32 = u32::MAX;
 const NO_CLIENT: u32 = u32::MAX;
@@ -41,8 +51,15 @@ pub struct StoreStats {
     pub allocated: usize,
     /// Maximum rows the store will hold (0 = unbounded).
     pub capacity: usize,
-    /// Arena bytes currently allocated (rows × dim × 4).
+    /// Summary-data arena bytes currently allocated: rows × dim × 4 in f32
+    /// mode, rows × dim × 1 when quantized (exactly 4x smaller).
     pub bytes: usize,
+    /// Whether rows are stored int8-quantized.
+    pub quantized: bool,
+    /// Per-row quantization metadata bytes (scale + zero-point), reported
+    /// separately from `bytes` because — like `RowMeta` — it is per-row
+    /// bookkeeping, not summary data. Zero in f32 mode.
+    pub param_bytes: usize,
     /// Lifetime lookup hits (rows served without recomputation).
     pub hits: u64,
     /// Lifetime lookup misses.
@@ -74,8 +91,16 @@ struct RowMeta {
 pub struct SummaryStore {
     dim: usize,
     capacity: usize,
-    /// The arena: `allocated × dim`, rows addressed by slot.
+    /// Int8 mode: rows live in `qdata`/`qparams` instead of `data`, written
+    /// through [`SummaryStore::write_row`] which quantizes in place.
+    quantized: bool,
+    /// The f32 arena: `allocated × dim`, rows addressed by slot. Empty in
+    /// quantized mode.
     data: Mat,
+    /// The int8 arena (`allocated × dim` bytes) and its per-row affine
+    /// parameters. Empty in f32 mode.
+    qdata: Vec<i8>,
+    qparams: Vec<QuantParams>,
     meta: Vec<RowMeta>,
     /// client_id → slot (dense; grows with the largest client id seen).
     index: Vec<u32>,
@@ -101,11 +126,23 @@ impl SummaryStore {
     /// `capacity` = maximum resident rows; 0 means unbounded (one row per
     /// client ever seen, the resident-fleet mode).
     pub fn new(dim: usize, capacity: usize) -> Self {
+        Self::with_mode(dim, capacity, false)
+    }
+
+    /// Like [`SummaryStore::new`], but `quantized = true` keeps rows int8
+    /// scalar-quantized (1 byte/value instead of 4; per-row scale/zero-point
+    /// as bookkeeping). Reads go through [`SummaryStore::read_row_into`]
+    /// (dequantize) or [`SummaryStore::qrow`] (raw, for the compressed
+    /// distance kernels); writes through [`SummaryStore::write_row`].
+    pub fn with_mode(dim: usize, capacity: usize, quantized: bool) -> Self {
         assert!(dim > 0, "SummaryStore: zero dim");
         SummaryStore {
             dim,
             capacity: if capacity == 0 { usize::MAX } else { capacity },
+            quantized,
             data: Mat::zeros(0, dim),
+            qdata: Vec::new(),
+            qparams: Vec::new(),
             meta: Vec::new(),
             index: Vec::new(),
             free: Vec::new(),
@@ -185,7 +222,12 @@ impl SummaryStore {
         } else if let Some(slot) = self.free.pop() {
             slot as usize
         } else if self.meta.len() < self.capacity {
-            self.data.push_zero_row();
+            if self.quantized {
+                self.qdata.resize(self.qdata.len() + self.dim, 0);
+                self.qparams.push(QuantParams::default());
+            } else {
+                self.data.push_zero_row();
+            }
             self.meta.push(RowMeta { client: NO_CLIENT, phase: 0, model_secs: 0.0, tick: 0 });
             self.meta.len() - 1
         } else {
@@ -243,18 +285,28 @@ impl SummaryStore {
         if self.free.is_empty() {
             return;
         }
+        let keep = self.meta.len() - self.free.len();
         let mut data = Mat::zeros(0, self.dim);
-        let mut meta = Vec::with_capacity(self.meta.len() - self.free.len());
+        let mut qdata = Vec::with_capacity(if self.quantized { keep * self.dim } else { 0 });
+        let mut qparams = Vec::with_capacity(if self.quantized { keep } else { 0 });
+        let mut meta = Vec::with_capacity(keep);
         for slot in 0..self.meta.len() {
             let m = self.meta[slot];
             if m.client == NO_CLIENT {
                 continue;
             }
             self.index[m.client as usize] = meta.len() as u32;
-            data.push_row(self.data.row(slot));
+            if self.quantized {
+                qdata.extend_from_slice(&self.qdata[slot * self.dim..(slot + 1) * self.dim]);
+                qparams.push(self.qparams[slot]);
+            } else {
+                data.push_row(self.data.row(slot));
+            }
             meta.push(m);
         }
         self.data = data;
+        self.qdata = qdata;
+        self.qparams = qparams;
         self.meta = meta;
         self.free.clear();
         if self.bounded() {
@@ -276,18 +328,82 @@ impl SummaryStore {
         if target > self.meta.len() {
             let add = target - self.meta.len();
             self.meta.reserve(add);
-            self.data.reserve_rows(add);
+            if self.quantized {
+                self.qdata.reserve(add * self.dim);
+                self.qparams.reserve(add);
+            } else {
+                self.data.reserve_rows(add);
+            }
         }
+    }
+
+    /// Is this an int8-quantized store?
+    #[inline]
+    pub fn is_quantized(&self) -> bool {
+        self.quantized
     }
 
     #[inline]
     pub fn row(&self, slot: usize) -> &[f32] {
+        debug_assert!(!self.quantized, "row(): quantized store has no f32 rows; use qrow/read_row_into");
         self.data.row(slot)
     }
 
     #[inline]
     pub fn row_mut(&mut self, slot: usize) -> &mut [f32] {
+        debug_assert!(!self.quantized, "row_mut(): use write_row on a quantized store");
         self.data.row_mut(slot)
+    }
+
+    /// Write a summary into `slot`, quantizing in place when the store is
+    /// int8 — the universal write path (`row_mut().copy_from_slice()` only
+    /// works on f32 stores).
+    pub fn write_row(&mut self, slot: usize, src: &[f32]) {
+        assert_eq!(src.len(), self.dim, "write_row: dim mismatch");
+        if self.quantized {
+            let q = &mut self.qdata[slot * self.dim..(slot + 1) * self.dim];
+            self.qparams[slot] = quantize_row(src, q);
+        } else {
+            self.data.row_mut(slot).copy_from_slice(src);
+        }
+    }
+
+    /// Read a row as f32 — a plain copy on f32 stores, a dequantization on
+    /// int8 ones. The universal read path for callers that need floats.
+    pub fn read_row_into(&self, slot: usize, dst: &mut [f32]) {
+        if self.quantized {
+            let q = &self.qdata[slot * self.dim..(slot + 1) * self.dim];
+            dequantize_row(q, self.qparams[slot], dst);
+        } else {
+            dst.copy_from_slice(self.data.row(slot));
+        }
+    }
+
+    /// Raw int8 row (quantized stores only) — feeds the compressed distance
+    /// kernels without dequantizing.
+    #[inline]
+    pub fn qrow(&self, slot: usize) -> &[i8] {
+        debug_assert!(self.quantized, "qrow(): f32 store has no quantized rows");
+        &self.qdata[slot * self.dim..(slot + 1) * self.dim]
+    }
+
+    /// Per-row quantization parameters (quantized stores only).
+    #[inline]
+    pub fn qparams_of(&self, slot: usize) -> QuantParams {
+        self.qparams[slot]
+    }
+
+    /// Gather the given slots into an owned [`QuantMat`] (quantized stores
+    /// only) — the compressed analogue of the f32 gather, feeding
+    /// `cluster::kmeans::fit_quantized` / `minibatch::fit_warm_quant`
+    /// without ever materializing an n × dim f32 matrix.
+    pub fn gather_quant(&self, slots: &[usize]) -> QuantMat {
+        assert!(self.quantized, "gather_quant(): store is not quantized");
+        let mut q = QuantMat::zeros(slots.len(), self.dim);
+        for (i, &slot) in slots.iter().enumerate() {
+            q.copy_row(i, self.qrow(slot), self.qparams[slot]);
+        }
+        q
     }
 
     #[inline]
@@ -308,7 +424,9 @@ impl SummaryStore {
     /// order; drift refreshes free and refill the same slots), and it is
     /// what lets clustering read summaries without a gather.
     pub fn fleet_matrix(&self, current: &[(usize, u64)]) -> Option<&Mat> {
-        if self.meta.len() != current.len() || !self.free.is_empty() {
+        // A quantized arena cannot be read as an f32 matrix; callers fall
+        // back to gather_quant / read_row_into.
+        if self.quantized || self.meta.len() != current.len() || !self.free.is_empty() {
             return None;
         }
         // No free slots (guard above) means every row is occupied, so the
@@ -325,6 +443,8 @@ impl SummaryStore {
     /// Forget everything (e.g. when the summary engine or seed changes).
     pub fn clear(&mut self) {
         self.data = Mat::zeros(0, self.dim);
+        self.qdata = Vec::new();
+        self.qparams = Vec::new();
         self.meta.clear();
         self.index.clear();
         self.free.clear();
@@ -355,9 +475,23 @@ impl SummaryStore {
         self.evictions
     }
 
-    /// Arena bytes currently allocated.
+    /// Summary-data arena bytes currently allocated: 4 bytes/value in f32
+    /// mode, 1 byte/value quantized. Per-row bookkeeping (`RowMeta`, and in
+    /// quantized mode the scale/zero-point pairs — see
+    /// [`SummaryStore::param_bytes`]) is not summary data and is excluded,
+    /// same as it always was for `RowMeta`.
     pub fn bytes(&self) -> usize {
-        self.meta.len() * self.dim * std::mem::size_of::<f32>()
+        let per_value = if self.quantized { 1 } else { std::mem::size_of::<f32>() };
+        self.meta.len() * self.dim * per_value
+    }
+
+    /// Bytes of per-row quantization metadata (0 in f32 mode).
+    pub fn param_bytes(&self) -> usize {
+        if self.quantized {
+            self.meta.len() * std::mem::size_of::<QuantParams>()
+        } else {
+            0
+        }
     }
 
     pub fn stats(&self) -> StoreStats {
@@ -368,6 +502,8 @@ impl SummaryStore {
             // report it back as the configured 0, not the sentinel.
             capacity: if self.bounded() { self.capacity } else { 0 },
             bytes: self.bytes(),
+            quantized: self.quantized,
+            param_bytes: self.param_bytes(),
             hits: self.hits,
             misses: self.misses,
             evictions: self.evictions,
@@ -506,6 +642,119 @@ mod tests {
         s.clear();
         assert!(s.is_empty());
         assert_eq!(s.bytes(), 0);
+    }
+
+    /// Quantized analogue of `filled`: writes a deterministic non-constant
+    /// row through the universal write path.
+    fn qfilled(store: &mut SummaryStore, client: usize, phase: u64) -> usize {
+        let dim = 8;
+        let row: Vec<f32> =
+            (0..dim).map(|j| (client as f32 + 1.0) * (j as f32 - 3.5) * 0.37).collect();
+        let slot = store.upsert(client, phase, client as f64);
+        store.write_row(slot, &row);
+        slot
+    }
+
+    #[test]
+    fn quantized_write_read_round_trips_within_scale() {
+        let mut s = SummaryStore::with_mode(8, 0, true);
+        assert!(s.is_quantized());
+        let row: Vec<f32> = vec![-2.0, -0.5, 0.0, 0.25, 1.0, 3.0, -1.25, 2.5];
+        let slot = s.upsert(4, 0, 1.0);
+        s.write_row(slot, &row);
+        let p = s.qparams_of(slot);
+        assert!(p.scale > 0.0);
+        let mut back = vec![0.0f32; 8];
+        s.read_row_into(slot, &mut back);
+        for (x, y) in row.iter().zip(&back) {
+            assert!(
+                (x - y).abs() <= 0.5 * p.scale + 1e-6,
+                "round trip off: {x} vs {y} (scale {})",
+                p.scale
+            );
+        }
+        // Raw int8 row is exposed for the compressed kernels.
+        assert_eq!(s.qrow(slot).len(), 8);
+    }
+
+    #[test]
+    fn quantized_bytes_are_exactly_4x_smaller() {
+        let dim = 16;
+        let mut f = SummaryStore::with_mode(dim, 0, false);
+        let mut q = SummaryStore::with_mode(dim, 0, true);
+        for c in 0..10 {
+            let row: Vec<f32> = (0..dim).map(|j| (c * dim + j) as f32 * 0.01).collect();
+            let fs = f.upsert(c, 0, 0.0);
+            f.write_row(fs, &row);
+            let qs = q.upsert(c, 0, 0.0);
+            q.write_row(qs, &row);
+        }
+        assert_eq!(f.bytes(), 10 * dim * 4);
+        assert_eq!(q.bytes(), 10 * dim);
+        assert_eq!(f.bytes(), 4 * q.bytes());
+        assert_eq!(f.param_bytes(), 0);
+        assert_eq!(q.param_bytes(), 10 * std::mem::size_of::<QuantParams>());
+        let st = q.stats();
+        assert!(st.quantized);
+        assert_eq!(st.bytes, q.bytes());
+        assert_eq!(st.param_bytes, q.param_bytes());
+        assert!(!f.stats().quantized);
+    }
+
+    #[test]
+    fn quantized_store_evicts_and_recomputes_like_f32() {
+        let mut s = SummaryStore::with_mode(8, 3, true);
+        for c in 0..3 {
+            qfilled(&mut s, c, 0);
+        }
+        s.lookup(0, 0).unwrap();
+        s.lookup(2, 0).unwrap();
+        let bits_before: Vec<i8> = s.qrow(s.lookup(0, 0).unwrap()).to_vec();
+        qfilled(&mut s, 9, 0); // evicts client 1 (LRU)
+        assert_eq!(s.evictions(), 1);
+        assert!(s.lookup(1, 0).is_none());
+        // Re-insert the evicted client: same bits (pure function of input).
+        let slot = qfilled(&mut s, 1, 0);
+        assert_eq!(s.evictions(), 2);
+        let reinserted: Vec<i8> = s.qrow(slot).to_vec();
+        let fresh = {
+            let mut t = SummaryStore::with_mode(8, 0, true);
+            let ts = qfilled(&mut t, 1, 0);
+            t.qrow(ts).to_vec()
+        };
+        assert_eq!(reinserted, fresh, "evicted row must recompute to the same bits");
+        let surv = s.lookup(0, 0).unwrap();
+        assert_eq!(s.qrow(surv), &bits_before[..], "survivor row disturbed by eviction");
+    }
+
+    #[test]
+    fn quantized_compact_and_gather_preserve_bits() {
+        let mut s = SummaryStore::with_mode(8, 0, true);
+        for c in 0..8 {
+            qfilled(&mut s, c, 0);
+        }
+        let current: Vec<(usize, u64)> =
+            (0..8).map(|c| (c, if c < 6 { 1 } else { 0 })).collect();
+        assert_eq!(s.invalidate_stale(&current), 6);
+        assert!(s.fleet_matrix(&current).is_none(), "quantized store must not serve &Mat");
+        let keep: Vec<Vec<i8>> =
+            (6..8).map(|c| s.qrow(s.lookup(c, 0).unwrap()).to_vec()).collect();
+        s.compact();
+        assert_eq!(s.stats().compactions, 1);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.bytes(), 2 * 8);
+        let slots: Vec<usize> = (6..8).map(|c| s.lookup(c, 0).unwrap()).collect();
+        for (k, &slot) in keep.iter().zip(&slots) {
+            assert_eq!(s.qrow(slot), &k[..], "compaction changed row bits");
+        }
+        // gather_quant hands clustering the same bits in slot order.
+        let g = s.gather_quant(&slots);
+        assert_eq!(g.rows(), 2);
+        for (i, &slot) in slots.iter().enumerate() {
+            assert_eq!(g.row(i), s.qrow(slot));
+            assert_eq!(g.params(i).scale.to_bits(), s.qparams_of(slot).scale.to_bits());
+            assert_eq!(g.params(i).zero.to_bits(), s.qparams_of(slot).zero.to_bits());
+        }
     }
 
     #[test]

@@ -29,6 +29,12 @@
 //!   (`cluster::kmeans`) or mini-batch K-means (`cluster::minibatch`) with
 //!   centroids + learning-rate counts warm-started across refreshes; `auto`
 //!   switches to mini-batch at `MINIBATCH_AUTO_THRESHOLD` clients.
+//! * **Int8-quantized store + compressed clustering.**
+//!   [`RefreshOptions::store_quantized`] keeps arena rows scalar-quantized
+//!   (4x smaller) and clusters the codes through the integer-kernel
+//!   backends (`kmeans::fit_quantized` / `minibatch::fit_warm_quant`) —
+//!   approximate versus the f32 path (>= 0.95 ARI) but bitwise
+//!   deterministic in its own right.
 //!
 //! Determinism contract: a client's summary is a pure function of
 //! `(seed, client_id, drift_phase)` — the rng substream and both generator
@@ -62,7 +68,7 @@ use crate::data::partition::Partition;
 use crate::device::DeviceProfile;
 use crate::runtime::Engine;
 use crate::summary::SummaryEngine;
-use crate::util::mat::Mat;
+use crate::util::mat::{dequantize_row, quantize_row, Mat, QuantMat};
 use crate::util::parallel::{default_threads, for_each_dynamic_init};
 use crate::util::rng::Rng;
 use crate::util::stats;
@@ -98,6 +104,17 @@ pub struct RefreshOptions {
     /// 0 = unbounded, i.e. one row per client). Bounding trades recompute
     /// for memory: LRU-evicted rows recompute bitwise identically.
     pub store_capacity: usize,
+    /// Keep store rows int8 scalar-quantized (config `store_quantized`):
+    /// 1 byte/value instead of 4 — a 4x summary-arena reduction — with a
+    /// per-row scale/zero-point kept as bookkeeping. Clustering then runs on
+    /// the compressed codes (`cluster::kmeans::fit_quantized` /
+    /// `minibatch::fit_warm_quant`, integer kernels + a dequant-free norm
+    /// screen). Summaries and clusters become round-trip approximations of
+    /// the exact f32 path (held to >= 0.95 ARI in tests/benches); everything
+    /// stays bitwise deterministic across threads and reruns. `false` (the
+    /// default) is the exact path, bitwise identical to pre-quantization
+    /// builds.
+    pub store_quantized: bool,
     /// Return an owned copy of the fleet summary matrix in
     /// [`RefreshResult::summaries`]. When `false`, `summaries` always comes
     /// back empty (0 × dim); with an unbounded store this additionally keeps
@@ -118,6 +135,7 @@ impl Default for RefreshOptions {
             pruning: Pruning::default(),
             fused: true,
             store_capacity: 0,
+            store_quantized: false,
             emit_summaries: true,
         }
     }
@@ -186,6 +204,17 @@ impl RefreshResult {
     /// fleet summarizes in parallel, then the server clusters.
     pub fn sim_model_secs(&self) -> f64 {
         self.device_parallel_secs + self.cluster_model_secs
+    }
+
+    /// Resident summary-arena bytes per stored client row — the memory
+    /// figure `BENCH_refresh.json` quotes (4 × dim on an f32 store, dim on a
+    /// quantized one). 0.0 when the store is disabled or empty.
+    pub fn store_bytes_per_client(&self) -> f64 {
+        if self.store.rows == 0 {
+            0.0
+        } else {
+            self.store.bytes as f64 / self.store.rows as f64
+        }
     }
 }
 
@@ -276,6 +305,12 @@ impl FleetRefresher {
             self.state_key = Some((seed, dim));
         }
         let use_cache = self.opts.use_cache;
+        let quant = self.opts.store_quantized;
+        // A store created under the other representation cannot serve this
+        // refresh; rebuild it (rows recompute bitwise, nothing is lost).
+        if self.store.as_ref().is_some_and(|s| s.is_quantized() != quant) {
+            self.store = None;
+        }
         let bounded = self.opts.store_capacity != 0 && self.opts.store_capacity < n;
         // The owned output matrix is skipped only when the resident store's
         // arena itself backs every read (zero-copy mode). A bounded store can
@@ -300,7 +335,8 @@ impl FleetRefresher {
         let mut evictions_before = 0u64;
         let mut store = if use_cache {
             let cap = self.opts.store_capacity;
-            let store = self.store.get_or_insert_with(|| SummaryStore::new(dim, cap));
+            let store =
+                self.store.get_or_insert_with(|| SummaryStore::with_mode(dim, cap, quant));
             store.reserve(n);
             invalidated = store.invalidate_stale(&current);
             evictions_before = store.evictions();
@@ -323,7 +359,9 @@ impl FleetRefresher {
                     model_secs[i] = store.model_secs(slot);
                     slots[i] = slot;
                     if want_out {
-                        out.row_mut(i).copy_from_slice(store.row(slot));
+                        // Universal read: plain copy on f32 stores,
+                        // dequantization on int8 ones.
+                        store.read_row_into(slot, out.row_mut(i));
                     }
                     continue;
                 }
@@ -403,7 +441,12 @@ impl FleetRefresher {
         }
 
         // Deterministic assembly: write each result into its client's arena
-        // row (in place) and/or the owned output row.
+        // row (in place) and/or the owned output row. In quantized mode the
+        // output row is read *back* from the arena (or round-tripped through
+        // a scratch row when the store is off), so a summary has one value —
+        // the dequantized codes — whether it was just computed or served
+        // from the store on a later refresh.
+        let mut qscratch = vec![0i8; if quant { dim } else { 0 }];
         for (slot, &i) in result_slots.into_iter().zip(&recomputed) {
             let computed = slot
                 .into_inner()
@@ -415,11 +458,18 @@ impl FleetRefresher {
             model_secs[i] = model;
             if let Some(store) = store.as_deref_mut() {
                 let s = store.upsert(part.client_id, phases[i], model);
-                store.row_mut(s).copy_from_slice(&vec);
+                store.write_row(s, &vec);
                 slots[i] = s;
-            }
-            if want_out {
-                out.row_mut(i).copy_from_slice(&vec);
+                if want_out {
+                    store.read_row_into(s, out.row_mut(i));
+                }
+            } else if want_out {
+                if quant {
+                    let p = quantize_row(&vec, &mut qscratch);
+                    dequantize_row(&qscratch, p, out.row_mut(i));
+                } else {
+                    out.row_mut(i).copy_from_slice(&vec);
+                }
             }
         }
         let evicted = store
@@ -449,10 +499,11 @@ impl FleetRefresher {
                 Some(m) => m,
                 None => {
                     // Store holds the fleet but not in client order (e.g.
-                    // membership churn): gather through the recorded slots.
+                    // membership churn), or holds it quantized: gather
+                    // through the recorded slots (dequantizing as needed).
                     let mut gm = Mat::zeros(n, dim);
                     for i in 0..n {
-                        gm.row_mut(i).copy_from_slice(store_ref.row(slots[i]));
+                        store_ref.read_row_into(slots[i], gm.row_mut(i));
                     }
                     gathered = gm;
                     &gathered
@@ -470,6 +521,10 @@ impl FleetRefresher {
             // a feature-mean block and a label-distribution block of very
             // different scales (see cluster::balance_blocks).
             let balanced = crate::cluster::balance_blocks(cluster_src, &summary.blocks());
+            // Quantized mode clusters the compressed codes: re-quantize the
+            // block-balanced matrix (per-block scaling breaks the stored
+            // per-row affine form, so balancing happens in f32 first) and
+            // run the integer-kernel backends.
             if use_minibatch {
                 let mut cfg = MinibatchConfig::new(k_clusters);
                 cfg.seed = seed;
@@ -479,7 +534,12 @@ impl FleetRefresher {
                     cfg.batch = self.opts.minibatch_batch;
                 }
                 minibatch_batch = cfg.batch;
-                let fitted = minibatch::fit_warm(&balanced, &cfg, self.warm.as_ref());
+                let fitted = if quant {
+                    let qpoints = QuantMat::from_mat(&balanced);
+                    minibatch::fit_warm_quant(&qpoints, &cfg, self.warm.as_ref())
+                } else {
+                    minibatch::fit_warm(&balanced, &cfg, self.warm.as_ref())
+                };
                 self.warm = Some(fitted.warm);
                 (fitted.result.assignments, fitted.result.iters)
             } else {
@@ -488,7 +548,11 @@ impl FleetRefresher {
                 cfg.seed = seed;
                 cfg.threads = threads;
                 cfg.pruning = self.opts.pruning;
-                let fitted = kmeans::fit(&balanced, &cfg);
+                let fitted = if quant {
+                    kmeans::fit_quantized(&QuantMat::from_mat(&balanced), &cfg)
+                } else {
+                    kmeans::fit(&balanced, &cfg)
+                };
                 (fitted.assignments, fitted.iters)
             }
         };
@@ -768,6 +832,83 @@ mod tests {
                 assert_eq!(x.to_bits(), y.to_bits(), "arena row {i}");
             }
         }
+    }
+
+    #[test]
+    fn quantized_store_shrinks_bytes_4x_and_keeps_clusters() {
+        let (eng, spec, part, gen, fleet) = setup_native();
+        let jl = JlSummary::new(&spec);
+        let none = DriftSchedule::none();
+        let run = |quant: bool| {
+            let mut r = FleetRefresher::new(RefreshOptions {
+                store_quantized: quant,
+                ..Default::default()
+            });
+            let out = r
+                .refresh(&eng, &jl, &part, &gen, &fleet, &none, 0, spec.n_groups, 7)
+                .unwrap();
+            (r, out)
+        };
+        let (_, exact) = run(false);
+        let (mut rq, q) = run(true);
+        // The tentpole memory claim: the quantized summary arena is exactly
+        // 4x smaller per client, with the scale/zero pairs reported
+        // separately as bookkeeping.
+        assert!(q.store.quantized);
+        assert_eq!(q.store.bytes * 4, exact.store.bytes);
+        assert_eq!(q.store.param_bytes, spec.n_clients * 8);
+        assert_eq!(q.store_bytes_per_client(), jl.dim() as f64);
+        assert_eq!(exact.store_bytes_per_client(), (jl.dim() * 4) as f64);
+        // Quantization is lossy but must not lose the cluster structure.
+        let ari = stats::adjusted_rand_index(&q.clusters, &exact.clusters);
+        assert!(ari >= 0.95, "quantized clusters diverged from exact: ARI {ari}");
+        // Summaries round-trip within each row's quantization step.
+        for i in 0..spec.n_clients {
+            let slot = {
+                let s = rq.store.as_mut().unwrap();
+                s.lookup(part.clients[i].client_id, 0).unwrap()
+            };
+            let scale = rq.store().unwrap().qparams_of(slot).scale;
+            for (x, y) in exact.summaries.row(i).iter().zip(q.summaries.row(i)) {
+                assert!((x - y).abs() <= 0.5 * scale + 1e-6, "row {i}: {x} vs {y}");
+            }
+        }
+        // A second refresh serves every row from the quantized store and
+        // reproduces the dequantized summaries bit-for-bit.
+        let q2 = rq
+            .refresh(&eng, &jl, &part, &gen, &fleet, &none, 0, spec.n_groups, 7)
+            .unwrap();
+        assert!(q2.recomputed.is_empty(), "quantized store missed: {:?}", q2.recomputed);
+        for (a, b) in q.summaries.data().iter().zip(q2.summaries.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(q.clusters, q2.clusters);
+    }
+
+    #[test]
+    fn quantized_zero_copy_mode_gathers_from_the_quant_arena() {
+        // emit_summaries = false on a quantized store: fleet_matrix refuses
+        // (no f32 arena), the slot gather dequantizes, clusters still match
+        // the emitting quantized run.
+        let (eng, spec, part, gen, fleet) = setup_native();
+        let jl = JlSummary::new(&spec);
+        let none = DriftSchedule::none();
+        let mut zc = FleetRefresher::new(RefreshOptions {
+            store_quantized: true,
+            emit_summaries: false,
+            ..Default::default()
+        });
+        let r = zc
+            .refresh(&eng, &jl, &part, &gen, &fleet, &none, 0, spec.n_groups, 7)
+            .unwrap();
+        assert_eq!(r.summaries.rows(), 0);
+        let full = FleetRefresher::new(RefreshOptions {
+            store_quantized: true,
+            ..Default::default()
+        })
+        .refresh(&eng, &jl, &part, &gen, &fleet, &none, 0, spec.n_groups, 7)
+        .unwrap();
+        assert_eq!(r.clusters, full.clusters);
     }
 
     #[test]

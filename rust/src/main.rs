@@ -48,6 +48,7 @@ const TRAIN: CommandSpec = CommandSpec {
         FlagSpec::arg("summary-cache", "BOOL", "serve unchanged clients from the store"),
         FlagSpec::arg("summary-fused", "BOOL", "streaming fused summarization (bitwise identical)"),
         FlagSpec::arg("store-capacity", "N", "bound the columnar summary store (0 = unbounded)"),
+        FlagSpec::arg("store-quantized", "BOOL", "int8-quantize store rows (4x smaller, ~exact)"),
         FlagSpec::arg("target-accuracy", "F", "stop early at this eval accuracy (0 = off)"),
         FlagSpec::arg("seed", "N", "run seed"),
         FlagSpec::arg("out", "PATH", "metrics JSONL output path"),
@@ -95,6 +96,7 @@ const RUN_SIM: CommandSpec = CommandSpec {
         FlagSpec::arg("clusters", "K", "device clusters (0 = dataset groups)"),
         FlagSpec::arg("refresh-every", "N", "re-summarize + recluster every N rounds"),
         FlagSpec::arg("threads", "N", "refresh worker threads (never changes results)"),
+        FlagSpec::arg("store-quantized", "BOOL", "int8-quantize store rows (4x smaller, ~exact)"),
         FlagSpec::arg("step-secs", "F", "modeled host seconds per local step"),
         FlagSpec::arg("update-bytes", "B", "model-update upload bytes per client"),
         FlagSpec::arg("seed", "N", "run seed"),
@@ -140,6 +142,7 @@ fn cfg_from_flags(p: &Parsed) -> Result<ExperimentConfig> {
     p.set("summary-cache", &mut cfg.summary_cache)?;
     p.set("summary-fused", &mut cfg.summary_fused)?;
     p.set("store-capacity", &mut cfg.store_capacity)?;
+    p.set("store-quantized", &mut cfg.store_quantized)?;
     p.set("target-accuracy", &mut cfg.target_accuracy)?;
     p.set("seed", &mut cfg.seed)?;
     p.set_str("out", &mut cfg.out);
@@ -164,6 +167,7 @@ fn sim_cfg_from_flags(p: &Parsed) -> Result<SimConfig> {
     p.set("clusters", &mut cfg.clusters)?;
     p.set("refresh-every", &mut cfg.refresh_every)?;
     p.set("threads", &mut cfg.threads)?;
+    p.set("store-quantized", &mut cfg.store_quantized)?;
     p.set("step-secs", &mut cfg.train_step_host_secs)?;
     p.set("update-bytes", &mut cfg.update_bytes)?;
     p.set("seed", &mut cfg.seed)?;

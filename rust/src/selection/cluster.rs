@@ -12,6 +12,7 @@
 
 use crate::selection::{ClientView, SelectionPolicy};
 use crate::util::rng::Rng;
+use crate::util::stats::{nan_last_cmp, nan_last_cmp_desc};
 
 pub struct ClusterSelection {
     /// Probability of picking a uniformly random available device inside a
@@ -68,7 +69,7 @@ impl SelectionPolicy for ClusterSelection {
             assigned += fl;
             rema.push((cl, exact - exact.floor()));
         }
-        rema.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        rema.sort_by(|a, b| nan_last_cmp_desc(a.1, b.1).then(a.0.cmp(&b.0)));
         let mut left = k.saturating_sub(assigned);
         for &(cl, _) in rema.iter().cycle().take(n_clusters * (k + 1)) {
             if left == 0 {
@@ -78,13 +79,15 @@ impl SelectionPolicy for ClusterSelection {
             left -= 1;
         }
 
-        // Rank within clusters by expected round duration (fastest first).
+        // Rank within clusters by expected round duration (fastest first;
+        // non-finite durations sort last so a NaN-costed device can never
+        // panic the comparator or jump the queue).
         for ids in avail.iter_mut() {
             ids.sort_by(|&a, &b| {
-                clients[a]
-                    .expected_round_secs(self.local_steps)
-                    .partial_cmp(&clients[b].expected_round_secs(self.local_steps))
-                    .unwrap()
+                nan_last_cmp(
+                    clients[a].expected_round_secs(self.local_steps),
+                    clients[b].expected_round_secs(self.local_steps),
+                )
             });
         }
 
@@ -108,10 +111,10 @@ impl SelectionPolicy for ClusterSelection {
         if overflow > 0 {
             let mut rest: Vec<usize> = avail.into_iter().flatten().collect();
             rest.sort_by(|&a, &b| {
-                clients[a]
-                    .expected_round_secs(self.local_steps)
-                    .partial_cmp(&clients[b].expected_round_secs(self.local_steps))
-                    .unwrap()
+                nan_last_cmp(
+                    clients[a].expected_round_secs(self.local_steps),
+                    clients[b].expected_round_secs(self.local_steps),
+                )
             });
             for idx in rest.into_iter().take(overflow) {
                 out.push(clients[idx].client_id);

@@ -5,6 +5,7 @@
 
 use crate::selection::{ClientView, SelectionPolicy};
 use crate::util::rng::Rng;
+use crate::util::stats::nan_last_cmp_desc;
 
 pub struct OortSelection {
     pub explore_frac: f64,
@@ -47,7 +48,10 @@ impl SelectionPolicy for OortSelection {
             .min(k);
         let n_exploit = (k - n_explore).min(tried.len());
 
-        tried.sort_by(|a, b| self.utility(b).partial_cmp(&self.utility(a)).unwrap());
+        // Highest utility first; NaN utilities (e.g. a NaN last_loss, or
+        // inf x 0 from a degenerate duration) rank last instead of
+        // panicking the comparator.
+        tried.sort_by(|a, b| nan_last_cmp_desc(self.utility(a), self.utility(b)));
         let mut out: Vec<usize> = tried.iter().take(n_exploit).map(|c| c.client_id).collect();
 
         if n_explore > 0 {

@@ -287,8 +287,10 @@ impl Simulator {
         let policy = selection::Builder::new(&cfg.policy).local_steps(cfg.local_steps).build()?;
         let refresher = FleetRefresher::new(RefreshOptions {
             threads: cfg.threads,
+            store_quantized: cfg.store_quantized,
             // Zero-copy mode: the store's arena IS the fleet matrix the
-            // cluster backend reads; no owned summary copy is emitted.
+            // cluster backend reads (gathered + dequantized when the store
+            // is int8); no owned summary copy is emitted.
             emit_summaries: false,
             ..Default::default()
         });
@@ -882,6 +884,22 @@ mod tests {
                     r.round_secs
                 );
             }
+        }
+    }
+
+    #[test]
+    fn quantized_store_scenario_runs_and_is_deterministic() {
+        // `sim.store_quantized`: the refresher clusters off the int8 arena.
+        // The run must complete, pay refreshes, and reproduce exactly.
+        let cfg = SimConfig { store_quantized: true, refresh_every: 2, ..smoke_cfg() };
+        let sc = Scenario::by_name("sync_baseline").unwrap();
+        let a = Simulator::new(cfg.clone(), sc.clone()).unwrap().run().unwrap();
+        assert_eq!(a.rounds.len(), 4);
+        assert!(a.rounds[0].refresh_secs > 0.0, "quantized refresh never ran");
+        let b = Simulator::new(cfg, sc).unwrap().run().unwrap();
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.t_end.to_bits(), y.t_end.to_bits(), "round {}", x.round);
+            assert_eq!(x.completed, y.completed);
         }
     }
 

@@ -324,6 +324,249 @@ pub fn gemm_nt_f64_serial(a: &Mat, b: &Mat) -> Mat {
     out
 }
 
+/// Per-row affine int8 quantization parameters: a stored byte `q`
+/// dequantizes as `x̂ = scale·q + zero`. 8 bytes of bookkeeping per row,
+/// next to the row's other metadata — the i8 data arena itself is what
+/// shrinks 4x versus f32.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero: f32,
+}
+
+/// Scalar-quantize one f32 row into i8: per-row min/max affine mapping,
+/// `q = round((x − min) · 255/(max−min)) − 128`, so the full i8 range is
+/// used and `|x − x̂| ≤ scale/2` (+ f32 rounding) for finite inputs.
+/// Degenerate rows — constant, empty, or containing non-finite values —
+/// quantize to all-zero bytes with `scale = 0`, dequantizing to the
+/// constant (or 0.0). Pure per-element function of the input row, so
+/// quantization is bitwise deterministic across threads and call sites.
+pub fn quantize_row(src: &[f32], dst: &mut [i8]) -> QuantParams {
+    assert_eq!(src.len(), dst.len(), "quantize_row: length mismatch");
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in src {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !(lo.is_finite() && hi.is_finite() && hi > lo) {
+        let zero = if lo.is_finite() && lo == hi { lo } else { 0.0 };
+        dst.fill(0);
+        return QuantParams { scale: 0.0, zero };
+    }
+    let scale = (hi - lo) / 255.0;
+    let inv = 255.0 / (hi - lo);
+    for (d, &x) in dst.iter_mut().zip(src) {
+        let q = (((x - lo) * inv).round() as i32).clamp(0, 255) - 128;
+        *d = q as i8;
+    }
+    QuantParams { scale, zero: lo + 128.0 * scale }
+}
+
+/// Inverse of [`quantize_row`]: `x̂ = scale·q + zero` per element.
+pub fn dequantize_row(q: &[i8], p: QuantParams, dst: &mut [f32]) {
+    assert_eq!(q.len(), dst.len(), "dequantize_row: length mismatch");
+    for (d, &v) in dst.iter_mut().zip(q) {
+        *d = p.scale * v as f32 + p.zero;
+    }
+}
+
+/// Dot product of two i8 slices with the [`dot8`] lane discipline: 8
+/// independent i32 lanes, widened to i64 at the fixed-order reduce, i64
+/// tail. Integer math is exact, so the result is independent of blocking
+/// and thread count by construction; lanes stay overflow-free for any
+/// `n ≤ 2^20` (products are ≤ 2^14).
+#[inline]
+pub fn dot8_i8(a: &[i8], b: &[i8]) -> i64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut lanes = [0i32; 8];
+    let mut i = 0;
+    while i + 8 <= n {
+        for l in 0..8 {
+            lanes[l] += (a[i + l] as i32) * (b[i + l] as i32);
+        }
+        i += 8;
+    }
+    let mut acc = 0i64;
+    for l in lanes {
+        acc += l as i64;
+    }
+    while i < n {
+        acc += (a[i] as i64) * (b[i] as i64);
+        i += 1;
+    }
+    acc
+}
+
+/// Squared Euclidean distance between two i8 slices (raw quantized domain),
+/// same 8-lane i32 / i64-reduce shape as [`dot8_i8`]. Squared diffs are
+/// ≤ 255², so lanes are overflow-free for any `n ≤ 2^18`.
+#[inline]
+pub fn sqdist_i8(a: &[i8], b: &[i8]) -> i64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut lanes = [0i32; 8];
+    let mut i = 0;
+    while i + 8 <= n {
+        for l in 0..8 {
+            let d = (a[i + l] as i32) - (b[i + l] as i32);
+            lanes[l] += d * d;
+        }
+        i += 8;
+    }
+    let mut acc = 0i64;
+    for l in lanes {
+        acc += l as i64;
+    }
+    while i < n {
+        let d = (a[i] as i64) - (b[i] as i64);
+        acc += d * d;
+        i += 1;
+    }
+    acc
+}
+
+/// Sum of an i8 slice (i64), the third integer moment the affine distance
+/// expansion consumes alongside [`dot8_i8`] self/cross products.
+#[inline]
+pub fn sum_i8(a: &[i8]) -> i64 {
+    a.iter().map(|&v| v as i64).sum()
+}
+
+/// `‖x̂‖²` of a quantized row from its integer moments alone:
+/// `s²·Σq² + 2·s·z·Σq + n·z²`, combined in f64 in this fixed order.
+#[inline]
+pub fn quant_sqnorm(p: QuantParams, qq: i64, qsum: i64, n: usize) -> f64 {
+    let s = p.scale as f64;
+    let z = p.zero as f64;
+    s * s * qq as f64 + 2.0 * s * z * qsum as f64 + n as f64 * z * z
+}
+
+/// Squared Euclidean distance between the *dequantized* values of two i8
+/// rows, computed entirely from integer kernels and the per-row params —
+/// no f32 row is ever materialized (the dequant-free distance):
+///
+/// `‖x̂ − ŷ‖² = sa²Σa² + sb²Σb² − 2·sa·sb·Σab + 2δ(sa·Σa − sb·Σb) + n·δ²`
+///
+/// with `δ = za − zb`. Exact up to f64 rounding of the final combination;
+/// clamped at 0 (near-identical rows can go slightly negative in f64).
+/// `aa`/`asum` and `bb`/`bsum` are the cached `dot8_i8(r, r)` / [`sum_i8`]
+/// moments of the two rows.
+#[inline]
+pub fn sqdist_quant(
+    a: &[i8],
+    pa: QuantParams,
+    aa: i64,
+    asum: i64,
+    b: &[i8],
+    pb: QuantParams,
+    bb: i64,
+    bsum: i64,
+) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let sa = pa.scale as f64;
+    let sb = pb.scale as f64;
+    let delta = pa.zero as f64 - pb.zero as f64;
+    let n = a.len() as f64;
+    let d2 = sa * sa * aa as f64 + sb * sb * bb as f64
+        - 2.0 * sa * sb * dot8_i8(a, b) as f64
+        + 2.0 * delta * (sa * asum as f64 - sb * bsum as f64)
+        + n * delta * delta;
+    d2.max(0.0)
+}
+
+/// Row-major i8 matrix with per-row [`QuantParams`]: the compressed fleet
+/// representation the quantized `SummaryStore` arena gathers into and the
+/// quantized clustering path consumes. 1 byte/element + 8 bytes/row versus
+/// 4 bytes/element for [`Mat`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantMat {
+    data: Vec<i8>,
+    params: Vec<QuantParams>,
+    rows: usize,
+    cols: usize,
+}
+
+impl QuantMat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        QuantMat {
+            data: vec![0; rows * cols],
+            params: vec![QuantParams::default(); rows],
+            rows,
+            cols,
+        }
+    }
+
+    /// Quantize every row of `m` (per-row scale/zero-point).
+    pub fn from_mat(m: &Mat) -> Self {
+        let mut q = QuantMat::zeros(m.rows(), m.cols());
+        for i in 0..m.rows() {
+            q.set_row(i, m.row(i));
+        }
+        q
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[i8] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn params(&self, i: usize) -> QuantParams {
+        self.params[i]
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[i8] {
+        &self.data
+    }
+
+    /// Quantize `src` into row `i` in place.
+    pub fn set_row(&mut self, i: usize, src: &[f32]) {
+        let cols = self.cols;
+        self.params[i] = quantize_row(src, &mut self.data[i * cols..(i + 1) * cols]);
+    }
+
+    /// Copy an already-quantized row (plus its params) into row `i` —
+    /// the gather path out of the quantized store arena.
+    pub fn copy_row(&mut self, i: usize, src: &[i8], p: QuantParams) {
+        let cols = self.cols;
+        self.data[i * cols..(i + 1) * cols].copy_from_slice(src);
+        self.params[i] = p;
+    }
+
+    /// Dequantize row `i` into `dst`.
+    pub fn dequantize_row_into(&self, i: usize, dst: &mut [f32]) {
+        dequantize_row(self.row(i), self.params[i], dst);
+    }
+
+    /// Materialize the full dequantized f32 matrix (test/oracle use; hot
+    /// paths go through the dequant-free distances instead).
+    pub fn dequantize(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            self.dequantize_row_into(i, m.row_mut(i));
+        }
+        m
+    }
+
+    /// Arena data bytes (the i8 payload; params are per-row bookkeeping).
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
 /// `Tᵀ·X` (`t`: n×h, `x`: n×f → h×f), streamed over rows of X with one f64
 /// accumulator per output element. Per element the additions happen in row
 /// order i = 0..n regardless of streaming or the `threads` partition (workers
@@ -538,6 +781,123 @@ mod tests {
         for (x, y) in base.data().iter().zip(fast.data()) {
             assert!((x - y).abs() <= 1e-4 * (1.0 + x.abs()), "{x} vs {y}");
         }
+    }
+
+    /// Quantize→dequantize round-trip bound: every element is within half
+    /// a quantization step (plus f32 rounding slop) of the original.
+    #[test]
+    fn property_quantize_round_trip_bounds() {
+        crate::util::proptest::check(25, |g| {
+            let n = g.usize_in(1, 100);
+            let mut rng = Rng::new(g.case as u64 + 900);
+            let scale = [0.001f32, 1.0, 1000.0][g.usize_in(0, 2)];
+            let src = random_mat(&mut rng, 1, n, scale);
+            let mut q = vec![0i8; n];
+            let p = quantize_row(src.row(0), &mut q);
+            let mut back = vec![0.0f32; n];
+            dequantize_row(&q, p, &mut back);
+            let max_abs =
+                src.row(0).iter().fold(0.0f32, |m, &x| m.max(x.abs())) as f64;
+            let tol = 0.5 * p.scale as f64 * (1.0 + 1e-3) + 1e-5 * (1.0 + max_abs);
+            for (x, y) in src.row(0).iter().zip(&back) {
+                let err = (*x as f64 - *y as f64).abs();
+                assert!(err <= tol, "err {err} > tol {tol} (scale {})", p.scale);
+            }
+        });
+    }
+
+    #[test]
+    fn quantize_degenerate_rows() {
+        // Constant row: scale 0, dequantizes to the constant exactly.
+        let src = [2.5f32; 9];
+        let mut q = vec![7i8; 9];
+        let p = quantize_row(&src, &mut q);
+        assert_eq!(p.scale, 0.0);
+        assert!(q.iter().all(|&v| v == 0));
+        let mut back = [0.0f32; 9];
+        dequantize_row(&q, p, &mut back);
+        assert_eq!(back, src);
+        // Non-finite row: all zeros, dequantizes to 0.0 (never NaN bytes).
+        let bad = [1.0f32, f32::NAN, f32::INFINITY];
+        let mut qb = vec![1i8; 3];
+        let pb = quantize_row(&bad, &mut qb);
+        assert_eq!((pb.scale, pb.zero), (0.0, 0.0));
+        let mut backb = [9.0f32; 3];
+        dequantize_row(&qb, pb, &mut backb);
+        assert_eq!(backb, [0.0; 3]);
+        // Empty row.
+        let pe = quantize_row(&[], &mut []);
+        assert_eq!(pe.scale, 0.0);
+    }
+
+    #[test]
+    fn i8_kernels_match_scalar_reference_exactly() {
+        let mut rng = Rng::new(31);
+        for n in [0usize, 1, 7, 8, 9, 64, 129] {
+            let a: Vec<i8> = (0..n).map(|_| (rng.below(256) as i64 - 128) as i8).collect();
+            let b: Vec<i8> = (0..n).map(|_| (rng.below(256) as i64 - 128) as i8).collect();
+            let dot: i64 = a.iter().zip(&b).map(|(&x, &y)| x as i64 * y as i64).sum();
+            let sq: i64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| {
+                    let d = x as i64 - y as i64;
+                    d * d
+                })
+                .sum();
+            assert_eq!(dot8_i8(&a, &b), dot, "n={n}");
+            assert_eq!(sqdist_i8(&a, &b), sq, "n={n}");
+            assert_eq!(sum_i8(&a), a.iter().map(|&x| x as i64).sum::<i64>());
+        }
+    }
+
+    /// The dequant-free distance agrees with `sqdist` of the materialized
+    /// dequantized rows to f64-rounding tolerance, and the dequant-free
+    /// norm with `dot8` of the dequantized row.
+    #[test]
+    fn property_quant_distances_match_dequantized_oracle() {
+        crate::util::proptest::check(20, |g| {
+            let n = g.usize_in(1, 80);
+            let mut rng = Rng::new(g.case as u64 + 1300);
+            let m = random_mat(&mut rng, 2, n, [0.01f32, 1.0, 100.0][g.usize_in(0, 2)]);
+            let q = QuantMat::from_mat(&m);
+            let deq = q.dequantize();
+            let (a, b) = (q.row(0), q.row(1));
+            let (pa, pb) = (q.params(0), q.params(1));
+            let (aa, asum) = (dot8_i8(a, a), sum_i8(a));
+            let (bb, bsum) = (dot8_i8(b, b), sum_i8(b));
+            let got = sqdist_quant(a, pa, aa, asum, b, pb, bb, bsum);
+            let want = sqdist(deq.row(0), deq.row(1));
+            let na = quant_sqnorm(pa, aa, asum, n);
+            let nb = quant_sqnorm(pb, bb, bsum, n);
+            // The oracle accumulates in f32 lanes and dequantizes in f32,
+            // so agreement is relative to the row magnitudes, not the
+            // (possibly tiny) distance itself.
+            let tol = 1e-4 * (1.0 + na.abs() + nb.abs());
+            assert!(
+                (got - want).abs() <= tol,
+                "sqdist_quant {got} vs oracle {want} (tol {tol})"
+            );
+            let nwant = dot8(deq.row(0), deq.row(0));
+            assert!(
+                (na - nwant).abs() <= tol,
+                "quant_sqnorm {na} vs oracle {nwant} (tol {tol})"
+            );
+        });
+    }
+
+    #[test]
+    fn quantmat_copy_row_and_bytes() {
+        let m = Mat::from_rows(&[vec![0.0, 1.0, 2.0, 3.0], vec![-4.0, 0.0, 4.0, 8.0]]);
+        let q = QuantMat::from_mat(&m);
+        assert_eq!(q.bytes(), 8);
+        let mut c = QuantMat::zeros(2, 4);
+        c.copy_row(0, q.row(1), q.params(1));
+        assert_eq!(c.row(0), q.row(1));
+        assert_eq!(c.params(0), q.params(1));
+        // from_mat + dequantize round-trips the constant row exactly.
+        let one = Mat::from_rows(&[vec![5.0; 4]]);
+        assert_eq!(QuantMat::from_mat(&one).dequantize().row(0), &[5.0; 4]);
     }
 
     #[test]

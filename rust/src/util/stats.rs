@@ -18,9 +18,42 @@ pub fn std_dev(xs: &[f64]) -> f64 {
     (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
-/// Maximum (0.0 for empty).
+/// Maximum (0.0 only for the empty slice). An all-negative slice returns
+/// its true maximum — the old `.max(0.0)` on the fold clamped e.g.
+/// `max(&[-3.0, -1.0])` to 0.0. NaN entries are skipped (`f64::max`
+/// ignores them), so the result is the maximum over the non-NaN values.
 pub fn max(xs: &[f64]) -> f64 {
-    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max).max(0.0)
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Ascending total order with every NaN after all non-NaN values. The
+/// selection/stats hot-path comparator: never panics (unlike the old
+/// `partial_cmp().unwrap()`), ranks NaN-bearing entries last, and keeps
+/// the finite order of `f64::total_cmp`. Mirrors the NaN-last idiom in
+/// `cluster::kmeans::update_centroids`.
+pub fn nan_last_cmp(a: f64, b: f64) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => a.total_cmp(&b),
+    }
+}
+
+/// Descending counterpart of [`nan_last_cmp`]: largest value first, NaN
+/// still last (a plain reversed `total_cmp` would rank NaN first).
+pub fn nan_last_cmp_desc(a: f64, b: f64) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Greater,
+        (false, true) => Ordering::Less,
+        (false, false) => b.total_cmp(&a),
+    }
 }
 
 /// Linear-interpolated percentile, p in [0, 100].
@@ -29,7 +62,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| nan_last_cmp(*a, *b));
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -158,6 +191,48 @@ mod tests {
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
         assert!((std_dev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_of_all_negative_slice_is_the_true_max() {
+        // Regression: the fold used to end in `.max(0.0)`, clamping every
+        // all-negative slice to 0.0.
+        assert_eq!(max(&[-3.0, -1.5, -2.0]), -1.5);
+        assert_eq!(max(&[-7.0]), -7.0);
+        assert_eq!(max(&[-1.0, 2.0]), 2.0);
+        // NaN entries are skipped, not propagated.
+        assert_eq!(max(&[f64::NAN, -4.0, -6.0]), -4.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_and_ranks_it_last() {
+        // Regression: the sort used `partial_cmp().unwrap()` and panicked
+        // on any NaN input.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        // NaN sorts last, so the interpolation below the top rank stays
+        // finite.
+        assert_eq!(percentile(&xs, 50.0), 2.5);
+        let all_nan = [f64::NAN, f64::NAN];
+        assert!(percentile(&all_nan, 50.0).is_nan());
+        let inf = [f64::INFINITY, f64::NEG_INFINITY, 0.0];
+        assert_eq!(percentile(&inf, 0.0), f64::NEG_INFINITY);
+        assert_eq!(percentile(&inf, 100.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn nan_last_comparators_order_nan_last_both_directions() {
+        use std::cmp::Ordering;
+        let mut v = vec![2.0, f64::NAN, -1.0, f64::INFINITY];
+        v.sort_by(|a, b| nan_last_cmp(*a, *b));
+        assert_eq!(&v[..3], &[-1.0, 2.0, f64::INFINITY]);
+        assert!(v[3].is_nan());
+        let mut d = vec![2.0, f64::NAN, -1.0, f64::INFINITY];
+        d.sort_by(|a, b| nan_last_cmp_desc(*a, *b));
+        assert_eq!(&d[..3], &[f64::INFINITY, 2.0, -1.0]);
+        assert!(d[3].is_nan());
+        assert_eq!(nan_last_cmp(f64::NAN, f64::NAN), Ordering::Equal);
+        assert_eq!(nan_last_cmp_desc(f64::NAN, 1.0), Ordering::Greater);
     }
 
     #[test]

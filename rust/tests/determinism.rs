@@ -3,8 +3,10 @@
 //! element-for-element, cached refreshes must equal cold refreshes, the
 //! streaming fused generate→coreset→project path must equal the
 //! materialize-then-summarize path, bounded-store evictions must recompute
-//! to the same bits, and the mini-batch clustering backend must be
-//! thread-count invariant and close to Lloyd's in quality.
+//! to the same bits (f32 and int8-quantized arenas alike), the quantized
+//! store's raw codes must be bitwise identical across thread counts and
+//! reruns, and the mini-batch clustering backend must be thread-count
+//! invariant and close to Lloyd's in quality.
 //!
 //! Everything here runs against the pure-Rust `JlSummary` engine and a
 //! manifest-free `Engine`, so the oracle holds in every environment — no AOT
@@ -276,6 +278,116 @@ fn bounded_store_evictions_recompute_bitwise() {
         let b = run(&mut bounded);
         let u = run(&mut unbounded);
         assert_bitwise_equal(&u, &b, &format!("bounded vs unbounded at round {round}"));
+        total_evicted += b.evicted;
+        assert!(
+            b.store.rows <= fx.spec.n_clients / 3,
+            "store exceeded its capacity: {} rows",
+            b.store.rows
+        );
+    }
+    assert!(total_evicted > 0, "capacity bound never forced an eviction — test inert");
+    assert_eq!(unbounded.store().unwrap().evictions(), 0);
+}
+
+#[test]
+fn quantized_store_is_bitwise_identical_across_threads_and_reruns() {
+    // Quantization oracle: with `store_quantized` on, the dequantized
+    // summaries, cluster assignments, device seconds, AND the raw store
+    // contents — every i8 code plus each row's scale/zero-point — must be
+    // bitwise identical across refresh thread counts and across reruns from
+    // the same seed. threads=1 appears twice: its second run is the rerun
+    // check.
+    let fx = fixture(48);
+    let drift = DriftSchedule::at(vec![2, 5], 0.4);
+    let seed = 41;
+    let run = |threads: usize| {
+        let mut r = FleetRefresher::new(RefreshOptions {
+            threads,
+            backend: ClusterBackend::Lloyd,
+            store_quantized: true,
+            ..Default::default()
+        });
+        let mut last = None;
+        for round in 0..5 {
+            last = Some(
+                r.refresh(
+                    &fx.engine,
+                    &fx.summary,
+                    &fx.partition,
+                    &fx.generator,
+                    &fx.fleet,
+                    &drift,
+                    round,
+                    fx.spec.n_groups,
+                    seed,
+                )
+                .unwrap(),
+            );
+        }
+        (r, last.unwrap())
+    };
+    let (base_r, base) = run(1);
+    let base_store = base_r.store().unwrap();
+    assert!(base_store.is_quantized(), "store_quantized did not produce a quantized store");
+    assert!(!base_store.is_empty());
+    for threads in [1usize, 4, 8] {
+        let (r, res) = run(threads);
+        assert_bitwise_equal(&base, &res, &format!("quant threads=1 vs {threads}"));
+        let s = r.store().unwrap();
+        assert_eq!(s.len(), base_store.len(), "quant store rows at threads={threads}");
+        assert_eq!(s.stats().allocated, base_store.stats().allocated);
+        for slot in 0..s.stats().allocated {
+            assert_eq!(
+                s.qrow(slot),
+                base_store.qrow(slot),
+                "quant codes differ at slot {slot}, threads={threads}"
+            );
+            let (a, b) = (s.qparams_of(slot), base_store.qparams_of(slot));
+            assert_eq!(a.scale.to_bits(), b.scale.to_bits(), "scale at slot {slot}");
+            assert_eq!(a.zero.to_bits(), b.zero.to_bits(), "zero at slot {slot}");
+        }
+    }
+}
+
+#[test]
+fn bounded_quantized_store_evictions_recompute_bitwise() {
+    // Quantized twin of the eviction oracle above: a capacity-bound int8
+    // store thrashes through LRU evictions, and every re-inserted row must
+    // re-quantize to the same codes — the bounded refresher stays bitwise
+    // equal to the unbounded quantized one at every round.
+    let fx = fixture(48);
+    let drift = DriftSchedule::at(vec![3], 0.5);
+    let seed = 43;
+    let mk = |capacity| {
+        FleetRefresher::new(RefreshOptions {
+            backend: ClusterBackend::Lloyd,
+            store_quantized: true,
+            store_capacity: capacity,
+            ..Default::default()
+        })
+    };
+    let mut bounded = mk(fx.spec.n_clients / 3);
+    let mut unbounded = mk(0);
+    let mut total_evicted = 0;
+    for round in 0..6 {
+        let run = |r: &mut FleetRefresher| {
+            r.refresh(
+                &fx.engine,
+                &fx.summary,
+                &fx.partition,
+                &fx.generator,
+                &fx.fleet,
+                &drift,
+                round,
+                fx.spec.n_groups,
+                seed,
+            )
+            .unwrap()
+        };
+        let b = run(&mut bounded);
+        let u = run(&mut unbounded);
+        assert_bitwise_equal(&u, &b, &format!("quant bounded vs unbounded at round {round}"));
+        assert!(b.store.quantized && u.store.quantized, "round {round}: store not quantized");
         total_evicted += b.evicted;
         assert!(
             b.store.rows <= fx.spec.n_clients / 3,

@@ -12,7 +12,9 @@ use feddde::coordinator::{
 use feddde::data::{coreset, DatasetSpec, DriftSchedule, Generator, Partition};
 use feddde::device::FleetModel;
 use feddde::runtime::Engine;
-use feddde::selection::STRATEGY_NAMES;
+use feddde::selection::{
+    self, validate_selection, ClientView, ClusterSelection, SelectionPolicy, STRATEGY_NAMES,
+};
 use feddde::sim::{Aggregation, AvailabilityModel, Scenario, Simulator, StragglerModel};
 use feddde::summary::JlSummary;
 use feddde::util::mat::Mat;
@@ -682,5 +684,119 @@ fn sim_random_scenarios_preserve_event_and_client_invariants() {
             last_id_at_t = Some(e.id);
             last_t = e.time;
         }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Non-finite-loss fuzz: a client can report a NaN or ±inf training loss (a
+// diverged local model). The ranking comparators used to be
+// `partial_cmp().unwrap()`, which panics on the first NaN; these pin the
+// fixed behavior — never panic, stay valid and deterministic, and rank the
+// NaN-bearing client last instead of letting it jump the queue.
+
+#[test]
+fn selection_strategies_survive_non_finite_losses() {
+    check(10, |g| {
+        let n = g.usize_in(6, 50);
+        let fleet = FleetModel::default().sample_fleet(n);
+        let clusters: Vec<usize> = (0..n).map(|_| g.usize_in(0, 3)).collect();
+        let losses: Vec<Option<f64>> = (0..n)
+            .map(|_| match g.usize_in(0, 5) {
+                0 => Some(f64::NAN),
+                1 => Some(f64::INFINITY),
+                2 => Some(f64::NEG_INFINITY),
+                3 => None,
+                _ => Some(g.f64_in(0.05, 3.0)),
+            })
+            .collect();
+        let views: Vec<ClientView> = (0..n)
+            .map(|i| ClientView {
+                client_id: i,
+                cluster: clusters[i],
+                device: &fleet[i],
+                available: true,
+                n_samples: 20 + i,
+                last_loss: losses[i],
+                step_host_secs: 0.01,
+                upload_bytes: 1_000_000,
+            })
+            .collect();
+        let k = g.usize_in(1, n);
+        for name in STRATEGY_NAMES {
+            let run = || {
+                let mut p = selection::Builder::new(name).build().unwrap();
+                p.select(&views, 0, k, &mut Rng::new(g.case as u64))
+            };
+            let a = run();
+            let b = run();
+            assert_eq!(a, b, "{name}: same seed, different selection");
+            assert!(validate_selection(&a, &views, k), "{name} invalid: {a:?}");
+            assert!(!a.is_empty(), "{name} selected nothing from an all-available fleet");
+        }
+    });
+}
+
+#[test]
+fn oort_ranks_nan_utility_last() {
+    // Every client tried (empty exploration pool), one NaN loss: the
+    // NaN-utility client must never displace a finite-utility one.
+    check(10, |g| {
+        let n = g.usize_in(5, 30);
+        let fleet = FleetModel::default().sample_fleet(n);
+        let nan_client = g.usize_in(0, n - 1);
+        let losses: Vec<f64> =
+            (0..n).map(|i| if i == nan_client { f64::NAN } else { g.f64_in(0.1, 3.0) }).collect();
+        let views: Vec<ClientView> = (0..n)
+            .map(|i| ClientView {
+                client_id: i,
+                cluster: 0,
+                device: &fleet[i],
+                available: true,
+                n_samples: 100,
+                last_loss: Some(losses[i]),
+                step_host_secs: 0.01,
+                upload_bytes: 1_000_000,
+            })
+            .collect();
+        let k = g.usize_in(1, n - 1);
+        let mut p = selection::Builder::new("oort").build().unwrap();
+        let sel = p.select(&views, 0, k, &mut Rng::new(7));
+        assert_eq!(sel.len(), k);
+        assert!(
+            !sel.contains(&nan_client),
+            "NaN-loss client {nan_client} selected at k={k} < n={n}: {sel:?}"
+        );
+    });
+}
+
+#[test]
+fn cluster_ranks_nan_duration_last() {
+    // One device with a NaN step cost (NaN expected round duration) in a
+    // single cluster: with exploration off, the fastest-first ranking must
+    // leave it for last, never pick it while finite-cost devices remain.
+    check(10, |g| {
+        let n = g.usize_in(4, 30);
+        let fleet = FleetModel::default().sample_fleet(n);
+        let nan_client = g.usize_in(0, n - 1);
+        let views: Vec<ClientView> = (0..n)
+            .map(|i| ClientView {
+                client_id: i,
+                cluster: 0,
+                device: &fleet[i],
+                available: true,
+                n_samples: 50,
+                last_loss: Some(1.0),
+                step_host_secs: if i == nan_client { f64::NAN } else { 0.01 },
+                upload_bytes: 1_000_000,
+            })
+            .collect();
+        let k = g.usize_in(1, n - 1);
+        let mut p = ClusterSelection { explore_eps: 0.0, local_steps: 4 };
+        let sel = p.select(&views, 0, k, &mut Rng::new(9));
+        assert_eq!(sel.len(), k);
+        assert!(
+            !sel.contains(&nan_client),
+            "NaN-duration device {nan_client} jumped the queue: {sel:?}"
+        );
     });
 }
