@@ -1,7 +1,7 @@
 # FedDDE build orchestration. The Rust crate lives in rust/, the AOT
 # compiler (JAX + Pallas -> HLO text artifacts) in python/.
 
-.PHONY: artifacts build test bench bench-smoke sim-smoke replay-smoke python-test clean
+.PHONY: artifacts build test bench bench-smoke sim-smoke replay-smoke chaos-smoke python-test clean
 
 # AOT-lower every JAX graph / Pallas kernel into rust/artifacts (manifest.tsv
 # + *.hlo.txt). Requires jax; runs on CPU.
@@ -59,6 +59,25 @@ replay-smoke:
 	@test -s rust/results/replay/sim_coordinator_failure_cluster.journal
 	@test -s rust/results/replay/sim_mid_round_restart_cluster.journal
 	@echo "replay smoke ok: recovered digests matched the uninterrupted runs"
+
+# Chaos smoke: the three fault-injection scenarios (regional outage, flaky
+# uplinks with retry/backoff, byzantine summaries with quarantine) plus a
+# sync_baseline overhead reference, end-to-end through the CLI. Every chaos
+# scenario carries a crash point, so each run is kill -> recover -> resume
+# with the recovered digests diffed against the uninterrupted twin. Emits
+# rust/results/BENCH_chaos.json (retries, failures, summary rejects,
+# quarantines, degraded rounds, overhead vs baseline) and the per-scenario
+# journals under rust/results/chaos/.
+chaos-smoke:
+	cd rust && cargo run --release -- run-sim \
+		--scenario sync_baseline,regional_outage,flaky_uplink,byzantine_summaries \
+		--clients 50 --rounds 6 --per-round 10 \
+		--chaos-json results/BENCH_chaos.json --out-dir results/chaos
+	@test -s rust/results/BENCH_chaos.json
+	@test -s rust/results/chaos/sim_regional_outage_cluster.journal
+	@test -s rust/results/chaos/sim_flaky_uplink_cluster.journal
+	@test -s rust/results/chaos/sim_byzantine_summaries_cluster.journal
+	@echo "chaos smoke ok: fault scenarios recovered and BENCH_chaos.json written"
 
 clean:
 	cd rust && cargo clean

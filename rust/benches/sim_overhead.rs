@@ -12,6 +12,11 @@
 //!    dropped, per strategy.
 //! 2. **Scenario matrix** — a 50-client × 5-round sweep over the scenario
 //!    catalog under the cluster policy (`make sim-smoke`'s payload).
+//! 3. **Chaos matrix** — the fault-injection trio (`regional_outage`,
+//!    `flaky_uplink`, `byzantine_summaries`) through the full kill →
+//!    recover → resume protocol, with retry/quarantine/degraded-close
+//!    counters and the simulated-time overhead versus an identically-sized
+//!    `sync_baseline` run — written to `results/BENCH_chaos.json`.
 //!
 //! Everything is pure Rust (JL summaries, no AOT artifacts needed), so this
 //! runs in every environment. Event digests are quoted per run: equal
@@ -32,6 +37,11 @@ const SPEC: CommandSpec = CommandSpec {
     flags: &[
         FlagSpec::switch("full", "include the 10k-client scale (same as FEDDDE_BENCH_FULL=1)"),
         FlagSpec::arg("out", "PATH", "aggregate JSON artifact (default results/BENCH_sim.json)"),
+        FlagSpec::arg(
+            "chaos-out",
+            "PATH",
+            "chaos-matrix JSON artifact (default results/BENCH_chaos.json)",
+        ),
     ],
 };
 
@@ -127,4 +137,54 @@ fn main() {
 
     std::fs::write(&out, bench_json(&entries)).expect("writing the aggregate artifact");
     println!("\nwrote {out} ({} runs)", entries.len());
+
+    // --- Section 3: chaos matrix → BENCH_chaos.json -------------------------
+    // Same fleet shape for the baseline and every chaos run, so the
+    // overhead_frac in each entry is purely the fault fabric's doing.
+    let chaos_out = flags.get("chaos-out").unwrap_or("results/BENCH_chaos.json").to_string();
+    println!("\n== chaos matrix (fault injection, 50 clients x 6 rounds) ==");
+    let chaos_cfg = || SimConfig {
+        n_clients: 50,
+        rounds: 6,
+        per_round: 10,
+        refresh_every: 2,
+        seed: 3,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let baseline = Simulator::new(chaos_cfg(), Scenario::by_name("sync_baseline").unwrap())
+        .expect("baseline simulator")
+        .run()
+        .expect("baseline run");
+    let baseline_host = t0.elapsed().as_secs_f64();
+    let baseline_secs = baseline.totals().sim_secs;
+    println!(
+        "{:<20} sim {:>9.1}s (reference)  [host {:.2}s]",
+        "sync_baseline", baseline_secs, baseline_host
+    );
+    let mut chaos_entries = vec![baseline.chaos_entry_json(0.0, baseline_host)];
+    for name in ["regional_outage", "flaky_uplink", "byzantine_summaries"] {
+        let sc = Scenario::by_name(name).expect("unknown chaos scenario");
+        let t0 = std::time::Instant::now();
+        let rep = run_with_recovery(chaos_cfg(), sc).expect("chaos kill/recover/resume").report;
+        let host = t0.elapsed().as_secs_f64();
+        let t = rep.totals();
+        println!(
+            "{:<20} sim {:>9.1}s ({:>+6.1}% vs baseline)  retries {}  failed {}  \
+             rejects {}  quarantined {}  degraded {}  [host {:.2}s]",
+            name,
+            t.sim_secs,
+            100.0 * (t.sim_secs / baseline_secs.max(1e-12) - 1.0),
+            t.retries,
+            t.failed,
+            t.summary_rejects,
+            t.quarantined,
+            t.degraded_rounds,
+            host
+        );
+        chaos_entries.push(rep.chaos_entry_json(baseline_secs, host));
+    }
+    std::fs::write(&chaos_out, bench_json(&chaos_entries))
+        .expect("writing the chaos artifact");
+    println!("\nwrote {chaos_out} ({} runs)", chaos_entries.len());
 }

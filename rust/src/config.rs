@@ -428,6 +428,11 @@ pub struct SimConfig {
     pub seed: u64,
     /// Directory for per-scenario JSONL reports (empty = no files).
     pub out_dir: String,
+    /// Fault-injection plan (`[sim.fault]` keys / `--fault-*` flags). Inert
+    /// by default; a non-inert config-level plan overrides the scenario's
+    /// baked-in plan. The zero-fault path is bitwise identical to a build
+    /// without the fabric.
+    pub fault: crate::sim::fault::FaultPlan,
 }
 
 impl Default for SimConfig {
@@ -448,12 +453,14 @@ impl Default for SimConfig {
             update_bytes: 400_000,
             seed: 1,
             out_dir: String::new(),
+            fault: crate::sim::fault::FaultPlan::inert(),
         }
     }
 }
 
-/// The keys `SimConfig::from_toml` consumes (all under `[sim]`).
-pub const SIM_KEYS: [&str; 15] = [
+/// The keys `SimConfig::from_toml` consumes (all under `[sim]`, fault knobs
+/// under `[sim.fault]`).
+pub const SIM_KEYS: [&str; 28] = [
     "sim.scenario",
     "sim.clients",
     "sim.rounds",
@@ -469,6 +476,19 @@ pub const SIM_KEYS: [&str; 15] = [
     "sim.update_bytes",
     "sim.seed",
     "sim.out_dir",
+    "sim.fault.upload_fail_rate",
+    "sim.fault.heartbeat_loss_rate",
+    "sim.fault.corrupt_rate",
+    "sim.fault.outage_frac",
+    "sim.fault.outage_start",
+    "sim.fault.outage_rounds",
+    "sim.fault.max_retries",
+    "sim.fault.backoff_base_secs",
+    "sim.fault.backoff_cap_secs",
+    "sim.fault.backoff_jitter",
+    "sim.fault.quarantine_threshold",
+    "sim.fault.probation_rounds",
+    "sim.fault.stale_discount",
 ];
 
 impl SimConfig {
@@ -482,6 +502,28 @@ impl SimConfig {
     pub fn from_toml_with(t: &Toml, allow_unknown: bool) -> Result<Self> {
         check_known_keys(t, &SIM_KEYS, |k| k.starts_with("sim."), allow_unknown)?;
         let d = SimConfig::default();
+        let df = d.fault;
+        let fault = crate::sim::fault::FaultPlan {
+            upload_fail_rate: t.float_or("sim.fault.upload_fail_rate", df.upload_fail_rate),
+            heartbeat_loss_rate: t
+                .float_or("sim.fault.heartbeat_loss_rate", df.heartbeat_loss_rate),
+            corrupt_rate: t.float_or("sim.fault.corrupt_rate", df.corrupt_rate),
+            outage_frac: t.float_or("sim.fault.outage_frac", df.outage_frac),
+            outage_start: t.int_or("sim.fault.outage_start", df.outage_start as i64) as usize,
+            outage_rounds: t.int_or("sim.fault.outage_rounds", df.outage_rounds as i64)
+                as usize,
+            max_retries: t.int_or("sim.fault.max_retries", df.max_retries as i64) as u32,
+            backoff_base_secs: t.float_or("sim.fault.backoff_base_secs", df.backoff_base_secs),
+            backoff_cap_secs: t.float_or("sim.fault.backoff_cap_secs", df.backoff_cap_secs),
+            backoff_jitter: t.float_or("sim.fault.backoff_jitter", df.backoff_jitter),
+            quarantine_threshold: t
+                .int_or("sim.fault.quarantine_threshold", df.quarantine_threshold as i64)
+                as u32,
+            probation_rounds: t
+                .int_or("sim.fault.probation_rounds", df.probation_rounds as i64)
+                as usize,
+            stale_discount: t.float_or("sim.fault.stale_discount", df.stale_discount),
+        };
         Ok(SimConfig {
             scenario: t.str_or("sim.scenario", &d.scenario),
             n_clients: t.int_or("sim.clients", d.n_clients as i64) as usize,
@@ -498,6 +540,7 @@ impl SimConfig {
             update_bytes: t.int_or("sim.update_bytes", d.update_bytes as i64) as usize,
             seed: t.int_or("sim.seed", d.seed as i64) as u64,
             out_dir: t.str_or("sim.out_dir", &d.out_dir),
+            fault,
         })
     }
 
@@ -666,5 +709,39 @@ mod tests {
         assert!(!d.store_quantized, "sim store must default to exact f32");
         let t = Toml::parse("[sim]\nstore_quantized = true\n").unwrap();
         assert!(SimConfig::from_toml(&t).unwrap().store_quantized);
+    }
+
+    #[test]
+    fn fault_knobs_default_inert_and_parse_from_their_section() {
+        let d = SimConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert!(d.fault.is_inert(), "faults must default off");
+        let t = Toml::parse(
+            "[sim.fault]\nupload_fail_rate = 0.25\nheartbeat_loss_rate = 0.05\n\
+             corrupt_rate = 0.1\noutage_frac = 0.3\noutage_start = 2\noutage_rounds = 3\n\
+             max_retries = 5\nbackoff_base_secs = 1.5\nbackoff_cap_secs = 30.0\n\
+             backoff_jitter = 0.2\nquarantine_threshold = 2\nprobation_rounds = 4\n\
+             stale_discount = 0.7\n",
+        )
+        .unwrap();
+        let c = SimConfig::from_toml(&t).unwrap();
+        assert!(!c.fault.is_inert());
+        assert!((c.fault.upload_fail_rate - 0.25).abs() < 1e-12);
+        assert!((c.fault.heartbeat_loss_rate - 0.05).abs() < 1e-12);
+        assert!((c.fault.corrupt_rate - 0.1).abs() < 1e-12);
+        assert!((c.fault.outage_frac - 0.3).abs() < 1e-12);
+        assert_eq!(c.fault.outage_start, 2);
+        assert_eq!(c.fault.outage_rounds, 3);
+        assert_eq!(c.fault.max_retries, 5);
+        assert!((c.fault.backoff_base_secs - 1.5).abs() < 1e-12);
+        assert!((c.fault.backoff_cap_secs - 30.0).abs() < 1e-12);
+        assert!((c.fault.backoff_jitter - 0.2).abs() < 1e-12);
+        assert_eq!(c.fault.quarantine_threshold, 2);
+        assert_eq!(c.fault.probation_rounds, 4);
+        assert!((c.fault.stale_discount - 0.7).abs() < 1e-12);
+        assert!(c.fault.validate().is_ok());
+        // A typoed fault key is caught like any other sim key.
+        let t = Toml::parse("[sim.fault]\nuplod_fail_rate = 0.5\n").unwrap();
+        let err = SimConfig::from_toml(&t).unwrap_err();
+        assert!(format!("{err:#}").contains("sim.fault.uplod_fail_rate"));
     }
 }

@@ -39,6 +39,16 @@ pub fn fedavg(updates: &[(Vec<f32>, f64)]) -> Result<Vec<f32>> {
     Ok(out.into_iter().map(|v| v as f32).collect())
 }
 
+/// FedAvg weight for an update that needed `retries` re-uploads before it
+/// landed: the base sample count discounted by `discount^retries`. Late
+/// uploads were computed against an older global model, so a degraded-round
+/// close (paper §4's stragglers-vs-staleness trade) down-weights them rather
+/// than dropping them outright. `retries = 0` is the undiscounted weight.
+pub fn staleness_weight(n_samples: usize, discount: f64, retries: u32) -> f64 {
+    debug_assert!((0.0..=1.0).contains(&discount), "discount {discount} outside [0, 1]");
+    n_samples as f64 * discount.powi(retries.min(i32::MAX as u32) as i32)
+}
+
 /// In-place server momentum (FedAvgM-style): `global += beta * velocity +
 /// (avg - global)`. Used by the perf-pass ablation; identity when beta = 0.
 pub struct ServerOptimizer {
@@ -106,6 +116,19 @@ mod tests {
         // Zero individual weights remain fine when the total is positive.
         let ok = fedavg(&[(vec![2.0], 0.0), (vec![4.0], 2.0)]).unwrap();
         assert_eq!(ok, vec![4.0]);
+    }
+
+    #[test]
+    fn staleness_weight_discounts_geometrically_and_stays_fedavg_legal() {
+        assert_eq!(staleness_weight(100, 0.5, 0), 100.0);
+        assert_eq!(staleness_weight(100, 0.5, 1), 50.0);
+        assert_eq!(staleness_weight(100, 0.5, 2), 25.0);
+        // discount = 1.0 disables the discount entirely.
+        assert_eq!(staleness_weight(37, 1.0, 5), 37.0);
+        // Discounted weights stay valid fedavg inputs (finite, >= 0).
+        let w = staleness_weight(200, 0.5, 30);
+        assert!(w.is_finite() && w >= 0.0);
+        fedavg(&[(vec![1.0], staleness_weight(10, 0.5, 3)), (vec![2.0], 10.0)]).unwrap();
     }
 
     #[test]

@@ -1,0 +1,192 @@
+//! Client-health tracking: score per-client failure history, quarantine
+//! repeat offenders, and readmit them on probation after a cool-off.
+//!
+//! The tracker is pure bookkeeping — no RNG, no clock — so its decisions
+//! are a deterministic function of the (failure, success) event sequence
+//! the caller feeds it. The fleet simulator records heartbeat losses,
+//! exhausted upload retries, mid-round dropouts, and rejected summary
+//! uploads as failures; completions as successes. Selection strategies see
+//! the verdict through `ClientView::quarantined` and the
+//! `selection::Builder` quarantine gate.
+
+/// Per-client failure scoring with threshold quarantine and probation-based
+/// readmission.
+///
+/// * `threshold` consecutive failures quarantine a client until
+///   `probation_rounds` full rounds have passed.
+/// * A readmitted client is on probation: one more failure re-quarantines
+///   it immediately; one success clears the slate.
+/// * `threshold == 0` disables quarantining (failures are still counted).
+#[derive(Debug, Clone)]
+pub struct ClientHealth {
+    threshold: u32,
+    probation_rounds: usize,
+    /// Consecutive-failure streak per client (reset on success).
+    consecutive: Vec<u32>,
+    /// First round at which the client may be readmitted (0 = not
+    /// quarantined; readmission rounds are always > 0).
+    quarantined_until: Vec<usize>,
+    /// Readmitted-on-probation flag per client.
+    probation: Vec<bool>,
+    /// Lifetime count of quarantine decisions.
+    quarantines: u64,
+}
+
+impl ClientHealth {
+    pub fn new(n_clients: usize, threshold: u32, probation_rounds: usize) -> Self {
+        ClientHealth {
+            threshold,
+            probation_rounds,
+            consecutive: vec![0; n_clients],
+            quarantined_until: vec![0; n_clients],
+            probation: vec![false; n_clients],
+            quarantines: 0,
+        }
+    }
+
+    /// Round-boundary hook: readmit every client whose cool-off has expired,
+    /// placing it on probation. Call once before selection each round.
+    pub fn begin_round(&mut self, round: usize) {
+        for c in 0..self.quarantined_until.len() {
+            if self.quarantined_until[c] != 0 && round >= self.quarantined_until[c] {
+                self.quarantined_until[c] = 0;
+                self.probation[c] = true;
+                self.consecutive[c] = 0;
+            }
+        }
+    }
+
+    /// Is `client` currently quarantined (ineligible for selection)?
+    pub fn quarantined(&self, client: usize) -> bool {
+        self.quarantined_until[client] != 0
+    }
+
+    /// Record a completed round for `client`: clears its failure streak and
+    /// any probation.
+    pub fn record_success(&mut self, client: usize) {
+        self.consecutive[client] = 0;
+        self.probation[client] = false;
+    }
+
+    /// Record a failure for `client` at `round`. Quarantines when the
+    /// consecutive-failure streak reaches the threshold, or immediately when
+    /// the client is on probation. Returns true when this failure triggered
+    /// a (re-)quarantine.
+    pub fn record_failure(&mut self, client: usize, round: usize) -> bool {
+        self.consecutive[client] = self.consecutive[client].saturating_add(1);
+        if self.threshold == 0 || self.quarantined_until[client] != 0 {
+            return false;
+        }
+        if self.probation[client] || self.consecutive[client] >= self.threshold {
+            self.quarantined_until[client] = round + 1 + self.probation_rounds;
+            self.probation[client] = false;
+            self.quarantines += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Lifetime count of quarantine decisions (per-round deltas give the
+    /// round reports their `quarantined` column).
+    pub fn quarantines(&self) -> u64 {
+        self.quarantines
+    }
+
+    /// How many clients are quarantined right now.
+    pub fn quarantined_now(&self) -> usize {
+        self.quarantined_until.iter().filter(|&&u| u != 0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_failures_quarantine() {
+        let mut h = ClientHealth::new(4, 3, 2);
+        assert!(!h.record_failure(0, 0));
+        assert!(!h.record_failure(0, 1));
+        assert!(!h.quarantined(0));
+        assert!(h.record_failure(0, 2), "third consecutive failure must quarantine");
+        assert!(h.quarantined(0));
+        assert_eq!(h.quarantines(), 1);
+        assert_eq!(h.quarantined_now(), 1);
+        // Other clients are untouched.
+        assert!(!h.quarantined(1));
+    }
+
+    #[test]
+    fn success_resets_the_streak() {
+        let mut h = ClientHealth::new(2, 3, 2);
+        h.record_failure(0, 0);
+        h.record_failure(0, 1);
+        h.record_success(0);
+        assert!(!h.record_failure(0, 2));
+        assert!(!h.record_failure(0, 3));
+        assert!(!h.quarantined(0), "streak must reset on success");
+        assert!(h.record_failure(0, 4));
+    }
+
+    #[test]
+    fn probation_readmission_and_requarantine() {
+        let mut h = ClientHealth::new(1, 2, 2);
+        h.record_failure(0, 5);
+        assert!(h.record_failure(0, 6), "threshold 2 hit");
+        // Quarantined through rounds 7 and 8 (probation_rounds = 2).
+        for r in [7usize, 8] {
+            h.begin_round(r);
+            assert!(h.quarantined(0), "round {r}: still cooling off");
+        }
+        h.begin_round(9);
+        assert!(!h.quarantined(0), "cool-off expired: readmitted on probation");
+        // One failure during probation re-quarantines immediately.
+        assert!(h.record_failure(0, 9));
+        assert_eq!(h.quarantines(), 2);
+        h.begin_round(12);
+        assert!(!h.quarantined(0));
+        // A success during probation clears it: failures count from scratch.
+        h.record_success(0);
+        assert!(!h.record_failure(0, 13), "probation cleared — one failure is not enough");
+    }
+
+    #[test]
+    fn zero_threshold_never_quarantines() {
+        let mut h = ClientHealth::new(2, 0, 2);
+        for r in 0..20 {
+            assert!(!h.record_failure(0, r));
+        }
+        assert!(!h.quarantined(0));
+        assert_eq!(h.quarantines(), 0);
+    }
+
+    #[test]
+    fn failures_while_quarantined_do_not_double_count() {
+        let mut h = ClientHealth::new(1, 1, 3);
+        assert!(h.record_failure(0, 0));
+        assert!(!h.record_failure(0, 1), "already quarantined");
+        assert_eq!(h.quarantines(), 1);
+    }
+
+    #[test]
+    fn decisions_are_replayable() {
+        // Same event sequence => same verdicts (the tracker is pure state).
+        let run = || {
+            let mut h = ClientHealth::new(6, 2, 1);
+            let mut log = Vec::new();
+            for r in 0..10usize {
+                h.begin_round(r);
+                for c in 0..6 {
+                    if (c + r) % 3 == 0 {
+                        log.push((r, c, h.record_failure(c, r)));
+                    } else if (c + r) % 4 == 0 {
+                        h.record_success(c);
+                    }
+                }
+                log.push((r, 99, h.quarantined_now() > 0));
+            }
+            (log, h.quarantines())
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -113,15 +113,23 @@ pub enum Transition {
     ClientsSelected { round: usize, selected: Vec<usize> },
     /// `Training` → `Aggregating`. Handler: the round's terminal
     /// classification — every selected client lands in exactly one bucket.
+    /// `failed` holds clients the fault fabric resolved (exhausted upload
+    /// retries, heartbeat loss); it is empty — and elided from the JSON, so
+    /// zero-fault journal bytes are unchanged — whenever faults are off.
     TrainingEnded {
         round: usize,
         completed: Vec<usize>,
         dropped: Vec<usize>,
         timed_out: Vec<usize>,
+        failed: Vec<usize>,
     },
     /// `Aggregating` → `RoundClosed`. Handler: the FedAvg trigger
     /// (`aggregated` = at least one completion) and metrics emission.
-    RoundAggregated { round: usize, aggregated: bool },
+    /// `degraded` marks a round that closed below its quorum target after
+    /// retries and fell back to staleness-discounted FedAvg over whatever
+    /// completed; it is serialized only when true so fault-free journal
+    /// bytes are unchanged.
+    RoundAggregated { round: usize, aggregated: bool, degraded: bool },
 }
 
 impl Transition {
@@ -191,14 +199,22 @@ impl JournalRecord {
             Transition::ClientsSelected { selected, .. } => {
                 format!("{head},\"selected\":{}}}", ids_json(selected))
             }
-            Transition::TrainingEnded { completed, dropped, timed_out, .. } => format!(
-                "{head},\"completed\":{},\"dropped\":{},\"timed_out\":{}}}",
-                ids_json(completed),
-                ids_json(dropped),
-                ids_json(timed_out)
-            ),
-            Transition::RoundAggregated { aggregated, .. } => {
-                format!("{head},\"aggregated\":{aggregated}}}")
+            Transition::TrainingEnded { completed, dropped, timed_out, failed, .. } => {
+                let fail = if failed.is_empty() {
+                    String::new()
+                } else {
+                    format!(",\"failed\":{}", ids_json(failed))
+                };
+                format!(
+                    "{head},\"completed\":{},\"dropped\":{},\"timed_out\":{}{fail}}}",
+                    ids_json(completed),
+                    ids_json(dropped),
+                    ids_json(timed_out)
+                )
+            }
+            Transition::RoundAggregated { aggregated, degraded, .. } => {
+                let deg = if *degraded { ",\"degraded\":true" } else { "" };
+                format!("{head},\"aggregated\":{aggregated}{deg}}}")
             }
         }
     }
@@ -323,10 +339,21 @@ fn parse_record(line: &str) -> Result<JournalRecord> {
             completed: parse_ids(extract(line, "completed")?)?,
             dropped: parse_ids(extract(line, "dropped")?)?,
             timed_out: parse_ids(extract(line, "timed_out")?)?,
+            // Elided when empty, so its absence (every pre-fault journal)
+            // parses as "no fault-resolved clients".
+            failed: match extract(line, "failed") {
+                Ok(raw) => parse_ids(raw)?,
+                Err(_) => Vec::new(),
+            },
         },
         "aggregate" => Transition::RoundAggregated {
             round,
             aggregated: extract(line, "aggregated")?.parse()?,
+            // Elided when false (every fault-free journal).
+            degraded: match extract(line, "degraded") {
+                Ok(raw) => raw.parse()?,
+                Err(_) => false,
+            },
         },
         other => bail!("unknown transition kind {other:?}"),
     };
@@ -607,8 +634,9 @@ mod tests {
                 completed: vec![1, 9],
                 dropped: vec![],
                 timed_out: vec![5],
+                failed: vec![],
             },
-            Transition::RoundAggregated { round, aggregated: true },
+            Transition::RoundAggregated { round, aggregated: true, degraded: false },
         ]
     }
 
@@ -662,8 +690,43 @@ mod tests {
                 completed: vec![],
                 dropped: vec![],
                 timed_out: vec![],
+                failed: vec![],
             })
             .is_err());
+    }
+
+    #[test]
+    fn fault_fields_are_elided_when_inert_and_round_trip_when_set() {
+        // Zero-fault transitions serialize without the new keys — the bytes
+        // (and hence digests) of every pre-fault journal are unchanged.
+        let clean = machine_after(1).into_journal();
+        let text = clean.to_jsonl();
+        assert!(!text.contains("failed"), "empty failed list must be elided");
+        assert!(!text.contains("degraded"), "degraded:false must be elided");
+
+        // A degraded round with fault-resolved clients round-trips bitwise.
+        let mut m = CoordinatorMachine::new(header());
+        m.apply(Transition::RoundStarted { round: 0 }).unwrap();
+        m.apply(Transition::FleetRendezvoused { round: 0, available: 30 }).unwrap();
+        m.apply(Transition::ClientsSelected { round: 0, selected: vec![1, 5, 9, 11] })
+            .unwrap();
+        m.apply(Transition::TrainingEnded {
+            round: 0,
+            completed: vec![1],
+            dropped: vec![5],
+            timed_out: vec![9],
+            failed: vec![11],
+        })
+        .unwrap();
+        m.apply(Transition::RoundAggregated { round: 0, aggregated: true, degraded: true })
+            .unwrap();
+        let j = m.into_journal();
+        let text = j.to_jsonl();
+        assert!(text.contains("\"failed\":[11]"));
+        assert!(text.contains("\"degraded\":true"));
+        let parsed = EventJournal::parse(&text).unwrap();
+        assert_eq!(parsed, j);
+        assert_eq!(parsed.to_jsonl(), text);
     }
 
     #[test]

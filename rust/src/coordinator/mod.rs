@@ -13,6 +13,7 @@
 //! round so a crash always leaves a recoverable file behind.
 
 pub mod fedavg;
+pub mod health;
 pub mod journal;
 pub mod store;
 pub mod summaries;
@@ -33,12 +34,13 @@ use crate::summary::SummaryEngine;
 use crate::util::mat::Mat;
 use crate::util::rng::Rng;
 
-pub use fedavg::fedavg;
+pub use fedavg::{fedavg, staleness_weight};
+pub use health::ClientHealth;
 pub use journal::{
     fnv1a64, CoordinatorMachine, EventJournal, JournalHeader, JournalRecord, Phase,
     Transition,
 };
-pub use store::{StoreStats, SummaryStore};
+pub use store::{RowRejected, StoreStats, SummaryStore};
 pub use summaries::{refresh_fleet, FleetRefresher, RefreshOptions, RefreshResult};
 
 /// Everything the server tracks about the fleet between rounds.
@@ -200,6 +202,7 @@ impl Coordinator {
                 cluster: self.clusters[i],
                 device: &self.fleet[i],
                 available: self.fleet[i].available(round, self.cfg.seed),
+                quarantined: false,
                 n_samples: c.n_samples,
                 last_loss: self.last_loss[i],
                 step_host_secs: self.step_host_secs,
@@ -370,12 +373,14 @@ impl Coordinator {
             completed: selected.clone(),
             dropped: Vec::new(),
             timed_out: Vec::new(),
+            failed: Vec::new(),
         })?;
         // aggregate handler: FedAvg, then evaluation + metrics emission.
         self.params = fedavg(&updates)?;
 
         let (acc, eval_loss) = self.evaluate()?;
-        self.machine.apply(Transition::RoundAggregated { round, aggregated: true })?;
+        self.machine
+            .apply(Transition::RoundAggregated { round, aggregated: true, degraded: false })?;
         self.sim_time += refresh_secs + round_time;
         let m = RoundMetrics {
             round,

@@ -41,6 +41,43 @@ use crate::util::mat::{dequantize_row, quantize_row, Mat, QuantMat, QuantParams}
 const NO_SLOT: u32 = u32::MAX;
 const NO_CLIENT: u32 = u32::MAX;
 
+/// Why a summary row was refused at the store boundary. Uploaded summaries
+/// are untrusted input to clustering: a single NaN row poisons every
+/// centroid it touches, and a row computed under a stale drift phase
+/// clusters the fleet on data that no longer describes it. The validated
+/// write path ([`SummaryStore::validate_row`] /
+/// [`SummaryStore::try_write_row`]) turns both into typed rejections the
+/// caller can count and report instead of clustering on garbage.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RowRejected {
+    /// The row's length does not match the store's summary dimension.
+    DimMismatch { got: usize, want: usize },
+    /// The row carries a NaN or infinity at `index`.
+    NonFinite { index: usize },
+    /// The row was computed under `row_phase` but the client is currently
+    /// at `want_phase` (a stale upload from before a drift event).
+    Stale { row_phase: u64, want_phase: u64 },
+}
+
+impl std::fmt::Display for RowRejected {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RowRejected::DimMismatch { got, want } => {
+                write!(f, "summary row rejected: dim {got} != store dim {want}")
+            }
+            RowRejected::NonFinite { index } => {
+                write!(f, "summary row rejected: non-finite value at index {index}")
+            }
+            RowRejected::Stale { row_phase, want_phase } => write!(
+                f,
+                "summary row rejected: stale drift phase {row_phase} (client is at {want_phase})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RowRejected {}
+
 /// Counter/size snapshot surfaced in `RefreshResult` (lifetime counters,
 /// current sizes).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -235,18 +272,47 @@ impl SummaryStore {
             // found in O(log) through the lazy heap (ticks are unique, so
             // the victim is exactly the linear scan's). Stale entries — a
             // slot touched, reassigned, or freed since the push — fail the
-            // meta match and are discarded.
+            // meta match and are discarded. A drained heap is repaired by
+            // rebuilding from meta (the ground truth) rather than aborting;
+            // if meta genuinely holds no occupied slot either, growing the
+            // arena is always safe (capacity bounds occupied rows).
+            let mut rebuilt = false;
             let victim = loop {
-                let Reverse((tick, cl, slot)) =
-                    self.lru.pop().expect("bounded store: eviction heap empty");
+                let Some(Reverse((tick, cl, slot))) = self.lru.pop() else {
+                    if rebuilt {
+                        break None;
+                    }
+                    self.rebuild_lru();
+                    rebuilt = true;
+                    continue;
+                };
                 let m = &self.meta[slot as usize];
                 if m.client == cl && m.tick == tick {
-                    break slot as usize;
+                    break Some(slot as usize);
                 }
             };
-            self.index[self.meta[victim].client as usize] = NO_SLOT;
-            self.evictions += 1;
-            victim
+            match victim {
+                Some(victim) => {
+                    self.index[self.meta[victim].client as usize] = NO_SLOT;
+                    self.evictions += 1;
+                    victim
+                }
+                None => {
+                    if self.quantized {
+                        self.qdata.resize(self.qdata.len() + self.dim, 0);
+                        self.qparams.push(QuantParams::default());
+                    } else {
+                        self.data.push_zero_row();
+                    }
+                    self.meta.push(RowMeta {
+                        client: NO_CLIENT,
+                        phase: 0,
+                        model_secs: 0.0,
+                        tick: 0,
+                    });
+                    self.meta.len() - 1
+                }
+            }
         };
         self.index[client] = slot as u32;
         self.meta[slot] =
@@ -343,6 +409,12 @@ impl SummaryStore {
         self.quantized
     }
 
+    /// Summary dimensionality (row width).
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
     #[inline]
     pub fn row(&self, slot: usize) -> &[f32] {
         debug_assert!(!self.quantized, "row(): quantized store has no f32 rows; use qrow/read_row_into");
@@ -366,6 +438,42 @@ impl SummaryStore {
         } else {
             self.data.row_mut(slot).copy_from_slice(src);
         }
+    }
+
+    /// Screen an uploaded summary row before admitting it: dimension, every
+    /// value finite, and drift phase current. Pure check — storage
+    /// untouched. The fault fabric routes corrupted/stale uploads through
+    /// this gate so clustering never sees them.
+    pub fn validate_row(
+        &self,
+        src: &[f32],
+        row_phase: u64,
+        want_phase: u64,
+    ) -> Result<(), RowRejected> {
+        if src.len() != self.dim {
+            return Err(RowRejected::DimMismatch { got: src.len(), want: self.dim });
+        }
+        if let Some(index) = src.iter().position(|v| !v.is_finite()) {
+            return Err(RowRejected::NonFinite { index });
+        }
+        if row_phase != want_phase {
+            return Err(RowRejected::Stale { row_phase, want_phase });
+        }
+        Ok(())
+    }
+
+    /// Validated write: admit `src` into `slot` only if it passes the
+    /// dimension and finiteness screens (phase was fixed at `upsert`).
+    /// Returns the typed rejection instead of panicking on bad input.
+    pub fn try_write_row(&mut self, slot: usize, src: &[f32]) -> Result<(), RowRejected> {
+        if src.len() != self.dim {
+            return Err(RowRejected::DimMismatch { got: src.len(), want: self.dim });
+        }
+        if let Some(index) = src.iter().position(|v| !v.is_finite()) {
+            return Err(RowRejected::NonFinite { index });
+        }
+        self.write_row(slot, src);
+        Ok(())
     }
 
     /// Read a row as f32 — a plain copy on f32 stores, a dequantization on
@@ -755,6 +863,62 @@ mod tests {
             assert_eq!(g.params(i).scale.to_bits(), s.qparams_of(slot).scale.to_bits());
             assert_eq!(g.params(i).zero.to_bits(), s.qparams_of(slot).zero.to_bits());
         }
+    }
+
+    #[test]
+    fn validate_row_rejects_garbage_and_admits_clean_rows() {
+        let s = SummaryStore::new(3, 0);
+        assert_eq!(
+            s.validate_row(&[1.0, 2.0], 0, 0),
+            Err(RowRejected::DimMismatch { got: 2, want: 3 })
+        );
+        assert_eq!(
+            s.validate_row(&[1.0, f32::NAN, 2.0], 0, 0),
+            Err(RowRejected::NonFinite { index: 1 })
+        );
+        assert_eq!(
+            s.validate_row(&[1.0, f32::INFINITY, 2.0], 0, 0),
+            Err(RowRejected::NonFinite { index: 1 })
+        );
+        assert_eq!(
+            s.validate_row(&[1.0, 2.0, 3.0], 4, 5),
+            Err(RowRejected::Stale { row_phase: 4, want_phase: 5 })
+        );
+        assert_eq!(s.validate_row(&[1.0, 2.0, 3.0], 5, 5), Ok(()));
+        // Rejections render as readable errors for CLI surfacing.
+        let msg = RowRejected::NonFinite { index: 1 }.to_string();
+        assert!(msg.contains("non-finite"), "unhelpful message: {msg}");
+    }
+
+    #[test]
+    fn try_write_row_refuses_bad_rows_without_touching_storage() {
+        let mut s = SummaryStore::new(2, 0);
+        let slot = filled(&mut s, 0, 0, 1.0);
+        assert!(s.try_write_row(slot, &[f32::NAN, 0.0]).is_err());
+        assert_eq!(s.row(slot), &[1.0, 1.0], "rejected write must not land");
+        assert!(s.try_write_row(slot, &[0.0; 3]).is_err());
+        s.try_write_row(slot, &[2.0, 3.0]).unwrap();
+        assert_eq!(s.row(slot), &[2.0, 3.0]);
+        // Same gate on the quantized path.
+        let mut q = SummaryStore::with_mode(2, 0, true);
+        let qs = q.upsert(0, 0, 0.0);
+        assert!(q.try_write_row(qs, &[1.0, f32::NEG_INFINITY]).is_err());
+        q.try_write_row(qs, &[1.0, -1.0]).unwrap();
+    }
+
+    #[test]
+    fn eviction_survives_a_drained_heap() {
+        let mut s = SummaryStore::new(1, 2);
+        filled(&mut s, 0, 0, 0.0);
+        filled(&mut s, 1, 0, 1.0);
+        // Forcibly drain the lazy heap: eviction must rebuild from meta and
+        // still evict the true LRU victim instead of panicking.
+        s.lru.clear();
+        filled(&mut s, 2, 0, 2.0);
+        assert_eq!(s.evictions(), 1);
+        assert!(s.lookup(0, 0).is_none(), "oldest tick must still be the victim");
+        assert!(s.lookup(1, 0).is_some());
+        assert!(s.lookup(2, 0).is_some());
     }
 
     #[test]

@@ -458,7 +458,12 @@ impl FleetRefresher {
             model_secs[i] = model;
             if let Some(store) = store.as_deref_mut() {
                 let s = store.upsert(part.client_id, phases[i], model);
-                store.write_row(s, &vec);
+                // Admission-gated write: a non-finite summary (poisoned
+                // upload, kernel bug) is a typed rejection, not a poisoned
+                // arena the distance kernels trip over later.
+                store.try_write_row(s, &vec).with_context(|| {
+                    format!("storing summary for client {}", part.client_id)
+                })?;
                 slots[i] = s;
                 if want_out {
                     store.read_row_into(s, out.row_mut(i));

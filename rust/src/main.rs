@@ -100,8 +100,17 @@ const RUN_SIM: CommandSpec = CommandSpec {
         FlagSpec::arg("step-secs", "F", "modeled host seconds per local step"),
         FlagSpec::arg("update-bytes", "B", "model-update upload bytes per client"),
         FlagSpec::arg("seed", "N", "run seed"),
+        FlagSpec::arg("fault-upload-fail-rate", "F", "per-attempt upload failure probability"),
+        FlagSpec::arg("fault-heartbeat-loss-rate", "F", "per-round heartbeat-loss probability"),
+        FlagSpec::arg("fault-corrupt-rate", "F", "corrupted-summary probability per refresh"),
+        FlagSpec::arg("fault-outage-frac", "F", "fleet fraction dark during the outage window"),
+        FlagSpec::arg("fault-outage-start", "N", "first round of the regional outage"),
+        FlagSpec::arg("fault-outage-rounds", "N", "outage window length in rounds"),
+        FlagSpec::arg("fault-max-retries", "N", "retry budget per failed upload"),
+        FlagSpec::arg("fault-quarantine-threshold", "N", "failures before quarantine (0 = off)"),
         FlagSpec::arg("out-dir", "DIR", "per-scenario JSONL reports + journals"),
         FlagSpec::arg("bench-json", "PATH", "aggregate BENCH_sim.json artifact"),
+        FlagSpec::arg("chaos-json", "PATH", "aggregate BENCH_chaos.json artifact (fault counters)"),
     ],
 };
 
@@ -171,6 +180,14 @@ fn sim_cfg_from_flags(p: &Parsed) -> Result<SimConfig> {
     p.set("step-secs", &mut cfg.train_step_host_secs)?;
     p.set("update-bytes", &mut cfg.update_bytes)?;
     p.set("seed", &mut cfg.seed)?;
+    p.set("fault-upload-fail-rate", &mut cfg.fault.upload_fail_rate)?;
+    p.set("fault-heartbeat-loss-rate", &mut cfg.fault.heartbeat_loss_rate)?;
+    p.set("fault-corrupt-rate", &mut cfg.fault.corrupt_rate)?;
+    p.set("fault-outage-frac", &mut cfg.fault.outage_frac)?;
+    p.set("fault-outage-start", &mut cfg.fault.outage_start)?;
+    p.set("fault-outage-rounds", &mut cfg.fault.outage_rounds)?;
+    p.set("fault-max-retries", &mut cfg.fault.max_retries)?;
+    p.set("fault-quarantine-threshold", &mut cfg.fault.quarantine_threshold)?;
     p.set_str("out-dir", &mut cfg.out_dir);
     Ok(cfg)
 }
@@ -192,6 +209,11 @@ fn cmd_run_sim(p: Parsed) -> Result<()> {
         std::fs::create_dir_all(&cfg.out_dir)?;
     }
     let mut entries = Vec::new();
+    let mut chaos_entries = Vec::new();
+    // Overhead reference for BENCH_chaos.json: the sync_baseline run's
+    // simulated seconds (0.0 until/unless that scenario runs — list it
+    // first, as `--scenario all` and `make chaos-smoke` both do).
+    let mut baseline_sim_secs = 0.0f64;
     for name in &names {
         let sc = Scenario::by_name(name)
             .with_context(|| format!("unknown scenario {name:?} (try --list-scenarios)"))?;
@@ -216,7 +238,7 @@ fn cmd_run_sim(p: Parsed) -> Result<()> {
         println!(
             "scenario {:<20} policy {:<12} n {:>6}  sim {:>10.1}s  \
              refresh {:>8.1}s  select {:>7.3}s  compute {:>8.1}s  upload {:>7.1}s  \
-             coverage {:.3}  completed/dropped/timed_out {}/{}/{}  journal {:#018x}",
+             coverage {:.3}  completed/dropped/timed_out/failed {}/{}/{}/{}  journal {:#018x}",
             rep.scenario,
             rep.policy,
             rep.n_clients,
@@ -229,8 +251,16 @@ fn cmd_run_sim(p: Parsed) -> Result<()> {
             t.completed,
             t.dropped,
             t.timed_out,
+            t.failed,
             journal.digest()
         );
+        if t.retries + t.summary_rejects + t.quarantined > 0 || t.degraded_rounds > 0 {
+            println!(
+                "  faults: {} retries, {} failed uploads, {} summaries rejected, \
+                 {} quarantined, {} degraded closes",
+                t.retries, t.failed, t.summary_rejects, t.quarantined, t.degraded_rounds
+            );
+        }
         for r in &rep.rounds {
             println!(
                 "  round {:>3}  {:>9.1}s  sel {:>3}  done {:>3}  drop {:>2}  cut {:>2}  \
@@ -252,17 +282,34 @@ fn cmd_run_sim(p: Parsed) -> Result<()> {
             journal.write(&jpath)?;
             println!("  wrote {path} and {jpath}");
         }
+        if rep.scenario == "sync_baseline" {
+            baseline_sim_secs = t.sim_secs;
+        }
+        chaos_entries.push(rep.chaos_entry_json(
+            if rep.scenario == "sync_baseline" { 0.0 } else { baseline_sim_secs },
+            host,
+        ));
         entries.push(rep.bench_entry_json(host));
     }
     if let Some(path) = p.get("bench-json") {
-        if let Some(dir) = std::path::Path::new(path).parent() {
-            if !dir.as_os_str().is_empty() {
-                std::fs::create_dir_all(dir)?;
-            }
-        }
-        std::fs::write(path, bench_json(&entries))?;
-        println!("wrote {path}");
+        write_bench_artifact(path, &entries)?;
     }
+    if let Some(path) = p.get("chaos-json") {
+        write_bench_artifact(path, &chaos_entries)?;
+    }
+    Ok(())
+}
+
+/// Write one `{"runs": [...]}` aggregate (BENCH_sim.json / BENCH_chaos.json),
+/// creating the parent directory when needed.
+fn write_bench_artifact(path: &str, entries: &[String]) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, bench_json(entries))?;
+    println!("wrote {path}");
     Ok(())
 }
 

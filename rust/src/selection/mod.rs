@@ -26,6 +26,9 @@ pub struct ClientView<'a> {
     pub device: &'a DeviceProfile,
     /// Reachable & idle this round.
     pub available: bool,
+    /// Quarantined by the coordinator's client-health tracker (repeat
+    /// failures); ineligible for selection until readmitted on probation.
+    pub quarantined: bool,
     pub n_samples: usize,
     /// Most recent local training loss (None before first selection).
     pub last_loss: Option<f64>,
@@ -77,12 +80,13 @@ pub const STRATEGY_NAMES: [&str; 5] = ["random", "round_robin", "cluster", "oort
 pub struct Builder {
     name: String,
     local_steps: usize,
+    quarantine_gate: bool,
 }
 
 impl Builder {
     /// Start from a strategy name (validated at `build` time).
     pub fn new(name: &str) -> Self {
-        Builder { name: name.to_string(), local_steps: 4 }
+        Builder { name: name.to_string(), local_steps: 4, quarantine_gate: false }
     }
 
     /// Start from an experiment config: policy name + local-step count.
@@ -98,9 +102,19 @@ impl Builder {
         self
     }
 
+    /// Wrap the built policy in a [`QuarantineGate`]: quarantined clients
+    /// are masked unavailable before the inner policy ever ranks them, so
+    /// every strategy honors the health tracker without each implementing
+    /// its own filter. The fleet simulator enables this when a fault plan
+    /// is active.
+    pub fn quarantine_gate(mut self, on: bool) -> Self {
+        self.quarantine_gate = on;
+        self
+    }
+
     pub fn build(self) -> anyhow::Result<Box<dyn SelectionPolicy>> {
         let local_steps = self.local_steps;
-        Ok(match self.name.as_str() {
+        let inner: Box<dyn SelectionPolicy> = match self.name.as_str() {
             "random" => Box::new(RandomSelection),
             "round_robin" => Box::new(RoundRobinSelection::default()),
             "cluster" => Box::new(ClusterSelection { local_steps, ..Default::default() }),
@@ -110,12 +124,46 @@ impl Builder {
                 "unknown selection policy {other:?} (known: {})",
                 STRATEGY_NAMES.join(", ")
             ),
-        })
+        };
+        Ok(if self.quarantine_gate { Box::new(QuarantineGate { inner }) } else { inner })
+    }
+}
+
+/// Masks quarantined clients unavailable, then delegates to the wrapped
+/// policy. Draws nothing from the RNG itself and clones the views only when
+/// at least one client is actually quarantined, so with an empty quarantine
+/// set the inner policy sees bit-identical inputs (the zero-fault stream
+/// stays bitwise identical).
+pub struct QuarantineGate {
+    inner: Box<dyn SelectionPolicy>,
+}
+
+impl SelectionPolicy for QuarantineGate {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn select(
+        &mut self,
+        clients: &[ClientView<'_>],
+        round: usize,
+        k: usize,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        if clients.iter().any(|c| c.quarantined && c.available) {
+            let masked: Vec<ClientView<'_>> = clients
+                .iter()
+                .map(|c| ClientView { available: c.available && !c.quarantined, ..c.clone() })
+                .collect();
+            self.inner.select(&masked, round, k, rng)
+        } else {
+            self.inner.select(clients, round, k, rng)
+        }
     }
 }
 
 /// Shared invariant checks used by tests and debug assertions: selections
-/// must be distinct, available, and at most k.
+/// must be distinct, available, not quarantined, and at most k.
 pub fn validate_selection(sel: &[usize], clients: &[ClientView<'_>], k: usize) -> bool {
     if sel.len() > k {
         return false;
@@ -126,7 +174,7 @@ pub fn validate_selection(sel: &[usize], clients: &[ClientView<'_>], k: usize) -
             return false;
         }
         match clients.iter().find(|c| c.client_id == cid) {
-            Some(c) if c.available => {}
+            Some(c) if c.available && !c.quarantined => {}
             _ => return false,
         }
     }
@@ -168,6 +216,7 @@ pub(crate) mod testutil {
                     cluster: self.clusters[i],
                     device: &self.devices[i],
                     available: self.available[i],
+                    quarantined: false,
                     n_samples: self.n_samples[i],
                     last_loss: self.losses[i],
                     step_host_secs: 0.01,
@@ -215,6 +264,49 @@ mod tests {
                 assert!(validate_selection(&sel, &views, k), "{name}");
             }
         });
+    }
+
+    #[test]
+    fn quarantine_gate_filters_every_strategy() {
+        let fx = Fixture::new(40, 3, 5);
+        let mut views = fx.views();
+        // Quarantine ~half the available clients.
+        for v in views.iter_mut() {
+            v.quarantined = v.client_id % 2 == 0;
+        }
+        for name in STRATEGY_NAMES {
+            let mut p = Builder::new(name).quarantine_gate(true).build().unwrap();
+            assert_eq!(p.name(), name, "gate must be transparent to name()");
+            let mut rng = Rng::new(9);
+            for round in 0..6 {
+                let sel = p.select(&views, round, 10, &mut rng);
+                assert!(
+                    validate_selection(&sel, &views, 10),
+                    "{name} selected a quarantined client: {sel:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quarantine_gate_is_transparent_when_no_one_is_quarantined() {
+        // With an empty quarantine set the gate must not perturb the
+        // stream: same seed, same picks as the bare policy.
+        let fx = Fixture::new(40, 3, 5);
+        let views = fx.views();
+        for name in STRATEGY_NAMES {
+            let mut bare = Builder::new(name).build().unwrap();
+            let mut gated = Builder::new(name).quarantine_gate(true).build().unwrap();
+            let mut r1 = Rng::new(11);
+            let mut r2 = Rng::new(11);
+            for round in 0..6 {
+                assert_eq!(
+                    bare.select(&views, round, 8, &mut r1),
+                    gated.select(&views, round, 8, &mut r2),
+                    "{name}: gate perturbed the zero-quarantine stream"
+                );
+            }
+        }
     }
 
     #[test]

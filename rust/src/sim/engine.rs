@@ -26,11 +26,17 @@
 //!    the deadline, or every selected client resolving — whichever is
 //!    first; quorum: the first `frac × selected` completions).
 //!
-//! Every selected client terminates in exactly one of three states:
+//! Every selected client terminates in exactly one of four states:
 //! *completed* (update aggregated), *dropped* (its dropout event fired
-//! before the round closed), or *timed out* (still in flight when the round
-//! closed — cut by the deadline or the quorum). FedAvg runs over the
-//! completed updates only.
+//! before the round closed), *timed out* (still in flight when the round
+//! closed — cut by the deadline or the quorum), or *failed* (the fault
+//! fabric resolved it: upload retries exhausted or heartbeat lost). FedAvg
+//! runs over the completed updates only; under an active
+//! [`FaultPlan`](crate::sim::fault::FaultPlan) the weights are
+//! staleness-discounted per retry and a round that closes below its quorum
+//! target is journaled as a *degraded* close. With an inert plan none of
+//! the fault machinery draws RNG or schedules events — the stream is
+//! byte-identical to a build without it.
 //!
 //! **State machine + journal.** Every round is driven through the same
 //! [`CoordinatorMachine`] the batch coordinator uses: `start_round` (refresh
@@ -44,16 +50,18 @@
 //! `make replay-smoke` run through.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashSet};
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::SimConfig;
-use crate::coordinator::fedavg::fedavg;
+use crate::coordinator::fedavg::{fedavg, staleness_weight};
+use crate::coordinator::health::ClientHealth;
 use crate::coordinator::journal::{
     CoordinatorMachine, EventJournal, JournalHeader, Transition,
 };
 use crate::coordinator::summaries::{FleetRefresher, RefreshOptions};
+use crate::sim::fault::{Corruption, FaultPlan};
 use crate::data::generator::Generator;
 use crate::data::partition::Partition;
 use crate::data::spec::DatasetSpec;
@@ -84,6 +92,12 @@ pub enum EventKind {
     ClientDone { client: usize },
     /// A selected client went offline mid-round; its update is lost.
     ClientDropout { client: usize },
+    /// A retried upload lands (attempt is 1-based); whether it succeeded is
+    /// decided by the fault plan when the event fires. Fault fabric only.
+    ClientRetry { client: usize, attempt: u32 },
+    /// The coordinator noticed a client's heartbeat stopped: the client is
+    /// failed for the round. Fault fabric only.
+    HeartbeatLost { client: usize },
     /// The round's straggler deadline expired.
     Deadline,
 }
@@ -93,15 +107,18 @@ impl EventKind {
         match self {
             EventKind::ClientDone { .. } => "client_done",
             EventKind::ClientDropout { .. } => "client_dropout",
+            EventKind::ClientRetry { .. } => "client_retry",
+            EventKind::HeartbeatLost { .. } => "heartbeat_lost",
             EventKind::Deadline => "deadline",
         }
     }
 
     pub fn client(&self) -> Option<usize> {
         match self {
-            EventKind::ClientDone { client } | EventKind::ClientDropout { client } => {
-                Some(*client)
-            }
+            EventKind::ClientDone { client }
+            | EventKind::ClientDropout { client }
+            | EventKind::ClientRetry { client, .. }
+            | EventKind::HeartbeatLost { client } => Some(*client),
             EventKind::Deadline => None,
         }
     }
@@ -140,17 +157,29 @@ impl Ord for Entry {
 
 /// Min-heap event queue with the `(time, event_id)` tie-break. Pops are
 /// non-decreasing in time and events never fire before their scheduled
-/// time; both are asserted.
+/// time; both are asserted. Single events can be cancelled by id
+/// (tombstoned: they sit in the heap but are skipped at pop time) — how
+/// the fault fabric revokes a client's dropout when its completion fires
+/// first, and vice versa.
 #[derive(Default)]
 pub struct EventQueue {
     heap: BinaryHeap<Reverse<Entry>>,
     next_id: u64,
     last_popped: f64,
+    /// Tombstoned event ids: still heaped, never fire. Callers only cancel
+    /// PENDING ids (each id is cancelled at most once, before it pops), so
+    /// every tombstone pairs with a live heap entry and `len` stays exact.
+    cancelled: HashSet<u64>,
 }
 
 impl EventQueue {
     pub fn new() -> Self {
-        EventQueue { heap: BinaryHeap::new(), next_id: 0, last_popped: 0.0 }
+        EventQueue {
+            heap: BinaryHeap::new(),
+            next_id: 0,
+            last_popped: 0.0,
+            cancelled: HashSet::new(),
+        }
     }
 
     /// Schedule `kind` at `time`; returns the event id. Scheduling into the
@@ -169,10 +198,25 @@ impl EventQueue {
     }
 
     pub fn pop(&mut self) -> Option<Event> {
-        let ev = self.heap.pop()?.0 .0;
-        debug_assert!(ev.time >= self.last_popped, "time ran backwards");
-        self.last_popped = ev.time;
-        Some(ev)
+        loop {
+            let ev = self.heap.pop()?.0 .0;
+            if self.cancelled.remove(&ev.id) {
+                // A revoked event: discarded without firing, entering the
+                // stream, or advancing the clock.
+                continue;
+            }
+            debug_assert!(ev.time >= self.last_popped, "time ran backwards");
+            self.last_popped = ev.time;
+            return Some(ev);
+        }
+    }
+
+    /// Cancel one pending event by its id: it will never fire. Must only be
+    /// called for ids still pending (scheduled, not yet popped/cancelled).
+    pub fn cancel(&mut self, id: u64) {
+        debug_assert!(id < self.next_id, "cancelling an id never scheduled");
+        let fresh = self.cancelled.insert(id);
+        debug_assert!(fresh, "event {id} cancelled twice");
     }
 
     /// Cancel every pending event (a closed round's in-flight work): the
@@ -180,17 +224,18 @@ impl EventQueue {
     /// clock — the coordinator simply stops listening. Returns how many
     /// were cancelled.
     pub fn cancel_all(&mut self) -> usize {
-        let n = self.heap.len();
+        let n = self.len();
         self.heap.clear();
+        self.cancelled.clear();
         n
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.heap.len() - self.cancelled.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 }
 
@@ -243,6 +288,12 @@ pub struct Simulator {
     global: Vec<f32>,
     clock: f64,
     queue: EventQueue,
+    /// The effective fault plan: the config-level plan when non-inert,
+    /// otherwise the scenario's. Inert ⇒ the whole fabric is skipped.
+    fault: FaultPlan,
+    /// Per-client failure scoring + quarantine (only consulted when the
+    /// fault plan is active).
+    health: ClientHealth,
     /// The event-sourced phase machine every round runs through; owns the
     /// transition journal.
     machine: CoordinatorMachine,
@@ -284,7 +335,17 @@ impl Simulator {
         // (phase 0 unless the scenario drifts at round 0).
         let fleet = FleetModel::default()
             .sample_fleet_at(spec.n_clients, scenario.drift.phase_at(0));
-        let policy = selection::Builder::new(&cfg.policy).local_steps(cfg.local_steps).build()?;
+        // A non-inert config-level plan (CLI --fault-* / [sim.fault] keys)
+        // overrides the scenario's baked-in plan.
+        let fault = if !cfg.fault.is_inert() { cfg.fault } else { scenario.fault };
+        fault.validate().context("sim: invalid fault plan")?;
+        let faults_on = !fault.is_inert();
+        let policy = selection::Builder::new(&cfg.policy)
+            .local_steps(cfg.local_steps)
+            // The gate is wired only when faults are live, so the inert
+            // selection path is the exact pre-fault code.
+            .quarantine_gate(faults_on)
+            .build()?;
         let refresher = FleetRefresher::new(RefreshOptions {
             threads: cfg.threads,
             store_quantized: cfg.store_quantized,
@@ -329,9 +390,18 @@ impl Simulator {
             global: vec![0.0; UPDATE_DIM],
             clock: 0.0,
             queue: EventQueue::new(),
+            health: ClientHealth::new(n, fault.quarantine_threshold, fault.probation_rounds),
+            fault,
             machine,
             report,
         })
+    }
+
+    /// Is the fault fabric live for this run? When false, no fault
+    /// substream is ever drawn and no fault event is ever scheduled.
+    #[inline]
+    fn faults_on(&self) -> bool {
+        !self.fault.is_inert()
     }
 
     /// The phase machine (and through it the journal accumulated so far).
@@ -354,10 +424,18 @@ impl Simulator {
     }
 
     /// Run the refresh pipeline and charge its deterministic modeled time.
-    /// Returns `(modeled seconds, clients recomputed)`.
-    fn maybe_refresh(&mut self, round: usize) -> Result<(f64, usize)> {
+    /// Returns `(modeled seconds, clients recomputed, summary rejects)`.
+    ///
+    /// Under an active fault plan, a corrupted/stale summary upload per the
+    /// plan's schedule is screened out at the `SummaryStore` boundary
+    /// (`validate_row` must refuse it — asserted), counted, charged one
+    /// backoff of refresh time for the re-request, and scored as a failure
+    /// against the client's health. The CLEAN recomputed row is what stays
+    /// in the store, so clustering inputs — and with them the digests the
+    /// replay oracle checks — remain a pure function of the seed.
+    fn maybe_refresh(&mut self, round: usize) -> Result<(f64, usize, u64)> {
         if !self.refresh_due(round) {
-            return Ok((0.0, 0));
+            return Ok((0.0, 0, 0));
         }
         let k = if self.cfg.clusters > 0 { self.cfg.clusters } else { self.spec.n_groups };
         let r = self.refresher.refresh(
@@ -372,7 +450,42 @@ impl Simulator {
             self.cfg.seed,
         )?;
         self.clusters = r.clusters;
-        Ok((r.sim_model_secs(), r.recomputed.len()))
+        let mut secs = r.sim_model_secs();
+        let mut rejects = 0u64;
+        if self.faults_on() {
+            if let Some(store) = self.refresher.store() {
+                let phase = self.scenario.drift.phase_at(round);
+                let dim = store.dim();
+                for &cid in &r.recomputed {
+                    let Some(flavor) =
+                        self.fault.summary_corrupted(self.cfg.seed, cid, round)
+                    else {
+                        continue;
+                    };
+                    // Build the garbage upload the plan says arrived first
+                    // and run it through the store's admission gate.
+                    let verdict = match flavor {
+                        Corruption::Nan => {
+                            let poisoned = vec![f32::NAN; dim];
+                            store.validate_row(&poisoned, phase, phase)
+                        }
+                        Corruption::Stale => {
+                            let bland = vec![0.0f32; dim];
+                            store.validate_row(&bland, phase.wrapping_add(1), phase)
+                        }
+                    };
+                    debug_assert!(verdict.is_err(), "store admitted a corrupted row");
+                    if verdict.is_err() {
+                        rejects += 1;
+                        // One backoff's worth of refresh time to re-request
+                        // the summary; the clean row is already in the store.
+                        secs += self.fault.backoff_secs(self.cfg.seed, cid, round, 1);
+                        self.health.record_failure(cid, round);
+                    }
+                }
+            }
+        }
+        Ok((secs, r.recomputed.len(), rejects))
     }
 
     /// Deterministic synthetic local loss after a completed round — decays
@@ -405,14 +518,29 @@ impl Simulator {
 
         // start_round handler: refresh scheduling (summaries + clustering).
         self.machine.apply(Transition::RoundStarted { round })?;
-        let (refresh_secs, refresh_recomputed) = self.maybe_refresh(round)?;
+        let faults_on = self.faults_on();
+        let quarantines_before = self.health.quarantines();
+        if faults_on {
+            // Readmit clients whose quarantine cool-off expired (probation).
+            self.health.begin_round(round);
+        }
+        let (refresh_secs, refresh_recomputed, summary_rejects) = self.maybe_refresh(round)?;
 
         // rendezvous handler: establish per-device availability.
-        let avail: Vec<bool> = self
+        let mut avail: Vec<bool> = self
             .fleet
             .iter()
             .map(|d| self.scenario.available(d, round, self.cfg.seed))
             .collect();
+        if faults_on {
+            // A regional outage takes its clients off the air regardless of
+            // their scenario availability draw.
+            for (i, a) in avail.iter_mut().enumerate() {
+                if *a && self.fault.in_outage(i, round, self.cfg.seed) {
+                    *a = false;
+                }
+            }
+        }
         let available = avail.iter().filter(|&&a| a).count();
         self.machine.apply(Transition::FleetRendezvoused { round, available })?;
 
@@ -433,6 +561,7 @@ impl Simulator {
                 cluster: self.clusters[i],
                 device: &self.fleet[i],
                 available: avail[i],
+                quarantined: faults_on && self.health.quarantined(i),
                 n_samples: c.n_samples,
                 last_loss: self.last_loss[i],
                 step_host_secs: self.cfg.train_step_host_secs,
@@ -455,8 +584,13 @@ impl Simulator {
                 completed: Vec::new(),
                 dropped: Vec::new(),
                 timed_out: Vec::new(),
+                failed: Vec::new(),
             })?;
-            self.machine.apply(Transition::RoundAggregated { round, aggregated: false })?;
+            self.machine.apply(Transition::RoundAggregated {
+                round,
+                aggregated: false,
+                degraded: false,
+            })?;
             self.clock = t_sel;
             self.report.push_round(RoundReport {
                 round,
@@ -472,8 +606,13 @@ impl Simulator {
                 completed: 0,
                 dropped: 0,
                 timed_out: 0,
+                failed: 0,
+                retries: 0,
+                summary_rejects,
+                quarantined: self.health.quarantines() - quarantines_before,
                 refresh_recomputed,
                 aggregated: false,
+                degraded: false,
                 coverage: coverage(&self.completed_ever),
             });
             return Ok(());
@@ -484,6 +623,15 @@ impl Simulator {
         // earlier-scheduled event pops first).
         let mut launched: Vec<(usize, Launched)> = Vec::with_capacity(selected.len());
         let mut expected: Vec<f64> = Vec::with_capacity(selected.len());
+        // Fault-fabric bookkeeping (all empty and untouched on the inert
+        // path): the done/dropout event pair racing per client — whichever
+        // fires first revokes the other — and retry attempts per client.
+        let mut pending_done: std::collections::HashMap<usize, u64> =
+            std::collections::HashMap::new();
+        let mut pending_drop: std::collections::HashMap<usize, u64> =
+            std::collections::HashMap::new();
+        let mut retries_used: std::collections::HashMap<usize, u32> =
+            std::collections::HashMap::new();
         for &cid in &selected {
             let v = &views[cid];
             expected.push(v.expected_round_secs(self.cfg.local_steps));
@@ -503,9 +651,39 @@ impl Simulator {
                 self.cfg.seed,
                 &[SALT_DROPOUT, cid as u64, round as u64],
             );
-            if drop_rng.f64() < self.scenario.dropout_rate {
-                let at = t_sel + drop_rng.f64() * duration;
-                self.queue.schedule(at, round, EventKind::ClientDropout { client: cid });
+            if !faults_on {
+                // The pre-fault path, byte for byte: one terminal event per
+                // client, no cancellation, no fault substreams.
+                if drop_rng.f64() < self.scenario.dropout_rate {
+                    let at = t_sel + drop_rng.f64() * duration;
+                    self.queue.schedule(at, round, EventKind::ClientDropout { client: cid });
+                } else {
+                    self.queue.schedule(done_t, round, EventKind::ClientDone { client: cid });
+                }
+            } else if drop_rng.f64() < self.scenario.dropout_rate {
+                // Race the dropout against the completion over a 2x-duration
+                // window (both orderings occur); whichever fires first wins
+                // and cancels the other, so no client resolves twice.
+                let at = t_sel + drop_rng.f64() * 2.0 * duration;
+                let drop_id =
+                    self.queue.schedule(at, round, EventKind::ClientDropout { client: cid });
+                let done_id =
+                    self.queue.schedule(done_t, round, EventKind::ClientDone { client: cid });
+                pending_drop.insert(cid, drop_id);
+                pending_done.insert(cid, done_id);
+            } else if let Some(frac) =
+                self.fault.heartbeat_lost(self.cfg.seed, cid, round)
+            {
+                // The client silently vanishes partway through its round;
+                // the coordinator notices when the heartbeat stops.
+                let at = t_sel + frac * duration;
+                self.queue.schedule(at, round, EventKind::HeartbeatLost { client: cid });
+            } else if self.fault.upload_attempt_fails(self.cfg.seed, cid, round, 0) {
+                // The original upload is lost in transit: the first retry
+                // lands one backoff after the client finished training.
+                let at = done_t + self.fault.backoff_secs(self.cfg.seed, cid, round, 1);
+                self.queue
+                    .schedule(at, round, EventKind::ClientRetry { client: cid, attempt: 1 });
             } else {
                 self.queue.schedule(done_t, round, EventKind::ClientDone { client: cid });
             }
@@ -535,12 +713,16 @@ impl Simulator {
         // rounds.
         let mut completed: Vec<usize> = Vec::new();
         let mut dropped: Vec<usize> = Vec::new();
+        // Clients whose uploads were lost for good (retry budget spent) or
+        // whose heartbeat vanished. Always empty on the inert path, so the
+        // close conditions below reduce to the pre-fault expressions.
+        let mut failed: Vec<usize> = Vec::new();
+        let mut retries_issued: u64 = 0;
         let mut close_t: Option<f64> = None;
         while close_t.is_none() {
-            let ev = self
-                .queue
-                .pop()
-                .expect("round cannot close: queue empty before the deadline");
+            let Some(ev) = self.queue.pop() else {
+                bail!("round {round}: event queue empty before the deadline fired");
+            };
             self.report.push_event(SimEventRecord {
                 time: ev.time,
                 id: ev.id,
@@ -550,16 +732,86 @@ impl Simulator {
             });
             match &ev.kind {
                 EventKind::ClientDone { client } => {
-                    completed.push(*client);
+                    let c = *client;
+                    if faults_on {
+                        // Completion wins the race: revoke the rival dropout
+                        // (if any) so this client cannot resolve twice.
+                        if let Some(id) = pending_drop.remove(&c) {
+                            self.queue.cancel(id);
+                        }
+                        pending_done.remove(&c);
+                        self.health.record_success(c);
+                    }
+                    completed.push(c);
                     if completed.len() >= target
-                        || completed.len() + dropped.len() == selected.len()
+                        || completed.len() + dropped.len() + failed.len() == selected.len()
                     {
                         close_t = Some(ev.time);
                     }
                 }
                 EventKind::ClientDropout { client } => {
-                    dropped.push(*client);
-                    if completed.len() + dropped.len() == selected.len() {
+                    let c = *client;
+                    if faults_on {
+                        // Dropout wins the race: revoke the rival completion.
+                        if let Some(id) = pending_done.remove(&c) {
+                            self.queue.cancel(id);
+                        }
+                        pending_drop.remove(&c);
+                        self.health.record_failure(c, round);
+                    }
+                    dropped.push(c);
+                    if completed.len() + dropped.len() + failed.len() == selected.len() {
+                        close_t = Some(ev.time);
+                    }
+                }
+                EventKind::ClientRetry { client, attempt } => {
+                    let (c, a) = (*client, *attempt);
+                    if a > self.fault.max_retries {
+                        // Zero-budget edge: the first retry was scheduled
+                        // before the budget check could stop it.
+                        self.health.record_failure(c, round);
+                        failed.push(c);
+                        if completed.len() + dropped.len() + failed.len() == selected.len() {
+                            close_t = Some(ev.time);
+                        }
+                    } else {
+                        retries_issued += 1;
+                        retries_used.insert(c, a);
+                        if !self.fault.upload_attempt_fails(self.cfg.seed, c, round, a) {
+                            // The re-upload landed.
+                            self.health.record_success(c);
+                            completed.push(c);
+                            if completed.len() >= target
+                                || completed.len() + dropped.len() + failed.len()
+                                    == selected.len()
+                            {
+                                close_t = Some(ev.time);
+                            }
+                        } else if a < self.fault.max_retries {
+                            let at = ev.time
+                                + self.fault.backoff_secs(self.cfg.seed, c, round, a + 1);
+                            self.queue.schedule(
+                                at,
+                                round,
+                                EventKind::ClientRetry { client: c, attempt: a + 1 },
+                            );
+                        } else {
+                            // Budget spent: the update is lost for good.
+                            self.health.record_failure(c, round);
+                            failed.push(c);
+                            if completed.len() + dropped.len() + failed.len()
+                                == selected.len()
+                            {
+                                close_t = Some(ev.time);
+                            }
+                        }
+                    }
+                }
+                EventKind::HeartbeatLost { client } => {
+                    let c = *client;
+                    self.health.record_failure(c, round);
+                    failed.push(c);
+                    if completed.len() + dropped.len() + failed.len() == selected.len() {
                         close_t = Some(ev.time);
                     }
                 }
@@ -574,7 +826,7 @@ impl Simulator {
         // close was cut in flight: timed out. (Bool-vec membership keeps
         // this O(selected), not O(selected²), at fleet scale.)
         let mut resolved = vec![false; n];
-        for &c in completed.iter().chain(&dropped) {
+        for &c in completed.iter().chain(&dropped).chain(&failed) {
             resolved[c] = true;
         }
         let timed_out: Vec<usize> = launched
@@ -583,7 +835,7 @@ impl Simulator {
             .filter(|&c| !resolved[c])
             .collect();
         debug_assert_eq!(
-            completed.len() + dropped.len() + timed_out.len(),
+            completed.len() + dropped.len() + timed_out.len() + failed.len(),
             selected.len(),
             "client terminal states must partition the selection"
         );
@@ -593,19 +845,31 @@ impl Simulator {
             completed: completed.clone(),
             dropped: dropped.clone(),
             timed_out: timed_out.clone(),
+            failed: failed.clone(),
         })?;
 
         // aggregate handler: FedAvg over the completed updates
         // (sample-count weighted), then metrics emission.
         let aggregated = !completed.is_empty();
+        // A degraded close: the quorum was missed even after retries, but
+        // the coordinator aggregates whatever completed rather than
+        // discarding the round. Updates that needed retries are discounted
+        // by staleness so late (possibly drift-stale) uploads weigh less.
+        let degraded = faults_on && aggregated && completed.len() < target;
         if aggregated {
             let updates: Vec<(Vec<f32>, f64)> = completed
                 .iter()
                 .map(|&cid| {
-                    (
-                        self.client_update(cid, round),
-                        self.partition.clients[cid].n_samples as f64,
-                    )
+                    let weight = if faults_on {
+                        staleness_weight(
+                            self.partition.clients[cid].n_samples,
+                            self.fault.stale_discount,
+                            retries_used.get(&cid).copied().unwrap_or(0),
+                        )
+                    } else {
+                        self.partition.clients[cid].n_samples as f64
+                    };
+                    (self.client_update(cid, round), weight)
                 })
                 .collect();
             self.global = fedavg(&updates)?;
@@ -614,7 +878,7 @@ impl Simulator {
                 self.last_loss[cid] = Some(self.observed_loss(cid, round));
             }
         }
-        self.machine.apply(Transition::RoundAggregated { round, aggregated })?;
+        self.machine.apply(Transition::RoundAggregated { round, aggregated, degraded })?;
 
         // Wall-clock breakdown: the round's training segment is gated by
         // the last completion; any tail beyond it (waiting out dropouts
@@ -643,8 +907,13 @@ impl Simulator {
             completed: completed.len(),
             dropped: dropped.len(),
             timed_out: timed_out.len(),
+            failed: failed.len(),
+            retries: retries_issued,
+            summary_rejects,
+            quarantined: self.health.quarantines() - quarantines_before,
             refresh_recomputed,
             aggregated,
+            degraded,
             coverage: coverage(&self.completed_ever),
         });
         Ok(())
@@ -866,7 +1135,7 @@ mod tests {
             assert_eq!(rep.rounds.len(), 4, "{name}");
             for r in &rep.rounds {
                 assert_eq!(
-                    r.completed + r.dropped + r.timed_out,
+                    r.completed + r.dropped + r.timed_out + r.failed,
                     r.selected,
                     "{name} round {} leaked a client",
                     r.round
@@ -1049,6 +1318,111 @@ mod tests {
         assert_eq!(journal.len(), 3 * 5 + 3, "three records of round 3 survive");
         assert_eq!(journal.rounds_closed(), 3);
         assert_eq!(journal.complete_prefix().len(), 3 * 5);
+    }
+
+    #[test]
+    fn queue_cancel_tombstones_the_event_without_firing_it() {
+        let mut q = EventQueue::new();
+        let keep = q.schedule(1.0, 0, EventKind::ClientDone { client: 1 });
+        let gone = q.schedule(2.0, 0, EventKind::ClientDropout { client: 1 });
+        let tail = q.schedule(3.0, 0, EventKind::Deadline);
+        assert_eq!(q.len(), 3);
+        q.cancel(gone);
+        assert_eq!(q.len(), 2, "a cancelled event must not count as pending");
+        let popped: Vec<u64> =
+            std::iter::from_fn(|| q.pop().map(|e| e.id)).collect();
+        assert_eq!(popped, vec![keep, tail], "the cancelled event leaked out");
+        // Cancellation must not advance the clock past live events: after
+        // draining, scheduling at the tail's time is still legal.
+        q.schedule(3.0, 0, EventKind::Deadline);
+    }
+
+    #[test]
+    fn fault_scenarios_partition_every_client_into_exactly_one_bucket() {
+        // Satellite: no client may resolve twice in a round. Each selected
+        // client lands in exactly one of the four terminal buckets, even
+        // when a dropout and a completion were racing for it.
+        for name in ["regional_outage", "flaky_uplink", "byzantine_summaries"] {
+            let sc = Scenario::by_name(name).unwrap();
+            let cfg = SimConfig { n_clients: 40, rounds: 6, per_round: 8, ..Default::default() };
+            let (rep, journal) =
+                Simulator::new(cfg, sc).unwrap().run_journaled().unwrap();
+            assert_eq!(rep.rounds.len(), 6, "{name}");
+            for r in journal.records() {
+                if let Transition::TrainingEnded {
+                    round,
+                    completed,
+                    dropped,
+                    timed_out,
+                    failed,
+                } = &r.transition
+                {
+                    let mut seen = std::collections::HashSet::new();
+                    for &c in completed.iter().chain(dropped).chain(timed_out).chain(failed)
+                    {
+                        assert!(
+                            seen.insert(c),
+                            "{name} round {round}: client {c} resolved twice"
+                        );
+                    }
+                }
+            }
+            let retries: u64 = rep.rounds.iter().map(|r| r.retries).sum();
+            let failed: usize = rep.rounds.iter().map(|r| r.failed).sum();
+            if name == "flaky_uplink" {
+                assert!(retries > 0, "flaky_uplink issued no retries");
+            }
+            let _ = failed;
+        }
+    }
+
+    #[test]
+    fn explicit_zero_fault_plan_matches_the_inert_default_bitwise() {
+        // A plan with every fault *rate* zeroed but different resilience
+        // knobs (retries, backoff, quarantine) is inert: the engine must
+        // produce the exact same event stream and journal as the default.
+        use crate::sim::fault::FaultPlan;
+        let sc = Scenario::by_name("straggler_cut").unwrap();
+        let base = smoke_cfg();
+        let zeroed = SimConfig {
+            fault: FaultPlan {
+                max_retries: 9,
+                quarantine_threshold: 1,
+                probation_rounds: 7,
+                backoff_base_secs: 0.5,
+                backoff_cap_secs: 4.0,
+                backoff_jitter: 0.9,
+                stale_discount: 0.1,
+                ..FaultPlan::inert()
+            },
+            ..smoke_cfg()
+        };
+        let (ra, ja) = Simulator::new(base, sc.clone()).unwrap().run_journaled().unwrap();
+        let (rb, jb) = Simulator::new(zeroed, sc).unwrap().run_journaled().unwrap();
+        assert_eq!(ra.event_digest(), rb.event_digest(), "event stream diverged");
+        assert_eq!(ja.to_jsonl(), jb.to_jsonl(), "journal bytes diverged");
+        assert!(rb.rounds.iter().all(|r| !r.degraded && r.retries == 0 && r.failed == 0));
+    }
+
+    #[test]
+    fn chaos_scenarios_run_to_completion_without_panicking() {
+        // Acceptance: no scenario in the catalog panics or aborts. The
+        // chaos trio exercises outages, retries, quarantine, corrupt
+        // summaries, and (potentially) degraded closes end to end.
+        for name in ["regional_outage", "flaky_uplink", "byzantine_summaries"] {
+            let sc = Scenario::by_name(name).unwrap();
+            let cfg = SimConfig { n_clients: 40, rounds: 6, per_round: 8, ..Default::default() };
+            let rep = Simulator::new(cfg, sc).unwrap().run().unwrap();
+            assert_eq!(rep.rounds.len(), 6, "{name}");
+            for r in &rep.rounds {
+                assert_eq!(
+                    r.completed + r.dropped + r.timed_out + r.failed,
+                    r.selected,
+                    "{name} round {} leaked a client",
+                    r.round
+                );
+            }
+        }
     }
 
     #[test]

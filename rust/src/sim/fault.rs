@@ -1,0 +1,368 @@
+//! Seeded fault-injection plans for the fleet simulator: transient upload
+//! failures with capped exponential backoff, regional outage windows,
+//! heartbeat loss, and corrupted/stale summary uploads.
+//!
+//! Every fault decision is a pure function of `(run seed, client, round,
+//! attempt)` through its own RNG substream, so fault schedules are bitwise
+//! identical across reruns, refresh thread counts, and crash/recovery
+//! boundaries — the same determinism contract the rest of the simulator
+//! lives under. A plan with every rate at zero ([`FaultPlan::is_inert`])
+//! must leave the simulation byte-for-byte identical to a build without the
+//! fault fabric at all: the engine branches on `is_inert()` before drawing
+//! from any fault substream or scheduling any fault event.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Fault-substream salts (disjoint from every other salt in the crate:
+/// engine 0x51E1_0/0xD0D0_0/0x0DA7_0/0x1055_0, scenario 0x3A7E/0xC207/
+/// 0x7A11, summaries 0x5, batch coordinator 0x5E1/0x7124).
+const SALT_FAIL: u64 = 0xFA_110;
+const SALT_HEARTBEAT: u64 = 0x8EA7_0;
+const SALT_CORRUPT: u64 = 0xC0_440;
+const SALT_OUTAGE: u64 = 0x7A6_E0;
+const SALT_BACKOFF: u64 = 0xBAC_0FF;
+
+/// A deterministic per-run fault schedule plus the resilience knobs the
+/// coordinator responds with (retry/backoff, quarantine, staleness
+/// discounting). Carried by [`Scenario`](crate::sim::Scenario) and
+/// overridable from `[sim.fault]` config keys / `--fault-*` CLI flags.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Probability an upload attempt fails in transit (drawn independently
+    /// per attempt, so retries can fail again).
+    pub upload_fail_rate: f64,
+    /// Probability a selected client silently vanishes mid-round (no
+    /// dropout event, no upload — the coordinator notices via heartbeat).
+    pub heartbeat_loss_rate: f64,
+    /// Probability a recomputed summary row arrives corrupted (non-finite
+    /// values) or stale (wrong drift phase); rejected at the store boundary
+    /// and re-requested after one backoff.
+    pub corrupt_rate: f64,
+    /// Fraction of the fleet in the outage-affected region (seeded regional
+    /// membership; 0 = no outage).
+    pub outage_frac: f64,
+    /// First round of the outage window.
+    pub outage_start: usize,
+    /// Length of the outage window in rounds (0 = no outage).
+    pub outage_rounds: usize,
+    /// Upload retry budget after the first attempt; exhausting it marks the
+    /// client failed for the round.
+    pub max_retries: u32,
+    /// First-retry backoff in simulated seconds; doubles per attempt.
+    pub backoff_base_secs: f64,
+    /// Backoff ceiling in simulated seconds.
+    pub backoff_cap_secs: f64,
+    /// Seeded jitter fraction applied on top of the capped backoff
+    /// (`delay * (1 + jitter * u)`, u uniform in [0, 1)).
+    pub backoff_jitter: f64,
+    /// Consecutive failures before a client is quarantined (0 = never).
+    pub quarantine_threshold: u32,
+    /// Rounds a quarantined client sits out before probationary readmission.
+    pub probation_rounds: usize,
+    /// Per-retry weight discount for degraded-round FedAvg: a client that
+    /// needed `r` retries contributes `n_samples * stale_discount^r`.
+    pub stale_discount: f64,
+}
+
+impl FaultPlan {
+    /// The no-fault plan: every rate zero, resilience knobs at their
+    /// defaults. `is_inert()` holds.
+    pub fn inert() -> Self {
+        FaultPlan {
+            upload_fail_rate: 0.0,
+            heartbeat_loss_rate: 0.0,
+            corrupt_rate: 0.0,
+            outage_frac: 0.0,
+            outage_start: 0,
+            outage_rounds: 0,
+            max_retries: 3,
+            backoff_base_secs: 2.0,
+            backoff_cap_secs: 60.0,
+            backoff_jitter: 0.1,
+            quarantine_threshold: 3,
+            probation_rounds: 2,
+            stale_discount: 0.5,
+        }
+    }
+
+    /// True when the plan can never inject a fault. The engine gates the
+    /// whole fabric on this, so an inert plan leaves the event stream,
+    /// journal, and every RNG substream byte-identical to a run without
+    /// fault support.
+    pub fn is_inert(&self) -> bool {
+        self.upload_fail_rate == 0.0
+            && self.heartbeat_loss_rate == 0.0
+            && self.corrupt_rate == 0.0
+            && (self.outage_frac == 0.0 || self.outage_rounds == 0)
+    }
+
+    /// Validate the knobs (rates in [0, 1], positive finite backoff, a
+    /// usable discount) before a run starts.
+    pub fn validate(&self) -> Result<()> {
+        for (name, rate) in [
+            ("fault.upload_fail_rate", self.upload_fail_rate),
+            ("fault.heartbeat_loss_rate", self.heartbeat_loss_rate),
+            ("fault.corrupt_rate", self.corrupt_rate),
+            ("fault.outage_frac", self.outage_frac),
+        ] {
+            if !(0.0..=1.0).contains(&rate) {
+                bail!("{name} must be in [0, 1], got {rate}");
+            }
+        }
+        if !(self.backoff_base_secs.is_finite() && self.backoff_base_secs > 0.0) {
+            bail!("fault.backoff_base_secs must be positive, got {}", self.backoff_base_secs);
+        }
+        if !(self.backoff_cap_secs.is_finite() && self.backoff_cap_secs >= self.backoff_base_secs)
+        {
+            bail!(
+                "fault.backoff_cap_secs must be >= backoff_base_secs, got {}",
+                self.backoff_cap_secs
+            );
+        }
+        if !(self.backoff_jitter.is_finite() && self.backoff_jitter >= 0.0) {
+            bail!("fault.backoff_jitter must be non-negative, got {}", self.backoff_jitter);
+        }
+        if !(self.stale_discount.is_finite()
+            && self.stale_discount > 0.0
+            && self.stale_discount <= 1.0)
+        {
+            bail!("fault.stale_discount must be in (0, 1], got {}", self.stale_discount);
+        }
+        Ok(())
+    }
+
+    /// Is `client` unreachable at `round` because its region is down?
+    /// Regional membership is a seeded per-client draw (stable across the
+    /// whole run); the window is `[outage_start, outage_start +
+    /// outage_rounds)`.
+    pub fn in_outage(&self, client: usize, round: usize, seed: u64) -> bool {
+        if self.outage_frac == 0.0 || self.outage_rounds == 0 {
+            return false;
+        }
+        if round < self.outage_start || round >= self.outage_start + self.outage_rounds {
+            return false;
+        }
+        let mut rng = Rng::substream(seed, &[SALT_OUTAGE, client as u64]);
+        rng.f64() < self.outage_frac
+    }
+
+    /// Does upload attempt `attempt` (0 = the original upload) fail in
+    /// transit? Independent per attempt: retries can fail again.
+    pub fn upload_attempt_fails(
+        &self,
+        seed: u64,
+        client: usize,
+        round: usize,
+        attempt: u32,
+    ) -> bool {
+        if self.upload_fail_rate == 0.0 {
+            return false;
+        }
+        let mut rng = Rng::substream(
+            seed,
+            &[SALT_FAIL, client as u64, round as u64, attempt as u64],
+        );
+        rng.f64() < self.upload_fail_rate
+    }
+
+    /// Does `client` go silent this round? Returns the loss time as a
+    /// fraction of the client's round duration when it does.
+    pub fn heartbeat_lost(&self, seed: u64, client: usize, round: usize) -> Option<f64> {
+        if self.heartbeat_loss_rate == 0.0 {
+            return None;
+        }
+        let mut rng = Rng::substream(seed, &[SALT_HEARTBEAT, client as u64, round as u64]);
+        if rng.f64() < self.heartbeat_loss_rate {
+            Some(rng.f64())
+        } else {
+            None
+        }
+    }
+
+    /// Does `client`'s recomputed summary arrive corrupted at `round`?
+    /// Returns the corruption flavor when it does (`Nan` = non-finite row,
+    /// `Stale` = wrong drift phase).
+    pub fn summary_corrupted(&self, seed: u64, client: usize, round: usize) -> Option<Corruption> {
+        if self.corrupt_rate == 0.0 {
+            return None;
+        }
+        let mut rng = Rng::substream(seed, &[SALT_CORRUPT, client as u64, round as u64]);
+        if rng.f64() >= self.corrupt_rate {
+            return None;
+        }
+        if rng.f64() < 0.5 {
+            Some(Corruption::Nan)
+        } else {
+            Some(Corruption::Stale)
+        }
+    }
+
+    /// Deterministic capped exponential backoff with seeded jitter before
+    /// retry `attempt` (1-based): `min(base * 2^(attempt-1), cap) * (1 +
+    /// jitter * u)` with `u` drawn from the (client, round, attempt)
+    /// substream.
+    pub fn backoff_secs(&self, seed: u64, client: usize, round: usize, attempt: u32) -> f64 {
+        debug_assert!(attempt >= 1, "backoff precedes retry attempt 1, 2, ...");
+        let exp = (attempt.saturating_sub(1)).min(52);
+        let raw = self.backoff_base_secs * (1u64 << exp) as f64;
+        let capped = raw.min(self.backoff_cap_secs);
+        let mut rng = Rng::substream(
+            seed,
+            &[SALT_BACKOFF, client as u64, round as u64, attempt as u64],
+        );
+        capped * (1.0 + self.backoff_jitter * rng.f64())
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::inert()
+    }
+}
+
+/// How a corrupted summary upload is malformed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Corruption {
+    /// The row carries non-finite values.
+    Nan,
+    /// The row is from a previous drift phase.
+    Stale,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn active_plan() -> FaultPlan {
+        FaultPlan {
+            upload_fail_rate: 0.4,
+            heartbeat_loss_rate: 0.2,
+            corrupt_rate: 0.3,
+            outage_frac: 0.5,
+            outage_start: 2,
+            outage_rounds: 3,
+            ..FaultPlan::inert()
+        }
+    }
+
+    #[test]
+    fn inert_plan_never_faults() {
+        let p = FaultPlan::inert();
+        assert!(p.is_inert());
+        p.validate().unwrap();
+        for c in 0..50 {
+            for r in 0..10 {
+                assert!(!p.in_outage(c, r, 7));
+                assert!(!p.upload_attempt_fails(7, c, r, 0));
+                assert!(p.heartbeat_lost(7, c, r).is_none());
+                assert!(p.summary_corrupted(7, c, r).is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn outage_without_window_is_inert() {
+        let p = FaultPlan { outage_frac: 0.5, outage_rounds: 0, ..FaultPlan::inert() };
+        assert!(p.is_inert());
+        assert!(!p.in_outage(3, 5, 1));
+    }
+
+    #[test]
+    fn fault_draws_are_deterministic_in_the_seed() {
+        let p = active_plan();
+        for c in 0..40 {
+            for r in 0..8 {
+                assert_eq!(p.in_outage(c, r, 11), p.in_outage(c, r, 11));
+                for a in 0..4 {
+                    assert_eq!(
+                        p.upload_attempt_fails(11, c, r, a),
+                        p.upload_attempt_fails(11, c, r, a)
+                    );
+                }
+                assert_eq!(p.heartbeat_lost(11, c, r), p.heartbeat_lost(11, c, r));
+                assert_eq!(p.summary_corrupted(11, c, r), p.summary_corrupted(11, c, r));
+                let b1 = p.backoff_secs(11, c, r, 1);
+                assert_eq!(b1.to_bits(), p.backoff_secs(11, c, r, 1).to_bits());
+            }
+        }
+        // A different seed actually changes the schedule.
+        let same: usize = (0..200)
+            .filter(|&c| p.upload_attempt_fails(11, c, 0, 0) == p.upload_attempt_fails(12, c, 0, 0))
+            .count();
+        assert!(same < 200, "seed had no effect on the fault schedule");
+    }
+
+    #[test]
+    fn outage_respects_window_and_hits_roughly_frac() {
+        let p = active_plan();
+        let n = 1000;
+        // Outside the window nobody is out.
+        assert_eq!((0..n).filter(|&c| p.in_outage(c, 1, 3)).count(), 0);
+        assert_eq!((0..n).filter(|&c| p.in_outage(c, 5, 3)).count(), 0);
+        // Inside it, about outage_frac of the fleet is out, and membership
+        // is stable across the window's rounds.
+        let out2: Vec<bool> = (0..n).map(|c| p.in_outage(c, 2, 3)).collect();
+        let out4: Vec<bool> = (0..n).map(|c| p.in_outage(c, 4, 3)).collect();
+        assert_eq!(out2, out4, "regional membership must be stable over the window");
+        let frac = out2.iter().filter(|&&b| b).count() as f64 / n as f64;
+        assert!((frac - 0.5).abs() < 0.08, "outage hit rate {frac} far from 0.5");
+    }
+
+    #[test]
+    fn backoff_is_capped_monotone_and_jittered_within_bounds() {
+        let p = FaultPlan {
+            upload_fail_rate: 0.5,
+            backoff_base_secs: 2.0,
+            backoff_cap_secs: 10.0,
+            backoff_jitter: 0.1,
+            ..FaultPlan::inert()
+        };
+        let mut last_nominal = 0.0;
+        for attempt in 1..=8u32 {
+            let d = p.backoff_secs(5, 3, 1, attempt);
+            let nominal = (2.0 * (1u64 << (attempt - 1)) as f64).min(10.0);
+            assert!(
+                d >= nominal && d < nominal * 1.1 + 1e-12,
+                "attempt {attempt}: {d} outside [{nominal}, {})",
+                nominal * 1.1
+            );
+            assert!(nominal >= last_nominal, "nominal backoff must be non-decreasing");
+            last_nominal = nominal;
+        }
+        // The cap binds: deep attempts never exceed cap * (1 + jitter).
+        assert!(p.backoff_secs(5, 3, 1, 60) <= 10.0 * 1.1 + 1e-12);
+    }
+
+    #[test]
+    fn corruption_flavors_both_occur() {
+        let p = FaultPlan { corrupt_rate: 0.9, ..FaultPlan::inert() };
+        let mut nan = 0;
+        let mut stale = 0;
+        for c in 0..200 {
+            match p.summary_corrupted(1, c, 0) {
+                Some(Corruption::Nan) => nan += 1,
+                Some(Corruption::Stale) => stale += 1,
+                None => {}
+            }
+        }
+        assert!(nan > 20 && stale > 20, "flavors skewed: nan={nan} stale={stale}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        assert!(FaultPlan { upload_fail_rate: 1.5, ..FaultPlan::inert() }.validate().is_err());
+        assert!(FaultPlan { outage_frac: -0.1, ..FaultPlan::inert() }.validate().is_err());
+        assert!(FaultPlan { backoff_base_secs: 0.0, ..FaultPlan::inert() }.validate().is_err());
+        assert!(
+            FaultPlan { backoff_cap_secs: 1.0, backoff_base_secs: 2.0, ..FaultPlan::inert() }
+                .validate()
+                .is_err()
+        );
+        assert!(FaultPlan { backoff_jitter: f64::NAN, ..FaultPlan::inert() }.validate().is_err());
+        assert!(FaultPlan { stale_discount: 0.0, ..FaultPlan::inert() }.validate().is_err());
+        assert!(FaultPlan { stale_discount: 1.5, ..FaultPlan::inert() }.validate().is_err());
+        active_plan().validate().unwrap();
+    }
+}

@@ -13,9 +13,15 @@
 //! * [`scenario`] — the named scenario catalog (`sync_baseline`,
 //!   `straggler_cut`, `partial_async`, `diurnal`, `flash_crowd`,
 //!   `heavy_tail`, `drift_burst`, `coordinator_failure`,
-//!   `mid_round_restart`).
+//!   `mid_round_restart`, plus the chaos trio `regional_outage`,
+//!   `flaky_uplink`, `byzantine_summaries`).
+//! * [`fault`] — the seeded fault-injection fabric ([`FaultPlan`]): upload
+//!   failures with deterministic capped-backoff retries, regional outage
+//!   windows, heartbeat loss, corrupted summary uploads; paired with the
+//!   coordinator's client-health quarantine and degraded-round closes.
 //! * [`report`] — per-round JSONL, the popped-event stream, and the
-//!   aggregate entries `results/BENCH_sim.json` is built from.
+//!   aggregate entries `results/BENCH_sim.json` / `results/BENCH_chaos.json`
+//!   are built from.
 //!
 //! Every round runs through the event-sourced
 //! [`CoordinatorMachine`](crate::coordinator::journal::CoordinatorMachine)
@@ -31,6 +37,7 @@
 //! invariants are fuzzed in `rust/tests/proptests.rs`).
 
 pub mod engine;
+pub mod fault;
 pub mod report;
 pub mod scenario;
 
@@ -38,5 +45,6 @@ pub use engine::{
     run_with_recovery, selection_model_secs, Event, EventKind, EventQueue, RecoveryRun,
     Simulator, UPDATE_DIM,
 };
+pub use fault::{Corruption, FaultPlan};
 pub use report::{bench_json, RoundReport, SimEventRecord, SimReport, SimTotals};
 pub use scenario::{Aggregation, AvailabilityModel, CrashPoint, Scenario, StragglerModel};

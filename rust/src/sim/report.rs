@@ -55,10 +55,22 @@ pub struct RoundReport {
     pub completed: usize,
     pub dropped: usize,
     pub timed_out: usize,
+    /// Clients whose upload was lost for good (retry budget spent) or whose
+    /// heartbeat vanished mid-round. Always 0 with an inert fault plan.
+    pub failed: usize,
+    /// Retry attempts the coordinator issued this round (capped backoff).
+    pub retries: u64,
+    /// Corrupted summary uploads rejected at the store boundary.
+    pub summary_rejects: u64,
+    /// Clients newly quarantined by the health tracker this round.
+    pub quarantined: u64,
     /// Clients re-summarized by this round's refresh (0 = no refresh).
     pub refresh_recomputed: usize,
     /// Did FedAvg run (at least one completion)?
     pub aggregated: bool,
+    /// Did the round close degraded — quorum missed after retries, FedAvg
+    /// run over whatever completed with staleness discounts?
+    pub degraded: bool,
     /// Cumulative fraction of the fleet that has ever completed a round.
     pub coverage: f64,
 }
@@ -69,7 +81,8 @@ impl RoundReport {
             "{{\"type\":\"round\",\"round\":{},\"t_start\":{},\"t_end\":{},\"round_secs\":{},\
              \"refresh_secs\":{},\"selection_secs\":{},\"compute_secs\":{},\"upload_secs\":{},\
              \"wait_secs\":{},\"selected\":{},\"completed\":{},\"dropped\":{},\"timed_out\":{},\
-             \"refresh_recomputed\":{},\"aggregated\":{},\"coverage\":{}}}",
+             \"failed\":{},\"retries\":{},\"summary_rejects\":{},\"quarantined\":{},\
+             \"refresh_recomputed\":{},\"aggregated\":{},\"degraded\":{},\"coverage\":{}}}",
             self.round,
             self.t_start,
             self.t_end,
@@ -83,8 +96,13 @@ impl RoundReport {
             self.completed,
             self.dropped,
             self.timed_out,
+            self.failed,
+            self.retries,
+            self.summary_rejects,
+            self.quarantined,
             self.refresh_recomputed,
             self.aggregated,
+            self.degraded,
             self.coverage
         )
     }
@@ -103,7 +121,13 @@ pub struct SimTotals {
     pub completed: usize,
     pub dropped: usize,
     pub timed_out: usize,
+    pub failed: usize,
+    pub retries: u64,
+    pub summary_rejects: u64,
+    pub quarantined: u64,
     pub aggregated_rounds: usize,
+    /// Rounds that closed degraded (quorum missed after retries).
+    pub degraded_rounds: usize,
     /// Final cumulative coverage.
     pub coverage: f64,
 }
@@ -168,7 +192,12 @@ impl SimReport {
             t.completed += r.completed;
             t.dropped += r.dropped;
             t.timed_out += r.timed_out;
+            t.failed += r.failed;
+            t.retries += r.retries;
+            t.summary_rejects += r.summary_rejects;
+            t.quarantined += r.quarantined;
             t.aggregated_rounds += r.aggregated as usize;
+            t.degraded_rounds += r.degraded as usize;
             t.coverage = r.coverage;
         }
         t
@@ -240,7 +269,9 @@ impl SimReport {
              \"sim_secs\": {}, \"refresh_secs\": {}, \"selection_secs\": {}, \
              \"compute_secs\": {}, \"upload_secs\": {}, \"wait_secs\": {}, \
              \"selected\": {}, \"completed\": {}, \"dropped\": {}, \"timed_out\": {}, \
-             \"aggregated_rounds\": {}, \"coverage\": {:.6}, \
+             \"failed\": {}, \"retries\": {}, \"summary_rejects\": {}, \
+             \"quarantined\": {}, \"aggregated_rounds\": {}, \"degraded_rounds\": {}, \
+             \"coverage\": {:.6}, \
              \"event_digest\": \"{:#018x}\", \"journal_digest\": {}, \
              \"host_secs\": {:.4}}}",
             self.scenario,
@@ -257,8 +288,50 @@ impl SimReport {
             t.completed,
             t.dropped,
             t.timed_out,
+            t.failed,
+            t.retries,
+            t.summary_rejects,
+            t.quarantined,
             t.aggregated_rounds,
+            t.degraded_rounds,
             t.coverage,
+            self.event_digest(),
+            self.journal_digest_json(),
+            host_secs
+        )
+    }
+
+    /// One aggregate entry for `BENCH_chaos.json`: the fault-fabric counters
+    /// (retries issued, quarantines, degraded closes, rejected summaries)
+    /// plus the simulated-time overhead relative to `baseline_sim_secs` —
+    /// the matching `sync_baseline` run's simulated seconds (pass 0.0 for
+    /// the baseline entry itself; the delta then reads 0).
+    pub fn chaos_entry_json(&self, baseline_sim_secs: f64, host_secs: f64) -> String {
+        let t = self.totals();
+        let overhead_frac = if baseline_sim_secs > 0.0 {
+            t.sim_secs / baseline_sim_secs - 1.0
+        } else {
+            0.0
+        };
+        format!(
+            "{{\"scenario\": \"{}\", \"policy\": \"{}\", \"n\": {}, \"rounds\": {}, \
+             \"sim_secs\": {}, \"baseline_sim_secs\": {}, \"overhead_frac\": {:.6}, \
+             \"retries\": {}, \"failed\": {}, \"summary_rejects\": {}, \
+             \"quarantined\": {}, \"degraded_rounds\": {}, \
+             \"event_digest\": \"{:#018x}\", \"journal_digest\": {}, \
+             \"host_secs\": {:.4}}}",
+            self.scenario,
+            self.policy,
+            self.n_clients,
+            self.rounds.len(),
+            t.sim_secs,
+            baseline_sim_secs,
+            overhead_frac,
+            t.retries,
+            t.failed,
+            t.summary_rejects,
+            t.quarantined,
+            t.degraded_rounds,
             self.event_digest(),
             self.journal_digest_json(),
             host_secs
@@ -301,8 +374,13 @@ mod tests {
             completed: 6,
             dropped: 1,
             timed_out: 1,
+            failed: 0,
+            retries: 2,
+            summary_rejects: 1,
+            quarantined: 1,
             refresh_recomputed: 10,
             aggregated: true,
+            degraded: n == 1,
             coverage: 0.1 * (n + 1) as f64,
         }
     }
@@ -335,9 +413,31 @@ mod tests {
         assert_eq!(t.completed, 12);
         assert_eq!(t.dropped, 2);
         assert_eq!(t.timed_out, 2);
+        assert_eq!(t.failed, 0);
+        assert_eq!(t.retries, 4);
+        assert_eq!(t.summary_rejects, 2);
+        assert_eq!(t.quarantined, 2);
         assert_eq!(t.aggregated_rounds, 2);
+        assert_eq!(t.degraded_rounds, 1);
         assert!((t.sim_secs - 3.0).abs() < 1e-12);
         assert!((t.coverage - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chaos_entry_quotes_fault_counters_and_overhead() {
+        let rep = report();
+        // sim_secs totals 3.0; against a 2.0s baseline that is +50%.
+        let e = rep.chaos_entry_json(2.0, 0.1);
+        assert!(e.contains("\"retries\": 4"));
+        assert!(e.contains("\"quarantined\": 2"));
+        assert!(e.contains("\"degraded_rounds\": 1"));
+        assert!(e.contains("\"summary_rejects\": 2"));
+        assert!(e.contains("\"overhead_frac\": 0.500000"), "entry: {e}");
+        // The baseline entry itself reports zero overhead.
+        assert!(rep.chaos_entry_json(0.0, 0.1).contains("\"overhead_frac\": 0.000000"));
+        // Chaos entries compose through the same bench_json assembler.
+        let s = bench_json(&[e]);
+        assert!(s.contains("\"runs\""));
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Declarative scenario catalog for the fleet simulator: each named
 //! scenario bundles an aggregation rule, an availability model, a straggler
-//! model, dropout/over-selection/deadline knobs and a drift schedule. The
+//! model, dropout/over-selection/deadline knobs, a drift schedule and a
+//! fault-injection plan (inert outside the chaos scenarios). The
 //! `run-sim` CLI, `benches/sim_overhead` and the test suites all resolve
 //! scenarios through [`Scenario::by_name`] / [`Scenario::catalog`], so a new
 //! scenario added here is immediately runnable everywhere.
@@ -12,6 +13,7 @@
 
 use crate::data::drift::DriftSchedule;
 use crate::device::DeviceProfile;
+use crate::sim::fault::FaultPlan;
 use crate::util::rng::Rng;
 
 /// Substream salts for scenario-owned randomness (disjoint from the
@@ -91,11 +93,14 @@ pub struct Scenario {
     /// with a crash are run through the kill → recover-from-journal → resume
     /// path and assert digest equality with the uninterrupted run.
     pub crash: Option<CrashPoint>,
+    /// Fault-injection plan (inert by default). A non-inert plan in the run
+    /// config's `[sim.fault]` section overrides the scenario's.
+    pub fault: FaultPlan,
 }
 
 impl Scenario {
     /// Catalog names, in presentation order.
-    pub const NAMES: [&'static str; 9] = [
+    pub const NAMES: [&'static str; 12] = [
         "sync_baseline",
         "straggler_cut",
         "partial_async",
@@ -105,6 +110,9 @@ impl Scenario {
         "drift_burst",
         "coordinator_failure",
         "mid_round_restart",
+        "regional_outage",
+        "flaky_uplink",
+        "byzantine_summaries",
     ];
 
     /// The neutral starting point every catalog entry derives from.
@@ -121,6 +129,7 @@ impl Scenario {
             drift: DriftSchedule::none(),
             refresh_every_override: 0,
             crash: None,
+            fault: FaultPlan::inert(),
         }
     }
 
@@ -206,6 +215,54 @@ impl Scenario {
                     "coordinator dies inside round 3 mid-append; the torn round re-runs",
                 )
             },
+            "regional_outage" => Scenario {
+                fault: FaultPlan {
+                    outage_frac: 0.3,
+                    outage_start: 2,
+                    outage_rounds: 2,
+                    ..FaultPlan::inert()
+                },
+                dropout_rate: 0.05,
+                over_select: 1.3,
+                crash: Some(CrashPoint::AfterRound(3)),
+                ..Self::baseline(
+                    "regional_outage",
+                    "30% of the fleet goes dark for rounds 2-3; coordinator dies after \
+                     round 3 and recovers through the outage window",
+                )
+            },
+            "flaky_uplink" => Scenario {
+                fault: FaultPlan {
+                    upload_fail_rate: 0.35,
+                    heartbeat_loss_rate: 0.08,
+                    quarantine_threshold: 2,
+                    ..FaultPlan::inert()
+                },
+                aggregation: Aggregation::Quorum { frac: 0.7 },
+                over_select: 1.3,
+                crash: Some(CrashPoint::MidRound(2)),
+                ..Self::baseline(
+                    "flaky_uplink",
+                    "35% of uploads fail and retry with capped backoff, 8% of clients go \
+                     silent; repeat offenders are quarantined; mid-round crash at round 2",
+                )
+            },
+            "byzantine_summaries" => Scenario {
+                fault: FaultPlan {
+                    corrupt_rate: 0.3,
+                    quarantine_threshold: 2,
+                    probation_rounds: 2,
+                    ..FaultPlan::inert()
+                },
+                refresh_every_override: 2,
+                over_select: 1.2,
+                crash: Some(CrashPoint::AfterRound(2)),
+                ..Self::baseline(
+                    "byzantine_summaries",
+                    "30% of refreshed summaries arrive corrupted (NaN or stale-phase) and \
+                     are rejected at the store boundary; offenders are quarantined",
+                )
+            },
             _ => return None,
         })
     }
@@ -288,6 +345,9 @@ mod tests {
             assert!(sc.over_select >= 1.0);
             assert!(sc.deadline_pct > 0.0 && sc.deadline_pct <= 100.0);
             assert!((0.0..1.0).contains(&sc.dropout_rate));
+            sc.fault.validate().unwrap_or_else(|e| {
+                panic!("{}: catalog fault plan invalid: {e:#}", sc.name)
+            });
         }
         assert!(Scenario::by_name("nope").is_none());
     }
@@ -346,15 +406,41 @@ mod tests {
         assert_eq!(cf.crash, Some(CrashPoint::AfterRound(2)));
         let mr = Scenario::by_name("mid_round_restart").unwrap();
         assert_eq!(mr.crash, Some(CrashPoint::MidRound(3)));
-        // Only the crash scenarios crash.
+        // The crash scenarios and the chaos trio (which each pair a fault
+        // plan with a kill → recover → resume run) crash; nothing else does.
+        let crashing = [
+            "coordinator_failure",
+            "mid_round_restart",
+            "regional_outage",
+            "flaky_uplink",
+            "byzantine_summaries",
+        ];
+        for name in Scenario::NAMES {
+            let sc = Scenario::by_name(name).unwrap();
+            assert_eq!(sc.crash.is_some(), crashing.contains(&name), "{name}");
+        }
+    }
+
+    #[test]
+    fn chaos_scenarios_carry_active_fault_plans_and_nothing_else_does() {
+        let chaos = ["regional_outage", "flaky_uplink", "byzantine_summaries"];
         for name in Scenario::NAMES {
             let sc = Scenario::by_name(name).unwrap();
             assert_eq!(
-                sc.crash.is_some(),
-                name == "coordinator_failure" || name == "mid_round_restart",
-                "{name}"
+                !sc.fault.is_inert(),
+                chaos.contains(&name),
+                "{name}: fault-plan activity surprised the catalog"
             );
         }
+        let ro = Scenario::by_name("regional_outage").unwrap();
+        assert_eq!(ro.fault.outage_frac, 0.3);
+        assert_eq!((ro.fault.outage_start, ro.fault.outage_rounds), (2, 2));
+        let fu = Scenario::by_name("flaky_uplink").unwrap();
+        assert_eq!(fu.fault.upload_fail_rate, 0.35);
+        assert_eq!(fu.fault.quarantine_threshold, 2);
+        let bz = Scenario::by_name("byzantine_summaries").unwrap();
+        assert_eq!(bz.fault.corrupt_rate, 0.3);
+        assert_eq!(bz.refresh_every(5), 2, "summary refresh must run often enough");
     }
 
     #[test]

@@ -619,7 +619,62 @@ fn crash_scenarios_recover_to_the_uninterrupted_digest() {
             let r = feddde::sim::run_with_recovery(sim_cfg(threads, 17), sc).unwrap();
             assert!(r.recovered_rounds > 0, "{name}: recovery replayed nothing");
             assert_eq!(
-                r.journal.digest(),
+                r.report.event_digest(),
+                r.uninterrupted_digest,
+                "{name} threads={threads}: digests diverged"
+            );
+            assert_eq!(r.report.rounds.len(), 6, "{name}: resumed run incomplete");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fault-fabric oracle: every fault draw (outage membership, upload failures,
+// retry backoffs, heartbeat loss, corruption, quarantine decisions) is a
+// seeded substream, so the chaos scenarios must be exactly as deterministic
+// as the clean ones — bitwise identical event streams across thread counts
+// and reruns, and kill → recover → resume runs matching their uninterrupted
+// twins digest-for-digest.
+
+#[test]
+fn chaos_event_streams_are_thread_count_invariant() {
+    for scenario in ["regional_outage", "flaky_uplink", "byzantine_summaries"] {
+        let t1 = run_sim(scenario, 1, 29);
+        for threads in [4, 8] {
+            let tn = run_sim(scenario, threads, 29);
+            assert_sim_bitwise_equal(&t1, &tn, &format!("{scenario} threads 1 vs {threads}"));
+        }
+        assert!(!t1.events.is_empty(), "{scenario} produced no events");
+    }
+}
+
+#[test]
+fn chaos_replay_from_seed_is_bitwise_identical() {
+    for scenario in ["regional_outage", "flaky_uplink", "byzantine_summaries"] {
+        let a = run_sim(scenario, 0, 31);
+        let b = run_sim(scenario, 0, 31);
+        assert_sim_bitwise_equal(&a, &b, &format!("{scenario} replay"));
+        let c = run_sim(scenario, 0, 32);
+        assert_ne!(
+            a.event_digest(),
+            c.event_digest(),
+            "{scenario}: seed had no effect on the fault stream"
+        );
+    }
+}
+
+#[test]
+fn chaos_scenarios_recover_to_the_uninterrupted_digest() {
+    // Acceptance: with faults enabled, every chaos scenario's kill → recover
+    // → resume run matches its uninterrupted twin's digests — retry events,
+    // quarantine decisions and degraded closes replay bitwise.
+    for name in ["regional_outage", "flaky_uplink", "byzantine_summaries"] {
+        for threads in [1usize, 4, 8] {
+            let sc = Scenario::by_name(name).unwrap();
+            let r = feddde::sim::run_with_recovery(sim_cfg(threads, 37), sc).unwrap();
+            assert!(r.recovered_rounds > 0, "{name}: recovery replayed nothing");
+            assert_eq!(
+                r.report.event_digest(),
                 r.uninterrupted_digest,
                 "{name} threads={threads}: digests diverged"
             );

@@ -309,3 +309,61 @@ fn heavy_tail_scenario_cuts_more_stragglers_than_baseline() {
         "heavy_tail cut {tail_cut} vs baseline {base_cut} — straggler model inert"
     );
 }
+
+#[test]
+fn chaos_scenarios_run_end_to_end_with_recovery_and_emit_fault_counters() {
+    // The chaos trio each carries both an active fault plan AND a crash
+    // point: every one must survive kill → recover → resume, converge to its
+    // uninterrupted twin's digest, keep the four-way client partition, and
+    // exercise its fault channel — then aggregate into BENCH_chaos.json.
+    use feddde::config::SimConfig;
+    use feddde::sim::{bench_json, run_with_recovery, Scenario};
+
+    let dir = std::env::temp_dir().join("feddde_chaos_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut entries = Vec::new();
+    for name in ["regional_outage", "flaky_uplink", "byzantine_summaries"] {
+        let cfg = SimConfig {
+            n_clients: 40,
+            rounds: 6,
+            per_round: 8,
+            refresh_every: 2,
+            seed: 23,
+            ..Default::default()
+        };
+        let sc = Scenario::by_name(name).unwrap();
+        assert!(!sc.fault.is_inert(), "{name} must carry an active fault plan");
+        let r = run_with_recovery(cfg, sc).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(r.report.rounds.len(), 6, "{name}: lost rounds");
+        assert!(r.recovered_rounds > 0, "{name}: crash recovered nothing");
+        assert_eq!(r.report.event_digest(), r.uninterrupted_digest, "{name}: digest forked");
+        let t = r.report.totals();
+        assert!(t.completed > 0, "{name}: nothing ever completed");
+        for rr in &r.report.rounds {
+            assert_eq!(
+                rr.completed + rr.dropped + rr.timed_out + rr.failed,
+                rr.selected,
+                "{name} round {}: partition leaked a client",
+                rr.round
+            );
+        }
+        // The deterministic fault channels must actually fire (regional
+        // outage only masks availability, so it has no counter of its own).
+        match name {
+            "flaky_uplink" => assert!(t.retries > 0, "{name}: no retries issued"),
+            "byzantine_summaries" => {
+                assert!(t.summary_rejects > 0, "{name}: no summaries rejected")
+            }
+            _ => {}
+        }
+        let journal_path = dir.join(format!("{name}.journal"));
+        std::fs::write(&journal_path, r.journal.to_jsonl()).unwrap();
+        entries.push(r.report.chaos_entry_json(0.0, 0.0));
+    }
+    let agg = bench_json(&entries);
+    assert_eq!(agg.matches("\"scenario\"").count(), 3);
+    assert!(agg.contains("\"retries\"") && agg.contains("\"degraded_rounds\""));
+    let out = dir.join("BENCH_chaos.json");
+    std::fs::write(&out, &agg).unwrap();
+    assert!(std::fs::metadata(&out).unwrap().len() > 0);
+}

@@ -15,7 +15,9 @@ use feddde::runtime::Engine;
 use feddde::selection::{
     self, validate_selection, ClientView, ClusterSelection, SelectionPolicy, STRATEGY_NAMES,
 };
-use feddde::sim::{Aggregation, AvailabilityModel, Scenario, Simulator, StragglerModel};
+use feddde::sim::{
+    Aggregation, AvailabilityModel, FaultPlan, Scenario, Simulator, StragglerModel,
+};
 use feddde::summary::JlSummary;
 use feddde::util::mat::Mat;
 use feddde::util::proptest::check;
@@ -498,17 +500,25 @@ fn random_journal(g: &mut feddde::util::proptest::Gen, rounds: usize) -> EventJo
         let k = g.usize_in(0, n_clients.min(8));
         let selected: Vec<usize> = (0..k).map(|i| i * 2 + 1).collect();
         m.apply(Transition::ClientsSelected { round, selected: selected.clone() }).unwrap();
-        // Partition the selection into the three terminal buckets.
+        // Partition the selection into the four terminal buckets (the
+        // `failed` bucket is often empty, exercising its elided encoding).
         let cut1 = g.usize_in(0, selected.len());
         let cut2 = g.usize_in(cut1, selected.len());
+        let cut3 = g.usize_in(cut2, selected.len());
         m.apply(Transition::TrainingEnded {
             round,
             completed: selected[..cut1].to_vec(),
             dropped: selected[cut1..cut2].to_vec(),
-            timed_out: selected[cut2..].to_vec(),
+            timed_out: selected[cut2..cut3].to_vec(),
+            failed: selected[cut3..].to_vec(),
         })
         .unwrap();
-        m.apply(Transition::RoundAggregated { round, aggregated: cut1 > 0 }).unwrap();
+        m.apply(Transition::RoundAggregated {
+            round,
+            aggregated: cut1 > 0,
+            degraded: cut1 > 0 && g.bool(),
+        })
+        .unwrap();
     }
     m.into_journal()
 }
@@ -636,13 +646,14 @@ fn sim_random_scenarios_preserve_event_and_client_invariants() {
         let mut last_cov = 0.0f64;
         for r in &rep.rounds {
             assert_eq!(
-                r.completed + r.dropped + r.timed_out,
+                r.completed + r.dropped + r.timed_out + r.failed,
                 r.selected,
-                "round {}: {} + {} + {} != {}",
+                "round {}: {} + {} + {} + {} != {}",
                 r.round,
                 r.completed,
                 r.dropped,
                 r.timed_out,
+                r.failed,
                 r.selected
             );
             assert!(r.t_start >= last_end - 1e-12 && r.t_end >= r.t_start);
@@ -715,6 +726,7 @@ fn selection_strategies_survive_non_finite_losses() {
                 cluster: clusters[i],
                 device: &fleet[i],
                 available: true,
+                quarantined: false,
                 n_samples: 20 + i,
                 last_loss: losses[i],
                 step_host_secs: 0.01,
@@ -752,6 +764,7 @@ fn oort_ranks_nan_utility_last() {
                 cluster: 0,
                 device: &fleet[i],
                 available: true,
+                quarantined: false,
                 n_samples: 100,
                 last_loss: Some(losses[i]),
                 step_host_secs: 0.01,
@@ -784,6 +797,7 @@ fn cluster_ranks_nan_duration_last() {
                 cluster: 0,
                 device: &fleet[i],
                 available: true,
+                quarantined: false,
                 n_samples: 50,
                 last_loss: Some(1.0),
                 step_host_secs: if i == nan_client { f64::NAN } else { 0.01 },
@@ -798,5 +812,146 @@ fn cluster_ranks_nan_duration_last() {
             !sel.contains(&nan_client),
             "NaN-duration device {nan_client} jumped the queue: {sel:?}"
         );
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Fault-injection fuzz: random fault plans must never leak a client out of
+// the four-way completed/dropped/timed-out/failed partition, must stay
+// bitwise deterministic across refresh thread counts AND across a
+// crash/recover/resume at a random journal prefix, and a plan whose fault
+// rates are all zero must be indistinguishable — event stream and journal
+// bytes — from the inert default, whatever its resilience knobs say.
+
+/// A random but legal fault plan: rates drawn across their whole ranges,
+/// resilience knobs (retries, backoff, quarantine) randomized independently.
+fn random_fault_plan(g: &mut feddde::util::proptest::Gen) -> FaultPlan {
+    let mut f = FaultPlan::inert();
+    f.upload_fail_rate = g.f64_in(0.0, 0.5);
+    f.heartbeat_loss_rate = g.f64_in(0.0, 0.2);
+    f.corrupt_rate = g.f64_in(0.0, 0.4);
+    if g.bool() {
+        f.outage_frac = g.f64_in(0.1, 0.5);
+        f.outage_start = g.usize_in(0, 3);
+        f.outage_rounds = g.usize_in(1, 3);
+    }
+    f.max_retries = g.usize_in(0, 4) as u32;
+    f.quarantine_threshold = g.usize_in(0, 4) as u32;
+    f.probation_rounds = g.usize_in(0, 3);
+    f.backoff_base_secs = g.f64_in(0.1, 5.0);
+    f.backoff_cap_secs = f.backoff_base_secs * g.f64_in(1.0, 20.0);
+    f.backoff_jitter = g.f64_in(0.0, 0.5);
+    f.stale_discount = g.f64_in(0.05, 1.0);
+    f.validate().expect("generated plan must be legal");
+    f
+}
+
+#[test]
+fn sim_random_fault_plans_preserve_the_client_partition() {
+    check(6, |g| {
+        let mut sc = Scenario::baseline("fault_fuzz", "randomized fault plan");
+        sc.fault = random_fault_plan(g);
+        sc.dropout_rate = g.f64_in(0.0, 0.3);
+        sc.over_select = g.f64_in(1.0, 1.5);
+        if g.bool() {
+            sc.aggregation = Aggregation::Quorum { frac: g.f64_in(0.3, 0.9) };
+        }
+        let cfg = SimConfig {
+            n_clients: g.usize_in(10, 40),
+            rounds: g.usize_in(2, 5),
+            per_round: g.usize_in(2, 8),
+            refresh_every: 2,
+            seed: 9000 + g.case as u64,
+            ..Default::default()
+        };
+        let rounds = cfg.rounds;
+        let rep = Simulator::new(cfg, sc).unwrap().run().unwrap();
+        assert_eq!(rep.rounds.len(), rounds, "faulty run lost rounds");
+        for r in &rep.rounds {
+            assert_eq!(
+                r.completed + r.dropped + r.timed_out + r.failed,
+                r.selected,
+                "round {}: {} + {} + {} + {} != {}",
+                r.round,
+                r.completed,
+                r.dropped,
+                r.timed_out,
+                r.failed,
+                r.selected
+            );
+        }
+    });
+}
+
+#[test]
+fn sim_random_fault_plans_are_bitwise_deterministic_and_replayable() {
+    check(4, |g| {
+        let mut sc = Scenario::baseline("fault_det", "randomized fault determinism");
+        sc.fault = random_fault_plan(g);
+        sc.dropout_rate = 0.1;
+        sc.over_select = 1.3;
+        let cfg = |threads: usize| SimConfig {
+            n_clients: 30,
+            rounds: 3,
+            per_round: 6,
+            refresh_every: 2,
+            threads,
+            seed: 9100 + g.case as u64,
+            ..Default::default()
+        };
+        let (rep, journal) =
+            Simulator::new(cfg(1), sc.clone()).unwrap().run_journaled().unwrap();
+        for threads in [4usize, 8] {
+            let (r2, j2) =
+                Simulator::new(cfg(threads), sc.clone()).unwrap().run_journaled().unwrap();
+            assert_eq!(r2.event_digest(), rep.event_digest(), "events forked at threads={threads}");
+            assert_eq!(j2.digest(), journal.digest(), "journal forked at threads={threads}");
+        }
+        // Crash at a random journal prefix, recover, resume: retries,
+        // backoff timing, and quarantine state must all re-derive bitwise.
+        let keep = g.usize_in(0, journal.len());
+        let resumed = Simulator::recover(cfg(1), sc.clone(), &journal.truncated(keep))
+            .unwrap_or_else(|e| panic!("recover at prefix {keep}: {e:#}"));
+        let (r3, j3) = resumed
+            .run_journaled()
+            .unwrap_or_else(|e| panic!("resume from prefix {keep}: {e:#}"));
+        assert_eq!(j3.digest(), journal.digest(), "journal digest diverged at prefix {keep}");
+        assert_eq!(r3.event_digest(), rep.event_digest(), "event digest diverged at prefix {keep}");
+    });
+}
+
+#[test]
+fn zeroed_fault_rates_leave_the_event_stream_bitwise_untouched() {
+    // The zero-fault identity, fuzzed over the resilience knobs: a plan with
+    // every fault RATE at zero is inert no matter how the retry/backoff/
+    // quarantine knobs are set, and must reproduce the default plan's event
+    // stream and journal byte for byte (straggler_cut keeps dropouts and
+    // deadline kills in play so the inert path is genuinely exercised).
+    check(5, |g| {
+        let cfg = SimConfig {
+            n_clients: 25,
+            rounds: 3,
+            per_round: 5,
+            refresh_every: 2,
+            seed: 9200 + g.case as u64,
+            ..Default::default()
+        };
+        let base = Scenario::by_name("straggler_cut").unwrap();
+        let (want_rep, want_j) =
+            Simulator::new(cfg.clone(), base.clone()).unwrap().run_journaled().unwrap();
+        let mut f = FaultPlan::inert();
+        f.max_retries = g.usize_in(0, 9) as u32;
+        f.quarantine_threshold = g.usize_in(0, 9) as u32;
+        f.probation_rounds = g.usize_in(0, 9);
+        f.backoff_base_secs = g.f64_in(0.01, 10.0);
+        f.backoff_cap_secs = f.backoff_base_secs * g.f64_in(1.0, 10.0);
+        f.backoff_jitter = g.f64_in(0.0, 1.0);
+        f.stale_discount = g.f64_in(0.05, 1.0);
+        assert!(f.is_inert(), "zero-rate plan classified as active: {f:?}");
+        let mut sc = base;
+        sc.fault = f;
+        let (rep, j) = Simulator::new(cfg, sc).unwrap().run_journaled().unwrap();
+        assert_eq!(rep.event_digest(), want_rep.event_digest(), "event stream moved");
+        assert_eq!(j.to_jsonl(), want_j.to_jsonl(), "journal bytes moved");
     });
 }
