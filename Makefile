@@ -1,7 +1,7 @@
 # FedDDE build orchestration. The Rust crate lives in rust/, the AOT
 # compiler (JAX + Pallas -> HLO text artifacts) in python/.
 
-.PHONY: artifacts build test bench bench-smoke sim-smoke replay-smoke chaos-smoke python-test clean
+.PHONY: artifacts build test bench bench-smoke sim-smoke replay-smoke chaos-smoke scale-smoke python-test clean
 
 # AOT-lower every JAX graph / Pallas kernel into rust/artifacts (manifest.tsv
 # + *.hlo.txt). Requires jax; runs on CPU.
@@ -78,6 +78,21 @@ chaos-smoke:
 	@test -s rust/results/chaos/sim_flaky_uplink_cluster.journal
 	@test -s rust/results/chaos/sim_byzantine_summaries_cluster.journal
 	@echo "chaos smoke ok: fault scenarios recovered and BENCH_chaos.json written"
+
+# Million-client scale smoke: the sharded-coordinator sweep at N in
+# {10k, 100k, 1M} x shards in {1, 8}, with lazy arrival sampling forced on
+# (memory stays bounded by the arrived cohort, not the fleet). Emits
+# rust/results/BENCH_scale.json with per-run coordinator seconds/round,
+# peak summary-store bytes, hierarchical edge/root aggregation model times,
+# and coverage — the sub-linear coordinator-overhead evidence for the
+# sharded tier.
+scale-smoke:
+	cd rust && cargo run --release -- run-sim \
+		--scenario sync_baseline --policy random --rounds 3 --per-round 100 \
+		--scale 10000,100000,1000000 --scale-shards 1,8 \
+		--scale-json results/BENCH_scale.json
+	@test -s rust/results/BENCH_scale.json
+	@echo "wrote rust/results/BENCH_scale.json"
 
 clean:
 	cd rust && cargo clean

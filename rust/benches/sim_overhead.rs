@@ -12,6 +12,10 @@
 //!    dropped, per strategy.
 //! 2. **Scenario matrix** — a 50-client × 5-round sweep over the scenario
 //!    catalog under the cluster policy (`make sim-smoke`'s payload).
+//!    Followed by a shard/lazy probe asserting the sharded tier and lazy
+//!    arrival sampling leave the event stream bitwise untouched (the
+//!    million-client sweep itself lives in `run-sim --scale`, which emits
+//!    `results/BENCH_scale.json`; see `make scale-smoke`).
 //! 3. **Chaos matrix** — the fault-injection trio (`regional_outage`,
 //!    `flaky_uplink`, `byzantine_summaries`) through the full kill →
 //!    recover → resume protocol, with retry/quarantine/degraded-close
@@ -27,7 +31,7 @@
 
 use feddde::config::SimConfig;
 use feddde::selection::STRATEGY_NAMES;
-use feddde::sim::{bench_json, run_with_recovery, Scenario, Simulator};
+use feddde::sim::{run_with_recovery, write_bench_json, Scenario, Simulator};
 use feddde::util::bench::full_scale;
 use feddde::util::cli::{CommandSpec, FlagSpec, Parsed};
 
@@ -135,8 +139,52 @@ fn main() {
         entries.push(run_one(cfg, sc));
     }
 
-    std::fs::write(&out, bench_json(&entries)).expect("writing the aggregate artifact");
+    if let Err(e) = write_bench_json(&out, &entries) {
+        eprintln!("sim_overhead: {e}");
+        std::process::exit(1);
+    }
     println!("\nwrote {out} ({} runs)", entries.len());
+
+    // --- Section 2b: shard/lazy scale probe ---------------------------------
+    // The sharded tier and lazy arrival sampling must neither change results
+    // nor slow the flat path; quote the digests side by side so a regression
+    // is visible in the bench log before the determinism suite runs.
+    println!("\n== shard & lazy probe (1000 clients x 4 rounds) ==");
+    let probe = |shards: usize, lazy: bool, policy: &str| {
+        let cfg = SimConfig {
+            n_clients: 1000,
+            rounds: 4,
+            per_round: 50,
+            policy: policy.into(),
+            refresh_every: 2,
+            shards,
+            lazy_arrivals: lazy,
+            seed: 4,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let rep = Simulator::new(cfg, Scenario::by_name("straggler_cut").unwrap())
+            .expect("probe simulator")
+            .run()
+            .expect("probe run");
+        let host = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<8} shards {:>2} lazy {:<5}  events {:#018x}  peak store {:>9} B  [host {:.2}s]",
+            policy,
+            shards,
+            lazy,
+            rep.event_digest(),
+            rep.peak_store_bytes,
+            host
+        );
+        rep.event_digest()
+    };
+    let flat = probe(1, false, "cluster");
+    for s in [4, 16] {
+        assert_eq!(probe(s, false, "cluster"), flat, "shards={s} diverged the stream");
+    }
+    let eager = probe(1, false, "random");
+    assert_eq!(probe(1, true, "random"), eager, "lazy arrivals diverged the stream");
 
     // --- Section 3: chaos matrix → BENCH_chaos.json -------------------------
     // Same fleet shape for the baseline and every chaos run, so the
@@ -184,7 +232,9 @@ fn main() {
         );
         chaos_entries.push(rep.chaos_entry_json(baseline_secs, host));
     }
-    std::fs::write(&chaos_out, bench_json(&chaos_entries))
-        .expect("writing the chaos artifact");
+    if let Err(e) = write_bench_json(&chaos_out, &chaos_entries) {
+        eprintln!("sim_overhead: {e}");
+        std::process::exit(1);
+    }
     println!("\nwrote {chaos_out} ({} runs)", chaos_entries.len());
 }

@@ -686,6 +686,92 @@ pub fn fit(points: &Mat, cfg: &KmeansConfig) -> KmeansResult {
     KmeansResult { centroids, assignments, inertia, iters, stats }
 }
 
+/// Root-tier merge of per-shard centroid sets (the hierarchical clustering
+/// topology's approximate path): every shard centroid becomes a point
+/// weighted by its member count, and a fixed number of weighted Lloyd
+/// iterations runs over those ≤ S·k points. Cost is
+/// Θ(iters · S·k · k · dim) — independent of fleet size, which is what
+/// keeps the root tier sub-linear in N. Deterministic: points gather in
+/// fixed (shard, row) order, seeds are the k heaviest centroids (input
+/// order breaks ties), assignment and accumulation scan serially — the
+/// same inputs always merge to the same bits. Different shard counts
+/// summarize the fleet differently, so this path is approximate by nature;
+/// the shard-count-*invariant* merged clustering re-fits the concatenated
+/// shard matrices at the root (`coordinator::summaries`).
+pub fn merge_weighted_centroids(
+    sets: &[(&Mat, &[u64])],
+    k: usize,
+    iters: usize,
+) -> (Mat, Vec<u64>) {
+    let dim = sets.iter().find(|(m, _)| m.rows() > 0).map_or(0, |(m, _)| m.cols());
+    let mut points = Mat::zeros(0, dim);
+    let mut weights: Vec<u64> = Vec::new();
+    for (m, counts) in sets {
+        debug_assert_eq!(m.rows(), counts.len(), "centroid set without matching counts");
+        for r in 0..m.rows() {
+            // Empty local clusters carry no mass and no information.
+            if counts[r] == 0 {
+                continue;
+            }
+            points.push_row(m.row(r));
+            weights.push(counts[r]);
+        }
+    }
+    let n = points.rows();
+    if k == 0 || n <= k {
+        return (points, weights);
+    }
+    // Seed with the k heaviest shard centroids, input order breaking ties.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| weights[b].cmp(&weights[a]).then(a.cmp(&b)));
+    let mut centroids = Mat::zeros(0, dim);
+    for &i in order.iter().take(k) {
+        centroids.push_row(points.row(i));
+    }
+    let mut assignments = vec![0usize; n];
+    for _ in 0..iters.max(1) {
+        for (i, slot) in assignments.iter_mut().enumerate() {
+            let row = points.row(i);
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for c in 0..k {
+                let d = sqdist(row, centroids.row(c));
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            *slot = best;
+        }
+        // Count-weighted mean update, serial in point order; an emptied
+        // merge cluster keeps its previous centroid.
+        let mut acc = vec![0.0f64; k * dim];
+        let mut mass = vec![0u64; k];
+        for i in 0..n {
+            let c = assignments[i];
+            mass[c] += weights[i];
+            let w = weights[i] as f64;
+            for (j, &v) in points.row(i).iter().enumerate() {
+                acc[c * dim + j] += w * v as f64;
+            }
+        }
+        for c in 0..k {
+            if mass[c] == 0 {
+                continue;
+            }
+            let inv = 1.0 / mass[c] as f64;
+            for j in 0..dim {
+                centroids.row_mut(c)[j] = (acc[c * dim + j] * inv) as f32;
+            }
+        }
+    }
+    let mut mass = vec![0u64; k];
+    for (i, &c) in assignments.iter().enumerate() {
+        mass[c] += weights[i];
+    }
+    (centroids, mass)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -713,6 +799,45 @@ mod tests {
         let ari = crate::util::stats::adjusted_rand_index(&res.assignments, &truth);
         assert!(ari > 0.99, "ari={ari}");
         assert!(res.inertia < 150.0 * 2.0 * 0.3 * 0.3 * 4.0);
+    }
+
+    #[test]
+    fn centroid_merge_recovers_structure_across_shards() {
+        // Two well-separated groups, each split across two shards: the
+        // root merge at k=2 must put the shard-local centroids of the same
+        // group back together, with counts preserved.
+        let a = Mat::from_rows(&[vec![0.0, 0.0], vec![10.0, 10.0]]);
+        let b = Mat::from_rows(&[vec![0.2, -0.2], vec![10.2, 9.8]]);
+        let ca = [30u64, 50];
+        let cb = [10u64, 70];
+        let (merged, mass) = merge_weighted_centroids(&[(&a, &ca), (&b, &cb)], 2, 5);
+        assert_eq!(merged.rows(), 2);
+        assert_eq!(mass.iter().sum::<u64>(), 160);
+        // One merged centroid near (0,0)-ish mass 40, one near (10,10) mass 120.
+        let mut got: Vec<(f32, u64)> = (0..2).map(|c| (merged.row(c)[0], mass[c])).collect();
+        got.sort_by(|x, y| x.0.total_cmp(&y.0));
+        assert!(got[0].0.abs() < 1.0 && got[0].1 == 40, "low centroid {got:?}");
+        assert!((got[1].0 - 10.0).abs() < 1.0 && got[1].1 == 120, "high centroid {got:?}");
+        // Deterministic: same inputs, same bits.
+        let (again, mass2) = merge_weighted_centroids(&[(&a, &ca), (&b, &cb)], 2, 5);
+        assert_eq!(merged.data(), again.data());
+        assert_eq!(mass, mass2);
+    }
+
+    #[test]
+    fn centroid_merge_passes_small_sets_through_and_drops_empty_clusters() {
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let counts = [5u64, 0];
+        // One non-empty centroid against k=4: passthrough, zero-count row
+        // dropped.
+        let (m, mass) = merge_weighted_centroids(&[(&a, &counts)], 4, 3);
+        assert_eq!(m.rows(), 1);
+        assert_eq!(m.row(0), &[1.0, 2.0][..]);
+        assert_eq!(mass, vec![5]);
+        // No sets at all: empty merge.
+        let (e, em) = merge_weighted_centroids(&[], 3, 3);
+        assert_eq!(e.rows(), 0);
+        assert!(em.is_empty());
     }
 
     #[test]

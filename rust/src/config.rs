@@ -421,6 +421,22 @@ pub struct SimConfig {
     /// Run scenario refreshes on an int8-quantized summary store (see
     /// `ExperimentConfig::store_quantized`).
     pub store_quantized: bool,
+    /// Coordinator shards (>= 1). Each shard owns its own summary-store
+    /// arena over a contiguous client range and clusters it locally; a root
+    /// tier merges shard results (weighted centroid merge, fixed-point
+    /// FedAvg reduce). `1` (the default) is the flat coordinator, bitwise
+    /// identical to pre-sharding builds; any shard count yields
+    /// bit-identical merged results and event streams (sharding changes
+    /// storage layout and reported hierarchy costs, never the clock or RNG).
+    pub shards: usize,
+    /// Lazy arrival-process sampling: instead of materializing every client
+    /// eagerly, draw each round's arrivals from the seeded per-(client,
+    /// round) substreams and synthesize only the clients that show up —
+    /// idle clients cost zero memory and zero events. Exact (event-for-
+    /// event equal to the eager path) for the cohort-invariant policies
+    /// (`random`, `oort`, `powd`); `round_robin`/`cluster` see only the
+    /// arrived cohort, which matches eager exactly at full availability.
+    pub lazy_arrivals: bool,
     /// Modeled host seconds for one local SGD step (scaled per device).
     pub train_step_host_secs: f64,
     /// Model-update upload bytes per selected client per round.
@@ -449,6 +465,8 @@ impl Default for SimConfig {
             refresh_every: 5,
             threads: 0,
             store_quantized: false,
+            shards: 1,
+            lazy_arrivals: false,
             train_step_host_secs: 0.02,
             update_bytes: 400_000,
             seed: 1,
@@ -460,7 +478,7 @@ impl Default for SimConfig {
 
 /// The keys `SimConfig::from_toml` consumes (all under `[sim]`, fault knobs
 /// under `[sim.fault]`).
-pub const SIM_KEYS: [&str; 28] = [
+pub const SIM_KEYS: [&str; 30] = [
     "sim.scenario",
     "sim.clients",
     "sim.rounds",
@@ -472,6 +490,8 @@ pub const SIM_KEYS: [&str; 28] = [
     "sim.refresh_every",
     "sim.threads",
     "sim.store_quantized",
+    "sim.shards",
+    "sim.lazy_arrivals",
     "sim.train_step_host_secs",
     "sim.update_bytes",
     "sim.seed",
@@ -536,6 +556,8 @@ impl SimConfig {
             refresh_every: t.int_or("sim.refresh_every", d.refresh_every as i64) as usize,
             threads: t.int_or("sim.threads", d.threads as i64) as usize,
             store_quantized: t.bool_or("sim.store_quantized", d.store_quantized),
+            shards: t.int_or("sim.shards", d.shards as i64) as usize,
+            lazy_arrivals: t.bool_or("sim.lazy_arrivals", d.lazy_arrivals),
             train_step_host_secs: t.float_or("sim.train_step_host_secs", d.train_step_host_secs),
             update_bytes: t.int_or("sim.update_bytes", d.update_bytes as i64) as usize,
             seed: t.int_or("sim.seed", d.seed as i64) as u64,
@@ -709,6 +731,17 @@ mod tests {
         assert!(!d.store_quantized, "sim store must default to exact f32");
         let t = Toml::parse("[sim]\nstore_quantized = true\n").unwrap();
         assert!(SimConfig::from_toml(&t).unwrap().store_quantized);
+    }
+
+    #[test]
+    fn scale_knobs_default_to_the_flat_eager_coordinator() {
+        let d = SimConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert_eq!(d.shards, 1, "flat coordinator must be the default");
+        assert!(!d.lazy_arrivals, "eager client materialization must be the default");
+        let t = Toml::parse("[sim]\nshards = 8\nlazy_arrivals = true\n").unwrap();
+        let c = SimConfig::from_toml(&t).unwrap();
+        assert_eq!(c.shards, 8);
+        assert!(c.lazy_arrivals);
     }
 
     #[test]

@@ -39,6 +39,114 @@ pub fn fedavg(updates: &[(Vec<f32>, f64)]) -> Result<Vec<f32>> {
     Ok(out.into_iter().map(|v| v as f32).collect())
 }
 
+/// Fractional bits of the fixed-point accumulators used by the hierarchical
+/// (sharded) reduce. 32 bits keeps the per-term quantization error at
+/// `2^-33 ≈ 1.2e-10` — far below f32 resolution — while leaving ~64 bits of
+/// integer headroom: `|w·v| ≤ 1e4 × 1e2` per client over 10^6 clients is
+/// ~2^60 after scaling, comfortably inside i128.
+const AGG_FIXED_SHIFT: u32 = 32;
+
+fn to_fixed(x: f64) -> i128 {
+    (x * (1u64 << AGG_FIXED_SHIFT) as f64).round() as i128
+}
+
+/// One shard's contribution to a hierarchical FedAvg: the *unnormalized*
+/// weighted parameter sum and the weight total, both in 64.32 fixed point.
+/// Integer addition is exact and associative, so merging partials is
+/// invariant to how clients were grouped into shards — shard counts 1, 4,
+/// and 16 produce bit-identical merged parameters (the "fixed-order shard
+/// reduce" is actually order-*free*). The flat [`fedavg`] stays the
+/// round-loop's authoritative aggregator; this is the edge-aggregator path
+/// whose results the root merges and reports.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AggPartial {
+    /// Per-dimension `Σ wᵢ·vᵢⱼ`, fixed-point.
+    pub sum: Vec<i128>,
+    /// `Σ wᵢ`, fixed-point.
+    pub weight: i128,
+    /// Updates folded into this partial.
+    pub count: usize,
+}
+
+impl AggPartial {
+    pub fn zero(dim: usize) -> Self {
+        AggPartial { sum: vec![0; dim], weight: 0, count: 0 }
+    }
+}
+
+/// Edge-aggregator reduce: fold one shard's updates into a fixed-point
+/// partial. An empty shard yields the zero partial (a shard with no
+/// completions still reports). Validation matches [`fedavg`]: dimensions
+/// must agree with `dim`, weights must be finite and non-negative.
+pub fn fedavg_partial(updates: &[(Vec<f32>, f64)], dim: usize) -> Result<AggPartial> {
+    let mut out = AggPartial::zero(dim);
+    for (i, (p, w)) in updates.iter().enumerate() {
+        if p.len() != dim {
+            bail!("fedavg_partial: parameter dim mismatch {} vs {dim}", p.len());
+        }
+        if !w.is_finite() || *w < 0.0 {
+            bail!("fedavg_partial: invalid weight {w} for update {i}");
+        }
+        for (o, &v) in out.sum.iter_mut().zip(p) {
+            *o += to_fixed(*w * v as f64);
+        }
+        out.weight += to_fixed(*w);
+        out.count += 1;
+    }
+    Ok(out)
+}
+
+/// Root reduce: merge shard partials into the global parameters. The i128
+/// sums make the result independent of shard count and merge order; the
+/// single final division is the only floating-point step.
+pub fn fedavg_merge(partials: &[AggPartial]) -> Result<Vec<f32>> {
+    let Some((first, rest)) = partials.split_first() else {
+        bail!("fedavg_merge: no partials");
+    };
+    let dim = first.sum.len();
+    for p in rest {
+        if p.sum.len() != dim {
+            bail!("fedavg_merge: partial dim mismatch {} vs {dim}", p.sum.len());
+        }
+    }
+    let total: i128 = partials.iter().map(|p| p.weight).sum();
+    if total <= 0 {
+        bail!("fedavg_merge: non-positive total weight");
+    }
+    let mut out = Vec::with_capacity(dim);
+    for j in 0..dim {
+        let s: i128 = partials.iter().map(|p| p.sum[j]).sum();
+        // The 2^32 scales cancel in the ratio.
+        out.push((s as f64 / total as f64) as f32);
+    }
+    Ok(out)
+}
+
+/// Deterministic cost model for the two-tier aggregation topology, priced
+/// with the same per-FLOP constant the refresh/cluster models use
+/// (`summaries::cluster_model_secs`). Edge aggregators fold their shard's
+/// updates in parallel, so the edge tier costs the *max* over shards of
+/// `countₛ × dim` multiply-adds; the root folds one partial per shard —
+/// `S × dim` madds, independent of fleet size. That root term is the
+/// sub-linear coordinator-overhead claim `BENCH_scale.json` tracks.
+/// Returns `(edge_parallel_secs, root_secs)`.
+pub fn hier_agg_model_secs(shard_counts: &[usize], dim: usize) -> (f64, f64) {
+    const SECS_PER_MADD: f64 = 2.5e-10;
+    const SETUP_SECS: f64 = 5e-6;
+    let edge = shard_counts
+        .iter()
+        .map(|&c| {
+            if c == 0 {
+                0.0
+            } else {
+                SECS_PER_MADD * (c * dim) as f64 + SETUP_SECS
+            }
+        })
+        .fold(0.0f64, f64::max);
+    let root = SECS_PER_MADD * (shard_counts.len() * dim) as f64 + SETUP_SECS;
+    (edge, root)
+}
+
 /// FedAvg weight for an update that needed `retries` re-uploads before it
 /// landed: the base sample count discounted by `discount^retries`. Late
 /// uploads were computed against an older global model, so a degraded-round
@@ -148,6 +256,134 @@ mod tests {
             opt.apply(&mut global, &[1.0]);
         }
         assert!(global[0] > 1.0, "momentum should overshoot, got {}", global[0]);
+    }
+
+    #[test]
+    fn hierarchical_merge_matches_flat_fedavg_closely() {
+        let updates: Vec<(Vec<f32>, f64)> = (0..17)
+            .map(|i| {
+                let v: Vec<f32> = (0..8).map(|j| ((i * 31 + j * 7) % 13) as f32 - 6.0).collect();
+                (v, 1.0 + (i % 5) as f64 * 37.5)
+            })
+            .collect();
+        let flat = fedavg(&updates).unwrap();
+        let merged = fedavg_merge(&[fedavg_partial(&updates, 8).unwrap()]).unwrap();
+        for (a, b) in flat.iter().zip(&merged) {
+            assert!((a - b).abs() < 1e-5, "flat {a} vs merged {b}");
+        }
+    }
+
+    #[test]
+    fn merge_is_bitwise_invariant_to_shard_count_and_order() {
+        // The tentpole determinism contract: folding the same updates
+        // through 1, 4, or 16 edge partials — in any merge order — yields
+        // bit-identical merged parameters, because the i128 accumulators are
+        // exact and associative.
+        let updates: Vec<(Vec<f32>, f64)> = (0..48)
+            .map(|i| {
+                let v: Vec<f32> =
+                    (0..6).map(|j| (((i * 17 + j * 5) % 29) as f32) * 0.37 - 5.0).collect();
+                (v, ((i * 13) % 900) as f64 + 0.5)
+            })
+            .collect();
+        let merge_sharded = |s: usize| {
+            let partials: Vec<AggPartial> = (0..s)
+                .map(|shard| {
+                    let mine: Vec<(Vec<f32>, f64)> = updates
+                        .iter()
+                        .enumerate()
+                        .filter(|(i, _)| i * s / updates.len() == shard)
+                        .map(|(_, u)| u.clone())
+                        .collect();
+                    fedavg_partial(&mine, 6).unwrap()
+                })
+                .collect();
+            fedavg_merge(&partials).unwrap()
+        };
+        let one = merge_sharded(1);
+        for s in [4usize, 16] {
+            let m = merge_sharded(s);
+            for (a, b) in one.iter().zip(&m) {
+                assert_eq!(a.to_bits(), b.to_bits(), "shards={s}");
+            }
+        }
+        // Reversed merge order: still identical bits.
+        let mut partials: Vec<AggPartial> = (0..16)
+            .map(|shard| {
+                let mine: Vec<(Vec<f32>, f64)> = updates
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| i * 16 / updates.len() == shard)
+                    .map(|(_, u)| u.clone())
+                    .collect();
+                fedavg_partial(&mine, 6).unwrap()
+            })
+            .collect();
+        partials.reverse();
+        let rev = fedavg_merge(&partials).unwrap();
+        for (a, b) in one.iter().zip(&rev) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_shards_merge_cleanly() {
+        // A shard with no completions contributes the zero partial.
+        let updates = [(vec![2.0f32, 4.0], 3.0)];
+        let p = fedavg_partial(&updates, 2).unwrap();
+        let merged =
+            fedavg_merge(&[AggPartial::zero(2), p.clone(), AggPartial::zero(2)]).unwrap();
+        let alone = fedavg_merge(&[p]).unwrap();
+        assert_eq!(merged, alone);
+        assert!((merged[0] - 2.0).abs() < 1e-6 && (merged[1] - 4.0).abs() < 1e-6);
+        // All-empty: no weight, typed error.
+        assert!(fedavg_merge(&[AggPartial::zero(2)]).is_err());
+        assert!(fedavg_merge(&[]).is_err());
+        // Validation mirrors fedavg's.
+        assert!(fedavg_partial(&[(vec![1.0], f64::NAN)], 1).is_err());
+        assert!(fedavg_partial(&[(vec![1.0], -1.0)], 1).is_err());
+        assert!(fedavg_partial(&[(vec![1.0, 2.0], 1.0)], 1).is_err());
+        assert!(fedavg_merge(&[AggPartial::zero(1), AggPartial::zero(2)]).is_err());
+    }
+
+    #[test]
+    fn property_any_partitioning_merges_identically() {
+        crate::util::proptest::check(15, |g| {
+            let n = g.usize_in(1, 24);
+            let d = g.usize_in(1, 8);
+            let updates: Vec<(Vec<f32>, f64)> = (0..n)
+                .map(|_| (g.vec_f32(d, -2.0, 2.0), g.f64_in(0.1, 5.0)))
+                .collect();
+            // Random assignment of updates to 3 shards vs one flat partial.
+            let mut shards: Vec<Vec<(Vec<f32>, f64)>> = vec![Vec::new(); 3];
+            for u in &updates {
+                shards[g.usize_in(0, 2)].push(u.clone());
+            }
+            let partials: Vec<AggPartial> =
+                shards.iter().map(|s| fedavg_partial(s, d).unwrap()).collect();
+            let merged = fedavg_merge(&partials).unwrap();
+            let flat = fedavg_merge(&[fedavg_partial(&updates, d).unwrap()]).unwrap();
+            for (a, b) in merged.iter().zip(&flat) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn hier_cost_model_root_is_independent_of_fleet_size() {
+        // 8 shards of 1k clients vs 8 shards of 100k clients: the root fold
+        // prices identically (S × dim), only the edge tier grows — the
+        // sub-linear coordinator claim in miniature.
+        let small = hier_agg_model_secs(&[1_000; 8], 32);
+        let big = hier_agg_model_secs(&[100_000; 8], 32);
+        assert_eq!(small.1.to_bits(), big.1.to_bits(), "root cost must not scale with N");
+        assert!(big.0 > small.0, "edge cost must scale with shard size");
+        // Edge tier is a parallel max, not a sum.
+        let uneven = hier_agg_model_secs(&[10, 100_000, 10], 32);
+        let solo = hier_agg_model_secs(&[100_000], 32);
+        assert_eq!(uneven.0.to_bits(), solo.0.to_bits());
+        // Empty shards cost nothing at the edge.
+        assert_eq!(hier_agg_model_secs(&[0, 0], 16).0, 0.0);
     }
 
     #[test]

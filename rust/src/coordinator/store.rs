@@ -16,6 +16,9 @@
 //! Memory is explicitly bounded: `capacity` rows max. When full, inserting
 //! a new client evicts the least-recently-used slot (ties broken by client
 //! id — deterministic, since the refresher touches the store serially).
+//! LRU selection runs off a lazily-rebuilt min-heap over `(tick, client)`
+//! (landed with the int8 PR — eviction is O(log n) amortized, not an O(n)
+//! scan), so capacity-bound stores stay cheap even when thrashing.
 //! Evicted rows lose nothing but time: summaries are pure functions of
 //! `(seed, client_id, drift_phase)`, so a re-insert reproduces the evicted
 //! bits exactly (`tests/determinism.rs::bounded_store_evictions_recompute_bitwise`).
@@ -32,6 +35,15 @@
 //! [`SummaryStore::gather_quant`] → `cluster::kmeans::fit_quantized`).
 //! Everything else — LRU bounding, invalidation, compaction, determinism of
 //! the stored bits — is mode-independent.
+//!
+//! Under the sharded coordinator
+//! ([`ShardedFleetRefresher`](crate::coordinator::summaries::ShardedFleetRefresher))
+//! each shard owns its own `SummaryStore` arena over its contiguous
+//! client-id range; rows never migrate between shards, so per-shard stores
+//! compose to exactly the flat store's contents. One caveat: with
+//! `store_capacity > 0` AND `shards > 1`, each shard bounds its OWN arena,
+//! so the fleet-wide eviction order differs from a single global LRU — the
+//! bitwise shard-invariance guarantee is scoped to unbounded stores.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

@@ -148,6 +148,11 @@ pub struct RefreshResult {
     pub summaries: Mat,
     /// Cluster assignment per client.
     pub clusters: Vec<usize>,
+    /// Centroids the clustering backend converged to, in block-balanced
+    /// summary space (k x dim; empty when clustering was trivial). The
+    /// sharded root tier merges these; determinism tests compare them
+    /// bitwise across shard counts.
+    pub centroids: Mat,
     /// Per-client *simulated device* seconds (deterministic modeled host
     /// cost x device compute factor) — Table 2's "time calculating summary"
     /// distribution, bitwise reproducible across thread counts and cache
@@ -241,6 +246,89 @@ pub fn cluster_model_secs(
         iters as f64 * n as f64 * per_point
     };
     SECS_PER_MADD * madds + SETUP_SECS
+}
+
+/// Outcome of one server-side clustering pass over a fleet matrix.
+struct FleetClusterOut {
+    clusters: Vec<usize>,
+    iters: usize,
+    centroids: Mat,
+    secs: f64,
+    model_secs: f64,
+}
+
+/// Server-side clustering over a fleet matrix — the one code path both the
+/// flat refresher and the sharded root tier run, which is what makes the
+/// root fit over concatenated shard matrices bitwise identical to the flat
+/// fit over the same rows (same backend choice at the same `n`, same
+/// seed/threads/pruning config, same warm-state evolution).
+fn cluster_fleet(
+    opts: &RefreshOptions,
+    warm: &mut Option<WarmState>,
+    src: &Mat,
+    summary: &dyn SummaryEngine,
+    k_clusters: usize,
+    seed: u64,
+    threads: usize,
+) -> FleetClusterOut {
+    let n = src.rows();
+    let dim = src.cols();
+    let quant = opts.store_quantized;
+    let tc = std::time::Instant::now();
+    let use_minibatch = opts.backend.use_minibatch(n);
+    let mut minibatch_batch = 0usize;
+    let (clusters, cluster_iters, centroids) = if k_clusters <= 1 || n <= k_clusters {
+        *warm = None;
+        (vec![0; n], 0, Mat::zeros(0, dim))
+    } else {
+        // Balance summary blocks first: the proposed summary concatenates
+        // a feature-mean block and a label-distribution block of very
+        // different scales (see cluster::balance_blocks).
+        let balanced = crate::cluster::balance_blocks(src, &summary.blocks());
+        // Quantized mode clusters the compressed codes: re-quantize the
+        // block-balanced matrix (per-block scaling breaks the stored
+        // per-row affine form, so balancing happens in f32 first) and
+        // run the integer-kernel backends.
+        if use_minibatch {
+            let mut cfg = MinibatchConfig::new(k_clusters);
+            cfg.seed = seed;
+            cfg.threads = threads;
+            cfg.pruning = opts.pruning;
+            if opts.minibatch_batch > 0 {
+                cfg.batch = opts.minibatch_batch;
+            }
+            minibatch_batch = cfg.batch;
+            let fitted = if quant {
+                let qpoints = QuantMat::from_mat(&balanced);
+                minibatch::fit_warm_quant(&qpoints, &cfg, warm.as_ref())
+            } else {
+                minibatch::fit_warm(&balanced, &cfg, warm.as_ref())
+            };
+            *warm = Some(fitted.warm);
+            (fitted.result.assignments, fitted.result.iters, fitted.result.centroids)
+        } else {
+            *warm = None;
+            let mut cfg = KmeansConfig::new(k_clusters);
+            cfg.seed = seed;
+            cfg.threads = threads;
+            cfg.pruning = opts.pruning;
+            let fitted = if quant {
+                kmeans::fit_quantized(&QuantMat::from_mat(&balanced), &cfg)
+            } else {
+                kmeans::fit(&balanced, &cfg)
+            };
+            (fitted.assignments, fitted.iters, fitted.centroids)
+        }
+    };
+    let secs = tc.elapsed().as_secs_f64();
+    // Trivial clusterings (k <= 1, n <= k) never ran the backend; they
+    // cost nothing on the simulated clock.
+    let model_secs = if cluster_iters == 0 {
+        0.0
+    } else {
+        cluster_model_secs(use_minibatch, n, k_clusters, dim, cluster_iters, minibatch_batch)
+    };
+    FleetClusterOut { clusters, iters: cluster_iters, centroids, secs, model_secs }
 }
 
 /// Stateful refresh service: owns the summary store and the warm-start
@@ -515,60 +603,14 @@ impl FleetRefresher {
                 }
             }
         };
-        let tc = std::time::Instant::now();
-        let use_minibatch = self.opts.backend.use_minibatch(n);
-        let mut minibatch_batch = 0usize;
-        let (clusters, cluster_iters) = if k_clusters <= 1 || n <= k_clusters {
-            self.warm = None;
-            (vec![0; n], 0)
-        } else {
-            // Balance summary blocks first: the proposed summary concatenates
-            // a feature-mean block and a label-distribution block of very
-            // different scales (see cluster::balance_blocks).
-            let balanced = crate::cluster::balance_blocks(cluster_src, &summary.blocks());
-            // Quantized mode clusters the compressed codes: re-quantize the
-            // block-balanced matrix (per-block scaling breaks the stored
-            // per-row affine form, so balancing happens in f32 first) and
-            // run the integer-kernel backends.
-            if use_minibatch {
-                let mut cfg = MinibatchConfig::new(k_clusters);
-                cfg.seed = seed;
-                cfg.threads = threads;
-                cfg.pruning = self.opts.pruning;
-                if self.opts.minibatch_batch > 0 {
-                    cfg.batch = self.opts.minibatch_batch;
-                }
-                minibatch_batch = cfg.batch;
-                let fitted = if quant {
-                    let qpoints = QuantMat::from_mat(&balanced);
-                    minibatch::fit_warm_quant(&qpoints, &cfg, self.warm.as_ref())
-                } else {
-                    minibatch::fit_warm(&balanced, &cfg, self.warm.as_ref())
-                };
-                self.warm = Some(fitted.warm);
-                (fitted.result.assignments, fitted.result.iters)
-            } else {
-                self.warm = None;
-                let mut cfg = KmeansConfig::new(k_clusters);
-                cfg.seed = seed;
-                cfg.threads = threads;
-                cfg.pruning = self.opts.pruning;
-                let fitted = if quant {
-                    kmeans::fit_quantized(&QuantMat::from_mat(&balanced), &cfg)
-                } else {
-                    kmeans::fit(&balanced, &cfg)
-                };
-                (fitted.assignments, fitted.iters)
-            }
-        };
-        let cluster_secs = tc.elapsed().as_secs_f64();
-        // Trivial clusterings (k <= 1, n <= k) never ran the backend; they
-        // cost nothing on the simulated clock.
-        let cluster_model = if cluster_iters == 0 {
-            0.0
-        } else {
-            cluster_model_secs(use_minibatch, n, k_clusters, dim, cluster_iters, minibatch_batch)
-        };
+        let fit = cluster_fleet(&self.opts, &mut self.warm, cluster_src, summary, k_clusters, seed, threads);
+        let FleetClusterOut {
+            clusters,
+            iters: cluster_iters,
+            centroids,
+            secs: cluster_secs,
+            model_secs: cluster_model,
+        } = fit;
 
         // Compact only after every read through recorded slots is done
         // (compaction relocates rows). A fleet shrink or heavy invalidation
@@ -598,6 +640,7 @@ impl FleetRefresher {
         Ok(RefreshResult {
             summaries,
             clusters,
+            centroids,
             device_secs,
             host_secs,
             cluster_secs,
@@ -609,6 +652,309 @@ impl FleetRefresher {
             invalidated,
             evicted,
             store: store_stats,
+        })
+    }
+}
+
+/// Shard owning a client: contiguous id ranges, `client_id * shards /
+/// n_total`. Stable across rounds and cohorts — a client always lands in
+/// the same shard arena no matter which subset of the fleet shows up.
+pub fn shard_of(client_id: usize, n_total: usize, shards: usize) -> usize {
+    debug_assert!(n_total > 0 && shards > 0);
+    ((client_id * shards) / n_total).min(shards - 1)
+}
+
+/// Weighted-Lloyd iterations the root tier spends merging shard centroids.
+const MERGE_ITERS: usize = 5;
+
+/// Hierarchy-tier diagnostics from one sharded refresh. Everything here is
+/// *reported*, never charged to the simulated clock — shard count must not
+/// move the event stream.
+#[derive(Debug, Clone)]
+pub struct HierRefreshStats {
+    pub shards: usize,
+    /// Clients per shard this refresh (cohort split).
+    pub shard_sizes: Vec<usize>,
+    /// Local clustering iterations per shard (0 = trivial or empty shard).
+    pub local_iters: Vec<usize>,
+    /// Edge tier: max over shards of the local clustering cost model —
+    /// shards cluster in parallel, so the tier costs its slowest member.
+    pub edge_cluster_model_secs: f64,
+    /// Root tier: weighted centroid merge over ≤ S·k points — independent
+    /// of fleet size (the sub-linear coordinator claim).
+    pub root_merge_model_secs: f64,
+    /// FNV-1a over the merged (approximate) centroids + masses. Reruns of
+    /// the same sharding reproduce it bitwise; different shard counts
+    /// summarize the fleet differently, so it is *not* S-invariant — the
+    /// S-invariant merged clustering is [`RefreshResult::centroids`].
+    pub merged_centroid_digest: u64,
+    /// Resident summary-arena bytes per shard.
+    pub shard_store_bytes: Vec<usize>,
+}
+
+/// A sharded refresh: the merged result (bitwise identical to the flat
+/// refresher over the same fleet) plus hierarchy diagnostics.
+pub struct ShardedRefreshResult {
+    pub merged: RefreshResult,
+    pub hier: HierRefreshStats,
+}
+
+/// Sharded fleet refresher: `S` shards, each a full [`FleetRefresher`]
+/// owning its own `SummaryStore` arena over a contiguous client range and
+/// running local clustering on it, plus a root tier that (a) re-fits the
+/// concatenated shard matrices for the exact, shard-count-invariant merged
+/// clustering and (b) merges the shard-local centroid sets by weighted
+/// Lloyd for the O(S·k·dim) approximate path the hierarchy diagnostics
+/// report.
+///
+/// Determinism contract: with an unbounded store, every field of
+/// [`ShardedRefreshResult::merged`] is bitwise identical to the flat
+/// [`FleetRefresher`] over the same fleet, for any shard count — summary
+/// rows are pure functions of `(seed, client_id, phase)`, shard matrices
+/// concatenate in client-id order, the root fit runs the exact
+/// `cluster_fleet` code path the flat refresher runs, and
+/// `device_parallel_secs` is a max-fold (associative). A *bounded* store
+/// deviates: per-shard LRU evicts differently than one global LRU, so
+/// recompute sets (and modeled seconds) can differ from the flat path.
+pub struct ShardedFleetRefresher {
+    pub opts: RefreshOptions,
+    shards: Vec<FleetRefresher>,
+    n_total: usize,
+    root_warm: Option<WarmState>,
+    state_key: Option<(u64, usize)>,
+}
+
+impl ShardedFleetRefresher {
+    /// `n_total` is the full fleet size (the `shard_of` domain), not the
+    /// per-refresh cohort size. A bounded `store_capacity` is split evenly
+    /// (ceiling) across the shard arenas.
+    pub fn new(opts: RefreshOptions, shards: usize, n_total: usize) -> Self {
+        assert!(shards >= 1, "sharded refresher needs at least one shard");
+        assert!(n_total > 0, "sharded refresher needs a non-empty fleet");
+        let per_cap = if opts.store_capacity == 0 {
+            0
+        } else {
+            (opts.store_capacity + shards - 1) / shards
+        };
+        // Shards must emit their matrices — the root concatenates them.
+        let shard_opts =
+            RefreshOptions { emit_summaries: true, store_capacity: per_cap, ..opts.clone() };
+        ShardedFleetRefresher {
+            shards: (0..shards).map(|_| FleetRefresher::new(shard_opts.clone())).collect(),
+            n_total,
+            root_warm: None,
+            state_key: None,
+            opts,
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The summary store holding `client_id`'s row (its shard's arena).
+    pub fn store_for(&self, client_id: usize) -> Option<&SummaryStore> {
+        self.shards[shard_of(client_id, self.n_total, self.shards.len())].store()
+    }
+
+    /// Refresh a fleet (or an arrived cohort — any id-sorted subset of the
+    /// full fleet) through the shard tier, then merge at the root.
+    /// `fleet[i]` must be the device of `partition.clients[i]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn refresh(
+        &mut self,
+        engine: &Engine,
+        summary: &dyn SummaryEngine,
+        partition: &Partition,
+        generator: &Generator,
+        fleet: &[DeviceProfile],
+        drift: &DriftSchedule,
+        round: usize,
+        k_clusters: usize,
+        seed: u64,
+    ) -> Result<ShardedRefreshResult> {
+        let n = partition.clients.len();
+        let dim = summary.dim();
+        let s_count = self.shards.len();
+        if fleet.len() != n {
+            bail!("sharded refresh: fleet size {} != partition size {n}", fleet.len());
+        }
+        if self.state_key != Some((seed, dim)) {
+            self.root_warm = None;
+            self.state_key = Some((seed, dim));
+        }
+        let threads = if self.opts.threads == 0 { default_threads() } else { self.opts.threads };
+
+        // Split the id-sorted partition into contiguous shard runs; the
+        // global `shard_of` mapping keeps every client on the same arena
+        // whichever cohort it arrives in.
+        let mut bounds = Vec::with_capacity(s_count);
+        let mut start = 0usize;
+        for s in 0..s_count {
+            let mut end = start;
+            while end < n
+                && shard_of(partition.clients[end].client_id, self.n_total, s_count) == s
+            {
+                end += 1;
+            }
+            bounds.push((start, end));
+            start = end;
+        }
+        if start != n {
+            bail!("sharded refresh: partition clients must be sorted by client_id");
+        }
+
+        let mut results: Vec<Option<RefreshResult>> = Vec::with_capacity(s_count);
+        for (s, &(lo, hi)) in bounds.iter().enumerate() {
+            if lo == hi {
+                results.push(None); // no cohort members on this shard
+                continue;
+            }
+            let sub = Partition {
+                clients: partition.clients[lo..hi].to_vec(),
+                group_priors: partition.group_priors.clone(),
+            };
+            let r = self.shards[s].refresh(
+                engine,
+                summary,
+                &sub,
+                generator,
+                &fleet[lo..hi],
+                drift,
+                round,
+                k_clusters,
+                seed,
+            )?;
+            results.push(Some(r));
+        }
+
+        // Root merge, fixed shard order. Concatenating the shard matrices
+        // in shard order *is* client-id order, so the root fit sees exactly
+        // the matrix the flat refresher clusters.
+        let mut global = Mat::zeros(0, dim);
+        global.reserve_rows(n);
+        let mut device_secs = Vec::with_capacity(n);
+        let mut recomputed = Vec::new();
+        let mut invalidated = 0usize;
+        let mut evicted = 0u64;
+        let mut host_secs = 0.0f64;
+        let mut device_parallel = 0.0f64;
+        let mut store = StoreStats {
+            capacity: self.opts.store_capacity,
+            quantized: self.opts.store_quantized,
+            ..Default::default()
+        };
+        let mut shard_sizes = Vec::with_capacity(s_count);
+        let mut local_iters = Vec::with_capacity(s_count);
+        let mut shard_store_bytes = Vec::with_capacity(s_count);
+        let mut edge_cluster_model_secs = 0.0f64;
+        let mut locals: Vec<(Mat, Vec<u64>)> = Vec::new();
+        for (s, result) in results.into_iter().enumerate() {
+            let (lo, hi) = bounds[s];
+            shard_sizes.push(hi - lo);
+            let Some(r) = result else {
+                local_iters.push(0);
+                shard_store_bytes.push(0);
+                continue;
+            };
+            for i in 0..r.summaries.rows() {
+                global.push_row(r.summaries.row(i));
+            }
+            device_secs.extend_from_slice(&r.device_secs);
+            recomputed.extend(r.recomputed.iter().map(|&i| lo + i));
+            invalidated += r.invalidated;
+            evicted += r.evicted;
+            host_secs += r.host_secs;
+            device_parallel = device_parallel.max(r.device_parallel_secs);
+            store.rows += r.store.rows;
+            store.allocated += r.store.allocated;
+            store.bytes += r.store.bytes;
+            store.param_bytes += r.store.param_bytes;
+            store.hits += r.store.hits;
+            store.misses += r.store.misses;
+            store.evictions += r.store.evictions;
+            store.compactions += r.store.compactions;
+            local_iters.push(r.cluster_iters);
+            edge_cluster_model_secs = edge_cluster_model_secs.max(r.cluster_model_secs);
+            shard_store_bytes.push(r.store.bytes);
+            if r.centroids.rows() > 0 {
+                let mut counts = vec![0u64; r.centroids.rows()];
+                for &c in &r.clusters {
+                    counts[c] += 1;
+                }
+                locals.push((r.centroids, counts));
+            }
+        }
+
+        // Exact merged clustering: the same code path the flat refresher
+        // runs, over the same rows, with the root's own warm state.
+        let fit = cluster_fleet(
+            &self.opts,
+            &mut self.root_warm,
+            &global,
+            summary,
+            k_clusters,
+            seed,
+            threads,
+        );
+
+        // Approximate merged clustering: weighted Lloyd over ≤ S·k local
+        // centroids — the O(S·k·dim) root the hierarchy diagnostics price.
+        let merge_sets: Vec<(&Mat, &[u64])> =
+            locals.iter().map(|(m, c)| (m, c.as_slice())).collect();
+        let (merged_c, merged_mass) =
+            kmeans::merge_weighted_centroids(&merge_sets, k_clusters, MERGE_ITERS);
+        let merge_points: usize = merge_sets.iter().map(|(m, _)| m.rows()).sum();
+        let root_merge_model_secs = if merge_points == 0 {
+            0.0
+        } else {
+            cluster_model_secs(false, merge_points, k_clusters.max(1), dim, MERGE_ITERS, 0)
+        };
+        let mut digest = 0xcbf2_9ce4_8422_2325u64;
+        let mut fnv = |b: u8| {
+            digest ^= b as u64;
+            digest = digest.wrapping_mul(0x0000_0100_0000_01b3);
+        };
+        for v in merged_c.data() {
+            for b in v.to_bits().to_le_bytes() {
+                fnv(b);
+            }
+        }
+        for m in &merged_mass {
+            for b in m.to_le_bytes() {
+                fnv(b);
+            }
+        }
+
+        let hier = HierRefreshStats {
+            shards: s_count,
+            shard_sizes,
+            local_iters,
+            edge_cluster_model_secs,
+            root_merge_model_secs,
+            merged_centroid_digest: digest,
+            shard_store_bytes,
+        };
+        let summaries =
+            if self.opts.emit_summaries { global } else { Mat::zeros(0, dim) };
+        Ok(ShardedRefreshResult {
+            merged: RefreshResult {
+                summaries,
+                clusters: fit.clusters,
+                centroids: fit.centroids,
+                device_secs,
+                host_secs,
+                cluster_secs: fit.secs,
+                cluster_iters: fit.iters,
+                cluster_model_secs: fit.model_secs,
+                device_parallel_secs: device_parallel,
+                sim_secs: device_parallel + fit.secs,
+                recomputed,
+                invalidated,
+                evicted,
+                store,
+            },
+            hier,
         })
     }
 }
@@ -963,5 +1309,143 @@ mod tests {
             .refresh(&eng, &jl, &part, &gen, &fleet, &none, 1, spec.n_groups, 3)
             .unwrap();
         assert_eq!(r.recomputed.len(), spec.n_clients);
+    }
+
+    #[test]
+    fn sharded_refresh_is_bitwise_identical_to_flat() {
+        // The tentpole determinism contract: with unbounded stores, shard
+        // count is invisible in the merged result — 1, 4, and 16 shards all
+        // reproduce the flat refresher bit for bit, across cached rounds and
+        // a drift boundary (store + warm state carried per tier).
+        let (eng, spec, part, gen, fleet) = setup_native();
+        let jl = JlSummary::new(&spec);
+        let drift = DriftSchedule::at(vec![3], 1.0);
+        let seed = 11;
+        let mut flat = FleetRefresher::new(RefreshOptions::default());
+        let mut sharded: Vec<ShardedFleetRefresher> = [1usize, 4, 16]
+            .iter()
+            .map(|&s| ShardedFleetRefresher::new(RefreshOptions::default(), s, spec.n_clients))
+            .collect();
+        for round in [0usize, 1, 5] {
+            let want = flat
+                .refresh(&eng, &jl, &part, &gen, &fleet, &drift, round, spec.n_groups, seed)
+                .unwrap();
+            for r in sharded.iter_mut() {
+                let tag = format!("shards={} round={round}", r.shard_count());
+                let got = r
+                    .refresh(&eng, &jl, &part, &gen, &fleet, &drift, round, spec.n_groups, seed)
+                    .unwrap();
+                let m = got.merged;
+                assert_eq!(m.summaries, want.summaries, "{tag}");
+                assert_eq!(m.clusters, want.clusters, "{tag}");
+                assert_eq!(m.centroids, want.centroids, "{tag}");
+                assert_eq!(m.recomputed, want.recomputed, "{tag}");
+                assert_eq!(m.invalidated, want.invalidated, "{tag}");
+                assert_eq!(m.evicted, want.evicted, "{tag}");
+                assert_eq!(m.cluster_iters, want.cluster_iters, "{tag}");
+                assert_eq!(
+                    m.cluster_model_secs.to_bits(),
+                    want.cluster_model_secs.to_bits(),
+                    "{tag}"
+                );
+                assert_eq!(
+                    m.device_parallel_secs.to_bits(),
+                    want.device_parallel_secs.to_bits(),
+                    "{tag}"
+                );
+                assert_eq!(m.device_secs.len(), want.device_secs.len(), "{tag}");
+                for (a, b) in m.device_secs.iter().zip(&want.device_secs) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{tag}");
+                }
+                // Shard arenas jointly hold exactly the flat store's rows.
+                assert_eq!(m.store.rows, want.store.rows, "{tag}");
+                assert_eq!(m.store.bytes, want.store.bytes, "{tag}");
+                // Hierarchy diagnostics stay consistent with the split.
+                assert_eq!(got.hier.shards, r.shard_count(), "{tag}");
+                assert_eq!(got.hier.shard_sizes.iter().sum::<usize>(), spec.n_clients, "{tag}");
+                assert_eq!(got.hier.local_iters.len(), r.shard_count(), "{tag}");
+                assert_eq!(got.hier.shard_store_bytes.len(), r.shard_count(), "{tag}");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_refresh_matches_flat_on_arrived_cohorts() {
+        // Lazy arrivals hand the refresher an id-sorted cohort, not the
+        // full fleet. The shard split must route each client to its stable
+        // shard and still merge to exactly the flat result over that cohort.
+        let (eng, spec, part, gen, fleet) = setup_native();
+        let jl = JlSummary::new(&spec);
+        let none = DriftSchedule::none();
+        let seed = 4;
+        let pick: Vec<usize> = (0..spec.n_clients).filter(|i| i % 3 != 1).collect();
+        let sub = Partition {
+            clients: pick.iter().map(|&i| part.clients[i].clone()).collect(),
+            group_priors: part.group_priors.clone(),
+        };
+        let sub_fleet: Vec<DeviceProfile> = pick.iter().map(|&i| fleet[i].clone()).collect();
+        let mut flat = FleetRefresher::new(RefreshOptions::default());
+        let mut shard4 = ShardedFleetRefresher::new(RefreshOptions::default(), 4, spec.n_clients);
+        let want = flat
+            .refresh(&eng, &jl, &sub, &gen, &sub_fleet, &none, 0, spec.n_groups, seed)
+            .unwrap();
+        let got = shard4
+            .refresh(&eng, &jl, &sub, &gen, &sub_fleet, &none, 0, spec.n_groups, seed)
+            .unwrap();
+        assert_eq!(got.merged.summaries, want.summaries);
+        assert_eq!(got.merged.clusters, want.clusters);
+        assert_eq!(got.merged.centroids, want.centroids);
+        assert_eq!(got.merged.recomputed, want.recomputed);
+        assert_eq!(got.hier.shard_sizes.iter().sum::<usize>(), pick.len());
+        // Every cohort member's row is resident in its own shard's arena.
+        for &cid in &pick {
+            let store = shard4.store_for(cid).expect("shard store exists after refresh");
+            assert!(store.len() > 0);
+        }
+        let resident: usize =
+            shard4.shards.iter().map(|s| s.store().map_or(0, |st| st.len())).sum();
+        assert_eq!(resident, pick.len());
+    }
+
+    #[test]
+    fn shard_routing_is_stable_and_hier_diagnostics_reproduce() {
+        // shard_of is contiguous, monotone in client id, covers every shard
+        // when n >= shards, and stays in range even for degenerate inputs.
+        assert_eq!(shard_of(0, 1000, 4), 0);
+        assert_eq!(shard_of(999, 1000, 4), 3);
+        for cid in 1..1000 {
+            assert!(shard_of(cid, 1000, 4) >= shard_of(cid - 1, 1000, 4));
+        }
+        let mut counts = vec![0usize; 8];
+        for cid in 0..24 {
+            counts[shard_of(cid, 24, 8)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 0), "some shard got no clients: {counts:?}");
+        assert_eq!(shard_of(5, 6, 8), 6); // more shards than clients: clamped in range
+
+        // Hierarchy diagnostics reproduce bitwise across fresh runs.
+        let (eng, spec, part, gen, fleet) = setup_native();
+        let jl = JlSummary::new(&spec);
+        let none = DriftSchedule::none();
+        let run = || {
+            ShardedFleetRefresher::new(RefreshOptions::default(), 4, spec.n_clients)
+                .refresh(&eng, &jl, &part, &gen, &fleet, &none, 0, spec.n_groups, 11)
+                .unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.hier.merged_centroid_digest, b.hier.merged_centroid_digest);
+        assert!(a.hier.edge_cluster_model_secs > 0.0);
+        assert!(a.hier.root_merge_model_secs > 0.0);
+        assert_eq!(
+            a.hier.root_merge_model_secs.to_bits(),
+            b.hier.root_merge_model_secs.to_bits()
+        );
+        // The root tier prices O(shards · k) points — independent of fleet
+        // size, which is the hierarchical scaling claim: merging the shard
+        // centroids costs less than running the same Lloyd rounds over the
+        // whole fleet.
+        let full = cluster_model_secs(false, spec.n_clients, spec.n_groups, jl.dim(), 5, 0);
+        assert!(a.hier.root_merge_model_secs < full);
     }
 }

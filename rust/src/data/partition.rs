@@ -50,6 +50,17 @@ impl Partition {
     /// phase p permutes each group's prior with a phase-dependent
     /// permutation (non-stationary labels, paper §2.1).
     pub fn build_phase(spec: &DatasetSpec, phase: u64) -> Self {
+        let group_priors = Self::phase_priors(spec, phase);
+        let clients = (0..spec.n_clients)
+            .map(|cid| Self::client_at(spec, &group_priors, cid))
+            .collect();
+        Partition { clients, group_priors }
+    }
+
+    /// Group label priors at a drift phase — the fleet-independent half of
+    /// `build_phase`, split out so lazy arrival sampling can synthesize
+    /// single clients without building the whole fleet.
+    pub fn phase_priors(spec: &DatasetSpec, phase: u64) -> Vec<Vec<f64>> {
         let mut group_priors = Vec::with_capacity(spec.n_groups);
         for g in 0..spec.n_groups {
             let mut rng = Rng::substream(spec.seed, &[0xA11CE, g as u64]);
@@ -63,34 +74,39 @@ impl Partition {
             }
             group_priors.push(prior);
         }
+        group_priors
+    }
 
+    /// Synthesize one client's partition record on demand. Bitwise identical
+    /// to `build_phase(spec, phase).clients[client_id]` when `priors` came
+    /// from [`Partition::phase_priors`] at the same phase — every client
+    /// draws from its own `(seed, 0xC11E57, client_id)` substream, so the
+    /// rest of the fleet never needs to exist.
+    pub fn client_at(
+        spec: &DatasetSpec,
+        priors: &[Vec<f64>],
+        client_id: usize,
+    ) -> ClientPartition {
         let (mu, sigma) = spec.lognormal_params();
-        let clients = (0..spec.n_clients)
-            .map(|cid| {
-                let mut rng = Rng::substream(spec.seed, &[0xC11E57, cid as u64]);
-                let group = rng.below(spec.n_groups as u64) as usize;
-                // Client label dist = group prior mixed with client jitter.
-                let jitter = rng.dirichlet(1.0, spec.classes);
-                let w = 0.8; // group weight: clients mostly follow their group
-                let mut label_dist: Vec<f64> = group_priors[group]
-                    .iter()
-                    .zip(&jitter)
-                    .map(|(&p, &j)| w * p + (1.0 - w) * j)
-                    .collect();
-                let s: f64 = label_dist.iter().sum();
-                for v in &mut label_dist {
-                    *v /= s;
-                }
-                let n = rng
-                    .lognormal(mu, sigma)
-                    .round()
-                    .clamp(spec.samples_min as f64, spec.samples_max as f64)
-                    as usize;
-                ClientPartition { client_id: cid, group, label_dist, n_samples: n }
-            })
+        let mut rng = Rng::substream(spec.seed, &[0xC11E57, client_id as u64]);
+        let group = rng.below(spec.n_groups as u64) as usize;
+        // Client label dist = group prior mixed with client jitter.
+        let jitter = rng.dirichlet(1.0, spec.classes);
+        let w = 0.8; // group weight: clients mostly follow their group
+        let mut label_dist: Vec<f64> = priors[group]
+            .iter()
+            .zip(&jitter)
+            .map(|(&p, &j)| w * p + (1.0 - w) * j)
             .collect();
-
-        Partition { clients, group_priors }
+        let s: f64 = label_dist.iter().sum();
+        for v in &mut label_dist {
+            *v /= s;
+        }
+        let n = rng
+            .lognormal(mu, sigma)
+            .round()
+            .clamp(spec.samples_min as f64, spec.samples_max as f64) as usize;
+        ClientPartition { client_id, group, label_dist, n_samples: n }
     }
 
     pub fn group_truth(&self) -> Vec<usize> {
@@ -220,6 +236,28 @@ mod tests {
             let want = c.label_dist[cls];
             let got = cnt as f64 / n as f64;
             assert!((got - want).abs() < 0.02, "class {cls}: got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn on_demand_client_matches_the_eager_build() {
+        // The lazy-arrival contract: synthesizing one client on demand
+        // yields the same bits as slicing it out of the eager partition.
+        let spec = small_spec();
+        for phase in [0u64, 2] {
+            let eager = Partition::build_phase(&spec, phase);
+            let priors = Partition::phase_priors(&spec, phase);
+            assert_eq!(priors, eager.group_priors);
+            for cid in [0usize, 1, 57, 399] {
+                let solo = Partition::client_at(&spec, &priors, cid);
+                let want = &eager.clients[cid];
+                assert_eq!(solo.client_id, want.client_id);
+                assert_eq!(solo.group, want.group);
+                assert_eq!(solo.n_samples, want.n_samples);
+                for (a, b) in solo.label_dist.iter().zip(&want.label_dist) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "client {cid}");
+                }
+            }
         }
     }
 

@@ -64,21 +64,26 @@ impl FleetModel {
     /// historical per-device streams bitwise so existing fixtures and cached
     /// summaries stay valid.
     pub fn sample_fleet_at(&self, n: usize, round0_phase: u64) -> Vec<DeviceProfile> {
-        (0..n)
-            .map(|id| {
-                let mut rng = if round0_phase == 0 {
-                    Rng::substream(self.seed, &[id as u64])
-                } else {
-                    Rng::substream(self.seed, &[id as u64, round0_phase])
-                };
-                DeviceProfile {
-                    device_id: id,
-                    compute_factor: rng.lognormal(self.compute_mu, self.compute_sigma).clamp(1.0, 60.0),
-                    bandwidth_mbps: rng.lognormal(self.bw_mu, self.bw_sigma).clamp(0.1, 100.0),
-                    availability: rng.range_f64(self.avail_lo, self.avail_hi),
-                }
-            })
-            .collect()
+        (0..n).map(|id| self.sample_device_at(id, round0_phase)).collect()
+    }
+
+    /// Sample one device's profile without materializing the rest of the
+    /// fleet — bitwise identical to `sample_fleet_at(n, round0_phase)[id]`
+    /// because each device draws from its own `(seed, id[, phase])`
+    /// substream. Lazy arrival sampling synthesizes only the devices that
+    /// actually show up in a round through this.
+    pub fn sample_device_at(&self, id: usize, round0_phase: u64) -> DeviceProfile {
+        let mut rng = if round0_phase == 0 {
+            Rng::substream(self.seed, &[id as u64])
+        } else {
+            Rng::substream(self.seed, &[id as u64, round0_phase])
+        };
+        DeviceProfile {
+            device_id: id,
+            compute_factor: rng.lognormal(self.compute_mu, self.compute_sigma).clamp(1.0, 60.0),
+            bandwidth_mbps: rng.lognormal(self.bw_mu, self.bw_sigma).clamp(0.1, 100.0),
+            availability: rng.range_f64(self.avail_lo, self.avail_hi),
+        }
     }
 }
 
@@ -140,6 +145,23 @@ mod tests {
         for d in &shifted {
             assert!(d.compute_factor >= 1.0 && d.compute_factor <= 60.0);
             assert!((0.0..=1.0).contains(&d.availability));
+        }
+    }
+
+    #[test]
+    fn single_device_sampling_matches_the_fleet() {
+        // The lazy-arrival contract: synthesizing one device on demand
+        // yields the same bits as slicing it out of the eager fleet.
+        let m = FleetModel::default();
+        for phase in [0u64, 3] {
+            let fleet = m.sample_fleet_at(40, phase);
+            for (id, dev) in fleet.iter().enumerate() {
+                let solo = m.sample_device_at(id, phase);
+                assert_eq!(solo.device_id, dev.device_id);
+                assert_eq!(solo.compute_factor.to_bits(), dev.compute_factor.to_bits());
+                assert_eq!(solo.bandwidth_mbps.to_bits(), dev.bandwidth_mbps.to_bits());
+                assert_eq!(solo.availability.to_bits(), dev.availability.to_bits());
+            }
         }
     }
 

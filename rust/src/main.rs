@@ -22,7 +22,7 @@ use feddde::data::{DatasetSpec, DriftSchedule, Generator, Partition};
 use feddde::device::FleetModel;
 use feddde::runtime::Engine;
 use feddde::selection::STRATEGY_NAMES;
-use feddde::sim::{bench_json, run_with_recovery, Scenario, Simulator};
+use feddde::sim::{run_with_recovery, write_bench_json, Scenario, Simulator};
 use feddde::summary::SummaryEngine as _;
 use feddde::util::cli::{CommandSpec, FlagSpec, Parsed};
 use feddde::util::stats;
@@ -97,6 +97,8 @@ const RUN_SIM: CommandSpec = CommandSpec {
         FlagSpec::arg("refresh-every", "N", "re-summarize + recluster every N rounds"),
         FlagSpec::arg("threads", "N", "refresh worker threads (never changes results)"),
         FlagSpec::arg("store-quantized", "BOOL", "int8-quantize store rows (4x smaller, ~exact)"),
+        FlagSpec::arg("shards", "S", "coordinator shards (1 = flat; results identical for any S)"),
+        FlagSpec::arg("lazy-arrivals", "BOOL", "sample arrivals lazily; materialize active clients only"),
         FlagSpec::arg("step-secs", "F", "modeled host seconds per local step"),
         FlagSpec::arg("update-bytes", "B", "model-update upload bytes per client"),
         FlagSpec::arg("seed", "N", "run seed"),
@@ -111,6 +113,9 @@ const RUN_SIM: CommandSpec = CommandSpec {
         FlagSpec::arg("out-dir", "DIR", "per-scenario JSONL reports + journals"),
         FlagSpec::arg("bench-json", "PATH", "aggregate BENCH_sim.json artifact"),
         FlagSpec::arg("chaos-json", "PATH", "aggregate BENCH_chaos.json artifact (fault counters)"),
+        FlagSpec::arg("scale", "N1,N2", "scale sweep over fleet sizes (lazy arrivals forced on)"),
+        FlagSpec::arg("scale-shards", "S1,S2", "shard counts swept per fleet size (default 1,8)"),
+        FlagSpec::arg("scale-json", "PATH", "aggregate BENCH_scale.json artifact"),
     ],
 };
 
@@ -177,6 +182,8 @@ fn sim_cfg_from_flags(p: &Parsed) -> Result<SimConfig> {
     p.set("refresh-every", &mut cfg.refresh_every)?;
     p.set("threads", &mut cfg.threads)?;
     p.set("store-quantized", &mut cfg.store_quantized)?;
+    p.set("shards", &mut cfg.shards)?;
+    p.set("lazy-arrivals", &mut cfg.lazy_arrivals)?;
     p.set("step-secs", &mut cfg.train_step_host_secs)?;
     p.set("update-bytes", &mut cfg.update_bytes)?;
     p.set("seed", &mut cfg.seed)?;
@@ -200,6 +207,9 @@ fn cmd_run_sim(p: Parsed) -> Result<()> {
         return Ok(());
     }
     let cfg = sim_cfg_from_flags(&p)?;
+    if let Some(sizes) = p.get("scale") {
+        return run_scale_sweep(&p, cfg, sizes);
+    }
     let names: Vec<String> = if cfg.scenario == "all" {
         Scenario::NAMES.iter().map(|s| s.to_string()).collect()
     } else {
@@ -300,15 +310,70 @@ fn cmd_run_sim(p: Parsed) -> Result<()> {
     Ok(())
 }
 
-/// Write one `{"runs": [...]}` aggregate (BENCH_sim.json / BENCH_chaos.json),
-/// creating the parent directory when needed.
+/// The scale sweep behind `make scale-smoke`: run the configured scenario at
+/// each fleet size × shard count with lazy arrival sampling forced on, and
+/// emit one `BENCH_scale.json` row per run (coordinator seconds per round,
+/// refresh hierarchy split, peak store bytes) so coordinator overhead can be
+/// read off against fleet size.
+fn run_scale_sweep(p: &Parsed, cfg: SimConfig, sizes: &str) -> Result<()> {
+    fn parse_list(s: &str, what: &str) -> Result<Vec<usize>> {
+        s.split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<usize>()
+                    .with_context(|| format!("bad {what} entry {t:?}"))
+            })
+            .collect()
+    }
+    let sizes = parse_list(sizes, "--scale")?;
+    let shard_counts = parse_list(p.get("scale-shards").unwrap_or("1,8"), "--scale-shards")?;
+    let name = cfg.scenario.split(',').next().unwrap_or("sync_baseline").trim();
+    let sc = Scenario::by_name(name)
+        .with_context(|| format!("unknown scenario {name:?} (try --list-scenarios)"))?;
+    if sc.crash.is_some() {
+        bail!("scale sweep does not support crash scenarios (got {name:?})");
+    }
+    let mut entries = Vec::new();
+    for &n in &sizes {
+        for &shards in &shard_counts {
+            let run_cfg = SimConfig {
+                n_clients: n,
+                shards,
+                lazy_arrivals: true,
+                ..cfg.clone()
+            };
+            let t0 = std::time::Instant::now();
+            let rep = Simulator::new(run_cfg, sc.clone())?.run()?;
+            let host = t0.elapsed().as_secs_f64();
+            let t = rep.totals();
+            println!(
+                "scale n {:>9} shards {:>3}  host {:>8.2}s  coord/round {:>9.4}s  \
+                 peak store {:>12} B  coverage {:.4}",
+                n,
+                shards,
+                host,
+                (t.refresh_secs + t.selection_secs) / rep.rounds.len().max(1) as f64,
+                rep.peak_store_bytes,
+                t.coverage,
+            );
+            entries.push(rep.scale_entry_json(shards, true, host));
+        }
+    }
+    let path = p.get("scale-json").unwrap_or("results/BENCH_scale.json");
+    write_bench_artifact(path, &entries)
+}
+
+/// Write one `{"runs": [...]}` aggregate (BENCH_sim.json / BENCH_chaos.json /
+/// BENCH_scale.json), creating the parent directory when needed. I/O errors
+/// surface as typed [`feddde::sim::ReportError`]s quoting the path.
 fn write_bench_artifact(path: &str, entries: &[String]) -> Result<()> {
     if let Some(dir) = std::path::Path::new(path).parent() {
         if !dir.as_os_str().is_empty() {
-            std::fs::create_dir_all(dir)?;
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating artifact directory for {path:?}"))?;
         }
     }
-    std::fs::write(path, bench_json(entries))?;
+    write_bench_json(path, entries)?;
     println!("wrote {path}");
     Ok(())
 }

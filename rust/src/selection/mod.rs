@@ -181,6 +181,37 @@ pub fn validate_selection(sel: &[usize], clients: &[ClientView<'_>], k: usize) -
     true
 }
 
+/// Committee selection for the sharded coordinator tier: pick one edge
+/// aggregator per shard for `round` by seeded FNV-1a hashing over
+/// `(seed, round, shard)`, mapped into the shard's contiguous id range
+/// (the same ranges [`shard_of`](crate::coordinator::summaries::shard_of)
+/// routes by). Pure hashing — no RNG substream is consumed, so wiring the
+/// committee into a run cannot perturb any seeded draw. Empty shards
+/// (possible when `shards` approaches `n_total`) are skipped, so the
+/// returned committee may be shorter than `shards`; each entry is a client
+/// id inside its shard's range, rotating round over round.
+pub fn pick_aggregators(seed: u64, round: usize, n_total: usize, shards: usize) -> Vec<usize> {
+    let shards = shards.max(1);
+    let mut committee = Vec::with_capacity(shards);
+    for s in 0..shards {
+        // ceil(s·n/S) .. ceil((s+1)·n/S): the shard_of preimage of s.
+        let lo = (s * n_total).div_ceil(shards);
+        let hi = ((s + 1) * n_total).div_ceil(shards);
+        if lo >= hi {
+            continue;
+        }
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for word in [seed, round as u64, s as u64] {
+            for b in word.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        committee.push(lo + (h % (hi - lo) as u64) as usize);
+    }
+    committee
+}
+
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
@@ -321,6 +352,44 @@ mod tests {
             let p = Builder::new(name).local_steps(2).build().unwrap();
             assert_eq!(p.name(), name, "registry name and policy name diverged");
         }
+    }
+
+    #[test]
+    fn aggregator_committee_is_deterministic_in_shard_and_rotating() {
+        use crate::coordinator::summaries::shard_of;
+        let (n, shards) = (1000, 8);
+        let a = pick_aggregators(7, 3, n, shards);
+        let b = pick_aggregators(7, 3, n, shards);
+        assert_eq!(a, b, "same (seed, round) must elect the same committee");
+        assert_eq!(a.len(), shards);
+        for (s, &cid) in a.iter().enumerate() {
+            assert!(cid < n);
+            assert_eq!(shard_of(cid, n, shards), s, "aggregator left its shard");
+        }
+        // The seeded hash rotates the role across rounds: over a handful of
+        // rounds at least one shard must elect more than one distinct client.
+        let mut distinct = std::collections::HashSet::new();
+        for round in 0..8 {
+            distinct.insert(pick_aggregators(7, round, n, shards)[0]);
+        }
+        assert!(distinct.len() >= 2, "shard 0's aggregator never rotated");
+        // Different seeds elect different committees (overwhelmingly).
+        assert_ne!(pick_aggregators(7, 3, n, shards), pick_aggregators(8, 3, n, shards));
+    }
+
+    #[test]
+    fn aggregator_committee_skips_empty_shards() {
+        // More shards than clients: every non-empty shard still elects one
+        // in-range aggregator; empty shards contribute nothing.
+        use crate::coordinator::summaries::shard_of;
+        let committee = pick_aggregators(11, 0, 6, 8);
+        assert_eq!(committee.len(), 6, "6 clients fill exactly 6 of 8 shards");
+        for &cid in &committee {
+            assert!(cid < 6);
+        }
+        let shards_hit: std::collections::HashSet<_> =
+            committee.iter().map(|&c| shard_of(c, 6, 8)).collect();
+        assert_eq!(shards_hit.len(), 6, "one aggregator per non-empty shard");
     }
 
     #[test]

@@ -50,25 +50,31 @@
 //! `make replay-smoke` run through.
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashSet};
+use std::collections::{BinaryHeap, HashMap, HashSet};
 
 use anyhow::{bail, Context, Result};
 
 use crate::config::SimConfig;
-use crate::coordinator::fedavg::{fedavg, staleness_weight};
+use crate::coordinator::fedavg::{
+    fedavg, fedavg_merge, fedavg_partial, hier_agg_model_secs, staleness_weight, AggPartial,
+};
 use crate::coordinator::health::ClientHealth;
 use crate::coordinator::journal::{
     CoordinatorMachine, EventJournal, JournalHeader, Transition,
 };
-use crate::coordinator::summaries::{FleetRefresher, RefreshOptions};
+use crate::coordinator::store::SummaryStore;
+use crate::coordinator::summaries::{
+    shard_of, FleetRefresher, HierRefreshStats, RefreshOptions, RefreshResult,
+    ShardedFleetRefresher,
+};
 use crate::sim::fault::{Corruption, FaultPlan};
 use crate::data::generator::Generator;
-use crate::data::partition::Partition;
+use crate::data::partition::{ClientPartition, Partition};
 use crate::data::spec::DatasetSpec;
 use crate::device::{DeviceProfile, FleetModel};
 use crate::runtime::Engine;
 use crate::selection::{self, ClientView, SelectionPolicy};
-use crate::sim::report::{RoundReport, SimEventRecord, SimReport};
+use crate::sim::report::{HierRoundStats, RoundReport, SimEventRecord, SimReport};
 use crate::sim::scenario::{Aggregation, CrashPoint, Scenario};
 use crate::summary::SummaryEngine;
 use crate::util::rng::Rng;
@@ -267,6 +273,91 @@ struct Launched {
     done_t: f64,
 }
 
+/// The coordinator's summary tier: one flat store (the pre-shard layout,
+/// and still the default) or `S` shard-local stores merged at the root.
+/// Both produce bit-identical merged refresh results on unbounded stores;
+/// the sharded tier additionally reports hierarchy diagnostics.
+enum Refresher {
+    Flat(FleetRefresher),
+    Sharded(ShardedFleetRefresher),
+}
+
+impl Refresher {
+    #[allow(clippy::too_many_arguments)]
+    fn refresh(
+        &mut self,
+        engine: &Engine,
+        summary: &dyn SummaryEngine,
+        partition: &Partition,
+        generator: &Generator,
+        fleet: &[DeviceProfile],
+        drift: &crate::data::drift::DriftSchedule,
+        round: usize,
+        k_clusters: usize,
+        seed: u64,
+    ) -> Result<(RefreshResult, Option<HierRefreshStats>)> {
+        match self {
+            Refresher::Flat(f) => Ok((
+                f.refresh(engine, summary, partition, generator, fleet, drift, round, k_clusters, seed)?,
+                None,
+            )),
+            Refresher::Sharded(s) => {
+                let r = s.refresh(engine, summary, partition, generator, fleet, drift, round, k_clusters, seed)?;
+                Ok((r.merged, Some(r.hier)))
+            }
+        }
+    }
+
+    /// The store holding `client_id`'s summary row (its shard's arena).
+    fn store_for(&self, client_id: usize) -> Option<&SummaryStore> {
+        match self {
+            Refresher::Flat(f) => f.store(),
+            Refresher::Sharded(s) => s.store_for(client_id),
+        }
+    }
+}
+
+/// Everything `finish_round` needs about a selected client, detached from
+/// the borrow of the per-round view list — the eager path copies these out
+/// of its full-fleet views, the lazy path out of its arrived-cohort views.
+/// The copied fields feed the exact expressions the pre-split code computed
+/// from `views[cid]` / `self.fleet[cid]`, so the event stream is unchanged.
+struct SelectedClient {
+    cid: usize,
+    n_samples: usize,
+    /// `expected_round_secs` at selection time (deadline percentile input).
+    expected: f64,
+    device: DeviceProfile,
+}
+
+/// The per-round context the selection prologue hands to `finish_round`.
+struct RoundCtx {
+    n: usize,
+    round: usize,
+    t_start: f64,
+    faults_on: bool,
+    quarantines_before: u64,
+    refresh_secs: f64,
+    refresh_recomputed: usize,
+    summary_rejects: u64,
+    selection_secs: f64,
+    t_sel: f64,
+    hier_refresh: Option<HierRefreshStats>,
+}
+
+/// FNV-1a-64 over the little-endian f32 bit patterns — the parameter-vector
+/// digest quoted in the hier block (same constants as the journal digest).
+fn fnv1a64_f32(values: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in values {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
 /// The discrete-event fleet simulator. Build with [`Simulator::new`], run
 /// with [`Simulator::run`]; the returned [`SimReport`] carries per-round
 /// wall-clock breakdowns plus the full popped-event stream (the determinism
@@ -277,14 +368,26 @@ pub struct Simulator {
     spec: DatasetSpec,
     partition: Partition,
     generator: Generator,
+    /// The eagerly provisioned fleet. EMPTY under `lazy_arrivals`: devices
+    /// are re-derived per round for arrived clients only (each device is a
+    /// pure function of `(fleet seed, client_id, provision phase)`, so the
+    /// lazy re-derivation is bitwise the eager profile).
     fleet: Vec<DeviceProfile>,
+    /// The device distribution the fleet was (or would be) provisioned from.
+    fleet_model: FleetModel,
     engine: Engine,
     summary: Box<dyn SummaryEngine>,
-    refresher: FleetRefresher,
+    refresher: Refresher,
     policy: Box<dyn SelectionPolicy>,
+    /// Latest full-fleet cluster assignment (eager refresh path).
     clusters: Vec<usize>,
-    last_loss: Vec<Option<f64>>,
-    completed_ever: Vec<bool>,
+    /// Latest arrived-cohort cluster assignment by client id (lazy path).
+    lazy_clusters: HashMap<usize, usize>,
+    /// Most recent observed loss by client id. Sparse so memory tracks
+    /// clients that ever completed, not the nominal fleet size.
+    last_loss: HashMap<usize, f64>,
+    /// Client ids that ever completed a round (coverage numerator).
+    completed_ever: HashSet<usize>,
     global: Vec<f32>,
     clock: f64,
     queue: EventQueue,
@@ -329,12 +432,27 @@ impl Simulator {
         } else {
             Engine::without_artifacts()?
         };
-        let partition = Partition::build(&spec);
+        // Lazy arrival sampling never materializes the fleet: clients are
+        // derived on demand for the round's arrived cohort only, so memory
+        // is bounded by active clients rather than the nominal fleet size.
+        let lazy = cfg.lazy_arrivals;
+        let partition = if lazy {
+            Partition {
+                clients: Vec::new(),
+                group_priors: Partition::phase_priors(&spec, 0),
+            }
+        } else {
+            Partition::build(&spec)
+        };
         let generator = Generator::new(&spec);
+        let fleet_model = FleetModel::default();
         // The fleet is provisioned at the drift phase the run starts in
         // (phase 0 unless the scenario drifts at round 0).
-        let fleet = FleetModel::default()
-            .sample_fleet_at(spec.n_clients, scenario.drift.phase_at(0));
+        let fleet = if lazy {
+            Vec::new()
+        } else {
+            fleet_model.sample_fleet_at(spec.n_clients, scenario.drift.phase_at(0))
+        };
         // A non-inert config-level plan (CLI --fault-* / [sim.fault] keys)
         // overrides the scenario's baked-in plan.
         let fault = if !cfg.fault.is_inert() { cfg.fault } else { scenario.fault };
@@ -346,7 +464,7 @@ impl Simulator {
             // selection path is the exact pre-fault code.
             .quarantine_gate(faults_on)
             .build()?;
-        let refresher = FleetRefresher::new(RefreshOptions {
+        let refresh_opts = RefreshOptions {
             threads: cfg.threads,
             store_quantized: cfg.store_quantized,
             // Zero-copy mode: the store's arena IS the fleet matrix the
@@ -354,8 +472,15 @@ impl Simulator {
             // is int8); no owned summary copy is emitted.
             emit_summaries: false,
             ..Default::default()
-        });
+        };
         let n = spec.n_clients;
+        // `shards <= 1` keeps the flat single-store tier (and its exact
+        // pre-shard event stream); `shards > 1` stands up the shard tier.
+        let refresher = if cfg.shards > 1 {
+            Refresher::Sharded(ShardedFleetRefresher::new(refresh_opts, cfg.shards, n))
+        } else {
+            Refresher::Flat(FleetRefresher::new(refresh_opts))
+        };
         let machine = CoordinatorMachine::new(JournalHeader {
             kind: "sim".into(),
             seed: cfg.seed,
@@ -373,6 +498,9 @@ impl Simulator {
             cfg.rounds,
             cfg.seed,
         );
+        // With faults off the health tracker is never consulted; the lazy
+        // path then skips its O(n) allocation entirely.
+        let health_n = if lazy && !faults_on { 0 } else { n };
         Ok(Simulator {
             cfg,
             scenario,
@@ -380,17 +508,19 @@ impl Simulator {
             partition,
             generator,
             fleet,
+            fleet_model,
             engine,
             summary,
             refresher,
             policy,
-            clusters: vec![0; n],
-            last_loss: vec![None; n],
-            completed_ever: vec![false; n],
+            clusters: if lazy { Vec::new() } else { vec![0; n] },
+            lazy_clusters: HashMap::new(),
+            last_loss: HashMap::new(),
+            completed_ever: HashSet::new(),
             global: vec![0.0; UPDATE_DIM],
             clock: 0.0,
             queue: EventQueue::new(),
-            health: ClientHealth::new(n, fault.quarantine_threshold, fault.probation_rounds),
+            health: ClientHealth::new(health_n, fault.quarantine_threshold, fault.probation_rounds),
             fault,
             machine,
             report,
@@ -433,12 +563,12 @@ impl Simulator {
     /// against the client's health. The CLEAN recomputed row is what stays
     /// in the store, so clustering inputs — and with them the digests the
     /// replay oracle checks — remain a pure function of the seed.
-    fn maybe_refresh(&mut self, round: usize) -> Result<(f64, usize, u64)> {
+    fn maybe_refresh(&mut self, round: usize) -> Result<(f64, usize, u64, Option<HierRefreshStats>)> {
         if !self.refresh_due(round) {
-            return Ok((0.0, 0, 0));
+            return Ok((0.0, 0, 0, None));
         }
         let k = if self.cfg.clusters > 0 { self.cfg.clusters } else { self.spec.n_groups };
-        let r = self.refresher.refresh(
+        let (r, hier) = self.refresher.refresh(
             &self.engine,
             self.summary.as_ref(),
             &self.partition,
@@ -450,42 +580,109 @@ impl Simulator {
             self.cfg.seed,
         )?;
         self.clusters = r.clusters;
+        self.report.peak_store_bytes = self.report.peak_store_bytes.max(r.store.bytes);
         let mut secs = r.sim_model_secs();
+        let rejects =
+            self.screen_corrupted_summaries(round, &r.recomputed, |pos| pos, &mut secs);
+        Ok((secs, r.recomputed.len(), rejects, hier))
+    }
+
+    /// Lazy-arrival refresh: summarize + cluster the round's ARRIVED cohort
+    /// only. `arrived` is the id-sorted cohort, `devices`/`cohort` its
+    /// per-client device profiles and partitions (parallel arrays). The
+    /// cohort assignment lands in `lazy_clusters` keyed by client id.
+    ///
+    /// At full availability this is bitwise the eager refresh; under partial
+    /// availability the cohort (and with it the modeled refresh time) is a
+    /// documented divergence from the eager full-fleet refresh — the lazy
+    /// oracle therefore covers the non-refreshing policies.
+    fn maybe_refresh_lazy(
+        &mut self,
+        round: usize,
+        arrived: &[usize],
+        devices: &[DeviceProfile],
+        cohort: &[ClientPartition],
+    ) -> Result<(f64, usize, u64, Option<HierRefreshStats>)> {
+        if !self.refresh_due(round) || arrived.is_empty() {
+            return Ok((0.0, 0, 0, None));
+        }
+        let k = if self.cfg.clusters > 0 { self.cfg.clusters } else { self.spec.n_groups };
+        let sub = Partition {
+            clients: cohort.to_vec(),
+            group_priors: self.partition.group_priors.clone(),
+        };
+        let (r, hier) = self.refresher.refresh(
+            &self.engine,
+            self.summary.as_ref(),
+            &sub,
+            &self.generator,
+            devices,
+            &self.scenario.drift,
+            round,
+            k,
+            self.cfg.seed,
+        )?;
+        self.lazy_clusters =
+            arrived.iter().copied().zip(r.clusters.iter().copied()).collect();
+        self.report.peak_store_bytes = self.report.peak_store_bytes.max(r.store.bytes);
+        let mut secs = r.sim_model_secs();
+        // Refresh results index the cohort positionally; map back to ids for
+        // the fault plan's per-client schedules.
+        let rejects =
+            self.screen_corrupted_summaries(round, &r.recomputed, |pos| arrived[pos], &mut secs);
+        Ok((secs, r.recomputed.len(), rejects, hier))
+    }
+
+    /// Fault screening over a refresh's recomputed clients (see
+    /// [`Simulator::maybe_refresh`] docs): corrupted uploads must bounce off
+    /// the store's admission gate; each bounce costs one backoff of refresh
+    /// time and a health strike. `to_cid` maps a recomputed index to the
+    /// client id (identity on the eager path, cohort lookup on the lazy
+    /// path). Returns the reject count.
+    fn screen_corrupted_summaries(
+        &mut self,
+        round: usize,
+        recomputed: &[usize],
+        to_cid: impl Fn(usize) -> usize,
+        secs: &mut f64,
+    ) -> u64 {
         let mut rejects = 0u64;
-        if self.faults_on() {
-            if let Some(store) = self.refresher.store() {
-                let phase = self.scenario.drift.phase_at(round);
-                let dim = store.dim();
-                for &cid in &r.recomputed {
-                    let Some(flavor) =
-                        self.fault.summary_corrupted(self.cfg.seed, cid, round)
-                    else {
-                        continue;
-                    };
-                    // Build the garbage upload the plan says arrived first
-                    // and run it through the store's admission gate.
-                    let verdict = match flavor {
-                        Corruption::Nan => {
-                            let poisoned = vec![f32::NAN; dim];
-                            store.validate_row(&poisoned, phase, phase)
-                        }
-                        Corruption::Stale => {
-                            let bland = vec![0.0f32; dim];
-                            store.validate_row(&bland, phase.wrapping_add(1), phase)
-                        }
-                    };
-                    debug_assert!(verdict.is_err(), "store admitted a corrupted row");
-                    if verdict.is_err() {
-                        rejects += 1;
-                        // One backoff's worth of refresh time to re-request
-                        // the summary; the clean row is already in the store.
-                        secs += self.fault.backoff_secs(self.cfg.seed, cid, round, 1);
-                        self.health.record_failure(cid, round);
-                    }
+        if !self.faults_on() {
+            return rejects;
+        }
+        let phase = self.scenario.drift.phase_at(round);
+        for &pos in recomputed {
+            let cid = to_cid(pos);
+            let Some(flavor) = self.fault.summary_corrupted(self.cfg.seed, cid, round)
+            else {
+                continue;
+            };
+            // The shard arena holding this client's row is its admission
+            // gate; the flat tier routes every client to the one store.
+            let Some(store) = self.refresher.store_for(cid) else { continue };
+            let dim = store.dim();
+            // Build the garbage upload the plan says arrived first
+            // and run it through the store's admission gate.
+            let verdict = match flavor {
+                Corruption::Nan => {
+                    let poisoned = vec![f32::NAN; dim];
+                    store.validate_row(&poisoned, phase, phase)
                 }
+                Corruption::Stale => {
+                    let bland = vec![0.0f32; dim];
+                    store.validate_row(&bland, phase.wrapping_add(1), phase)
+                }
+            };
+            debug_assert!(verdict.is_err(), "store admitted a corrupted row");
+            if verdict.is_err() {
+                rejects += 1;
+                // One backoff's worth of refresh time to re-request
+                // the summary; the clean row is already in the store.
+                *secs += self.fault.backoff_secs(self.cfg.seed, cid, round, 1);
+                self.health.record_failure(cid, round);
             }
         }
-        Ok((secs, r.recomputed.len(), rejects))
+        rejects
     }
 
     /// Deterministic synthetic local loss after a completed round — decays
@@ -510,9 +707,10 @@ impl Simulator {
 
     /// Run the next round through the phase machine: every phase boundary is
     /// a journaled transition (`start_round` → `rendezvous` →
-    /// `start_training` → `end_training` → `aggregate`).
+    /// `start_training` → `end_training` → `aggregate`). The eager and lazy
+    /// prologues differ only in how the arrived cohort is materialized; the
+    /// round itself always closes through [`Simulator::finish_round`].
     pub fn run_round(&mut self) -> Result<()> {
-        let n = self.spec.n_clients;
         let round = self.machine.rounds_closed();
         let t_start = self.clock;
 
@@ -524,7 +722,26 @@ impl Simulator {
             // Readmit clients whose quarantine cool-off expired (probation).
             self.health.begin_round(round);
         }
-        let (refresh_secs, refresh_recomputed, summary_rejects) = self.maybe_refresh(round)?;
+        if self.cfg.lazy_arrivals {
+            self.run_round_lazy(round, t_start, faults_on, quarantines_before)
+        } else {
+            self.run_round_eager(round, t_start, faults_on, quarantines_before)
+        }
+    }
+
+    /// The eager prologue: full-fleet availability over the materialized
+    /// fleet, full-fleet view list, policy selection — the pre-split code
+    /// path, byte for byte.
+    fn run_round_eager(
+        &mut self,
+        round: usize,
+        t_start: f64,
+        faults_on: bool,
+        quarantines_before: u64,
+    ) -> Result<()> {
+        let n = self.spec.n_clients;
+        let (refresh_secs, refresh_recomputed, summary_rejects, hier_refresh) =
+            self.maybe_refresh(round)?;
 
         // rendezvous handler: establish per-device availability.
         let mut avail: Vec<bool> = self
@@ -563,7 +780,7 @@ impl Simulator {
                 available: avail[i],
                 quarantined: faults_on && self.health.quarantined(i),
                 n_samples: c.n_samples,
-                last_loss: self.last_loss[i],
+                last_loss: self.last_loss.get(&c.client_id).copied(),
                 step_host_secs: self.cfg.train_step_host_secs,
                 upload_bytes: self.cfg.update_bytes,
             })
@@ -571,14 +788,212 @@ impl Simulator {
         let mut sel_rng = Rng::substream(self.cfg.seed, &[SALT_SELECT, round as u64]);
         let selected = self.policy.select(&views, round, want, &mut sel_rng);
         debug_assert!(selection::validate_selection(&selected, &views, want));
-        self.machine
-            .apply(Transition::ClientsSelected { round, selected: selected.clone() })?;
+        let sel: Vec<SelectedClient> = selected
+            .iter()
+            .map(|&cid| {
+                // Eager views are fleet-ordered, so position == client id.
+                let v = &views[cid];
+                SelectedClient {
+                    cid,
+                    n_samples: v.n_samples,
+                    expected: v.expected_round_secs(self.cfg.local_steps),
+                    device: v.device.clone(),
+                }
+            })
+            .collect();
+        drop(views);
+        self.finish_round(
+            RoundCtx {
+                n,
+                round,
+                t_start,
+                faults_on,
+                quarantines_before,
+                refresh_secs,
+                refresh_recomputed,
+                summary_rejects,
+                selection_secs,
+                t_sel,
+                hier_refresh,
+            },
+            sel,
+        )
+    }
 
-        if selected.is_empty() {
+    /// The lazy-arrival prologue: instead of ticking availability across a
+    /// materialized fleet, each client's arrival is drawn from its own
+    /// availability substream and only arrived clients are materialized —
+    /// device profile and partition are re-derived on demand, and both are
+    /// pure functions of `(seed, client id, phase)`, bitwise equal to the
+    /// eager profiles. Per-round memory is O(arrived), not O(fleet).
+    fn run_round_lazy(
+        &mut self,
+        round: usize,
+        t_start: f64,
+        faults_on: bool,
+        quarantines_before: u64,
+    ) -> Result<()> {
+        let n = self.spec.n_clients;
+        let phase0 = self.scenario.drift.phase_at(0);
+        let mut arrived: Vec<usize> = Vec::new();
+        let mut devices: Vec<DeviceProfile> = Vec::new();
+        for cid in 0..n {
+            let dev = self.fleet_model.sample_device_at(cid, phase0);
+            let mut up = self.scenario.available(&dev, round, self.cfg.seed);
+            if up && faults_on && self.fault.in_outage(cid, round, self.cfg.seed) {
+                // A regional outage takes its clients off the air regardless
+                // of their scenario availability draw.
+                up = false;
+            }
+            if up {
+                arrived.push(cid);
+                devices.push(dev);
+            }
+        }
+        let cohort: Vec<ClientPartition> = arrived
+            .iter()
+            .map(|&cid| Partition::client_at(&self.spec, &self.partition.group_priors, cid))
+            .collect();
+        let (refresh_secs, refresh_recomputed, summary_rejects, hier_refresh) =
+            self.maybe_refresh_lazy(round, &arrived, &devices, &cohort)?;
+        let available = arrived.len();
+        self.machine.apply(Transition::FleetRendezvoused { round, available })?;
+
+        let want = ((self.cfg.per_round as f64) * self.scenario.over_select.max(1.0))
+            .ceil() as usize;
+        let want = want.clamp(self.cfg.per_round, n);
+        // Ranking cost is modeled over the nominal fleet, exactly as the
+        // eager path charges it: the clock must not depend on how arrivals
+        // were sampled.
+        let selection_secs = selection_model_secs(&self.cfg.policy, n, want);
+        let t_sel = t_start + refresh_secs + selection_secs;
+
+        // Arrived-cohort views. The availability-filtering policies (random,
+        // oort, powd) see exactly the sub-list they would have filtered out
+        // of the full-fleet views, in the same order, and draw identically
+        // from the selection substream.
+        let views: Vec<ClientView<'_>> = arrived
+            .iter()
+            .enumerate()
+            .map(|(pos, &cid)| ClientView {
+                client_id: cid,
+                cluster: self.lazy_clusters.get(&cid).copied().unwrap_or(0),
+                device: &devices[pos],
+                available: true,
+                quarantined: faults_on && self.health.quarantined(cid),
+                n_samples: cohort[pos].n_samples,
+                last_loss: self.last_loss.get(&cid).copied(),
+                step_host_secs: self.cfg.train_step_host_secs,
+                upload_bytes: self.cfg.update_bytes,
+            })
+            .collect();
+        let mut sel_rng = Rng::substream(self.cfg.seed, &[SALT_SELECT, round as u64]);
+        let selected = self.policy.select(&views, round, want, &mut sel_rng);
+        debug_assert!(selection::validate_selection(&selected, &views, want));
+        let sel: Vec<SelectedClient> = selected
+            .iter()
+            .map(|&cid| {
+                let pos = arrived
+                    .binary_search(&cid)
+                    .expect("policy selected a client that never arrived");
+                let v = &views[pos];
+                SelectedClient {
+                    cid,
+                    n_samples: v.n_samples,
+                    expected: v.expected_round_secs(self.cfg.local_steps),
+                    device: v.device.clone(),
+                }
+            })
+            .collect();
+        drop(views);
+        self.finish_round(
+            RoundCtx {
+                n,
+                round,
+                t_start,
+                faults_on,
+                quarantines_before,
+                refresh_secs,
+                refresh_recomputed,
+                summary_rejects,
+                selection_secs,
+                t_sel,
+                hier_refresh,
+            },
+            sel,
+        )
+    }
+
+    /// Assemble the round's hier diagnostics block. `None` on the flat tier,
+    /// so flat-run reports serialize byte-identically to pre-shard builds.
+    #[allow(clippy::too_many_arguments)]
+    fn hier_block(
+        &self,
+        shards: usize,
+        aggregators: Vec<usize>,
+        hier_refresh: &Option<HierRefreshStats>,
+        agg_edge_secs: f64,
+        agg_root_secs: f64,
+        agg_param_digest: u64,
+    ) -> Option<HierRoundStats> {
+        if shards <= 1 {
+            return None;
+        }
+        let (refresh_edge_secs, refresh_root_secs, merged_centroid_digest) = hier_refresh
+            .as_ref()
+            .map(|h| {
+                (h.edge_cluster_model_secs, h.root_merge_model_secs, h.merged_centroid_digest)
+            })
+            .unwrap_or((0.0, 0.0, 0));
+        Some(HierRoundStats {
+            shards,
+            aggregators,
+            refresh_edge_secs,
+            refresh_root_secs,
+            merged_centroid_digest,
+            agg_edge_secs,
+            agg_root_secs,
+            agg_param_digest,
+        })
+    }
+
+    /// Close the round from the selection on: event scheduling, the event
+    /// loop, terminal classification, aggregation, and the report row.
+    /// Shared by the eager and lazy prologues — everything here depends on
+    /// the selection only through `sel`, so identical selections produce
+    /// identical event streams regardless of which prologue ran.
+    fn finish_round(&mut self, ctx: RoundCtx, sel: Vec<SelectedClient>) -> Result<()> {
+        let RoundCtx {
+            n,
+            round,
+            t_start,
+            faults_on,
+            quarantines_before,
+            refresh_secs,
+            refresh_recomputed,
+            summary_rejects,
+            selection_secs,
+            t_sel,
+            hier_refresh,
+        } = ctx;
+        let shards = self.cfg.shards.max(1);
+        // Per-shard edge-aggregator committee: a seeded hash rotates the
+        // role across each shard's id range round by round. Pure hashing —
+        // no RNG substream is consumed, so the event stream is untouched.
+        let aggregators = if shards > 1 {
+            selection::pick_aggregators(self.cfg.seed, round, n, shards)
+        } else {
+            Vec::new()
+        };
+        self.machine.apply(Transition::ClientsSelected {
+            round,
+            selected: sel.iter().map(|s| s.cid).collect(),
+        })?;
+
+        if sel.is_empty() {
             // Nobody reachable (e.g. a flash-crowd trough): charge the
             // coordinator overhead and close an empty round — it still walks
             // every phase so the journal stays uniform (5 records/round).
-            drop(views);
             self.machine.apply(Transition::TrainingEnded {
                 round,
                 completed: Vec::new(),
@@ -613,7 +1028,8 @@ impl Simulator {
                 refresh_recomputed,
                 aggregated: false,
                 degraded: false,
-                coverage: coverage(&self.completed_ever),
+                coverage: coverage(&self.completed_ever, n),
+                hier: self.hier_block(shards, aggregators, &hier_refresh, 0.0, 0.0, 0),
             });
             return Ok(());
         }
@@ -621,8 +1037,8 @@ impl Simulator {
         // Schedule every selected client's terminal event, then the
         // round deadline (client events first: at equal times the
         // earlier-scheduled event pops first).
-        let mut launched: Vec<(usize, Launched)> = Vec::with_capacity(selected.len());
-        let mut expected: Vec<f64> = Vec::with_capacity(selected.len());
+        let mut launched: Vec<(usize, Launched)> = Vec::with_capacity(sel.len());
+        let mut expected: Vec<f64> = Vec::with_capacity(sel.len());
         // Fault-fabric bookkeeping (all empty and untouched on the inert
         // path): the done/dropout event pair racing per client — whichever
         // fires first revokes the other — and retry attempts per client.
@@ -632,15 +1048,15 @@ impl Simulator {
             std::collections::HashMap::new();
         let mut retries_used: std::collections::HashMap<usize, u32> =
             std::collections::HashMap::new();
-        for &cid in &selected {
-            let v = &views[cid];
-            expected.push(v.expected_round_secs(self.cfg.local_steps));
+        for sc in &sel {
+            let cid = sc.cid;
+            expected.push(sc.expected);
             let mult = self.scenario.straggler_mult(cid, round, self.cfg.seed);
-            let compute = self
-                .fleet[cid]
+            let compute = sc
+                .device
                 .compute_time(self.cfg.train_step_host_secs * self.cfg.local_steps as f64)
                 * mult;
-            let upload = self.fleet[cid].upload_time(self.cfg.update_bytes);
+            let upload = sc.device.upload_time(self.cfg.update_bytes);
             // Sum compute + upload BEFORE adding the clock so the
             // duration associates exactly like `expected_round_secs` —
             // the p100 deadline then ties bitwise with the slowest
@@ -689,7 +1105,6 @@ impl Simulator {
             }
             launched.push((cid, Launched { compute, upload, done_t }));
         }
-        drop(views);
         let deadline_pct = self.scenario.deadline_pct.clamp(1.0, 100.0);
         let deadline_t = t_sel + stats::percentile(&expected, deadline_pct);
         self.queue.schedule(deadline_t, round, EventKind::Deadline);
@@ -700,9 +1115,9 @@ impl Simulator {
         // resolved; partial-async (quorum) closes on the first
         // `frac × selected` completions.
         let target = match self.scenario.aggregation {
-            Aggregation::Sync => self.cfg.per_round.min(selected.len()),
+            Aggregation::Sync => self.cfg.per_round.min(sel.len()),
             Aggregation::Quorum { frac } => {
-                ((selected.len() as f64 * frac).ceil() as usize).clamp(1, selected.len())
+                ((sel.len() as f64 * frac).ceil() as usize).clamp(1, sel.len())
             }
         };
 
@@ -744,7 +1159,7 @@ impl Simulator {
                     }
                     completed.push(c);
                     if completed.len() >= target
-                        || completed.len() + dropped.len() + failed.len() == selected.len()
+                        || completed.len() + dropped.len() + failed.len() == sel.len()
                     {
                         close_t = Some(ev.time);
                     }
@@ -760,7 +1175,7 @@ impl Simulator {
                         self.health.record_failure(c, round);
                     }
                     dropped.push(c);
-                    if completed.len() + dropped.len() + failed.len() == selected.len() {
+                    if completed.len() + dropped.len() + failed.len() == sel.len() {
                         close_t = Some(ev.time);
                     }
                 }
@@ -771,7 +1186,7 @@ impl Simulator {
                         // before the budget check could stop it.
                         self.health.record_failure(c, round);
                         failed.push(c);
-                        if completed.len() + dropped.len() + failed.len() == selected.len() {
+                        if completed.len() + dropped.len() + failed.len() == sel.len() {
                             close_t = Some(ev.time);
                         }
                     } else {
@@ -783,7 +1198,7 @@ impl Simulator {
                             completed.push(c);
                             if completed.len() >= target
                                 || completed.len() + dropped.len() + failed.len()
-                                    == selected.len()
+                                    == sel.len()
                             {
                                 close_t = Some(ev.time);
                             }
@@ -800,7 +1215,7 @@ impl Simulator {
                             self.health.record_failure(c, round);
                             failed.push(c);
                             if completed.len() + dropped.len() + failed.len()
-                                == selected.len()
+                                == sel.len()
                             {
                                 close_t = Some(ev.time);
                             }
@@ -811,7 +1226,7 @@ impl Simulator {
                     let c = *client;
                     self.health.record_failure(c, round);
                     failed.push(c);
-                    if completed.len() + dropped.len() + failed.len() == selected.len() {
+                    if completed.len() + dropped.len() + failed.len() == sel.len() {
                         close_t = Some(ev.time);
                     }
                 }
@@ -823,20 +1238,22 @@ impl Simulator {
         let close_t = close_t.expect("loop exits only with a close time");
         self.queue.cancel_all();
         // Everything selected but neither completed nor dropped by the
-        // close was cut in flight: timed out. (Bool-vec membership keeps
-        // this O(selected), not O(selected²), at fleet scale.)
-        let mut resolved = vec![false; n];
+        // close was cut in flight: timed out. (Hash-set membership keeps
+        // this O(selected) — independent of the nominal fleet size, so a
+        // million-client lazy round allocates nothing fleet-shaped here.)
+        let mut resolved: HashSet<usize> =
+            HashSet::with_capacity(completed.len() + dropped.len() + failed.len());
         for &c in completed.iter().chain(&dropped).chain(&failed) {
-            resolved[c] = true;
+            resolved.insert(c);
         }
         let timed_out: Vec<usize> = launched
             .iter()
             .map(|(c, _)| *c)
-            .filter(|&c| !resolved[c])
+            .filter(|c| !resolved.contains(c))
             .collect();
         debug_assert_eq!(
             completed.len() + dropped.len() + timed_out.len() + failed.len(),
-            selected.len(),
+            sel.len(),
             "client terminal states must partition the selection"
         );
         // end_training handler: the terminal classification is the payload.
@@ -856,26 +1273,54 @@ impl Simulator {
         // discarding the round. Updates that needed retries are discounted
         // by staleness so late (possibly drift-stale) uploads weigh less.
         let degraded = faults_on && aggregated && completed.len() < target;
+        let mut agg_edge_secs = 0.0;
+        let mut agg_root_secs = 0.0;
+        let mut agg_param_digest = 0u64;
         if aggregated {
+            let ns: HashMap<usize, usize> =
+                sel.iter().map(|s| (s.cid, s.n_samples)).collect();
             let updates: Vec<(Vec<f32>, f64)> = completed
                 .iter()
                 .map(|&cid| {
                     let weight = if faults_on {
                         staleness_weight(
-                            self.partition.clients[cid].n_samples,
+                            ns[&cid],
                             self.fault.stale_discount,
                             retries_used.get(&cid).copied().unwrap_or(0),
                         )
                     } else {
-                        self.partition.clients[cid].n_samples as f64
+                        ns[&cid] as f64
                     };
                     (self.client_update(cid, round), weight)
                 })
                 .collect();
             self.global = fedavg(&updates)?;
+            if shards > 1 {
+                // Two-tier aggregation diagnostics (reported, never
+                // clock-charged): group the completed updates by shard,
+                // partial-sum each shard's edge aggregator in 64.32 fixed
+                // point, and merge at the root. Fixed-point accumulation is
+                // exactly associative, so the merged vector — and its digest
+                // here — is bit-identical for every shard count.
+                let mut by_shard: Vec<Vec<(Vec<f32>, f64)>> = vec![Vec::new(); shards];
+                for (&cid, uw) in completed.iter().zip(&updates) {
+                    by_shard[shard_of(cid, n, shards)].push(uw.clone());
+                }
+                let shard_counts: Vec<usize> = by_shard.iter().map(|s| s.len()).collect();
+                let partials: Vec<AggPartial> = by_shard
+                    .iter()
+                    .filter(|s| !s.is_empty())
+                    .map(|s| fedavg_partial(s, UPDATE_DIM))
+                    .collect::<Result<_>>()?;
+                let merged = fedavg_merge(&partials)?;
+                let (e, r) = hier_agg_model_secs(&shard_counts, UPDATE_DIM);
+                agg_edge_secs = e;
+                agg_root_secs = r;
+                agg_param_digest = fnv1a64_f32(&merged);
+            }
             for &cid in &completed {
-                self.completed_ever[cid] = true;
-                self.last_loss[cid] = Some(self.observed_loss(cid, round));
+                self.completed_ever.insert(cid);
+                self.last_loss.insert(cid, self.observed_loss(cid, round));
             }
         }
         self.machine.apply(Transition::RoundAggregated { round, aggregated, degraded })?;
@@ -903,7 +1348,7 @@ impl Simulator {
             compute_secs,
             upload_secs,
             wait_secs,
-            selected: selected.len(),
+            selected: sel.len(),
             completed: completed.len(),
             dropped: dropped.len(),
             timed_out: timed_out.len(),
@@ -914,7 +1359,15 @@ impl Simulator {
             refresh_recomputed,
             aggregated,
             degraded,
-            coverage: coverage(&self.completed_ever),
+            coverage: coverage(&self.completed_ever, n),
+            hier: self.hier_block(
+                shards,
+                aggregators,
+                &hier_refresh,
+                agg_edge_secs,
+                agg_root_secs,
+                agg_param_digest,
+            ),
         });
         Ok(())
     }
@@ -1058,8 +1511,9 @@ pub fn run_with_recovery(cfg: SimConfig, scenario: Scenario) -> Result<RecoveryR
     })
 }
 
-fn coverage(completed_ever: &[bool]) -> f64 {
-    completed_ever.iter().filter(|&&c| c).count() as f64 / completed_ever.len().max(1) as f64
+/// Fraction of the nominal fleet that has ever completed a round.
+fn coverage(completed_ever: &HashSet<usize>, n: usize) -> f64 {
+    completed_ever.len() as f64 / n.max(1) as f64
 }
 
 #[cfg(test)]
@@ -1442,5 +1896,157 @@ mod tests {
             sc
         )
         .is_err());
+    }
+
+    #[test]
+    fn sharded_runs_reproduce_the_flat_event_stream_bitwise() {
+        // Tentpole oracle: the shard count is a layout knob, not a
+        // semantics knob. For the clustering policy (the one that touches
+        // the summary tier every refresh), shards ∈ {1, 4, 16} must yield
+        // byte-identical journals and event streams, and the explicit
+        // shards=1 run must be the default run bitwise.
+        let sc = Scenario::by_name("sync_baseline").unwrap();
+        let base = SimConfig { refresh_every: 2, ..smoke_cfg() };
+        let (r0, j0) =
+            Simulator::new(base.clone(), sc.clone()).unwrap().run_journaled().unwrap();
+        for shards in [1usize, 4, 16] {
+            let cfg = SimConfig { shards, ..base.clone() };
+            let (r, j) = Simulator::new(cfg, sc.clone()).unwrap().run_journaled().unwrap();
+            assert_eq!(
+                r.event_digest(),
+                r0.event_digest(),
+                "shards={shards} diverged the event stream"
+            );
+            assert_eq!(j.to_jsonl(), j0.to_jsonl(), "shards={shards} diverged the journal");
+            for (a, b) in r.rounds.iter().zip(&r0.rounds) {
+                assert_eq!(a.t_end.to_bits(), b.t_end.to_bits(), "round {}", a.round);
+                assert_eq!(a.refresh_secs.to_bits(), b.refresh_secs.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_hier_diagnostics_are_shard_count_invariant() {
+        // The hier block rides along without touching the stream: merged
+        // parameter digests must agree between shard counts (fixed-point
+        // aggregation is exactly associative), and the block is absent on
+        // flat runs so their JSON is byte-identical to pre-shard builds.
+        let sc = Scenario::by_name("sync_baseline").unwrap();
+        let base = SimConfig { refresh_every: 2, ..smoke_cfg() };
+        let flat = Simulator::new(base.clone(), sc.clone()).unwrap().run().unwrap();
+        assert!(flat.rounds.iter().all(|r| r.hier.is_none()), "flat run emitted hier");
+        let r4 = Simulator::new(SimConfig { shards: 4, ..base.clone() }, sc.clone())
+            .unwrap()
+            .run()
+            .unwrap();
+        let r16 = Simulator::new(SimConfig { shards: 16, ..base }, sc)
+            .unwrap()
+            .run()
+            .unwrap();
+        for (a, b) in r4.rounds.iter().zip(&r16.rounds) {
+            let (ha, hb) = (a.hier.as_ref().unwrap(), b.hier.as_ref().unwrap());
+            assert_eq!(ha.shards, 4);
+            assert_eq!(hb.shards, 16);
+            assert_eq!(
+                ha.agg_param_digest, hb.agg_param_digest,
+                "round {}: hierarchical FedAvg is not shard-count invariant",
+                a.round
+            );
+            if a.aggregated {
+                assert_ne!(ha.agg_param_digest, 0);
+                assert!(ha.agg_edge_secs > 0.0 && ha.agg_root_secs > 0.0);
+            }
+            if a.refresh_secs > 0.0 {
+                assert_ne!(ha.merged_centroid_digest, 0);
+                assert!(ha.refresh_edge_secs > 0.0 && ha.refresh_root_secs > 0.0);
+            }
+            assert!(!ha.aggregators.is_empty());
+            assert!(ha.to_json().contains("\"shards\":4"));
+        }
+    }
+
+    #[test]
+    fn lazy_arrivals_reproduce_the_eager_run_bitwise() {
+        // Lazy arrival-process sampling must be invisible to the stream:
+        // for the cohort-invariant policies (random / oort / powd — they
+        // filter availability before drawing), every scenario availability
+        // model must yield byte-identical journals and event streams.
+        for policy in ["random", "oort", "powd"] {
+            for scenario in ["sync_baseline", "diurnal", "flash_crowd"] {
+                let sc = Scenario::by_name(scenario).unwrap();
+                let base = SimConfig { policy: policy.into(), ..smoke_cfg() };
+                let (re, je) = Simulator::new(base.clone(), sc.clone())
+                    .unwrap()
+                    .run_journaled()
+                    .unwrap();
+                let lazy_cfg = SimConfig { lazy_arrivals: true, ..base };
+                let (rl, jl) =
+                    Simulator::new(lazy_cfg, sc).unwrap().run_journaled().unwrap();
+                assert_eq!(
+                    re.event_digest(),
+                    rl.event_digest(),
+                    "{policy}/{scenario}: lazy diverged the event stream"
+                );
+                assert_eq!(
+                    je.to_jsonl(),
+                    jl.to_jsonl(),
+                    "{policy}/{scenario}: lazy diverged the journal"
+                );
+                for (a, b) in re.rounds.iter().zip(&rl.rounds) {
+                    assert_eq!(a.t_end.to_bits(), b.t_end.to_bits(), "round {}", a.round);
+                    assert_eq!(a.coverage.to_bits(), b.coverage.to_bits());
+                    assert_eq!(a.completed, b.completed);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_fault_fabric_matches_eager_under_outages() {
+        // The lazy prologue evaluates outage and quarantine state per
+        // arrived client; with the fabric live it must still match eager
+        // for the cohort-invariant policies.
+        let sc = Scenario::by_name("regional_outage").unwrap();
+        let base = SimConfig {
+            policy: "random".into(),
+            n_clients: 40,
+            rounds: 6,
+            per_round: 8,
+            ..Default::default()
+        };
+        let (re, je) =
+            Simulator::new(base.clone(), sc.clone()).unwrap().run_journaled().unwrap();
+        let (rl, jl) = Simulator::new(SimConfig { lazy_arrivals: true, ..base }, sc)
+            .unwrap()
+            .run_journaled()
+            .unwrap();
+        assert_eq!(re.event_digest(), rl.event_digest(), "lazy+faults diverged");
+        assert_eq!(je.to_jsonl(), jl.to_jsonl());
+    }
+
+    #[test]
+    fn lazy_sharded_cluster_run_completes_and_reproduces() {
+        // Lazy + sharded + clustering policy: the cohort refresh is a
+        // documented divergence from the eager full-fleet refresh, but the
+        // combination must run end to end and reproduce itself bitwise.
+        let cfg = SimConfig {
+            lazy_arrivals: true,
+            shards: 4,
+            refresh_every: 2,
+            ..smoke_cfg()
+        };
+        let sc = Scenario::by_name("diurnal").unwrap();
+        let a = Simulator::new(cfg.clone(), sc.clone()).unwrap().run().unwrap();
+        let b = Simulator::new(cfg, sc).unwrap().run().unwrap();
+        assert_eq!(a.rounds.len(), 4);
+        assert!(a.rounds[0].refresh_secs > 0.0, "cohort refresh never ran");
+        assert_eq!(a.event_digest(), b.event_digest());
+        for (x, y) in a.rounds.iter().zip(&b.rounds) {
+            assert_eq!(x.t_end.to_bits(), y.t_end.to_bits());
+            assert_eq!(
+                x.hier.as_ref().map(|h| h.merged_centroid_digest),
+                y.hier.as_ref().map(|h| h.merged_centroid_digest)
+            );
+        }
     }
 }

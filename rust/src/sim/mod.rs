@@ -46,5 +46,8 @@ pub use engine::{
     Simulator, UPDATE_DIM,
 };
 pub use fault::{Corruption, FaultPlan};
-pub use report::{bench_json, RoundReport, SimEventRecord, SimReport, SimTotals};
+pub use report::{
+    bench_json, write_artifact, write_bench_json, HierRoundStats, ReportError, RoundReport,
+    SimEventRecord, SimReport, SimTotals,
+};
 pub use scenario::{Aggregation, AvailabilityModel, CrashPoint, Scenario, StragglerModel};

@@ -9,7 +9,42 @@
 //! "identical `BENCH_sim.json` event digests across thread counts" a
 //! meaningful check.
 
+use std::fmt;
 use std::io::Write;
+
+/// A failed report/bench artifact write: the path that failed and the
+/// underlying I/O error, so callers can report *which* artifact was lost
+/// instead of panicking inside the serializer.
+#[derive(Debug)]
+pub struct ReportError {
+    pub path: String,
+    pub source: std::io::Error,
+}
+
+impl fmt::Display for ReportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "writing report artifact {:?}: {}", self.path, self.source)
+    }
+}
+
+impl std::error::Error for ReportError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        Some(&self.source)
+    }
+}
+
+/// Write a fully assembled artifact to `path` with a typed error instead of
+/// the `std::fs::write(..).expect(..)` panics the bench emitters used to
+/// ship. All BENCH_*.json emission funnels through here.
+pub fn write_artifact(path: &str, text: &str) -> Result<(), ReportError> {
+    std::fs::write(path, text)
+        .map_err(|source| ReportError { path: path.to_string(), source })
+}
+
+/// Assemble and write a `{"runs": [...]}` bench artifact in one step.
+pub fn write_bench_json(path: &str, entries: &[String]) -> Result<(), ReportError> {
+    write_artifact(path, &bench_json(entries))
+}
 
 /// One popped event, in pop order (the canonical event stream).
 #[derive(Debug, Clone, PartialEq)]
@@ -30,6 +65,57 @@ impl SimEventRecord {
         format!(
             "{{\"type\":\"event\",\"t\":{},\"id\":{},\"round\":{},\"kind\":\"{}\",\"client\":{}}}",
             self.time, self.id, self.round, self.kind, client
+        )
+    }
+}
+
+/// Hierarchy-tier diagnostics for one round of a sharded (`sim.shards > 1`)
+/// run. Everything here is *reported*, never charged to the simulated
+/// clock: the determinism contract says shard count must not move the event
+/// stream, so the two-tier costs ride alongside the flat ones. The whole
+/// block is elided from the JSON when absent, keeping single-shard output
+/// byte-identical to pre-sharding builds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HierRoundStats {
+    pub shards: usize,
+    /// Per-shard aggregator committee this round: one client id per
+    /// non-empty shard, rotated by a seeded hash of `(seed, round, shard)`.
+    pub aggregators: Vec<usize>,
+    /// Refresh edge tier: the slowest shard's local clustering model secs
+    /// (shards cluster in parallel). 0 on non-refresh rounds.
+    pub refresh_edge_secs: f64,
+    /// Refresh root tier: weighted centroid merge over ≤ shards·k points —
+    /// independent of fleet size. 0 on non-refresh rounds.
+    pub refresh_root_secs: f64,
+    /// FNV-1a over the merged (approximate) shard centroids. 0 when no
+    /// refresh ran this round.
+    pub merged_centroid_digest: u64,
+    /// Aggregation edge tier: the slowest shard's partial-FedAvg model secs.
+    pub agg_edge_secs: f64,
+    /// Aggregation root tier: merging `shards` partials — Θ(shards·dim),
+    /// free of the fleet size.
+    pub agg_root_secs: f64,
+    /// FNV-1a over the hierarchically merged parameters (0 when the round
+    /// aggregated nothing).
+    pub agg_param_digest: u64,
+}
+
+impl HierRoundStats {
+    /// The `"hier":{...}` JSON value (no leading key).
+    pub fn to_json(&self) -> String {
+        let aggs: Vec<String> = self.aggregators.iter().map(|a| a.to_string()).collect();
+        format!(
+            "{{\"shards\":{},\"aggregators\":[{}],\"refresh_edge_secs\":{},\
+             \"refresh_root_secs\":{},\"merged_centroid_digest\":\"{:#018x}\",\
+             \"agg_edge_secs\":{},\"agg_root_secs\":{},\"agg_param_digest\":\"{:#018x}\"}}",
+            self.shards,
+            aggs.join(","),
+            self.refresh_edge_secs,
+            self.refresh_root_secs,
+            self.merged_centroid_digest,
+            self.agg_edge_secs,
+            self.agg_root_secs,
+            self.agg_param_digest
         )
     }
 }
@@ -73,11 +159,15 @@ pub struct RoundReport {
     pub degraded: bool,
     /// Cumulative fraction of the fleet that has ever completed a round.
     pub coverage: f64,
+    /// Hierarchy-tier diagnostics (Some only when `sim.shards > 1`); elided
+    /// from the JSON when None so single-shard lines keep their exact
+    /// pre-sharding bytes.
+    pub hier: Option<HierRoundStats>,
 }
 
 impl RoundReport {
     pub fn to_json(&self) -> String {
-        format!(
+        let mut s = format!(
             "{{\"type\":\"round\",\"round\":{},\"t_start\":{},\"t_end\":{},\"round_secs\":{},\
              \"refresh_secs\":{},\"selection_secs\":{},\"compute_secs\":{},\"upload_secs\":{},\
              \"wait_secs\":{},\"selected\":{},\"completed\":{},\"dropped\":{},\"timed_out\":{},\
@@ -104,7 +194,14 @@ impl RoundReport {
             self.aggregated,
             self.degraded,
             self.coverage
-        )
+        );
+        if let Some(h) = &self.hier {
+            s.pop(); // reopen the object to append the hier block
+            s.push_str(",\"hier\":");
+            s.push_str(&h.to_json());
+            s.push('}');
+        }
+        s
     }
 }
 
@@ -147,6 +244,12 @@ pub struct SimReport {
     /// go through `Simulator::run_journaled`). Quoted next to the event
     /// digest so replayability is checkable from the artifact alone.
     pub journal_digest: Option<u64>,
+    /// Peak resident summary-arena bytes observed across the run's
+    /// refreshes (summed over shard arenas; 0 for policies that never
+    /// refresh). Carried on the report for the scale bench — deliberately
+    /// NOT serialized into the JSONL header, whose bytes are pinned by the
+    /// determinism oracle.
+    pub peak_store_bytes: usize,
 }
 
 impl SimReport {
@@ -168,6 +271,7 @@ impl SimReport {
             rounds: Vec::new(),
             events: Vec::new(),
             journal_digest: None,
+            peak_store_bytes: 0,
         }
     }
 
@@ -337,6 +441,56 @@ impl SimReport {
             host_secs
         )
     }
+
+    /// One aggregate entry for `BENCH_scale.json` — the fleet-scaling
+    /// artifact. Quotes, per `(n, shards, policy)` cell: peak summary-arena
+    /// bytes (the memory-boundedness claim: ∝ active clients, not N), the
+    /// popped-event count (events ∝ selected clients per round, never N),
+    /// and modeled coordinator seconds per round (refresh + selection — the
+    /// sub-linear-overhead column, with the hierarchy's fleet-size-free
+    /// root tier reported by the per-round `hier` blocks).
+    pub fn scale_entry_json(&self, shards: usize, lazy: bool, host_secs: f64) -> String {
+        let t = self.totals();
+        let rounds = self.rounds.len().max(1) as f64;
+        let coord_secs_per_round = (t.refresh_secs + t.selection_secs) / rounds;
+        // The steepest hierarchy tiers seen across the run's refresh rounds.
+        let (mut edge, mut root) = (0.0f64, 0.0f64);
+        for r in &self.rounds {
+            if let Some(h) = &r.hier {
+                edge = edge.max(h.refresh_edge_secs);
+                root = root.max(h.refresh_root_secs);
+            }
+        }
+        format!(
+            "{{\"scenario\": \"{}\", \"policy\": \"{}\", \"n\": {}, \"shards\": {}, \
+             \"lazy_arrivals\": {}, \"rounds\": {}, \"per_round\": {}, \
+             \"sim_secs\": {}, \"coord_secs_per_round\": {}, \
+             \"refresh_secs\": {}, \"selection_secs\": {}, \
+             \"refresh_edge_secs\": {}, \"refresh_root_secs\": {}, \
+             \"peak_store_bytes\": {}, \"events_popped\": {}, \
+             \"completed\": {}, \"coverage\": {:.6}, \
+             \"event_digest\": \"{:#018x}\", \"host_secs\": {:.4}}}",
+            self.scenario,
+            self.policy,
+            self.n_clients,
+            shards,
+            lazy,
+            self.rounds.len(),
+            self.per_round,
+            t.sim_secs,
+            coord_secs_per_round,
+            t.refresh_secs,
+            t.selection_secs,
+            edge,
+            root,
+            self.peak_store_bytes,
+            self.events.len(),
+            t.completed,
+            t.coverage,
+            self.event_digest(),
+            host_secs
+        )
+    }
 }
 
 /// Assemble `BENCH_sim.json` from per-run entries (the bench, `make
@@ -382,6 +536,7 @@ mod tests {
             aggregated: true,
             degraded: n == 1,
             coverage: 0.1 * (n + 1) as f64,
+            hier: None,
         }
     }
 
@@ -506,6 +661,75 @@ mod tests {
         assert!(rep
             .bench_entry_json(0.1)
             .contains("\"journal_digest\": \"0x123456789abcdef0\""));
+    }
+
+    #[test]
+    fn hier_block_is_elided_when_absent_and_appended_when_present() {
+        // Single-shard lines must keep their exact pre-sharding bytes.
+        let flat = round(0);
+        let flat_json = flat.to_json();
+        assert!(!flat_json.contains("hier"), "hier leaked into a flat round");
+        let mut sharded = round(0);
+        sharded.hier = Some(HierRoundStats {
+            shards: 4,
+            aggregators: vec![3, 17, 29, 41],
+            refresh_edge_secs: 0.02,
+            refresh_root_secs: 0.001,
+            merged_centroid_digest: 0xabcd,
+            agg_edge_secs: 0.0005,
+            agg_root_secs: 0.00001,
+            agg_param_digest: 0x1234,
+        });
+        let j = sharded.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"hier\":{\"shards\":4,\"aggregators\":[3,17,29,41]"));
+        assert!(j.contains("\"merged_centroid_digest\":\"0x000000000000abcd\""));
+        assert!(j.contains("\"agg_param_digest\":\"0x0000000000001234\""));
+        // The hier block rides at the end; the flat prefix is unchanged.
+        assert!(j.starts_with(&flat_json[..flat_json.len() - 1]));
+    }
+
+    #[test]
+    fn scale_entry_quotes_the_scaling_columns() {
+        let mut rep = report();
+        rep.peak_store_bytes = 4096;
+        rep.rounds[1].hier = Some(HierRoundStats {
+            shards: 8,
+            aggregators: vec![1],
+            refresh_edge_secs: 0.5,
+            refresh_root_secs: 0.25,
+            merged_centroid_digest: 1,
+            agg_edge_secs: 0.0,
+            agg_root_secs: 0.0,
+            agg_param_digest: 0,
+        });
+        let e = rep.scale_entry_json(8, true, 0.3);
+        assert!(e.contains("\"shards\": 8"));
+        assert!(e.contains("\"lazy_arrivals\": true"));
+        assert!(e.contains("\"peak_store_bytes\": 4096"));
+        assert!(e.contains("\"events_popped\": 2"));
+        assert!(e.contains("\"refresh_edge_secs\": 0.5"));
+        assert!(e.contains("\"refresh_root_secs\": 0.25"));
+        // refresh 0.5 + selection 0.1 over 2 rounds.
+        assert!(e.contains("\"coord_secs_per_round\": 0.3"), "entry: {e}");
+        let s = bench_json(&[e]);
+        assert!(s.contains("\"runs\""));
+    }
+
+    #[test]
+    fn artifact_writer_returns_a_typed_error_with_the_path() {
+        let bad = "/nonexistent-dir-for-report-test/x.json";
+        let err = write_bench_json(bad, &[report().bench_entry_json(0.1)]).unwrap_err();
+        assert_eq!(err.path, bad);
+        let msg = err.to_string();
+        assert!(msg.contains("nonexistent-dir-for-report-test"), "{msg}");
+        assert!(std::error::Error::source(&err).is_some());
+        // The happy path still writes the assembled artifact.
+        let path = std::env::temp_dir().join("feddde_bench_artifact.json");
+        write_bench_json(path.to_str().unwrap(), &[report().bench_entry_json(0.1)])
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("{\n  \"runs\": [\n"));
     }
 
     #[test]

@@ -683,6 +683,111 @@ fn chaos_scenarios_recover_to_the_uninterrupted_digest() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Sharded-fleet oracle: the coordinator-shard count and lazy arrival
+// sampling are pure execution strategies — N coordinator shards merge to
+// the flat coordinator's bits, and a lazily-materialized cohort reproduces
+// the eagerly-built fleet's event stream byte for byte (for the
+// cohort-invariant policies; `cluster` reclusters over the cohort and
+// `round_robin` cursors over the full fleet, so they are exercised through
+// the engine's own unit tests instead).
+
+fn run_sim_sharded(scenario: &str, policy: &str, shards: usize, lazy: bool) -> SimReport {
+    let cfg = SimConfig {
+        n_clients: 40,
+        rounds: 6,
+        per_round: 8,
+        refresh_every: 2,
+        policy: policy.into(),
+        shards,
+        lazy_arrivals: lazy,
+        seed: 47,
+        ..Default::default()
+    };
+    Simulator::new(cfg, Scenario::by_name(scenario).unwrap())
+        .unwrap()
+        .run()
+        .unwrap()
+}
+
+#[test]
+fn sharded_simulator_is_shard_count_invariant() {
+    // Acceptance oracle: shards in {1, 4, 16} produce bit-identical merged
+    // results — event stream, round reports, digests. The hier diagnostics
+    // block differs (it only exists for S > 1), so rounds are compared
+    // through the shared fields rather than raw JSON.
+    for scenario in ["sync_baseline", "straggler_cut", "drift_burst"] {
+        let flat = run_sim_sharded(scenario, "cluster", 1, false);
+        for shards in [4usize, 16] {
+            let sharded = run_sim_sharded(scenario, "cluster", shards, false);
+            assert_eq!(flat.events_jsonl(), sharded.events_jsonl(),
+                "{scenario}: shards={shards} changed the event stream");
+            assert_eq!(flat.event_digest(), sharded.event_digest(),
+                "{scenario}: shards={shards} changed the digest");
+            for (a, b) in flat.rounds.iter().zip(&sharded.rounds) {
+                assert_eq!(a.t_end.to_bits(), b.t_end.to_bits(),
+                    "{scenario} round {}: clock diverged at shards={shards}", a.round);
+                assert_eq!(a.completed, b.completed,
+                    "{scenario} round {}: completions diverged", a.round);
+                assert_eq!(a.refresh_secs.to_bits(), b.refresh_secs.to_bits(),
+                    "{scenario} round {}: refresh time diverged", a.round);
+            }
+        }
+    }
+}
+
+#[test]
+fn explicit_flat_eager_config_matches_the_default_bitwise() {
+    // shards=1 + lazy_arrivals=false spelled out must reproduce the
+    // implicit default byte for byte — the new knobs at their inert
+    // settings cannot perturb the pre-existing stream.
+    let default_run = run_sim("straggler_cut", 0, 47);
+    let cfg = SimConfig {
+        n_clients: 40,
+        rounds: 6,
+        per_round: 8,
+        refresh_every: 2,
+        shards: 1,
+        lazy_arrivals: false,
+        seed: 47,
+        ..Default::default()
+    };
+    let explicit = Simulator::new(cfg, Scenario::by_name("straggler_cut").unwrap())
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_sim_bitwise_equal(&default_run, &explicit, "explicit flat/eager vs default");
+    for (a, b) in default_run.rounds.iter().zip(&explicit.rounds) {
+        assert!(b.hier.is_none(), "flat run emitted a hier block at round {}", a.round);
+        assert_eq!(a.to_json(), b.to_json(), "round {} JSON diverged", a.round);
+    }
+}
+
+#[test]
+fn lazy_arrival_sampling_is_bitwise_inert() {
+    // Only clients drawn active are materialized under lazy arrivals, yet
+    // the event stream, reports and digests must match the eager run for
+    // every cohort-invariant policy on both calm and churning scenarios.
+    for policy in ["random", "oort", "powd"] {
+        for scenario in ["sync_baseline", "diurnal", "flash_crowd"] {
+            let eager = run_sim_sharded(scenario, policy, 1, false);
+            let lazy = run_sim_sharded(scenario, policy, 1, true);
+            assert_sim_bitwise_equal(&eager, &lazy, &format!("{policy}/{scenario} lazy vs eager"));
+        }
+    }
+}
+
+#[test]
+fn lazy_sharded_chaos_run_is_reproducible_and_invariant() {
+    // The full stack at once: lazy arrivals + 4 coordinator shards under
+    // the fault fabric must self-reproduce and match the lazy flat run.
+    let a = run_sim_sharded("regional_outage", "random", 4, true);
+    let b = run_sim_sharded("regional_outage", "random", 4, true);
+    assert_sim_bitwise_equal(&a, &b, "lazy sharded chaos replay");
+    let flat = run_sim_sharded("regional_outage", "random", 1, true);
+    assert_eq!(a.events_jsonl(), flat.events_jsonl(), "shards=4 changed the chaos stream");
+}
+
 #[test]
 fn direct_minibatch_and_lloyd_agree_on_separated_summaries() {
     // Belt-and-braces on the raw engines (no refresher): same summary

@@ -955,3 +955,76 @@ fn zeroed_fault_rates_leave_the_event_stream_bitwise_untouched() {
         assert_eq!(j.to_jsonl(), want_j.to_jsonl(), "journal bytes moved");
     });
 }
+
+// ---------------------------------------------------------------------------
+// Sharded-fleet fuzz: coordinator shard count and lazy arrival sampling are
+// execution strategies, never semantics. Random small fleets (N <= 200),
+// scenarios, and seeds — the lazy run must equal the eager run bitwise for
+// every cohort-invariant policy, and any shard count must reproduce the
+// flat coordinator's stream and journal byte for byte.
+
+#[test]
+fn lazy_arrivals_equal_eager_for_random_small_fleets() {
+    check(6, |g| {
+        let scenario =
+            ["sync_baseline", "straggler_cut", "diurnal", "flash_crowd", "heavy_tail"]
+                [g.usize_in(0, 4)];
+        // Cohort-invariant policies only: `cluster` refreshes over the
+        // arrived cohort and `round_robin` cursors over the full fleet, so
+        // their lazy runs legitimately diverge.
+        let policy = ["random", "oort", "powd"][g.usize_in(0, 2)];
+        let cfg = |lazy: bool| SimConfig {
+            n_clients: g.usize_in(10, 200),
+            rounds: g.usize_in(2, 5),
+            per_round: g.usize_in(2, 10),
+            refresh_every: g.usize_in(0, 3),
+            policy: policy.into(),
+            lazy_arrivals: lazy,
+            seed: 9300 + g.case as u64,
+            ..Default::default()
+        };
+        let sc = Scenario::by_name(scenario).unwrap();
+        let (eager, ej) =
+            Simulator::new(cfg(false), sc.clone()).unwrap().run_journaled().unwrap();
+        let (lazy, lj) = Simulator::new(cfg(true), sc).unwrap().run_journaled().unwrap();
+        assert_eq!(
+            lazy.event_digest(),
+            eager.event_digest(),
+            "{policy}/{scenario}: lazy arrivals forked the event stream"
+        );
+        assert_eq!(lazy.events_jsonl(), eager.events_jsonl(), "{policy}/{scenario}: stream bytes");
+        assert_eq!(lj.to_jsonl(), ej.to_jsonl(), "{policy}/{scenario}: journal bytes");
+        for (a, b) in eager.rounds.iter().zip(&lazy.rounds) {
+            assert_eq!(a.to_json(), b.to_json(), "{policy}/{scenario}: round {} report", a.round);
+        }
+    });
+}
+
+#[test]
+fn shard_counts_reproduce_the_flat_stream_for_random_fleets() {
+    check(5, |g| {
+        let scenario =
+            ["sync_baseline", "straggler_cut", "drift_burst"][g.usize_in(0, 2)];
+        let cfg = |shards: usize| SimConfig {
+            n_clients: g.usize_in(10, 120),
+            rounds: g.usize_in(2, 4),
+            per_round: g.usize_in(2, 8),
+            refresh_every: g.usize_in(1, 2),
+            shards,
+            seed: 9400 + g.case as u64,
+            ..Default::default()
+        };
+        let sc = Scenario::by_name(scenario).unwrap();
+        let (flat, fj) =
+            Simulator::new(cfg(1), sc.clone()).unwrap().run_journaled().unwrap();
+        let shards = [2, 4, 7, 16][g.usize_in(0, 3)];
+        let (sharded, sj) =
+            Simulator::new(cfg(shards), sc).unwrap().run_journaled().unwrap();
+        assert_eq!(
+            sharded.event_digest(),
+            flat.event_digest(),
+            "{scenario}: shards={shards} forked the event stream"
+        );
+        assert_eq!(sj.to_jsonl(), fj.to_jsonl(), "{scenario}: shards={shards} moved the journal");
+    });
+}
