@@ -1,7 +1,7 @@
 # FedDDE build orchestration. The Rust crate lives in rust/, the AOT
 # compiler (JAX + Pallas -> HLO text artifacts) in python/.
 
-.PHONY: artifacts build test bench bench-smoke sim-smoke replay-smoke chaos-smoke scale-smoke python-test clean
+.PHONY: artifacts build test bench bench-smoke sim-smoke replay-smoke chaos-smoke scale-smoke obs-smoke python-test clean
 
 # AOT-lower every JAX graph / Pallas kernel into rust/artifacts (manifest.tsv
 # + *.hlo.txt). Requires jax; runs on CPU.
@@ -93,6 +93,32 @@ scale-smoke:
 		--scale-json results/BENCH_scale.json
 	@test -s rust/results/BENCH_scale.json
 	@echo "wrote rust/results/BENCH_scale.json"
+
+# Telemetry smoke: traced diurnal + regional_outage through the CLI.
+# --obs-bench runs each scenario untraced then traced and exits non-zero
+# unless the journal digests are bitwise equal (tracing is a no-op), writing
+# rust/results/BENCH_obs.json (traced vs untraced host secs/round, span
+# counts, trace digests). The profile subcommand re-validates well-
+# nestedness before rendering, and python/tools/check_trace.py re-checks
+# every trace with an exact Python port of the nesting rules + FNV-1a-64
+# digest, cross-checked against the BENCH_obs.json digests.
+obs-smoke:
+	cd rust && cargo run --release -- run-sim \
+		--scenario diurnal,regional_outage \
+		--clients 50 --rounds 6 --per-round 10 \
+		--trace results/obs/trace.jsonl --metrics-out results/obs/metrics.json \
+		--obs-bench results/BENCH_obs.json
+	cd rust && cargo run --release -- profile \
+		--trace results/obs/trace_diurnal.jsonl \
+		--metrics results/obs/metrics_diurnal.json --top 5
+	python python/tools/check_trace.py \
+		rust/results/obs/trace_diurnal.jsonl \
+		rust/results/obs/trace_regional_outage.jsonl \
+		--bench rust/results/BENCH_obs.json
+	@test -s rust/results/BENCH_obs.json
+	@test -s rust/results/obs/trace_diurnal.jsonl.chrome.json
+	@test -s rust/results/obs/metrics_regional_outage.json.prom
+	@echo "obs smoke ok: traces well-nested, digests match, BENCH_obs.json written"
 
 clean:
 	cd rust && cargo clean

@@ -1,0 +1,169 @@
+#!/usr/bin/env python3
+"""Validate a feddde span trace outside the Rust toolchain.
+
+An exact port of ``rust/src/obs/profile.rs::check_well_nested`` plus the
+FNV-1a-64 digest the tracer computes over its JSONL bytes
+(``rust/src/obs/trace.rs::Tracer::digest``), so `make obs-smoke` can prove
+the CLI-emitted artifacts are structurally sound and byte-stable without
+trusting the emitter to validate itself.
+
+Checks per trace file:
+  * every line parses as a span object with id/parent/name/round/start/dur/attrs;
+  * ids are unique and nonzero, parents precede children within the same round;
+  * children are contained in the parent's time window and per-parent child
+    durations sum to at most the parent duration (1e-9 relative slop,
+    matching the Rust checker bit for bit in its comparisons);
+  * one root span per round, root rounds non-decreasing;
+  * the recomputed FNV-1a-64 digest of the raw bytes — printed, and when
+    --bench BENCH_obs.json is given, required to appear among its
+    ``trace_digest`` entries (the traced run the benchmark measured is the
+    same bytes we are holding).
+
+Exit code 0 on success, 1 with a message on the first violation.
+
+Usage:
+  python python/tools/check_trace.py TRACE.jsonl [TRACE2.jsonl ...] [--bench BENCH_obs.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x00000100000001B3
+U64 = 0xFFFFFFFFFFFFFFFF
+
+REQUIRED_KEYS = ("id", "parent", "name", "round", "start", "dur", "attrs")
+
+
+def fnv1a64(data: bytes) -> int:
+    h = FNV_OFFSET
+    for b in data:
+        h ^= b
+        h = (h * FNV_PRIME) & U64
+    return h
+
+
+def parse_trace(text: str):
+    """Port of obs::profile::parse_trace: one span object per line."""
+    spans = []
+    for lineno, line in enumerate(text.splitlines(), 1):
+        if not line.strip():
+            continue
+        try:
+            obj = json.loads(line)
+        except json.JSONDecodeError as e:
+            raise ValueError(f"trace line {lineno}: {e}") from None
+        for key in REQUIRED_KEYS:
+            if key not in obj:
+                raise ValueError(f"trace line {lineno}: missing key {key!r}")
+        # The emitter writes `null` for non-finite floats; the Rust parser
+        # reads null as NaN so validation rejects it downstream.
+        for key in ("start", "dur"):
+            if obj[key] is None:
+                obj[key] = math.nan
+        if not isinstance(obj["attrs"], dict):
+            raise ValueError(f"trace line {lineno}: attrs must be an object")
+        spans.append(obj)
+    return spans
+
+
+def check_well_nested(spans, eps=1e-9):
+    """Port of obs::profile::check_well_nested; raises ValueError."""
+    by_id = {}
+    for s in spans:
+        dur = float(s["dur"])
+        if not math.isfinite(dur) or dur < 0.0:
+            raise ValueError(f"span {s['id']} ({s['name']}) has bad duration {dur}")
+        sid = int(s["id"])
+        if sid == 0:
+            raise ValueError(f"span {s['name']} uses reserved id 0")
+        if sid in by_id:
+            raise ValueError(f"duplicate span id {sid}")
+        by_id[sid] = s
+    child_sum = {int(s["id"]): 0.0 for s in spans}
+    for s in spans:
+        parent = int(s["parent"])
+        if parent == 0:
+            continue
+        p = by_id.get(parent)
+        if p is None:
+            raise ValueError(f"span {s['id']} ({s['name']}) has unknown parent {parent}")
+        if parent >= int(s["id"]):
+            raise ValueError(f"span {s['id']} ({s['name']}) opened before its parent {parent}")
+        if int(p["round"]) != int(s["round"]):
+            raise ValueError(
+                f"span {s['id']} ({s['name']}) in round {s['round']} "
+                f"but parent {parent} in round {p['round']}"
+            )
+        slop = eps * (1.0 + abs(float(p["dur"])) + abs(float(p["start"])))
+        s0, s1 = float(s["start"]), float(s["start"]) + float(s["dur"])
+        p0, p1 = float(p["start"]), float(p["start"]) + float(p["dur"])
+        if s0 < p0 - slop or s1 > p1 + slop:
+            raise ValueError(
+                f"span {s['id']} ({s['name']}) [{s0}, {s1}] escapes "
+                f"parent {parent} ({p['name']}) [{p0}, {p1}]"
+            )
+        child_sum[parent] += float(s["dur"])
+    for s in spans:
+        total = child_sum[int(s["id"])]
+        slop = eps * (1.0 + abs(float(s["dur"])))
+        if total > float(s["dur"]) + slop:
+            raise ValueError(
+                f"span {s['id']} ({s['name']}): children durations "
+                f"sum to {total} > own duration {s['dur']}"
+            )
+
+
+def check_roots(spans):
+    roots = [s for s in spans if int(s["parent"]) == 0 and s["name"] == "round"]
+    if not roots:
+        raise ValueError("trace has no root round spans")
+    rounds = [int(s["round"]) for s in roots]
+    if rounds != sorted(rounds):
+        raise ValueError(f"root round spans out of order: {rounds}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("traces", nargs="+", help="span trace JSONL files (from --trace)")
+    ap.add_argument(
+        "--bench",
+        help="BENCH_obs.json whose trace_digest entries must include each trace's digest",
+    )
+    args = ap.parse_args(argv)
+
+    bench_digests = None
+    if args.bench:
+        with open(args.bench, "r", encoding="utf-8") as f:
+            bench = json.load(f)
+        bench_digests = {run["trace_digest"] for run in bench["runs"]}
+
+    for path in args.traces:
+        with open(path, "rb") as f:
+            raw = f.read()
+        spans = parse_trace(raw.decode("utf-8"))
+        check_well_nested(spans)
+        check_roots(spans)
+        digest = f"0x{fnv1a64(raw):016x}"
+        n_rounds = sum(1 for s in spans if int(s["parent"]) == 0 and s["name"] == "round")
+        print(f"{path}: {len(spans)} spans, {n_rounds} rounds, well-nested, digest {digest}")
+        if bench_digests is not None and digest not in bench_digests:
+            print(
+                f"error: {path} digest {digest} not among {args.bench} "
+                f"trace_digest entries {sorted(bench_digests)}",
+                file=sys.stderr,
+            )
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    try:
+        sys.exit(main())
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        sys.exit(1)

@@ -259,6 +259,15 @@ pub struct ExperimentConfig {
     /// here after every round, and `feddde run --resume` recovers from it
     /// (empty = journaling off).
     pub journal: String,
+    /// Span-trace output path (JSONL; a sibling `.chrome.json` Chrome
+    /// `trace_event` export is written alongside). Empty = tracing off,
+    /// which is a true no-op: zero RNG consumed, event streams and journal
+    /// bytes bitwise identical to a tracing-free build.
+    pub trace: String,
+    /// Metrics-registry dump path (JSON; a sibling `.prom` Prometheus text
+    /// exposition is written alongside). Empty = no dump (the registry
+    /// still collects — it is pure bookkeeping).
+    pub metrics_out: String,
 }
 
 impl Default for ExperimentConfig {
@@ -291,13 +300,15 @@ impl Default for ExperimentConfig {
             drift_frac: 1.0,
             out: String::new(),
             journal: String::new(),
+            trace: String::new(),
+            metrics_out: String::new(),
         }
     }
 }
 
 /// The keys `ExperimentConfig::from_toml` consumes (the strict-parsing
 /// whitelist; also the `feddde run --help` key reference).
-pub const EXPERIMENT_KEYS: [&str; 27] = [
+pub const EXPERIMENT_KEYS: [&str; 29] = [
     "dataset",
     "n_clients",
     "rounds",
@@ -325,6 +336,8 @@ pub const EXPERIMENT_KEYS: [&str; 27] = [
     "drift.frac",
     "out",
     "journal",
+    "trace",
+    "metrics_out",
 ];
 
 impl ExperimentConfig {
@@ -380,6 +393,8 @@ impl ExperimentConfig {
             drift_frac: t.float_or("drift.frac", d.drift_frac),
             out: t.str_or("out", &d.out),
             journal: t.str_or("journal", &d.journal),
+            trace: t.str_or("trace", &d.trace),
+            metrics_out: t.str_or("metrics_out", &d.metrics_out),
         })
     }
 
@@ -444,6 +459,14 @@ pub struct SimConfig {
     pub seed: u64,
     /// Directory for per-scenario JSONL reports (empty = no files).
     pub out_dir: String,
+    /// Span-trace output path (JSONL + sibling `.chrome.json`; with
+    /// multiple scenarios the scenario name is suffixed before the
+    /// extension). Empty = tracing off — a true no-op on the sim: event
+    /// streams and journal bytes stay bitwise identical.
+    pub trace: String,
+    /// Metrics-registry dump path (JSON + sibling `.prom`), per-scenario
+    /// suffixed like `trace`. Empty = no dump.
+    pub metrics_out: String,
     /// Fault-injection plan (`[sim.fault]` keys / `--fault-*` flags). Inert
     /// by default; a non-inert config-level plan overrides the scenario's
     /// baked-in plan. The zero-fault path is bitwise identical to a build
@@ -471,6 +494,8 @@ impl Default for SimConfig {
             update_bytes: 400_000,
             seed: 1,
             out_dir: String::new(),
+            trace: String::new(),
+            metrics_out: String::new(),
             fault: crate::sim::fault::FaultPlan::inert(),
         }
     }
@@ -478,7 +503,7 @@ impl Default for SimConfig {
 
 /// The keys `SimConfig::from_toml` consumes (all under `[sim]`, fault knobs
 /// under `[sim.fault]`).
-pub const SIM_KEYS: [&str; 30] = [
+pub const SIM_KEYS: [&str; 32] = [
     "sim.scenario",
     "sim.clients",
     "sim.rounds",
@@ -496,6 +521,8 @@ pub const SIM_KEYS: [&str; 30] = [
     "sim.update_bytes",
     "sim.seed",
     "sim.out_dir",
+    "sim.trace",
+    "sim.metrics_out",
     "sim.fault.upload_fail_rate",
     "sim.fault.heartbeat_loss_rate",
     "sim.fault.corrupt_rate",
@@ -562,6 +589,8 @@ impl SimConfig {
             update_bytes: t.int_or("sim.update_bytes", d.update_bytes as i64) as usize,
             seed: t.int_or("sim.seed", d.seed as i64) as u64,
             out_dir: t.str_or("sim.out_dir", &d.out_dir),
+            trace: t.str_or("sim.trace", &d.trace),
+            metrics_out: t.str_or("sim.metrics_out", &d.metrics_out),
             fault,
         })
     }
@@ -694,6 +723,27 @@ mod tests {
         let c = ExperimentConfig::from_toml(&t).unwrap();
         assert_eq!(c.journal, "results/run.journal");
         assert_eq!(ExperimentConfig::default().journal, "");
+    }
+
+    #[test]
+    fn telemetry_paths_from_toml_and_default_off() {
+        let d = ExperimentConfig::default();
+        assert_eq!(d.trace, "", "tracing must default off");
+        assert_eq!(d.metrics_out, "");
+        let t = Toml::parse(
+            "trace = \"results/run_trace.jsonl\"\nmetrics_out = \"results/run_metrics.json\"\n\
+             [sim]\ntrace = \"results/sim_trace.jsonl\"\nmetrics_out = \"results/sim_metrics.json\"\n",
+        )
+        .unwrap();
+        let e = ExperimentConfig::from_toml(&t).unwrap();
+        assert_eq!(e.trace, "results/run_trace.jsonl");
+        assert_eq!(e.metrics_out, "results/run_metrics.json");
+        let s = SimConfig::from_toml(&t).unwrap();
+        assert_eq!(s.trace, "results/sim_trace.jsonl");
+        assert_eq!(s.metrics_out, "results/sim_metrics.json");
+        let ds = SimConfig::from_toml(&Toml::parse("").unwrap()).unwrap();
+        assert_eq!(ds.trace, "");
+        assert_eq!(ds.metrics_out, "");
     }
 
     #[test]

@@ -28,6 +28,7 @@ use crate::data::partition::Partition;
 use crate::data::spec::DatasetSpec;
 use crate::device::{DeviceProfile, FleetModel};
 use crate::metrics::{MetricsLog, RoundMetrics};
+use crate::obs::{Registry, Tracer};
 use crate::runtime::{lit_f32, lit_scalar, to_scalar_f32, to_vec_f32, Engine};
 use crate::selection::{self, ClientView, SelectionPolicy};
 use crate::summary::SummaryEngine;
@@ -74,6 +75,12 @@ pub struct Coordinator {
     /// The event-sourced phase machine the round loop runs through; owns
     /// the transition journal.
     machine: CoordinatorMachine,
+    /// Span tracer, live iff `cfg.trace` names an output path; a true
+    /// no-op otherwise (no span recorded, no RNG drawn).
+    tracer: Tracer,
+    /// Fleet metrics registry. Always collects (pure bookkeeping); the CLI
+    /// persists it only when `cfg.metrics_out` is set.
+    registry: Registry,
 }
 
 impl Coordinator {
@@ -131,6 +138,7 @@ impl Coordinator {
         let (eval_x, eval_oh) = build_eval_batch(&spec, &generator);
 
         let n = spec.n_clients;
+        let trace_on = !cfg.trace.is_empty();
         let machine = CoordinatorMachine::new(JournalHeader {
             kind: "train".into(),
             seed: cfg.seed,
@@ -161,7 +169,19 @@ impl Coordinator {
             log: MetricsLog::default(),
             sim_time: 0.0,
             machine,
+            tracer: Tracer::new(trace_on),
+            registry: Registry::new(),
         })
+    }
+
+    /// The metrics registry accumulated so far (always collecting).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// The span tracer (empty unless `cfg.trace` is set).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
     }
 
     /// The phase machine (and through it the journal accumulated so far).
@@ -270,6 +290,8 @@ impl Coordinator {
             return Ok(0.0);
         }
         let k = if self.cfg.clusters > 0 { self.cfg.clusters } else { self.spec.n_groups };
+        let t0 = self.sim_time;
+        let span = self.tracer.open("refresh", round, t0);
         let r = self.refresher.refresh(
             &self.engine,
             self.summary_engine.as_ref(),
@@ -281,6 +303,37 @@ impl Coordinator {
             k,
             self.cfg.seed,
         )?;
+        // The batch clock only knows the refresh total, so the phase detail
+        // rides as dur-0 leafs + attrs (the sim path charges exact models).
+        let s = self.tracer.leaf("summarize", round, t0, 0.0);
+        self.tracer.attr_f64(s, "model_secs", r.device_parallel_secs);
+        self.tracer.attr_u64(s, "recomputed", r.recomputed.len() as u64);
+        self.tracer.attr_u64(s, "store_hits", r.store.hits);
+        self.tracer.attr_u64(s, "store_misses", r.store.misses);
+        let c = self.tracer.leaf("cluster", round, t0, 0.0);
+        self.tracer.attr_f64(c, "model_secs", r.cluster_model_secs);
+        self.tracer.attr_u64(c, "iters", r.cluster_iters as u64);
+        self.tracer.attr_f64(c, "skip_rate", r.assign_stats.skip_rate());
+        self.tracer.attr_u64(span, "recomputed", r.recomputed.len() as u64);
+        self.tracer.attr_u64(span, "invalidated", r.invalidated as u64);
+        self.tracer.attr_u64(span, "evicted", r.evicted as u64);
+        self.tracer.attr_u64(span, "store_rows", r.store.rows as u64);
+        self.tracer.attr_u64(span, "store_bytes", r.store.bytes as u64);
+        self.tracer.close_with_dur(span, r.sim_secs);
+        // Store counters are LIFETIME totals (the store persists across
+        // refreshes), so they are set, not incremented.
+        self.registry.set_counter("store_hits_total", r.store.hits);
+        self.registry.set_counter("store_misses_total", r.store.misses);
+        self.registry.set_counter("store_evictions_total", r.store.evictions);
+        self.registry.set_counter("store_compactions_total", r.store.compactions);
+        self.registry.set_gauge("store_bytes", r.store.bytes as f64);
+        self.registry.set_gauge("store_rows", r.store.rows as f64);
+        self.registry.inc("distance_pairs_total", r.assign_stats.pairs);
+        self.registry.inc("distance_exact_total", r.assign_stats.exact);
+        self.registry.inc("distance_screened_total", r.assign_stats.screened);
+        self.registry.inc("refresh_recomputed_total", r.recomputed.len() as u64);
+        self.registry.inc("refreshes_total", 1);
+        self.registry.observe("refresh_secs", r.sim_secs);
         self.clusters = r.clusters;
         log::info!(
             "round {round}: refreshed {}/{} summaries ({} cached; sim {:.2}s, cluster {:.3}s)",
@@ -298,8 +351,12 @@ impl Coordinator {
     /// recorded. `round` must be the next unclosed round (the machine
     /// rejects gaps and replays).
     pub fn step(&mut self, round: usize) -> Result<RoundMetrics> {
+        let t0 = self.sim_time;
+        let span_round = self.tracer.open("round", round, t0);
         // start_round handler: refresh scheduling (summaries + clustering).
         self.machine.apply(Transition::RoundStarted { round })?;
+        self.tracer.leaf("journal_append", round, t0, 0.0);
+        self.registry.inc("journal_appends_total", 1);
         let refresh_secs = self.maybe_refresh(round)?;
 
         // Temporarily detach the policy so `views` (which borrows &self)
@@ -339,12 +396,23 @@ impl Coordinator {
         // rendezvous handler (availability) and start_training handler (the
         // selection), applied after the fleet views release their borrows.
         self.machine.apply(Transition::FleetRendezvoused { round, available })?;
+        self.tracer.leaf("journal_append", round, t0 + refresh_secs, 0.0);
+        self.registry.inc("journal_appends_total", 1);
         self.machine
             .apply(Transition::ClientsSelected { round, selected: selected.clone() })?;
+        self.tracer.leaf("journal_append", round, t0 + refresh_secs, 0.0);
+        self.registry.inc("journal_appends_total", 1);
+        // Selection is not charged on the batch clock (the sim charges its
+        // per-policy model), so its span is instantaneous.
+        let span_sel = self.tracer.leaf("selection", round, t0 + refresh_secs, 0.0);
+        self.tracer.attr_u64(span_sel, "eligible", available as u64);
+        self.tracer.attr_u64(span_sel, "want", want as u64);
+        self.tracer.attr_u64(span_sel, "selected", selected.len() as u64);
         if selected.is_empty() {
             bail!("round {round}: no clients available");
         }
 
+        let span_train = self.tracer.open("train", round, t0 + refresh_secs);
         let mut updates = Vec::with_capacity(selected.len());
         let mut round_time = 0.0f64;
         let mut host_exec = 0.0f64;
@@ -365,6 +433,10 @@ impl Coordinator {
             train_losses.push(loss);
             updates.push((new_params, part.n_samples as f64));
         }
+        let t_end = t0 + refresh_secs + round_time;
+        self.tracer.attr_u64(span_train, "launched", selected.len() as u64);
+        self.tracer.attr_f64(span_train, "host_exec_secs", host_exec);
+        self.tracer.close_with_dur(span_train, round_time);
         // end_training handler: the batch path trains every selected client
         // to completion — no dropouts, no deadline cuts (those live in the
         // expected-duration cut above and in the discrete-event simulator).
@@ -375,12 +447,20 @@ impl Coordinator {
             timed_out: Vec::new(),
             failed: Vec::new(),
         })?;
+        self.tracer.leaf("journal_append", round, t_end, 0.0);
+        self.registry.inc("journal_appends_total", 1);
         // aggregate handler: FedAvg, then evaluation + metrics emission.
         self.params = fedavg(&updates)?;
+        let span_agg = self.tracer.leaf("aggregate", round, t_end, 0.0);
+        self.tracer.attr_u64(span_agg, "updates", selected.len() as u64);
 
         let (acc, eval_loss) = self.evaluate()?;
+        let span_eval = self.tracer.leaf("evaluate", round, t_end, 0.0);
+        self.tracer.attr_f64(span_eval, "accuracy", acc);
         self.machine
             .apply(Transition::RoundAggregated { round, aggregated: true, degraded: false })?;
+        self.tracer.leaf("journal_append", round, t_end, 0.0);
+        self.registry.inc("journal_appends_total", 1);
         self.sim_time += refresh_secs + round_time;
         let m = RoundMetrics {
             round,
@@ -393,6 +473,21 @@ impl Coordinator {
             selected,
             host_exec_secs: host_exec,
         };
+        self.tracer.attr_u64(span_round, "selected", m.selected.len() as u64);
+        self.tracer.attr_u64(span_round, "completed", m.selected.len() as u64);
+        self.tracer.attr_bool(span_round, "aggregated", true);
+        // Close the root span with the row's EXACT duration bits: the
+        // profile inspector reproduces `round_time` from the trace alone.
+        self.tracer.close_with_dur(span_round, m.round_time);
+        self.registry.inc("rounds_total", 1);
+        self.registry.inc("selected_total", m.selected.len() as u64);
+        self.registry.inc("completed_total", m.selected.len() as u64);
+        self.registry.inc("aggregated_rounds_total", 1);
+        self.registry.observe("round_secs", m.round_time);
+        self.registry
+            .observe(&format!("selection_secs_{}", self.cfg.policy), 0.0);
+        self.registry.set_gauge("eval_accuracy", acc);
+        self.registry.snapshot_round(round);
         self.log.push(m.clone());
         Ok(m)
     }
@@ -450,6 +545,9 @@ impl Coordinator {
                 .context("re-executing journaled rounds during recovery")?;
         }
         coord.machine.end_replay()?;
+        let l = coord.tracer.leaf("journal_replay", closed, coord.sim_time, 0.0);
+        coord.tracer.attr_u64(l, "rounds_replayed", closed as u64);
+        coord.registry.inc("journal_replays_total", 1);
         Ok(coord)
     }
 }

@@ -58,7 +58,7 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::cluster::kmeans::{self, KmeansConfig};
+use crate::cluster::kmeans::{self, AssignStats, KmeansConfig};
 use crate::cluster::minibatch::{self, MinibatchConfig, WarmState};
 use crate::cluster::{ClusterBackend, Pruning};
 use crate::coordinator::store::{StoreStats, SummaryStore};
@@ -197,6 +197,13 @@ pub struct RefreshResult {
     /// (hits/misses/evictions/compactions). Default-zero when the store is
     /// disabled (`use_cache = false`).
     pub store: StoreStats,
+    /// Distance-computation accounting for this refresh's clustering pass
+    /// (point×centroid pairs considered, exact evaluations, screening dots)
+    /// — the skip-rate telemetry the obs layer reports. On a sharded refresh
+    /// this aggregates every shard-local fit plus the root fit, so it is not
+    /// shard-count invariant (the clustering itself is). Zero when
+    /// clustering was trivial or the naive kernel ran without accounting.
+    pub assign_stats: AssignStats,
 }
 
 impl RefreshResult {
@@ -255,6 +262,7 @@ struct FleetClusterOut {
     centroids: Mat,
     secs: f64,
     model_secs: f64,
+    assign_stats: AssignStats,
 }
 
 /// Server-side clustering over a fleet matrix — the one code path both the
@@ -277,9 +285,11 @@ fn cluster_fleet(
     let tc = std::time::Instant::now();
     let use_minibatch = opts.backend.use_minibatch(n);
     let mut minibatch_batch = 0usize;
-    let (clusters, cluster_iters, centroids) = if k_clusters <= 1 || n <= k_clusters {
+    let (clusters, cluster_iters, centroids, assign_stats) = if k_clusters <= 1
+        || n <= k_clusters
+    {
         *warm = None;
-        (vec![0; n], 0, Mat::zeros(0, dim))
+        (vec![0; n], 0, Mat::zeros(0, dim), AssignStats::default())
     } else {
         // Balance summary blocks first: the proposed summary concatenates
         // a feature-mean block and a label-distribution block of very
@@ -305,7 +315,12 @@ fn cluster_fleet(
                 minibatch::fit_warm(&balanced, &cfg, warm.as_ref())
             };
             *warm = Some(fitted.warm);
-            (fitted.result.assignments, fitted.result.iters, fitted.result.centroids)
+            (
+                fitted.result.assignments,
+                fitted.result.iters,
+                fitted.result.centroids,
+                fitted.result.stats,
+            )
         } else {
             *warm = None;
             let mut cfg = KmeansConfig::new(k_clusters);
@@ -317,7 +332,7 @@ fn cluster_fleet(
             } else {
                 kmeans::fit(&balanced, &cfg)
             };
-            (fitted.assignments, fitted.iters, fitted.centroids)
+            (fitted.assignments, fitted.iters, fitted.centroids, fitted.stats)
         }
     };
     let secs = tc.elapsed().as_secs_f64();
@@ -328,7 +343,7 @@ fn cluster_fleet(
     } else {
         cluster_model_secs(use_minibatch, n, k_clusters, dim, cluster_iters, minibatch_batch)
     };
-    FleetClusterOut { clusters, iters: cluster_iters, centroids, secs, model_secs }
+    FleetClusterOut { clusters, iters: cluster_iters, centroids, secs, model_secs, assign_stats }
 }
 
 /// Stateful refresh service: owns the summary store and the warm-start
@@ -610,6 +625,7 @@ impl FleetRefresher {
             centroids,
             secs: cluster_secs,
             model_secs: cluster_model,
+            assign_stats,
         } = fit;
 
         // Compact only after every read through recorded slots is done
@@ -652,6 +668,7 @@ impl FleetRefresher {
             invalidated,
             evicted,
             store: store_stats,
+            assign_stats,
         })
     }
 }
@@ -848,6 +865,7 @@ impl ShardedFleetRefresher {
         let mut local_iters = Vec::with_capacity(s_count);
         let mut shard_store_bytes = Vec::with_capacity(s_count);
         let mut edge_cluster_model_secs = 0.0f64;
+        let mut assign_stats = AssignStats::default();
         let mut locals: Vec<(Mat, Vec<u64>)> = Vec::new();
         for (s, result) in results.into_iter().enumerate() {
             let (lo, hi) = bounds[s];
@@ -876,6 +894,7 @@ impl ShardedFleetRefresher {
             store.compactions += r.store.compactions;
             local_iters.push(r.cluster_iters);
             edge_cluster_model_secs = edge_cluster_model_secs.max(r.cluster_model_secs);
+            assign_stats.merge(&r.assign_stats);
             shard_store_bytes.push(r.store.bytes);
             if r.centroids.rows() > 0 {
                 let mut counts = vec![0u64; r.centroids.rows()];
@@ -897,6 +916,7 @@ impl ShardedFleetRefresher {
             seed,
             threads,
         );
+        assign_stats.merge(&fit.assign_stats);
 
         // Approximate merged clustering: weighted Lloyd over ≤ S·k local
         // centroids — the O(S·k·dim) root the hierarchy diagnostics price.
@@ -952,6 +972,7 @@ impl ShardedFleetRefresher {
                 recomputed,
                 invalidated,
                 evicted,
+                assign_stats,
                 store,
             },
             hier,

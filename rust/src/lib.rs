@@ -18,6 +18,7 @@ pub mod coordinator;
 pub mod data;
 pub mod device;
 pub mod metrics;
+pub mod obs;
 pub mod privacy;
 pub mod runtime;
 pub mod selection;

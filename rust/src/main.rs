@@ -8,6 +8,8 @@
 //!              wall-clock breakdown, BENCH_sim.json aggregate)
 //!   artifacts  list the AOT artifacts the runtime can execute
 //!   journal    inspect an event journal: header, round counts, digest
+//!   profile    inspect a span trace: per-round phase tree, hottest spans,
+//!              counter deltas (reads --trace / --metrics-out artifacts)
 //!
 //! Each subcommand's flags live in one `util::cli::CommandSpec` table the
 //! parser and `--help` both read, so help can never drift from what the
@@ -54,6 +56,8 @@ const TRAIN: CommandSpec = CommandSpec {
         FlagSpec::arg("out", "PATH", "metrics JSONL output path"),
         FlagSpec::arg("journal", "PATH", "persist the event journal here after every round"),
         FlagSpec::switch("resume", "recover from --journal and finish the remaining rounds"),
+        FlagSpec::arg("trace", "PATH", "span trace JSONL (+ .chrome.json sibling); empty = off"),
+        FlagSpec::arg("metrics-out", "PATH", "metrics registry JSON (+ .prom sibling)"),
     ],
 };
 
@@ -116,6 +120,9 @@ const RUN_SIM: CommandSpec = CommandSpec {
         FlagSpec::arg("scale", "N1,N2", "scale sweep over fleet sizes (lazy arrivals forced on)"),
         FlagSpec::arg("scale-shards", "S1,S2", "shard counts swept per fleet size (default 1,8)"),
         FlagSpec::arg("scale-json", "PATH", "aggregate BENCH_scale.json artifact"),
+        FlagSpec::arg("trace", "PATH", "span trace JSONL (+ .chrome.json sibling); empty = off"),
+        FlagSpec::arg("metrics-out", "PATH", "metrics registry JSON (+ .prom sibling)"),
+        FlagSpec::arg("obs-bench", "PATH", "traced-vs-untraced BENCH_obs.json artifact"),
     ],
 };
 
@@ -131,8 +138,19 @@ const JOURNAL: CommandSpec = CommandSpec {
     flags: &[FlagSpec::arg("path", "FILE", "journal JSONL to inspect")],
 };
 
+const PROFILE: CommandSpec = CommandSpec {
+    name: "profile",
+    blurb: "inspect a span trace: per-round phase tree, hottest spans, counter deltas",
+    flags: &[
+        FlagSpec::arg("trace", "FILE", "span trace JSONL (written by --trace)"),
+        FlagSpec::arg("metrics", "FILE", "metrics JSON (written by --metrics-out) for counter deltas"),
+        FlagSpec::arg("round", "N", "restrict the phase tree to one round"),
+        FlagSpec::arg("top", "K", "hottest-span table size (default 5)"),
+    ],
+};
+
 const COMMANDS: &[&CommandSpec] =
-    &[&TRAIN, &SUMMARIZE, &CLUSTER, &RUN_SIM, &ARTIFACTS, &JOURNAL];
+    &[&TRAIN, &SUMMARIZE, &CLUSTER, &RUN_SIM, &ARTIFACTS, &JOURNAL, &PROFILE];
 
 fn cfg_from_flags(p: &Parsed) -> Result<ExperimentConfig> {
     let allow_unknown = p.has("allow-unknown-keys");
@@ -161,6 +179,8 @@ fn cfg_from_flags(p: &Parsed) -> Result<ExperimentConfig> {
     p.set("seed", &mut cfg.seed)?;
     p.set_str("out", &mut cfg.out);
     p.set_str("journal", &mut cfg.journal);
+    p.set_str("trace", &mut cfg.trace);
+    p.set_str("metrics-out", &mut cfg.metrics_out);
     Ok(cfg)
 }
 
@@ -196,6 +216,8 @@ fn sim_cfg_from_flags(p: &Parsed) -> Result<SimConfig> {
     p.set("fault-max-retries", &mut cfg.fault.max_retries)?;
     p.set("fault-quarantine-threshold", &mut cfg.fault.quarantine_threshold)?;
     p.set_str("out-dir", &mut cfg.out_dir);
+    p.set_str("trace", &mut cfg.trace);
+    p.set_str("metrics-out", &mut cfg.metrics_out);
     Ok(cfg)
 }
 
@@ -231,7 +253,7 @@ fn cmd_run_sim(p: Parsed) -> Result<()> {
         // Crash scenarios run the full kill → recover-from-journal → resume
         // protocol and assert digest equality with an uninterrupted twin;
         // the rest run straight through (journaled either way).
-        let (rep, journal) = if let Some(crash) = sc.crash {
+        let (rep, journal, telemetry) = if let Some(crash) = sc.crash {
             let r = run_with_recovery(cfg.clone(), sc)?;
             println!(
                 "  [{name}] crashed at {crash:?}, recovered {} closed rounds from the \
@@ -239,9 +261,10 @@ fn cmd_run_sim(p: Parsed) -> Result<()> {
                 r.recovered_rounds,
                 r.uninterrupted_digest
             );
-            (r.report, r.journal)
+            (r.report, r.journal, None)
         } else {
-            Simulator::new(cfg.clone(), sc)?.run_journaled()?
+            let run = Simulator::new(cfg.clone(), sc)?.run_traced()?;
+            (run.report, run.journal, Some((run.tracer, run.registry)))
         };
         let host = t0.elapsed().as_secs_f64();
         let t = rep.totals();
@@ -292,6 +315,32 @@ fn cmd_run_sim(p: Parsed) -> Result<()> {
             journal.write(&jpath)?;
             println!("  wrote {path} and {jpath}");
         }
+        if let Some((tracer, registry)) = &telemetry {
+            let multi = names.len() > 1;
+            if !cfg.trace.is_empty() {
+                let path = scenario_path(&cfg.trace, &rep.scenario, multi);
+                write_text(&path, &tracer.to_jsonl())?;
+                let chrome = format!("{path}.chrome.json");
+                write_text(&chrome, &tracer.to_chrome())?;
+                println!("  wrote {path} and {chrome} (trace digest {:#018x})", tracer.digest());
+            }
+            if !cfg.metrics_out.is_empty() {
+                let path = scenario_path(&cfg.metrics_out, &rep.scenario, multi);
+                write_text(&path, &registry.to_json())?;
+                let prom = format!("{path}.prom");
+                write_text(&prom, &registry.to_prometheus())?;
+                println!("  wrote {path} and {prom}");
+            }
+        } else if !cfg.trace.is_empty() || !cfg.metrics_out.is_empty() {
+            // Crash scenarios interleave two simulators (the killed run and
+            // its uninterrupted twin); their traces would not describe one
+            // coherent run, so telemetry artifacts are skipped here —
+            // --obs-bench emits them from an uninterrupted traced run.
+            println!(
+                "  [{name}] crash scenario: --trace/--metrics-out artifacts skipped \
+                 (use --obs-bench for an uninterrupted traced run)"
+            );
+        }
         if rep.scenario == "sync_baseline" {
             baseline_sim_secs = t.sim_secs;
         }
@@ -307,7 +356,111 @@ fn cmd_run_sim(p: Parsed) -> Result<()> {
     if let Some(path) = p.get("chaos-json") {
         write_bench_artifact(path, &chaos_entries)?;
     }
+    if let Some(path) = p.get("obs-bench") {
+        run_obs_bench(&cfg, &names, path)?;
+    }
     Ok(())
+}
+
+/// The traced-vs-untraced overhead study behind `make obs-smoke`: run each
+/// non-crash scenario twice — tracing off, then on — assert the journals are
+/// bitwise identical (the tracing-is-a-no-op guarantee), and emit one
+/// `BENCH_obs.json` row per scenario with host seconds per round for both
+/// runs plus the span count and trace digest.
+fn run_obs_bench(cfg: &SimConfig, names: &[String], path: &str) -> Result<()> {
+    use feddde::obs::json_f64;
+    let mut entries = Vec::new();
+    for name in names {
+        let mut sc = Scenario::by_name(name)
+            .with_context(|| format!("unknown scenario {name:?} (try --list-scenarios)"))?;
+        // The benchmark measures the uninterrupted run; the kill → recover
+        // protocol is replay/chaos-smoke's concern. Stripping the crash
+        // point also lets this pass emit the telemetry artifacts the main
+        // loop skips for crash scenarios.
+        let had_crash = sc.crash.take().is_some();
+        if had_crash {
+            println!("  [obs-bench] {name}: crash point stripped for the traced run");
+        }
+        let off_cfg = SimConfig { trace: String::new(), ..cfg.clone() };
+        let t0 = std::time::Instant::now();
+        let off = Simulator::new(off_cfg, sc.clone())?.run_traced()?;
+        let off_host = t0.elapsed().as_secs_f64();
+        let on_cfg = SimConfig { trace: "traced".into(), ..cfg.clone() };
+        let t1 = std::time::Instant::now();
+        let on = Simulator::new(on_cfg, sc)?.run_traced()?;
+        let on_host = t1.elapsed().as_secs_f64();
+        if off.journal.digest() != on.journal.digest() {
+            bail!(
+                "tracing changed the event stream for {name}: journal digest {:#018x} \
+                 (off) vs {:#018x} (on)",
+                off.journal.digest(),
+                on.journal.digest()
+            );
+        }
+        if had_crash {
+            let multi = names.len() > 1;
+            if !cfg.trace.is_empty() {
+                let tpath = scenario_path(&cfg.trace, &on.report.scenario, multi);
+                write_text(&tpath, &on.tracer.to_jsonl())?;
+                write_text(&format!("{tpath}.chrome.json"), &on.tracer.to_chrome())?;
+                println!("  wrote {tpath} (+ .chrome.json)");
+            }
+            if !cfg.metrics_out.is_empty() {
+                let mpath = scenario_path(&cfg.metrics_out, &on.report.scenario, multi);
+                write_text(&mpath, &on.registry.to_json())?;
+                write_text(&format!("{mpath}.prom"), &on.registry.to_prometheus())?;
+                println!("  wrote {mpath} (+ .prom)");
+            }
+        }
+        let rounds = on.report.rounds.len().max(1) as f64;
+        let spans = on.tracer.spans().len();
+        println!(
+            "  [obs-bench] {name}: {:.4}s/round untraced, {:.4}s/round traced, \
+             {spans} spans, journal digests match",
+            off_host / rounds,
+            on_host / rounds
+        );
+        entries.push(format!(
+            "{{\"scenario\":\"{}\",\"policy\":\"{}\",\"rounds\":{},\"spans\":{},\
+             \"untraced_host_secs_per_round\":{},\"traced_host_secs_per_round\":{},\
+             \"overhead_frac\":{},\"journal_digest\":\"{:#018x}\",\"trace_digest\":\"{:#018x}\"}}",
+            on.report.scenario,
+            on.report.policy,
+            on.report.rounds.len(),
+            spans,
+            json_f64(off_host / rounds),
+            json_f64(on_host / rounds),
+            json_f64((on_host - off_host) / off_host.max(1e-12)),
+            on.journal.digest(),
+            on.tracer.digest(),
+        ));
+    }
+    write_bench_artifact(path, &entries)
+}
+
+/// For multi-scenario runs, derive a per-scenario artifact path by inserting
+/// `_<scenario>` before the file extension (`trace.jsonl` →
+/// `trace_diurnal.jsonl`); single-scenario runs use the path verbatim.
+fn scenario_path(path: &str, scenario: &str, multi: bool) -> String {
+    if !multi {
+        return path.to_string();
+    }
+    let after_dir = path.rfind('/').map_or(0, |s| s + 1);
+    match path.rfind('.').filter(|&i| i > after_dir) {
+        Some(i) => format!("{}_{}{}", &path[..i], scenario, &path[i..]),
+        None => format!("{path}_{scenario}"),
+    }
+}
+
+/// Write a telemetry artifact, creating the parent directory when needed.
+fn write_text(path: &str, text: &str) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating artifact directory for {path:?}"))?;
+        }
+    }
+    std::fs::write(path, text).with_context(|| format!("writing {path:?}"))
 }
 
 /// The scale sweep behind `make scale-smoke`: run the configured scenario at
@@ -425,6 +578,42 @@ fn cmd_train(p: Parsed) -> Result<()> {
         log.write_jsonl(&out)?;
         println!("wrote {out}");
     }
+    if !coord.cfg.trace.is_empty() {
+        let path = coord.cfg.trace.clone();
+        write_text(&path, &coord.tracer().to_jsonl())?;
+        let chrome = format!("{path}.chrome.json");
+        write_text(&chrome, &coord.tracer().to_chrome())?;
+        println!("wrote {path} and {chrome} (trace digest {:#018x})", coord.tracer().digest());
+    }
+    if !coord.cfg.metrics_out.is_empty() {
+        let path = coord.cfg.metrics_out.clone();
+        write_text(&path, &coord.registry().to_json())?;
+        let prom = format!("{path}.prom");
+        write_text(&prom, &coord.registry().to_prometheus())?;
+        println!("wrote {path} and {prom}");
+    }
+    Ok(())
+}
+
+fn cmd_profile(p: Parsed) -> Result<()> {
+    use feddde::obs::profile::{check_well_nested, parse_trace, render, ProfileOpts};
+    let path = p.get("trace").context("--trace FILE is required")?;
+    let jsonl = std::fs::read_to_string(path).with_context(|| format!("reading trace {path:?}"))?;
+    let spans = parse_trace(&jsonl)?;
+    if let Err(e) = check_well_nested(&spans, 1e-9) {
+        bail!("trace {path:?} is not well-nested: {e}");
+    }
+    let metrics = match p.get("metrics") {
+        Some(m) => {
+            Some(std::fs::read_to_string(m).with_context(|| format!("reading metrics {m:?}"))?)
+        }
+        None => None,
+    };
+    let opts = ProfileOpts {
+        round: p.opt::<u64>("round")?,
+        top: p.opt::<usize>("top")?.unwrap_or(5),
+    };
+    print!("{}", render(&spans, metrics.as_deref(), &opts)?);
     Ok(())
 }
 
@@ -585,6 +774,7 @@ fn main() -> Result<()> {
         "run-sim" => cmd_run_sim(p),
         "artifacts" => cmd_artifacts(),
         "journal" => cmd_journal(p),
+        "profile" => cmd_profile(p),
         _ => unreachable!(),
     }
 }

@@ -27,21 +27,25 @@ pub struct RoundMetrics {
 
 impl RoundMetrics {
     /// Hand-rolled JSON object (metrics only contain numbers + one array).
+    /// Non-finite floats are emitted as `null` — `{:.6}` would print `NaN`
+    /// or `inf`, which is not valid JSON, and losses CAN be non-finite
+    /// since selection tolerates NaN losses (NaN-last ordering).
     pub fn to_json(&self) -> String {
+        use crate::obs::json_f64_fixed;
         let sel: Vec<String> = self.selected.iter().map(|s| s.to_string()).collect();
         format!(
-            "{{\"round\":{},\"sim_time\":{:.4},\"round_time\":{:.4},\"refresh_secs\":{:.4},\
-             \"train_loss\":{:.6},\
-             \"eval_accuracy\":{:.6},\"eval_loss\":{:.6},\"host_exec_secs\":{:.4},\
+            "{{\"round\":{},\"sim_time\":{},\"round_time\":{},\"refresh_secs\":{},\
+             \"train_loss\":{},\
+             \"eval_accuracy\":{},\"eval_loss\":{},\"host_exec_secs\":{},\
              \"selected\":[{}]}}",
             self.round,
-            self.sim_time,
-            self.round_time,
-            self.refresh_secs,
-            self.train_loss,
-            self.eval_accuracy,
-            self.eval_loss,
-            self.host_exec_secs,
+            json_f64_fixed(self.sim_time, 4),
+            json_f64_fixed(self.round_time, 4),
+            json_f64_fixed(self.refresh_secs, 4),
+            json_f64_fixed(self.train_loss, 6),
+            json_f64_fixed(self.eval_accuracy, 6),
+            json_f64_fixed(self.eval_loss, 6),
+            json_f64_fixed(self.host_exec_secs, 4),
             sel.join(",")
         )
     }
@@ -93,14 +97,21 @@ impl MetricsLog {
     }
 
     /// Compact TSV of the loss/accuracy curves (EXPERIMENTS.md plots).
+    /// Non-finite values print as `null` for the same reason as
+    /// [`RoundMetrics::to_json`] (plot tools parse `null`, not `NaN`).
     pub fn write_tsv(&self, path: &str) -> std::io::Result<()> {
+        use crate::obs::json_f64_fixed;
         let mut f = std::fs::File::create(path)?;
         writeln!(f, "# round\tsim_time\ttrain_loss\teval_accuracy\teval_loss")?;
         for r in &self.rounds {
             writeln!(
                 f,
-                "{}\t{:.4}\t{:.6}\t{:.6}\t{:.6}",
-                r.round, r.sim_time, r.train_loss, r.eval_accuracy, r.eval_loss
+                "{}\t{}\t{}\t{}\t{}",
+                r.round,
+                json_f64_fixed(r.sim_time, 4),
+                json_f64_fixed(r.train_loss, 6),
+                json_f64_fixed(r.eval_accuracy, 6),
+                json_f64_fixed(r.eval_loss, 6)
             )?;
         }
         Ok(())
@@ -146,6 +157,23 @@ mod tests {
         assert!(j.contains("\"round\":5"));
         assert!(j.contains("\"refresh_secs\":0.2500"));
         assert!(j.contains("\"selected\":[1,2]"));
+    }
+
+    #[test]
+    fn nonfinite_floats_emit_null_not_invalid_json() {
+        // NaN losses are reachable (selection tolerates them since the
+        // NaN-last ordering fix); `{:.6}` would print `NaN`, which no JSON
+        // parser accepts.
+        let mut m = round(0, 1.0, 0.5);
+        m.train_loss = f64::NAN;
+        m.eval_loss = f64::INFINITY;
+        let j = m.to_json();
+        assert!(j.contains("\"train_loss\":null"), "{j}");
+        assert!(j.contains("\"eval_loss\":null"), "{j}");
+        assert!(!j.contains("NaN") && !j.contains("inf"), "{j}");
+        // Finite fields keep their exact pre-fix byte shape.
+        assert!(j.contains("\"sim_time\":1.0000"), "{j}");
+        assert!(j.contains("\"eval_accuracy\":0.500000"), "{j}");
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! Deterministic, zero-dependency telemetry: span tracing on the simulated
+//! clock, a fleet metrics registry, and the `feddde profile` round-profile
+//! inspector.
+//!
+//! Everything here is hand-rolled (like `metrics/` and `sim/report.rs`) and
+//! lives under the same bitwise-determinism contract as the rest of the
+//! crate:
+//!
+//! * **Disabled tracing is a true no-op.** A [`trace::Tracer`] constructed
+//!   disabled never allocates a span, never consumes RNG (nothing in this
+//!   module touches RNG at all), and never perturbs the code it instruments
+//!   — event streams and journal bytes with tracing off are bitwise
+//!   identical to a build without the telemetry layer.
+//! * **Traces are bitwise deterministic.** Spans are recorded only from
+//!   single-threaded orchestration code, their timestamps come off the
+//!   simulated clock / deterministic cost models, and the JSONL emitter
+//!   uses the same shortest-round-trip float formatting discipline as the
+//!   journal — so trace bytes (and their FNV digests) are invariant across
+//!   refresh thread counts (1/4/8) and reruns.
+//! * **Metrics are pure bookkeeping.** The [`registry::Registry`] is
+//!   counters/gauges/histograms fed from values that are already
+//!   deterministic; snapshots and dumps iterate in sorted name order so the
+//!   exposition bytes never depend on insertion order.
+//!
+//! The JSONL trace schema and the Chrome `trace_event` mapping are
+//! documented on [`trace::Tracer::to_jsonl`] / [`trace::Tracer::to_chrome`]
+//! and in the README's "Telemetry & profiling" section.
+
+pub mod profile;
+pub mod registry;
+pub mod trace;
+
+pub use registry::Registry;
+pub use trace::{SpanId, Tracer};
+
+/// FNV-1a 64-bit over raw bytes — same constants as
+/// `coordinator::journal::fnv1a64` (which hashes `&str`); kept separate so
+/// the telemetry layer has no dependency on the journal.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// JSON-safe float: finite values use Rust's shortest-round-trip `Display`
+/// (byte equality ⇔ bit equality), non-finite values become `null` —
+/// `NaN`/`inf` are not valid JSON.
+pub fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// JSON-safe fixed-precision float for the human-facing emitters
+/// (`metrics::RoundMetrics`, bench entries): finite values keep their
+/// existing `{:.prec$}` byte shape, non-finite values become `null`.
+pub fn json_f64_fixed(v: f64, prec: usize) -> String {
+    if v.is_finite() {
+        format!("{v:.prec$}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Minimal JSON string escaping for span/attr names: backslash, quote, and
+/// control characters. Everything we emit is ASCII identifiers in practice,
+/// but the emitter must never produce invalid JSON.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_matches_journal_constants() {
+        // Empty input hashes to the offset basis; one-byte reference pins
+        // the prime. Both constants are shared with the journal hasher.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), (0xcbf2_9ce4_8422_2325u64 ^ b'a' as u64).wrapping_mul(0x0000_0100_0000_01b3));
+    }
+
+    #[test]
+    fn json_f64_finite_is_shortest_roundtrip() {
+        assert_eq!(json_f64(0.25), "0.25");
+        assert_eq!(json_f64(0.0), "0");
+        assert_eq!(json_f64(-3.5), "-3.5");
+        // Shortest round-trip: parsing the emitted string recovers the bits.
+        let v = 0.1f64 + 0.2f64;
+        assert_eq!(json_f64(v).parse::<f64>().unwrap().to_bits(), v.to_bits());
+    }
+
+    #[test]
+    fn json_f64_nonfinite_is_null() {
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(f64::INFINITY), "null");
+        assert_eq!(json_f64(f64::NEG_INFINITY), "null");
+        assert_eq!(json_f64_fixed(f64::NAN, 6), "null");
+        assert_eq!(json_f64_fixed(f64::INFINITY, 4), "null");
+    }
+
+    #[test]
+    fn json_f64_fixed_keeps_finite_byte_shape() {
+        assert_eq!(json_f64_fixed(0.25, 4), "0.2500");
+        assert_eq!(json_f64_fixed(1.0, 6), "1.000000");
+    }
+
+    #[test]
+    fn escape_handles_specials() {
+        assert_eq!(json_escape("plain"), "plain");
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
+    }
+}

@@ -1,0 +1,649 @@
+//! Round-profile inspector: load a JSONL trace (and optionally a metrics
+//! JSON dump), rebuild the span tree, and render a per-round phase
+//! breakdown with self/total times, the top-k hottest span names, and
+//! per-round counter deltas. Backs the `feddde profile` subcommand.
+//!
+//! The parser is a minimal recursive-descent JSON reader for the subset the
+//! emitters in this crate produce (objects, arrays, strings with the
+//! escapes `json_escape` writes, numbers, `true`/`false`/`null`). It is
+//! strict: trailing garbage or unknown escapes are errors, so trace
+//! corruption surfaces as a parse failure instead of a silent skew.
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed JSON value (crate-emitted subset).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonVal {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<JsonVal>),
+    Obj(Vec<(String, JsonVal)>),
+}
+
+impl JsonVal {
+    pub fn get(&self, key: &str) -> Option<&JsonVal> {
+        match self {
+            JsonVal::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonVal::Num(v) => Some(*v),
+            JsonVal::Null => Some(f64::NAN),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            JsonVal::Num(v) if *v >= 0.0 && v.fract() == 0.0 => Some(*v as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonVal::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Self {
+        Parser { bytes: s.as_bytes(), pos: 0 }
+    }
+
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        match self.peek() {
+            Some(c) if c == b => {
+                self.pos += 1;
+                Ok(())
+            }
+            other => bail!("json: expected {:?} at byte {}, found {:?}", b as char, self.pos, other.map(|c| c as char)),
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonVal> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(JsonVal::Str(self.string()?)),
+            Some(b't') => self.literal("true", JsonVal::Bool(true)),
+            Some(b'f') => self.literal("false", JsonVal::Bool(false)),
+            Some(b'n') => self.literal("null", JsonVal::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => bail!("json: unexpected {:?} at byte {}", other.map(|c| c as char), self.pos),
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: JsonVal) -> Result<JsonVal> {
+        self.skip_ws();
+        if self.bytes[self.pos..].starts_with(lit.as_bytes()) {
+            self.pos += lit.len();
+            Ok(v)
+        } else {
+            bail!("json: bad literal at byte {}", self.pos)
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonVal> {
+        self.skip_ws();
+        let start = self.pos;
+        while self.pos < self.bytes.len()
+            && matches!(self.bytes[self.pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        Ok(JsonVal::Num(s.parse::<f64>().map_err(|e| anyhow!("json: bad number {s:?}: {e}"))?))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let Some(&b) = self.bytes.get(self.pos) else {
+                bail!("json: unterminated string");
+            };
+            self.pos += 1;
+            match b {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let Some(&e) = self.bytes.get(self.pos) else {
+                        bail!("json: unterminated escape");
+                    };
+                    self.pos += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos..self.pos + 4)
+                                .ok_or_else(|| anyhow!("json: truncated \\u escape"))?;
+                            let code = u32::from_str_radix(std::str::from_utf8(hex)?, 16)?;
+                            self.pos += 4;
+                            out.push(
+                                char::from_u32(code)
+                                    .ok_or_else(|| anyhow!("json: bad \\u{code:04x}"))?,
+                            );
+                        }
+                        other => bail!("json: unknown escape \\{}", other as char),
+                    }
+                }
+                other => {
+                    // Re-assemble multi-byte UTF-8 sequences byte-by-byte.
+                    if other < 0x80 {
+                        out.push(other as char);
+                    } else {
+                        let len = if other >= 0xF0 {
+                            4
+                        } else if other >= 0xE0 {
+                            3
+                        } else {
+                            2
+                        };
+                        let start = self.pos - 1;
+                        let chunk = self
+                            .bytes
+                            .get(start..start + len)
+                            .ok_or_else(|| anyhow!("json: truncated utf-8"))?;
+                        out.push_str(std::str::from_utf8(chunk)?);
+                        self.pos = start + len;
+                    }
+                }
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<JsonVal> {
+        self.expect(b'{')?;
+        let mut pairs = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonVal::Obj(pairs));
+        }
+        loop {
+            let key = self.string()?;
+            self.expect(b':')?;
+            let val = self.value()?;
+            pairs.push((key, val));
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(JsonVal::Obj(pairs));
+                }
+                other => bail!("json: expected ',' or '}}', found {:?}", other.map(|c| c as char)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<JsonVal> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JsonVal::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(JsonVal::Arr(items));
+                }
+                other => bail!("json: expected ',' or ']', found {:?}", other.map(|c| c as char)),
+            }
+        }
+    }
+}
+
+/// Parse one JSON document; trailing non-whitespace is an error.
+pub fn parse_json(s: &str) -> Result<JsonVal> {
+    let mut p = Parser::new(s);
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        bail!("json: trailing garbage at byte {}", p.pos);
+    }
+    Ok(v)
+}
+
+/// One span line from a JSONL trace.
+#[derive(Debug, Clone)]
+pub struct TraceSpan {
+    pub id: u64,
+    pub parent: u64,
+    pub name: String,
+    pub round: u64,
+    pub start: f64,
+    pub dur: f64,
+    pub attrs: Vec<(String, JsonVal)>,
+}
+
+/// Parse a JSONL trace (one span object per line, as
+/// [`Tracer::to_jsonl`](super::trace::Tracer::to_jsonl) writes it).
+pub fn parse_trace(jsonl: &str) -> Result<Vec<TraceSpan>> {
+    let mut spans = Vec::new();
+    for (lineno, line) in jsonl.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = parse_json(line).map_err(|e| anyhow!("trace line {}: {e}", lineno + 1))?;
+        let field = |key: &str| {
+            v.get(key).ok_or_else(|| anyhow!("trace line {}: missing key {key:?}", lineno + 1))
+        };
+        let attrs = match field("attrs")? {
+            JsonVal::Obj(pairs) => pairs.clone(),
+            _ => bail!("trace line {}: attrs must be an object", lineno + 1),
+        };
+        spans.push(TraceSpan {
+            id: field("id")?.as_u64().ok_or_else(|| anyhow!("trace line {}: bad id", lineno + 1))?,
+            parent: field("parent")?
+                .as_u64()
+                .ok_or_else(|| anyhow!("trace line {}: bad parent", lineno + 1))?,
+            name: field("name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("trace line {}: bad name", lineno + 1))?
+                .to_string(),
+            round: field("round")?
+                .as_u64()
+                .ok_or_else(|| anyhow!("trace line {}: bad round", lineno + 1))?,
+            start: field("start")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("trace line {}: bad start", lineno + 1))?,
+            dur: field("dur")?
+                .as_f64()
+                .ok_or_else(|| anyhow!("trace line {}: bad dur", lineno + 1))?,
+            attrs,
+        });
+    }
+    Ok(spans)
+}
+
+/// Verify the structural invariants the tracer guarantees: unique ids,
+/// parents recorded before children (same round), children contained in the
+/// parent's time window, and per-parent child durations summing to at most
+/// the parent duration — all within `eps` of relative slop. The proptest
+/// suite runs this over random scenarios and fault plans.
+pub fn check_well_nested(spans: &[TraceSpan], eps: f64) -> std::result::Result<(), String> {
+    let mut by_id: Vec<Option<&TraceSpan>> = Vec::new();
+    for s in spans {
+        if !s.dur.is_finite() || s.dur < 0.0 {
+            return Err(format!("span {} ({}) has bad duration {}", s.id, s.name, s.dur));
+        }
+        let idx = s.id as usize;
+        if idx == 0 {
+            return Err(format!("span {} uses reserved id 0", s.name));
+        }
+        if by_id.len() <= idx {
+            by_id.resize(idx + 1, None);
+        }
+        if by_id[idx].is_some() {
+            return Err(format!("duplicate span id {}", s.id));
+        }
+        by_id[idx] = Some(s);
+    }
+    let mut child_sum: Vec<f64> = vec![0.0; by_id.len()];
+    for s in spans {
+        if s.parent == 0 {
+            continue;
+        }
+        let Some(p) = by_id.get(s.parent as usize).copied().flatten() else {
+            return Err(format!("span {} ({}) has unknown parent {}", s.id, s.name, s.parent));
+        };
+        if s.parent >= s.id {
+            return Err(format!("span {} ({}) opened before its parent {}", s.id, s.name, s.parent));
+        }
+        if p.round != s.round {
+            return Err(format!(
+                "span {} ({}) in round {} but parent {} in round {}",
+                s.id, s.name, s.round, p.round, s.round
+            ));
+        }
+        let slop = eps * (1.0 + p.dur.abs() + p.start.abs());
+        if s.start < p.start - slop || s.start + s.dur > p.start + p.dur + slop {
+            return Err(format!(
+                "span {} ({}) [{}, {}] escapes parent {} ({}) [{}, {}]",
+                s.id,
+                s.name,
+                s.start,
+                s.start + s.dur,
+                p.id,
+                p.name,
+                p.start,
+                p.start + p.dur
+            ));
+        }
+        child_sum[s.parent as usize] += s.dur;
+    }
+    for s in spans {
+        let sum = child_sum[s.id as usize];
+        let slop = eps * (1.0 + s.dur.abs());
+        if sum > s.dur + slop {
+            return Err(format!(
+                "span {} ({}): children durations sum to {} > own duration {}",
+                s.id, s.name, sum, s.dur
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// `(round, total_secs)` for every root span, in trace order. The root span
+/// duration is bitwise the reported round time, so this is what the
+/// acceptance oracle compares against `RoundMetrics.round_time` /
+/// `RoundReport.round_secs`.
+pub fn round_totals(spans: &[TraceSpan]) -> Vec<(u64, f64)> {
+    spans.iter().filter(|s| s.parent == 0).map(|s| (s.round, s.dur)).collect()
+}
+
+/// Rendering options for [`render`].
+pub struct ProfileOpts {
+    /// Restrict the per-round trees to this round.
+    pub round: Option<u64>,
+    /// How many hottest span names to list.
+    pub top: usize,
+}
+
+impl Default for ProfileOpts {
+    fn default() -> Self {
+        ProfileOpts { round: None, top: 5 }
+    }
+}
+
+struct NameAgg {
+    name: String,
+    count: u64,
+    total: f64,
+    self_secs: f64,
+}
+
+/// Render the profile: per-round phase trees (children grouped by name,
+/// with count, total, and self time), the top-k hottest span names by self
+/// time across the trace, and — when a metrics JSON dump is supplied —
+/// per-round counter deltas from its snapshot series.
+pub fn render(spans: &[TraceSpan], metrics_json: Option<&str>, opts: &ProfileOpts) -> Result<String> {
+    let mut out = String::new();
+    let rounds: Vec<u64> = {
+        let mut r: Vec<u64> = spans.iter().filter(|s| s.parent == 0).map(|s| s.round).collect();
+        r.dedup();
+        r
+    };
+    out.push_str(&format!("trace: {} spans, {} rounds\n", spans.len(), rounds.len()));
+
+    // children[id] = indices of direct children, in trace order.
+    let max_id = spans.iter().map(|s| s.id).max().unwrap_or(0) as usize;
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); max_id + 1];
+    let mut child_dur: Vec<f64> = vec![0.0; max_id + 1];
+    for (i, s) in spans.iter().enumerate() {
+        if s.parent as usize <= max_id && s.parent != 0 {
+            children[s.parent as usize].push(i);
+            child_dur[s.parent as usize] += s.dur;
+        }
+    }
+
+    fn render_children(
+        out: &mut String,
+        spans: &[TraceSpan],
+        children: &[Vec<usize>],
+        child_dur: &[f64],
+        parent: usize,
+        depth: usize,
+    ) {
+        // Group consecutive same-name children (retry chains, journal
+        // appends) into one line with a ×count.
+        let kids = &children[parent];
+        let mut groups: Vec<(String, u64, f64, f64)> = Vec::new(); // name, count, total, self
+        for &ci in kids {
+            let s = &spans[ci];
+            let self_secs = s.dur - child_dur[s.id as usize];
+            match groups.last_mut() {
+                Some(g) if g.0 == s.name => {
+                    g.1 += 1;
+                    g.2 += s.dur;
+                    g.3 += self_secs;
+                }
+                _ => groups.push((s.name.clone(), 1, s.dur, self_secs)),
+            }
+        }
+        for (name, count, total, self_secs) in &groups {
+            let label = if *count > 1 { format!("{name} ×{count}") } else { name.clone() };
+            out.push_str(&format!(
+                "{:indent$}{label:<28} total {total:.9}s  self {self_secs:.9}s\n",
+                "",
+                indent = depth * 2
+            ));
+        }
+        // Recurse in trace order (grouped lines above are a summary; only
+        // recurse once per group head to keep the tree readable).
+        let mut seen: Vec<&str> = Vec::new();
+        for &ci in kids {
+            let s = &spans[ci];
+            if seen.contains(&s.name.as_str()) {
+                continue;
+            }
+            seen.push(&s.name);
+            if !children[s.id as usize].is_empty() {
+                render_children(out, spans, children, child_dur, s.id as usize, depth + 1);
+            }
+        }
+    }
+
+    for (i, s) in spans.iter().enumerate() {
+        if s.parent != 0 {
+            continue;
+        }
+        if let Some(only) = opts.round {
+            if s.round != only {
+                continue;
+            }
+        }
+        let self_secs = s.dur - child_dur[s.id as usize];
+        out.push_str(&format!(
+            "round {:<4} {:<20} total {:.9}s  self {:.9}s\n",
+            s.round, s.name, s.dur, self_secs
+        ));
+        render_children(&mut out, spans, &children, &child_dur, spans[i].id as usize, 1);
+    }
+
+    // Top-k hottest span names by aggregate self time.
+    let mut aggs: Vec<NameAgg> = Vec::new();
+    for s in spans {
+        let self_secs = s.dur - child_dur[s.id as usize];
+        match aggs.iter_mut().find(|a| a.name == s.name) {
+            Some(a) => {
+                a.count += 1;
+                a.total += s.dur;
+                a.self_secs += self_secs;
+            }
+            None => aggs.push(NameAgg { name: s.name.clone(), count: 1, total: s.dur, self_secs }),
+        }
+    }
+    aggs.sort_by(|a, b| b.self_secs.total_cmp(&a.self_secs).then(a.name.cmp(&b.name)));
+    out.push_str(&format!("top {} spans by self time:\n", opts.top.min(aggs.len())));
+    for a in aggs.iter().take(opts.top) {
+        out.push_str(&format!(
+            "  {:<28} ×{:<6} self {:.9}s  total {:.9}s\n",
+            a.name, a.count, a.self_secs, a.total
+        ));
+    }
+
+    if let Some(mj) = metrics_json {
+        let v = parse_json(mj)?;
+        let rounds = v
+            .get("rounds")
+            .and_then(|r| match r {
+                JsonVal::Arr(items) => Some(items.as_slice()),
+                _ => None,
+            })
+            .ok_or_else(|| anyhow!("metrics json: missing \"rounds\" array"))?;
+        out.push_str("counter deltas per round:\n");
+        let mut prev: Vec<(String, u64)> = Vec::new();
+        for snap in rounds {
+            let round = snap
+                .get("round")
+                .and_then(JsonVal::as_u64)
+                .ok_or_else(|| anyhow!("metrics json: snapshot missing round"))?;
+            if let Some(only) = opts.round {
+                if round != only {
+                    continue;
+                }
+            }
+            let counters = match snap.get("counters") {
+                Some(JsonVal::Obj(pairs)) => pairs,
+                _ => bail!("metrics json: snapshot missing counters"),
+            };
+            let mut deltas = Vec::new();
+            for (name, val) in counters {
+                let cur = val.as_u64().ok_or_else(|| anyhow!("metrics json: bad counter {name}"))?;
+                let before = prev.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0);
+                if cur != before {
+                    deltas.push(format!("{name} +{}", cur - before));
+                }
+            }
+            if opts.round.is_none() || opts.round == Some(round) {
+                out.push_str(&format!(
+                    "  round {:<4} {}\n",
+                    round,
+                    if deltas.is_empty() { "(no change)".to_string() } else { deltas.join(", ") }
+                ));
+            }
+            prev = counters
+                .iter()
+                .filter_map(|(n, v)| v.as_u64().map(|u| (n.clone(), u)))
+                .collect();
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::Tracer;
+
+    fn sample_trace() -> String {
+        let mut t = Tracer::new(true);
+        for round in 0..2usize {
+            let base = round as f64 * 20.0;
+            let root = t.open("round", round, base);
+            let refresh = t.open("refresh", round, base);
+            t.leaf("summarize", round, base, 2.0);
+            t.leaf("cluster", round, base + 2.0, 1.0);
+            t.close(refresh, base + 3.0);
+            let train = t.open("train", round, base + 3.0);
+            t.leaf("retry", round, base + 5.0, 0.0);
+            t.leaf("retry", round, base + 6.0, 0.0);
+            t.close(train, base + 15.0);
+            t.close_with_dur(root, 15.0);
+        }
+        t.to_jsonl()
+    }
+
+    #[test]
+    fn parse_roundtrips_the_tracer_output() {
+        let spans = parse_trace(&sample_trace()).unwrap();
+        assert_eq!(spans.len(), 14);
+        assert_eq!(spans[0].name, "round");
+        assert_eq!(spans[0].parent, 0);
+        assert_eq!(spans[0].dur, 15.0);
+        assert_eq!(spans[1].name, "refresh");
+        assert_eq!(spans[1].parent, spans[0].id);
+        check_well_nested(&spans, 1e-9).unwrap();
+    }
+
+    #[test]
+    fn round_totals_are_root_durations() {
+        let spans = parse_trace(&sample_trace()).unwrap();
+        assert_eq!(round_totals(&spans), vec![(0, 15.0), (1, 15.0)]);
+    }
+
+    #[test]
+    fn nesting_violations_are_caught() {
+        // Child longer than its parent.
+        let bad = "{\"id\":1,\"parent\":0,\"name\":\"round\",\"round\":0,\"start\":0,\"dur\":1,\"attrs\":{}}\n\
+                   {\"id\":2,\"parent\":1,\"name\":\"refresh\",\"round\":0,\"start\":0,\"dur\":5,\"attrs\":{}}\n";
+        let spans = parse_trace(bad).unwrap();
+        assert!(check_well_nested(&spans, 1e-9).is_err());
+        // Unknown parent.
+        let orphan = "{\"id\":1,\"parent\":9,\"name\":\"x\",\"round\":0,\"start\":0,\"dur\":1,\"attrs\":{}}\n";
+        let spans = parse_trace(orphan).unwrap();
+        assert!(check_well_nested(&spans, 1e-9).is_err());
+        // Children sum exceeding parent duration.
+        let oversub = "{\"id\":1,\"parent\":0,\"name\":\"round\",\"round\":0,\"start\":0,\"dur\":2,\"attrs\":{}}\n\
+                       {\"id\":2,\"parent\":1,\"name\":\"a\",\"round\":0,\"start\":0,\"dur\":1.5,\"attrs\":{}}\n\
+                       {\"id\":3,\"parent\":1,\"name\":\"b\",\"round\":0,\"start\":0.4,\"dur\":1.5,\"attrs\":{}}\n";
+        let spans = parse_trace(oversub).unwrap();
+        assert!(check_well_nested(&spans, 1e-9).is_err());
+    }
+
+    #[test]
+    fn render_shows_tree_top_spans_and_counter_deltas() {
+        let trace = sample_trace();
+        let spans = parse_trace(&trace).unwrap();
+        let metrics = "{\"counters\":{\"retries\":4},\"gauges\":{},\"histograms\":{},\"rounds\":[{\"round\":0,\"counters\":{\"retries\":1}},{\"round\":1,\"counters\":{\"retries\":4}}]}";
+        let out = render(&spans, Some(metrics), &ProfileOpts::default()).unwrap();
+        assert!(out.contains("trace: 14 spans, 2 rounds"), "{out}");
+        assert!(out.contains("round 0"), "{out}");
+        assert!(out.contains("refresh"), "{out}");
+        assert!(out.contains("retry ×2"), "{out}");
+        assert!(out.contains("top "), "{out}");
+        assert!(out.contains("round 0    retries +1"), "{out}");
+        assert!(out.contains("round 1    retries +3"), "{out}");
+    }
+
+    #[test]
+    fn render_single_round_filter() {
+        let spans = parse_trace(&sample_trace()).unwrap();
+        let out = render(&spans, None, &ProfileOpts { round: Some(1), top: 3 }).unwrap();
+        assert!(out.contains("round 1"), "{out}");
+        assert!(!out.contains("round 0    round"), "{out}");
+    }
+
+    #[test]
+    fn parser_rejects_garbage() {
+        assert!(parse_json("{\"a\":1,}").is_err());
+        assert!(parse_json("{\"a\":1} x").is_err());
+        assert!(parse_json("nul").is_err());
+        assert!(parse_trace("{\"id\":1}\n").is_err());
+    }
+
+    #[test]
+    fn parser_handles_escapes_and_null_durations() {
+        let v = parse_json("{\"s\":\"a\\\"b\\\\c\\nd\",\"n\":null,\"b\":true}").unwrap();
+        assert_eq!(v.get("s").unwrap().as_str().unwrap(), "a\"b\\c\nd");
+        assert!(v.get("n").unwrap().as_f64().unwrap().is_nan());
+        let line = "{\"id\":1,\"parent\":0,\"name\":\"round\",\"round\":0,\"start\":0,\"dur\":null,\"attrs\":{}}\n";
+        let spans = parse_trace(line).unwrap();
+        assert!(spans[0].dur.is_nan());
+        assert!(check_well_nested(&spans, 1e-9).is_err(), "null duration must fail validation");
+    }
+}

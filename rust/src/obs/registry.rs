@@ -1,0 +1,334 @@
+//! Fleet metrics registry: named counters, gauges, and fixed-bucket
+//! histograms with per-round snapshots, dumped as Prometheus-style text
+//! exposition and as JSON.
+//!
+//! The registry is pure bookkeeping — no RNG, no clocks, no I/O — and every
+//! value fed into it is already deterministic (store statistics, cost-model
+//! seconds, event counts off the simulated queue), so its dumps are bitwise
+//! identical across threads and reruns. Iteration for export is in sorted
+//! name order, never insertion order, so two code paths that register the
+//! same metrics in different orders produce identical bytes.
+//!
+//! Counter sources come in two shapes and the API mirrors that:
+//! * event-driven counts use [`Registry::inc`] (monotonic accumulate);
+//! * lifetime totals owned elsewhere (e.g. [`StoreStats`] hit/miss/eviction
+//!   counters) use [`Registry::set_counter`], which keeps the registry's
+//!   view in lockstep with the source of truth instead of double-counting.
+//!
+//! [`StoreStats`]: crate::coordinator::store::StoreStats
+
+use super::{json_escape, json_f64, json_f64_fixed};
+
+/// Default histogram bucket upper bounds (seconds): spans the sub-millisecond
+/// selection models through multi-minute degraded rounds.
+pub const DEFAULT_BOUNDS: [f64; 8] = [1e-4, 1e-3, 1e-2, 0.1, 1.0, 10.0, 60.0, 600.0];
+
+#[derive(Debug, Clone)]
+struct Hist {
+    name: String,
+    /// Upper bounds of the finite buckets; an implicit `+Inf` bucket
+    /// follows, so `counts.len() == bounds.len() + 1`.
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    total: u64,
+}
+
+/// Cumulative counter values at the end of one round.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub round: u64,
+    /// Sorted by name.
+    pub counters: Vec<(String, u64)>,
+}
+
+/// The metrics registry. Lookup is a linear scan (metric cardinality is a
+/// few dozen), which keeps iteration deterministic with zero hashing.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    counters: Vec<(String, u64)>,
+    gauges: Vec<(String, f64)>,
+    hists: Vec<Hist>,
+    snaps: Vec<Snapshot>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Add `delta` to counter `name`, creating it at zero first.
+    pub fn inc(&mut self, name: &str, delta: u64) {
+        if let Some(e) = self.counters.iter_mut().find(|(n, _)| n == name) {
+            e.1 += delta;
+        } else {
+            self.counters.push((name.to_string(), delta));
+        }
+    }
+
+    /// Set counter `name` to an absolute value from a monotonic external
+    /// source (lifetime totals like store hit counts). Debug-asserts
+    /// monotonicity so a regressing source is caught in tests.
+    pub fn set_counter(&mut self, name: &str, value: u64) {
+        if let Some(e) = self.counters.iter_mut().find(|(n, _)| n == name) {
+            debug_assert!(value >= e.1, "counter {name} went backwards: {} -> {value}", e.1);
+            e.1 = value;
+        } else {
+            self.counters.push((name.to_string(), value));
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0)
+    }
+
+    pub fn set_gauge(&mut self, name: &str, value: f64) {
+        if let Some(e) = self.gauges.iter_mut().find(|(n, _)| n == name) {
+            e.1 = value;
+        } else {
+            self.gauges.push((name.to_string(), value));
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v).unwrap_or(0.0)
+    }
+
+    /// Record `value` into histogram `name`, creating it with
+    /// [`DEFAULT_BOUNDS`] on first observation.
+    pub fn observe(&mut self, name: &str, value: f64) {
+        self.observe_with(name, value, &DEFAULT_BOUNDS);
+    }
+
+    /// Record `value` into histogram `name`, creating it with `bounds` on
+    /// first observation (later calls reuse the existing buckets).
+    pub fn observe_with(&mut self, name: &str, value: f64, bounds: &[f64]) {
+        let idx = match self.hists.iter().position(|h| h.name == name) {
+            Some(i) => i,
+            None => {
+                debug_assert!(
+                    bounds.windows(2).all(|w| w[0] < w[1]),
+                    "histogram {name}: bounds must be strictly increasing"
+                );
+                self.hists.push(Hist {
+                    name: name.to_string(),
+                    bounds: bounds.to_vec(),
+                    counts: vec![0; bounds.len() + 1],
+                    sum: 0.0,
+                    total: 0,
+                });
+                self.hists.len() - 1
+            }
+        };
+        let h = &mut self.hists[idx];
+        let idx = h.bounds.iter().position(|&b| value <= b).unwrap_or(h.bounds.len());
+        h.counts[idx] += 1;
+        h.total += 1;
+        h.sum += value;
+    }
+
+    /// Histogram `(total observations, sum)`, zero when absent.
+    pub fn hist_totals(&self, name: &str) -> (u64, f64) {
+        self.hists
+            .iter()
+            .find(|h| h.name == name)
+            .map(|h| (h.total, h.sum))
+            .unwrap_or((0, 0.0))
+    }
+
+    /// Snapshot the cumulative counters at the end of `round`. `feddde
+    /// profile` diffs consecutive snapshots into per-round counter deltas.
+    pub fn snapshot_round(&mut self, round: usize) {
+        let mut counters = self.counters.clone();
+        counters.sort_by(|a, b| a.0.cmp(&b.0));
+        self.snaps.push(Snapshot { round: round as u64, counters });
+    }
+
+    pub fn snapshots(&self) -> &[Snapshot] {
+        &self.snaps
+    }
+
+    /// Prometheus-style text exposition, metric names prefixed `feddde_`,
+    /// sorted by name within each section.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut counters: Vec<&(String, u64)> = self.counters.iter().collect();
+        counters.sort_by(|a, b| a.0.cmp(&b.0));
+        for (name, v) in counters {
+            out.push_str(&format!("# TYPE feddde_{name} counter\nfeddde_{name} {v}\n"));
+        }
+        let mut gauges: Vec<&(String, f64)> = self.gauges.iter().collect();
+        gauges.sort_by(|a, b| a.0.cmp(&b.0));
+        for (name, v) in gauges {
+            out.push_str(&format!("# TYPE feddde_{name} gauge\nfeddde_{name} {}\n", json_f64(*v)));
+        }
+        let mut hists: Vec<&Hist> = self.hists.iter().collect();
+        hists.sort_by(|a, b| a.name.cmp(&b.name));
+        for h in hists {
+            out.push_str(&format!("# TYPE feddde_{} histogram\n", h.name));
+            let mut cum = 0u64;
+            for (i, b) in h.bounds.iter().enumerate() {
+                cum += h.counts[i];
+                out.push_str(&format!(
+                    "feddde_{}_bucket{{le=\"{}\"}} {cum}\n",
+                    h.name,
+                    json_f64(*b)
+                ));
+            }
+            cum += h.counts[h.bounds.len()];
+            out.push_str(&format!("feddde_{}_bucket{{le=\"+Inf\"}} {cum}\n", h.name));
+            out.push_str(&format!("feddde_{}_sum {}\n", h.name, json_f64(h.sum)));
+            out.push_str(&format!("feddde_{}_count {}\n", h.name, h.total));
+        }
+        out
+    }
+
+    /// JSON dump: cumulative counters/gauges/histograms plus the per-round
+    /// snapshot series, all in sorted name order.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\"counters\":{");
+        let mut counters: Vec<&(String, u64)> = self.counters.iter().collect();
+        counters.sort_by(|a, b| a.0.cmp(&b.0));
+        for (i, (name, v)) in counters.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":{v}", json_escape(name)));
+        }
+        out.push_str("},\"gauges\":{");
+        let mut gauges: Vec<&(String, f64)> = self.gauges.iter().collect();
+        gauges.sort_by(|a, b| a.0.cmp(&b.0));
+        for (i, (name, v)) in gauges.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\"{}\":{}", json_escape(name), json_f64(*v)));
+        }
+        out.push_str("},\"histograms\":{");
+        let mut hists: Vec<&Hist> = self.hists.iter().collect();
+        hists.sort_by(|a, b| a.name.cmp(&b.name));
+        for (i, h) in hists.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let bounds: Vec<String> = h.bounds.iter().map(|b| json_f64(*b)).collect();
+            let counts: Vec<String> = h.counts.iter().map(|c| format!("{c}")).collect();
+            out.push_str(&format!(
+                "\"{}\":{{\"bounds\":[{}],\"counts\":[{}],\"sum\":{},\"count\":{}}}",
+                json_escape(&h.name),
+                bounds.join(","),
+                counts.join(","),
+                json_f64_fixed(h.sum, 6),
+                h.total
+            ));
+        }
+        out.push_str("},\"rounds\":[");
+        for (i, s) in self.snaps.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("{{\"round\":{},\"counters\":{{", s.round));
+            for (j, (name, v)) in s.counters.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("\"{}\":{v}", json_escape(name)));
+            }
+            out.push_str("}}");
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_set() {
+        let mut r = Registry::new();
+        r.inc("retries", 2);
+        r.inc("retries", 3);
+        assert_eq!(r.counter("retries"), 5);
+        assert_eq!(r.counter("missing"), 0);
+        r.set_counter("store_hits", 7);
+        r.set_counter("store_hits", 9);
+        assert_eq!(r.counter("store_hits"), 9);
+    }
+
+    #[test]
+    fn gauges_overwrite() {
+        let mut r = Registry::new();
+        r.set_gauge("store_bytes", 1024.0);
+        r.set_gauge("store_bytes", 2048.0);
+        assert_eq!(r.gauge("store_bytes"), 2048.0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_totals() {
+        let mut r = Registry::new();
+        r.observe_with("lat", 0.5, &[0.1, 1.0, 10.0]);
+        r.observe_with("lat", 0.05, &[0.1, 1.0, 10.0]);
+        r.observe_with("lat", 100.0, &[0.1, 1.0, 10.0]);
+        let (n, sum) = r.hist_totals("lat");
+        assert_eq!(n, 3);
+        assert!((sum - 100.55).abs() < 1e-12);
+        let prom = r.to_prometheus();
+        assert!(prom.contains("feddde_lat_bucket{le=\"0.1\"} 1\n"), "{prom}");
+        assert!(prom.contains("feddde_lat_bucket{le=\"1\"} 2\n"), "{prom}");
+        assert!(prom.contains("feddde_lat_bucket{le=\"10\"} 2\n"), "{prom}");
+        assert!(prom.contains("feddde_lat_bucket{le=\"+Inf\"} 3\n"), "{prom}");
+        assert!(prom.contains("feddde_lat_count 3\n"), "{prom}");
+    }
+
+    #[test]
+    fn export_order_is_name_sorted_not_insertion_order() {
+        let mut a = Registry::new();
+        a.inc("zeta", 1);
+        a.inc("alpha", 2);
+        a.set_gauge("mid", 3.0);
+        let mut b = Registry::new();
+        b.set_gauge("mid", 3.0);
+        b.inc("alpha", 2);
+        b.inc("zeta", 1);
+        assert_eq!(a.to_prometheus(), b.to_prometheus());
+        assert_eq!(a.to_json(), b.to_json());
+        let prom = a.to_prometheus();
+        let alpha = prom.find("feddde_alpha ").unwrap();
+        let zeta = prom.find("feddde_zeta ").unwrap();
+        assert!(alpha < zeta);
+    }
+
+    #[test]
+    fn snapshots_capture_cumulative_counters_per_round() {
+        let mut r = Registry::new();
+        r.inc("retries", 1);
+        r.snapshot_round(0);
+        r.inc("retries", 4);
+        r.inc("rejects", 2);
+        r.snapshot_round(1);
+        let snaps = r.snapshots();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps[0].counters, vec![("retries".to_string(), 1)]);
+        assert_eq!(
+            snaps[1].counters,
+            vec![("rejects".to_string(), 2), ("retries".to_string(), 5)]
+        );
+        let json = r.to_json();
+        assert!(json.contains("\"rounds\":[{\"round\":0,\"counters\":{\"retries\":1}}"), "{json}");
+    }
+
+    #[test]
+    fn json_dump_shape() {
+        let mut r = Registry::new();
+        r.inc("c", 1);
+        r.set_gauge("g", 0.5);
+        r.observe_with("h", 2.0, &[1.0]);
+        r.snapshot_round(0);
+        assert_eq!(
+            r.to_json(),
+            "{\"counters\":{\"c\":1},\"gauges\":{\"g\":0.5},\"histograms\":{\"h\":{\"bounds\":[1],\"counts\":[0,1],\"sum\":2.000000,\"count\":1}},\"rounds\":[{\"round\":0,\"counters\":{\"c\":1}}]}"
+        );
+    }
+}

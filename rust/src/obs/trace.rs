@@ -1,0 +1,390 @@
+//! Nested span tracing on the simulated clock.
+//!
+//! A [`Tracer`] records a tree of spans per round: the orchestration code
+//! opens a span when a phase starts on the simulated clock, closes it when
+//! the phase's modeled duration has been charged, and attaches attributes
+//! (counts, model seconds, digests) along the way. Spans nest via an open
+//! stack — the parent of a new span is whatever span is open at the time —
+//! and instantaneous observations (a retry firing, a journal append) are
+//! recorded as zero-duration leaf spans so that the well-nestedness
+//! invariant *children durations sum to at most the parent duration* holds
+//! by construction even when the underlying work overlapped (parallel
+//! per-client training is one `train` span with attributes, not overlapping
+//! children).
+//!
+//! Determinism contract: a disabled tracer is a true no-op (every method
+//! early-returns before allocating), and an enabled tracer only ever stores
+//! values handed to it by single-threaded orchestration code — it consumes
+//! no RNG and reads no wall clock, so trace bytes are bitwise identical
+//! across refresh thread counts and reruns.
+
+use super::{fnv1a64, json_escape, json_f64};
+
+/// Handle to a recorded span. `SpanId::NONE` is returned by every recording
+/// method of a disabled tracer; all methods accept it and do nothing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanId(pub(crate) u32);
+
+impl SpanId {
+    pub const NONE: SpanId = SpanId(0);
+
+    pub fn is_none(self) -> bool {
+        self.0 == 0
+    }
+}
+
+/// Attribute value: the emitter keeps integer attributes exact (no float
+/// round-trip) and formats floats with shortest-round-trip `Display`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Attr {
+    U64(u64),
+    I64(i64),
+    F64(f64),
+    Str(String),
+    Bool(bool),
+}
+
+impl Attr {
+    fn to_json(&self) -> String {
+        match self {
+            Attr::U64(v) => format!("{v}"),
+            Attr::I64(v) => format!("{v}"),
+            Attr::F64(v) => json_f64(*v),
+            Attr::Str(s) => format!("\"{}\"", json_escape(s)),
+            Attr::Bool(b) => format!("{b}"),
+        }
+    }
+}
+
+/// One recorded span. `id`s are assigned in open order starting at 1;
+/// `parent == 0` marks a root span. Times are simulated seconds.
+#[derive(Debug, Clone)]
+pub struct Span {
+    pub id: u32,
+    pub parent: u32,
+    pub name: &'static str,
+    pub round: u64,
+    pub start: f64,
+    pub dur: f64,
+    pub attrs: Vec<(&'static str, Attr)>,
+    open: bool,
+}
+
+/// The span recorder. Construct with [`Tracer::new`]; a disabled tracer
+/// never allocates.
+#[derive(Debug, Clone)]
+pub struct Tracer {
+    enabled: bool,
+    spans: Vec<Span>,
+    /// Indices (into `spans`) of currently-open spans, innermost last.
+    stack: Vec<usize>,
+}
+
+impl Tracer {
+    pub fn new(enabled: bool) -> Self {
+        Tracer { enabled, spans: Vec::new(), stack: Vec::new() }
+    }
+
+    /// The no-op tracer.
+    pub fn off() -> Self {
+        Tracer::new(false)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Open a span at simulated time `start`. Its parent is the innermost
+    /// currently-open span (none ⇒ root). Returns `SpanId::NONE` when
+    /// disabled.
+    pub fn open(&mut self, name: &'static str, round: usize, start: f64) -> SpanId {
+        if !self.enabled {
+            return SpanId::NONE;
+        }
+        let id = (self.spans.len() + 1) as u32;
+        let parent = self.stack.last().map(|&i| self.spans[i].id).unwrap_or(0);
+        self.spans.push(Span {
+            id,
+            parent,
+            name,
+            round: round as u64,
+            start,
+            dur: 0.0,
+            attrs: Vec::new(),
+            open: true,
+        });
+        self.stack.push(self.spans.len() - 1);
+        SpanId(id)
+    }
+
+    /// Close `id` at simulated time `end` (duration = `end - start`). Spans
+    /// must close innermost-first; closing out of order is a bug in the
+    /// instrumentation, caught in debug builds.
+    pub fn close(&mut self, id: SpanId, end: f64) {
+        if id.is_none() {
+            return;
+        }
+        let idx = (id.0 - 1) as usize;
+        let dur = end - self.spans[idx].start;
+        self.close_with_dur(id, dur);
+    }
+
+    /// Close `id` with an explicit duration — used when the instrumented
+    /// code has the phase duration as an exact model value and the span must
+    /// carry those bits verbatim (e.g. the root `round` span's duration is
+    /// bitwise the reported `round_secs`, so `feddde profile` reproduces it
+    /// with zero error).
+    pub fn close_with_dur(&mut self, id: SpanId, dur: f64) {
+        if id.is_none() {
+            return;
+        }
+        let idx = (id.0 - 1) as usize;
+        debug_assert!(
+            self.stack.last() == Some(&idx),
+            "span {:?} ({}) closed out of order",
+            id,
+            self.spans[idx].name
+        );
+        debug_assert!(dur >= 0.0 || !dur.is_finite(), "span {} closed with negative duration {dur}", self.spans[idx].name);
+        if self.stack.last() == Some(&idx) {
+            self.stack.pop();
+        } else if let Some(pos) = self.stack.iter().rposition(|&i| i == idx) {
+            self.stack.remove(pos);
+        }
+        self.spans[idx].dur = dur;
+        self.spans[idx].open = false;
+    }
+
+    /// Record a complete leaf span (open + close in one call) with an
+    /// explicit duration, parented to the innermost open span. Instant
+    /// observations (retries, journal appends) use `dur = 0.0` so they never
+    /// violate the children-sum bound of an enclosing span.
+    pub fn leaf(&mut self, name: &'static str, round: usize, at: f64, dur: f64) -> SpanId {
+        if !self.enabled {
+            return SpanId::NONE;
+        }
+        let id = self.open(name, round, at);
+        // `open` pushed it; close immediately with the given duration.
+        self.close_with_dur(id, dur);
+        id
+    }
+
+    pub fn attr_u64(&mut self, id: SpanId, key: &'static str, v: u64) {
+        self.push_attr(id, key, Attr::U64(v));
+    }
+
+    pub fn attr_i64(&mut self, id: SpanId, key: &'static str, v: i64) {
+        self.push_attr(id, key, Attr::I64(v));
+    }
+
+    pub fn attr_f64(&mut self, id: SpanId, key: &'static str, v: f64) {
+        self.push_attr(id, key, Attr::F64(v));
+    }
+
+    pub fn attr_str(&mut self, id: SpanId, key: &'static str, v: &str) {
+        self.push_attr(id, key, Attr::Str(v.to_string()));
+    }
+
+    pub fn attr_bool(&mut self, id: SpanId, key: &'static str, v: bool) {
+        self.push_attr(id, key, Attr::Bool(v));
+    }
+
+    fn push_attr(&mut self, id: SpanId, key: &'static str, v: Attr) {
+        if id.is_none() {
+            return;
+        }
+        self.spans[(id.0 - 1) as usize].attrs.push((key, v));
+    }
+
+    /// Recorded spans, in open order (ids 1..=len).
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// Number of spans still open — zero after every round closes cleanly.
+    pub fn open_count(&self) -> usize {
+        self.stack.len()
+    }
+
+    /// Byte-stable JSONL export: one span per line, in id order, with a
+    /// fixed key order:
+    ///
+    /// ```json
+    /// {"id":1,"parent":0,"name":"round","round":0,"start":0,"dur":12.5,"attrs":{"policy":"cluster"}}
+    /// ```
+    ///
+    /// Floats use shortest-round-trip `Display` (non-finite ⇒ `null`), so
+    /// byte equality of two traces implies bit equality of every timestamp.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for s in &self.spans {
+            out.push_str(&format!(
+                "{{\"id\":{},\"parent\":{},\"name\":\"{}\",\"round\":{},\"start\":{},\"dur\":{},\"attrs\":{{",
+                s.id,
+                s.parent,
+                json_escape(s.name),
+                s.round,
+                json_f64(s.start),
+                json_f64(s.dur),
+            ));
+            for (i, (k, v)) in s.attrs.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("\"{}\":{}", json_escape(k), v.to_json()));
+            }
+            out.push_str("}}\n");
+        }
+        out
+    }
+
+    /// Chrome `trace_event` export (load in `chrome://tracing` / Perfetto):
+    /// every span becomes a complete event (`"ph":"X"`) with microsecond
+    /// timestamps, `pid` 0, and the round number as the thread id so each
+    /// round renders as its own row.
+    pub fn to_chrome(&self) -> String {
+        let mut out = String::from("{\"traceEvents\":[");
+        for (i, s) in self.spans.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"cat\":\"feddde\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\"pid\":0,\"tid\":{},\"args\":{{\"id\":{},\"parent\":{}",
+                json_escape(s.name),
+                json_f64(s.start * 1e6),
+                json_f64(s.dur * 1e6),
+                s.round,
+                s.id,
+                s.parent,
+            ));
+            for (k, v) in &s.attrs {
+                out.push_str(&format!(",\"{}\":{}", json_escape(k), v.to_json()));
+            }
+            out.push_str("}}");
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// FNV-1a 64 digest of the JSONL bytes — the determinism suite's
+    /// "trace digest invariant across threads and reruns" oracle.
+    pub fn digest(&self) -> u64 {
+        fnv1a64(self.to_jsonl().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_is_a_no_op() {
+        let mut t = Tracer::off();
+        let id = t.open("round", 0, 0.0);
+        assert!(id.is_none());
+        t.attr_u64(id, "k", 1);
+        t.attr_str(id, "s", "x");
+        t.close(id, 5.0);
+        let leaf = t.leaf("retry", 0, 1.0, 0.0);
+        assert!(leaf.is_none());
+        assert!(t.spans().is_empty());
+        assert_eq!(t.to_jsonl(), "");
+        assert_eq!(t.digest(), fnv1a64(b""));
+    }
+
+    #[test]
+    fn nesting_follows_the_open_stack() {
+        let mut t = Tracer::new(true);
+        let root = t.open("round", 3, 10.0);
+        let refresh = t.open("refresh", 3, 10.0);
+        let sumz = t.leaf("summarize", 3, 10.0, 2.0);
+        t.close(refresh, 13.0);
+        let train = t.open("train", 3, 13.0);
+        let retry = t.leaf("retry", 3, 14.5, 0.0);
+        t.close(train, 20.0);
+        t.close(root, 20.0);
+        assert_eq!(t.open_count(), 0);
+        let spans = t.spans();
+        assert_eq!(spans.len(), 5);
+        let by_id = |id: SpanId| &spans[(id.0 - 1) as usize];
+        assert_eq!(by_id(root).parent, 0);
+        assert_eq!(by_id(refresh).parent, root.0);
+        assert_eq!(by_id(sumz).parent, refresh.0);
+        assert_eq!(by_id(train).parent, root.0);
+        assert_eq!(by_id(retry).parent, train.0);
+        assert_eq!(by_id(root).dur, 10.0);
+        assert_eq!(by_id(refresh).dur, 3.0);
+        assert_eq!(by_id(sumz).dur, 2.0);
+    }
+
+    #[test]
+    fn close_with_dur_preserves_bits() {
+        let mut t = Tracer::new(true);
+        let id = t.open("round", 0, 0.1);
+        let exact = 0.1f64 + 0.2f64; // not representable as end - start exactly
+        t.close_with_dur(id, exact);
+        assert_eq!(t.spans()[0].dur.to_bits(), exact.to_bits());
+    }
+
+    #[test]
+    fn jsonl_bytes_are_stable_and_parseable_shape() {
+        let mut t = Tracer::new(true);
+        let root = t.open("round", 0, 0.0);
+        t.attr_str(root, "policy", "cluster");
+        t.attr_u64(root, "selected", 10);
+        t.attr_f64(root, "loss", 0.25);
+        t.close(root, 12.5);
+        let line = t.to_jsonl();
+        assert_eq!(
+            line,
+            "{\"id\":1,\"parent\":0,\"name\":\"round\",\"round\":0,\"start\":0,\"dur\":12.5,\"attrs\":{\"policy\":\"cluster\",\"selected\":10,\"loss\":0.25}}\n"
+        );
+        // Identical recording => identical bytes => identical digest.
+        let mut u = Tracer::new(true);
+        let r2 = u.open("round", 0, 0.0);
+        u.attr_str(r2, "policy", "cluster");
+        u.attr_u64(r2, "selected", 10);
+        u.attr_f64(r2, "loss", 0.25);
+        u.close(r2, 12.5);
+        assert_eq!(t.digest(), u.digest());
+    }
+
+    #[test]
+    fn nonfinite_span_values_emit_null() {
+        let mut t = Tracer::new(true);
+        let id = t.open("round", 0, 0.0);
+        t.attr_f64(id, "loss", f64::NAN);
+        t.close_with_dur(id, f64::INFINITY);
+        let line = t.to_jsonl();
+        assert!(line.contains("\"dur\":null"), "{line}");
+        assert!(line.contains("\"loss\":null"), "{line}");
+    }
+
+    #[test]
+    fn chrome_export_scales_to_micros() {
+        let mut t = Tracer::new(true);
+        let id = t.open("refresh", 2, 1.5);
+        t.close(id, 2.0);
+        let chrome = t.to_chrome();
+        assert!(chrome.starts_with("{\"traceEvents\":["));
+        assert!(chrome.contains("\"ph\":\"X\""));
+        assert!(chrome.contains("\"ts\":1500000"));
+        assert!(chrome.contains("\"dur\":500000"));
+        assert!(chrome.contains("\"tid\":2"));
+        assert!(chrome.ends_with("]}"));
+    }
+
+    #[test]
+    fn pinned_one_span_digest() {
+        // Byte-stability regression pin: if the JSONL schema changes, this
+        // digest changes and the trace-format docs must be updated with it.
+        let mut t = Tracer::new(true);
+        let id = t.open("round", 0, 0.0);
+        t.close(id, 1.0);
+        assert_eq!(
+            t.to_jsonl(),
+            "{\"id\":1,\"parent\":0,\"name\":\"round\",\"round\":0,\"start\":0,\"dur\":1,\"attrs\":{}}\n"
+        );
+        assert_eq!(t.digest(), fnv1a64(t.to_jsonl().as_bytes()));
+    }
+}

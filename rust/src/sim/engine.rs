@@ -72,6 +72,7 @@ use crate::data::generator::Generator;
 use crate::data::partition::{ClientPartition, Partition};
 use crate::data::spec::DatasetSpec;
 use crate::device::{DeviceProfile, FleetModel};
+use crate::obs::{Registry, SpanId, Tracer};
 use crate::runtime::Engine;
 use crate::selection::{self, ClientView, SelectionPolicy};
 use crate::sim::report::{HierRoundStats, RoundReport, SimEventRecord, SimReport};
@@ -343,6 +344,8 @@ struct RoundCtx {
     selection_secs: f64,
     t_sel: f64,
     hier_refresh: Option<HierRefreshStats>,
+    /// The open root `round` span ([`SpanId::NONE`] when tracing is off).
+    span_round: SpanId,
 }
 
 /// FNV-1a-64 over the little-endian f32 bit patterns — the parameter-vector
@@ -402,6 +405,14 @@ pub struct Simulator {
     machine: CoordinatorMachine,
     /// Accumulating run report (rounds + popped-event stream).
     report: SimReport,
+    /// Span tracer, live iff `cfg.trace` names an output path. Disabled it
+    /// is a true no-op: no span is recorded, no RNG is drawn, and the event
+    /// stream / journal are bitwise the untraced run's (tested).
+    tracer: Tracer,
+    /// Fleet metrics registry. Always collects (pure bookkeeping off the
+    /// simulated clock, no RNG); the CLI persists it only when
+    /// `cfg.metrics_out` is set.
+    registry: Registry,
 }
 
 impl Simulator {
@@ -501,6 +512,24 @@ impl Simulator {
         // With faults off the health tracker is never consulted; the lazy
         // path then skips its O(n) allocation entirely.
         let health_n = if lazy && !faults_on { 0 } else { n };
+        let tracer = Tracer::new(!cfg.trace.is_empty());
+        let mut registry = Registry::new();
+        if lazy && matches!(cfg.policy.as_str(), "cluster" | "round_robin") {
+            // Guardrail: these policies depend on the full-fleet view
+            // (cohort-dependent refresh inputs / rotation cursor), so the
+            // lazy stream diverges from the eager one under partial
+            // availability. Count it and warn once per process.
+            registry.inc("lazy_divergent_policy", 1);
+            static LAZY_DIVERGENT_WARNED: std::sync::Once = std::sync::Once::new();
+            let policy = cfg.policy.clone();
+            LAZY_DIVERGENT_WARNED.call_once(|| {
+                eprintln!(
+                    "warning: --lazy-arrivals with the `{policy}` policy diverges from \
+                     the eager event stream (cohort-dependent refresh/rotation); use \
+                     random/oort/powd for bitwise equivalence"
+                );
+            });
+        }
         Ok(Simulator {
             cfg,
             scenario,
@@ -524,7 +553,111 @@ impl Simulator {
             fault,
             machine,
             report,
+            tracer,
+            registry,
         })
+    }
+
+    /// The metrics registry accumulated so far (always collecting).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// The span tracer (empty unless `cfg.trace` is set).
+    pub fn tracer(&self) -> &Tracer {
+        &self.tracer
+    }
+
+    /// Record a journal append at simulated time `at` (a dur-0 trace leaf
+    /// plus the `journal_appends_total` counter).
+    fn journal_mark(&mut self, round: usize, at: f64) {
+        self.tracer.leaf("journal_append", round, at, 0.0);
+        self.registry.inc("journal_appends_total", 1);
+    }
+
+    /// Telemetry for one completed refresh: the `summarize` + `cluster`
+    /// child spans under the open `refresh` span `span`, the hier leaf
+    /// spans when the shard tier ran, and the store/distance metrics.
+    /// Pure bookkeeping — nothing here touches the clock or any RNG.
+    fn note_refresh(
+        &mut self,
+        span: SpanId,
+        round: usize,
+        t0: f64,
+        r: &RefreshResult,
+        hier: Option<&HierRefreshStats>,
+    ) {
+        let s = self.tracer.leaf("summarize", round, t0, r.device_parallel_secs);
+        self.tracer.attr_u64(s, "recomputed", r.recomputed.len() as u64);
+        self.tracer.attr_u64(s, "store_hits", r.store.hits);
+        self.tracer.attr_u64(s, "store_misses", r.store.misses);
+        let c = self.tracer.leaf(
+            "cluster",
+            round,
+            t0 + r.device_parallel_secs,
+            r.cluster_model_secs,
+        );
+        self.tracer.attr_u64(c, "iters", r.cluster_iters as u64);
+        self.tracer.attr_f64(c, "skip_rate", r.assign_stats.skip_rate());
+        if let Some(h) = hier {
+            let e = self.tracer.leaf("edge_cluster", round, t0, 0.0);
+            self.tracer.attr_f64(e, "model_secs", h.edge_cluster_model_secs);
+            self.tracer.attr_u64(e, "shards", h.shards as u64);
+            let m = self.tracer.leaf("root_merge", round, t0, 0.0);
+            self.tracer.attr_f64(m, "model_secs", h.root_merge_model_secs);
+            self.tracer.attr_u64(m, "digest", h.merged_centroid_digest);
+            let max_bytes = h.shard_store_bytes.iter().copied().max().unwrap_or(0);
+            self.registry.set_gauge("shard_store_bytes_max", max_bytes as f64);
+        }
+        self.tracer.attr_u64(span, "recomputed", r.recomputed.len() as u64);
+        self.tracer.attr_u64(span, "invalidated", r.invalidated as u64);
+        self.tracer.attr_u64(span, "evicted", r.evicted as u64);
+        self.tracer.attr_u64(span, "store_rows", r.store.rows as u64);
+        self.tracer.attr_u64(span, "store_bytes", r.store.bytes as u64);
+        // Store counters are LIFETIME totals (the arenas persist across
+        // refreshes), so they are set, not incremented.
+        self.registry.set_counter("store_hits_total", r.store.hits);
+        self.registry.set_counter("store_misses_total", r.store.misses);
+        self.registry.set_counter("store_evictions_total", r.store.evictions);
+        self.registry.set_counter("store_compactions_total", r.store.compactions);
+        self.registry.set_gauge("store_bytes", r.store.bytes as f64);
+        self.registry.set_gauge("store_rows", r.store.rows as f64);
+        self.registry.inc("distance_pairs_total", r.assign_stats.pairs);
+        self.registry.inc("distance_exact_total", r.assign_stats.exact);
+        self.registry.inc("distance_screened_total", r.assign_stats.screened);
+        self.registry.inc("refresh_recomputed_total", r.recomputed.len() as u64);
+    }
+
+    /// Fold a closed round's report row into the registry (counters,
+    /// gauges, histograms) and cut the per-round snapshot. The row owns
+    /// every per-round count, so nothing is double-counted from the event
+    /// loop.
+    fn note_round(&mut self, r: &RoundReport) {
+        self.registry.inc("rounds_total", 1);
+        self.registry.inc("selected_total", r.selected as u64);
+        self.registry.inc("completed_total", r.completed as u64);
+        self.registry.inc("dropouts_total", r.dropped as u64);
+        self.registry.inc("timed_out_total", r.timed_out as u64);
+        self.registry.inc("failed_total", r.failed as u64);
+        self.registry.inc("retries_total", r.retries);
+        self.registry.inc("summary_rejects_total", r.summary_rejects);
+        if r.aggregated {
+            self.registry.inc("aggregated_rounds_total", 1);
+        }
+        if r.degraded {
+            self.registry.inc("degraded_rounds_total", 1);
+        }
+        if r.refresh_secs > 0.0 {
+            self.registry.inc("refreshes_total", 1);
+            self.registry.observe("refresh_secs", r.refresh_secs);
+        }
+        self.registry.set_counter("quarantines_total", self.health.quarantines());
+        self.registry.set_gauge("quarantined_now", self.health.quarantined_now() as f64);
+        self.registry.observe("round_secs", r.round_secs);
+        self.registry
+            .observe(&format!("selection_secs_{}", self.cfg.policy), r.selection_secs);
+        self.registry.set_gauge("coverage", r.coverage);
+        self.registry.snapshot_round(r.round);
     }
 
     /// Is the fault fabric live for this run? When false, no fault
@@ -568,7 +701,9 @@ impl Simulator {
             return Ok((0.0, 0, 0, None));
         }
         let k = if self.cfg.clusters > 0 { self.cfg.clusters } else { self.spec.n_groups };
-        let (r, hier) = self.refresher.refresh(
+        let t0 = self.clock;
+        let span = self.tracer.open("refresh", round, t0);
+        let (mut r, hier) = self.refresher.refresh(
             &self.engine,
             self.summary.as_ref(),
             &self.partition,
@@ -579,11 +714,14 @@ impl Simulator {
             k,
             self.cfg.seed,
         )?;
-        self.clusters = r.clusters;
+        self.note_refresh(span, round, t0, &r, hier.as_ref());
+        self.clusters = std::mem::take(&mut r.clusters);
         self.report.peak_store_bytes = self.report.peak_store_bytes.max(r.store.bytes);
         let mut secs = r.sim_model_secs();
         let rejects =
             self.screen_corrupted_summaries(round, &r.recomputed, |pos| pos, &mut secs);
+        self.tracer.attr_u64(span, "rejects", rejects);
+        self.tracer.close_with_dur(span, secs);
         Ok((secs, r.recomputed.len(), rejects, hier))
     }
 
@@ -611,6 +749,8 @@ impl Simulator {
             clients: cohort.to_vec(),
             group_priors: self.partition.group_priors.clone(),
         };
+        let t0 = self.clock;
+        let span = self.tracer.open("refresh", round, t0);
         let (r, hier) = self.refresher.refresh(
             &self.engine,
             self.summary.as_ref(),
@@ -624,12 +764,15 @@ impl Simulator {
         )?;
         self.lazy_clusters =
             arrived.iter().copied().zip(r.clusters.iter().copied()).collect();
+        self.note_refresh(span, round, t0, &r, hier.as_ref());
         self.report.peak_store_bytes = self.report.peak_store_bytes.max(r.store.bytes);
         let mut secs = r.sim_model_secs();
         // Refresh results index the cohort positionally; map back to ids for
         // the fault plan's per-client schedules.
         let rejects =
             self.screen_corrupted_summaries(round, &r.recomputed, |pos| arrived[pos], &mut secs);
+        self.tracer.attr_u64(span, "rejects", rejects);
+        self.tracer.close_with_dur(span, secs);
         Ok((secs, r.recomputed.len(), rejects, hier))
     }
 
@@ -678,7 +821,12 @@ impl Simulator {
                 rejects += 1;
                 // One backoff's worth of refresh time to re-request
                 // the summary; the clean row is already in the store.
-                *secs += self.fault.backoff_secs(self.cfg.seed, cid, round, 1);
+                let b = self.fault.backoff_secs(self.cfg.seed, cid, round, 1);
+                *secs += b;
+                self.registry.observe("backoff_secs", b);
+                let l = self.tracer.leaf("summary_reject", round, self.clock, 0.0);
+                self.tracer.attr_u64(l, "client", cid as u64);
+                self.tracer.attr_str(l, "flavor", flavor.label());
                 self.health.record_failure(cid, round);
             }
         }
@@ -714,8 +862,10 @@ impl Simulator {
         let round = self.machine.rounds_closed();
         let t_start = self.clock;
 
+        let span_round = self.tracer.open("round", round, t_start);
         // start_round handler: refresh scheduling (summaries + clustering).
         self.machine.apply(Transition::RoundStarted { round })?;
+        self.journal_mark(round, t_start);
         let faults_on = self.faults_on();
         let quarantines_before = self.health.quarantines();
         if faults_on {
@@ -723,9 +873,9 @@ impl Simulator {
             self.health.begin_round(round);
         }
         if self.cfg.lazy_arrivals {
-            self.run_round_lazy(round, t_start, faults_on, quarantines_before)
+            self.run_round_lazy(round, t_start, faults_on, quarantines_before, span_round)
         } else {
-            self.run_round_eager(round, t_start, faults_on, quarantines_before)
+            self.run_round_eager(round, t_start, faults_on, quarantines_before, span_round)
         }
     }
 
@@ -738,6 +888,7 @@ impl Simulator {
         t_start: f64,
         faults_on: bool,
         quarantines_before: u64,
+        span_round: SpanId,
     ) -> Result<()> {
         let n = self.spec.n_clients;
         let (refresh_secs, refresh_recomputed, summary_rejects, hier_refresh) =
@@ -760,6 +911,7 @@ impl Simulator {
         }
         let available = avail.iter().filter(|&&a| a).count();
         self.machine.apply(Transition::FleetRendezvoused { round, available })?;
+        self.journal_mark(round, t_start + refresh_secs);
 
         // start_training handler: policy ranking with over-selection.
         let want = ((self.cfg.per_round as f64) * self.scenario.over_select.max(1.0))
@@ -767,6 +919,7 @@ impl Simulator {
         let want = want.clamp(self.cfg.per_round, n);
         let selection_secs = selection_model_secs(&self.cfg.policy, n, want);
         let t_sel = t_start + refresh_secs + selection_secs;
+        let span_sel = self.tracer.open("selection", round, t_start + refresh_secs);
 
         let views: Vec<ClientView<'_>> = self
             .partition
@@ -802,6 +955,10 @@ impl Simulator {
             })
             .collect();
         drop(views);
+        self.tracer.attr_u64(span_sel, "eligible", available as u64);
+        self.tracer.attr_u64(span_sel, "want", want as u64);
+        self.tracer.attr_u64(span_sel, "selected", sel.len() as u64);
+        self.tracer.close_with_dur(span_sel, selection_secs);
         self.finish_round(
             RoundCtx {
                 n,
@@ -815,6 +972,7 @@ impl Simulator {
                 selection_secs,
                 t_sel,
                 hier_refresh,
+                span_round,
             },
             sel,
         )
@@ -832,6 +990,7 @@ impl Simulator {
         t_start: f64,
         faults_on: bool,
         quarantines_before: u64,
+        span_round: SpanId,
     ) -> Result<()> {
         let n = self.spec.n_clients;
         let phase0 = self.scenario.drift.phase_at(0);
@@ -858,6 +1017,7 @@ impl Simulator {
             self.maybe_refresh_lazy(round, &arrived, &devices, &cohort)?;
         let available = arrived.len();
         self.machine.apply(Transition::FleetRendezvoused { round, available })?;
+        self.journal_mark(round, t_start + refresh_secs);
 
         let want = ((self.cfg.per_round as f64) * self.scenario.over_select.max(1.0))
             .ceil() as usize;
@@ -867,6 +1027,7 @@ impl Simulator {
         // were sampled.
         let selection_secs = selection_model_secs(&self.cfg.policy, n, want);
         let t_sel = t_start + refresh_secs + selection_secs;
+        let span_sel = self.tracer.open("selection", round, t_start + refresh_secs);
 
         // Arrived-cohort views. The availability-filtering policies (random,
         // oort, powd) see exactly the sub-list they would have filtered out
@@ -906,6 +1067,10 @@ impl Simulator {
             })
             .collect();
         drop(views);
+        self.tracer.attr_u64(span_sel, "eligible", available as u64);
+        self.tracer.attr_u64(span_sel, "want", want as u64);
+        self.tracer.attr_u64(span_sel, "selected", sel.len() as u64);
+        self.tracer.close_with_dur(span_sel, selection_secs);
         self.finish_round(
             RoundCtx {
                 n,
@@ -919,6 +1084,7 @@ impl Simulator {
                 selection_secs,
                 t_sel,
                 hier_refresh,
+                span_round,
             },
             sel,
         )
@@ -975,6 +1141,7 @@ impl Simulator {
             selection_secs,
             t_sel,
             hier_refresh,
+            span_round,
         } = ctx;
         let shards = self.cfg.shards.max(1);
         // Per-shard edge-aggregator committee: a seeded hash rotates the
@@ -989,6 +1156,7 @@ impl Simulator {
             round,
             selected: sel.iter().map(|s| s.cid).collect(),
         })?;
+        self.journal_mark(round, t_sel);
 
         if sel.is_empty() {
             // Nobody reachable (e.g. a flash-crowd trough): charge the
@@ -1001,13 +1169,15 @@ impl Simulator {
                 timed_out: Vec::new(),
                 failed: Vec::new(),
             })?;
+            self.journal_mark(round, t_sel);
             self.machine.apply(Transition::RoundAggregated {
                 round,
                 aggregated: false,
                 degraded: false,
             })?;
+            self.journal_mark(round, t_sel);
             self.clock = t_sel;
-            self.report.push_round(RoundReport {
+            let row = RoundReport {
                 round,
                 t_start,
                 t_end: t_sel,
@@ -1030,7 +1200,13 @@ impl Simulator {
                 degraded: false,
                 coverage: coverage(&self.completed_ever, n),
                 hier: self.hier_block(shards, aggregators, &hier_refresh, 0.0, 0.0, 0),
-            });
+            };
+            self.tracer.attr_u64(span_round, "selected", 0);
+            self.tracer.attr_u64(span_round, "completed", 0);
+            self.tracer.attr_bool(span_round, "aggregated", false);
+            self.tracer.close_with_dur(span_round, row.round_secs);
+            self.note_round(&row);
+            self.report.push_round(row);
             return Ok(());
         }
 
@@ -1097,7 +1273,9 @@ impl Simulator {
             } else if self.fault.upload_attempt_fails(self.cfg.seed, cid, round, 0) {
                 // The original upload is lost in transit: the first retry
                 // lands one backoff after the client finished training.
-                let at = done_t + self.fault.backoff_secs(self.cfg.seed, cid, round, 1);
+                let b = self.fault.backoff_secs(self.cfg.seed, cid, round, 1);
+                self.registry.observe("backoff_secs", b);
+                let at = done_t + b;
                 self.queue
                     .schedule(at, round, EventKind::ClientRetry { client: cid, attempt: 1 });
             } else {
@@ -1134,6 +1312,7 @@ impl Simulator {
         let mut failed: Vec<usize> = Vec::new();
         let mut retries_issued: u64 = 0;
         let mut close_t: Option<f64> = None;
+        let span_train = self.tracer.open("train", round, t_sel);
         while close_t.is_none() {
             let Some(ev) = self.queue.pop() else {
                 bail!("round {round}: event queue empty before the deadline fired");
@@ -1174,6 +1353,8 @@ impl Simulator {
                         pending_drop.remove(&c);
                         self.health.record_failure(c, round);
                     }
+                    let l = self.tracer.leaf("dropout", round, ev.time, 0.0);
+                    self.tracer.attr_u64(l, "client", c as u64);
                     dropped.push(c);
                     if completed.len() + dropped.len() + failed.len() == sel.len() {
                         close_t = Some(ev.time);
@@ -1192,6 +1373,9 @@ impl Simulator {
                     } else {
                         retries_issued += 1;
                         retries_used.insert(c, a);
+                        let l = self.tracer.leaf("retry", round, ev.time, 0.0);
+                        self.tracer.attr_u64(l, "client", c as u64);
+                        self.tracer.attr_u64(l, "attempt", a as u64);
                         if !self.fault.upload_attempt_fails(self.cfg.seed, c, round, a) {
                             // The re-upload landed.
                             self.health.record_success(c);
@@ -1203,8 +1387,9 @@ impl Simulator {
                                 close_t = Some(ev.time);
                             }
                         } else if a < self.fault.max_retries {
-                            let at = ev.time
-                                + self.fault.backoff_secs(self.cfg.seed, c, round, a + 1);
+                            let b = self.fault.backoff_secs(self.cfg.seed, c, round, a + 1);
+                            self.registry.observe("backoff_secs", b);
+                            let at = ev.time + b;
                             self.queue.schedule(
                                 at,
                                 round,
@@ -1225,12 +1410,18 @@ impl Simulator {
                 EventKind::HeartbeatLost { client } => {
                     let c = *client;
                     self.health.record_failure(c, round);
+                    let l = self.tracer.leaf("heartbeat_lost", round, ev.time, 0.0);
+                    self.tracer.attr_u64(l, "client", c as u64);
+                    // Not separable from `failed` in the report row, so this
+                    // counter is owned by the event loop.
+                    self.registry.inc("heartbeat_losses_total", 1);
                     failed.push(c);
                     if completed.len() + dropped.len() + failed.len() == sel.len() {
                         close_t = Some(ev.time);
                     }
                 }
                 EventKind::Deadline => {
+                    self.tracer.leaf("deadline", round, ev.time, 0.0);
                     close_t = Some(ev.time);
                 }
             }
@@ -1256,6 +1447,13 @@ impl Simulator {
             sel.len(),
             "client terminal states must partition the selection"
         );
+        self.tracer.attr_u64(span_train, "launched", sel.len() as u64);
+        self.tracer.attr_u64(span_train, "completed", completed.len() as u64);
+        self.tracer.attr_u64(span_train, "dropped", dropped.len() as u64);
+        self.tracer.attr_u64(span_train, "timed_out", timed_out.len() as u64);
+        self.tracer.attr_u64(span_train, "failed", failed.len() as u64);
+        self.tracer.attr_u64(span_train, "retries", retries_issued);
+        self.tracer.close_with_dur(span_train, close_t - t_sel);
         // end_training handler: the terminal classification is the payload.
         self.machine.apply(Transition::TrainingEnded {
             round,
@@ -1264,6 +1462,7 @@ impl Simulator {
             timed_out: timed_out.clone(),
             failed: failed.clone(),
         })?;
+        self.journal_mark(round, close_t);
 
         // aggregate handler: FedAvg over the completed updates
         // (sample-count weighted), then metrics emission.
@@ -1276,6 +1475,9 @@ impl Simulator {
         let mut agg_edge_secs = 0.0;
         let mut agg_root_secs = 0.0;
         let mut agg_param_digest = 0u64;
+        // Aggregation is clock-free (the coordinator folds updates off the
+        // simulated clock), so its span is instantaneous at the close.
+        let span_agg = self.tracer.open("aggregate", round, close_t);
         if aggregated {
             let ns: HashMap<usize, usize> =
                 sel.iter().map(|s| (s.cid, s.n_samples)).collect();
@@ -1323,7 +1525,19 @@ impl Simulator {
                 self.last_loss.insert(cid, self.observed_loss(cid, round));
             }
         }
+        if aggregated && shards > 1 {
+            let e = self.tracer.leaf("edge_agg", round, close_t, 0.0);
+            self.tracer.attr_f64(e, "model_secs", agg_edge_secs);
+            let m = self.tracer.leaf("root_agg", round, close_t, 0.0);
+            self.tracer.attr_f64(m, "model_secs", agg_root_secs);
+            self.tracer.attr_u64(m, "digest", agg_param_digest);
+        }
+        self.tracer.attr_bool(span_agg, "aggregated", aggregated);
+        self.tracer.attr_bool(span_agg, "degraded", degraded);
+        self.tracer.attr_u64(span_agg, "updates", completed.len() as u64);
+        self.tracer.close_with_dur(span_agg, 0.0);
         self.machine.apply(Transition::RoundAggregated { round, aggregated, degraded })?;
+        self.journal_mark(round, close_t);
 
         // Wall-clock breakdown: the round's training segment is gated by
         // the last completion; any tail beyond it (waiting out dropouts
@@ -1338,7 +1552,7 @@ impl Simulator {
             None => close_t - t_sel,
         };
         self.clock = close_t;
-        self.report.push_round(RoundReport {
+        let row = RoundReport {
             round,
             t_start,
             t_end: close_t,
@@ -1368,23 +1582,52 @@ impl Simulator {
                 agg_root_secs,
                 agg_param_digest,
             ),
-        });
+        };
+        self.tracer.attr_u64(span_round, "selected", row.selected as u64);
+        self.tracer.attr_u64(span_round, "completed", row.completed as u64);
+        self.tracer.attr_bool(span_round, "aggregated", row.aggregated);
+        self.tracer.attr_bool(span_round, "degraded", row.degraded);
+        // Close the root span with the row's EXACT duration bits: the
+        // profile inspector reproduces `round_secs` from the trace alone.
+        self.tracer.close_with_dur(span_round, row.round_secs);
+        self.note_round(&row);
+        self.report.push_round(row);
         Ok(())
     }
 
     /// Run all configured rounds; consumes the simulator.
     pub fn run(self) -> Result<SimReport> {
-        Ok(self.run_journaled()?.0)
+        Ok(self.run_traced()?.report)
     }
 
     /// Run all configured rounds and return the report plus the transition
     /// journal; the report's header quotes the journal digest.
-    pub fn run_journaled(mut self) -> Result<(SimReport, EventJournal)> {
+    pub fn run_journaled(self) -> Result<(SimReport, EventJournal)> {
+        let run = self.run_traced()?;
+        Ok((run.report, run.journal))
+    }
+
+    /// Run all configured rounds and return everything a telemetry-aware
+    /// caller wants: the report, the journal, the span trace, and the
+    /// metrics registry. The plain [`run`](Simulator::run) /
+    /// [`run_journaled`](Simulator::run_journaled) entry points delegate
+    /// here and discard the telemetry.
+    pub fn run_traced(mut self) -> Result<SimRun> {
         while self.machine.rounds_closed() < self.cfg.rounds {
             self.run_round()?;
         }
+        debug_assert_eq!(
+            self.tracer.open_count(),
+            0,
+            "every span must be closed when the run ends"
+        );
         self.report.journal_digest = Some(self.machine.journal().digest());
-        Ok((self.report, self.machine.into_journal()))
+        Ok(SimRun {
+            report: self.report,
+            journal: self.machine.into_journal(),
+            tracer: self.tracer,
+            registry: self.registry,
+        })
     }
 
     /// Run up to the crash point, then die: returns the journal text as a
@@ -1433,8 +1676,22 @@ impl Simulator {
             sim.run_round().context("re-executing journaled rounds during recovery")?;
         }
         sim.machine.end_replay()?;
+        let l = sim.tracer.leaf("journal_replay", closed, sim.clock, 0.0);
+        sim.tracer.attr_u64(l, "rounds_replayed", closed as u64);
+        sim.registry.inc("journal_replays_total", 1);
         Ok(sim)
     }
+}
+
+/// Everything one completed simulation produced: the report + journal the
+/// untraced entry points return, plus the span trace and metrics registry.
+pub struct SimRun {
+    pub report: SimReport,
+    pub journal: EventJournal,
+    /// The span trace (empty when `cfg.trace` was unset).
+    pub tracer: Tracer,
+    /// The fleet metrics registry (always populated).
+    pub registry: Registry,
 }
 
 /// Serialize `journal`'s first `keep` records, with the next record (if any)
@@ -2048,5 +2305,121 @@ mod tests {
                 y.hier.as_ref().map(|h| h.merged_centroid_digest)
             );
         }
+    }
+
+    fn traced_cfg() -> SimConfig {
+        SimConfig { trace: "trace.jsonl".into(), refresh_every: 2, ..smoke_cfg() }
+    }
+
+    #[test]
+    fn lazy_divergent_policy_counter_fires_for_cluster_and_round_robin() {
+        // Satellite: lazy + cohort-dependent policies silently diverge from
+        // eager; the registry must flag the combination (the one-time stderr
+        // warning rides on the same gate).
+        for (policy, expect) in
+            [("cluster", 1u64), ("round_robin", 1), ("random", 0), ("oort", 0)]
+        {
+            let cfg = SimConfig {
+                lazy_arrivals: true,
+                policy: policy.into(),
+                ..smoke_cfg()
+            };
+            let sim =
+                Simulator::new(cfg, Scenario::by_name("sync_baseline").unwrap()).unwrap();
+            assert_eq!(
+                sim.registry().counter("lazy_divergent_policy"),
+                expect,
+                "{policy}"
+            );
+            // Eager runs never flag, whatever the policy.
+            let eager = SimConfig { policy: policy.into(), ..smoke_cfg() };
+            let sim =
+                Simulator::new(eager, Scenario::by_name("sync_baseline").unwrap()).unwrap();
+            assert_eq!(sim.registry().counter("lazy_divergent_policy"), 0, "{policy}");
+        }
+    }
+
+    #[test]
+    fn traced_run_produces_well_nested_round_spans() {
+        use crate::obs::profile::{check_well_nested, parse_trace, round_totals};
+        let sc = Scenario::by_name("straggler_cut").unwrap();
+        let run = Simulator::new(traced_cfg(), sc).unwrap().run_traced().unwrap();
+        let spans = parse_trace(&run.tracer.to_jsonl()).unwrap();
+        assert!(!spans.is_empty(), "traced run recorded nothing");
+        check_well_nested(&spans, 1e-9).unwrap_or_else(|e| panic!("not well-nested: {e}"));
+        // Acceptance oracle: each round's root-span duration IS the report's
+        // round_secs, bitwise — `feddde profile` reproduces the clock.
+        let totals = round_totals(&spans);
+        assert_eq!(totals.len(), run.report.rounds.len());
+        for ((round, dur), row) in totals.iter().zip(&run.report.rounds) {
+            assert_eq!(*round, row.round as u64);
+            assert_eq!(
+                dur.to_bits(),
+                row.round_secs.to_bits(),
+                "round {round}: trace dur != report round_secs"
+            );
+        }
+    }
+
+    #[test]
+    fn tracing_off_and_on_yield_identical_streams_and_journals() {
+        // The tracer must be a true no-op on the simulation itself: same
+        // event digests and journal bytes with and without it, including
+        // under an active fault plan.
+        for scenario in ["sync_baseline", "flaky_uplink"] {
+            let sc = Scenario::by_name(scenario).unwrap();
+            let off = SimConfig { trace: String::new(), ..traced_cfg() };
+            let (ro, jo) =
+                Simulator::new(off, sc.clone()).unwrap().run_journaled().unwrap();
+            let on = Simulator::new(traced_cfg(), sc).unwrap().run_traced().unwrap();
+            assert_eq!(
+                ro.event_digest(),
+                on.report.event_digest(),
+                "{scenario}: tracing changed the event stream"
+            );
+            assert_eq!(
+                jo.to_jsonl(),
+                on.journal.to_jsonl(),
+                "{scenario}: tracing changed the journal"
+            );
+            assert!(!on.tracer.spans().is_empty());
+        }
+    }
+
+    #[test]
+    fn trace_digest_is_invariant_across_reruns_and_threads() {
+        let sc = Scenario::by_name("diurnal").unwrap();
+        let digests: Vec<u64> = [1usize, 1, 4, 8]
+            .iter()
+            .map(|&threads| {
+                let cfg = SimConfig { threads, ..traced_cfg() };
+                let run =
+                    Simulator::new(cfg, sc.clone()).unwrap().run_traced().unwrap();
+                run.tracer.digest()
+            })
+            .collect();
+        assert!(
+            digests.windows(2).all(|w| w[0] == w[1]),
+            "trace digests diverged: {digests:x?}"
+        );
+    }
+
+    #[test]
+    fn registry_counts_reconcile_with_the_report() {
+        let sc = Scenario::by_name("flaky_uplink").unwrap();
+        let cfg = SimConfig { n_clients: 40, rounds: 6, per_round: 8, ..Default::default() };
+        let run = Simulator::new(cfg, sc).unwrap().run_traced().unwrap();
+        let (rep, reg) = (&run.report, &run.registry);
+        assert_eq!(reg.counter("rounds_total"), 6);
+        let sum = |f: fn(&RoundReport) -> u64| rep.rounds.iter().map(f).sum::<u64>();
+        assert_eq!(reg.counter("selected_total"), sum(|r| r.selected as u64));
+        assert_eq!(reg.counter("completed_total"), sum(|r| r.completed as u64));
+        assert_eq!(reg.counter("retries_total"), sum(|r| r.retries));
+        assert!(reg.counter("retries_total") > 0, "flaky_uplink issued no retries");
+        // 5 journal transitions per round, every one marked.
+        assert_eq!(reg.counter("journal_appends_total"), 6 * 5);
+        assert_eq!(reg.snapshots().len(), 6);
+        let (count, _) = reg.hist_totals("round_secs");
+        assert_eq!(count, 6);
     }
 }

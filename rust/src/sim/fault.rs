@@ -231,6 +231,16 @@ pub enum Corruption {
     Stale,
 }
 
+impl Corruption {
+    /// Stable lowercase label (trace-attribute vocabulary).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Corruption::Nan => "nan",
+            Corruption::Stale => "stale",
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -43,7 +43,7 @@ pub mod scenario;
 
 pub use engine::{
     run_with_recovery, selection_model_secs, Event, EventKind, EventQueue, RecoveryRun,
-    Simulator, UPDATE_DIM,
+    SimRun, Simulator, UPDATE_DIM,
 };
 pub use fault::{Corruption, FaultPlan};
 pub use report::{

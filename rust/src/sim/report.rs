@@ -7,10 +7,14 @@
 //! bytes **iff** the underlying f64s are bitwise equal — that is what lets
 //! the determinism suite compare event streams as strings and what makes
 //! "identical `BENCH_sim.json` event digests across thread counts" a
-//! meaningful check.
+//! meaningful check. Non-finite floats serialize as `null`
+//! (`obs::json_f64`): `Display` would print `NaN`/`inf`, which is not
+//! valid JSON, and NaN losses are reachable since selection tolerates them.
 
 use std::fmt;
 use std::io::Write;
+
+use crate::obs::{json_f64, json_f64_fixed};
 
 /// A failed report/bench artifact write: the path that failed and the
 /// underlying I/O error, so callers can report *which* artifact was lost
@@ -64,7 +68,11 @@ impl SimEventRecord {
         };
         format!(
             "{{\"type\":\"event\",\"t\":{},\"id\":{},\"round\":{},\"kind\":\"{}\",\"client\":{}}}",
-            self.time, self.id, self.round, self.kind, client
+            json_f64(self.time),
+            self.id,
+            self.round,
+            self.kind,
+            client
         )
     }
 }
@@ -110,11 +118,11 @@ impl HierRoundStats {
              \"agg_edge_secs\":{},\"agg_root_secs\":{},\"agg_param_digest\":\"{:#018x}\"}}",
             self.shards,
             aggs.join(","),
-            self.refresh_edge_secs,
-            self.refresh_root_secs,
+            json_f64(self.refresh_edge_secs),
+            json_f64(self.refresh_root_secs),
             self.merged_centroid_digest,
-            self.agg_edge_secs,
-            self.agg_root_secs,
+            json_f64(self.agg_edge_secs),
+            json_f64(self.agg_root_secs),
             self.agg_param_digest
         )
     }
@@ -174,14 +182,14 @@ impl RoundReport {
              \"failed\":{},\"retries\":{},\"summary_rejects\":{},\"quarantined\":{},\
              \"refresh_recomputed\":{},\"aggregated\":{},\"degraded\":{},\"coverage\":{}}}",
             self.round,
-            self.t_start,
-            self.t_end,
-            self.round_secs,
-            self.refresh_secs,
-            self.selection_secs,
-            self.compute_secs,
-            self.upload_secs,
-            self.wait_secs,
+            json_f64(self.t_start),
+            json_f64(self.t_end),
+            json_f64(self.round_secs),
+            json_f64(self.refresh_secs),
+            json_f64(self.selection_secs),
+            json_f64(self.compute_secs),
+            json_f64(self.upload_secs),
+            json_f64(self.wait_secs),
             self.selected,
             self.completed,
             self.dropped,
@@ -193,7 +201,7 @@ impl RoundReport {
             self.refresh_recomputed,
             self.aggregated,
             self.degraded,
-            self.coverage
+            json_f64(self.coverage)
         );
         if let Some(h) = &self.hier {
             s.pop(); // reopen the object to append the hier block
@@ -375,19 +383,19 @@ impl SimReport {
              \"selected\": {}, \"completed\": {}, \"dropped\": {}, \"timed_out\": {}, \
              \"failed\": {}, \"retries\": {}, \"summary_rejects\": {}, \
              \"quarantined\": {}, \"aggregated_rounds\": {}, \"degraded_rounds\": {}, \
-             \"coverage\": {:.6}, \
+             \"coverage\": {}, \
              \"event_digest\": \"{:#018x}\", \"journal_digest\": {}, \
-             \"host_secs\": {:.4}}}",
+             \"host_secs\": {}}}",
             self.scenario,
             self.policy,
             self.n_clients,
             self.rounds.len(),
-            t.sim_secs,
-            t.refresh_secs,
-            t.selection_secs,
-            t.compute_secs,
-            t.upload_secs,
-            t.wait_secs,
+            json_f64(t.sim_secs),
+            json_f64(t.refresh_secs),
+            json_f64(t.selection_secs),
+            json_f64(t.compute_secs),
+            json_f64(t.upload_secs),
+            json_f64(t.wait_secs),
             t.selected,
             t.completed,
             t.dropped,
@@ -398,10 +406,10 @@ impl SimReport {
             t.quarantined,
             t.aggregated_rounds,
             t.degraded_rounds,
-            t.coverage,
+            json_f64_fixed(t.coverage, 6),
             self.event_digest(),
             self.journal_digest_json(),
-            host_secs
+            json_f64_fixed(host_secs, 4)
         )
     }
 
@@ -419,18 +427,18 @@ impl SimReport {
         };
         format!(
             "{{\"scenario\": \"{}\", \"policy\": \"{}\", \"n\": {}, \"rounds\": {}, \
-             \"sim_secs\": {}, \"baseline_sim_secs\": {}, \"overhead_frac\": {:.6}, \
+             \"sim_secs\": {}, \"baseline_sim_secs\": {}, \"overhead_frac\": {}, \
              \"retries\": {}, \"failed\": {}, \"summary_rejects\": {}, \
              \"quarantined\": {}, \"degraded_rounds\": {}, \
              \"event_digest\": \"{:#018x}\", \"journal_digest\": {}, \
-             \"host_secs\": {:.4}}}",
+             \"host_secs\": {}}}",
             self.scenario,
             self.policy,
             self.n_clients,
             self.rounds.len(),
-            t.sim_secs,
-            baseline_sim_secs,
-            overhead_frac,
+            json_f64(t.sim_secs),
+            json_f64(baseline_sim_secs),
+            json_f64_fixed(overhead_frac, 6),
             t.retries,
             t.failed,
             t.summary_rejects,
@@ -438,7 +446,7 @@ impl SimReport {
             t.degraded_rounds,
             self.event_digest(),
             self.journal_digest_json(),
-            host_secs
+            json_f64_fixed(host_secs, 4)
         )
     }
 
@@ -468,8 +476,8 @@ impl SimReport {
              \"refresh_secs\": {}, \"selection_secs\": {}, \
              \"refresh_edge_secs\": {}, \"refresh_root_secs\": {}, \
              \"peak_store_bytes\": {}, \"events_popped\": {}, \
-             \"completed\": {}, \"coverage\": {:.6}, \
-             \"event_digest\": \"{:#018x}\", \"host_secs\": {:.4}}}",
+             \"completed\": {}, \"coverage\": {}, \
+             \"event_digest\": \"{:#018x}\", \"host_secs\": {}}}",
             self.scenario,
             self.policy,
             self.n_clients,
@@ -477,18 +485,18 @@ impl SimReport {
             lazy,
             self.rounds.len(),
             self.per_round,
-            t.sim_secs,
-            coord_secs_per_round,
-            t.refresh_secs,
-            t.selection_secs,
-            edge,
-            root,
+            json_f64(t.sim_secs),
+            json_f64(coord_secs_per_round),
+            json_f64(t.refresh_secs),
+            json_f64(t.selection_secs),
+            json_f64(edge),
+            json_f64(root),
             self.peak_store_bytes,
             self.events.len(),
             t.completed,
-            t.coverage,
+            json_f64_fixed(t.coverage, 6),
             self.event_digest(),
-            host_secs
+            json_f64_fixed(host_secs, 4)
         )
     }
 }
@@ -605,6 +613,23 @@ mod tests {
         let e = rep.events[1].to_json();
         assert!(e.contains("\"kind\":\"deadline\"") && e.contains("\"client\":null"));
         assert!(rep.events[0].to_json().contains("\"client\":3"));
+    }
+
+    #[test]
+    fn nonfinite_round_floats_emit_null() {
+        let mut r = round(0);
+        r.coverage = f64::NAN;
+        r.wait_secs = f64::INFINITY;
+        let j = r.to_json();
+        assert!(j.contains("\"coverage\":null"), "{j}");
+        assert!(j.contains("\"wait_secs\":null"), "{j}");
+        assert!(!j.contains("NaN") && !j.contains("inf"), "{j}");
+        // Finite fields keep their exact shortest-round-trip bytes.
+        assert!(j.contains("\"refresh_secs\":0.25"), "{j}");
+        let mut e = SimEventRecord { time: f64::NAN, id: 0, round: 0, kind: "deadline", client: None };
+        assert!(e.to_json().contains("\"t\":null"));
+        e.time = 0.5;
+        assert!(e.to_json().contains("\"t\":0.5"));
     }
 
     #[test]

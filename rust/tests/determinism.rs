@@ -788,6 +788,94 @@ fn lazy_sharded_chaos_run_is_reproducible_and_invariant() {
     assert_eq!(a.events_jsonl(), flat.events_jsonl(), "shards=4 changed the chaos stream");
 }
 
+// ---------------------------------------------------------------------------
+// Telemetry oracle: span tracing is observation, not participation. With
+// tracing off the tracer emits nothing and the run is bitwise identical to a
+// traced run's streams and journals; with tracing on the trace bytes and
+// digest are invariant across refresh thread counts and reruns; and the
+// `profile` inspector's per-round totals reproduce the reported round times
+// bit for bit (each root `round` span is closed with the report row's own
+// f64 bits).
+
+fn run_traced_sim(scenario: &str, threads: usize, seed: u64, trace: bool) -> feddde::sim::SimRun {
+    let cfg = SimConfig {
+        n_clients: 40,
+        rounds: 6,
+        per_round: 8,
+        refresh_every: 2,
+        threads,
+        seed,
+        trace: if trace { "trace.jsonl".into() } else { String::new() },
+        ..Default::default()
+    };
+    Simulator::new(cfg, Scenario::by_name(scenario).unwrap())
+        .unwrap()
+        .run_traced()
+        .unwrap()
+}
+
+#[test]
+fn tracing_is_a_bitwise_noop_on_streams_and_journals() {
+    for scenario in ["sync_baseline", "flaky_uplink"] {
+        let off = run_traced_sim(scenario, 0, 53, false);
+        let on = run_traced_sim(scenario, 0, 53, true);
+        assert_sim_bitwise_equal(&off.report, &on.report, &format!("{scenario} trace off vs on"));
+        assert_eq!(
+            off.journal.to_jsonl(),
+            on.journal.to_jsonl(),
+            "{scenario}: tracing changed the journal bytes"
+        );
+        assert_eq!(
+            off.journal.digest(),
+            on.journal.digest(),
+            "{scenario}: tracing changed the journal digest"
+        );
+        assert_eq!(off.tracer.to_jsonl(), "", "{scenario}: disabled tracer emitted spans");
+        assert!(!on.tracer.to_jsonl().is_empty(), "{scenario}: enabled tracer emitted nothing");
+    }
+}
+
+#[test]
+fn trace_bytes_and_digest_are_invariant_across_threads_and_reruns() {
+    // threads=1 appears twice: its second run is the rerun check.
+    for scenario in ["diurnal", "regional_outage"] {
+        let base = run_traced_sim(scenario, 1, 59, true);
+        for threads in [1usize, 4, 8] {
+            let other = run_traced_sim(scenario, threads, 59, true);
+            assert_eq!(
+                base.tracer.to_jsonl(),
+                other.tracer.to_jsonl(),
+                "{scenario}: trace bytes diverged at threads={threads}"
+            );
+            assert_eq!(
+                base.tracer.digest(),
+                other.tracer.digest(),
+                "{scenario}: trace digest diverged at threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn profile_reproduces_round_times_from_span_totals_bitwise() {
+    use feddde::obs::profile::{check_well_nested, parse_trace, round_totals};
+    for scenario in ["straggler_cut", "byzantine_summaries"] {
+        let run = run_traced_sim(scenario, 0, 61, true);
+        let spans = parse_trace(&run.tracer.to_jsonl()).unwrap();
+        check_well_nested(&spans, 1e-9).unwrap_or_else(|e| panic!("{scenario}: {e}"));
+        let totals = round_totals(&spans);
+        assert_eq!(totals.len(), run.report.rounds.len(), "{scenario}: root span count");
+        for ((round, total), row) in totals.iter().zip(&run.report.rounds) {
+            assert_eq!(*round, row.round as u64, "{scenario}: root span round order");
+            assert_eq!(
+                total.to_bits(),
+                row.round_secs.to_bits(),
+                "{scenario} round {round}: profile total != reported round_secs"
+            );
+        }
+    }
+}
+
 #[test]
 fn direct_minibatch_and_lloyd_agree_on_separated_summaries() {
     // Belt-and-braces on the raw engines (no refresher): same summary

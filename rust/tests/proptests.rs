@@ -1000,6 +1000,116 @@ fn lazy_arrivals_equal_eager_for_random_small_fleets() {
     });
 }
 
+// ---------------------------------------------------------------------------
+// Telemetry fuzz: whatever the scenario shape or fault plan, a traced run's
+// span tree must be structurally sound — unique ids, parents before
+// children, children contained in the parent's window, per-parent child
+// durations summing to at most the parent's — and its root `round` spans
+// must reproduce the report's round times bit for bit.
+
+#[test]
+fn traced_random_scenarios_produce_well_nested_span_trees() {
+    use feddde::obs::profile::{check_well_nested, parse_trace, round_totals};
+    check(6, |g| {
+        let mut sc = Scenario::baseline("trace_fuzz", "randomized traced scenario");
+        sc.aggregation = if g.bool() {
+            Aggregation::Sync
+        } else {
+            Aggregation::Quorum { frac: g.f64_in(0.2, 0.9) }
+        };
+        sc.availability = match g.usize_in(0, 2) {
+            0 => AvailabilityModel::Base,
+            1 => AvailabilityModel::Diurnal {
+                period: g.usize_in(2, 10),
+                amplitude: g.f64_in(0.1, 0.8),
+            },
+            _ => AvailabilityModel::FlashCrowd {
+                join_round: g.usize_in(0, 2),
+                leave_round: g.usize_in(3, 6),
+                frac: g.f64_in(0.1, 0.6),
+            },
+        };
+        sc.straggler = if g.bool() {
+            StragglerModel::Off
+        } else {
+            StragglerModel::HeavyTail {
+                frac: g.f64_in(0.05, 0.4),
+                mult_mu: g.f64_in(0.5, 2.5),
+                mult_sigma: g.f64_in(0.2, 1.0),
+            }
+        };
+        sc.dropout_rate = g.f64_in(0.0, 0.5);
+        sc.over_select = g.f64_in(1.0, 2.0);
+        sc.deadline_pct = g.f64_in(50.0, 100.0);
+        if g.bool() {
+            sc.drift = DriftSchedule::at(vec![g.usize_in(1, 3)], g.f64_in(0.2, 1.0));
+        }
+        let cfg = SimConfig {
+            n_clients: g.usize_in(10, 50),
+            rounds: g.usize_in(2, 5),
+            per_round: g.usize_in(2, 8),
+            refresh_every: g.usize_in(0, 3),
+            policy: STRATEGY_NAMES[g.usize_in(0, STRATEGY_NAMES.len() - 1)].into(),
+            shards: [1, 1, 4][g.usize_in(0, 2)],
+            seed: 9500 + g.case as u64,
+            trace: "trace.jsonl".into(),
+            ..Default::default()
+        };
+        let run = Simulator::new(cfg, sc).unwrap().run_traced().unwrap();
+        let spans = parse_trace(&run.tracer.to_jsonl()).unwrap();
+        check_well_nested(&spans, 1e-9).unwrap_or_else(|e| panic!("case {}: {e}", g.case));
+        let totals = round_totals(&spans);
+        assert_eq!(totals.len(), run.report.rounds.len(), "one root span per round");
+        for ((round, total), row) in totals.iter().zip(&run.report.rounds) {
+            assert_eq!(*round, row.round as u64);
+            assert_eq!(
+                total.to_bits(),
+                row.round_secs.to_bits(),
+                "round {round}: root span != reported round_secs"
+            );
+        }
+    });
+}
+
+#[test]
+fn traced_random_fault_plans_produce_well_nested_span_trees() {
+    use feddde::obs::profile::{check_well_nested, parse_trace};
+    check(5, |g| {
+        let mut sc = Scenario::baseline("trace_fault_fuzz", "randomized traced fault plan");
+        sc.fault = random_fault_plan(g);
+        sc.dropout_rate = g.f64_in(0.0, 0.3);
+        sc.over_select = g.f64_in(1.0, 1.5);
+        let cfg = SimConfig {
+            n_clients: g.usize_in(10, 40),
+            rounds: g.usize_in(2, 5),
+            per_round: g.usize_in(2, 8),
+            refresh_every: 2,
+            seed: 9600 + g.case as u64,
+            trace: "trace.jsonl".into(),
+            ..Default::default()
+        };
+        let rounds = cfg.rounds;
+        let run = Simulator::new(cfg, sc).unwrap().run_traced().unwrap();
+        let spans = parse_trace(&run.tracer.to_jsonl()).unwrap();
+        check_well_nested(&spans, 1e-9).unwrap_or_else(|e| panic!("case {}: {e}", g.case));
+        // Registry reconciliation under faults: the per-round counters must
+        // sum to the report's totals whatever the fault draws did.
+        assert_eq!(run.registry.counter("rounds_total"), rounds as u64);
+        let t = run.report.totals();
+        assert_eq!(run.registry.counter("retries_total"), t.retries, "retries_total");
+        assert_eq!(
+            run.registry.counter("completed_total"),
+            t.completed as u64,
+            "completed_total"
+        );
+        assert_eq!(
+            run.registry.counter("summary_rejects_total"),
+            t.summary_rejects,
+            "summary_rejects_total"
+        );
+    });
+}
+
 #[test]
 fn shard_counts_reproduce_the_flat_stream_for_random_fleets() {
     check(5, |g| {
